@@ -1,0 +1,43 @@
+//! End-to-end driver: exercise the full system on the paper's complete
+//! evaluation — all five memory devices through stream (Fig 3), membench
+//! (Fig 4) and the Viper KV store at both record sizes (Figs 5–6) — and
+//! print every table. This is the run recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example device_comparison [-- --quick]
+//! ```
+
+use cxl_ssd_sim::coordinator::experiments::{self, ExpScale};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let scale = if quick {
+        ExpScale::quick()
+    } else {
+        ExpScale::full()
+    };
+
+    println!("CXL-SSD-Sim full evaluation (Table I configuration)\n");
+    println!("== Table I: experimental environment ==\n");
+    print!("{}", experiments::table1_table().render());
+
+    println!("\n== Fig 3: stream bandwidth (MB/s) ==\n");
+    let (t, _) = experiments::fig3_bandwidth(scale);
+    print!("{}", t.render());
+
+    println!("\n== Fig 4: membench random-read latency ==\n");
+    let (t, _) = experiments::fig4_latency(scale);
+    print!("{}", t.render());
+
+    println!("\n== Fig 5: Viper QPS, 216B records ==\n");
+    let (t, _) = experiments::fig56_viper(216, scale);
+    print!("{}", t.render());
+
+    println!("\n== Fig 6: Viper QPS, 532B records ==\n");
+    let (t, _) = experiments::fig56_viper(532, scale);
+    print!("{}", t.render());
+
+    println!("\n== §III-C: cache policy sweep (Viper 216B) ==\n");
+    let (t, _) = experiments::policy_sweep(216, scale);
+    print!("{}", t.render());
+}

@@ -1,0 +1,44 @@
+//! Fast mode demo: capture a device trace from a detailed run, then
+//! replay it through the AOT-compiled JAX/Pallas timing surrogate via
+//! PJRT — python never runs here; the HLO artifacts were built once by
+//! `make artifacts`.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example fast_mode
+//! ```
+
+use cxl_ssd_sim::config::SimConfig;
+use cxl_ssd_sim::coordinator::{fastmode_compare, run_with_trace};
+use cxl_ssd_sim::devices::DeviceKind;
+use cxl_ssd_sim::stats::Table;
+use cxl_ssd_sim::workloads::WorkloadKind;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("CXL_SSD_SIM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let cfg = SimConfig::default();
+
+    println!("capturing membench traces and replaying through the surrogates\n");
+    let mut t = Table::new(&[
+        "device",
+        "accesses",
+        "detailed ns",
+        "fast ns",
+        "err %",
+        "speedup",
+    ]);
+    for kind in DeviceKind::ALL {
+        let (_, trace) = run_with_trace(kind, WorkloadKind::Membench, &cfg);
+        let r = fastmode_compare(kind, &cfg, &trace, &artifacts)?;
+        t.row(&[
+            kind.name().to_string(),
+            r.accesses.to_string(),
+            format!("{:.1}", r.detailed_mean_ns),
+            format!("{:.1}", r.fast_mean_ns),
+            format!("{:.2}", r.mean_err_pct),
+            format!("{:.1}x", r.speedup),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\n(see DESIGN.md §Perf for what the surrogate does and does not model)");
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Quickstart: simulate one workload on the cached CXL-SSD and print the
+//! paper-style report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cxl_ssd_sim::config::SimConfig;
+use cxl_ssd_sim::coordinator::experiments::run_report;
+use cxl_ssd_sim::devices::DeviceKind;
+use cxl_ssd_sim::workloads::WorkloadKind;
+
+fn main() {
+    // Table-I defaults; tweak anything with `apply_override`.
+    let mut cfg = SimConfig::default();
+    cfg.apply_override("dcache.policy=lru").unwrap();
+
+    println!("== CXL-SSD with DRAM cache layer, membench random read ==\n");
+    let (table, extra) = run_report(DeviceKind::CxlSsdCached, WorkloadKind::Membench, &cfg);
+    print!("{}", table.render());
+    println!();
+    print!("{extra}");
+
+    println!("\n== same device, no cache (paper's uncached CXL-SSD) ==\n");
+    let (table, extra) = run_report(DeviceKind::CxlSsd, WorkloadKind::Membench, &cfg);
+    print!("{}", table.render());
+    println!();
+    print!("{extra}");
+}

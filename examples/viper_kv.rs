@@ -1,0 +1,70 @@
+//! Viper key-value store scenario: dig into the paper's Figs 5–6 with
+//! per-operation QPS, cache hit rates, write amplification and endurance
+//! across devices and cache policies.
+//!
+//! ```bash
+//! cargo run --release --example viper_kv [-- --record 532]
+//! ```
+
+use cxl_ssd_sim::cache::PolicyKind;
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::cpu::Core;
+use cxl_ssd_sim::devices::DeviceKind;
+use cxl_ssd_sim::stats::Table;
+use cxl_ssd_sim::topology::System;
+use cxl_ssd_sim::workloads::Viper;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let record: u64 = args
+        .iter()
+        .position(|a| a == "--record")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(216);
+    let viper = if record == 532 {
+        Viper::new_532()
+    } else {
+        Viper::new_216()
+    };
+
+    println!("Viper KV store, {record}B records, {} prefill, {} ops/phase\n",
+             viper.prefill, viper.ops_per_phase);
+
+    // -------- devices (Fig 5/6 view).
+    let mut t = Table::new(&["device", "write", "insert", "get", "update", "delete"]);
+    for kind in DeviceKind::ALL {
+        let cfg = presets::table1();
+        let mut sys = System::new(kind, &cfg);
+        let mut core = Core::new(cfg.cpu);
+        let results = viper.run(&mut core, &mut sys);
+        let mut row = vec![kind.name().to_string()];
+        row.extend(results.iter().map(|r| format!("{:.0}", r.qps)));
+        t.row(&row);
+    }
+    println!("== QPS per operation ==\n");
+    print!("{}", t.render());
+
+    // -------- cache policies on the cached CXL-SSD (§III-C view).
+    let mut t = Table::new(&[
+        "policy", "hit rate", "waf", "flash programs", "max erase",
+    ]);
+    for policy in PolicyKind::ALL {
+        let mut cfg = presets::table1();
+        cfg.dcache.policy = policy;
+        let mut sys = System::new(DeviceKind::CxlSsdCached, &cfg);
+        let mut core = Core::new(cfg.cpu);
+        viper.run(&mut core, &mut sys);
+        let kv: std::collections::HashMap<String, f64> =
+            sys.device_stats_kv().into_iter().collect();
+        t.row(&[
+            policy.name().to_string(),
+            format!("{:.4}", kv.get("cache_hit_rate").unwrap_or(&0.0)),
+            format!("{:.3}", kv.get("waf").unwrap_or(&1.0)),
+            format!("{:.0}", kv.get("flash_programs").unwrap_or(&0.0)),
+            format!("{:.0}", kv.get("max_erase").unwrap_or(&0.0)),
+        ]);
+    }
+    println!("\n== cached CXL-SSD: replacement policy comparison ==\n");
+    print!("{}", t.render());
+}

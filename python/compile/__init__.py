@@ -1,0 +1,9 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Timing state is carried in f64 picoseconds; enable x64 before any kernel
+module is imported so all traces agree on dtypes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,62 @@
+"""AOT pipeline: lower every L2 surrogate entry point to HLO text.
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--batch 4096]
+
+Also writes `manifest.txt` (key=value device parameters + batch size) which
+the rust runtime cross-checks against its own presets at load time, so the
+detailed model and the surrogates can never silently diverge.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from . import params as P
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str, batch: int) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, fn, specs in model.entry_points(batch):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((name, path, len(text)))
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        for line in P.manifest_lines(batch):
+            f.write(line + "\n")
+    written.append(("manifest", manifest, 0))
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=P.BATCH)
+    args = ap.parse_args()
+    for name, path, size in lower_all(args.out_dir, args.batch):
+        print(f"wrote {name:>12} -> {path} ({size} chars)")
+
+
+if __name__ == "__main__":
+    main()

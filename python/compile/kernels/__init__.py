@@ -1,0 +1,1 @@
+"""L1 Pallas timing kernels (interpret=True) + pure-numpy oracles (ref.py)."""

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: direct-mapped 4KB-page cache tag scan.
+
+Fast-mode model of the CXL-SSD DRAM cache layer (the detailed rust model
+additionally implements LRU/FIFO/2Q/LFRU; the surrogate uses direct mapping,
+whose hit rate lower-bounds the smarter policies — see DESIGN.md).
+
+Carried state: per-set tag (-1 = invalid) and dirty bit. Outputs per
+request: hit flag and dirty-writeback flag (a miss that evicts a dirty
+page). Policy is write-back, write-allocate, matching the paper §II-C.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(page_ref, wr_ref,
+            tag_in_ref, dirty_in_ref,
+            hit_ref, wb_ref, tag_out_ref, dirty_out_ref,
+            *, n_sets):
+    tag_out_ref[...] = tag_in_ref[...]
+    dirty_out_ref[...] = dirty_in_ref[...]
+    n = page_ref.shape[0]
+
+    def body(i, _):
+        page = page_ref[i]
+        s = page % n_sets
+        tag = page // n_sets
+        cur = tag_out_ref[s]
+        cur_dirty = dirty_out_ref[s]
+        hit = cur == tag
+        # Miss evicting a valid dirty page -> write-back to flash.
+        wb = jnp.logical_and(jnp.logical_not(hit),
+                             jnp.logical_and(cur >= 0, cur_dirty != 0))
+        # Write-allocate: the page is resident after either outcome.
+        tag_out_ref[s] = tag
+        dirty_out_ref[s] = jnp.where(
+            hit, jnp.maximum(cur_dirty, wr_ref[i]), wr_ref[i]
+        )
+        hit_ref[i] = hit.astype(jnp.int32)
+        wb_ref[i] = wb.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+def cache_sim(page_idx, is_write, tag_state, dirty_state, params):
+    """Run the page-cache tag scan over one batch.
+
+    Args:
+      page_idx: i32[N] 4KB page indices.
+      is_write: i32[N].
+      tag_state: i32[S] per-set tags (-1 = invalid).
+      dirty_state: i32[S].
+      params: dict, see `compile.params.DCACHE`.
+
+    Returns:
+      (hit i32[N], writeback i32[N], tag', dirty')
+    """
+    n = page_idx.shape[0]
+    s = tag_state.shape[0]
+    kern = functools.partial(_kernel, n_sets=params["n_sets"])
+    return pl.pallas_call(
+        kern,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+        ],
+        interpret=True,
+    )(page_idx, is_write, tag_state, dirty_state)

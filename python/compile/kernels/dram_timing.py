@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: batched DRAM open-page timing scan.
+
+Given a batch of 64B-line requests (line index, write flag, inter-arrival
+gap), replays them through a per-bank row-buffer state machine and returns
+the per-request access latency.
+
+State (per bank): the currently open row and the time at which the bank is
+next ready. The sequential dependence across the batch is carried by a
+`fori_loop`; the per-bank state vectors live in kernel memory (VMEM on a
+real TPU — see DESIGN.md §Hardware-Adaptation) and are also returned as
+outputs so the surrogate can chain batches without losing device state.
+
+All times are f64 picoseconds (exact integer arithmetic below 2^53).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(line_ref, wr_ref, gap_ref,
+            bank_in_ref, row_in_ref, t_in_ref,
+            lat_ref, bank_out_ref, row_out_ref, t_out_ref,
+            *, n_banks, lines_per_row, t_cl, t_rcd, t_rp, t_burst, t_wr):
+    """One grid step = whole batch; scan with per-bank carried state."""
+    bank_out_ref[...] = bank_in_ref[...]
+    row_out_ref[...] = row_in_ref[...]
+    n = line_ref.shape[0]
+
+    def body(i, t):
+        t = t + gap_ref[i]
+        line = line_ref[i]
+        # Address decode: consecutive rows interleave across banks.
+        row = line // lines_per_row
+        bank = row % n_banks
+        row = row // n_banks
+
+        ready = bank_out_ref[bank]
+        open_row = row_out_ref[bank]
+        start = jnp.maximum(t, ready)
+
+        # Row-buffer outcome: hit (open row matches), closed (first touch),
+        # or conflict (different row open -> precharge + activate).
+        hit = open_row == row
+        closed = open_row < 0
+        core = jnp.where(
+            hit, t_cl,
+            jnp.where(closed, t_rcd + t_cl, t_rp + t_rcd + t_cl),
+        )
+        done = start + core + t_burst
+        # Writes hold the bank for the write-recovery window.
+        busy_until = done + jnp.where(wr_ref[i] != 0, t_wr, 0.0)
+
+        bank_out_ref[bank] = busy_until
+        row_out_ref[bank] = row
+        lat_ref[i] = done - t
+        return t
+
+    t_end = jax.lax.fori_loop(0, n, body, t_in_ref[0])
+    t_out_ref[0] = t_end
+
+
+def dram_timing(line_idx, is_write, gap, bank_state, row_state, t_state,
+                params):
+    """Run the DRAM timing scan over one batch.
+
+    Args:
+      line_idx: i32[N] 64B-line indices (device-relative).
+      is_write: i32[N] 1 for stores.
+      gap: f64[N] inter-arrival gaps in ps.
+      bank_state: f64[B] per-bank ready times (zeros at reset).
+      row_state: i32[B] per-bank open row (-1 = closed).
+      t_state: f64[1] stream clock carried across batches.
+      params: dict, see `compile.params.DRAM`.
+
+    Returns:
+      (latency f64[N], bank_state' f64[B], row_state' i32[B], t' f64[1])
+    """
+    n = line_idx.shape[0]
+    b = bank_state.shape[0]
+    kern = functools.partial(
+        _kernel,
+        n_banks=params["n_banks"], lines_per_row=params["lines_per_row"],
+        t_cl=float(params["t_cl"]), t_rcd=float(params["t_rcd"]),
+        t_rp=float(params["t_rp"]), t_burst=float(params["t_burst"]),
+        t_wr=float(params["t_wr"]),
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float64),
+            jax.ShapeDtypeStruct((b,), jnp.float64),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.float64),
+        ],
+        interpret=True,  # CPU-PJRT execution; real TPU would lower to Mosaic
+    )(line_idx, is_write, gap, bank_state, row_state, t_state)

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: PMEM (persistent memory) timing scan.
+
+SpecPMT-style model: a small set of 256B internal row buffers front the
+media. A request hitting an open buffer costs `t_buf_hit`; otherwise it
+pays the media latency (150ns read / 500ns write) and fills a buffer.
+Buffers are **fully associative with LRU fill** and the media has
+`n_ports` concurrent access units (Optane-style); misses queue on the
+earliest-free port. Writes always pay the media latency (SpecPMT's 500ns
+is the persist cost — Table I), while reads hitting an open buffer return
+at `t_buf_hit`.
+
+State per step: open row per buffer (i32[n_bufs]), last-touch stamp per
+buffer (f64[n_bufs]), media port ready time and the stream clock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(line_ref, wr_ref, gap_ref,
+            buf_in_ref, stamp_in_ref, ready_in_ref, t_in_ref,
+            lat_ref, buf_out_ref, stamp_out_ref, ready_out_ref, t_out_ref,
+            *, n_bufs, lines_per_buf, t_read, t_write, t_buf_hit):
+    buf_out_ref[...] = buf_in_ref[...]
+    stamp_out_ref[...] = stamp_in_ref[...]
+    ready_out_ref[...] = ready_in_ref[...]
+    n = line_ref.shape[0]
+
+    def body(i, t):
+        t = t + gap_ref[i]
+        row = line_ref[i] // lines_per_buf
+        is_wr = wr_ref[i] != 0
+
+        rows = buf_out_ref[...]
+        stamps = stamp_out_ref[...]
+        hits = rows == row
+        hit = jnp.any(hits)
+
+        # Reads hitting an open buffer bypass the media; everything else
+        # (read misses and ALL writes — 500ns is the persist cost) queues
+        # on the earliest-free media port.
+        ports = ready_out_ref[...]
+        port = jnp.argmin(ports)
+        start = jnp.maximum(t, ports[port])
+        rd_done = jnp.where(hit, t + t_buf_hit, start + t_read)
+        wr_done = start + t_write
+        done = jnp.where(is_wr, wr_done, rd_done)
+        port_busy = jnp.where(
+            is_wr, wr_done,
+            jnp.where(hit, ports[port], rd_done),
+        )
+        ready_out_ref[port] = port_busy
+
+        # Touch on hit; LRU fill on miss.
+        victim = jnp.argmin(stamps)
+        slot = jnp.where(hit, jnp.argmax(hits), victim)
+        buf_out_ref[slot] = row
+        stamp_out_ref[slot] = t
+
+        lat_ref[i] = done - t
+        return t
+
+    t_end = jax.lax.fori_loop(0, n, body, t_in_ref[0])
+    t_out_ref[0] = t_end
+
+
+def pmem_timing(line_idx, is_write, gap, buf_state, stamp_state,
+                ready_state, t_state, params):
+    """Run the PMEM timing scan over one batch.
+
+    Args:
+      line_idx: i32[N] 64B-line indices.
+      is_write: i32[N].
+      gap: f64[N] ps.
+      buf_state: i32[n_bufs] open row per buffer (-1 = empty).
+      stamp_state: f64[n_bufs] last-touch stamps (LRU order).
+      ready_state: f64[n_ports] per-port media ready times.
+      t_state: f64[1] stream clock.
+      params: dict, see `compile.params.PMEM`.
+
+    Returns:
+      (latency f64[N], buf', stamp', ready', t')
+    """
+    n = line_idx.shape[0]
+    kern = functools.partial(
+        _kernel,
+        n_bufs=params["n_bufs"],
+        lines_per_buf=params["rowbuf_bytes"] // 64,
+        t_read=float(params["t_read"]), t_write=float(params["t_write"]),
+        t_buf_hit=float(params["t_buf_hit"]),
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float64),
+            jax.ShapeDtypeStruct(buf_state.shape, jnp.int32),
+            jax.ShapeDtypeStruct(stamp_state.shape, jnp.float64),
+            jax.ShapeDtypeStruct(ready_state.shape, jnp.float64),
+            jax.ShapeDtypeStruct((1,), jnp.float64),
+        ],
+        interpret=True,
+    )(line_idx, is_write, gap, buf_state, stamp_state, ready_state, t_state)

@@ -1,0 +1,143 @@
+"""Pure-python/numpy oracles for the Pallas timing kernels.
+
+Deliberately written as straight sequential loops over numpy arrays — slow
+but unambiguous. pytest/hypothesis compare every kernel against these on
+randomized batches (see python/tests/).
+"""
+
+import numpy as np
+
+
+def dram_timing_ref(line_idx, is_write, gap, bank_state, row_state, t_state,
+                    params):
+    """Mirror of kernels.dram_timing.dram_timing (see its docstring)."""
+    nb = params["n_banks"]
+    lpr = params["lines_per_row"]
+    t_cl, t_rcd, t_rp = params["t_cl"], params["t_rcd"], params["t_rp"]
+    t_burst, t_wr = params["t_burst"], params["t_wr"]
+
+    bank = np.array(bank_state, dtype=np.float64).copy()
+    row = np.array(row_state, dtype=np.int64).copy()
+    t = float(np.asarray(t_state).reshape(-1)[0])
+    lat = np.zeros(len(line_idx), dtype=np.float64)
+
+    for i in range(len(line_idx)):
+        t += float(gap[i])
+        r = int(line_idx[i]) // lpr
+        b = r % nb
+        r = r // nb
+        start = max(t, bank[b])
+        if row[b] == r:
+            core = t_cl
+        elif row[b] < 0:
+            core = t_rcd + t_cl
+        else:
+            core = t_rp + t_rcd + t_cl
+        done = start + core + t_burst
+        bank[b] = done + (t_wr if is_write[i] else 0)
+        row[b] = r
+        lat[i] = done - t
+    return lat, bank, row.astype(np.int32), np.array([t])
+
+
+def ssd_timing_ref(page_idx, is_write, gap, active, extra_write,
+                   ch_state, die_state, t_state, params):
+    """Mirror of kernels.ssd_timing.ssd_timing."""
+    nc = params["n_channels"]
+    dpc = params["dies_per_channel"]
+    t_cmd, t_read = params["t_cmd"], params["t_read"]
+    t_prog, t_xfer = params["t_prog"], params["t_xfer"]
+
+    ch = np.array(ch_state, dtype=np.float64).copy()
+    die = np.array(die_state, dtype=np.float64).copy()
+    t = float(np.asarray(t_state).reshape(-1)[0])
+    lat = np.zeros(len(page_idx), dtype=np.float64)
+
+    for i in range(len(page_idx)):
+        t += float(gap[i])
+        if not active[i]:
+            continue
+        p = int(page_idx[i])
+        c = p % nc
+        d = c * dpc + (p // nc) % dpc
+        start = max(t + t_cmd, die[d])
+        if is_write[i]:
+            nand = t_prog
+            xfer_start = max(start, ch[c])
+            done = xfer_start + t_xfer
+            die_busy = xfer_start + t_xfer + nand
+            ch_busy = xfer_start + t_xfer
+        else:
+            nand = t_read
+            xfer_start = max(start + nand, ch[c])
+            done = xfer_start + t_xfer
+            die_busy = done
+            ch_busy = done
+        if extra_write[i]:
+            wb_start = max(die_busy, ch_busy)
+            die_busy = wb_start + t_xfer + t_prog
+            ch_busy = wb_start + t_xfer
+        die[d] = die_busy
+        ch[c] = ch_busy
+        lat[i] = done - t
+    return lat, ch, die, np.array([t])
+
+
+def cache_sim_ref(page_idx, is_write, tag_state, dirty_state, params):
+    """Mirror of kernels.cache_sim.cache_sim."""
+    ns = params["n_sets"]
+    tags = np.array(tag_state, dtype=np.int64).copy()
+    dirty = np.array(dirty_state, dtype=np.int64).copy()
+    hit = np.zeros(len(page_idx), dtype=np.int32)
+    wb = np.zeros(len(page_idx), dtype=np.int32)
+
+    for i in range(len(page_idx)):
+        p = int(page_idx[i])
+        s = p % ns
+        tag = p // ns
+        h = tags[s] == tag
+        wb[i] = int((not h) and tags[s] >= 0 and dirty[s] != 0)
+        hit[i] = int(h)
+        if h:
+            dirty[s] = max(dirty[s], int(is_write[i]))
+        else:
+            dirty[s] = int(is_write[i])
+        tags[s] = tag
+    return hit, wb, tags.astype(np.int32), dirty.astype(np.int32)
+
+
+def pmem_timing_ref(line_idx, is_write, gap, buf_state, stamp_state,
+                    ready_state, t_state, params):
+    """Mirror of kernels.pmem_timing.pmem_timing (fully-assoc LRU)."""
+    lpb = params["rowbuf_bytes"] // 64
+    t_read, t_write = params["t_read"], params["t_write"]
+    t_hit = params["t_buf_hit"]
+
+    buf = np.array(buf_state, dtype=np.int64).copy()
+    stamp = np.array(stamp_state, dtype=np.float64).copy()
+    ports = np.array(ready_state, dtype=np.float64).copy()
+    t = float(np.asarray(t_state).reshape(-1)[0])
+    lat = np.zeros(len(line_idx), dtype=np.float64)
+
+    for i in range(len(line_idx)):
+        t += float(gap[i])
+        row = int(line_idx[i]) // lpb
+        hits = buf == row
+        hit = bool(hits.any())
+        slot = int(np.argmax(hits)) if hit else int(np.argmin(stamp))
+        if is_write[i]:
+            # Writes always pay the media persist cost.
+            port = int(np.argmin(ports))
+            done = max(t, ports[port]) + t_write
+            ports[port] = done
+            lat[i] = done - t
+        elif hit:
+            lat[i] = t_hit
+        else:
+            port = int(np.argmin(ports))
+            done = max(t, ports[port]) + t_read
+            ports[port] = done
+            lat[i] = done - t
+        buf[slot] = row
+        stamp[slot] = t
+    return lat, buf.astype(np.int32), stamp, ports, np.array([t])

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: batched SSD (NAND flash) service-time scan.
+
+Models the SimpleSSD PAL view of the device: pages stripe across
+channels/dies; a request occupies its die for the NAND array time (tR or
+tPROG) and then the channel for the page transfer. Per-channel and per-die
+ready times are the carried state.
+
+The `active` mask lets the cached-SSD surrogate thread *all* requests
+through one kernel while only cache misses touch flash (hits contribute no
+state change and report zero flash latency). `extra_write` models the
+dirty-eviction write-back that a miss may trigger: it occupies the die with
+an additional program after the read, without extending the critical path
+of the triggering request (write-back is asynchronous).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(page_ref, wr_ref, gap_ref, active_ref, extraw_ref,
+            ch_in_ref, die_in_ref, t_in_ref,
+            lat_ref, ch_out_ref, die_out_ref, t_out_ref,
+            *, n_channels, dies_per_channel, t_cmd, t_read, t_prog, t_xfer):
+    ch_out_ref[...] = ch_in_ref[...]
+    die_out_ref[...] = die_in_ref[...]
+    n = page_ref.shape[0]
+
+    def body(i, t):
+        t = t + gap_ref[i]
+        page = page_ref[i]
+        ch = page % n_channels
+        die = ch * dies_per_channel + (page // n_channels) % dies_per_channel
+
+        act = active_ref[i] != 0
+        is_wr = wr_ref[i] != 0
+
+        die_ready = die_out_ref[die]
+        ch_ready = ch_out_ref[ch]
+
+        start = jnp.maximum(t + t_cmd, die_ready)
+        nand = jnp.where(is_wr, t_prog, t_read)
+        # Reads: array read then channel transfer out. Writes: channel
+        # transfer in, then program (program time hides behind the die).
+        rd_xfer_start = jnp.maximum(start + nand, ch_ready)
+        rd_done = rd_xfer_start + t_xfer
+        wr_xfer_start = jnp.maximum(start, ch_ready)
+        wr_done = wr_xfer_start + t_xfer  # host-visible completion (buffered)
+        die_busy = jnp.where(is_wr, wr_xfer_start + t_xfer + nand, rd_done)
+        done = jnp.where(is_wr, wr_done, rd_done)
+        ch_busy = jnp.where(is_wr, wr_xfer_start + t_xfer, rd_done)
+
+        # Asynchronous dirty write-back triggered by this miss: one more
+        # page transfer + program on the same die.
+        wb = act & (extraw_ref[i] != 0)
+        wb_xfer_start = jnp.maximum(die_busy, ch_busy)
+        die_busy = jnp.where(wb, wb_xfer_start + t_xfer + t_prog, die_busy)
+        ch_busy = jnp.where(wb, wb_xfer_start + t_xfer, ch_busy)
+
+        die_out_ref[die] = jnp.where(act, die_busy, die_ready)
+        ch_out_ref[ch] = jnp.where(act, ch_busy, ch_ready)
+        lat_ref[i] = jnp.where(act, done - t, 0.0)
+        return t
+
+    t_end = jax.lax.fori_loop(0, n, body, t_in_ref[0])
+    t_out_ref[0] = t_end
+
+
+def ssd_timing(page_idx, is_write, gap, active, extra_write,
+               ch_state, die_state, t_state, params):
+    """Run the SSD service-time scan over one batch.
+
+    Args:
+      page_idx: i32[N] 4KB page indices.
+      is_write: i32[N] 1 = program, 0 = read.
+      gap: f64[N] inter-arrival gaps (ps).
+      active: i32[N] 0 = bypass flash entirely (cache hit).
+      extra_write: i32[N] 1 = miss also evicts a dirty page (async program).
+      ch_state: f64[C]; die_state: f64[C*D]; t_state: f64[1].
+      params: dict, see `compile.params.SSD`.
+
+    Returns:
+      (latency f64[N] — 0 where inactive, ch', die', t')
+    """
+    n = page_idx.shape[0]
+    kern = functools.partial(
+        _kernel,
+        n_channels=params["n_channels"],
+        dies_per_channel=params["dies_per_channel"],
+        t_cmd=float(params["t_cmd"]), t_read=float(params["t_read"]),
+        t_prog=float(params["t_prog"]), t_xfer=float(params["t_xfer"]),
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float64),
+            jax.ShapeDtypeStruct(ch_state.shape, jnp.float64),
+            jax.ShapeDtypeStruct(die_state.shape, jnp.float64),
+            jax.ShapeDtypeStruct((1,), jnp.float64),
+        ],
+        interpret=True,
+    )(page_idx, is_write, gap, active, extra_write, ch_state, die_state,
+      t_state)

@@ -1,0 +1,108 @@
+"""L2 JAX model: per-device batched timing surrogates.
+
+Each `*_step` function advances one device's timing state by one batch of
+requests and returns per-request latencies. These are the units the AOT
+pipeline (`aot.py`) lowers to HLO; the rust coordinator calls them from the
+fast-mode hot path via PJRT, threading the state tensors between batches.
+
+Every entry point folds in the CXL.mem network constant where the paper's
+device is CXL-attached (CXL-DRAM, CXL-SSD); plain DRAM/PMEM omit it.
+"""
+
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels.cache_sim import cache_sim
+from .kernels.dram_timing import dram_timing
+from .kernels.pmem_timing import pmem_timing
+from .kernels.ssd_timing import ssd_timing
+
+
+# ------------------------------------------------------------------ DRAM
+def dram_step(line_idx, is_write, gap, bank, row, t):
+    """Host-local DDR4: pure DRAM timing."""
+    lat, bank, row, t = dram_timing(line_idx, is_write, gap, bank, row, t,
+                                    P.DRAM)
+    return lat, bank, row, t
+
+
+def cxl_dram_step(line_idx, is_write, gap, bank, row, t):
+    """CXL-attached DRAM: DDR4 timing + CXL.mem network round trip."""
+    lat, bank, row, t = dram_timing(line_idx, is_write, gap, bank, row, t,
+                                    P.DRAM)
+    return lat + float(P.CXL["t_link"] + P.CXL["t_bus_rt"]), bank, row, t
+
+
+# ------------------------------------------------------------------ PMEM
+def pmem_step(line_idx, is_write, gap, buf, stamp, ready, t):
+    """Host-local persistent memory (SpecPMT constants)."""
+    return pmem_timing(line_idx, is_write, gap, buf, stamp, ready, t,
+                       P.PMEM)
+
+
+# ------------------------------------------------------------------ SSD
+def ssd_step(page_idx, is_write, gap, ch, die, t):
+    """CXL-attached SSD without the DRAM cache layer: every 64B access
+    becomes a 4KB flash page access (the paper's read/write amplification
+    point, §II-A)."""
+    n = page_idx.shape[0]
+    ones = jnp.ones((n,), jnp.int32)
+    zeros = jnp.zeros((n,), jnp.int32)
+    lat, ch, die, t = ssd_timing(page_idx, is_write, gap, ones, zeros,
+                                 ch, die, t, P.SSD)
+    return lat + float(P.CXL["t_link"] + P.CXL["t_bus_rt"]), ch, die, t
+
+
+# ------------------------------------------------------ CXL-SSD + cache
+def cached_ssd_step(page_idx, is_write, gap, tags, dirty, ch, die, t):
+    """CXL-attached SSD behind the DRAM cache layer.
+
+    The cache tag scan classifies each request as hit/miss(+writeback);
+    only misses thread through the flash contention scan (`active` mask),
+    dirty evictions add asynchronous programs. Hits cost the DRAM cache
+    access; misses additionally pay the flash service time.
+    """
+    hit, wb, tags, dirty = cache_sim(page_idx, is_write, tags, dirty,
+                                     P.DCACHE)
+    active = 1 - hit
+    flash_lat, ch, die, t = ssd_timing(page_idx, is_write, gap, active, wb,
+                                       ch, die, t, P.SSD)
+    t_cache = float(P.DCACHE["t_access"])
+    t_link = float(P.CXL["t_link"] + P.CXL["t_bus_rt"])
+    lat = t_link + t_cache + flash_lat  # flash_lat == 0 on hits
+    return lat, hit, tags, dirty, ch, die, t
+
+
+# ----------------------------------------------------------- shape specs
+def entry_points(batch=P.BATCH):
+    """(name, fn, example-arg shapes) for every AOT artifact."""
+    import jax
+
+    f64 = jnp.float64
+    i32 = jnp.int32
+    n = batch
+    nb = P.DRAM["n_banks"]
+    nbuf = P.PMEM["n_bufs"]
+    nc = P.SSD["n_channels"]
+    nd = nc * P.SSD["dies_per_channel"]
+    ns = P.DCACHE["n_sets"]
+
+    def s(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    reqs = [s((n,), i32), s((n,), i32), s((n,), f64)]
+    return [
+        ("dram", dram_step,
+         reqs + [s((nb,), f64), s((nb,), i32), s((1,), f64)]),
+        ("cxl_dram", cxl_dram_step,
+         reqs + [s((nb,), f64), s((nb,), i32), s((1,), f64)]),
+        ("pmem", pmem_step,
+         reqs + [s((nbuf,), i32), s((nbuf,), f64),
+                 s((P.PMEM["n_ports"],), f64), s((1,), f64)]),
+        ("ssd", ssd_step,
+         reqs + [s((nc,), f64), s((nd,), f64), s((1,), f64)]),
+        ("cached_ssd", cached_ssd_step,
+         [s((n,), i32), s((n,), i32), s((n,), f64),
+          s((ns,), i32), s((ns,), i32),
+          s((nc,), f64), s((nd,), f64), s((1,), f64)]),
+    ]

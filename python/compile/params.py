@@ -1,0 +1,76 @@
+"""Device timing parameters (Table I of the paper + its cited constants).
+
+All times are in **picoseconds** (gem5 tick convention) stored as Python ints;
+the kernels consume them as f64 (exact for integers < 2^53 ps).
+
+These constants are the single source of truth for the AOT surrogates; the
+rust detailed model mirrors them in `rust/src/config/presets.rs`, and
+`aot.py` emits `artifacts/manifest.txt` so the rust side can assert both
+sides agree at load time.
+"""
+
+NS = 1_000
+US = 1_000_000
+MS = 1_000_000_000
+
+# ---------------------------------------------------------------- batch
+BATCH = 4096  # fast-mode surrogate batch size (static shape in the HLO)
+
+# ---------------------------------------------------------------- DRAM (DDR4-2400 8x8, 1 channel)
+DRAM = dict(
+    n_banks=16,            # one rank, 16 banks (DDR4)
+    lines_per_row=128,     # 8KB row (1KB/device x8) / 64B line
+    t_cl=14_160,           # 14.16 ns CAS latency (CL17 @ 1200MHz)
+    t_rcd=14_160,          # RAS-to-CAS
+    t_rp=14_160,           # precharge
+    t_burst=3_330,         # 64B burst, BL8 @ 2400 MT/s
+    t_wr=15_000,           # write recovery
+)
+
+# ---------------------------------------------------------------- CXL link
+CXL = dict(
+    t_proto=25 * NS,       # CXL.mem sub-protocol processing (Sharma, HOTI'22)
+    t_link=50 * NS,        # total CXL.mem network latency (FPGA-validated)
+    # IObus flit transfer round trip, matching rust's BusConfig::iobus():
+    # 2 x 2ns header + 64B request + 128B response at 62 ps/B = 15.904ns.
+    # (Same for reads and writes: 1-flit req + 2-flit DRS vs 2-flit RwD +
+    # 1-flit NDR.)
+    t_bus_rt=15_904,
+)
+
+# ---------------------------------------------------------------- PMEM (SpecPMT)
+PMEM = dict(
+    rowbuf_bytes=256,      # 256B internal row buffer
+    n_bufs=4,              # modeled row-buffer entries
+    n_ports=4,             # concurrent media access units (Optane-style)
+    t_read=150 * NS,
+    t_write=500 * NS,
+    t_buf_hit=50 * NS,     # hit in the internal buffer
+)
+
+# ---------------------------------------------------------------- SSD (SimpleSSD-like, 16GB)
+SSD = dict(
+    n_channels=8,
+    dies_per_channel=2,
+    page_bytes=4096,
+    t_cmd=200 * NS,        # command/DMA setup
+    t_read=45 * US,        # NAND tR
+    t_prog=660 * US,       # NAND tPROG
+    t_xfer=3_400 * NS,     # 4KB over ~1.2GB/s channel
+)
+
+# ---------------------------------------------------------------- CXL-SSD DRAM cache layer
+DCACHE = dict(
+    n_sets=4096,           # 16MB / 4KB pages, direct-mapped in the surrogate
+    t_access=50 * NS,      # DRAM cache hit latency (paper §III-A)
+)
+
+
+def manifest_lines(batch=BATCH):
+    """Flat key=value dump consumed by the rust loader for cross-checking."""
+    out = [f"batch={batch}"]
+    for name, d in [("dram", DRAM), ("cxl", CXL), ("pmem", PMEM),
+                    ("ssd", SSD), ("dcache", DCACHE)]:
+        for k, v in d.items():
+            out.append(f"{name}.{k}={v}")
+    return out

@@ -1,0 +1,32 @@
+"""Shared fixtures/strategies for the kernel-vs-oracle test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import compile  # noqa: F401  (enables x64 before kernels import)
+
+
+def mk_requests(rng, n, max_idx, p_write=0.5, max_gap_ps=200_000,
+                locality=0.0):
+    """Random request batch; `locality` in [0,1) biases re-use of a small
+    working set (exercises row-buffer/cache-hit paths)."""
+    if locality > 0:
+        hot = rng.integers(0, max_idx, size=max(4, n // 8))
+        pick_hot = rng.random(n) < locality
+        idx = np.where(pick_hot, rng.choice(hot, size=n),
+                       rng.integers(0, max_idx, size=n))
+    else:
+        idx = rng.integers(0, max_idx, size=n)
+    wr = (rng.random(n) < p_write).astype(np.int32)
+    gap = rng.integers(0, max_gap_ps, size=n).astype(np.float64)
+    return idx.astype(np.int32), wr, gap
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC1A0)

@@ -1,0 +1,80 @@
+"""Pallas page-cache tag-scan kernel vs the numpy oracle + invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import params as P
+from compile.kernels.cache_sim import cache_sim
+from compile.kernels.ref import cache_sim_ref
+
+from .conftest import mk_requests
+
+NS = P.DCACHE["n_sets"]
+
+
+def fresh_state():
+    return np.full(NS, -1, np.int32), np.zeros(NS, np.int32)
+
+
+def run_both(idx, wr):
+    tags, dirty = fresh_state()
+    got = cache_sim(idx, wr, tags, dirty, P.DCACHE)
+    want = cache_sim_ref(idx, wr, tags, dirty, P.DCACHE)
+    return got, want
+
+
+def assert_match(got, want):
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+def test_matches_oracle_random(rng):
+    idx, wr, _ = mk_requests(rng, 512, 1 << 22)
+    assert_match(*run_both(idx, wr))
+
+
+def test_matches_oracle_hot_set(rng):
+    idx, wr, _ = mk_requests(rng, 512, 1 << 22, locality=0.9)
+    assert_match(*run_both(idx, wr))
+
+
+def test_cold_miss_then_hit():
+    idx = np.array([7, 7, 7 + NS, 7], np.int32)
+    wr = np.array([0, 0, 1, 0], np.int32)
+    (hit, wb, *_), _ = run_both(idx, wr)
+    hit, wb = np.asarray(hit), np.asarray(wb)
+    assert list(hit) == [0, 1, 0, 0]  # conflict evicts page 7
+    # req2 wrote page 7+NS, so req3's conflict evicts a dirty page
+    assert list(wb) == [0, 0, 0, 1]
+    # dirty eviction: write page, then conflict
+    idx2 = np.array([3, 3 + NS], np.int32)
+    wr2 = np.array([1, 0], np.int32)
+    (h2, w2, *_), _ = run_both(idx2, wr2)
+    assert list(np.asarray(w2)) == [0, 1]
+
+
+def test_write_hit_keeps_dirty():
+    idx = np.array([5, 5, 5 + NS], np.int32)
+    wr = np.array([1, 0, 0], np.int32)  # write, read-hit, conflict
+    (_, wb, *_), _ = run_both(idx, wr)
+    assert np.asarray(wb)[2] == 1  # read hit must not clear dirty
+
+
+def test_repeat_stream_all_hits_after_first(rng):
+    page = rng.integers(0, 1 << 20, size=16).astype(np.int32)
+    idx = np.concatenate([page, page, page])
+    wr = np.zeros(len(idx), np.int32)
+    (hit, *_), _ = run_both(idx, wr)
+    hit = np.asarray(hit)
+    # distinct pages may conflict within the set-mapped 16 entries; the
+    # oracle agrees exactly, and at minimum re-touches of surviving pages hit
+    assert hit[len(page):].sum() >= hit[:len(page)].sum()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 128), seed=st.integers(0, 2**31 - 1),
+       span=st.sampled_from([8, NS, 4 * NS, 1 << 22]))
+def test_hypothesis_matches_oracle(n, seed, span):
+    rng = np.random.default_rng(seed)
+    idx, wr, _ = mk_requests(rng, n, span)
+    assert_match(*run_both(idx, wr))

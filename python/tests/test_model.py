@@ -1,0 +1,90 @@
+"""L2 surrogate composition invariants + end-to-end device orderings."""
+
+import numpy as np
+
+from compile import model, params as P
+
+from .conftest import mk_requests
+
+
+def states(batch=64):
+    nb = P.DRAM["n_banks"]
+    nc = P.SSD["n_channels"]
+    nd = nc * P.SSD["dies_per_channel"]
+    ns = P.DCACHE["n_sets"]
+    return dict(
+        dram=(np.zeros(nb, np.float64), np.full(nb, -1, np.int32),
+              np.zeros(1, np.float64)),
+        pmem=(np.full(P.PMEM["n_bufs"], -1, np.int32),
+              np.zeros(P.PMEM["n_bufs"], np.float64),
+              np.zeros(P.PMEM["n_ports"], np.float64),
+              np.zeros(1, np.float64)),
+        ssd=(np.zeros(nc, np.float64), np.zeros(nd, np.float64),
+             np.zeros(1, np.float64)),
+        cache=(np.full(ns, -1, np.int32), np.zeros(ns, np.int32)),
+    )
+
+
+def test_cxl_dram_adds_link_latency(rng):
+    idx, wr, gap = mk_requests(rng, 64, 1 << 16)
+    s = states()
+    lat_local = np.asarray(model.dram_step(idx, wr, gap, *s["dram"])[0])
+    lat_cxl = np.asarray(model.cxl_dram_step(idx, wr, gap, *s["dram"])[0])
+    np.testing.assert_allclose(
+        lat_cxl - lat_local, P.CXL["t_link"] + P.CXL["t_bus_rt"], atol=0.5)
+
+
+def test_device_latency_ordering(rng):
+    """Paper Fig 4 shape: DRAM < CXL-DRAM < PMEM << CXL-SSD (uncached)."""
+    idx, _, gap = mk_requests(rng, 128, 1 << 14)
+    wr = np.zeros(128, np.int32)
+    gap = np.full(128, 1e6, np.float64)  # 1µs apart: isolated accesses
+    s = states()
+    dram = np.asarray(model.dram_step(idx, wr, gap, *s["dram"])[0]).mean()
+    cxl_dram = np.asarray(
+        model.cxl_dram_step(idx, wr, gap, *s["dram"])[0]).mean()
+    pmem = np.asarray(model.pmem_step(idx, wr, gap, *s["pmem"])[0]).mean()
+    ssd = np.asarray(model.ssd_step(idx, wr, gap, *s["ssd"])[0]).mean()
+    assert dram < cxl_dram < pmem < ssd
+    assert ssd > 10 * pmem  # "microseconds vs nanoseconds"
+
+
+def test_cached_ssd_hot_working_set_approaches_cxl_dram(rng):
+    """Paper Fig 4/5 shape: hot-set cached CXL-SSD ≈ CXL-DRAM class."""
+    n = 256
+    pages = np.tile(np.arange(8, dtype=np.int32), n // 8)  # 8 hot pages
+    wr = np.zeros(n, np.int32)
+    gap = np.full(n, 1e6, np.float64)
+    s = states()
+    lat, hit, *_ = model.cached_ssd_step(pages, wr, gap, *s["cache"],
+                                         *s["ssd"])
+    lat = np.asarray(lat)
+    hit = np.asarray(hit)
+    assert hit[8:].all()  # everything after first touch hits
+    hot = lat[8:]
+    expect = P.CXL["t_link"] + P.CXL["t_bus_rt"] + P.DCACHE["t_access"]
+    np.testing.assert_allclose(hot, expect, atol=0.5)
+
+
+def test_cached_ssd_miss_pays_flash(rng):
+    n = 64
+    pages = (np.arange(n, dtype=np.int32) * (P.DCACHE["n_sets"] + 1))
+    wr = np.zeros(n, np.int32)
+    gap = np.full(n, 1e9, np.float64)
+    s = states()
+    lat, hit, *_ = model.cached_ssd_step(pages, wr, gap, *s["cache"],
+                                         *s["ssd"])
+    assert not np.asarray(hit).any()
+    assert np.asarray(lat).min() > P.SSD["t_read"]
+
+
+def test_entry_points_cover_all_devices():
+    names = [n for n, _, _ in model.entry_points(batch=8)]
+    assert names == ["dram", "cxl_dram", "pmem", "ssd", "cached_ssd"]
+
+
+def test_entry_points_are_traceable():
+    import jax
+    for name, fn, specs in model.entry_points(batch=16):
+        lowered = jax.jit(fn).lower(*specs)
+        assert lowered is not None, name

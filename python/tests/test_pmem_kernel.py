@@ -1,0 +1,109 @@
+"""Pallas PMEM timing kernel vs the numpy oracle + invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import params as P
+from compile.kernels.pmem_timing import pmem_timing
+from compile.kernels.ref import pmem_timing_ref
+
+from .conftest import mk_requests
+
+NB = P.PMEM["n_bufs"]
+
+
+def fresh_state():
+    return (np.full(NB, -1, np.int32), np.zeros(NB, np.float64),
+            np.zeros(P.PMEM["n_ports"], np.float64),
+            np.zeros(1, np.float64))
+
+
+def run_both(idx, wr, gap):
+    buf, stamp, ready, t = fresh_state()
+    got = pmem_timing(idx, wr, gap, buf, stamp, ready, t, P.PMEM)
+    want = pmem_timing_ref(idx, wr, gap, buf, stamp, ready, t, P.PMEM)
+    return got, want
+
+
+def assert_match(got, want):
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, dtype=np.float64),
+                                   np.asarray(w, dtype=np.float64),
+                                   rtol=0, atol=0.5)
+
+
+def test_matches_oracle_random(rng):
+    idx, wr, gap = mk_requests(rng, 256, 1 << 20)
+    assert_match(*run_both(idx, wr, gap))
+
+
+def test_read_write_asymmetry():
+    idx = np.array([0], np.int32)
+    gap = np.array([1e9])
+    (lat_r, *_), _ = run_both(idx, np.array([0], np.int32), gap)
+    (lat_w, *_), _ = run_both(idx, np.array([1], np.int32), gap)
+    assert np.asarray(lat_r)[0] == pytest.approx(P.PMEM["t_read"])
+    assert np.asarray(lat_w)[0] == pytest.approx(P.PMEM["t_write"])
+    # Writes pay media even on an open row (persist cost), reads hit.
+    idx2 = np.array([0, 1, 2], np.int32)
+    wr2 = np.array([1, 1, 0], np.int32)
+    gap2 = np.full(3, 1e9)
+    (lat, *_), _ = run_both(idx2, wr2, gap2)
+    assert np.asarray(lat)[1] == pytest.approx(P.PMEM["t_write"])
+    assert np.asarray(lat)[2] == pytest.approx(P.PMEM["t_buf_hit"])
+
+
+def test_rowbuf_hit_is_cheap():
+    lines_per_buf = P.PMEM["rowbuf_bytes"] // 64
+    idx = np.array([0, lines_per_buf - 1], np.int32)  # same 256B row
+    gap = np.array([1e9, 1e9])
+    (lat, *_), _ = run_both(idx, np.zeros(2, np.int32), gap)
+    assert np.asarray(lat)[1] == pytest.approx(P.PMEM["t_buf_hit"])
+
+
+def test_fully_associative_keeps_n_rows_open():
+    """Interleaving n_bufs distinct rows must all hit after first touch
+    (the aliasing case a direct-mapped buffer would thrash on)."""
+    lpb = P.PMEM["rowbuf_bytes"] // 64
+    rows = [0, NB, 2 * NB, 3 * NB][:NB]  # same direct-mapped slot!
+    first = np.array([r * lpb for r in rows], np.int32)
+    again = np.array([r * lpb + 1 for r in rows], np.int32)
+    idx = np.concatenate([first, again])
+    gap = np.full(len(idx), 1e9)
+    (lat, *_), _ = run_both(idx, np.zeros(len(idx), np.int32), gap)
+    lat = np.asarray(lat)
+    np.testing.assert_allclose(lat[NB:], P.PMEM["t_buf_hit"], atol=0.5)
+
+
+def test_lru_eviction_order():
+    lpb = P.PMEM["rowbuf_bytes"] // 64
+    # Fill all buffers, touch row 0 again, then add a new row: the LRU
+    # victim must be row 1, so row 0 still hits.
+    seq = [0, 1, 2, 3, 0, 99]
+    idx = np.array([r * lpb for r in seq], np.int32)
+    gap = np.full(len(seq), 1e9)
+    (lat, buf, *_), _ = run_both(idx, np.zeros(len(seq), np.int32), gap)
+    buf = set(np.asarray(buf).tolist())
+    assert 0 in buf and 99 in buf and 1 not in buf
+
+
+def test_media_ports_fill_then_serialize():
+    np_orts = P.PMEM["n_ports"]
+    # n_ports concurrent misses run in parallel; the next one queues.
+    idx = np.array([1000 * i for i in range(np_orts + 1)], np.int32)
+    gap = np.zeros(np_orts + 1)
+    (lat, *_), _ = run_both(idx, np.zeros(np_orts + 1, np.int32), gap)
+    lat = np.asarray(lat)
+    np.testing.assert_allclose(lat[:np_orts], P.PMEM["t_read"], atol=0.5)
+    assert lat[np_orts] == pytest.approx(2 * P.PMEM["t_read"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1),
+       p_write=st.floats(0, 1), locality=st.sampled_from([0.0, 0.8]))
+def test_hypothesis_matches_oracle(n, seed, p_write, locality):
+    rng = np.random.default_rng(seed)
+    idx, wr, gap = mk_requests(rng, n, 1 << 18, p_write=p_write,
+                               locality=locality)
+    assert_match(*run_both(idx, wr, gap))

@@ -1,0 +1,39 @@
+//! Fast-mode ablation: AOT surrogate (Pallas kernels via PJRT) versus the
+//! detailed rust device models on identical traces — accuracy of the mean
+//! latency and wall-clock speedup. Requires `make artifacts`.
+
+mod bench_util;
+
+use bench_util::{timed, Shapes};
+use cxl_ssd_sim::coordinator::experiments::{fastmode_ablation, ExpScale};
+use cxl_ssd_sim::devices::DeviceKind;
+
+fn artifacts_dir() -> String {
+    std::env::var("CXL_SSD_SIM_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/../artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let (table, raw) = timed("fast (surrogate) vs detailed replay", || {
+        fastmode_ablation(&dir, ExpScale::full())
+    })?;
+    print!("{}", table.render());
+
+    let mut s = Shapes::new();
+    for r in &raw {
+        // The surrogates mirror the detailed models (minus refresh, host
+        // bus hops, ICL and GC) — means must track within 25%.
+        let tight = matches!(
+            r.device,
+            DeviceKind::Dram | DeviceKind::CxlDram | DeviceKind::Pmem
+        );
+        let bound = if tight { 5.0 } else { 30.0 };
+        s.check(
+            &format!("{}: mean error {:.1}% < {bound}%", r.device.name(), r.mean_err_pct),
+            r.mean_err_pct < bound,
+        );
+    }
+    s.finish();
+    Ok(())
+}

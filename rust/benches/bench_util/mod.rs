@@ -1,0 +1,44 @@
+//! Shared bench harness bits (criterion is unavailable offline; each
+//! bench is a `harness = false` binary that prints the paper-style table,
+//! wall-clock timing, and PASS/FAIL shape checks).
+
+use std::time::Instant;
+
+/// Run `f`, printing a heading and the elapsed wall-clock time.
+pub fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    println!("=== {name} ===");
+    let t0 = Instant::now();
+    let out = f();
+    println!("[wall {:.2}s]", t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Print a shape assertion result without aborting the bench.
+pub fn shape(name: &str, ok: bool) {
+    println!("shape {}: {}", if ok { "PASS" } else { "FAIL" }, name);
+}
+
+/// Exit nonzero if any shape failed (collected by the caller).
+pub struct Shapes {
+    failed: usize,
+}
+
+impl Shapes {
+    pub fn new() -> Self {
+        Shapes { failed: 0 }
+    }
+
+    pub fn check(&mut self, name: &str, ok: bool) {
+        shape(name, ok);
+        if !ok {
+            self.failed += 1;
+        }
+    }
+
+    pub fn finish(self) {
+        if self.failed > 0 {
+            eprintln!("{} shape check(s) FAILED", self.failed);
+            std::process::exit(1);
+        }
+    }
+}

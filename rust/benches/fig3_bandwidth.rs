@@ -1,0 +1,40 @@
+//! Fig 3 regeneration: stream bandwidth across the five memory devices.
+//!
+//! Paper shape: DRAM highest; CXL-SSD+LRU cache lands in the CXL-DRAM
+//! class; PMEM ≈ 65% of DRAM; uncached CXL-SSD orders of magnitude lower.
+
+mod bench_util;
+
+use bench_util::{timed, Shapes};
+use cxl_ssd_sim::coordinator::experiments::{fig3_bandwidth, ExpScale};
+use cxl_ssd_sim::devices::DeviceKind;
+
+fn main() {
+    let (table, raw) = timed("Fig 3: stream bandwidth (MB/s)", || {
+        fig3_bandwidth(ExpScale::full())
+    });
+    print!("{}", table.render());
+
+    let m: std::collections::HashMap<_, _> = raw.into_iter().collect();
+    let avg = |k: DeviceKind| m[&k].iter().sum::<f64>() / m[&k].len() as f64;
+
+    let mut s = Shapes::new();
+    s.check(
+        "DRAM has the highest bandwidth",
+        DeviceKind::ALL.iter().all(|&k| avg(DeviceKind::Dram) >= avg(k)),
+    );
+    s.check(
+        "cached CXL-SSD within CXL-DRAM class (>=20%)",
+        avg(DeviceKind::CxlSsdCached) > 0.2 * avg(DeviceKind::CxlDram),
+    );
+    s.check(
+        "PMEM a large fraction of DRAM (paper: ~65%)",
+        avg(DeviceKind::Pmem) > 0.3 * avg(DeviceKind::Dram)
+            && avg(DeviceKind::Pmem) < avg(DeviceKind::Dram),
+    );
+    s.check(
+        "uncached CXL-SSD orders of magnitude behind cached",
+        avg(DeviceKind::CxlSsd) < avg(DeviceKind::CxlSsdCached) / 10.0,
+    );
+    s.finish();
+}

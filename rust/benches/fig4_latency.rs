@@ -1,0 +1,40 @@
+//! Fig 4 regeneration: membench random-read latency per device.
+//!
+//! Paper shape: DRAM lowest (ns class); CXL devices pay the ~50ns link;
+//! PMEM at its 150ns media read; uncached CXL-SSD tens of µs; cached
+//! CXL-SSD on par with CXL-DRAM / PMEM class.
+
+mod bench_util;
+
+use bench_util::{timed, Shapes};
+use cxl_ssd_sim::coordinator::experiments::{fig4_latency, ExpScale};
+use cxl_ssd_sim::devices::DeviceKind;
+
+fn main() {
+    let (table, raw) = timed("Fig 4: membench random read latency", || {
+        fig4_latency(ExpScale::full())
+    });
+    print!("{}", table.render());
+
+    let m: std::collections::HashMap<_, _> = raw.into_iter().collect();
+    let mut s = Shapes::new();
+    s.check(
+        "DRAM < CXL-DRAM < PMEM < CXL-SSD",
+        m[&DeviceKind::Dram] < m[&DeviceKind::CxlDram]
+            && m[&DeviceKind::CxlDram] < m[&DeviceKind::Pmem]
+            && m[&DeviceKind::Pmem] < m[&DeviceKind::CxlSsd],
+    );
+    s.check(
+        "uncached CXL-SSD in the tens of microseconds",
+        m[&DeviceKind::CxlSsd] > 10_000.0,
+    );
+    s.check(
+        "cached CXL-SSD in the CXL-DRAM/PMEM class (not the flash class)",
+        m[&DeviceKind::CxlSsdCached] < 10.0 * m[&DeviceKind::CxlDram],
+    );
+    s.check(
+        "CXL link adds roughly its 50ns constant to DRAM",
+        m[&DeviceKind::CxlDram] - m[&DeviceKind::Dram] > 50.0,
+    );
+    s.finish();
+}

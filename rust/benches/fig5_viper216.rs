@@ -1,0 +1,52 @@
+//! Fig 5 regeneration: Viper QPS with 216B key-value pairs.
+//!
+//! Paper shape: DRAM & CXL-DRAM lead (CXL-DRAM ~14% behind DRAM); PMEM
+//! 20–50% behind CXL-DRAM; cached CXL-SSD 7–10x over uncached.
+
+mod bench_util;
+
+use bench_util::{timed, Shapes};
+use cxl_ssd_sim::coordinator::experiments::{fig56_viper, ExpScale};
+use cxl_ssd_sim::devices::DeviceKind;
+
+fn agg(kv: &[(String, f64)]) -> f64 {
+    // Harmonic mean across op types = aggregate QPS at equal op counts.
+    kv.len() as f64 / kv.iter().map(|(_, q)| 1.0 / q).sum::<f64>()
+}
+
+fn main() {
+    let (table, raw) = timed("Fig 5: Viper 216B QPS", || {
+        fig56_viper(216, ExpScale::full())
+    });
+    print!("{}", table.render());
+
+    let m: std::collections::HashMap<_, _> = raw.into_iter().collect();
+    let mut s = Shapes::new();
+    let dram = agg(&m[&DeviceKind::Dram]);
+    let cxl_dram = agg(&m[&DeviceKind::CxlDram]);
+    let pmem = agg(&m[&DeviceKind::Pmem]);
+    let cached = agg(&m[&DeviceKind::CxlSsdCached]);
+    let uncached = agg(&m[&DeviceKind::CxlSsd]);
+    println!(
+        "aggregate QPS: dram {dram:.0}, cxl-dram {cxl_dram:.0}, pmem {pmem:.0}, \
+         cxl-ssd {uncached:.0}, cxl-ssd-cache {cached:.0}"
+    );
+    println!(
+        "cxl-dram/dram = {:.2}, cached/uncached = {:.1}x, pmem/cxl-dram = {:.2}",
+        cxl_dram / dram,
+        cached / uncached,
+        pmem / cxl_dram
+    );
+
+    s.check("DRAM leads CXL-DRAM", dram >= cxl_dram);
+    s.check(
+        "CXL-DRAM within ~25% of DRAM (paper: 14% loss)",
+        cxl_dram / dram > 0.70,
+    );
+    s.check("PMEM behind CXL-DRAM (paper: 20-50%)", pmem < cxl_dram);
+    s.check(
+        "cached CXL-SSD many times uncached (paper: 7-10x)",
+        cached / uncached > 4.0,
+    );
+    s.finish();
+}

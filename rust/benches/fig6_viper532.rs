@@ -1,0 +1,57 @@
+//! Fig 6 regeneration: Viper QPS with 532B key-value pairs.
+//!
+//! Paper shape: QPS drops versus 216B across the board; the cached
+//! CXL-SSD suffers a higher miss rate at the larger footprint and falls
+//! behind PMEM (paper: 20–30% lower QPS than PMEM).
+
+mod bench_util;
+
+use bench_util::{timed, Shapes};
+use cxl_ssd_sim::coordinator::experiments::{fig56_viper, ExpScale};
+use cxl_ssd_sim::devices::DeviceKind;
+
+fn agg(kv: &[(String, f64)]) -> f64 {
+    kv.len() as f64 / kv.iter().map(|(_, q)| 1.0 / q).sum::<f64>()
+}
+
+fn main() {
+    let (t216, raw216) = timed("Viper 216B (reference)", || {
+        fig56_viper(216, ExpScale::full())
+    });
+    let (t532, raw532) = timed("Fig 6: Viper 532B QPS", || {
+        fig56_viper(532, ExpScale::full())
+    });
+    println!("-- 216B --");
+    print!("{}", t216.render());
+    println!("-- 532B --");
+    print!("{}", t532.render());
+
+    let m216: std::collections::HashMap<_, _> = raw216.into_iter().collect();
+    let m532: std::collections::HashMap<_, _> = raw532.into_iter().collect();
+
+    let mut s = Shapes::new();
+    // QPS decreases as record size increases, for every device.
+    for kind in DeviceKind::ALL {
+        s.check(
+            &format!("{}: 532B slower than 216B", kind.name()),
+            agg(&m532[&kind]) < agg(&m216[&kind]),
+        );
+    }
+    // DRAM-class devices still lead at 532B.
+    s.check(
+        "DRAM class leads at 532B",
+        agg(&m532[&DeviceKind::Dram]) > agg(&m532[&DeviceKind::Pmem]),
+    );
+    // The cached CXL-SSD loses its edge over PMEM at 532B (higher miss
+    // rate) — paper reports it 20-30% *below* PMEM.
+    let cached = agg(&m532[&DeviceKind::CxlSsdCached]);
+    let pmem = agg(&m532[&DeviceKind::Pmem]);
+    let ratio216 = agg(&m216[&DeviceKind::CxlSsdCached]) / agg(&m216[&DeviceKind::Pmem]);
+    let ratio532 = cached / pmem;
+    println!("cached/pmem: 216B {ratio216:.2} -> 532B {ratio532:.2}");
+    s.check(
+        "cached CXL-SSD loses ground to PMEM at 532B",
+        ratio532 < ratio216,
+    );
+    s.finish();
+}

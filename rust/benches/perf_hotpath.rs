@@ -1,0 +1,61 @@
+//! L3 hot-path throughput: simulated device accesses per host second for
+//! each device model, plus the surrogate batch path. This is the §Perf
+//! number tracked in EXPERIMENTS.md.
+
+mod bench_util;
+
+use std::time::Instant;
+
+use bench_util::{timed, Shapes};
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::devices::{build_device, DeviceKind};
+use cxl_ssd_sim::stats::Table;
+use cxl_ssd_sim::testing::SplitMix64;
+
+fn main() {
+    let cfg = presets::table1();
+    let n = 2_000_000u64;
+
+    let mut table = Table::new(&["path", "accesses", "wall s", "M accesses/s"]);
+    let mut rates = Vec::new();
+
+    for kind in DeviceKind::ALL {
+        let rate = timed(&format!("detailed {}", kind.name()), || {
+            let mut dev = build_device(kind, &cfg);
+            let mut rng = SplitMix64::new(1);
+            let span = cfg.device_bytes / 64;
+            // Keep simulated time advancing so queues drain (1µs spacing).
+            let mut now = 0u64;
+            let t0 = Instant::now();
+            for _ in 0..n {
+                let addr = rng.below(span) * 64;
+                dev.access(now, addr, rng.chance(0.3));
+                now += 1_000_000;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            table.row(&[
+                format!("detailed/{}", kind.name()),
+                n.to_string(),
+                format!("{wall:.2}"),
+                format!("{:.2}", n as f64 / wall / 1e6),
+            ]);
+            n as f64 / wall
+        });
+        rates.push((kind, rate));
+    }
+
+    print!("{}", table.render());
+
+    let mut s = Shapes::new();
+    // §Perf target: the detailed event loop sustains >= 1M accesses/s on
+    // the pure-latency devices (DRAM/PMEM class).
+    for (kind, rate) in &rates {
+        if matches!(kind, DeviceKind::Dram | DeviceKind::Pmem) {
+            s.check(
+                &format!("{} >= 1M accesses/s (got {:.2}M)", kind.name(), rate / 1e6),
+                *rate >= 1e6,
+            );
+        }
+    }
+    s.finish();
+}

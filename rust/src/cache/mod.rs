@@ -1,0 +1,367 @@
+//! The CXL-SSD expander DRAM cache layer (paper §II-C).
+//!
+//! A 4KB-page cache in the expander's DRAM that fronts the SSD: 16MB by
+//! default (Table I), write-back + write-allocate, valid/dirty bits per
+//! frame, an [`mshr::Mshr`] that merges overlapping 64B requests to the
+//! same in-flight 4KB fill, and five replacement policies
+//! ([`policies::Policy`]): Direct, LRU, FIFO, 2Q and LFRU.
+//!
+//! The cache itself is a pure state machine: [`PageCache::lookup`] decides
+//! hit / MSHR-merge / miss(+writeback) and the *device* layer
+//! ([`crate::devices::CxlSsdCached`]) performs the actual flash traffic
+//! and reports fill completion via [`PageCache::fill_done`]. This keeps
+//! the replacement logic reusable by both detailed mode and the fast-mode
+//! functional filter.
+
+pub mod mshr;
+pub mod policies;
+
+pub use mshr::{Mshr, MshrStats};
+pub use policies::{Policy, PolicyKind};
+
+use crate::fasthash::{fast_map, FastMap};
+use crate::sim::Tick;
+
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub mshr_merges: u64,
+    pub writebacks: u64,
+    pub evictions: u64,
+    /// Overlapping requests the MSHR could not track: each re-reads flash
+    /// (the redundant reads the paper's MSHR exists to avoid).
+    pub redundant_fills: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        // MSHR merges count as hits for traffic purposes: they do not
+        // produce flash reads.
+        let served = self.hits + self.mshr_merges;
+        let total = served + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            served as f64 / total as f64
+        }
+    }
+}
+
+/// Result of a cache lookup (state already transitioned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lookup {
+    /// Present and valid: serve at DRAM-cache latency.
+    Hit,
+    /// A fill for this page is already in flight; ready at `ready`.
+    MshrMerge { ready: Tick },
+    /// Not present: caller must read the page from flash; if
+    /// `writeback` is `Some(victim_page)`, a dirty page must be written
+    /// back (asynchronously) as well.
+    Miss { writeback: Option<u64> },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    page: u64,
+    dirty: bool,
+    /// Tick at which the frame's fill completes (data usable).
+    ready: Tick,
+}
+
+/// The expander-side DRAM page cache.
+#[derive(Debug)]
+pub struct PageCache {
+    n_frames: usize,
+    policy: Policy,
+    /// page -> frame (associative policies only; Direct computes it).
+    map: FastMap<u64, usize>,
+    frames: Vec<Option<Frame>>,
+    /// Occupied frame count (skips the free-frame scan once full).
+    occupied: usize,
+    mshr: Mshr,
+    stats: CacheStats,
+}
+
+impl PageCache {
+    pub fn new(n_frames: usize, kind: PolicyKind, mshr_entries: usize) -> Self {
+        PageCache {
+            n_frames,
+            policy: Policy::new(kind, n_frames),
+            map: fast_map(n_frames),
+            frames: vec![None; n_frames],
+            occupied: 0,
+            mshr: Mshr::new(mshr_entries),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn kind(&self) -> PolicyKind {
+        self.policy.kind()
+    }
+
+    pub fn n_frames(&self) -> usize {
+        self.n_frames
+    }
+
+    /// Look up `page` at `now`, transitioning cache state.
+    ///
+    /// On `Miss` the frame is claimed immediately (write-allocate) and the
+    /// caller must later call [`fill_done`](Self::fill_done) with the
+    /// flash read completion tick so overlapping requests can merge.
+    pub fn lookup(&mut self, now: Tick, page: u64, is_write: bool) -> Lookup {
+        self.mshr.expire(now);
+
+        let frame_idx = match self.policy.kind() {
+            PolicyKind::Direct => {
+                let idx = (page % self.n_frames as u64) as usize;
+                match self.frames[idx] {
+                    Some(f) if f.page == page => Some(idx),
+                    _ => None,
+                }
+            }
+            _ => self.map.get(&page).copied(),
+        };
+
+        if let Some(idx) = frame_idx {
+            // Present — but a just-allocated frame may still be filling.
+            let ready = self.frames[idx].as_ref().unwrap().ready;
+            if now < ready {
+                if let Some(tracked) = self.mshr.in_flight(page) {
+                    self.stats.mshr_merges += 1;
+                    if is_write {
+                        self.frames[idx].as_mut().unwrap().dirty = true;
+                    }
+                    return Lookup::MshrMerge { ready: tracked };
+                }
+                // Fill in flight but the MSHR lost track of it (capacity):
+                // the device must issue a redundant flash read.
+                self.stats.redundant_fills += 1;
+                self.stats.misses += 1;
+                if is_write {
+                    self.frames[idx].as_mut().unwrap().dirty = true;
+                }
+                return Lookup::Miss { writeback: None };
+            }
+            self.stats.hits += 1;
+            self.policy.on_hit(idx, page);
+            if is_write {
+                self.frames[idx].as_mut().unwrap().dirty = true;
+            }
+            return Lookup::Hit;
+        }
+
+        // Miss: allocate a frame (write-allocate for both reads+writes).
+        self.stats.misses += 1;
+        let (idx, evicted) = self.allocate(page);
+        let writeback = evicted.and_then(|f| if f.dirty { Some(f.page) } else { None });
+        if evicted.is_some() {
+            self.stats.evictions += 1;
+        }
+        if writeback.is_some() {
+            self.stats.writebacks += 1;
+        }
+        self.occupied += 1;
+        self.frames[idx] = Some(Frame {
+            page,
+            dirty: is_write,
+            // Usable immediately unless fill_done extends it with the
+            // real flash-fill completion.
+            ready: now,
+        });
+        if self.policy.kind() != PolicyKind::Direct {
+            self.map.insert(page, idx);
+        }
+        Lookup::Miss { writeback }
+    }
+
+    /// Record that the flash fill for `page` (claimed by a prior `Miss`)
+    /// completes at `done`. Overlapping lookups before `done` merge via
+    /// the MSHR; if the MSHR is full they become redundant flash reads.
+    pub fn fill_done(&mut self, page: u64, done: Tick) {
+        self.mshr.insert(page, done);
+        let idx = match self.policy.kind() {
+            PolicyKind::Direct => {
+                let i = (page % self.n_frames as u64) as usize;
+                matches!(self.frames[i], Some(f) if f.page == page).then_some(i)
+            }
+            _ => self.map.get(&page).copied(),
+        };
+        if let Some(i) = idx {
+            if let Some(f) = self.frames[i].as_mut() {
+                f.ready = f.ready.max(done);
+            }
+        }
+    }
+
+    /// Pick and clear the frame for `page`'s residence.
+    fn allocate(&mut self, page: u64) -> (usize, Option<Frame>) {
+        let idx = match self.policy.kind() {
+            PolicyKind::Direct => (page % self.n_frames as u64) as usize,
+            _ => {
+                if self.occupied < self.n_frames {
+                    // A free frame exists; find it (cold-start only —
+                    // once warm the victim path below is taken).
+                    self.frames
+                        .iter()
+                        .position(|f| f.is_none())
+                        .expect("occupancy count out of sync")
+                } else {
+                    self.policy.victim()
+                }
+            }
+        };
+        let evicted = self.frames[idx].take();
+        if evicted.is_some() {
+            self.occupied -= 1;
+        }
+        if let Some(old) = evicted {
+            if self.policy.kind() != PolicyKind::Direct {
+                self.map.remove(&old.page);
+            }
+            self.policy.on_evict(idx, old.page);
+        }
+        self.policy.on_insert(idx, page);
+        (idx, evicted)
+    }
+
+    /// Is `page` currently resident (regardless of fill state)?
+    pub fn contains(&self, page: u64) -> bool {
+        match self.policy.kind() {
+            PolicyKind::Direct => {
+                let idx = (page % self.n_frames as u64) as usize;
+                matches!(self.frames[idx], Some(f) if f.page == page)
+            }
+            _ => self.map.contains_key(&page),
+        }
+    }
+
+    /// Number of resident pages.
+    pub fn resident(&self) -> usize {
+        self.occupied
+    }
+
+    /// Drain: list of dirty resident pages (end-of-run writeback).
+    pub fn dirty_pages(&self) -> Vec<u64> {
+        self.frames
+            .iter()
+            .flatten()
+            .filter(|f| f.dirty)
+            .map(|f| f.page)
+            .collect()
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    pub fn mshr_stats(&self) -> &MshrStats {
+        self.mshr.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(kind: PolicyKind) -> PageCache {
+        PageCache::new(4, kind, 8)
+    }
+
+    #[test]
+    fn cold_miss_then_hit_all_policies() {
+        for kind in PolicyKind::ALL {
+            let mut c = cache(kind);
+            assert!(matches!(c.lookup(0, 1, false), Lookup::Miss { .. }));
+            c.fill_done(1, 100);
+            assert_eq!(c.lookup(200, 1, false), Lookup::Hit, "{kind:?}");
+            assert_eq!(c.stats().hits, 1);
+        }
+    }
+
+    #[test]
+    fn overlapping_requests_merge_in_mshr() {
+        let mut c = cache(PolicyKind::Lru);
+        assert!(matches!(c.lookup(0, 5, false), Lookup::Miss { .. }));
+        c.fill_done(5, 50_000);
+        // Second request to the same page before the fill completes:
+        match c.lookup(10, 5, false) {
+            Lookup::MshrMerge { ready } => assert_eq!(ready, 50_000),
+            other => panic!("expected merge, got {other:?}"),
+        }
+        // After completion it is a plain hit.
+        assert_eq!(c.lookup(60_000, 5, false), Lookup::Hit);
+        assert_eq!(c.stats().mshr_merges, 1);
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = cache(PolicyKind::Lru);
+        c.lookup(0, 0, true); // dirty
+        for p in 1..4 {
+            c.lookup(0, p, false);
+        }
+        // Cache full; next miss evicts LRU (page 0, dirty).
+        match c.lookup(0, 99, false) {
+            Lookup::Miss { writeback } => assert_eq!(writeback, Some(0)),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.stats().writebacks, 1);
+    }
+
+    #[test]
+    fn clean_eviction_no_writeback() {
+        let mut c = cache(PolicyKind::Fifo);
+        for p in 0..5 {
+            match c.lookup(0, p, false) {
+                Lookup::Miss { writeback } => assert_eq!(writeback, None),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn direct_mapping_conflicts_on_same_set() {
+        let mut c = cache(PolicyKind::Direct);
+        c.lookup(0, 0, false);
+        c.lookup(0, 4, false); // 4 % 4 == 0: evicts page 0
+        assert!(!c.contains(0));
+        assert!(c.contains(4));
+        // ...while an associative cache keeps both.
+        let mut l = cache(PolicyKind::Lru);
+        l.lookup(0, 0, false);
+        l.lookup(0, 4, false);
+        assert!(l.contains(0) && l.contains(4));
+    }
+
+    #[test]
+    fn write_during_fill_marks_dirty() {
+        let mut c = cache(PolicyKind::Lru);
+        c.lookup(0, 7, false);
+        c.fill_done(7, 1_000);
+        c.lookup(500, 7, true); // merge + dirty
+        assert_eq!(c.dirty_pages(), vec![7]);
+    }
+
+    #[test]
+    fn resident_never_exceeds_capacity() {
+        for kind in PolicyKind::ALL {
+            let mut c = cache(kind);
+            for p in 0..64 {
+                c.lookup(0, p, p % 3 == 0);
+            }
+            assert!(c.resident() <= 4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn hit_rate_reflects_locality() {
+        let mut c = cache(PolicyKind::Lru);
+        for round in 0..10 {
+            for p in 0..3 {
+                c.lookup(round * 100, p, false);
+            }
+        }
+        assert!(c.stats().hit_rate() > 0.8);
+    }
+}

@@ -1,0 +1,129 @@
+//! MSHR — Miss Status Holding Registers for the DRAM cache layer.
+//!
+//! The paper (§II-C): "The MSHR module handles overlapping 64B requests
+//! targeting the same 4KB page, avoiding redundant SSD reads and reducing
+//! data traffic." We track in-flight 4KB fills by page with their
+//! completion ticks; entries expire lazily once complete.
+
+use crate::fasthash::{fast_map, FastMap};
+use crate::sim::Tick;
+
+#[derive(Debug, Default, Clone)]
+pub struct MshrStats {
+    /// Fills registered.
+    pub allocations: u64,
+    /// Requests that found an in-flight fill (redundant reads avoided).
+    pub merges: u64,
+    /// Registrations rejected because the table was full.
+    pub capacity_rejections: u64,
+}
+
+/// In-flight fill table.
+#[derive(Debug)]
+pub struct Mshr {
+    entries: FastMap<u64, Tick>,
+    capacity: usize,
+    stats: MshrStats,
+}
+
+impl Mshr {
+    pub fn new(capacity: usize) -> Self {
+        Mshr {
+            entries: fast_map(capacity),
+            capacity, // 0 = tracking disabled (every overlap re-reads)
+            stats: MshrStats::default(),
+        }
+    }
+
+    /// Register a fill for `page` completing at `done`.
+    ///
+    /// If the table is full the fill simply is not tracked — later
+    /// overlapping requests will re-read flash (counted, so the ablation
+    /// bench can show the traffic cost of an undersized MSHR).
+    pub fn insert(&mut self, page: u64, done: Tick) {
+        if self.entries.len() >= self.capacity && !self.entries.contains_key(&page) {
+            self.stats.capacity_rejections += 1;
+            return;
+        }
+        self.stats.allocations += 1;
+        self.entries.insert(page, done);
+    }
+
+    /// Completion tick of an in-flight fill for `page`, if any.
+    /// Counts a merge when found.
+    pub fn in_flight(&mut self, page: u64) -> Option<Tick> {
+        let t = self.entries.get(&page).copied();
+        if t.is_some() {
+            self.stats.merges += 1;
+        }
+        t
+    }
+
+    /// Drop entries whose fills completed at or before `now`.
+    /// Cheap when empty (the overwhelmingly common case).
+    pub fn expire(&mut self, now: Tick) {
+        if !self.entries.is_empty() {
+            self.entries.retain(|_, done| *done > now);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> &MshrStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_and_expires() {
+        let mut m = Mshr::new(4);
+        m.insert(1, 100);
+        assert_eq!(m.in_flight(1), Some(100));
+        m.expire(99);
+        assert_eq!(m.len(), 1);
+        m.expire(100);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn merge_counting() {
+        let mut m = Mshr::new(4);
+        m.insert(1, 100);
+        m.in_flight(1);
+        m.in_flight(1);
+        m.in_flight(2); // not in flight: no merge
+        assert_eq!(m.stats().merges, 2);
+    }
+
+    #[test]
+    fn zero_capacity_tracks_nothing() {
+        let mut m = Mshr::new(0);
+        m.insert(1, 100);
+        assert_eq!(m.in_flight(1), None);
+        assert_eq!(m.stats().capacity_rejections, 1);
+    }
+
+    #[test]
+    fn capacity_limit_rejects() {
+        let mut m = Mshr::new(2);
+        m.insert(1, 100);
+        m.insert(2, 100);
+        m.insert(3, 100); // rejected
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.stats().capacity_rejections, 1);
+        assert_eq!(m.in_flight(3), None);
+        // Re-inserting an existing page is always allowed.
+        m.insert(1, 200);
+        assert_eq!(m.in_flight(1), Some(200));
+    }
+}

@@ -1,0 +1,261 @@
+//! Command-line interface (hand-rolled: no clap offline).
+//!
+//! ```text
+//! cxl-ssd-sim info
+//! cxl-ssd-sim run --device <dev> --workload <wl> [--config f] [--set k=v]...
+//! cxl-ssd-sim sweep --experiment fig3|fig4|fig5|fig6|policies|mshr|fastmode [--quick]
+//! cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
+//! cxl-ssd-sim trace replay --in <file> --device <dev> [--fast] [--artifacts dir]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SimConfig;
+use crate::coordinator::experiments::{self, ExpScale};
+use crate::coordinator::{fastmode_compare, run_with_trace};
+use crate::devices::DeviceKind;
+use crate::sim::NS;
+use crate::surrogate::DEFAULT_ARTIFACTS;
+use crate::trace::Trace;
+use crate::workloads::WorkloadKind;
+
+const USAGE: &str = "cxl-ssd-sim — full-system CXL-SSD memory simulator
+
+USAGE:
+  cxl-ssd-sim info
+  cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache>
+                    --workload <stream|membench|viper216|viper532>
+                    [--config <file>] [--set section.key=value ...]
+  cxl-ssd-sim sweep --experiment <fig3|fig4|fig5|fig6|policies|mshr|fastmode>
+                    [--quick] [--artifacts <dir>]
+  cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
+  cxl-ssd-sim trace replay --in <file> --device <dev> [--fast] [--artifacts <dir>]
+";
+
+/// Tiny flag parser: `--key value` pairs plus positional words.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // Switches (no value) vs flags (value follows).
+                let is_switch = matches!(name, "quick" | "fast" | "help");
+                if is_switch {
+                    switches.push(name.to_string());
+                } else if i + 1 < argv.len() {
+                    flags.push((name.to_string(), argv[i + 1].clone()));
+                    i += 1;
+                } else {
+                    switches.push(name.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args {
+            positional,
+            flags,
+            switches,
+        }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+fn build_config(args: &Args) -> Result<SimConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SimConfig::from_file(path)?,
+        None => SimConfig::default(),
+    };
+    for ov in args.get_all("set") {
+        cfg.apply_override(ov)?;
+    }
+    if let Some(policy) = args.get("policy") {
+        cfg.apply_override(&format!("dcache.policy={policy}"))?;
+    }
+    Ok(cfg)
+}
+
+fn parse_device(args: &Args) -> Result<DeviceKind> {
+    let name = args.get("device").context("--device required")?;
+    DeviceKind::parse(name).with_context(|| format!("unknown device '{name}'"))
+}
+
+fn parse_workload(args: &Args) -> Result<WorkloadKind> {
+    let name = args.get("workload").context("--workload required")?;
+    WorkloadKind::parse(name).with_context(|| format!("unknown workload '{name}'"))
+}
+
+/// Entry point; returns the process exit code.
+pub fn main(argv: &[String]) -> Result<i32> {
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(2);
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+    if args.has("help") {
+        print!("{USAGE}");
+        return Ok(0);
+    }
+
+    match cmd {
+        "info" => {
+            println!("CXL-SSD-Sim experimental environment (paper Table I):\n");
+            print!("{}", experiments::table1_table().render());
+        }
+        "run" => {
+            let cfg = build_config(&args)?;
+            let device = parse_device(&args)?;
+            let workload = parse_workload(&args)?;
+            let (t, extra) = experiments::run_report(device, workload, &cfg);
+            print!("{}", t.render());
+            if !extra.is_empty() {
+                println!();
+                print!("{extra}");
+            }
+        }
+        "sweep" => {
+            let exp = args.get("experiment").context("--experiment required")?;
+            let scale = if args.has("quick") {
+                ExpScale::quick()
+            } else {
+                ExpScale::full()
+            };
+            let artifacts = args.get("artifacts").unwrap_or(DEFAULT_ARTIFACTS);
+            let table = match exp {
+                "fig3" => experiments::fig3_bandwidth(scale).0,
+                "fig4" => experiments::fig4_latency(scale).0,
+                "fig5" => experiments::fig56_viper(216, scale).0,
+                "fig6" => experiments::fig56_viper(532, scale).0,
+                "policies" => experiments::policy_sweep(216, scale).0,
+                "mshr" => experiments::mshr_ablation(scale).0,
+                "fastmode" => experiments::fastmode_ablation(artifacts, scale)?.0,
+                other => bail!("unknown experiment '{other}'"),
+            };
+            print!("{}", table.render());
+        }
+        "trace" => {
+            let sub = args
+                .positional
+                .first()
+                .context("trace needs 'record' or 'replay'")?;
+            match sub.as_str() {
+                "record" => {
+                    let cfg = build_config(&args)?;
+                    let device = parse_device(&args)?;
+                    let workload = parse_workload(&args)?;
+                    let out_path = args.get("out").context("--out required")?;
+                    let (out, trace) = run_with_trace(device, workload, &cfg);
+                    trace.save(out_path)?;
+                    println!(
+                        "recorded {} device accesses ({} loads, {} stores) -> {}",
+                        trace.len(),
+                        out.system.device_reads,
+                        out.system.device_writes,
+                        out_path
+                    );
+                }
+                "replay" => {
+                    let cfg = build_config(&args)?;
+                    let device = parse_device(&args)?;
+                    let in_path = args.get("in").context("--in required")?;
+                    let trace = Trace::load(in_path)?;
+                    if args.has("fast") {
+                        let artifacts = args.get("artifacts").unwrap_or(DEFAULT_ARTIFACTS);
+                        let r = fastmode_compare(device, &cfg, &trace, artifacts)?;
+                        println!(
+                            "{} accesses: detailed {:.1} ns vs fast {:.1} ns \
+                             (err {:.1}%), speedup {:.1}x",
+                            r.accesses,
+                            r.detailed_mean_ns,
+                            r.fast_mean_ns,
+                            r.mean_err_pct,
+                            r.speedup
+                        );
+                    } else {
+                        let mut dev = crate::devices::build_device(device, &cfg);
+                        let lats = trace.replay(dev.as_mut());
+                        let mean =
+                            lats.iter().sum::<u64>() as f64 / lats.len().max(1) as f64 / NS as f64;
+                        println!("{} accesses, mean latency {:.1} ns", lats.len(), mean);
+                    }
+                }
+                other => bail!("unknown trace subcommand '{other}'"),
+            }
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            return Ok(2);
+        }
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn args_parser_flags_and_switches() {
+        let a = Args::parse(&argv("--device dram --quick --set a.b=1 --set c.d=2"));
+        assert_eq!(a.get("device"), Some("dram"));
+        assert!(a.has("quick"));
+        assert_eq!(a.get_all("set"), vec!["a.b=1", "c.d=2"]);
+    }
+
+    #[test]
+    fn info_command_succeeds() {
+        assert_eq!(main(&argv("info")).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_usage() {
+        assert_eq!(main(&argv("frobnicate")).unwrap(), 2);
+    }
+
+    #[test]
+    fn run_requires_device() {
+        let e = main(&argv("run --workload stream"));
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn bad_device_is_error() {
+        let e = main(&argv("run --device floppy --workload stream"));
+        assert!(e.is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Configuration system: typed config structs, Table-I presets, a small
+//! TOML-subset parser for config files, and `section.key=value` overrides.
+
+mod parser;
+pub mod presets;
+
+pub use parser::{parse_file, parse_str, ConfigError, ConfigValue};
+
+use crate::cache::PolicyKind;
+use crate::cxl::HomeAgentConfig;
+use crate::dram::DramConfig;
+use crate::pmem::PmemConfig;
+use crate::sim::Tick;
+use crate::ssd::SsdConfig;
+
+/// Host CPU + cache-hierarchy parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuConfig {
+    /// L1D capacity (Table I: 64KB).
+    pub l1_bytes: u64,
+    pub l1_ways: usize,
+    /// L1 hit latency.
+    pub t_l1: Tick,
+    /// L2 capacity (Table I: 512KB).
+    pub l2_bytes: u64,
+    pub l2_ways: usize,
+    /// L2 hit latency (Table I: 25ns).
+    pub t_l2: Tick,
+    /// Mean non-memory work between memory ops (models instruction mix).
+    pub t_op_gap: Tick,
+    /// Store-buffer entries (stores retire asynchronously through it).
+    pub store_buffer: usize,
+}
+
+impl Default for CpuConfig {
+    fn default() -> Self {
+        CpuConfig {
+            l1_bytes: 64 << 10,
+            l1_ways: 8,
+            t_l1: 1_000, // 1 ns
+            l2_bytes: 512 << 10,
+            l2_ways: 16,
+            t_l2: 25_000, // 25 ns (Table I)
+            t_op_gap: 2_000,
+            store_buffer: 8,
+        }
+    }
+}
+
+/// Expander DRAM cache layer parameters (paper §II-C).
+#[derive(Debug, Clone, Copy)]
+pub struct DcacheConfig {
+    /// Capacity in bytes (Table I: 16MB).
+    pub bytes: u64,
+    pub policy: PolicyKind,
+    /// MSHR entries for in-flight 4KB fills.
+    pub mshr_entries: usize,
+    /// DRAM cache access latency (paper: 50ns).
+    pub t_access: Tick,
+}
+
+impl Default for DcacheConfig {
+    fn default() -> Self {
+        DcacheConfig {
+            bytes: 16 << 20,
+            policy: PolicyKind::Lru,
+            mshr_entries: 64,
+            t_access: 50_000,
+        }
+    }
+}
+
+impl DcacheConfig {
+    pub fn n_frames(&self) -> usize {
+        (self.bytes / crate::mem::PAGE_BYTES) as usize
+    }
+}
+
+/// Whole-system configuration (Table I defaults).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub cpu: CpuConfig,
+    pub dram: DramConfig,
+    pub pmem: PmemConfig,
+    pub ssd: SsdConfig,
+    pub dcache: DcacheConfig,
+    pub cxl: HomeAgentConfig,
+    /// Host main memory size (Table I: 512MB).
+    pub main_mem_bytes: u64,
+    /// Extension device window size mapped behind the Home Agent.
+    pub device_bytes: u64,
+    /// PRNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        presets::table1()
+    }
+}
+
+impl SimConfig {
+    /// Apply one `section.key = value` override.
+    pub fn apply(&mut self, section: &str, key: &str, v: &ConfigValue) -> Result<(), ConfigError> {
+        let bad = || ConfigError::UnknownKey(format!("{section}.{key}"));
+        match (section, key) {
+            ("cpu", "l1_bytes") => self.cpu.l1_bytes = v.as_u64()?,
+            ("cpu", "l1_ways") => self.cpu.l1_ways = v.as_u64()? as usize,
+            ("cpu", "t_l1") => self.cpu.t_l1 = v.as_u64()?,
+            ("cpu", "l2_bytes") => self.cpu.l2_bytes = v.as_u64()?,
+            ("cpu", "l2_ways") => self.cpu.l2_ways = v.as_u64()? as usize,
+            ("cpu", "t_l2") => self.cpu.t_l2 = v.as_u64()?,
+            ("cpu", "t_op_gap") => self.cpu.t_op_gap = v.as_u64()?,
+            ("cpu", "store_buffer") => self.cpu.store_buffer = v.as_u64()? as usize,
+            ("dram", "n_banks") => self.dram.n_banks = v.as_u64()? as usize,
+            ("dram", "lines_per_row") => self.dram.lines_per_row = v.as_u64()?,
+            ("dram", "t_cl") => self.dram.t_cl = v.as_u64()?,
+            ("dram", "t_rcd") => self.dram.t_rcd = v.as_u64()?,
+            ("dram", "t_rp") => self.dram.t_rp = v.as_u64()?,
+            ("dram", "t_burst") => self.dram.t_burst = v.as_u64()?,
+            ("dram", "t_wr") => self.dram.t_wr = v.as_u64()?,
+            ("dram", "t_refi") => self.dram.t_refi = v.as_u64()?,
+            ("dram", "t_rfc") => self.dram.t_rfc = v.as_u64()?,
+            ("pmem", "rowbuf_bytes") => self.pmem.rowbuf_bytes = v.as_u64()?,
+            ("pmem", "n_bufs") => self.pmem.n_bufs = v.as_u64()? as usize,
+            ("pmem", "n_ports") => self.pmem.n_ports = v.as_u64()? as usize,
+            ("pmem", "t_read") => self.pmem.t_read = v.as_u64()?,
+            ("pmem", "t_write") => self.pmem.t_write = v.as_u64()?,
+            ("pmem", "t_buf_hit") => self.pmem.t_buf_hit = v.as_u64()?,
+            ("ssd", "capacity_bytes") => self.ssd.capacity_bytes = v.as_u64()?,
+            ("ssd", "icl_bytes") => self.ssd.icl_bytes = v.as_u64()?,
+            ("ssd", "t_icl") => self.ssd.t_icl = v.as_u64()?,
+            ("ssd", "icl_enabled") => self.ssd.icl_enabled = v.as_bool()?,
+            ("ssd", "gc_threshold") => self.ssd.gc_threshold = v.as_u64()? as usize,
+            ("ssd", "n_channels") => self.ssd.nand.n_channels = v.as_u64()? as usize,
+            ("ssd", "dies_per_channel") => self.ssd.nand.dies_per_channel = v.as_u64()? as usize,
+            ("ssd", "pages_per_block") => self.ssd.nand.pages_per_block = v.as_u64()? as usize,
+            ("ssd", "t_cmd") => self.ssd.nand.t_cmd = v.as_u64()?,
+            ("ssd", "t_read") => self.ssd.nand.t_read = v.as_u64()?,
+            ("ssd", "t_prog") => self.ssd.nand.t_prog = v.as_u64()?,
+            ("ssd", "t_erase") => self.ssd.nand.t_erase = v.as_u64()?,
+            ("ssd", "t_xfer") => self.ssd.nand.t_xfer = v.as_u64()?,
+            ("dcache", "bytes") => self.dcache.bytes = v.as_u64()?,
+            ("dcache", "policy") => {
+                self.dcache.policy = PolicyKind::parse(&v.as_str()?)
+                    .ok_or_else(|| ConfigError::BadValue(format!("policy {v:?}")))?
+            }
+            ("dcache", "mshr_entries") => self.dcache.mshr_entries = v.as_u64()? as usize,
+            ("dcache", "t_access") => self.dcache.t_access = v.as_u64()?,
+            ("cxl", "t_proto") => self.cxl.t_proto = v.as_u64()?,
+            ("cxl", "credits") => self.cxl.credits = v.as_u64()? as usize,
+            ("sys", "main_mem_bytes") => self.main_mem_bytes = v.as_u64()?,
+            ("sys", "device_bytes") => self.device_bytes = v.as_u64()?,
+            ("sys", "seed") => self.seed = v.as_u64()?,
+            _ => return Err(bad()),
+        }
+        Ok(())
+    }
+
+    /// Load a TOML-subset config file over the Table-I defaults.
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let mut cfg = SimConfig::default();
+        for (section, key, value) in parse_file(path)? {
+            cfg.apply(&section, &key, &value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply a `section.key=value` command-line override.
+    pub fn apply_override(&mut self, spec: &str) -> Result<(), ConfigError> {
+        let (path, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| ConfigError::BadValue(format!("override '{spec}' (want k=v)")))?;
+        let (section, key) = path
+            .split_once('.')
+            .ok_or_else(|| ConfigError::BadValue(format!("key '{path}' (want section.key)")))?;
+        let value = ConfigValue::parse(raw.trim());
+        self.apply(section.trim(), key.trim(), &value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = SimConfig::default();
+        assert_eq!(c.cpu.l1_bytes, 64 << 10);
+        assert_eq!(c.cpu.l2_bytes, 512 << 10);
+        assert_eq!(c.cpu.t_l2, 25_000);
+        assert_eq!(c.pmem.t_read, 150_000);
+        assert_eq!(c.pmem.t_write, 500_000);
+        assert_eq!(c.pmem.rowbuf_bytes, 256);
+        assert_eq!(c.dcache.bytes, 16 << 20);
+        assert_eq!(c.ssd.capacity_bytes, 16 << 30);
+        assert_eq!(c.ssd.icl_bytes, 512 << 10);
+        assert_eq!(c.main_mem_bytes, 512 << 20);
+        assert_eq!(c.cxl.t_proto, 25_000);
+        assert_eq!(c.dcache.n_frames(), 4096);
+    }
+
+    #[test]
+    fn apply_override_roundtrip() {
+        let mut c = SimConfig::default();
+        c.apply_override("dcache.policy=2q").unwrap();
+        assert_eq!(c.dcache.policy, PolicyKind::TwoQ);
+        c.apply_override("ssd.t_read=50000000").unwrap();
+        assert_eq!(c.ssd.nand.t_read, 50_000_000);
+        c.apply_override("ssd.icl_enabled=false").unwrap();
+        assert!(!c.ssd.icl_enabled);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SimConfig::default();
+        assert!(c.apply_override("bogus.key=1").is_err());
+        assert!(c.apply_override("nonsense").is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Minimal TOML-subset parser (no serde in the offline build).
+//!
+//! Supports exactly what the simulator configs need:
+//! `[section]` headers, `key = value` pairs, `#` comments, and integer /
+//! float / bool / quoted-string values. Integers accept `_` separators
+//! and `k/M/G` binary suffixes (`64k` = 65536).
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigValue {
+    Int(u64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error at line {0}: {1}")]
+    Parse(usize, String),
+    #[error("unknown config key: {0}")]
+    UnknownKey(String),
+    #[error("bad value: {0}")]
+    BadValue(String),
+}
+
+impl ConfigValue {
+    /// Infer a value from its literal spelling.
+    pub fn parse(raw: &str) -> ConfigValue {
+        let raw = raw.trim();
+        if raw == "true" {
+            return ConfigValue::Bool(true);
+        }
+        if raw == "false" {
+            return ConfigValue::Bool(false);
+        }
+        if let Some(stripped) = raw.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+            return ConfigValue::Str(stripped.to_string());
+        }
+        if let Some(v) = parse_int(raw) {
+            return ConfigValue::Int(v);
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return ConfigValue::Float(f);
+        }
+        ConfigValue::Str(raw.to_string())
+    }
+
+    pub fn as_u64(&self) -> Result<u64, ConfigError> {
+        match self {
+            ConfigValue::Int(v) => Ok(*v),
+            ConfigValue::Float(f) if f.fract() == 0.0 && *f >= 0.0 => Ok(*f as u64),
+            other => Err(ConfigError::BadValue(format!("{other:?} (want integer)"))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, ConfigError> {
+        match self {
+            ConfigValue::Int(v) => Ok(*v as f64),
+            ConfigValue::Float(f) => Ok(*f),
+            other => Err(ConfigError::BadValue(format!("{other:?} (want number)"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool, ConfigError> {
+        match self {
+            ConfigValue::Bool(b) => Ok(*b),
+            other => Err(ConfigError::BadValue(format!("{other:?} (want bool)"))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<String, ConfigError> {
+        match self {
+            ConfigValue::Str(s) => Ok(s.clone()),
+            other => Err(ConfigError::BadValue(format!("{other:?} (want string)"))),
+        }
+    }
+}
+
+impl fmt::Display for ConfigValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigValue::Int(v) => write!(f, "{v}"),
+            ConfigValue::Float(v) => write!(f, "{v}"),
+            ConfigValue::Bool(v) => write!(f, "{v}"),
+            ConfigValue::Str(v) => write!(f, "\"{v}\""),
+        }
+    }
+}
+
+/// Integer with `_` separators and k/M/G binary suffixes.
+fn parse_int(raw: &str) -> Option<u64> {
+    let cleaned: String = raw.chars().filter(|&c| c != '_').collect();
+    let (digits, mult) = match cleaned.chars().last()? {
+        'k' | 'K' => (&cleaned[..cleaned.len() - 1], 1u64 << 10),
+        'M' => (&cleaned[..cleaned.len() - 1], 1u64 << 20),
+        'G' => (&cleaned[..cleaned.len() - 1], 1u64 << 30),
+        _ => (cleaned.as_str(), 1),
+    };
+    digits.parse::<u64>().ok().map(|v| v * mult)
+}
+
+/// Parse a config string into `(section, key, value)` triples.
+pub fn parse_str(text: &str) -> Result<Vec<(String, String, ConfigValue)>, ConfigError> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, raw) = line.split_once('=').ok_or_else(|| {
+            ConfigError::Parse(lineno + 1, format!("expected key = value, got '{line}'"))
+        })?;
+        if section.is_empty() {
+            return Err(ConfigError::Parse(
+                lineno + 1,
+                "key outside any [section]".to_string(),
+            ));
+        }
+        out.push((
+            section.clone(),
+            key.trim().to_string(),
+            ConfigValue::parse(raw),
+        ));
+    }
+    Ok(out)
+}
+
+/// Parse a config file into `(section, key, value)` triples.
+pub fn parse_file(path: &str) -> Result<Vec<(String, String, ConfigValue)>, ConfigError> {
+    parse_str(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+# a comment
+[dram]
+n_banks = 16
+t_cl = 14_160
+
+[dcache]
+policy = "lru"   # inline comment
+bytes = 16M
+enabled = true
+ratio = 0.5
+"#;
+        let kvs = parse_str(text).unwrap();
+        assert_eq!(kvs.len(), 6);
+        assert_eq!(kvs[0], ("dram".into(), "n_banks".into(), ConfigValue::Int(16)));
+        assert_eq!(kvs[1].2, ConfigValue::Int(14_160));
+        assert_eq!(kvs[2].2, ConfigValue::Str("lru".into()));
+        assert_eq!(kvs[3].2, ConfigValue::Int(16 << 20));
+        assert_eq!(kvs[4].2, ConfigValue::Bool(true));
+        assert_eq!(kvs[5].2, ConfigValue::Float(0.5));
+    }
+
+    #[test]
+    fn suffixes_and_separators() {
+        assert_eq!(parse_int("64k"), Some(64 << 10));
+        assert_eq!(parse_int("16M"), Some(16 << 20));
+        assert_eq!(parse_int("2G"), Some(2 << 30));
+        assert_eq!(parse_int("1_000_000"), Some(1_000_000));
+        assert_eq!(parse_int("abc"), None);
+    }
+
+    #[test]
+    fn key_outside_section_errors() {
+        assert!(parse_str("a = 1").is_err());
+    }
+
+    #[test]
+    fn missing_equals_errors() {
+        assert!(parse_str("[s]\nnonsense").is_err());
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(ConfigValue::Int(5).as_u64().unwrap(), 5);
+        assert_eq!(ConfigValue::Float(5.0).as_u64().unwrap(), 5);
+        assert!(ConfigValue::Float(5.5).as_u64().is_err());
+        assert!(ConfigValue::Str("x".into()).as_u64().is_err());
+        assert!(ConfigValue::Bool(true).as_bool().unwrap());
+        assert_eq!(ConfigValue::Int(2).as_f64().unwrap(), 2.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Configuration presets reproducing the paper's Table I.
+
+use super::{CpuConfig, DcacheConfig, SimConfig};
+use crate::cxl::HomeAgentConfig;
+use crate::dram::DramConfig;
+use crate::pmem::PmemConfig;
+use crate::ssd::SsdConfig;
+
+/// Table I: the paper's experimental environment.
+///
+/// | parameter            | value          |
+/// |----------------------|----------------|
+/// | ISA                  | x86 (implicit) |
+/// | mem type             | DDR4_2400_8x8  |
+/// | memory channels      | 1              |
+/// | cpu number           | 1              |
+/// | main memory          | 512 MB         |
+/// | L1D / L1I / L2       | 64KB / 32KB / 512KB |
+/// | PMEM rowbuffer       | 256 B          |
+/// | PMEM read / write    | 150 / 500 ns   |
+/// | CXL.mem processing   | 25 ns          |
+/// | CXL.mem total        | 50 ns          |
+/// | DRAM cache capacity  | 16 MB          |
+/// | DRAM cache access    | 50 ns          |
+/// | SSD capacity         | 16 GB          |
+/// | SSD internal buffer  | 512 KB         |
+pub fn table1() -> SimConfig {
+    SimConfig {
+        cpu: CpuConfig::default(),
+        dram: DramConfig::default(),
+        pmem: PmemConfig::default(),
+        ssd: SsdConfig::default(),
+        dcache: DcacheConfig::default(),
+        cxl: HomeAgentConfig::default(),
+        main_mem_bytes: 512 << 20,
+        device_bytes: 16 << 30,
+        seed: 0xC11A_55D0,
+    }
+}
+
+/// Smaller config for fast unit/integration tests: 64MB device, small
+/// caches, tiny SSD blocks so GC paths stay reachable.
+pub fn small_test() -> SimConfig {
+    let mut cfg = table1();
+    cfg.main_mem_bytes = 32 << 20;
+    cfg.device_bytes = 64 << 20;
+    cfg.ssd.capacity_bytes = 64 << 20;
+    // Small blocks keep blocks_per_die (=32) above the GC watermark.
+    cfg.ssd.nand.pages_per_block = 32;
+    cfg.dcache.bytes = 1 << 20; // 256 frames
+    cfg
+}
+
+/// Table rows for `cxl-ssd-sim info` (regenerates Table I).
+pub fn table1_rows() -> Vec<(String, String)> {
+    let c = table1();
+    vec![
+        ("ISA".into(), "x86 (modeled)".into()),
+        ("mem type".into(), "DDR4_2400_8x8".into()),
+        ("memory channels".into(), "1".into()),
+        ("cpu number".into(), "1".into()),
+        ("main memory".into(), format!("{} MB", c.main_mem_bytes >> 20)),
+        ("L1D cache".into(), format!("{} KB", c.cpu.l1_bytes >> 10)),
+        ("L2 cache".into(), format!("{} KB", c.cpu.l2_bytes >> 10)),
+        ("L2 hit latency".into(), format!("{} ns", c.cpu.t_l2 / 1000)),
+        (
+            "PMEM rowbuffer".into(),
+            format!("{} B", c.pmem.rowbuf_bytes),
+        ),
+        ("PMEM read".into(), format!("{} ns", c.pmem.t_read / 1000)),
+        ("PMEM write".into(), format!("{} ns", c.pmem.t_write / 1000)),
+        (
+            "CXL.mem processing".into(),
+            format!("{} ns", c.cxl.t_proto / 1000),
+        ),
+        (
+            "DRAM cache capacity".into(),
+            format!("{} MB", c.dcache.bytes >> 20),
+        ),
+        (
+            "DRAM cache access".into(),
+            format!("{} ns", c.dcache.t_access / 1000),
+        ),
+        (
+            "SSD capacity".into(),
+            format!("{} GB", c.ssd.capacity_bytes >> 30),
+        ),
+        (
+            "SSD internal buffer".into(),
+            format!("{} KB", c.ssd.icl_bytes >> 10),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_cover_key_parameters() {
+        let rows = table1_rows();
+        let text: String = rows
+            .iter()
+            .map(|(k, v)| format!("{k}={v};"))
+            .collect();
+        assert!(text.contains("PMEM read=150 ns"));
+        assert!(text.contains("PMEM write=500 ns"));
+        assert!(text.contains("DRAM cache capacity=16 MB"));
+        assert!(text.contains("SSD capacity=16 GB"));
+        assert!(text.contains("CXL.mem processing=25 ns"));
+        assert!(text.contains("main memory=512 MB"));
+    }
+
+    #[test]
+    fn small_test_preset_is_consistent() {
+        let c = small_test();
+        assert!(c.device_bytes <= c.ssd.capacity_bytes);
+        assert!(c.dcache.n_frames() >= 64);
+    }
+}

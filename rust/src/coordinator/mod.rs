@@ -1,0 +1,196 @@
+//! Run orchestration: builds the system, drives workloads, collects
+//! reports; hosts the fast-mode (surrogate) replay path and the
+//! experiment sweeps that regenerate the paper's figures.
+
+pub mod experiments;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::SimConfig;
+use crate::cpu::Core;
+use crate::devices::{build_device, DeviceKind};
+use crate::sim::{Tick, NS};
+use crate::stats::Histogram;
+use crate::surrogate::Surrogate;
+use crate::topology::{System, SystemStats};
+use crate::trace::Trace;
+use crate::workloads::{Membench, MembenchResult, Stream, StreamResult, Viper, ViperResult, WorkloadKind};
+
+/// Everything a detailed run produces.
+pub struct RunOutput {
+    pub device: DeviceKind,
+    pub workload: WorkloadKind,
+    /// Simulated time consumed by the workload.
+    pub sim_ticks: Tick,
+    /// Host wall-clock seconds spent simulating.
+    pub host_seconds: f64,
+    pub stream: Option<Vec<StreamResult>>,
+    pub membench: Option<MembenchResult>,
+    pub viper: Option<Vec<ViperResult>>,
+    pub system: SystemStats,
+    pub device_kv: Vec<(String, f64)>,
+}
+
+/// Run `workload` on `device` in detailed mode.
+pub fn run(device: DeviceKind, workload: WorkloadKind, cfg: &SimConfig) -> RunOutput {
+    run_inner(device, workload, cfg, false).0
+}
+
+/// Detailed run that also captures the device-access trace.
+pub fn run_with_trace(
+    device: DeviceKind,
+    workload: WorkloadKind,
+    cfg: &SimConfig,
+) -> (RunOutput, Trace) {
+    let (out, trace) = run_inner(device, workload, cfg, true);
+    (out, trace.expect("trace requested"))
+}
+
+fn run_inner(
+    device: DeviceKind,
+    workload: WorkloadKind,
+    cfg: &SimConfig,
+    capture: bool,
+) -> (RunOutput, Option<Trace>) {
+    let mut sys = System::new(device, cfg);
+    let mut core = Core::new(cfg.cpu);
+    if capture {
+        sys.enable_trace();
+    }
+    let wall = Instant::now();
+
+    let mut stream = None;
+    let mut membench = None;
+    let mut viper = None;
+    match workload {
+        WorkloadKind::Stream => {
+            stream = Some(Stream::default().run(&mut core, &mut sys));
+        }
+        WorkloadKind::Membench => {
+            membench = Some(Membench::default().run(&mut core, &mut sys));
+        }
+        WorkloadKind::Viper216 => {
+            viper = Some(Viper::new_216().run(&mut core, &mut sys));
+        }
+        WorkloadKind::Viper532 => {
+            viper = Some(Viper::new_532().run(&mut core, &mut sys));
+        }
+    }
+    sys.drain(core.now());
+
+    let host_seconds = wall.elapsed().as_secs_f64();
+    let trace = capture.then(|| sys.take_trace());
+    let out = RunOutput {
+        device,
+        workload,
+        sim_ticks: core.now(),
+        host_seconds,
+        stream,
+        membench,
+        viper,
+        system: sys.stats().clone(),
+        device_kv: sys.device_stats_kv(),
+    };
+    (out, trace)
+}
+
+/// Fast-vs-detailed comparison on one trace (the fast-mode ablation).
+#[derive(Debug, Clone)]
+pub struct FastReport {
+    pub device: DeviceKind,
+    pub accesses: u64,
+    /// Mean device latency from the detailed replay (ns).
+    pub detailed_mean_ns: f64,
+    /// Mean device latency from the surrogate replay (ns).
+    pub fast_mean_ns: f64,
+    /// Relative error of the surrogate mean (%).
+    pub mean_err_pct: f64,
+    pub detailed_wall_s: f64,
+    pub fast_wall_s: f64,
+    /// Detailed wall time / fast wall time.
+    pub speedup: f64,
+}
+
+/// Replay `trace` through both the detailed device model and the AOT
+/// surrogate; report accuracy and wall-clock speedup.
+pub fn fastmode_compare(
+    device: DeviceKind,
+    cfg: &SimConfig,
+    trace: &Trace,
+    artifacts_dir: &str,
+) -> Result<FastReport> {
+    // Detailed replay on a fresh device instance. The surrogate has no
+    // logical-page mapping state, so the comparison treats every page as
+    // flash-backed on both sides.
+    let mut replay_cfg = cfg.clone();
+    replay_cfg.ssd.assume_mapped = true;
+    let mut dev = build_device(device, &replay_cfg);
+    let wall = Instant::now();
+    let detailed = trace.replay(dev.as_mut());
+    let detailed_wall_s = wall.elapsed().as_secs_f64();
+
+    // Surrogate replay.
+    let mut sur = Surrogate::load(device, artifacts_dir, cfg)?;
+    let wall = Instant::now();
+    let fast = sur.replay(trace)?;
+    let fast_wall_s = wall.elapsed().as_secs_f64();
+
+    let mut hd = Histogram::new();
+    let mut hf = Histogram::new();
+    for &l in &detailed {
+        hd.record(l);
+    }
+    for &l in &fast {
+        hf.record(l);
+    }
+    let detailed_mean_ns = hd.mean() / NS as f64;
+    let fast_mean_ns = hf.mean() / NS as f64;
+    let mean_err_pct = if detailed_mean_ns > 0.0 {
+        (fast_mean_ns - detailed_mean_ns).abs() / detailed_mean_ns * 100.0
+    } else {
+        0.0
+    };
+    Ok(FastReport {
+        device,
+        accesses: detailed.len() as u64,
+        detailed_mean_ns,
+        fast_mean_ns,
+        mean_err_pct,
+        detailed_wall_s,
+        fast_wall_s,
+        speedup: if fast_wall_s > 0.0 {
+            detailed_wall_s / fast_wall_s
+        } else {
+            0.0
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn detailed_run_produces_stats() {
+        let mut cfg = presets::small_test();
+        cfg.seed = 1;
+        let out = run(DeviceKind::Dram, WorkloadKind::Membench, &cfg);
+        assert!(out.sim_ticks > 0);
+        assert!(out.membench.is_some());
+        assert!(out.system.loads > 0);
+    }
+
+    #[test]
+    fn trace_capture_matches_device_accesses() {
+        let cfg = presets::small_test();
+        let (out, trace) = run_with_trace(DeviceKind::Pmem, WorkloadKind::Membench, &cfg);
+        assert_eq!(
+            trace.len() as u64,
+            out.system.device_reads + out.system.device_writes
+        );
+        assert!(!trace.is_empty());
+    }
+}

@@ -1,0 +1,225 @@
+//! Host CPU caches: set-associative, write-back, write-allocate, LRU.
+//!
+//! Functional model — the hierarchy in [`crate::topology`] attaches hit
+//! latencies. Geometry follows Table I (L1D 64KB, L2 512KB, 64B lines).
+
+use crate::mem::{line_base, LINE_BYTES};
+
+/// Result of a cache access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheResult {
+    Hit,
+    /// Miss; if `writeback` is `Some(addr)`, a dirty line at `addr` was
+    /// evicted and must be written to the next level.
+    Miss { writeback: Option<u64> },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Line {
+    tag: u64,
+    dirty: bool,
+    stamp: u64,
+}
+
+/// One set-associative write-back cache level.
+#[derive(Debug)]
+pub struct HostCache {
+    sets: Vec<Vec<Option<Line>>>,
+    n_sets: u64,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl HostCache {
+    pub fn new(bytes: u64, ways: usize) -> Self {
+        let lines = bytes / LINE_BYTES;
+        let n_sets = (lines / ways as u64).max(1);
+        assert!(
+            n_sets.is_power_of_two(),
+            "cache sets must be a power of two (got {n_sets})"
+        );
+        HostCache {
+            sets: vec![vec![None; ways]; n_sets as usize],
+            n_sets,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn index(&self, addr: u64) -> (usize, u64) {
+        let line = addr / LINE_BYTES;
+        ((line % self.n_sets) as usize, line / self.n_sets)
+    }
+
+    /// Access the line containing `addr`; allocates on miss.
+    pub fn access(&mut self, addr: u64, is_write: bool) -> CacheResult {
+        self.clock += 1;
+        let (set_idx, tag) = self.index(addr);
+        let set = &mut self.sets[set_idx];
+
+        // Hit?
+        for line in set.iter_mut().flatten() {
+            if line.tag == tag {
+                line.stamp = self.clock;
+                line.dirty |= is_write;
+                self.hits += 1;
+                return CacheResult::Hit;
+            }
+        }
+        self.misses += 1;
+
+        // Allocate: free way or LRU victim.
+        let way = match set.iter().position(|l| l.is_none()) {
+            Some(w) => w,
+            None => {
+                set.iter()
+                    .enumerate()
+                    .min_by_key(|(_, l)| l.unwrap().stamp)
+                    .map(|(w, _)| w)
+                    .unwrap()
+            }
+        };
+        let evicted = set[way];
+        set[way] = Some(Line {
+            tag,
+            dirty: is_write,
+            stamp: self.clock,
+        });
+        let writeback = evicted.and_then(|l| {
+            if l.dirty {
+                Some(self.reconstruct(set_idx, l.tag))
+            } else {
+                None
+            }
+        });
+        CacheResult::Miss { writeback }
+    }
+
+    /// Invalidate the line containing `addr`; returns its address if it
+    /// was dirty (flush traffic).
+    pub fn invalidate(&mut self, addr: u64) -> Option<u64> {
+        let (set_idx, tag) = self.index(addr);
+        let set = &mut self.sets[set_idx];
+        for slot in set.iter_mut() {
+            if let Some(line) = slot {
+                if line.tag == tag {
+                    let dirty = line.dirty;
+                    *slot = None;
+                    return if dirty { Some(line_base(addr)) } else { None };
+                }
+            }
+        }
+        None
+    }
+
+    /// Line address from set index + tag.
+    fn reconstruct(&self, set_idx: usize, tag: u64) -> u64 {
+        (tag * self.n_sets + set_idx as u64) * LINE_BYTES
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        let (set_idx, tag) = self.index(addr);
+        self.sets[set_idx]
+            .iter()
+            .flatten()
+            .any(|l| l.tag == tag)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> HostCache {
+        HostCache::new(4 * 64, 2) // 2 sets x 2 ways
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut c = tiny();
+        assert!(matches!(c.access(0, false), CacheResult::Miss { .. }));
+        assert_eq!(c.access(0, false), CacheResult::Hit);
+        assert_eq!(c.access(63, false), CacheResult::Hit); // same line
+        assert!(matches!(c.access(64, false), CacheResult::Miss { .. }));
+    }
+
+    #[test]
+    fn dirty_eviction_produces_writeback_address() {
+        let mut c = tiny();
+        c.access(0, true); // set 0, dirty
+        c.access(128, false); // set 0 (2 sets x 64B)
+        // Third distinct line in set 0 evicts LRU (addr 0, dirty).
+        match c.access(256, false) {
+            CacheResult::Miss { writeback } => assert_eq!(writeback, Some(0)),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eviction_no_writeback() {
+        let mut c = tiny();
+        c.access(0, false);
+        c.access(128, false);
+        match c.access(256, false) {
+            CacheResult::Miss { writeback } => assert_eq!(writeback, None),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn lru_within_set() {
+        let mut c = tiny();
+        c.access(0, false);
+        c.access(128, false);
+        c.access(0, false); // refresh addr 0
+        c.access(256, false); // evicts 128
+        assert!(c.contains(0));
+        assert!(!c.contains(128));
+    }
+
+    #[test]
+    fn invalidate_returns_dirty_address() {
+        let mut c = tiny();
+        c.access(64, true);
+        assert_eq!(c.invalidate(64), Some(64));
+        assert!(!c.contains(64));
+        c.access(64, false);
+        assert_eq!(c.invalidate(64), None);
+    }
+
+    #[test]
+    fn reconstruct_is_inverse_of_index() {
+        let c = HostCache::new(64 << 10, 8);
+        for addr in [0u64, 64, 4096, 1 << 20, (1 << 30) + 64 * 7] {
+            let (set, tag) = c.index(addr);
+            assert_eq!(c.reconstruct(set, tag), line_base(addr));
+        }
+    }
+
+    #[test]
+    fn table1_geometry_builds() {
+        let l1 = HostCache::new(64 << 10, 8); // 128 sets
+        let l2 = HostCache::new(512 << 10, 16); // 512 sets
+        assert_eq!(l1.n_sets, 128);
+        assert_eq!(l2.n_sets, 512);
+    }
+}

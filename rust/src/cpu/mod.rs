@@ -1,0 +1,228 @@
+//! Simple timing CPU core: in-order, blocking loads, store buffer.
+//!
+//! The paper uses one x86 core (Table I). Workloads drive this core; it
+//! advances its own clock with every memory operation plus a configurable
+//! non-memory gap modeling the surrounding instruction mix.
+
+pub mod cache;
+
+use std::collections::VecDeque;
+
+use crate::config::CpuConfig;
+use crate::sim::Tick;
+use crate::stats::Histogram;
+use crate::topology::System;
+
+/// Per-core run counters.
+#[derive(Debug, Default, Clone)]
+pub struct CoreStats {
+    pub loads: u64,
+    pub stores: u64,
+    pub load_latency: Histogram,
+    pub store_stall_ticks: Tick,
+}
+
+/// One in-order core with a small store buffer.
+pub struct Core {
+    now: Tick,
+    cfg: CpuConfig,
+    /// Completion times of in-flight posted stores (FIFO drain).
+    store_buffer: VecDeque<Tick>,
+    stats: CoreStats,
+}
+
+impl Core {
+    pub fn new(cfg: CpuConfig) -> Self {
+        Core {
+            now: 0,
+            cfg,
+            store_buffer: VecDeque::with_capacity(cfg.store_buffer),
+            stats: CoreStats::default(),
+        }
+    }
+
+    pub fn now(&self) -> Tick {
+        self.now
+    }
+
+    /// Spend non-memory execution time.
+    pub fn compute(&mut self, ticks: Tick) {
+        self.now += ticks;
+    }
+
+    /// Blocking load of `size` bytes at `addr`: the core waits for data.
+    /// Returns the memory latency the load observed.
+    pub fn load(&mut self, sys: &mut System, addr: u64, size: u32) -> Tick {
+        self.now += self.cfg.t_op_gap;
+        let lat = sys.access(self.now, addr, size, false);
+        self.stats.loads += 1;
+        self.stats.load_latency.record(lat);
+        self.now += lat;
+        lat
+    }
+
+    /// Posted store of `size` bytes: retires through the store buffer;
+    /// the core stalls only when the buffer is full.
+    pub fn store(&mut self, sys: &mut System, addr: u64, size: u32) {
+        self.now += self.cfg.t_op_gap;
+        self.drain_completed();
+        if self.store_buffer.len() >= self.cfg.store_buffer.max(1) {
+            let front = *self.store_buffer.front().unwrap();
+            if front > self.now {
+                self.stats.store_stall_ticks += front - self.now;
+                self.now = front;
+            }
+            self.store_buffer.pop_front();
+        }
+        // Stores drain in order: each begins after its predecessor.
+        let issue = self
+            .store_buffer
+            .back()
+            .copied()
+            .unwrap_or(self.now)
+            .max(self.now);
+        let lat = sys.access(issue, addr, size, true);
+        self.store_buffer.push_back(issue + lat);
+        self.stats.stores += 1;
+    }
+
+    fn drain_completed(&mut self) {
+        while let Some(&front) = self.store_buffer.front() {
+            if front <= self.now {
+                self.store_buffer.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Non-temporal (streaming) store of `[addr, addr+size)`: lines go
+    /// straight to the device through the store buffer — Viper writes
+    /// values this way (no write-allocate fill, persisted by the next
+    /// sfence).
+    pub fn store_nt(&mut self, sys: &mut System, addr: u64, size: u32) {
+        self.now += self.cfg.t_op_gap;
+        let n = crate::mem::lines_covering(addr, size as u64).max(1);
+        let mut a = crate::mem::line_base(addr);
+        for _ in 0..n {
+            self.drain_completed();
+            if self.store_buffer.len() >= self.cfg.store_buffer.max(1) {
+                let front = *self.store_buffer.front().unwrap();
+                if front > self.now {
+                    self.stats.store_stall_ticks += front - self.now;
+                    self.now = front;
+                }
+                self.store_buffer.pop_front();
+            }
+            let done = sys.store_line_nt(self.now, a);
+            self.store_buffer.push_back(done);
+            self.stats.stores += 1;
+            a += crate::mem::LINE_BYTES;
+        }
+    }
+
+    /// clwb + sfence over `[addr, addr+size)`: force every dirty line in
+    /// the range back to its backing store and wait for the acks (the
+    /// persistence primitive of PMDK-style stores like Viper).
+    pub fn persist(&mut self, sys: &mut System, addr: u64, size: u32) {
+        self.fence(); // drain posted stores first (sfence semantics)
+        let n = crate::mem::lines_covering(addr, size as u64).max(1);
+        let mut a = crate::mem::line_base(addr);
+        self.now += self.cfg.t_op_gap; // clwb issue overhead
+        // clwbs are issued back-to-back and a single sfence waits for the
+        // slowest ack: flushes overlap across device ports/banks.
+        let mut done = 0;
+        for _ in 0..n {
+            let lat = sys.flush_line(self.now, a);
+            done = done.max(lat);
+            a += crate::mem::LINE_BYTES;
+        }
+        self.now += done;
+    }
+
+    /// Wait for every posted store to complete (memory barrier / end of
+    /// run).
+    pub fn fence(&mut self) {
+        if let Some(&last) = self.store_buffer.back() {
+            if last > self.now {
+                self.stats.store_stall_ticks += last - self.now;
+                self.now = last;
+            }
+        }
+        self.store_buffer.clear();
+    }
+
+    pub fn stats(&self) -> &CoreStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::devices::DeviceKind;
+
+    fn setup() -> (Core, System) {
+        let cfg = presets::small_test();
+        (Core::new(cfg.cpu), System::new(DeviceKind::Pmem, &cfg))
+    }
+
+    #[test]
+    fn load_blocks_the_core() {
+        let (mut core, mut sys) = setup();
+        let a = sys.device_addr(0);
+        let before = core.now();
+        core.load(&mut sys, a, 64);
+        // PMEM miss: 150ns media + hierarchy, plus the op gap.
+        assert!(core.now() - before > 150_000);
+        assert_eq!(core.stats().loads, 1);
+    }
+
+    #[test]
+    fn stores_post_through_buffer() {
+        let (mut core, mut sys) = setup();
+        let a = sys.device_addr(1 << 20);
+        let before = core.now();
+        core.store(&mut sys, a, 64);
+        // Posted: core advances only by the op gap.
+        assert_eq!(core.now() - before, core.cfg.t_op_gap);
+    }
+
+    #[test]
+    fn full_store_buffer_stalls() {
+        let (mut core, mut sys) = setup();
+        // Fill the buffer with slow PMEM writes to distinct rows.
+        for i in 0..32u64 {
+            let addr = sys.device_addr(i * 4096);
+            core.store(&mut sys, addr, 64);
+        }
+        assert!(core.stats().store_stall_ticks > 0);
+    }
+
+    #[test]
+    fn fence_waits_for_all_stores() {
+        let (mut core, mut sys) = setup();
+        let a0 = sys.device_addr(0);
+        let a1 = sys.device_addr(8192);
+        core.store(&mut sys, a0, 64);
+        core.store(&mut sys, a1, 64);
+        core.fence();
+        let t = core.now();
+        core.fence(); // idempotent
+        assert_eq!(core.now(), t);
+        // All stores completed before now.
+        assert!(core.store_buffer.is_empty());
+    }
+
+    #[test]
+    fn load_latency_histogram_records() {
+        let (mut core, mut sys) = setup();
+        let a = sys.device_addr(0);
+        core.load(&mut sys, a, 64);
+        core.load(&mut sys, a, 64); // L1 hit
+        let h = &core.stats().load_latency;
+        assert_eq!(h.count(), 2);
+        assert!(h.min() < h.max());
+    }
+}

@@ -1,0 +1,140 @@
+//! CXL.mem sub-protocol layer (paper §II-B).
+//!
+//! Three pieces:
+//! - [`flit`]: the 64-byte CXL flit wire format — encode/decode of the
+//!   M2S/S2M messages, including the starting logical block address and
+//!   block count extraction the paper describes for the SimpleSSD bridge.
+//! - [`MetaValue`]: the coherence metadata field of M2S requests and the
+//!   gem5-`Packet` → MetaValue conversion rules (§II-B3).
+//! - [`home_agent`]: the Home Agent / Bridge between MemBus and IOBus —
+//!   address-range routing, packet↔flit conversion, protocol latency and
+//!   credit-based flow control.
+
+pub mod flit;
+pub mod home_agent;
+
+pub use flit::{CxlMsgClass, Flit, FlitDecodeError, FLIT_BYTES};
+pub use home_agent::{HomeAgent, HomeAgentConfig, HomeAgentStats};
+
+use crate::mem::{MemCmd, Packet, ReqFlags};
+
+/// Coherence state hint carried in CXL.mem M2S requests (§II-B3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MetaValue {
+    /// Host holds no cacheable copy of the line.
+    Invalid,
+    /// Host may hold the line Shared/Exclusive/Modified.
+    Any,
+    /// Host retains at least one Shared copy.
+    Shared,
+}
+
+impl MetaValue {
+    /// Conversion rule from gem5 `Packet` request flags (paper §II-B3):
+    /// invalidating requests → `Invalid`; flush-without-invalidate →
+    /// `Shared`; everything else → `Any`.
+    pub fn from_flags(flags: ReqFlags) -> Self {
+        if flags.invalidate {
+            MetaValue::Invalid
+        } else if flags.clean {
+            MetaValue::Shared
+        } else {
+            MetaValue::Any
+        }
+    }
+
+    pub fn encode(self) -> u8 {
+        match self {
+            MetaValue::Invalid => 0,
+            MetaValue::Any => 1,
+            MetaValue::Shared => 2,
+        }
+    }
+
+    pub fn decode(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(MetaValue::Invalid),
+            1 => Some(MetaValue::Any),
+            2 => Some(MetaValue::Shared),
+            _ => None,
+        }
+    }
+}
+
+/// Convert a host command to its CXL.mem transaction (paper §II-B2):
+/// reads → `M2SReq`, writes → `M2SRwD`. Returns `None` for commands that
+/// do not cross the bridge (triggering the paper's "warning" path).
+pub fn to_cxl_cmd(cmd: MemCmd) -> Option<MemCmd> {
+    match cmd {
+        MemCmd::ReadReq => Some(MemCmd::M2SReq),
+        MemCmd::WriteReq | MemCmd::WritebackDirty => Some(MemCmd::M2SRwD),
+        MemCmd::FlushReq => Some(MemCmd::M2SRwD),
+        MemCmd::CleanEvict | MemCmd::InvalidateReq => None,
+        _ => None,
+    }
+}
+
+/// The response transaction for a given M2S request: reads get data
+/// (`S2MDRS`), writes get a completion without data (`S2MNDR`).
+pub fn response_cmd(req: MemCmd) -> Option<MemCmd> {
+    match req {
+        MemCmd::M2SReq => Some(MemCmd::S2MDRS),
+        MemCmd::M2SRwD => Some(MemCmd::S2MNDR),
+        _ => None,
+    }
+}
+
+/// Build the MetaValue for a host packet per the paper's conversion logic.
+pub fn meta_for_packet(pkt: &Packet) -> MetaValue {
+    MetaValue::from_flags(pkt.flags)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_value_rules() {
+        let inv = ReqFlags {
+            invalidate: true,
+            clean: false,
+        };
+        let cl = ReqFlags {
+            invalidate: false,
+            clean: true,
+        };
+        assert_eq!(MetaValue::from_flags(inv), MetaValue::Invalid);
+        assert_eq!(MetaValue::from_flags(cl), MetaValue::Shared);
+        assert_eq!(MetaValue::from_flags(ReqFlags::default()), MetaValue::Any);
+        // invalidate+clean: invalidation dominates
+        let both = ReqFlags {
+            invalidate: true,
+            clean: true,
+        };
+        assert_eq!(MetaValue::from_flags(both), MetaValue::Invalid);
+    }
+
+    #[test]
+    fn meta_value_codec_roundtrip() {
+        for m in [MetaValue::Invalid, MetaValue::Any, MetaValue::Shared] {
+            assert_eq!(MetaValue::decode(m.encode()), Some(m));
+        }
+        assert_eq!(MetaValue::decode(3), None);
+    }
+
+    #[test]
+    fn command_conversion() {
+        assert_eq!(to_cxl_cmd(MemCmd::ReadReq), Some(MemCmd::M2SReq));
+        assert_eq!(to_cxl_cmd(MemCmd::WriteReq), Some(MemCmd::M2SRwD));
+        assert_eq!(to_cxl_cmd(MemCmd::WritebackDirty), Some(MemCmd::M2SRwD));
+        assert_eq!(to_cxl_cmd(MemCmd::CleanEvict), None);
+        assert_eq!(to_cxl_cmd(MemCmd::S2MDRS), None);
+    }
+
+    #[test]
+    fn response_pairing() {
+        assert_eq!(response_cmd(MemCmd::M2SReq), Some(MemCmd::S2MDRS));
+        assert_eq!(response_cmd(MemCmd::M2SRwD), Some(MemCmd::S2MNDR));
+        assert_eq!(response_cmd(MemCmd::ReadReq), None);
+    }
+}

@@ -1,0 +1,511 @@
+//! The five memory devices under test (paper §III): DRAM, CXL-DRAM,
+//! PMEM, CXL-SSD (no cache) and CXL-SSD with the DRAM cache layer.
+//!
+//! Each composes the substrate models: CXL-attached devices sit behind a
+//! [`HomeAgent`] (packet→flit conversion + protocol latency + credits);
+//! the cached SSD additionally fronts flash with the [`PageCache`].
+
+use crate::cache::{Lookup, PageCache};
+use crate::config::SimConfig;
+use crate::cxl::{HomeAgent, HomeAgentConfig};
+use crate::dram::{Dram, DramConfig};
+use crate::mem::{line_index, page_index, Packet};
+use crate::pmem::{Pmem, PmemConfig};
+use crate::sim::Tick;
+use crate::ssd::{build as build_ssd, Ssd, SsdConfig};
+
+/// Device selector (CLI `--device`, bench sweeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Dram,
+    CxlDram,
+    Pmem,
+    CxlSsd,
+    CxlSsdCached,
+}
+
+impl DeviceKind {
+    pub const ALL: [DeviceKind; 5] = [
+        DeviceKind::Dram,
+        DeviceKind::CxlDram,
+        DeviceKind::Pmem,
+        DeviceKind::CxlSsd,
+        DeviceKind::CxlSsdCached,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "dram" => Some(DeviceKind::Dram),
+            "cxl-dram" | "cxldram" => Some(DeviceKind::CxlDram),
+            "pmem" => Some(DeviceKind::Pmem),
+            "cxl-ssd" | "cxlssd" => Some(DeviceKind::CxlSsd),
+            "cxl-ssd-cache" | "cxl-ssd-cached" | "cxlssdcache" => Some(DeviceKind::CxlSsdCached),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Dram => "dram",
+            DeviceKind::CxlDram => "cxl-dram",
+            DeviceKind::Pmem => "pmem",
+            DeviceKind::CxlSsd => "cxl-ssd",
+            DeviceKind::CxlSsdCached => "cxl-ssd-cache",
+        }
+    }
+}
+
+/// A memory device mapped into the extension address window.
+///
+/// `access` takes a device-relative byte address and returns the latency
+/// until the request is complete *at the requester* (CXL devices include
+/// the full link round trip).
+pub trait MemoryDevice {
+    fn kind(&self) -> DeviceKind;
+
+    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick;
+
+    /// End-of-run drain (flush write buffers / dirty cache pages).
+    fn flush(&mut self, _now: Tick) {}
+
+    /// Key device statistics for reports.
+    fn stats_kv(&self) -> Vec<(String, f64)> {
+        Vec::new()
+    }
+}
+
+/// Build a device per `kind` using `cfg`'s parameters.
+pub fn build_device(kind: DeviceKind, cfg: &SimConfig) -> Box<dyn MemoryDevice> {
+    match kind {
+        DeviceKind::Dram => Box::new(LocalDram::new(cfg.dram)),
+        DeviceKind::CxlDram => Box::new(CxlDram::new(cfg.cxl, cfg.dram)),
+        DeviceKind::Pmem => Box::new(PmemDevice::new(cfg.pmem)),
+        DeviceKind::CxlSsd => Box::new(CxlSsd::new(cfg.cxl, cfg.ssd)),
+        DeviceKind::CxlSsdCached => Box::new(CxlSsdCached::new(cfg)),
+    }
+}
+
+// ---------------------------------------------------------------- DRAM
+
+/// Host-local DDR4 (the paper's baseline).
+pub struct LocalDram {
+    dram: Dram,
+}
+
+impl LocalDram {
+    pub fn new(cfg: DramConfig) -> Self {
+        LocalDram {
+            dram: Dram::new(cfg),
+        }
+    }
+}
+
+impl MemoryDevice for LocalDram {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Dram
+    }
+
+    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        self.dram.access(now, line_index(addr), is_write)
+    }
+
+    fn stats_kv(&self) -> Vec<(String, f64)> {
+        vec![
+            ("row_hit_rate".into(), self.dram.stats().row_hit_rate()),
+            ("reads".into(), self.dram.stats().reads as f64),
+            ("writes".into(), self.dram.stats().writes as f64),
+        ]
+    }
+}
+
+// ------------------------------------------------------------ CXL-DRAM
+
+/// DRAM behind the CXL.mem link.
+pub struct CxlDram {
+    ha: HomeAgent,
+    dram: Dram,
+}
+
+impl CxlDram {
+    pub fn new(cxl: HomeAgentConfig, dram: DramConfig) -> Self {
+        CxlDram {
+            ha: HomeAgent::new(cxl),
+            dram: Dram::new(dram),
+        }
+    }
+}
+
+impl MemoryDevice for CxlDram {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::CxlDram
+    }
+
+    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        let pkt = if is_write {
+            Packet::write(addr, 64, now)
+        } else {
+            Packet::read(addr, 64, now)
+        };
+        let (arrival, flit) = self
+            .ha
+            .outbound(now, &pkt)
+            .expect("read/write always converts");
+        let lat = self.dram.access(arrival, line_index(flit.addr), is_write);
+        let done = self.ha.inbound(arrival + lat, &flit);
+        done - now
+    }
+
+    fn stats_kv(&self) -> Vec<(String, f64)> {
+        let s = self.ha.stats();
+        vec![
+            ("row_hit_rate".into(), self.dram.stats().row_hit_rate()),
+            ("cxl_flits".into(), s.flits as f64),
+            ("cxl_wire_bytes".into(), s.wire_bytes as f64),
+            ("cxl_warnings".into(), s.warnings as f64),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------- PMEM
+
+/// Host-local persistent memory.
+pub struct PmemDevice {
+    pmem: Pmem,
+}
+
+impl PmemDevice {
+    pub fn new(cfg: PmemConfig) -> Self {
+        PmemDevice {
+            pmem: Pmem::new(cfg),
+        }
+    }
+}
+
+impl MemoryDevice for PmemDevice {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Pmem
+    }
+
+    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        self.pmem.access(now, line_index(addr), is_write)
+    }
+
+    fn stats_kv(&self) -> Vec<(String, f64)> {
+        vec![
+            ("buf_hit_rate".into(), self.pmem.stats().buf_hit_rate()),
+            ("media_accesses".into(), self.pmem.stats().media_accesses as f64),
+        ]
+    }
+}
+
+// -------------------------------------------------------------- CXL-SSD
+
+/// SSD behind the CXL.mem link, no expander cache: every 64B access
+/// becomes a 4KB flash page access (§II-A read/write amplification).
+pub struct CxlSsd {
+    ha: HomeAgent,
+    ssd: Ssd,
+}
+
+impl CxlSsd {
+    pub fn new(cxl: HomeAgentConfig, ssd: SsdConfig) -> Self {
+        CxlSsd {
+            ha: HomeAgent::new(cxl),
+            ssd: build_ssd(ssd),
+        }
+    }
+}
+
+impl MemoryDevice for CxlSsd {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::CxlSsd
+    }
+
+    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        let pkt = if is_write {
+            Packet::write(addr, 64, now)
+        } else {
+            Packet::read(addr, 64, now)
+        };
+        let (arrival, flit) = self.ha.outbound(now, &pkt).expect("converts");
+        let lat = self.ssd.access_line(arrival, line_index(flit.addr), is_write);
+        let done = self.ha.inbound(arrival + lat, &flit);
+        done - now
+    }
+
+    fn flush(&mut self, now: Tick) {
+        self.ssd.flush(now);
+    }
+
+    fn stats_kv(&self) -> Vec<(String, f64)> {
+        let f = self.ssd.ftl_stats();
+        let mut kv = vec![
+            ("waf".into(), f.waf()),
+            ("gc_runs".into(), f.gc_runs as f64),
+            ("flash_reads".into(), (f.host_reads + f.gc_reads) as f64),
+            ("flash_programs".into(), (f.host_programs + f.gc_programs) as f64),
+            ("read_amp".into(), self.ssd.stats().read_amplification()),
+        ];
+        if let Some(icl) = self.ssd.icl_stats() {
+            kv.push(("icl_hit_rate".into(), icl.hit_rate()));
+        }
+        kv
+    }
+}
+
+// ------------------------------------------------- CXL-SSD + DRAM cache
+
+/// The paper's contribution: CXL-SSD fronted by the expander-side DRAM
+/// cache layer (4KB pages, write-back write-allocate, MSHR, five
+/// replacement policies).
+pub struct CxlSsdCached {
+    ha: HomeAgent,
+    cache: PageCache,
+    ssd: Ssd,
+    t_cache: Tick,
+}
+
+impl CxlSsdCached {
+    pub fn new(cfg: &SimConfig) -> Self {
+        CxlSsdCached {
+            ha: HomeAgent::new(cfg.cxl),
+            cache: PageCache::new(
+                cfg.dcache.n_frames(),
+                cfg.dcache.policy,
+                cfg.dcache.mshr_entries,
+            ),
+            ssd: build_ssd(cfg.ssd),
+            t_cache: cfg.dcache.t_access,
+        }
+    }
+
+    /// Service a request at the expander after link traversal.
+    fn service(&mut self, arrival: Tick, addr: u64, is_write: bool) -> Tick {
+        let page = page_index(addr);
+        match self.cache.lookup(arrival, page, is_write) {
+            Lookup::Hit => self.t_cache,
+            Lookup::MshrMerge { ready } => {
+                // Wait for the in-flight fill, then read from DRAM cache.
+                ready.max(arrival) - arrival + self.t_cache
+            }
+            Lookup::Miss { writeback } => {
+                // Tag check + fill. Pages never written to flash have no
+                // backing data: the expander allocates a zero-filled frame
+                // without flash I/O (append-friendly; see DESIGN.md).
+                let flash = if self.ssd.cfg().assume_mapped || self.ssd.is_mapped(page) {
+                    self.ssd.access_page(arrival, page, false)
+                } else {
+                    0
+                };
+                let fill_done = arrival + self.t_cache + flash;
+                self.cache.fill_done(page, fill_done);
+                // Dirty eviction: asynchronous write-back program; costs
+                // flash bandwidth but not host latency.
+                if let Some(victim) = writeback {
+                    self.ssd.access_page(fill_done, victim, true);
+                }
+                fill_done - arrival
+            }
+        }
+    }
+}
+
+impl MemoryDevice for CxlSsdCached {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::CxlSsdCached
+    }
+
+    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        let pkt = if is_write {
+            Packet::write(addr, 64, now)
+        } else {
+            Packet::read(addr, 64, now)
+        };
+        let (arrival, flit) = self.ha.outbound(now, &pkt).expect("converts");
+        let lat = self.service(arrival, flit.addr, is_write);
+        let done = self.ha.inbound(arrival + lat, &flit);
+        done - now
+    }
+
+    fn flush(&mut self, now: Tick) {
+        for page in self.cache.dirty_pages() {
+            self.ssd.access_page(now, page, true);
+        }
+        self.ssd.flush(now);
+    }
+
+    fn stats_kv(&self) -> Vec<(String, f64)> {
+        let c = self.cache.stats();
+        let f = self.ssd.ftl_stats();
+        vec![
+            ("cache_hit_rate".into(), c.hit_rate()),
+            ("cache_hits".into(), c.hits as f64),
+            ("cache_misses".into(), c.misses as f64),
+            ("mshr_merges".into(), c.mshr_merges as f64),
+            ("redundant_fills".into(), c.redundant_fills as f64),
+            ("ssd_page_reads".into(), self.ssd.stats().page_reads as f64),
+            ("writebacks".into(), c.writebacks as f64),
+            ("waf".into(), f.waf()),
+            ("flash_reads".into(), (f.host_reads + f.gc_reads) as f64),
+            (
+                "flash_programs".into(),
+                (f.host_programs + f.gc_programs) as f64,
+            ),
+            ("max_erase".into(), self.ssd.max_erase_count() as f64),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::sim::{NS, US};
+
+    fn cfg() -> SimConfig {
+        presets::small_test()
+    }
+
+    #[test]
+    fn device_kind_parse_roundtrip() {
+        for k in DeviceKind::ALL {
+            assert_eq!(DeviceKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(DeviceKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn latency_ordering_matches_fig4() {
+        // Isolated random reads: DRAM < CXL-DRAM < PMEM << CXL-SSD.
+        let c = cfg();
+        let mut lat = std::collections::HashMap::new();
+        for kind in [
+            DeviceKind::Dram,
+            DeviceKind::CxlDram,
+            DeviceKind::Pmem,
+            DeviceKind::CxlSsd,
+        ] {
+            let mut dev = build_device(kind, &c);
+            let mut rng = crate::testing::SplitMix64::new(1);
+            let mut total = 0u64;
+            let n = 50;
+            let mut now = 0;
+            for _ in 0..n {
+                let addr = rng.below(c.device_bytes / 64) * 64;
+                let l = dev.access(now, addr, false);
+                total += l;
+                now += l + 10 * US; // spaced out
+            }
+            lat.insert(kind, total / n);
+        }
+        assert!(lat[&DeviceKind::Dram] < lat[&DeviceKind::CxlDram]);
+        assert!(lat[&DeviceKind::CxlDram] < lat[&DeviceKind::Pmem]);
+        assert!(lat[&DeviceKind::Pmem] < lat[&DeviceKind::CxlSsd]);
+        // SSD is in the tens of microseconds; DRAM tens of nanoseconds.
+        assert!(lat[&DeviceKind::CxlSsd] > 10 * US);
+        assert!(lat[&DeviceKind::Dram] < 100 * NS);
+    }
+
+    #[test]
+    fn cxl_dram_pays_link_overhead() {
+        let c = cfg();
+        let mut local = build_device(DeviceKind::Dram, &c);
+        let mut cxl = build_device(DeviceKind::CxlDram, &c);
+        let l1 = local.access(0, 0, false);
+        let l2 = cxl.access(0, 0, false);
+        // Two protocol hops (2 x 25ns) plus flit transfers.
+        assert!(l2 >= l1 + 2 * c.cxl.t_proto);
+    }
+
+    #[test]
+    fn cached_ssd_hot_set_behaves_like_cxl_dram_class() {
+        let c = cfg();
+        let mut dev = build_device(DeviceKind::CxlSsdCached, &c);
+        let mut now = 0;
+        // Touch 8 pages once (fills), then re-touch many times.
+        for p in 0..8u64 {
+            let l = dev.access(now, p * 4096, false);
+            now += l + US;
+        }
+        let mut hot_total = 0;
+        let hot_n = 64;
+        for i in 0..hot_n {
+            let p = (i % 8) as u64;
+            let l = dev.access(now, p * 4096 + 64 * (i as u64 % 64), false);
+            hot_total += l;
+            now += l + US;
+        }
+        let avg = hot_total / hot_n;
+        // Hot accesses must be sub-microsecond (cache + link), far from
+        // the ~50µs flash read.
+        assert!(avg < 2 * US, "avg={avg}");
+    }
+
+    #[test]
+    fn uncached_ssd_every_access_pays_flash() {
+        let c = cfg();
+        let mut dev = build_device(DeviceKind::CxlSsd, &c);
+        let mut now = 0;
+        let mut min = Tick::MAX;
+        for i in 0..16u64 {
+            // Random-ish distinct pages, beyond ICL reach.
+            let addr = (i * 977 % 1000) * 4096;
+            let l = dev.access(now, addr, false);
+            min = min.min(l);
+            now += l + 10 * US;
+        }
+        assert!(min > 10 * US, "min={min}");
+    }
+
+    #[test]
+    fn cached_ssd_flush_writes_back_dirty_pages() {
+        let c = cfg();
+        let mut dev = build_device(DeviceKind::CxlSsdCached, &c);
+        let mut now = 0;
+        for p in 0..4u64 {
+            let l = dev.access(now, p * 4096, true);
+            now += l + US;
+        }
+        dev.flush(now);
+        let kv: std::collections::HashMap<String, f64> =
+            dev.stats_kv().into_iter().collect();
+        assert!(kv["flash_programs"] >= 4.0);
+    }
+
+    #[test]
+    fn mshr_merges_show_in_stats() {
+        let mut c = cfg();
+        // Direct mapping so one conflicting page evicts deterministically.
+        c.dcache.policy = crate::cache::PolicyKind::Direct;
+        let mut dev = CxlSsdCached::new(&c);
+        // Map page 0 on flash: dirty it in the cache, then evict it with
+        // a conflicting write and drain.
+        dev.access(0, 0, true);
+        let frames = c.dcache.n_frames() as u64;
+        dev.access(US, frames * 4096, true); // same set, evicts page 0
+        dev.flush(2 * US);
+        // Now a read of page 0 is a genuine flash fill (slow); a second
+        // read with zero gap arrives while the fill is in flight.
+        let t = 10 * US;
+        let l0 = dev.access(t, 0, false);
+        let _l1 = dev.access(t, 64, false);
+        let kv: std::collections::HashMap<String, f64> =
+            dev.stats_kv().into_iter().collect();
+        assert!(kv["mshr_merges"] >= 1.0, "merges={}", kv["mshr_merges"]);
+        // The fill is served from the SSD (ICL or flash) — far above the
+        // 50ns cache-hit latency.
+        assert!(l0 > US, "l0={l0}");
+    }
+
+    #[test]
+    fn unmapped_page_fills_skip_flash() {
+        let c = cfg();
+        let mut dev = CxlSsdCached::new(&c);
+        // First-ever read of a never-written page: no flash read needed.
+        let lat = dev.access(0, 123 * 4096, false);
+        assert!(lat < 2 * US, "unmapped fill should be cheap: {lat}");
+        let kv: std::collections::HashMap<String, f64> =
+            dev.stats_kv().into_iter().collect();
+        assert_eq!(kv["flash_reads"], 0.0);
+    }
+}

@@ -1,0 +1,288 @@
+//! DDR4 DRAM timing model (detailed mode).
+//!
+//! Open-page policy with per-bank row-buffer state, mirroring the L1
+//! Pallas kernel (`python/compile/kernels/dram_timing.py`) so fast mode
+//! and detailed mode agree access-for-access; detailed mode additionally
+//! models refresh (tREFI/tRFC), which the surrogate omits — the fast-mode
+//! ablation bench quantifies that delta.
+
+use crate::sim::Tick;
+
+/// DDR4-2400 8x8 single-channel timing (Table I).
+#[derive(Debug, Clone, Copy)]
+pub struct DramConfig {
+    pub n_banks: usize,
+    /// 64B lines per DRAM row (8KB row / 64B).
+    pub lines_per_row: u64,
+    pub t_cl: Tick,
+    pub t_rcd: Tick,
+    pub t_rp: Tick,
+    pub t_burst: Tick,
+    pub t_wr: Tick,
+    /// Refresh interval (0 disables refresh modeling).
+    pub t_refi: Tick,
+    /// Refresh cycle time.
+    pub t_rfc: Tick,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            n_banks: 16,
+            lines_per_row: 128,
+            t_cl: 14_160,
+            t_rcd: 14_160,
+            t_rp: 14_160,
+            t_burst: 3_330,
+            t_wr: 15_000,
+            t_refi: 7_800_000, // 7.8 µs
+            t_rfc: 350_000,    // 350 ns
+        }
+    }
+}
+
+impl DramConfig {
+    /// Kernel-equivalent config: refresh off (for fast-vs-detailed parity
+    /// tests against the Pallas surrogate, which does not model refresh).
+    pub fn no_refresh() -> Self {
+        DramConfig {
+            t_refi: 0,
+            ..Default::default()
+        }
+    }
+
+    /// Latency of an isolated row-buffer hit.
+    pub fn hit_latency(&self) -> Tick {
+        self.t_cl + self.t_burst
+    }
+
+    /// Latency of an isolated access to a closed bank.
+    pub fn closed_latency(&self) -> Tick {
+        self.t_rcd + self.hit_latency()
+    }
+
+    /// Latency of an isolated row-buffer conflict.
+    pub fn conflict_latency(&self) -> Tick {
+        self.t_rp + self.closed_latency()
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct DramStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub row_hits: u64,
+    pub row_conflicts: u64,
+    pub row_closed: u64,
+    pub refreshes: u64,
+    pub busy_ticks: Tick,
+}
+
+impl DramStats {
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_conflicts + self.row_closed;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+}
+
+/// One DRAM channel with per-bank open-row state.
+#[derive(Debug)]
+pub struct Dram {
+    cfg: DramConfig,
+    /// Per-bank: tick at which the bank can accept the next column command.
+    bank_ready: Vec<Tick>,
+    /// Per-bank open row (`None` = precharged/closed).
+    open_row: Vec<Option<u64>>,
+    /// Next refresh deadline (all-bank refresh).
+    next_refresh: Tick,
+    stats: DramStats,
+}
+
+impl Dram {
+    pub fn new(cfg: DramConfig) -> Self {
+        Dram {
+            bank_ready: vec![0; cfg.n_banks],
+            open_row: vec![None; cfg.n_banks],
+            next_refresh: if cfg.t_refi > 0 { cfg.t_refi } else { Tick::MAX },
+            cfg,
+            stats: DramStats::default(),
+        }
+    }
+
+    /// Map a 64B line index to (bank, row): consecutive rows interleave
+    /// across banks (identical to the Pallas kernel's decode).
+    pub fn decode(&self, line_idx: u64) -> (usize, u64) {
+        let row_global = line_idx / self.cfg.lines_per_row;
+        let bank = (row_global % self.cfg.n_banks as u64) as usize;
+        (bank, row_global / self.cfg.n_banks as u64)
+    }
+
+    /// Access one 64B line at tick `now`; returns the access latency.
+    pub fn access(&mut self, now: Tick, line_idx: u64, is_write: bool) -> Tick {
+        self.run_refresh(now);
+        let (bank, row) = self.decode(line_idx);
+
+        let start = now.max(self.bank_ready[bank]);
+        let core = match self.open_row[bank] {
+            Some(open) if open == row => {
+                self.stats.row_hits += 1;
+                self.cfg.t_cl
+            }
+            None => {
+                self.stats.row_closed += 1;
+                self.cfg.t_rcd + self.cfg.t_cl
+            }
+            Some(_) => {
+                self.stats.row_conflicts += 1;
+                self.cfg.t_rp + self.cfg.t_rcd + self.cfg.t_cl
+            }
+        };
+        let done = start + core + self.cfg.t_burst;
+        let busy_until = if is_write { done + self.cfg.t_wr } else { done };
+
+        self.stats.busy_ticks += busy_until - start;
+        if is_write {
+            self.stats.writes += 1;
+        } else {
+            self.stats.reads += 1;
+        }
+        self.bank_ready[bank] = busy_until;
+        self.open_row[bank] = Some(row);
+        done - now
+    }
+
+    /// Fold due refreshes into bank readiness (all-bank refresh closes rows).
+    fn run_refresh(&mut self, now: Tick) {
+        while now >= self.next_refresh {
+            let rfc_end = self.next_refresh + self.cfg.t_rfc;
+            for b in 0..self.cfg.n_banks {
+                self.bank_ready[b] = self.bank_ready[b].max(rfc_end);
+                self.open_row[b] = None;
+            }
+            self.stats.refreshes += 1;
+            self.next_refresh += self.cfg.t_refi;
+        }
+    }
+
+    pub fn stats(&self) -> &DramStats {
+        &self.stats
+    }
+
+    pub fn cfg(&self) -> &DramConfig {
+        &self.cfg
+    }
+
+    pub fn reset(&mut self) {
+        self.bank_ready.iter_mut().for_each(|t| *t = 0);
+        self.open_row.iter_mut().for_each(|r| *r = None);
+        self.next_refresh = if self.cfg.t_refi > 0 {
+            self.cfg.t_refi
+        } else {
+            Tick::MAX
+        };
+        self.stats = DramStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dram() -> Dram {
+        Dram::new(DramConfig::no_refresh())
+    }
+
+    #[test]
+    fn first_access_pays_activation() {
+        let mut d = dram();
+        let lat = d.access(0, 0, false);
+        assert_eq!(lat, d.cfg().closed_latency());
+        assert_eq!(d.stats().row_closed, 1);
+    }
+
+    #[test]
+    fn second_access_same_row_hits() {
+        let mut d = dram();
+        d.access(0, 0, false);
+        let lat = d.access(1_000_000, 1, false); // same row, next line
+        assert_eq!(lat, d.cfg().hit_latency());
+        assert_eq!(d.stats().row_hits, 1);
+    }
+
+    #[test]
+    fn different_row_same_bank_conflicts() {
+        let mut d = dram();
+        let lpr = d.cfg().lines_per_row;
+        let nb = d.cfg().n_banks as u64;
+        d.access(0, 0, false);
+        let lat = d.access(1_000_000, lpr * nb, false); // same bank, row+1
+        assert_eq!(lat, d.cfg().conflict_latency());
+        assert_eq!(d.stats().row_conflicts, 1);
+    }
+
+    #[test]
+    fn adjacent_rows_hit_different_banks() {
+        let d = dram();
+        let lpr = d.cfg().lines_per_row;
+        let (b0, _) = d.decode(0);
+        let (b1, _) = d.decode(lpr);
+        assert_ne!(b0, b1);
+    }
+
+    #[test]
+    fn bank_queueing_delays_back_to_back() {
+        let mut d = dram();
+        let l0 = d.access(0, 0, false);
+        let l1 = d.access(0, 1, false); // same bank, row open but bank busy
+        assert!(l1 > d.cfg().hit_latency());
+        assert_eq!(l1, l0 + d.cfg().hit_latency());
+    }
+
+    #[test]
+    fn writes_hold_bank_longer() {
+        let mut d = dram();
+        d.access(0, 0, true);
+        let mut d2 = dram();
+        d2.access(0, 0, false);
+        let lw = d.access(0, 1, false);
+        let lr = d2.access(0, 1, false);
+        assert_eq!(lw, lr + d.cfg().t_wr);
+    }
+
+    #[test]
+    fn refresh_closes_rows_and_delays() {
+        let mut d = Dram::new(DramConfig::default());
+        d.access(0, 0, false);
+        let refi = d.cfg().t_refi;
+        // Access right after a refresh deadline: row was closed by refresh
+        // and the bank is busy until tRFC completes.
+        let lat = d.access(refi + 1, 1, false);
+        assert!(lat > d.cfg().hit_latency());
+        assert_eq!(d.stats().refreshes, 1);
+        assert_eq!(d.stats().row_closed, 2);
+    }
+
+    #[test]
+    fn row_hit_rate_stat() {
+        let mut d = dram();
+        d.access(0, 0, false);
+        for i in 1..10 {
+            d.access(i * 1_000_000, i, false);
+        }
+        assert!(d.stats().row_hit_rate() > 0.8);
+    }
+
+    #[test]
+    fn reset_restores_cold_state() {
+        let mut d = dram();
+        d.access(0, 0, false);
+        d.reset();
+        assert_eq!(d.stats().reads, 0);
+        let lat = d.access(0, 0, false);
+        assert_eq!(lat, d.cfg().closed_latency());
+    }
+}

@@ -1,0 +1,89 @@
+//! Fast non-cryptographic hashing for hot-path maps.
+//!
+//! The simulator's page/frame maps are keyed by small integers; std's
+//! SipHash dominates their lookup cost. This is the FxHash construction
+//! (rustc's internal hasher): `h = (h.rotate_left(5) ^ word) * K`.
+//! Not DoS-resistant — fine for simulator-internal keys.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+const K: u64 = 0x517cc1b727220a95;
+
+/// FxHash-style hasher.
+#[derive(Default, Clone)]
+pub struct FastHasher {
+    hash: u64,
+}
+
+impl Hasher for FastHasher {
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+impl FastHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(K);
+    }
+}
+
+/// HashMap with the fast hasher.
+pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FastHasher>>;
+
+/// Construct a [`FastMap`] with capacity.
+pub fn fast_map<K, V>(capacity: usize) -> FastMap<K, V> {
+    FastMap::with_capacity_and_hasher(capacity, BuildHasherDefault::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FastMap<u64, u32> = fast_map(16);
+        for i in 0..1000u64 {
+            m.insert(i * 7919, i as u32);
+        }
+        for i in 0..1000u64 {
+            assert_eq!(m.get(&(i * 7919)), Some(&(i as u32)));
+        }
+        assert_eq!(m.get(&1), None);
+    }
+
+    #[test]
+    fn hasher_distributes() {
+        // Adjacent keys should land in different buckets-ish: check that
+        // low bits vary.
+        let h = |x: u64| {
+            let mut hh = FastHasher::default();
+            hh.write_u64(x);
+            hh.finish()
+        };
+        let mut low = std::collections::HashSet::new();
+        for i in 0..64u64 {
+            low.insert(h(i) & 0x3f);
+        }
+        assert!(low.len() > 32);
+    }
+}

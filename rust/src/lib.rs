@@ -1,0 +1,38 @@
+//! CXL-SSD-Sim: a full-system simulation framework for CXL-based SSD
+//! memory systems.
+//!
+//! Reproduction of *"A Full-System Simulation Framework for CXL-Based SSD
+//! Memory System"* (Wang et al., 2025) as a three-layer rust + JAX/Pallas
+//! stack. See `DESIGN.md` for the architecture and the experiment index.
+//!
+//! Layer map:
+//! - **L3 (this crate)** — the simulator: discrete-event core ([`sim`]),
+//!   memory packets/bus ([`mem`]), CXL.mem protocol ([`cxl`]), device
+//!   timing models ([`dram`], [`pmem`], [`ssd`]), the expander DRAM cache
+//!   layer ([`cache`]), device compositions ([`devices`]), host CPU +
+//!   cache hierarchy ([`cpu`]), workloads ([`workloads`]), orchestration
+//!   ([`coordinator`]) and the CLI ([`cli`]).
+//! - **L2/L1 (python/, build-time)** — JAX surrogate models + Pallas
+//!   timing kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from
+//!   rust through [`runtime`] / [`surrogate`] in fast mode.
+
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cpu;
+pub mod cxl;
+pub mod devices;
+pub mod dram;
+pub mod fasthash;
+pub mod mem;
+pub mod pmem;
+pub mod runtime;
+pub mod sim;
+pub mod ssd;
+pub mod stats;
+pub mod surrogate;
+pub mod testing;
+pub mod topology;
+pub mod trace;
+pub mod workloads;

@@ -1,0 +1,14 @@
+//! `cxl-ssd-sim` binary: CLI front end for the simulator.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match cxl_ssd_sim::cli::main(&argv) {
+        Ok(code) => ExitCode::from(code as u8),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::from(1)
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Shared-bus timing model (gem5 `MemBus`/`IOBus` analog).
+//!
+//! First-come-first-served arbitration: each packet occupies the bus for
+//! `header + payload/bandwidth`; a packet arriving while the bus is busy
+//! waits. This is the queueing component of the end-to-end latency the
+//! paper's Fig 4 measures on top of raw device latency.
+
+use crate::sim::Tick;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BusConfig {
+    /// Fixed per-packet header/arbitration latency (ticks).
+    pub header_latency: Tick,
+    /// Payload bandwidth in bytes per tick^-1 terms: ticks per byte,
+    /// expressed as (ticks_num / bytes_den) to stay in integers.
+    pub ticks_per_byte_num: Tick,
+    pub ticks_per_byte_den: Tick,
+}
+
+impl BusConfig {
+    /// DDR4-2400 64-bit front-side bus: 19.2 GB/s ≈ 0.052 ns/B.
+    pub fn membus() -> Self {
+        BusConfig {
+            header_latency: 1_000, // 1ns arbitration
+            ticks_per_byte_num: 52,
+            ticks_per_byte_den: 1,
+        }
+    }
+
+    /// PCIe 4.0 x8-class IO bus: 16 GB/s ≈ 0.0625 ns/B.
+    pub fn iobus() -> Self {
+        BusConfig {
+            header_latency: 2_000, // 2ns
+            ticks_per_byte_num: 62,
+            ticks_per_byte_den: 1,
+        }
+    }
+
+}
+
+/// A single shared bus with FCFS occupancy.
+#[derive(Debug)]
+pub struct Bus {
+    cfg: BusConfig,
+    free_at: Tick,
+    /// Total busy ticks (utilization accounting).
+    busy_ticks: Tick,
+    transfers: u64,
+}
+
+impl Bus {
+    pub fn new(cfg: BusConfig) -> Self {
+        Bus {
+            cfg,
+            free_at: 0,
+            busy_ticks: 0,
+            transfers: 0,
+        }
+    }
+
+    /// Send `bytes` at time `now`; returns the tick the transfer completes.
+    pub fn send(&mut self, now: Tick, bytes: u64) -> Tick {
+        let start = now.max(self.free_at);
+        let occupancy = self.cfg.header_latency + self.transfer_ticks(bytes);
+        let done = start + occupancy;
+        self.free_at = done;
+        self.busy_ticks += occupancy;
+        self.transfers += 1;
+        done
+    }
+
+    /// Pure transfer time for `bytes` (no queueing, no header).
+    pub fn transfer_ticks(&self, bytes: u64) -> Tick {
+        (bytes as Tick * self.cfg.ticks_per_byte_num) / self.cfg.ticks_per_byte_den
+    }
+
+    pub fn free_at(&self) -> Tick {
+        self.free_at
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    pub fn busy_ticks(&self) -> Tick {
+        self.busy_ticks
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at = 0;
+        self.busy_ticks = 0;
+        self.transfers = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bus() -> Bus {
+        Bus::new(BusConfig {
+            header_latency: 10,
+            ticks_per_byte_num: 2,
+            ticks_per_byte_den: 1,
+        })
+    }
+
+    #[test]
+    fn isolated_transfer_time() {
+        let mut b = bus();
+        // 64B * 2 ticks/B + 10 header = 138
+        assert_eq!(b.send(0, 64), 138);
+    }
+
+    #[test]
+    fn back_to_back_queues() {
+        let mut b = bus();
+        let d1 = b.send(0, 64);
+        let d2 = b.send(0, 64);
+        assert_eq!(d2, d1 + 138);
+        assert_eq!(b.transfers(), 2);
+    }
+
+    #[test]
+    fn idle_gap_no_queueing() {
+        let mut b = bus();
+        b.send(0, 64);
+        let d = b.send(10_000, 64);
+        assert_eq!(d, 10_138);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut b = bus();
+        b.send(0, 64);
+        b.send(0, 64);
+        assert_eq!(b.busy_ticks(), 2 * 138);
+    }
+
+    #[test]
+    fn real_configs_are_sane() {
+        let mut m = Bus::new(BusConfig::membus());
+        let lat = m.send(0, 64);
+        // 64B on a ~19GB/s bus ≈ 3.3ns + 1ns header
+        assert!(lat > 3_000 && lat < 8_000, "{lat}");
+        let mut io = Bus::new(BusConfig::iobus());
+        let lat = io.send(0, 64);
+        assert!(lat > 4_000 && lat < 10_000, "{lat}");
+    }
+}

@@ -1,0 +1,70 @@
+//! Memory system primitives: commands, packets, address ranges, the bus.
+//!
+//! Mirrors the slice of gem5's `Packet`/`MemCmd` machinery the paper
+//! extends (§II-B2): read/write requests plus the four CXL.mem transaction
+//! types added by CXL-SSD-Sim live in [`MemCmd`]; the Home Agent converts
+//! between them at the Bridge (see [`crate::cxl::home_agent`]).
+
+mod bus;
+mod packet;
+mod range;
+
+pub use bus::{Bus, BusConfig};
+pub use packet::{MemCmd, Packet, ReqFlags};
+pub use range::AddrRange;
+
+/// Cache-line size used throughout (gem5 default, CXL flit payload).
+pub const LINE_BYTES: u64 = 64;
+
+/// 4KB page: SSD logical block and DRAM-cache frame granularity.
+pub const PAGE_BYTES: u64 = 4096;
+
+/// Round `addr` down to its 64B line base.
+pub fn line_base(addr: u64) -> u64 {
+    addr & !(LINE_BYTES - 1)
+}
+
+/// 64B line index of `addr`.
+pub fn line_index(addr: u64) -> u64 {
+    addr / LINE_BYTES
+}
+
+/// 4KB page index of `addr`.
+pub fn page_index(addr: u64) -> u64 {
+    addr / PAGE_BYTES
+}
+
+/// Number of 64B lines covering `[addr, addr+size)`.
+pub fn lines_covering(addr: u64, size: u64) -> u64 {
+    if size == 0 {
+        return 0;
+    }
+    let first = line_index(addr);
+    let last = line_index(addr + size - 1);
+    last - first + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_math() {
+        assert_eq!(line_base(0), 0);
+        assert_eq!(line_base(63), 0);
+        assert_eq!(line_base(64), 64);
+        assert_eq!(line_index(128), 2);
+        assert_eq!(page_index(4095), 0);
+        assert_eq!(page_index(4096), 1);
+    }
+
+    #[test]
+    fn lines_covering_spans() {
+        assert_eq!(lines_covering(0, 0), 0);
+        assert_eq!(lines_covering(0, 1), 1);
+        assert_eq!(lines_covering(0, 64), 1);
+        assert_eq!(lines_covering(0, 65), 2);
+        assert_eq!(lines_covering(63, 2), 2);
+        assert_eq!(lines_covering(0, 4096), 64);
+    }
+}

@@ -1,0 +1,144 @@
+//! Memory packets and commands.
+
+use crate::sim::Tick;
+
+/// Memory command, covering gem5's base commands plus the four CXL.mem
+/// transaction types the paper adds to `Packet` (§II-B2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemCmd {
+    /// Host load (gem5 `MemCmd::ReadReq`).
+    ReadReq,
+    /// Host store (gem5 `MemCmd::WriteReq`).
+    WriteReq,
+    /// Write-back of a dirty line evicted from a host cache.
+    WritebackDirty,
+    /// Clean eviction notice (no data transfer on CXL).
+    CleanEvict,
+    /// Cache-line flush (writes back and invalidates).
+    FlushReq,
+    /// Cache-line invalidate without write-back.
+    InvalidateReq,
+    /// CXL.mem Master-to-Subordinate read (`M2SReq`).
+    M2SReq,
+    /// CXL.mem Master-to-Subordinate request with data (`M2SRwD`).
+    M2SRwD,
+    /// CXL.mem Subordinate-to-Master data response (`S2MDRS`).
+    S2MDRS,
+    /// CXL.mem Subordinate-to-Master no-data response (`S2MNDR`).
+    S2MNDR,
+}
+
+impl MemCmd {
+    /// Does this command carry a data payload?
+    pub fn has_data(self) -> bool {
+        matches!(
+            self,
+            MemCmd::WriteReq | MemCmd::WritebackDirty | MemCmd::M2SRwD | MemCmd::S2MDRS
+        )
+    }
+
+    /// Is this a host-side request (pre-conversion)?
+    pub fn is_host_cmd(self) -> bool {
+        matches!(
+            self,
+            MemCmd::ReadReq
+                | MemCmd::WriteReq
+                | MemCmd::WritebackDirty
+                | MemCmd::CleanEvict
+                | MemCmd::FlushReq
+                | MemCmd::InvalidateReq
+        )
+    }
+
+    /// Is this one of the CXL.mem sub-protocol transactions?
+    pub fn is_cxl(self) -> bool {
+        matches!(
+            self,
+            MemCmd::M2SReq | MemCmd::M2SRwD | MemCmd::S2MDRS | MemCmd::S2MNDR
+        )
+    }
+
+    /// Does this request mutate device state?
+    pub fn is_write(self) -> bool {
+        matches!(
+            self,
+            MemCmd::WriteReq | MemCmd::WritebackDirty | MemCmd::M2SRwD
+        )
+    }
+}
+
+/// Request flags affecting coherence handling (subset of gem5's).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReqFlags {
+    /// Request invalidates the line in other caches.
+    pub invalidate: bool,
+    /// Request flushes (cleans) the line without invalidating.
+    pub clean: bool,
+}
+
+/// A memory packet travelling between CPU, buses, the Home Agent and
+/// devices. Sizes are bytes; `addr` is a host physical address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Packet {
+    pub cmd: MemCmd,
+    pub addr: u64,
+    pub size: u32,
+    pub flags: ReqFlags,
+    /// Tick at which the packet was issued by its source.
+    pub issued: Tick,
+}
+
+impl Packet {
+    pub fn read(addr: u64, size: u32, issued: Tick) -> Self {
+        Packet {
+            cmd: MemCmd::ReadReq,
+            addr,
+            size,
+            flags: ReqFlags::default(),
+            issued,
+        }
+    }
+
+    pub fn write(addr: u64, size: u32, issued: Tick) -> Self {
+        Packet {
+            cmd: MemCmd::WriteReq,
+            addr,
+            size,
+            flags: ReqFlags::default(),
+            issued,
+        }
+    }
+
+    pub fn is_write(&self) -> bool {
+        self.cmd.is_write()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmd_classification() {
+        assert!(MemCmd::ReadReq.is_host_cmd());
+        assert!(!MemCmd::ReadReq.is_cxl());
+        assert!(MemCmd::M2SRwD.is_cxl());
+        assert!(MemCmd::M2SRwD.has_data());
+        assert!(MemCmd::M2SRwD.is_write());
+        assert!(!MemCmd::M2SReq.has_data());
+        assert!(MemCmd::S2MDRS.has_data());
+        assert!(!MemCmd::S2MNDR.has_data());
+        assert!(!MemCmd::CleanEvict.is_write());
+        assert!(MemCmd::WritebackDirty.is_write());
+    }
+
+    #[test]
+    fn packet_constructors() {
+        let p = Packet::read(0x1000, 64, 7);
+        assert_eq!(p.cmd, MemCmd::ReadReq);
+        assert!(!p.is_write());
+        let w = Packet::write(0x2000, 64, 9);
+        assert!(w.is_write());
+        assert_eq!(w.issued, 9);
+    }
+}

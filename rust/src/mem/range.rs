@@ -1,0 +1,68 @@
+//! Physical address ranges (gem5 `AddrRange` analog).
+
+/// A half-open physical address range `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddrRange {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl AddrRange {
+    pub fn new(start: u64, size: u64) -> Self {
+        assert!(size > 0, "empty address range");
+        AddrRange {
+            start,
+            end: start.checked_add(size).expect("address range overflow"),
+        }
+    }
+
+    pub fn size(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.start && addr < self.end
+    }
+
+    /// Device-relative offset of `addr` (caller must check `contains`).
+    pub fn offset(&self, addr: u64) -> u64 {
+        debug_assert!(self.contains(addr));
+        addr - self.start
+    }
+
+    pub fn overlaps(&self, other: &AddrRange) -> bool {
+        self.start < other.end && other.start < self.end
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contains_and_offset() {
+        let r = AddrRange::new(0x1000, 0x1000);
+        assert!(r.contains(0x1000));
+        assert!(r.contains(0x1fff));
+        assert!(!r.contains(0x2000));
+        assert!(!r.contains(0xfff));
+        assert_eq!(r.offset(0x1800), 0x800);
+        assert_eq!(r.size(), 0x1000);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let a = AddrRange::new(0, 100);
+        let b = AddrRange::new(99, 10);
+        let c = AddrRange::new(100, 10);
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+        assert!(b.overlaps(&c));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty address range")]
+    fn empty_range_panics() {
+        AddrRange::new(0, 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Persistent-memory (PMEM) timing model.
+//!
+//! SpecPMT-style constants (paper Table I): 150ns media read, 500ns media
+//! write, 256B internal row buffers. The buffer pool is fully associative
+//! with LRU fill and the media has `n_ports` concurrent access units
+//! (Optane-style); read misses and all writes queue on the earliest-free
+//! port (500ns is the persist cost per SpecPMT). Mirrors the L1 Pallas
+//! kernel (`python/compile/kernels/pmem_timing.py`).
+
+use crate::sim::Tick;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PmemConfig {
+    /// Internal row-buffer size in bytes (Table I: 256B).
+    pub rowbuf_bytes: u64,
+    /// Number of modeled row-buffer entries (fully associative).
+    pub n_bufs: usize,
+    /// Concurrent media access units.
+    pub n_ports: usize,
+    pub t_read: Tick,
+    pub t_write: Tick,
+    /// Latency when the access hits an open internal buffer.
+    pub t_buf_hit: Tick,
+}
+
+impl Default for PmemConfig {
+    fn default() -> Self {
+        PmemConfig {
+            rowbuf_bytes: 256,
+            n_bufs: 4,
+            n_ports: 4,
+            t_read: 150_000,
+            t_write: 500_000,
+            t_buf_hit: 50_000,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct PmemStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub buf_hits: u64,
+    pub media_accesses: u64,
+}
+
+impl PmemStats {
+    pub fn buf_hit_rate(&self) -> f64 {
+        let total = self.buf_hits + self.media_accesses;
+        if total == 0 {
+            0.0
+        } else {
+            self.buf_hits as f64 / total as f64
+        }
+    }
+}
+
+/// A PMEM DIMM with a fully-associative LRU pool of row buffers.
+#[derive(Debug)]
+pub struct Pmem {
+    cfg: PmemConfig,
+    /// Open row per buffer (`None` = empty).
+    bufs: Vec<Option<u64>>,
+    /// Last-touch stamp per buffer (LRU victim = min stamp).
+    stamps: Vec<Tick>,
+    /// Per-port media ready times (misses pick the earliest-free port).
+    ports: Vec<Tick>,
+    stats: PmemStats,
+}
+
+impl Pmem {
+    pub fn new(cfg: PmemConfig) -> Self {
+        Pmem {
+            bufs: vec![None; cfg.n_bufs],
+            stamps: vec![0; cfg.n_bufs],
+            ports: vec![0; cfg.n_ports.max(1)],
+            cfg,
+            stats: PmemStats::default(),
+        }
+    }
+
+    /// Access one 64B line at tick `now`; returns the access latency.
+    pub fn access(&mut self, now: Tick, line_idx: u64, is_write: bool) -> Tick {
+        let lines_per_buf = self.cfg.rowbuf_bytes / 64;
+        let row = line_idx / lines_per_buf;
+
+        if is_write {
+            self.stats.writes += 1;
+        } else {
+            self.stats.reads += 1;
+        }
+
+        let hit_slot = self.bufs.iter().position(|b| *b == Some(row));
+        let slot = hit_slot.unwrap_or_else(|| {
+            // LRU fill (mirrors the kernel's argmin-over-stamps).
+            (0..self.bufs.len())
+                .min_by_key(|&i| self.stamps[i])
+                .expect("n_bufs > 0")
+        });
+        let lat = if !is_write && hit_slot.is_some() {
+            self.stats.buf_hits += 1;
+            self.cfg.t_buf_hit
+        } else {
+            // Read misses and ALL writes pay the media (500ns persist).
+            self.stats.media_accesses += 1;
+            let media = if is_write {
+                self.cfg.t_write
+            } else {
+                self.cfg.t_read
+            };
+            let port = (0..self.ports.len())
+                .min_by_key(|&i| self.ports[i])
+                .expect("n_ports > 0");
+            let done = now.max(self.ports[port]) + media;
+            self.ports[port] = done;
+            done - now
+        };
+        self.bufs[slot] = Some(row);
+        self.stamps[slot] = now;
+        lat
+    }
+
+    pub fn stats(&self) -> &PmemStats {
+        &self.stats
+    }
+
+    pub fn cfg(&self) -> &PmemConfig {
+        &self.cfg
+    }
+
+    pub fn reset(&mut self) {
+        self.bufs.iter_mut().for_each(|b| *b = None);
+        self.stamps.iter_mut().for_each(|s| *s = 0);
+        self.ports.iter_mut().for_each(|p| *p = 0);
+        self.stats = PmemStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pmem() -> Pmem {
+        Pmem::new(PmemConfig::default())
+    }
+
+    #[test]
+    fn read_write_asymmetry() {
+        let mut p = pmem();
+        assert_eq!(p.access(0, 0, false), 150_000);
+        let mut p = pmem();
+        assert_eq!(p.access(0, 0, true), 500_000);
+        // Writes pay media even when the row buffer is open.
+        assert_eq!(p.access(1_000_000_000, 1, true), 500_000);
+        // ...while a read that hits the buffer is cheap.
+        assert_eq!(p.access(2_000_000_000, 2, false), 50_000);
+    }
+
+    #[test]
+    fn rowbuf_hit_is_cheap() {
+        let mut p = pmem();
+        p.access(0, 0, false);
+        // line 3 shares the 256B row with line 0
+        assert_eq!(p.access(1_000_000, 3, false), 50_000);
+        assert_eq!(p.stats().buf_hits, 1);
+    }
+
+    #[test]
+    fn media_ports_fill_then_serialize() {
+        let mut p = pmem();
+        let n_ports = p.cfg().n_ports as u64;
+        // The first n_ports misses run in parallel on separate ports...
+        for i in 0..n_ports {
+            assert_eq!(p.access(0, i * 1_000, false), 150_000, "port {i}");
+        }
+        // ...the next one queues behind the earliest-free port.
+        let lat = p.access(0, n_ports * 1_000, false);
+        assert_eq!(lat, 300_000);
+    }
+
+    #[test]
+    fn aliasing_rows_coexist_fully_associative() {
+        // Rows that a direct-mapped pool would thrash on all stay open.
+        // Start at t>0: a stamp of 0 is indistinguishable from "never
+        // touched" (mirrors the kernel's argmin-over-stamps fill).
+        let mut p = pmem();
+        let n = p.cfg().n_bufs as u64;
+        for i in 0..n {
+            p.access((i + 1) * 1_000_000, i * n * 4, false); // aliasing rows
+        }
+        for i in 0..n {
+            let lat = p.access((n + i + 1) * 1_000_000, i * n * 4 + 1, false);
+            assert_eq!(lat, 50_000, "row {i} should hit");
+        }
+    }
+
+    #[test]
+    fn lru_fill_evicts_coldest_row() {
+        let mut p = pmem();
+        let n = p.cfg().n_bufs as u64;
+        for i in 0..n {
+            p.access((i + 1) * 1_000_000, i * 4, false); // rows 0..n
+        }
+        // Re-touch row 0, then fill a new row: victim must be row 1.
+        p.access((n + 1) * 1_000_000, 0, false);
+        p.access((n + 2) * 1_000_000, 1000 * 4, false);
+        let lat0 = p.access((n + 3) * 1_000_000, 1, false); // row 0 hit
+        let lat1 = p.access((n + 4) * 1_000_000, 5, false); // row 1 miss
+        assert_eq!(lat0, 50_000);
+        assert_eq!(lat1, 150_000);
+    }
+
+    #[test]
+    fn write_fills_buffer_for_reads() {
+        let mut p = pmem();
+        p.access(0, 0, true);
+        // The written row is open: a read of it hits the buffer.
+        assert_eq!(p.access(1_000_000, 1, false), 50_000);
+        assert!(p.stats().buf_hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn writes_occupy_media_ports() {
+        let mut p = pmem();
+        let n_ports = p.cfg().n_ports as u64;
+        // Saturate every port with writes at t=0...
+        for i in 0..n_ports {
+            assert_eq!(p.access(0, i * 1_000, true), 500_000);
+        }
+        // ...a read miss then queues behind a write drain.
+        let lat = p.access(0, 7_777_000, false);
+        assert_eq!(lat, 650_000);
+    }
+}

@@ -1,0 +1,36 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from rust.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); this module loads
+//! the resulting HLO *text* (see `python/compile/aot.py`) into the PJRT CPU
+//! client and exposes typed execute entry points to the simulator hot path.
+
+use anyhow::{Context, Result};
+
+/// A compiled XLA executable plus its client, loaded from an HLO text file.
+pub struct LoadedModel {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Load and compile `artifacts/<name>.hlo.txt` on the PJRT CPU client.
+    pub fn from_hlo_text(path: &str) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text at {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO module")?;
+        Ok(Self { client, exe })
+    }
+
+    /// Execute with literal inputs; returns the elements of the result tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        result.decompose_tuple().map_err(Into::into)
+    }
+
+    /// Platform name of the underlying PJRT client (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,201 @@
+//! Event queue with deterministic ordering.
+//!
+//! Events at the same tick fire in insertion order (a monotone sequence
+//! number breaks ties), which keeps runs bit-reproducible regardless of
+//! heap internals — the property gem5 calls "event priority stability".
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::Tick;
+
+/// Opaque handle returned by [`EventQueue::schedule`]; lets callers cancel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventToken(u64);
+
+/// A scheduled event carrying a payload of type `T`.
+#[derive(Debug)]
+pub struct Event<T> {
+    pub when: Tick,
+    pub payload: T,
+    seq: u64,
+    cancelled: bool,
+}
+
+impl<T> PartialEq for Event<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.when == other.when && self.seq == other.seq
+    }
+}
+impl<T> Eq for Event<T> {}
+impl<T> PartialOrd for Event<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Event<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first, then
+        // lowest-seq-first among same-tick events.
+        other
+            .when
+            .cmp(&self.when)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-first event queue with stable same-tick ordering and
+/// cancellation support.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Event<T>>,
+    next_seq: u64,
+    cancelled: std::collections::HashSet<u64>,
+    now: Tick,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            cancelled: std::collections::HashSet::new(),
+            now: 0,
+        }
+    }
+
+    /// Current simulated time: the tick of the last popped event.
+    pub fn now(&self) -> Tick {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute tick `when`.
+    ///
+    /// Scheduling in the past is a logic error in a DES; we clamp to `now`
+    /// and debug-assert so release runs degrade gracefully.
+    pub fn schedule(&mut self, when: Tick, payload: T) -> EventToken {
+        debug_assert!(when >= self.now, "scheduling in the past");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event {
+            when: when.max(self.now),
+            payload,
+            seq,
+            cancelled: false,
+        });
+        EventToken(seq)
+    }
+
+    /// Cancel a previously scheduled event. Cancelled events are skipped
+    /// (and dropped) when they reach the head of the queue.
+    pub fn cancel(&mut self, token: EventToken) {
+        self.cancelled.insert(token.0);
+    }
+
+    /// Pop the earliest live event, advancing `now` to its tick.
+    pub fn pop(&mut self) -> Option<(Tick, T)> {
+        while let Some(ev) = self.heap.pop() {
+            if self.cancelled.remove(&ev.seq) || ev.cancelled {
+                continue;
+            }
+            self.now = ev.when;
+            return Some((ev.when, ev.payload));
+        }
+        None
+    }
+
+    /// Tick of the earliest live event without popping it.
+    pub fn peek(&mut self) -> Option<Tick> {
+        while let Some(ev) = self.heap.peek() {
+            if self.cancelled.contains(&ev.seq) {
+                let seq = ev.seq;
+                self.heap.pop();
+                self.cancelled.remove(&seq);
+                continue;
+            }
+            return Some(ev.when);
+        }
+        None
+    }
+
+    pub fn is_empty(&mut self) -> bool {
+        self.peek().is_none()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len() // upper bound: may include cancelled entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(30, "c");
+        q.schedule(10, "a");
+        q.schedule(20, "b");
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_tick_is_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.schedule(5, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((5, i)));
+        }
+    }
+
+    #[test]
+    fn now_advances_with_pops() {
+        let mut q = EventQueue::new();
+        q.schedule(42, ());
+        assert_eq!(q.now(), 0);
+        q.pop();
+        assert_eq!(q.now(), 42);
+    }
+
+    #[test]
+    fn cancellation_skips_events() {
+        let mut q = EventQueue::new();
+        let t1 = q.schedule(10, 1);
+        q.schedule(20, 2);
+        q.cancel(t1);
+        assert_eq!(q.pop(), Some((20, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        let t = q.schedule(7, 1);
+        q.schedule(9, 2);
+        q.cancel(t);
+        assert_eq!(q.peek(), Some(9));
+        assert_eq!(q.pop(), Some((9, 2)));
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling in the past")]
+    #[cfg(debug_assertions)]
+    fn past_scheduling_asserts_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule(10, ());
+        q.pop();
+        q.schedule(5, ());
+    }
+}

@@ -1,0 +1,50 @@
+//! Discrete-event simulation core.
+//!
+//! Tick convention follows gem5: **1 tick = 1 picosecond**. All device
+//! models in this crate express latencies and ready-times in ticks.
+
+mod event;
+
+pub use event::{Event, EventQueue, EventToken};
+
+/// Simulation time in picoseconds (gem5 tick convention).
+pub type Tick = u64;
+
+/// One nanosecond in ticks.
+pub const NS: Tick = 1_000;
+/// One microsecond in ticks.
+pub const US: Tick = 1_000_000;
+/// One millisecond in ticks.
+pub const MS: Tick = 1_000_000_000;
+/// One second in ticks.
+pub const SEC: Tick = 1_000_000_000_000;
+
+/// Convert ticks to fractional nanoseconds (reporting only).
+pub fn to_ns(t: Tick) -> f64 {
+    t as f64 / NS as f64
+}
+
+/// Convert ticks to fractional microseconds (reporting only).
+pub fn to_us(t: Tick) -> f64 {
+    t as f64 / US as f64
+}
+
+/// Convert ticks to fractional seconds (reporting only).
+pub fn to_sec(t: Tick) -> f64 {
+    t as f64 / SEC as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(NS * 1_000, US);
+        assert_eq!(US * 1_000, MS);
+        assert_eq!(MS * 1_000, SEC);
+        assert!((to_ns(1_500) - 1.5).abs() < 1e-12);
+        assert!((to_us(2_500_000) - 2.5).abs() < 1e-12);
+        assert!((to_sec(SEC) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,407 @@
+//! FTL — page-mapped Flash Translation Layer with greedy GC.
+//!
+//! Logical 4KB pages map to physical flash pages. Writes append to a
+//! per-die open block (round-robin striping across dies); stale pages are
+//! invalidated and reclaimed by greedy (min-valid-first) garbage
+//! collection when a die's free-block pool drops below the watermark.
+//! Tracks write amplification and per-block erase counts (the endurance
+//! metric the paper's DRAM cache layer is meant to improve).
+
+use super::pal::{FlashAddr, NandConfig, Pal, PalOp};
+use super::SsdConfig;
+use crate::sim::Tick;
+
+const UNMAPPED: u32 = u32::MAX;
+
+#[derive(Debug, Default, Clone)]
+pub struct FtlStats {
+    /// Pages programmed on behalf of the host.
+    pub host_programs: u64,
+    /// Pages programmed by GC relocation.
+    pub gc_programs: u64,
+    /// Pages read on behalf of the host.
+    pub host_reads: u64,
+    /// Pages read by GC relocation.
+    pub gc_reads: u64,
+    pub gc_runs: u64,
+    pub erases: u64,
+}
+
+impl FtlStats {
+    /// Write amplification factor: flash programs per host program.
+    pub fn waf(&self) -> f64 {
+        if self.host_programs == 0 {
+            1.0
+        } else {
+            (self.host_programs + self.gc_programs) as f64 / self.host_programs as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+struct DieState {
+    free_blocks: Vec<u32>,
+    open_block: u32,
+    next_page: u32,
+}
+
+/// Page-mapped FTL over a [`Pal`].
+#[derive(Debug)]
+pub struct Ftl {
+    nand: NandConfig,
+    pal: Pal,
+    /// Logical page -> global physical page (UNMAPPED if never written).
+    l2p: Vec<u32>,
+    /// Global physical page -> logical page (UNMAPPED if free/invalid).
+    p2l: Vec<u32>,
+    /// Per-block count of valid pages.
+    valid_count: Vec<u16>,
+    /// Per-block erase count (endurance).
+    erase_count: Vec<u32>,
+    dies: Vec<DieState>,
+    blocks_per_die: u32,
+    pages_per_block: u32,
+    gc_threshold: usize,
+    next_write_die: usize,
+    stats: FtlStats,
+}
+
+impl Ftl {
+    pub fn new(cfg: &SsdConfig) -> Self {
+        let nand = cfg.nand;
+        let n_dies = nand.n_dies();
+        let total_pages = cfg.total_pages();
+        let pages_per_die = total_pages / n_dies as u64;
+        let pages_per_block = nand.pages_per_block as u32;
+        let blocks_per_die = (pages_per_die / pages_per_block as u64) as u32;
+        assert!(blocks_per_die > cfg.gc_threshold as u32 + 1);
+
+        let total_blocks = blocks_per_die as usize * n_dies;
+        let dies = (0..n_dies)
+            .map(|_| {
+                // Block 0 starts open; the rest are free.
+                DieState {
+                    free_blocks: (1..blocks_per_die).rev().collect(),
+                    open_block: 0,
+                    next_page: 0,
+                }
+            })
+            .collect();
+
+        Ftl {
+            nand,
+            pal: Pal::new(nand),
+            l2p: vec![UNMAPPED; cfg.user_pages() as usize],
+            p2l: vec![UNMAPPED; total_pages as usize],
+            valid_count: vec![0; total_blocks],
+            erase_count: vec![0; total_blocks],
+            dies,
+            blocks_per_die,
+            pages_per_block,
+            gc_threshold: cfg.gc_threshold,
+            next_write_die: 0,
+            stats: FtlStats::default(),
+        }
+    }
+
+    pub fn user_pages(&self) -> u64 {
+        self.l2p.len() as u64
+    }
+
+    /// Has logical page `lp` ever been written (mapped to flash)?
+    pub fn is_mapped(&self, lp: u64) -> bool {
+        self.l2p
+            .get(lp as usize)
+            .map(|&p| p != UNMAPPED)
+            .unwrap_or(false)
+    }
+
+    /// Read logical page `lp` at `now`; returns host-visible latency.
+    pub fn read(&mut self, now: Tick, lp: u64) -> Tick {
+        self.stats.host_reads += 1;
+        let die = match self.lookup(lp) {
+            Some(addr) => addr.die,
+            // Never-written page: time a media read at the canonical
+            // striped location (matches the Pallas surrogate's decode).
+            None => self.static_die(lp),
+        };
+        let (done, _) = self.pal.execute(now, die, PalOp::Read);
+        done - now
+    }
+
+    /// Write logical page `lp` at `now`; returns host-visible latency.
+    pub fn write(&mut self, now: Tick, lp: u64) -> Tick {
+        self.stats.host_programs += 1;
+        self.invalidate(lp);
+        let die = self.next_write_die;
+        self.next_write_die = (self.next_write_die + 1) % self.nand.n_dies();
+        let phys = self.allocate_page(now, die);
+        self.map(lp, phys);
+        let (done, _) = self.pal.execute(now, die, PalOp::Program);
+        self.maybe_gc(now, die);
+        done - now
+    }
+
+    /// The die a never-written page times against (kernel-compatible
+    /// stripe: channel = page % C, die-in-channel = (page / C) % D).
+    fn static_die(&self, lp: u64) -> usize {
+        let c = (lp % self.nand.n_channels as u64) as usize;
+        let d = ((lp / self.nand.n_channels as u64) % self.nand.dies_per_channel as u64) as usize;
+        c * self.nand.dies_per_channel + d
+    }
+
+    fn lookup(&self, lp: u64) -> Option<FlashAddr> {
+        let phys = *self.l2p.get(lp as usize)?;
+        if phys == UNMAPPED {
+            None
+        } else {
+            Some(self.decode_phys(phys))
+        }
+    }
+
+    fn decode_phys(&self, phys: u32) -> FlashAddr {
+        let pages_per_die = self.blocks_per_die * self.pages_per_block;
+        let die = (phys / pages_per_die) as usize;
+        let in_die = phys % pages_per_die;
+        FlashAddr {
+            die,
+            block: in_die / self.pages_per_block,
+            page: in_die % self.pages_per_block,
+        }
+    }
+
+    fn encode_phys(&self, addr: FlashAddr) -> u32 {
+        let pages_per_die = self.blocks_per_die * self.pages_per_block;
+        addr.die as u32 * pages_per_die + addr.block * self.pages_per_block + addr.page
+    }
+
+    fn global_block(&self, die: usize, block: u32) -> usize {
+        die * self.blocks_per_die as usize + block as usize
+    }
+
+    fn invalidate(&mut self, lp: u64) {
+        let phys = self.l2p[lp as usize];
+        if phys != UNMAPPED {
+            let addr = self.decode_phys(phys);
+            let gb = self.global_block(addr.die, addr.block);
+            debug_assert!(self.valid_count[gb] > 0);
+            self.valid_count[gb] -= 1;
+            self.p2l[phys as usize] = UNMAPPED;
+            self.l2p[lp as usize] = UNMAPPED;
+        }
+    }
+
+    fn map(&mut self, lp: u64, phys: u32) {
+        let addr = self.decode_phys(phys);
+        let gb = self.global_block(addr.die, addr.block);
+        self.valid_count[gb] += 1;
+        self.l2p[lp as usize] = phys;
+        self.p2l[phys as usize] = lp as u32;
+    }
+
+    /// Claim the next page of `die`'s open block, rolling to a fresh block
+    /// when full.
+    fn allocate_page(&mut self, now: Tick, die: usize) -> u32 {
+        if self.dies[die].next_page == self.pages_per_block {
+            let newb = self.dies[die]
+                .free_blocks
+                .pop()
+                .expect("die out of free blocks (GC failed to keep up)");
+            self.dies[die].open_block = newb;
+            self.dies[die].next_page = 0;
+            // Rolling to a new block can drop the pool below the
+            // watermark mid-write; GC is checked after each program.
+            let _ = now;
+        }
+        let d = &mut self.dies[die];
+        let addr = FlashAddr {
+            die,
+            block: d.open_block,
+            page: d.next_page,
+        };
+        d.next_page += 1;
+        self.encode_phys(addr)
+    }
+
+    /// Greedy GC: reclaim min-valid blocks until above the watermark.
+    fn maybe_gc(&mut self, now: Tick, die: usize) {
+        while self.dies[die].free_blocks.len() < self.gc_threshold {
+            let Some(victim) = self.pick_victim(die) else {
+                return; // nothing reclaimable (all blocks fully valid)
+            };
+            self.stats.gc_runs += 1;
+            self.relocate_block(now, die, victim);
+        }
+    }
+
+    /// Min-valid block in `die`, excluding the open block.
+    fn pick_victim(&self, die: usize) -> Option<u32> {
+        let open = self.dies[die].open_block;
+        (0..self.blocks_per_die)
+            .filter(|&b| b != open && !self.dies[die].free_blocks.contains(&b))
+            .min_by_key(|&b| self.valid_count[self.global_block(die, b)])
+            .filter(|&b| {
+                // A victim with every page valid reclaims nothing.
+                (self.valid_count[self.global_block(die, b)] as u32) < self.pages_per_block
+            })
+    }
+
+    fn relocate_block(&mut self, now: Tick, die: usize, victim: u32) {
+        let gb = self.global_block(die, victim);
+        let base = self.encode_phys(FlashAddr {
+            die,
+            block: victim,
+            page: 0,
+        });
+        for p in 0..self.pages_per_block {
+            let phys = base + p;
+            let lp = self.p2l[phys as usize];
+            if lp == UNMAPPED {
+                continue;
+            }
+            // Move the valid page: flash read + program into the open block.
+            self.stats.gc_reads += 1;
+            self.stats.gc_programs += 1;
+            self.pal.execute(now, die, PalOp::Read);
+            self.valid_count[gb] -= 1;
+            self.p2l[phys as usize] = UNMAPPED;
+            let dst = self.allocate_page(now, die);
+            self.map(lp as u64, dst);
+            self.pal.execute(now, die, PalOp::Program);
+        }
+        debug_assert_eq!(self.valid_count[gb], 0);
+        self.pal.execute(now, die, PalOp::Erase);
+        self.stats.erases += 1;
+        self.erase_count[gb] += 1;
+        self.dies[die].free_blocks.push(victim);
+    }
+
+    pub fn stats(&self) -> &FtlStats {
+        &self.stats
+    }
+
+    pub fn pal_stats(&self) -> &super::pal::PalStats {
+        self.pal.stats()
+    }
+
+    /// Max per-block erase count (endurance indicator).
+    pub fn max_erase_count(&self) -> u32 {
+        self.erase_count.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn nand(&self) -> &NandConfig {
+        &self.nand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SsdConfig {
+        // Tiny device so GC paths trigger quickly: 4 dies x 8 blocks x 16p.
+        SsdConfig {
+            nand: NandConfig {
+                n_channels: 2,
+                dies_per_channel: 2,
+                pages_per_block: 16,
+                ..NandConfig::default()
+            },
+            capacity_bytes: 4 * 8 * 16 * 4096,
+            gc_threshold: 2,
+            op_fraction_inv: 4,
+            ..SsdConfig::default()
+        }
+    }
+
+    #[test]
+    fn read_unwritten_page_times_media() {
+        let mut f = Ftl::new(&small_cfg());
+        let lat = f.read(0, 0);
+        assert_eq!(lat, f.nand().isolated_read());
+    }
+
+    #[test]
+    fn write_then_read_hits_mapped_location() {
+        let mut f = Ftl::new(&small_cfg());
+        f.write(0, 5);
+        assert!(f.lookup(5).is_some());
+        let addr = f.lookup(5).unwrap();
+        assert_eq!(addr.block, 0);
+        assert_eq!(addr.page, 0);
+    }
+
+    #[test]
+    fn rewrites_invalidate_old_page() {
+        let mut f = Ftl::new(&small_cfg());
+        let t = 10 * crate::sim::MS;
+        f.write(0, 5);
+        let first = f.lookup(5).unwrap();
+        f.write(t, 5);
+        let second = f.lookup(5).unwrap();
+        assert_ne!(first, second);
+        let gb = f.global_block(first.die, first.block);
+        // old block lost a valid page
+        assert!(f.valid_count[gb] <= 1);
+    }
+
+    #[test]
+    fn writes_stripe_across_dies() {
+        let mut f = Ftl::new(&small_cfg());
+        let mut dies = std::collections::HashSet::new();
+        for lp in 0..4 {
+            f.write(0, lp);
+            dies.insert(f.lookup(lp).unwrap().die);
+        }
+        assert_eq!(dies.len(), 4);
+    }
+
+    #[test]
+    fn overwrite_heavy_workload_triggers_gc() {
+        let cfg = small_cfg();
+        let mut f = Ftl::new(&cfg);
+        let user = f.user_pages();
+        let mut now = 0;
+        // Write the full user space several times over.
+        for round in 0..6u64 {
+            for lp in 0..user {
+                f.write(now, lp);
+                now += crate::sim::MS;
+                let _ = round;
+            }
+        }
+        assert!(f.stats().gc_runs > 0, "GC never ran");
+        assert!(f.stats().erases > 0);
+        assert!(f.stats().waf() >= 1.0);
+        assert!(f.max_erase_count() > 0);
+    }
+
+    #[test]
+    fn waf_is_one_without_gc() {
+        let mut f = Ftl::new(&small_cfg());
+        for lp in 0..8 {
+            f.write(0, lp);
+        }
+        assert_eq!(f.stats().waf(), 1.0);
+    }
+
+    #[test]
+    fn gc_preserves_all_mappings() {
+        let cfg = small_cfg();
+        let mut f = Ftl::new(&cfg);
+        let user = f.user_pages();
+        let mut now = 0;
+        for _ in 0..6 {
+            for lp in 0..user {
+                f.write(now, lp);
+                now += crate::sim::MS;
+            }
+        }
+        // Every logical page must still resolve, with consistent p2l.
+        for lp in 0..user {
+            let addr = f.lookup(lp).expect("mapping lost in GC");
+            let phys = f.encode_phys(addr);
+            assert_eq!(f.p2l[phys as usize] as u64, lp);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! ICL — Internal Cache Layer: the SSD's own DRAM buffer.
+//!
+//! SimpleSSD's ICL analog: a small (Table I: 512KB) page-granular
+//! write-back LRU cache between the host interface and the FTL. Absorbs
+//! short bursts; with random traffic over 16GB its hit rate is ~0, which
+//! is why the *expander-side* DRAM cache layer (the paper's contribution,
+//! [`crate::cache`]) matters.
+
+use crate::fasthash::{fast_map, FastMap};
+
+use super::ftl::Ftl;
+use crate::sim::Tick;
+
+#[derive(Debug, Default, Clone)]
+pub struct IclStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl IclStats {
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    page: u64,
+    dirty: bool,
+    /// LRU clock: last-touch stamp.
+    touched: u64,
+}
+
+/// Page-granular write-back LRU buffer in the SSD controller's DRAM.
+#[derive(Debug)]
+pub struct Icl {
+    frames: Vec<Option<Frame>>,
+    map: FastMap<u64, usize>,
+    clock: u64,
+    t_icl: Tick,
+    stats: IclStats,
+}
+
+impl Icl {
+    pub fn new(n_frames: usize, t_icl: Tick) -> Self {
+        Icl {
+            frames: vec![None; n_frames.max(1)],
+            map: fast_map(n_frames),
+            clock: 0,
+            t_icl,
+            stats: IclStats::default(),
+        }
+    }
+
+    /// Access `page` through the buffer at `now`; on a miss the FTL is
+    /// consulted (and a dirty victim written back first). Returns the
+    /// host-visible latency.
+    pub fn access(&mut self, now: Tick, ftl: &mut Ftl, page: u64, is_write: bool) -> Tick {
+        self.clock += 1;
+        if let Some(&idx) = self.map.get(&page) {
+            self.stats.hits += 1;
+            let f = self.frames[idx].as_mut().expect("mapped frame occupied");
+            f.touched = self.clock;
+            f.dirty |= is_write;
+            return self.t_icl;
+        }
+        self.stats.misses += 1;
+
+        // Victim selection in one pass: first empty frame wins, else LRU.
+        let mut idx = 0;
+        let mut best = u64::MAX;
+        for (i, f) in self.frames.iter().enumerate() {
+            match f {
+                None => {
+                    idx = i;
+                    break;
+                }
+                Some(f) if f.touched < best => {
+                    best = f.touched;
+                    idx = i;
+                }
+                _ => {}
+            }
+        }
+        // Write back the dirty victim before reuse.
+        if let Some(v) = self.frames[idx] {
+            self.map.remove(&v.page);
+            if v.dirty {
+                self.stats.writebacks += 1;
+                ftl.write(now, v.page);
+            }
+        }
+
+        // Fill: writes allocate without a flash read (full-page write);
+        // reads must fetch the page from flash.
+        let lat = if is_write {
+            self.t_icl
+        } else {
+            ftl.read(now, page) + self.t_icl
+        };
+        self.frames[idx] = Some(Frame {
+            page,
+            dirty: is_write,
+            touched: self.clock,
+        });
+        self.map.insert(page, idx);
+        lat
+    }
+
+    /// Flush every dirty frame to flash (drain at end of run).
+    pub fn flush(&mut self, now: Tick, ftl: &mut Ftl) {
+        for idx in 0..self.frames.len() {
+            if let Some(f) = self.frames[idx] {
+                if f.dirty {
+                    self.stats.writebacks += 1;
+                    ftl.write(now, f.page);
+                    self.frames[idx].as_mut().unwrap().dirty = false;
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> &IclStats {
+        &self.stats
+    }
+
+    pub fn resident(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ssd::SsdConfig;
+
+    fn setup() -> (Icl, Ftl) {
+        let cfg = SsdConfig::default();
+        (Icl::new(4, 1_000_000), Ftl::new(&cfg))
+    }
+
+    #[test]
+    fn repeat_access_hits() {
+        let (mut icl, mut ftl) = setup();
+        let miss = icl.access(0, &mut ftl, 7, false);
+        let hit = icl.access(0, &mut ftl, 7, false);
+        assert!(miss > hit);
+        assert_eq!(hit, 1_000_000);
+        assert_eq!(icl.stats().hits, 1);
+    }
+
+    #[test]
+    fn write_allocates_without_flash_read() {
+        let (mut icl, mut ftl) = setup();
+        let lat = icl.access(0, &mut ftl, 7, true);
+        assert_eq!(lat, 1_000_000);
+        assert_eq!(ftl.stats().host_reads, 0);
+    }
+
+    #[test]
+    fn lru_evicts_coldest() {
+        let (mut icl, mut ftl) = setup();
+        for p in 0..4 {
+            icl.access(0, &mut ftl, p, false);
+        }
+        icl.access(0, &mut ftl, 0, false); // re-touch 0
+        icl.access(0, &mut ftl, 99, false); // evicts page 1 (coldest)
+        assert!(icl.map.contains_key(&0));
+        assert!(!icl.map.contains_key(&1));
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back() {
+        let (mut icl, mut ftl) = setup();
+        icl.access(0, &mut ftl, 0, true);
+        for p in 1..5 {
+            icl.access(0, &mut ftl, p, false); // push page 0 out
+        }
+        assert_eq!(icl.stats().writebacks, 1);
+        assert_eq!(ftl.stats().host_programs, 1);
+    }
+
+    #[test]
+    fn flush_drains_all_dirty() {
+        let (mut icl, mut ftl) = setup();
+        for p in 0..3 {
+            icl.access(0, &mut ftl, p, true);
+        }
+        icl.flush(0, &mut ftl);
+        assert_eq!(ftl.stats().host_programs, 3);
+        // Second flush is a no-op.
+        icl.flush(0, &mut ftl);
+        assert_eq!(ftl.stats().host_programs, 3);
+    }
+}

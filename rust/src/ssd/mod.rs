@@ -1,0 +1,108 @@
+//! SimpleSSD-analog SSD model (paper §II-A "SimpleSSD simulator").
+//!
+//! Layered like SimpleSSD:
+//! - [`hil`] — Host Interface Layer: line→page conversion, request entry.
+//! - [`icl`] — Internal Cache Layer: the SSD's own DRAM buffer (512KB,
+//!   Table I), write-back LRU.
+//! - [`ftl`] — Flash Translation Layer: page-mapped L2P, greedy garbage
+//!   collection, wear/WAF accounting.
+//! - [`pal`] — Parallelism Abstraction Layer: channel/die contention and
+//!   NAND timing (tR / tPROG / tERASE).
+//!
+//! The CXL-SSD device (paper Fig 1) couples this stack to the Home Agent
+//! via [`crate::devices::CxlSsd`]; the expander-side DRAM cache layer is
+//! [`crate::cache`], *not* part of the SSD itself.
+
+pub mod ftl;
+pub mod hil;
+pub mod icl;
+pub mod pal;
+
+pub use ftl::{Ftl, FtlStats};
+pub use hil::{Hil, SsdStats};
+pub use icl::{Icl, IclStats};
+pub use pal::{NandConfig, Pal, PalOp, PalStats};
+
+use crate::sim::Tick;
+
+/// Whole-SSD configuration (geometry mirrors `python/compile/params.py`).
+#[derive(Debug, Clone, Copy)]
+pub struct SsdConfig {
+    pub nand: NandConfig,
+    /// Total device capacity in bytes (Table I: 16 GB).
+    pub capacity_bytes: u64,
+    /// Internal DRAM buffer size in bytes (Table I: 512 KB).
+    pub icl_bytes: u64,
+    /// ICL service latency (controller + internal DRAM).
+    pub t_icl: Tick,
+    /// Enable the internal cache layer.
+    pub icl_enabled: bool,
+    /// Reserve this fraction (1/N) of blocks as over-provisioning.
+    pub op_fraction_inv: u64,
+    /// Free-block low watermark per die that triggers GC.
+    pub gc_threshold: usize,
+    /// Treat every logical page as flash-backed (fills never skip flash);
+    /// used by fast-mode comparisons, where the surrogate has no mapping
+    /// state.
+    pub assume_mapped: bool,
+}
+
+impl Default for SsdConfig {
+    fn default() -> Self {
+        SsdConfig {
+            nand: NandConfig::default(),
+            capacity_bytes: 16 << 30,
+            icl_bytes: 512 << 10,
+            t_icl: 1_500_000, // 1.5 µs
+            icl_enabled: true,
+            op_fraction_inv: 16,
+            gc_threshold: 4,
+            assume_mapped: false,
+        }
+    }
+}
+
+impl SsdConfig {
+    /// Kernel-parity config: no internal cache, fresh device — matches the
+    /// Pallas `ssd_timing` surrogate access-for-access.
+    pub fn surrogate_parity() -> Self {
+        SsdConfig {
+            icl_enabled: false,
+            ..Default::default()
+        }
+    }
+
+    pub fn total_pages(&self) -> u64 {
+        self.capacity_bytes / self.nand.page_bytes
+    }
+
+    /// Host-visible pages after over-provisioning reservation.
+    pub fn user_pages(&self) -> u64 {
+        self.total_pages() - self.total_pages() / self.op_fraction_inv
+    }
+}
+
+/// The assembled SSD: HIL on top of ICL on top of FTL+PAL.
+pub type Ssd = Hil;
+
+/// Build an SSD from config.
+pub fn build(cfg: SsdConfig) -> Ssd {
+    Hil::new(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_is_consistent() {
+        let cfg = SsdConfig::default();
+        assert_eq!(cfg.total_pages(), (16 << 30) / 4096);
+        assert!(cfg.user_pages() < cfg.total_pages());
+        let nand = cfg.nand;
+        // All pages must be addressable by the die geometry.
+        let dies = nand.n_channels * nand.dies_per_channel;
+        let pages_per_die = cfg.total_pages() / dies as u64;
+        assert_eq!(pages_per_die % nand.pages_per_block as u64, 0);
+    }
+}

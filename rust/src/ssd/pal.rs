@@ -1,0 +1,232 @@
+//! PAL — Parallelism Abstraction Layer.
+//!
+//! Times NAND operations against channel/die availability. Mirrors the
+//! Pallas `ssd_timing` kernel for reads/programs, and additionally models
+//! erases (GC) which the surrogate folds into its accuracy delta.
+
+use crate::sim::Tick;
+
+/// NAND flash geometry + timing (mirrors `python/compile/params.py` SSD).
+#[derive(Debug, Clone, Copy)]
+pub struct NandConfig {
+    pub n_channels: usize,
+    pub dies_per_channel: usize,
+    pub page_bytes: u64,
+    pub pages_per_block: usize,
+    /// Command/DMA setup.
+    pub t_cmd: Tick,
+    /// Array read (tR).
+    pub t_read: Tick,
+    /// Page program (tPROG).
+    pub t_prog: Tick,
+    /// Block erase (tBERS).
+    pub t_erase: Tick,
+    /// 4KB page transfer over one channel.
+    pub t_xfer: Tick,
+}
+
+impl Default for NandConfig {
+    fn default() -> Self {
+        NandConfig {
+            n_channels: 8,
+            dies_per_channel: 2,
+            page_bytes: 4096,
+            pages_per_block: 256,
+            t_cmd: 200_000,        // 200 ns
+            t_read: 45_000_000,    // 45 µs
+            t_prog: 660_000_000,   // 660 µs
+            t_erase: 3_500_000_000, // 3.5 ms
+            t_xfer: 3_400_000,     // 3.4 µs
+        }
+    }
+}
+
+impl NandConfig {
+    pub fn n_dies(&self) -> usize {
+        self.n_channels * self.dies_per_channel
+    }
+
+    /// Isolated (contention-free) read service time.
+    pub fn isolated_read(&self) -> Tick {
+        self.t_cmd + self.t_read + self.t_xfer
+    }
+
+    /// Isolated host-visible write completion (program hides behind die).
+    pub fn isolated_write(&self) -> Tick {
+        self.t_cmd + self.t_xfer
+    }
+}
+
+/// A physical flash location.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlashAddr {
+    pub die: usize,
+    pub block: u32,
+    pub page: u32,
+}
+
+/// Operations PAL can time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PalOp {
+    Read,
+    Program,
+    Erase,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct PalStats {
+    pub reads: u64,
+    pub programs: u64,
+    pub erases: u64,
+    pub die_wait_ticks: Tick,
+    pub channel_wait_ticks: Tick,
+}
+
+/// Channel/die contention model.
+#[derive(Debug)]
+pub struct Pal {
+    cfg: NandConfig,
+    channel_ready: Vec<Tick>,
+    die_ready: Vec<Tick>,
+    stats: PalStats,
+}
+
+impl Pal {
+    pub fn new(cfg: NandConfig) -> Self {
+        Pal {
+            channel_ready: vec![0; cfg.n_channels],
+            die_ready: vec![0; cfg.n_dies()],
+            cfg,
+            stats: PalStats::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> &NandConfig {
+        &self.cfg
+    }
+
+    /// Channel serving a die.
+    pub fn channel_of(&self, die: usize) -> usize {
+        die / self.cfg.dies_per_channel
+    }
+
+    /// Execute `op` on `die` at `now`.
+    ///
+    /// Returns `(host_visible_done, die_busy_until)`:
+    /// - reads: host sees array read + channel transfer out;
+    /// - programs: host sees channel transfer in (program buffered in the
+    ///   die); the die stays busy for the program;
+    /// - erases: host never waits (background GC); die busy for tBERS.
+    pub fn execute(&mut self, now: Tick, die: usize, op: PalOp) -> (Tick, Tick) {
+        let ch = self.channel_of(die);
+        let die_ready = self.die_ready[die];
+        let ch_ready = self.channel_ready[ch];
+
+        let start = (now + self.cfg.t_cmd).max(die_ready);
+        self.stats.die_wait_ticks += start.saturating_sub(now + self.cfg.t_cmd);
+
+        let (done, die_busy, ch_busy) = match op {
+            PalOp::Read => {
+                self.stats.reads += 1;
+                let xfer_start = (start + self.cfg.t_read).max(ch_ready);
+                self.stats.channel_wait_ticks +=
+                    xfer_start.saturating_sub(start + self.cfg.t_read);
+                let done = xfer_start + self.cfg.t_xfer;
+                (done, done, done)
+            }
+            PalOp::Program => {
+                self.stats.programs += 1;
+                let xfer_start = start.max(ch_ready);
+                self.stats.channel_wait_ticks += xfer_start.saturating_sub(start);
+                let done = xfer_start + self.cfg.t_xfer;
+                (done, done + self.cfg.t_prog, done)
+            }
+            PalOp::Erase => {
+                self.stats.erases += 1;
+                let done = start + self.cfg.t_erase;
+                (start, done, ch_ready) // channel untouched
+            }
+        };
+
+        self.die_ready[die] = die_busy;
+        self.channel_ready[ch] = ch_busy;
+        (done, die_busy)
+    }
+
+    pub fn stats(&self) -> &PalStats {
+        &self.stats
+    }
+
+    pub fn reset(&mut self) {
+        self.channel_ready.iter_mut().for_each(|t| *t = 0);
+        self.die_ready.iter_mut().for_each(|t| *t = 0);
+        self.stats = PalStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pal() -> Pal {
+        Pal::new(NandConfig::default())
+    }
+
+    #[test]
+    fn isolated_read_latency() {
+        let mut p = pal();
+        let (done, _) = p.execute(0, 0, PalOp::Read);
+        assert_eq!(done, p.cfg().isolated_read());
+    }
+
+    #[test]
+    fn isolated_program_is_transfer_bound() {
+        let mut p = pal();
+        let (done, die_busy) = p.execute(0, 0, PalOp::Program);
+        assert_eq!(done, p.cfg().isolated_write());
+        assert_eq!(die_busy, done + p.cfg().t_prog);
+    }
+
+    #[test]
+    fn program_blocks_following_read_on_die() {
+        let mut p = pal();
+        p.execute(0, 0, PalOp::Program);
+        let (done, _) = p.execute(0, 0, PalOp::Read);
+        assert!(done > p.cfg().t_prog);
+    }
+
+    #[test]
+    fn different_dies_same_channel_share_bandwidth() {
+        let mut p = pal();
+        let (d0, _) = p.execute(0, 0, PalOp::Read);
+        let (d1, _) = p.execute(0, 1, PalOp::Read); // die 1 = channel 0
+        assert_eq!(p.channel_of(0), p.channel_of(1));
+        assert!(d1 > d0, "second read must queue behind the transfer");
+    }
+
+    #[test]
+    fn different_channels_overlap() {
+        let mut p = pal();
+        let (d0, _) = p.execute(0, 0, PalOp::Read);
+        let (d1, _) = p.execute(0, p.cfg().dies_per_channel, PalOp::Read);
+        assert_eq!(d0, d1); // fully parallel
+    }
+
+    #[test]
+    fn erase_occupies_die_but_not_host() {
+        let mut p = pal();
+        let (host_done, die_busy) = p.execute(0, 0, PalOp::Erase);
+        assert!(host_done < die_busy);
+        assert_eq!(die_busy - host_done, p.cfg().t_erase);
+        let (read_done, _) = p.execute(0, 0, PalOp::Read);
+        assert!(read_done > p.cfg().t_erase);
+    }
+
+    #[test]
+    fn wait_stats_accumulate() {
+        let mut p = pal();
+        p.execute(0, 0, PalOp::Read);
+        p.execute(0, 0, PalOp::Read);
+        assert!(p.stats().die_wait_ticks > 0);
+    }
+}

@@ -1,0 +1,288 @@
+//! Metrics: counters, latency histograms, derived bandwidth/QPS figures
+//! and the fixed-width report tables the benches print.
+
+use crate::sim::{Tick, NS};
+
+/// Log2-bucketed latency histogram (buckets in nanoseconds).
+///
+/// Bucket `i` covers `[2^i, 2^(i+1))` ns; bucket 0 also absorbs sub-ns.
+/// 48 buckets reach ~3 days — more than any simulated latency.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: [u64; 48],
+    count: u64,
+    sum: u128,
+    min: Tick,
+    max: Tick,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: [0; 48],
+            count: 0,
+            sum: 0,
+            min: Tick::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn record(&mut self, lat: Tick) {
+        let ns = lat / NS;
+        let idx = (64 - ns.leading_zeros() as usize).min(47);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += lat as u128;
+        self.min = self.min.min(lat);
+        self.max = self.max.max(lat);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.mean() / NS as f64
+    }
+
+    pub fn min(&self) -> Tick {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> Tick {
+        self.max
+    }
+
+    /// Approximate percentile (bucket upper bound), `p` in [0, 100].
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (self.count as f64 * p / 100.0).ceil() as u64;
+        let mut seen = 0;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return (1u64 << i) as f64; // bucket upper bound in ns
+            }
+        }
+        self.max as f64 / NS as f64
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Aggregate result of one workload run on one device.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Simulated duration.
+    pub sim_ticks: Tick,
+    /// Wall-clock host seconds spent simulating (perf accounting).
+    pub host_seconds: f64,
+    /// Completed operations (workload-level, e.g. KV ops).
+    pub ops: u64,
+    /// Bytes the workload moved (for bandwidth).
+    pub bytes: u64,
+    /// Memory accesses issued to the device under test.
+    pub device_accesses: u64,
+    /// Latency of device accesses.
+    pub latency: HistogramBox,
+}
+
+/// Boxed histogram so RunStats stays cheap to move.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramBox(pub Box<Histogram>);
+
+impl std::ops::Deref for HistogramBox {
+    type Target = Histogram;
+    fn deref(&self) -> &Histogram {
+        &self.0
+    }
+}
+
+impl std::ops::DerefMut for HistogramBox {
+    fn deref_mut(&mut self) -> &mut Histogram {
+        &mut self.0
+    }
+}
+
+impl RunStats {
+    /// MB/s over the simulated interval.
+    pub fn bandwidth_mbs(&self) -> f64 {
+        if self.sim_ticks == 0 {
+            return 0.0;
+        }
+        let secs = crate::sim::to_sec(self.sim_ticks);
+        self.bytes as f64 / 1e6 / secs
+    }
+
+    /// Workload operations per simulated second.
+    pub fn qps(&self) -> f64 {
+        if self.sim_ticks == 0 {
+            return 0.0;
+        }
+        self.ops as f64 / crate::sim::to_sec(self.sim_ticks)
+    }
+
+    /// Simulated accesses per host second (simulator throughput).
+    pub fn sim_rate(&self) -> f64 {
+        if self.host_seconds == 0.0 {
+            return 0.0;
+        }
+        self.device_accesses as f64 / self.host_seconds
+    }
+}
+
+/// Fixed-width ASCII table builder for bench output.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {:<width$} |", c, width = w));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::US;
+
+    #[test]
+    fn histogram_basic_stats() {
+        let mut h = Histogram::new();
+        h.record(100 * NS);
+        h.record(200 * NS);
+        h.record(300 * NS);
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_ns() - 200.0).abs() < 1e-9);
+        assert_eq!(h.min(), 100 * NS);
+        assert_eq!(h.max(), 300 * NS);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * NS);
+        }
+        let p50 = h.percentile_ns(50.0);
+        let p99 = h.percentile_ns(99.0);
+        assert!(p50 <= p99);
+        assert!(p50 >= 256.0 && p50 <= 1024.0, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_merge_adds() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(NS);
+        b.record(US);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), US);
+    }
+
+    #[test]
+    fn bandwidth_and_qps() {
+        let s = RunStats {
+            sim_ticks: crate::sim::SEC,
+            bytes: 100_000_000,
+            ops: 5000,
+            ..Default::default()
+        };
+        assert!((s.bandwidth_mbs() - 100.0).abs() < 1e-9);
+        assert!((s.qps() - 5000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["device", "MB/s"]);
+        t.row(&["dram".into(), "19200.0".into()]);
+        t.row(&["cxl-ssd-cache".into(), "8.1".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[0].len(), lines[3].len());
+        assert!(lines[0].contains("device"));
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile_ns(99.0), 0.0);
+        assert_eq!(h.min(), 0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Fast-mode timing surrogates: typed wrappers over the AOT artifacts.
+//!
+//! One [`Surrogate`] per device kind loads `artifacts/<name>.hlo.txt`
+//! (the HLO text emitted by `python/compile/aot.py`), keeps the device's
+//! timing-state tensors between batches, and evaluates per-request
+//! latencies for whole request batches in a single PJRT call.
+//!
+//! The manifest emitted alongside the artifacts is cross-checked against
+//! the rust-side Table-I constants at load time so the detailed model and
+//! the surrogates cannot silently diverge.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SimConfig;
+use crate::devices::DeviceKind;
+use crate::runtime::LoadedModel;
+use crate::sim::Tick;
+use crate::trace::Trace;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// The CXL round-trip constant the surrogates fold in: 2x protocol
+/// processing + the IObus flit transfers (1-flit request + 2-flit data
+/// response, or symmetrically 2-flit RwD + 1-flit NDR).
+pub fn cxl_link_overhead(cfg: &SimConfig) -> Tick {
+    use crate::mem::{Bus, BusConfig};
+    let bus = Bus::new(BusConfig::iobus());
+    let cfg_bus = BusConfig::iobus();
+    2 * cfg.cxl.t_proto
+        + 2 * cfg_bus.header_latency
+        + bus.transfer_ticks(64)
+        + bus.transfer_ticks(128)
+}
+
+/// Artifact file stem for a device kind.
+pub fn artifact_name(kind: DeviceKind) -> &'static str {
+    match kind {
+        DeviceKind::Dram => "dram",
+        DeviceKind::CxlDram => "cxl_dram",
+        DeviceKind::Pmem => "pmem",
+        DeviceKind::CxlSsd => "ssd",
+        DeviceKind::CxlSsdCached => "cached_ssd",
+    }
+}
+
+/// Parse `manifest.txt` into a key→value map.
+pub fn load_manifest(dir: &str) -> Result<HashMap<String, String>> {
+    let path = format!("{dir}/manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path} (run `make artifacts`)"))?;
+    Ok(text
+        .lines()
+        .filter_map(|l| l.split_once('='))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect())
+}
+
+/// Assert the artifacts were lowered with the same device constants the
+/// rust detailed model uses.
+pub fn check_manifest(manifest: &HashMap<String, String>, cfg: &SimConfig) -> Result<()> {
+    let want: &[(&str, u64)] = &[
+        ("dram.n_banks", cfg.dram.n_banks as u64),
+        ("dram.t_cl", cfg.dram.t_cl),
+        ("dram.t_burst", cfg.dram.t_burst),
+        ("pmem.t_read", cfg.pmem.t_read),
+        ("pmem.t_write", cfg.pmem.t_write),
+        ("ssd.t_read", cfg.ssd.nand.t_read),
+        ("ssd.t_prog", cfg.ssd.nand.t_prog),
+        ("ssd.n_channels", cfg.ssd.nand.n_channels as u64),
+        ("cxl.t_link", 2 * cfg.cxl.t_proto),
+        ("cxl.t_bus_rt", cxl_link_overhead(cfg) - 2 * cfg.cxl.t_proto),
+        ("dcache.n_sets", cfg.dcache.n_frames() as u64),
+        ("dcache.t_access", cfg.dcache.t_access),
+    ];
+    for (key, expect) in want {
+        match manifest.get(*key) {
+            Some(v) if v.parse::<u64>().ok() == Some(*expect) => {}
+            Some(v) => bail!("manifest {key}={v} but rust config expects {expect} — re-run `make artifacts`"),
+            None => bail!("manifest missing key {key}"),
+        }
+    }
+    Ok(())
+}
+
+/// Batched per-device timing evaluator backed by one PJRT executable.
+pub struct Surrogate {
+    kind: DeviceKind,
+    model: LoadedModel,
+    batch: usize,
+    /// Device timing-state literals threaded between batches
+    /// (order matches the artifact's trailing parameters/outputs).
+    state: Vec<xla::Literal>,
+}
+
+impl Surrogate {
+    /// Load the artifact for `kind` from `dir`, verifying the manifest.
+    pub fn load(kind: DeviceKind, dir: &str, cfg: &SimConfig) -> Result<Self> {
+        let manifest = load_manifest(dir)?;
+        check_manifest(&manifest, cfg)?;
+        let batch: usize = manifest
+            .get("batch")
+            .context("manifest missing batch")?
+            .parse()?;
+        let path = format!("{dir}/{}.hlo.txt", artifact_name(kind));
+        let model = LoadedModel::from_hlo_text(&path)?;
+        let state = Self::initial_state(kind, cfg);
+        Ok(Surrogate {
+            kind,
+            model,
+            batch,
+            state,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn kind(&self) -> DeviceKind {
+        self.kind
+    }
+
+    /// Fresh timing-state literals (device reset).
+    fn initial_state(kind: DeviceKind, cfg: &SimConfig) -> Vec<xla::Literal> {
+        let f64v = |n: usize| xla::Literal::vec1(&vec![0f64; n]);
+        let i32v = |n: usize, fill: i32| xla::Literal::vec1(&vec![fill; n]);
+        match kind {
+            DeviceKind::Dram | DeviceKind::CxlDram => {
+                let nb = cfg.dram.n_banks;
+                vec![f64v(nb), i32v(nb, -1), f64v(1)]
+            }
+            DeviceKind::Pmem => {
+                vec![
+                    i32v(cfg.pmem.n_bufs, -1),
+                    f64v(cfg.pmem.n_bufs),  // LRU stamps
+                    f64v(cfg.pmem.n_ports), // media port ready times
+                    f64v(1),
+                ]
+            }
+            DeviceKind::CxlSsd => {
+                let nc = cfg.ssd.nand.n_channels;
+                let nd = nc * cfg.ssd.nand.dies_per_channel;
+                vec![f64v(nc), f64v(nd), f64v(1)]
+            }
+            DeviceKind::CxlSsdCached => {
+                let ns = cfg.dcache.n_frames();
+                let nc = cfg.ssd.nand.n_channels;
+                let nd = nc * cfg.ssd.nand.dies_per_channel;
+                vec![i32v(ns, -1), i32v(ns, 0), f64v(nc), f64v(nd), f64v(1)]
+            }
+        }
+    }
+
+    /// Does this device kind consume 4KB page indices (vs 64B lines)?
+    fn page_granular(&self) -> bool {
+        matches!(self.kind, DeviceKind::CxlSsd | DeviceKind::CxlSsdCached)
+    }
+
+    /// Evaluate one batch (padded to the artifact's static shape).
+    /// Returns latencies in ticks for the first `n` live entries.
+    fn eval_batch(
+        &mut self,
+        idx: &[i32],
+        is_write: &[i32],
+        gap: &[f64],
+        live: usize,
+    ) -> Result<Vec<Tick>> {
+        debug_assert_eq!(idx.len(), self.batch);
+        let mut inputs: Vec<xla::Literal> = vec![
+            xla::Literal::vec1(idx),
+            xla::Literal::vec1(is_write),
+            xla::Literal::vec1(gap),
+        ];
+        inputs.extend(self.state.drain(..));
+        let mut outputs = self.model.execute(&inputs)?;
+        // Output 0 is the latency vector; for cached_ssd output 1 is the
+        // hit vector (kept for stats); the rest is carried state.
+        let lat = outputs.remove(0).to_vec::<f64>()?;
+        if self.kind == DeviceKind::CxlSsdCached {
+            outputs.remove(0); // hit flags (not needed for timing)
+        }
+        self.state = outputs;
+        Ok(lat[..live].iter().map(|&l| l.max(0.0) as Tick).collect())
+    }
+
+    /// Replay a trace: batches the requests, threads the state, returns
+    /// every access latency in ticks.
+    pub fn replay(&mut self, trace: &Trace) -> Result<Vec<Tick>> {
+        let gaps = trace.gaps();
+        let entries = trace.entries();
+        let mut out = Vec::with_capacity(entries.len());
+        let page_gran = self.page_granular();
+
+        for chunk_start in (0..entries.len()).step_by(self.batch) {
+            let live = (entries.len() - chunk_start).min(self.batch);
+            let mut idx = vec![0i32; self.batch];
+            let mut wr = vec![0i32; self.batch];
+            // Padding uses a huge gap so phantom requests never contend.
+            let mut gap = vec![1e9f64; self.batch];
+            for i in 0..live {
+                let e = &entries[chunk_start + i];
+                idx[i] = if page_gran {
+                    (e.offset / crate::mem::PAGE_BYTES) as i32
+                } else {
+                    (e.offset / crate::mem::LINE_BYTES) as i32
+                };
+                wr[i] = e.is_write as i32;
+                gap[i] = gaps[chunk_start + i] as f64;
+            }
+            out.extend(self.eval_batch(&idx, &wr, &gap, live)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_cover_all_kinds() {
+        let names: std::collections::HashSet<_> =
+            DeviceKind::ALL.iter().map(|k| artifact_name(*k)).collect();
+        assert_eq!(names.len(), 5);
+    }
+
+    #[test]
+    fn manifest_check_catches_drift() {
+        let cfg = SimConfig::default();
+        let mut m = HashMap::new();
+        for (k, v) in [
+            ("dram.n_banks", cfg.dram.n_banks as u64),
+            ("dram.t_cl", cfg.dram.t_cl),
+            ("dram.t_burst", cfg.dram.t_burst),
+            ("pmem.t_read", cfg.pmem.t_read),
+            ("pmem.t_write", cfg.pmem.t_write),
+            ("ssd.t_read", cfg.ssd.nand.t_read),
+            ("ssd.t_prog", cfg.ssd.nand.t_prog),
+            ("ssd.n_channels", cfg.ssd.nand.n_channels as u64),
+            ("cxl.t_link", 2 * cfg.cxl.t_proto),
+            (
+                "cxl.t_bus_rt",
+                cxl_link_overhead(&cfg) - 2 * cfg.cxl.t_proto,
+            ),
+            ("dcache.n_sets", cfg.dcache.n_frames() as u64),
+            ("dcache.t_access", cfg.dcache.t_access),
+        ] {
+            m.insert(k.to_string(), v.to_string());
+        }
+        assert!(check_manifest(&m, &cfg).is_ok());
+        m.insert("ssd.t_read".into(), "1".into());
+        assert!(check_manifest(&m, &cfg).is_err());
+        m.remove("ssd.t_read");
+        assert!(check_manifest(&m, &cfg).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Test utilities: deterministic PRNG + a miniature property-test harness.
+//!
+//! The offline build has no `proptest`/`rand`, so this module provides the
+//! two pieces the test suite needs: [`SplitMix64`] (a small, well-studied
+//! PRNG) and [`check`], a fixed-iteration property runner that reports the
+//! failing seed so any counterexample is reproducible with
+//! `SplitMix64::new(seed)`.
+
+/// SplitMix64 PRNG (Steele, Lea & Flood; the seeder used by xoshiro).
+/// Deterministic, passes BigCrush on 64-bit outputs, one u64 of state.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be nonzero.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Multiply-shift mapping (slight bias is irrelevant at simulation
+        // scales).
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniformly random element of `xs`.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Zipfian sampler over `[0, n)` with exponent `theta` (YCSB-style).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0 && theta < 1.0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Zipf {
+            n,
+            theta,
+            alpha,
+            zetan,
+            eta,
+        }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Exact for small n; integral approximation beyond (workload-gen
+        // accuracy, not research-grade).
+        let cutoff = n.min(10_000);
+        let mut sum = 0.0;
+        for i in 1..=cutoff {
+            sum += 1.0 / (i as f64).powf(theta);
+        }
+        if n > cutoff {
+            let a = cutoff as f64;
+            let b = n as f64;
+            sum += (b.powf(1.0 - theta) - a.powf(1.0 - theta)) / (1.0 - theta);
+        }
+        sum
+    }
+
+    /// Sample a rank in `[0, n)`; rank 0 is the hottest item.
+    pub fn sample(&self, rng: &mut SplitMix64) -> u64 {
+        let u = rng.f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let r = ((self.n as f64) * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        r.min(self.n - 1)
+    }
+}
+
+/// Run `prop` against `iters` random seeds; panics with the failing seed.
+pub fn check<F: Fn(&mut SplitMix64)>(name: &str, iters: u64, prop: F) {
+    for i in 0..iters {
+        let seed = 0x5EED_0000u64.wrapping_add(i.wrapping_mul(0x9E3779B9));
+        let mut rng = SplitMix64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at iteration {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_covers_interval() {
+        let mut r = SplitMix64::new(9);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let v = r.range(10, 14);
+            assert!((10..14).contains(&v));
+            seen_lo |= v == 10;
+            seen_hi |= v == 13;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let z = Zipf::new(1000, 0.99);
+        let mut r = SplitMix64::new(1);
+        let mut head = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            if z.sample(&mut r) < 10 {
+                head += 1;
+            }
+        }
+        assert!(head as f64 / n as f64 > 0.2, "head={head}");
+    }
+
+    #[test]
+    fn zipf_stays_in_range() {
+        let z = Zipf::new(37, 0.5);
+        let mut r = SplitMix64::new(2);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 37);
+        }
+    }
+
+    #[test]
+    fn check_runs_all_iterations() {
+        let counter = std::cell::Cell::new(0u64);
+        check("counts", 25, |_| {
+            counter.set(counter.get() + 1);
+        });
+        assert_eq!(counter.get(), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check("fails", 2, |_| {
+            panic!("boom");
+        });
+    }
+}

@@ -1,0 +1,341 @@
+//! System assembly: CPU caches + MemBus + Home-Agent-attached device.
+//!
+//! Mirrors the paper's Fig 2 access path: load/store → L1 → L2 → MemBus →
+//! (main DRAM | Bridge/Home Agent → CXL device). The device under test is
+//! mapped at [`DEVICE_BASE`]; everything below `main_mem_bytes` is host
+//! DRAM.
+
+use crate::config::SimConfig;
+use crate::cpu::cache::{CacheResult, HostCache};
+use crate::devices::{build_device, DeviceKind, MemoryDevice};
+use crate::dram::Dram;
+use crate::mem::{line_base, lines_covering, AddrRange, Bus, BusConfig, LINE_BYTES};
+use crate::sim::Tick;
+use crate::stats::Histogram;
+
+/// Base host-physical address of the extension-device window.
+pub const DEVICE_BASE: u64 = 1 << 40;
+
+/// Aggregated memory-system counters for one run.
+#[derive(Debug, Default, Clone)]
+pub struct SystemStats {
+    pub loads: u64,
+    pub stores: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub device_reads: u64,
+    pub device_writes: u64,
+    pub main_mem_accesses: u64,
+    /// Latency distribution of device-window line fills (reads).
+    pub device_latency: Histogram,
+}
+
+/// The assembled memory system.
+pub struct System {
+    l1: HostCache,
+    l2: HostCache,
+    membus: Bus,
+    main_mem: Dram,
+    device: Box<dyn MemoryDevice>,
+    device_range: AddrRange,
+    t_l1: Tick,
+    t_l2: Tick,
+    stats: SystemStats,
+    /// When enabled, device-window accesses are recorded for replay.
+    trace: Option<Vec<crate::trace::TraceEntry>>,
+}
+
+impl System {
+    pub fn new(kind: DeviceKind, cfg: &SimConfig) -> Self {
+        System {
+            l1: HostCache::new(cfg.cpu.l1_bytes, cfg.cpu.l1_ways),
+            l2: HostCache::new(cfg.cpu.l2_bytes, cfg.cpu.l2_ways),
+            membus: Bus::new(BusConfig::membus()),
+            main_mem: Dram::new(cfg.dram),
+            device: build_device(kind, cfg),
+            device_range: AddrRange::new(DEVICE_BASE, cfg.device_bytes),
+            t_l1: cfg.cpu.t_l1,
+            t_l2: cfg.cpu.t_l2,
+            stats: SystemStats::default(),
+            trace: None,
+        }
+    }
+
+    /// Start recording device-window accesses.
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    /// Stop recording and hand back the captured trace.
+    pub fn take_trace(&mut self) -> crate::trace::Trace {
+        crate::trace::Trace::new(self.trace.take().unwrap_or_default())
+    }
+
+    pub fn device_kind(&self) -> DeviceKind {
+        self.device.kind()
+    }
+
+    pub fn device_range(&self) -> AddrRange {
+        self.device_range
+    }
+
+    /// Address of byte `offset` within the device window.
+    pub fn device_addr(&self, offset: u64) -> u64 {
+        debug_assert!(offset < self.device_range.size());
+        DEVICE_BASE + offset
+    }
+
+    /// Access `[addr, addr+size)` at `now`; returns total latency
+    /// (line-sequential, as a single in-order core experiences it).
+    pub fn access(&mut self, now: Tick, addr: u64, size: u32, is_write: bool) -> Tick {
+        let mut t = now;
+        let n = lines_covering(addr, size as u64).max(1);
+        let mut a = line_base(addr);
+        for _ in 0..n {
+            t += self.access_line(t, a, is_write);
+            a += LINE_BYTES;
+        }
+        t - now
+    }
+
+    /// One 64B access through the cache hierarchy.
+    pub fn access_line(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        if is_write {
+            self.stats.stores += 1;
+        } else {
+            self.stats.loads += 1;
+        }
+
+        // L1.
+        match self.l1.access(addr, is_write) {
+            CacheResult::Hit => {
+                self.stats.l1_hits += 1;
+                return self.t_l1;
+            }
+            CacheResult::Miss { writeback } => {
+                if let Some(wb) = writeback {
+                    // L1 victim drains into L2 (no host-visible latency).
+                    if let CacheResult::Miss {
+                        writeback: Some(wb2),
+                    } = self.l2.access(wb, true)
+                    {
+                        self.backing_write(now, wb2);
+                    }
+                }
+            }
+        }
+
+        // L2.
+        let mut lat = self.t_l1 + self.t_l2;
+        match self.l2.access(addr, false) {
+            CacheResult::Hit => {
+                self.stats.l2_hits += 1;
+                return lat;
+            }
+            CacheResult::Miss { writeback } => {
+                if let Some(wb) = writeback {
+                    self.backing_write(now + lat, wb);
+                }
+            }
+        }
+
+        // Backing store fill (the fill itself is the critical path).
+        lat += self.backing_read(now + lat, addr);
+        lat
+    }
+
+    /// Read the line at `addr` from its backing store (critical path).
+    fn backing_read(&mut self, now: Tick, addr: u64) -> Tick {
+        let bus_done = self.membus.send(now, LINE_BYTES);
+        let bus_lat = bus_done - now;
+        if self.device_range.contains(addr) {
+            self.stats.device_reads += 1;
+            let offset = self.device_range.offset(addr);
+            if let Some(t) = self.trace.as_mut() {
+                t.push(crate::trace::TraceEntry::new(bus_done, offset, false));
+            }
+            let lat = self.device.access(bus_done, offset, false);
+            self.stats.device_latency.record(bus_lat + lat);
+            bus_lat + lat
+        } else {
+            self.stats.main_mem_accesses += 1;
+            let line = addr / LINE_BYTES;
+            bus_lat + self.main_mem.access(bus_done, line, false)
+        }
+    }
+
+    /// Write back a dirty line (posted; latency not on the critical path,
+    /// but it occupies the bus and the target device). Returns the tick
+    /// at which the write completes at the backing store.
+    fn backing_write(&mut self, now: Tick, addr: u64) -> Tick {
+        let bus_done = self.membus.send(now, LINE_BYTES);
+        if self.device_range.contains(addr) {
+            self.stats.device_writes += 1;
+            let offset = self.device_range.offset(addr);
+            if let Some(t) = self.trace.as_mut() {
+                t.push(crate::trace::TraceEntry::new(bus_done, offset, true));
+            }
+            bus_done + self.device.access(bus_done, offset, true)
+        } else {
+            self.stats.main_mem_accesses += 1;
+            let line = addr / LINE_BYTES;
+            bus_done + self.main_mem.access(bus_done, line, true)
+        }
+    }
+
+    /// Non-temporal (streaming) store of one line: bypasses L1/L2 with no
+    /// write-allocate fill, writing straight to the backing store. Any
+    /// stale cached copy is invalidated (x86 ntstore semantics). Returns
+    /// the completion tick.
+    pub fn store_line_nt(&mut self, now: Tick, addr: u64) -> Tick {
+        self.stats.stores += 1;
+        self.l1.invalidate(addr);
+        self.l2.invalidate(addr);
+        self.backing_write(now, addr)
+    }
+
+    /// End-of-run drain: flush dirty device-window lines from L1/L2 and
+    /// the device's own buffers.
+    pub fn drain(&mut self, now: Tick) {
+        // Host caches are functional; flushing every line would require a
+        // tag walk — we only drain the device's internal state, which is
+        // what affects device-side statistics.
+        self.device.flush(now);
+    }
+
+    pub fn stats(&self) -> &SystemStats {
+        &self.stats
+    }
+
+    pub fn device_stats_kv(&self) -> Vec<(String, f64)> {
+        self.device.stats_kv()
+    }
+
+    /// Flush (clwb-style) the line containing `addr`: clean it out of
+    /// L1/L2 and, if dirty, write it back synchronously — the persistence
+    /// primitive Viper issues after every KV write. Returns the latency
+    /// until the write is acknowledged by the backing store (0 for a
+    /// clean/absent line).
+    pub fn flush_line(&mut self, now: Tick, addr: u64) -> Tick {
+        let d1 = self.l1.invalidate(addr);
+        let d2 = self.l2.invalidate(addr);
+        if d1.or(d2).is_none() {
+            return 0;
+        }
+        let line = line_base(addr);
+        let bus_done = self.membus.send(now, LINE_BYTES);
+        if self.device_range.contains(line) {
+            self.stats.device_writes += 1;
+            let offset = self.device_range.offset(line);
+            if let Some(t) = self.trace.as_mut() {
+                t.push(crate::trace::TraceEntry::new(bus_done, offset, true));
+            }
+            let lat = self.device.access(bus_done, offset, true);
+            bus_done - now + lat
+        } else {
+            self.stats.main_mem_accesses += 1;
+            let lat = self.main_mem.access(bus_done, line / LINE_BYTES, true);
+            bus_done - now + lat
+        }
+    }
+
+    /// Bypass the host cache hierarchy (uncached access, used by the
+    /// latency microbenchmark's uncacheable mode and the fast-mode
+    /// functional filter).
+    pub fn access_line_uncached(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        if is_write {
+            self.stats.stores += 1;
+        } else {
+            self.stats.loads += 1;
+        }
+        self.backing_read_or_write(now, addr, is_write)
+    }
+
+    fn backing_read_or_write(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        if is_write {
+            self.backing_write(now, addr);
+            // Posted write: latency to the core is just the bus hop.
+            self.t_l1
+        } else {
+            self.backing_read(now, addr)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn sys(kind: DeviceKind) -> System {
+        System::new(kind, &presets::small_test())
+    }
+
+    #[test]
+    fn l1_hit_is_fast() {
+        let mut s = sys(DeviceKind::Dram);
+        let a = s.device_addr(0);
+        s.access_line(0, a, false); // fill
+        let lat = s.access_line(1_000_000, a, false);
+        assert_eq!(lat, s.t_l1);
+        assert_eq!(s.stats().l1_hits, 1);
+    }
+
+    #[test]
+    fn miss_goes_to_device() {
+        let mut s = sys(DeviceKind::Pmem);
+        let lat = s.access_line(0, s.device_addr(0), false);
+        // 1ns L1 + 25ns L2 + bus + 150ns PMEM read
+        assert!(lat > 150_000);
+        assert_eq!(s.stats().device_reads, 1);
+    }
+
+    #[test]
+    fn low_addresses_hit_main_memory() {
+        let mut s = sys(DeviceKind::Pmem);
+        s.access_line(0, 0x1000, false);
+        assert_eq!(s.stats().main_mem_accesses, 1);
+        assert_eq!(s.stats().device_reads, 0);
+    }
+
+    #[test]
+    fn multi_line_access_walks_lines() {
+        let mut s = sys(DeviceKind::Dram);
+        let lat = s.access(0, s.device_addr(0), 256, false);
+        // 4 lines: all miss.
+        assert_eq!(s.stats().loads, 4);
+        assert!(lat > 4 * s.t_l1);
+    }
+
+    #[test]
+    fn dirty_l2_eviction_writes_to_device() {
+        let mut s = sys(DeviceKind::Dram);
+        // Write a device line, then stream enough distinct lines through
+        // to force it out of both L1 and L2.
+        s.access_line(0, s.device_addr(0), true);
+        let mut now = 0;
+        // L2 is 512KB; stream 2MB of conflicting lines.
+        for i in 0..(2 << 20) / 64u64 {
+            now += s.access_line(now, s.device_addr((i + 1) * 64), false);
+        }
+        assert!(s.stats().device_writes >= 1, "dirty line never drained");
+    }
+
+    #[test]
+    fn device_latency_histogram_populates() {
+        let mut s = sys(DeviceKind::CxlDram);
+        s.access_line(0, s.device_addr(0), false);
+        assert_eq!(s.stats().device_latency.count(), 1);
+        // CXL-DRAM fill: protocol (50ns) + DRAM (~45ns) + buses
+        let mean = s.stats().device_latency.mean_ns();
+        assert!(mean > 90.0, "mean={mean}");
+    }
+
+    #[test]
+    fn uncached_write_is_posted() {
+        let mut s = sys(DeviceKind::Pmem);
+        let lat = s.access_line_uncached(0, s.device_addr(0), true);
+        assert_eq!(lat, s.t_l1);
+        assert_eq!(s.stats().device_writes, 1);
+    }
+}

@@ -1,0 +1,195 @@
+//! Device-access traces: capture, text serialization, replay.
+//!
+//! The conclusion of the paper contrasts CXL-SSD-Sim's full-system mode
+//! with trace-based simulators (MQSim); this module provides the
+//! trace-driven mode: a detailed run captures the post-cache device
+//! request stream, which can then be replayed against any device model —
+//! including the AOT surrogate in fast mode ([`crate::coordinator`]).
+//!
+//! Text format (one access per line, `#` comments):
+//! ```text
+//! # cxl-ssd-sim trace v1
+//! <tick> <byte_offset> R|W
+//! ```
+
+use std::io::{BufRead, BufWriter, Write};
+
+use crate::sim::Tick;
+
+/// One device-window access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEntry {
+    pub tick: Tick,
+    /// Device-relative byte offset.
+    pub offset: u64,
+    pub is_write: bool,
+}
+
+impl TraceEntry {
+    pub fn new(tick: Tick, offset: u64, is_write: bool) -> Self {
+        TraceEntry {
+            tick,
+            offset,
+            is_write,
+        }
+    }
+}
+
+/// An ordered device-access trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    pub fn new(entries: Vec<TraceEntry>) -> Self {
+        Trace { entries }
+    }
+
+    pub fn entries(&self) -> &[TraceEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Inter-arrival gaps in ticks (first entry's gap is its tick).
+    pub fn gaps(&self) -> Vec<Tick> {
+        let mut prev = 0;
+        self.entries
+            .iter()
+            .map(|e| {
+                let g = e.tick.saturating_sub(prev);
+                prev = e.tick;
+                g
+            })
+            .collect()
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "# cxl-ssd-sim trace v1")?;
+        writeln!(w, "# entries: {}", self.entries.len())?;
+        for e in &self.entries {
+            writeln!(
+                w,
+                "{} {} {}",
+                e.tick,
+                e.offset,
+                if e.is_write { "W" } else { "R" }
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let mut entries = Vec::new();
+        for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let parse = |s: Option<&str>| -> anyhow::Result<u64> {
+                Ok(s.ok_or_else(|| anyhow::anyhow!("trace line {}: too few fields", lineno + 1))?
+                    .parse::<u64>()?)
+            };
+            let tick = parse(parts.next())?;
+            let offset = parse(parts.next())?;
+            let rw = parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("trace line {}: missing R/W", lineno + 1))?;
+            let is_write = match rw {
+                "R" | "r" => false,
+                "W" | "w" => true,
+                other => anyhow::bail!("trace line {}: bad op '{}'", lineno + 1, other),
+            };
+            entries.push(TraceEntry::new(tick, offset, is_write));
+        }
+        Ok(Trace { entries })
+    }
+
+    /// Replay against a device model; returns per-access latencies.
+    pub fn replay(&self, device: &mut dyn crate::devices::MemoryDevice) -> Vec<Tick> {
+        self.entries
+            .iter()
+            .map(|e| device.access(e.tick, e.offset, e.is_write))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::devices::{build_device, DeviceKind};
+
+    fn sample() -> Trace {
+        Trace::new(vec![
+            TraceEntry::new(0, 0, false),
+            TraceEntry::new(1_000, 64, true),
+            TraceEntry::new(5_000, 4096, false),
+        ])
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = sample();
+        let path = "/tmp/cxl_ssd_sim_trace_test.txt";
+        t.save(path).unwrap();
+        let back = Trace::load(path).unwrap();
+        assert_eq!(back.entries(), t.entries());
+    }
+
+    #[test]
+    fn gaps_are_deltas() {
+        let t = sample();
+        assert_eq!(t.gaps(), vec![0, 1_000, 4_000]);
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        std::fs::write("/tmp/bad_trace.txt", "1 2 X\n").unwrap();
+        assert!(Trace::load("/tmp/bad_trace.txt").is_err());
+        std::fs::write("/tmp/bad_trace2.txt", "1\n").unwrap();
+        assert!(Trace::load("/tmp/bad_trace2.txt").is_err());
+    }
+
+    #[test]
+    fn replay_produces_latencies() {
+        let t = sample();
+        let mut dev = build_device(DeviceKind::Pmem, &presets::small_test());
+        let lats = t.replay(dev.as_mut());
+        assert_eq!(lats.len(), 3);
+        assert!(lats.iter().all(|&l| l > 0));
+    }
+
+    #[test]
+    fn capture_from_system() {
+        use crate::cpu::Core;
+        use crate::topology::System;
+        let cfg = presets::small_test();
+        let mut sys = System::new(DeviceKind::Pmem, &cfg);
+        let mut core = Core::new(cfg.cpu);
+        sys.enable_trace();
+        for i in 0..10u64 {
+            let addr = sys.device_addr(i * 4096);
+            core.load(&mut sys, addr, 64);
+        }
+        let trace = sys.take_trace();
+        assert_eq!(trace.len(), 10);
+        // Entries are in time order.
+        let ticks: Vec<_> = trace.entries().iter().map(|e| e.tick).collect();
+        let mut sorted = ticks.clone();
+        sorted.sort_unstable();
+        assert_eq!(ticks, sorted);
+    }
+}

@@ -1,0 +1,138 @@
+//! membench — memory latency microbenchmark (the paper's Fig 4 workload).
+//!
+//! Issues dependent 64B loads over a configurable footprint: random
+//! (defeats caches and prefetch, measuring device latency) or sequential
+//! (exposes row-buffer / page locality). The paper uses random read.
+
+use crate::cpu::Core;
+use crate::mem::LINE_BYTES;
+use crate::testing::SplitMix64;
+use crate::topology::System;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembenchMode {
+    RandomRead,
+    SequentialRead,
+    RandomWrite,
+}
+
+#[derive(Debug, Clone)]
+pub struct MembenchResult {
+    pub mode: MembenchMode,
+    pub ops: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+/// Latency microbenchmark.
+pub struct Membench {
+    pub mode: MembenchMode,
+    /// Footprint in bytes (must exceed L2 to measure the device).
+    pub footprint: u64,
+    pub ops: u64,
+    pub seed: u64,
+    /// Touch every page once (unmeasured) before measuring: the paper's
+    /// latency figure reports steady-state access to hot data, with the
+    /// DRAM cache layer already warm.
+    pub warmup: bool,
+}
+
+impl Default for Membench {
+    fn default() -> Self {
+        Membench {
+            mode: MembenchMode::RandomRead,
+            footprint: 8 << 20,
+            ops: 20_000,
+            seed: 0xBEEF,
+            warmup: true,
+        }
+    }
+}
+
+impl Membench {
+    pub fn run(&self, core: &mut Core, sys: &mut System) -> MembenchResult {
+        let lines = (self.footprint.min(sys.device_range().size()) / LINE_BYTES).max(1);
+        let mut rng = SplitMix64::new(self.seed);
+
+        if self.warmup {
+            // One access per 4KB page fills the device-side cache without
+            // polluting the measurement.
+            let lines_per_page = crate::mem::PAGE_BYTES / LINE_BYTES;
+            for page in 0..(lines / lines_per_page).max(1) {
+                let addr = sys.device_addr(page * crate::mem::PAGE_BYTES);
+                core.load(sys, addr, LINE_BYTES as u32);
+            }
+        }
+
+        let mut h = crate::stats::Histogram::new();
+        let mut measured = 0u64;
+        for i in 0..self.ops {
+            let line = match self.mode {
+                MembenchMode::RandomRead | MembenchMode::RandomWrite => rng.below(lines),
+                MembenchMode::SequentialRead => i % lines,
+            };
+            let addr = sys.device_addr(line * LINE_BYTES);
+            match self.mode {
+                MembenchMode::RandomWrite => core.store(sys, addr, LINE_BYTES as u32),
+                _ => {
+                    let lat = core.load(sys, addr, LINE_BYTES as u32);
+                    h.record(lat);
+                }
+            }
+            measured += 1;
+        }
+        core.fence();
+
+        MembenchResult {
+            mode: self.mode,
+            ops: measured,
+            mean_ns: h.mean_ns(),
+            p50_ns: h.percentile_ns(50.0),
+            p99_ns: h.percentile_ns(99.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::devices::DeviceKind;
+
+    fn run_on(kind: DeviceKind, mode: MembenchMode) -> MembenchResult {
+        let cfg = presets::small_test();
+        let mut sys = System::new(kind, &cfg);
+        let mut core = Core::new(cfg.cpu);
+        Membench {
+            mode,
+            footprint: 16 << 20,
+            ops: 2_000,
+            seed: 7,
+            warmup: true,
+        }
+        .run(&mut core, &mut sys)
+    }
+
+    #[test]
+    fn random_read_sees_device_latency() {
+        let dram = run_on(DeviceKind::Dram, MembenchMode::RandomRead);
+        let pmem = run_on(DeviceKind::Pmem, MembenchMode::RandomRead);
+        assert!(pmem.mean_ns > dram.mean_ns);
+        assert!(pmem.mean_ns > 100.0, "pmem mean {}", pmem.mean_ns);
+    }
+
+    #[test]
+    fn sequential_is_faster_than_random_on_dram() {
+        let seq = run_on(DeviceKind::Dram, MembenchMode::SequentialRead);
+        let rnd = run_on(DeviceKind::Dram, MembenchMode::RandomRead);
+        assert!(seq.mean_ns <= rnd.mean_ns * 1.05);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = run_on(DeviceKind::CxlDram, MembenchMode::RandomRead);
+        assert!(r.p50_ns <= r.p99_ns);
+        assert!(r.ops >= 2_000);
+    }
+}

@@ -1,0 +1,61 @@
+//! Workload generators reproducing the paper's §III benchmarks:
+//! [`stream`] (Fig 3 bandwidth), [`membench`] (Fig 4 latency) and
+//! [`viper`] (Figs 5–6 key-value QPS).
+
+pub mod membench;
+pub mod stream;
+pub mod viper;
+
+pub use membench::{Membench, MembenchMode, MembenchResult};
+pub use stream::{Stream, StreamResult};
+pub use viper::{Viper, ViperOp, ViperResult};
+
+/// Workload selector for the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    Stream,
+    Membench,
+    Viper216,
+    Viper532,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 4] = [
+        WorkloadKind::Stream,
+        WorkloadKind::Membench,
+        WorkloadKind::Viper216,
+        WorkloadKind::Viper532,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "stream" => Some(WorkloadKind::Stream),
+            "membench" => Some(WorkloadKind::Membench),
+            "viper216" | "viper-216" => Some(WorkloadKind::Viper216),
+            "viper532" | "viper-532" => Some(WorkloadKind::Viper532),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::Stream => "stream",
+            WorkloadKind::Membench => "membench",
+            WorkloadKind::Viper216 => "viper216",
+            WorkloadKind::Viper532 => "viper532",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in WorkloadKind::ALL {
+            assert_eq!(WorkloadKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(WorkloadKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,146 @@
+//! STREAM bandwidth benchmark (McCalpin) — the paper's Fig 3 workload.
+//!
+//! Four kernels over three arrays resident in the device window:
+//! `copy: c = a`, `scale: b = s*c`, `add: c = a + b`, `triad: a = b + s*c`.
+//! The paper uses an 8MB dataset. Bandwidth counts the STREAM-standard
+//! bytes (2 per element for copy/scale, 3 for add/triad).
+
+use crate::cpu::Core;
+use crate::mem::LINE_BYTES;
+use crate::sim::to_sec;
+use crate::topology::System;
+
+/// One kernel's measured bandwidth.
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    pub kernel: &'static str,
+    pub bytes: u64,
+    pub mbs: f64,
+}
+
+/// STREAM driver.
+pub struct Stream {
+    /// Total dataset size; the three arrays split it (paper: "an 8MB
+    /// dataset"), so the whole working set fits the 16MB DRAM cache.
+    pub dataset_bytes: u64,
+    /// Repetitions per kernel; the best pass is reported (STREAM's
+    /// best-of-N convention, measuring steady state rather than cold
+    /// fills).
+    pub repeats: u32,
+}
+
+impl Default for Stream {
+    fn default() -> Self {
+        Stream {
+            dataset_bytes: 8 << 20,
+            repeats: 2,
+        }
+    }
+}
+
+impl Stream {
+    /// Bytes per array.
+    pub fn array_bytes(&self) -> u64 {
+        // Page-align so arrays do not share 4KB cache frames.
+        (self.dataset_bytes / 3) & !(crate::mem::PAGE_BYTES - 1)
+    }
+
+    /// Run all four kernels; returns per-kernel (best-of-N) bandwidth.
+    pub fn run(&self, core: &mut Core, sys: &mut System) -> Vec<StreamResult> {
+        let array = self.array_bytes();
+        let n_lines = array / LINE_BYTES;
+        let a = 0u64;
+        let b = array;
+        let c = 2 * array;
+        assert!(3 * array <= sys.device_range().size());
+
+        let mut results = Vec::new();
+        let kernels: [(&'static str, Vec<u64>, Vec<u64>); 4] = [
+            ("copy", vec![a], vec![c]),
+            ("scale", vec![c], vec![b]),
+            ("add", vec![a, b], vec![c]),
+            ("triad", vec![b, c], vec![a]),
+        ];
+
+        for (name, reads, writes) in kernels {
+            let mut best_mbs = 0.0f64;
+            let bytes = n_lines * LINE_BYTES * (reads.len() + writes.len()) as u64;
+            for _ in 0..self.repeats.max(1) {
+                core.fence();
+                let start = core.now();
+                for i in 0..n_lines {
+                    let off = i * LINE_BYTES;
+                    for base in &reads {
+                        let addr = sys.device_addr(base + off);
+                        core.load(sys, addr, LINE_BYTES as u32);
+                    }
+                    for base in &writes {
+                        let addr = sys.device_addr(base + off);
+                        core.store(sys, addr, LINE_BYTES as u32);
+                    }
+                }
+                core.fence();
+                let elapsed = core.now() - start;
+                best_mbs = best_mbs.max(bytes as f64 / 1e6 / to_sec(elapsed));
+            }
+            results.push(StreamResult {
+                kernel: name,
+                bytes,
+                mbs: best_mbs,
+            });
+        }
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::devices::DeviceKind;
+
+    fn run_on(kind: DeviceKind, dataset_bytes: u64) -> Vec<StreamResult> {
+        let cfg = presets::small_test();
+        let mut sys = System::new(kind, &cfg);
+        let mut core = Core::new(cfg.cpu);
+        Stream {
+            dataset_bytes,
+            repeats: 2,
+        }
+        .run(&mut core, &mut sys)
+    }
+
+    #[test]
+    fn four_kernels_reported() {
+        let r = run_on(DeviceKind::Dram, 64 << 10);
+        assert_eq!(r.len(), 4);
+        let names: Vec<_> = r.iter().map(|x| x.kernel).collect();
+        assert_eq!(names, ["copy", "scale", "add", "triad"]);
+        for x in &r {
+            assert!(x.mbs > 0.0);
+        }
+    }
+
+    #[test]
+    fn add_moves_more_bytes_than_copy() {
+        let r = run_on(DeviceKind::Dram, 64 << 10);
+        assert_eq!(r[2].bytes, r[0].bytes * 3 / 2);
+    }
+
+    #[test]
+    fn dram_beats_pmem_on_bandwidth() {
+        // Dataset must exceed the host L2 (512KB) or both devices serve
+        // everything from the CPU caches and tie.
+        let d = run_on(DeviceKind::Dram, 4 << 20);
+        let p = run_on(DeviceKind::Pmem, 4 << 20);
+        for (dk, pk) in d.iter().zip(p.iter()) {
+            assert!(
+                dk.mbs > pk.mbs,
+                "{}: dram {} <= pmem {}",
+                dk.kernel,
+                dk.mbs,
+                pk.mbs
+            );
+        }
+    }
+}

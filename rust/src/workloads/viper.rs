@@ -1,0 +1,400 @@
+//! Viper-style key-value store workload (the paper's Figs 5–6).
+//!
+//! Models Viper (Benson, Makait & Rabl, VLDB'21): a hybrid KV store with
+//! a **volatile hash index in host DRAM** and **records in fixed-size 4KB
+//! pages on the persistent device**, each page carrying a 64B header
+//! (lock + slot bitset) that every operation touches — the repeated
+//! metadata access whose temporal locality the paper credits for the DRAM
+//! cache hit rate (§III-C).
+//!
+//! Record sizes follow the paper: 216B and 532B key-value pairs; each
+//! phase performs `ops_per_phase` operations (paper: 10,000) of one type:
+//! write (bulk load), insert, get (query), update (copy-on-write append,
+//! as Viper does) and delete (metadata-only tombstone). Every mutation
+//! ends with clwb + sfence on the written lines ([`Core::persist`]) —
+//! Viper is a *persistent* store, and this durability traffic is what
+//! differentiates the devices in the paper''s Figs 5-6.
+
+use crate::cpu::Core;
+use crate::mem::{LINE_BYTES, PAGE_BYTES};
+use crate::sim::to_sec;
+use crate::testing::{SplitMix64, Zipf};
+use crate::topology::System;
+
+/// Page header size (lock word + slot bitset + stats), one cache line.
+const HEADER_BYTES: u64 = 64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViperOp {
+    Write,
+    Insert,
+    Get,
+    Update,
+    Delete,
+}
+
+impl ViperOp {
+    pub const ALL: [ViperOp; 5] = [
+        ViperOp::Write,
+        ViperOp::Insert,
+        ViperOp::Get,
+        ViperOp::Update,
+        ViperOp::Delete,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ViperOp::Write => "write",
+            ViperOp::Insert => "insert",
+            ViperOp::Get => "get",
+            ViperOp::Update => "update",
+            ViperOp::Delete => "delete",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ViperResult {
+    pub op: ViperOp,
+    pub ops: u64,
+    pub qps: f64,
+}
+
+/// Location of a record on the device.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    page: u64,
+    slot: u32,
+}
+
+/// The Viper workload driver + its functional store state.
+pub struct Viper {
+    /// Key+value record size (paper: 216B or 532B).
+    pub record_bytes: u64,
+    /// Keys bulk-loaded in the write phase.
+    pub prefill: u64,
+    /// Operations per measured phase (paper: 10,000).
+    pub ops_per_phase: u64,
+    /// Zipf skew for get/update key selection.
+    pub zipf_theta: f64,
+    /// Non-memory work per KV operation (hashing, slot search, branch
+    /// logic — Viper ops are ~µs-scale even on DRAM).
+    pub t_op_work: crate::sim::Tick,
+    pub seed: u64,
+}
+
+impl Viper {
+    pub fn new_216() -> Self {
+        Viper {
+            record_bytes: 216,
+            prefill: 24_000,
+            ops_per_phase: 10_000,
+            zipf_theta: 0.9,
+            t_op_work: 300_000, // 300ns of hashing + bookkeeping per op
+            seed: 0x71FE2,
+        }
+    }
+
+    pub fn new_532() -> Self {
+        Viper {
+            record_bytes: 532,
+            ..Self::new_216()
+        }
+    }
+
+    fn slots_per_page(&self) -> u32 {
+        ((PAGE_BYTES - HEADER_BYTES) / self.record_bytes) as u32
+    }
+
+    /// Run all five phases; returns per-phase QPS.
+    pub fn run(&self, core: &mut Core, sys: &mut System) -> Vec<ViperResult> {
+        let mut st = Store::new(self, sys);
+        let mut rng = SplitMix64::new(self.seed);
+        let mut results = Vec::new();
+
+        // ---- write: bulk load `prefill` records.
+        let t0 = core.now();
+        for _ in 0..self.prefill {
+            st.insert(core, sys);
+        }
+        core.fence();
+        results.push(phase(ViperOp::Write, self.prefill, core.now() - t0));
+
+        // ---- insert: fresh keys.
+        let t0 = core.now();
+        for _ in 0..self.ops_per_phase {
+            st.insert(core, sys);
+        }
+        core.fence();
+        results.push(phase(ViperOp::Insert, self.ops_per_phase, core.now() - t0));
+
+        // ---- get: zipf-hot reads.
+        let zipf = Zipf::new(st.alive.len() as u64, self.zipf_theta);
+        let t0 = core.now();
+        for _ in 0..self.ops_per_phase {
+            let k = st.alive[zipf.sample(&mut rng) as usize % st.alive.len()];
+            st.get(core, sys, k);
+        }
+        core.fence();
+        results.push(phase(ViperOp::Get, self.ops_per_phase, core.now() - t0));
+
+        // ---- update: copy-on-write append (Viper semantics).
+        let t0 = core.now();
+        for _ in 0..self.ops_per_phase {
+            let k = st.alive[zipf.sample(&mut rng) as usize % st.alive.len()];
+            st.update(core, sys, k);
+        }
+        core.fence();
+        results.push(phase(ViperOp::Update, self.ops_per_phase, core.now() - t0));
+
+        // ---- delete: tombstone (metadata-only).
+        let t0 = core.now();
+        for _ in 0..self.ops_per_phase {
+            if st.alive.is_empty() {
+                break;
+            }
+            let idx = rng.below(st.alive.len() as u64) as usize;
+            st.delete(core, sys, idx);
+        }
+        core.fence();
+        results.push(phase(ViperOp::Delete, self.ops_per_phase, core.now() - t0));
+
+        sys.drain(core.now());
+        results
+    }
+}
+
+fn phase(op: ViperOp, ops: u64, ticks: crate::sim::Tick) -> ViperResult {
+    ViperResult {
+        op,
+        ops,
+        qps: ops as f64 / to_sec(ticks),
+    }
+}
+
+/// Functional store state + access generation.
+struct Store {
+    record_bytes: u64,
+    t_op_work: crate::sim::Tick,
+    slots_per_page: u32,
+    /// key -> slot (dense key ids; None = deleted).
+    locations: Vec<Option<Slot>>,
+    /// Keys currently present (for sampling).
+    alive: Vec<u64>,
+    /// Reusable freed slots (Viper free lists).
+    free: Vec<Slot>,
+    /// Append frontier.
+    next_page: u64,
+    next_slot: u32,
+    max_pages: u64,
+    /// Host-DRAM index region size (hash table).
+    index_bytes: u64,
+}
+
+impl Store {
+    fn new(v: &Viper, sys: &System) -> Self {
+        Store {
+            record_bytes: v.record_bytes,
+            t_op_work: v.t_op_work,
+            slots_per_page: v.slots_per_page(),
+            locations: Vec::new(),
+            alive: Vec::new(),
+            free: Vec::new(),
+            next_page: 0,
+            next_slot: 0,
+            max_pages: sys.device_range().size() / PAGE_BYTES,
+            index_bytes: 64 << 20,
+        }
+    }
+
+    /// Hash-index access in host DRAM: bucket load (+ store on mutation).
+    fn index_access(&self, core: &mut Core, sys: &mut System, key: u64, mutate: bool) {
+        let h = key
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .rotate_left(31);
+        let bucket = (h % (self.index_bytes / LINE_BYTES)) * LINE_BYTES;
+        core.load(sys, bucket, LINE_BYTES as u32);
+        if mutate {
+            core.store(sys, bucket, LINE_BYTES as u32);
+        }
+    }
+
+    fn alloc(&mut self) -> Slot {
+        if let Some(s) = self.free.pop() {
+            return s;
+        }
+        if self.next_slot == self.slots_per_page {
+            self.next_page += 1;
+            self.next_slot = 0;
+            assert!(
+                self.next_page < self.max_pages,
+                "device full: grow device_bytes or shrink workload"
+            );
+        }
+        let s = Slot {
+            page: self.next_page,
+            slot: self.next_slot,
+        };
+        self.next_slot += 1;
+        s
+    }
+
+    fn header_addr(&self, sys: &System, page: u64) -> u64 {
+        sys.device_addr(page * PAGE_BYTES)
+    }
+
+    fn value_addr(&self, sys: &System, s: Slot) -> u64 {
+        sys.device_addr(s.page * PAGE_BYTES + HEADER_BYTES + s.slot as u64 * self.record_bytes)
+    }
+
+    /// Touch the record's lines (value payload). Writes use streaming
+    /// (non-temporal) stores, as Viper does for record payloads.
+    fn touch_value(&self, core: &mut Core, sys: &mut System, s: Slot, write: bool) {
+        let addr = self.value_addr(sys, s);
+        if write {
+            core.store_nt(sys, addr, self.record_bytes as u32);
+        } else {
+            core.load(sys, addr, self.record_bytes as u32);
+        }
+    }
+
+    fn insert(&mut self, core: &mut Core, sys: &mut System) {
+        core.compute(self.t_op_work);
+        let key = self.locations.len() as u64;
+        self.index_access(core, sys, key, true);
+        let s = self.alloc();
+        // Page header: lock + bitset read-modify-write.
+        let h = self.header_addr(sys, s.page);
+        core.load(sys, h, LINE_BYTES as u32);
+        self.touch_value(core, sys, s, true);
+        core.store(sys, h, LINE_BYTES as u32);
+        // Durability: the nt-stored value persists at the sfence inside
+        // persist(); only the header needs an explicit clwb.
+        core.persist(sys, h, LINE_BYTES as u32);
+        self.locations.push(Some(s));
+        self.alive.push(key);
+    }
+
+    fn get(&self, core: &mut Core, sys: &mut System, key: u64) {
+        core.compute(self.t_op_work);
+        self.index_access(core, sys, key, false);
+        if let Some(s) = self.locations[key as usize] {
+            let h = self.header_addr(sys, s.page);
+            core.load(sys, h, LINE_BYTES as u32);
+            self.touch_value(core, sys, s, false);
+        }
+    }
+
+    fn update(&mut self, core: &mut Core, sys: &mut System, key: u64) {
+        core.compute(self.t_op_work);
+        self.index_access(core, sys, key, true);
+        let Some(old) = self.locations[key as usize] else {
+            return;
+        };
+        // Viper updates are copy-on-write: read old record, append new
+        // version, flip both page headers, free the old slot.
+        let old_h = self.header_addr(sys, old.page);
+        core.load(sys, old_h, LINE_BYTES as u32);
+        self.touch_value(core, sys, old, false);
+        let new = self.alloc();
+        let new_h = self.header_addr(sys, new.page);
+        core.load(sys, new_h, LINE_BYTES as u32);
+        self.touch_value(core, sys, new, true);
+        core.store(sys, new_h, LINE_BYTES as u32);
+        core.store(sys, old_h, LINE_BYTES as u32);
+        // Durability: the nt-stored record persists at the sfence; both
+        // headers need clwb (copy-on-write commit protocol).
+        core.persist(sys, new_h, LINE_BYTES as u32);
+        core.persist(sys, old_h, LINE_BYTES as u32);
+        self.locations[key as usize] = Some(new);
+        self.free.push(old);
+    }
+
+    fn delete(&mut self, core: &mut Core, sys: &mut System, alive_idx: usize) {
+        core.compute(self.t_op_work);
+        let key = self.alive.swap_remove(alive_idx);
+        self.index_access(core, sys, key, true);
+        if let Some(s) = self.locations[key as usize].take() {
+            // Tombstone: header read-modify-write only.
+            let h = self.header_addr(sys, s.page);
+            core.load(sys, h, LINE_BYTES as u32);
+            core.store(sys, h, LINE_BYTES as u32);
+            // Durability: the tombstone must persist.
+            core.persist(sys, h, LINE_BYTES as u32);
+            self.free.push(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::devices::DeviceKind;
+
+    fn tiny() -> Viper {
+        Viper {
+            record_bytes: 216,
+            prefill: 400,
+            ops_per_phase: 150,
+            zipf_theta: 0.9,
+            t_op_work: 300_000,
+            seed: 3,
+        }
+    }
+
+    fn run_on(kind: DeviceKind, v: &Viper) -> Vec<ViperResult> {
+        let cfg = presets::small_test();
+        let mut sys = System::new(kind, &cfg);
+        let mut core = Core::new(cfg.cpu);
+        v.run(&mut core, &mut sys)
+    }
+
+    #[test]
+    fn all_five_phases_reported() {
+        let r = run_on(DeviceKind::Dram, &tiny());
+        assert_eq!(r.len(), 5);
+        let ops: Vec<_> = r.iter().map(|x| x.op).collect();
+        assert_eq!(ops, ViperOp::ALL);
+        for x in &r {
+            assert!(x.qps > 0.0, "{:?}", x.op);
+        }
+    }
+
+    #[test]
+    fn slots_per_page_math() {
+        assert_eq!(Viper::new_216().slots_per_page(), 18);
+        assert_eq!(Viper::new_532().slots_per_page(), 7);
+    }
+
+    #[test]
+    fn dram_faster_than_pmem() {
+        let d = run_on(DeviceKind::Dram, &tiny());
+        let p = run_on(DeviceKind::Pmem, &tiny());
+        // Aggregate QPS ordering (paper Fig 5).
+        let sum = |r: &[ViperResult]| r.iter().map(|x| x.qps).sum::<f64>();
+        assert!(sum(&d) > sum(&p));
+    }
+
+    #[test]
+    fn delete_leaves_store_consistent() {
+        let v = tiny();
+        let cfg = presets::small_test();
+        let mut sys = System::new(DeviceKind::Dram, &cfg);
+        let mut core = Core::new(cfg.cpu);
+        let r = v.run(&mut core, &mut sys);
+        // Deletes processed (some may early-exit if alive empties).
+        assert!(r[4].ops > 0);
+    }
+
+    #[test]
+    fn updates_reuse_freed_slots() {
+        let v = Viper {
+            prefill: 50,
+            ops_per_phase: 200, // more updates than keys: must recycle
+            ..tiny()
+        };
+        let r = run_on(DeviceKind::Dram, &v);
+        assert_eq!(r.len(), 5);
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared helpers for the integration tests.
+
+/// Absolute path of the AOT artifacts directory.
+///
+/// Integration tests that exercise the PJRT path need `make artifacts` to
+/// have run (the Makefile `test` target guarantees it); we fail with a
+/// clear message instead of a confusing IO error.
+pub fn artifacts_dir() -> String {
+    let dir = format!("{}/../artifacts", env!("CARGO_MANIFEST_DIR"));
+    assert!(
+        std::path::Path::new(&format!("{dir}/manifest.txt")).exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    dir
+}

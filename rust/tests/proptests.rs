@@ -1,0 +1,193 @@
+//! Property-based tests over coordinator/substrate invariants, using the
+//! in-tree mini property harness (`testing::check`; proptest is not
+//! available offline — see DESIGN.md substitutions).
+
+use cxl_ssd_sim::cache::{Lookup, PageCache, PolicyKind};
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::cxl::flit::Flit;
+use cxl_ssd_sim::cxl::MetaValue;
+use cxl_ssd_sim::devices::{build_device, DeviceKind};
+use cxl_ssd_sim::dram::{Dram, DramConfig};
+use cxl_ssd_sim::sim::Tick;
+use cxl_ssd_sim::ssd::{build as build_ssd, SsdConfig};
+use cxl_ssd_sim::stats::Histogram;
+use cxl_ssd_sim::testing::{check, SplitMix64};
+
+#[test]
+fn prop_flit_roundtrip_any_fields() {
+    check("flit roundtrip", 500, |rng| {
+        let metas = [MetaValue::Invalid, MetaValue::Any, MetaValue::Shared];
+        let addr = rng.below(1 << 40) * 64;
+        let blocks = rng.range(1, 128) as u16;
+        let tag = rng.below(1 << 16) as u16;
+        let f = match rng.below(4) {
+            0 => Flit::m2s_req(tag, addr, blocks, *rng.choose(&metas)),
+            1 => Flit::m2s_rwd(tag, addr, blocks, *rng.choose(&metas)),
+            2 => Flit::s2m_drs(tag, addr, blocks),
+            _ => Flit::s2m_ndr(tag, addr),
+        };
+        let back = Flit::decode(&f.encode()).expect("roundtrip");
+        assert_eq!(back, f);
+    });
+}
+
+#[test]
+fn prop_cache_policies_agree_on_residency_count() {
+    // Whatever the policy, after any access sequence the cache holds at
+    // most n_frames pages, hits+misses equals accesses, and a hit is
+    // always consistent with prior residency.
+    check("cache invariants", 60, |rng| {
+        let frames = rng.range(2, 32) as usize;
+        let policy = *rng.choose(&PolicyKind::ALL);
+        let mut c = PageCache::new(frames, policy, 8);
+        let span = rng.range(2, 64);
+        let ops = 400;
+        let mut accesses = 0;
+        for i in 0..ops {
+            let page = rng.below(span);
+            let wr = rng.chance(0.4);
+            let before = c.contains(page);
+            match c.lookup(i, page, wr) {
+                Lookup::Hit => assert!(before, "hit on non-resident page"),
+                Lookup::Miss { .. } | Lookup::MshrMerge { .. } => {}
+            }
+            assert!(c.contains(page), "page must be resident after access");
+            accesses += 1;
+            assert!(c.resident() <= frames);
+        }
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses + s.mshr_merges, accesses);
+    });
+}
+
+#[test]
+fn prop_lru_never_worse_than_direct_on_hot_sets() {
+    // For small hot working sets that fit the cache, LRU's hit count must
+    // be at least direct mapping's (conflict misses hurt direct).
+    check("lru >= direct", 30, |rng| {
+        let frames = 16;
+        let hot = rng.range(2, frames as u64);
+        let mut seq = Vec::new();
+        let span = 1 << 16;
+        let hot_pages: Vec<u64> = (0..hot).map(|_| rng.below(span)).collect();
+        for _ in 0..500 {
+            seq.push(*rng.choose(&hot_pages));
+        }
+        let hits = |kind: PolicyKind| {
+            let mut c = PageCache::new(frames, kind, 8);
+            for (i, &p) in seq.iter().enumerate() {
+                c.lookup(i as Tick, p, false);
+            }
+            c.stats().hits
+        };
+        assert!(hits(PolicyKind::Lru) >= hits(PolicyKind::Direct));
+    });
+}
+
+#[test]
+fn prop_ftl_mappings_stay_consistent_under_random_traffic() {
+    check("ftl consistency", 12, |rng| {
+        let cfg = SsdConfig {
+            capacity_bytes: 8 << 20, // tiny device: GC exercises often
+            gc_threshold: 2,
+            op_fraction_inv: 4,
+            icl_enabled: rng.chance(0.5),
+            nand: cxl_ssd_sim::ssd::NandConfig {
+                n_channels: 2,
+                dies_per_channel: 2,
+                pages_per_block: 16,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut ssd = build_ssd(cfg);
+        let pages = cfg.user_pages();
+        let mut now: Tick = 0;
+        for _ in 0..3000 {
+            let page = rng.below(pages);
+            let wr = rng.chance(0.7);
+            let lat = ssd.access_page(now, page, wr);
+            now += lat + rng.below(1_000_000);
+        }
+        ssd.flush(now);
+        let f = ssd.ftl_stats();
+        // WAF is sane and bounded; erase counts exist iff GC ran.
+        assert!(f.waf() >= 1.0 && f.waf() < 10.0, "waf {}", f.waf());
+        assert_eq!(f.gc_runs > 0, f.erases > 0);
+    });
+}
+
+#[test]
+fn prop_dram_latency_bounds() {
+    // Any isolated access latency is within [hit, conflict] bounds.
+    check("dram bounds", 40, |rng| {
+        let mut d = Dram::new(DramConfig::no_refresh());
+        let mut now: Tick = 0;
+        for _ in 0..200 {
+            now += rng.below(10_000_000) + 1_000_000; // spaced out
+            let lat = d.access(now, rng.below(1 << 24), rng.chance(0.5));
+            let cfg = d.cfg();
+            assert!(lat >= cfg.hit_latency());
+            assert!(lat <= cfg.conflict_latency());
+        }
+    });
+}
+
+#[test]
+fn prop_device_latencies_monotone_nonnegative() {
+    // Every device returns nonzero latency and never panics across a
+    // random access pattern.
+    check("device sanity", 8, |rng| {
+        let cfg = presets::small_test();
+        let kind = *rng.choose(&DeviceKind::ALL);
+        let mut dev = build_device(kind, &cfg);
+        let mut now: Tick = 0;
+        for _ in 0..300 {
+            let addr = rng.below(cfg.device_bytes / 64) * 64;
+            let lat = dev.access(now, addr, rng.chance(0.3));
+            assert!(lat > 0, "{kind:?} zero latency");
+            now += rng.below(2_000_000);
+        }
+        dev.flush(now);
+    });
+}
+
+#[test]
+fn prop_histogram_mean_within_min_max() {
+    check("histogram bounds", 100, |rng| {
+        let mut h = Histogram::new();
+        let n = rng.range(1, 200);
+        for _ in 0..n {
+            h.record(rng.below(1 << 40));
+        }
+        assert!(h.mean() >= h.min() as f64);
+        assert!(h.mean() <= h.max() as f64);
+        assert!(h.percentile_ns(0.0) <= h.percentile_ns(100.0) * 2.0);
+        assert_eq!(h.count(), n);
+    });
+}
+
+#[test]
+fn prop_config_override_never_corrupts_unrelated_fields() {
+    check("config overrides", 50, |rng| {
+        let mut cfg = presets::table1();
+        let before_pmem = cfg.pmem.t_read;
+        let v = rng.range(1, 1 << 30);
+        cfg.apply_override(&format!("ssd.t_read={v}")).unwrap();
+        assert_eq!(cfg.ssd.nand.t_read, v);
+        assert_eq!(cfg.pmem.t_read, before_pmem);
+    });
+}
+
+#[test]
+fn prop_splitmix_streams_disjoint() {
+    // Different seeds produce different streams (no trivial collisions).
+    check("prng streams", 20, |rng| {
+        let s1 = rng.next_u64();
+        let s2 = s1.wrapping_add(1);
+        let mut a = SplitMix64::new(s1);
+        let mut b = SplitMix64::new(s2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    });
+}

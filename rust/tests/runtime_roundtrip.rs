@@ -1,0 +1,175 @@
+//! End-to-end AOT round trip: the HLO artifacts lowered from the Pallas
+//! kernels must load through PJRT and agree with the rust detailed
+//! models that mirror them.
+
+mod common;
+
+use cxl_ssd_sim::config::SimConfig;
+use cxl_ssd_sim::devices::DeviceKind;
+use cxl_ssd_sim::dram::{Dram, DramConfig};
+use cxl_ssd_sim::pmem::Pmem;
+use cxl_ssd_sim::sim::Tick;
+use cxl_ssd_sim::ssd::{Pal, PalOp};
+use cxl_ssd_sim::surrogate::{cxl_link_overhead, Surrogate};
+use cxl_ssd_sim::testing::SplitMix64;
+use cxl_ssd_sim::trace::{Trace, TraceEntry};
+
+/// Random line-granular trace within `span` bytes.
+fn random_trace(n: usize, span: u64, p_write: f64, seed: u64) -> Trace {
+    let mut rng = SplitMix64::new(seed);
+    let mut tick = 0;
+    let entries = (0..n)
+        .map(|_| {
+            tick += rng.below(200_000); // 0..200ns gaps
+            TraceEntry::new(tick, rng.below(span / 64) * 64, rng.chance(p_write))
+        })
+        .collect();
+    Trace::new(entries)
+}
+
+#[test]
+fn dram_surrogate_matches_detailed_model_exactly() {
+    let cfg = SimConfig::default();
+    let dir = common::artifacts_dir();
+    let mut sur = Surrogate::load(DeviceKind::Dram, &dir, &cfg).unwrap();
+    // Mixed trace spanning many rows/banks; long enough to cross one
+    // batch boundary and prove state carries over.
+    let n = sur.batch() + 257;
+    let trace = random_trace(n, 64 << 20, 0.4, 42);
+    let fast = sur.replay(&trace).unwrap();
+
+    // Detailed model without refresh (the kernel's exact mirror).
+    let mut dram = Dram::new(DramConfig::no_refresh());
+    let detailed: Vec<Tick> = trace
+        .entries()
+        .iter()
+        .map(|e| dram.access(e.tick, e.offset / 64, e.is_write))
+        .collect();
+
+    assert_eq!(fast.len(), detailed.len());
+    for (i, (f, d)) in fast.iter().zip(detailed.iter()).enumerate() {
+        let df = (*f as i64 - *d as i64).abs();
+        assert!(df <= 1, "access {i}: fast {f} vs detailed {d}");
+    }
+}
+
+#[test]
+fn cxl_dram_surrogate_adds_exactly_the_link_constant() {
+    let cfg = SimConfig::default();
+    let dir = common::artifacts_dir();
+    let mut local = Surrogate::load(DeviceKind::Dram, &dir, &cfg).unwrap();
+    let mut cxl = Surrogate::load(DeviceKind::CxlDram, &dir, &cfg).unwrap();
+    let trace = random_trace(512, 16 << 20, 0.5, 7);
+    let a = local.replay(&trace).unwrap();
+    let b = cxl.replay(&trace).unwrap();
+    let overhead = cxl_link_overhead(&cfg);
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(y - x, overhead);
+    }
+}
+
+#[test]
+fn pmem_surrogate_matches_detailed_model_exactly() {
+    let cfg = SimConfig::default();
+    let dir = common::artifacts_dir();
+    let mut sur = Surrogate::load(DeviceKind::Pmem, &dir, &cfg).unwrap();
+    let n = sur.batch() + 100;
+    let trace = random_trace(n, 8 << 20, 0.5, 99);
+    let fast = sur.replay(&trace).unwrap();
+
+    let mut pmem = Pmem::new(cfg.pmem);
+    let detailed: Vec<Tick> = trace
+        .entries()
+        .iter()
+        .map(|e| pmem.access(e.tick, e.offset / 64, e.is_write))
+        .collect();
+
+    for (i, (f, d)) in fast.iter().zip(detailed.iter()).enumerate() {
+        let df = (*f as i64 - *d as i64).abs();
+        assert!(df <= 1, "access {i}: fast {f} vs detailed {d}");
+    }
+}
+
+#[test]
+fn ssd_surrogate_matches_pal_for_reads() {
+    let cfg = SimConfig::default();
+    let dir = common::artifacts_dir();
+    let mut sur = Surrogate::load(DeviceKind::CxlSsd, &dir, &cfg).unwrap();
+    // Read-only trace at page granularity (offsets in distinct pages).
+    let mut rng = SplitMix64::new(5);
+    let mut tick: Tick = 0;
+    let entries: Vec<TraceEntry> = (0..600)
+        .map(|_| {
+            tick += rng.below(10_000_000); // 0..10µs gaps
+            TraceEntry::new(tick, rng.below(1 << 20) * 4096, false)
+        })
+        .collect();
+    let trace = Trace::new(entries);
+    let fast = sur.replay(&trace).unwrap();
+
+    // Expectation: PAL read at the kernel's static stripe + CXL link.
+    let mut pal = Pal::new(cfg.ssd.nand);
+    let nc = cfg.ssd.nand.n_channels as u64;
+    let dpc = cfg.ssd.nand.dies_per_channel as u64;
+    for (e, f) in trace.entries().iter().zip(fast.iter()) {
+        let page = e.offset / 4096;
+        let die = ((page % nc) * dpc + (page / nc) % dpc) as usize;
+        let (done, _) = pal.execute(e.tick, die, PalOp::Read);
+        let want = done - e.tick + cxl_link_overhead(&cfg);
+        let df = (*f as i64 - want as i64).abs();
+        assert!(df <= 1, "fast {f} vs pal {want}");
+    }
+}
+
+#[test]
+fn cached_ssd_surrogate_hot_pages_hit() {
+    let cfg = SimConfig::default();
+    let dir = common::artifacts_dir();
+    let mut sur = Surrogate::load(DeviceKind::CxlSsdCached, &dir, &cfg).unwrap();
+    // 16 hot pages touched repeatedly: everything after the first touch
+    // must cost exactly link + cache access.
+    let mut tick = 0;
+    let mut entries = Vec::new();
+    for i in 0..512u64 {
+        tick += 1_000_000; // 1µs apart
+        entries.push(TraceEntry::new(tick, (i % 16) * 4096, false));
+    }
+    let trace = Trace::new(entries);
+    let lats = sur.replay(&trace).unwrap();
+    let hot = cxl_link_overhead(&cfg) + cfg.dcache.t_access;
+    for (i, l) in lats.iter().enumerate().skip(16) {
+        assert_eq!(*l, hot, "access {i}");
+    }
+    // The 16 cold fills must pay flash latency.
+    for l in &lats[..16] {
+        assert!(*l > 45_000_000, "cold fill {l}");
+    }
+}
+
+#[test]
+fn surrogate_state_survives_batch_boundaries() {
+    // A page filled in batch k must still hit in batch k+1.
+    let cfg = SimConfig::default();
+    let dir = common::artifacts_dir();
+    let mut sur = Surrogate::load(DeviceKind::CxlSsdCached, &dir, &cfg).unwrap();
+    let batch = sur.batch();
+    let mut entries = Vec::new();
+    let mut tick = 0;
+    // First access page 7 once, then pad out the batch with pages that
+    // map to different cache sets (so page 7 stays resident), then touch
+    // page 7 again in the next batch.
+    for i in 0..batch + 8 {
+        tick += 1_000_000;
+        let page = if i == 0 || i >= batch {
+            7
+        } else {
+            4096 + 8 + (i as u64 % 2048) // sets 8..2055, never set 7
+        };
+        entries.push(TraceEntry::new(tick, page * 4096, false));
+    }
+    let lats = sur.replay(&Trace::new(entries)).unwrap();
+    let hot = cxl_link_overhead(&cfg) + cfg.dcache.t_access;
+    for l in &lats[batch..] {
+        assert_eq!(*l, hot);
+    }
+}
