@@ -1,13 +1,15 @@
 """Pallas page-cache tag-scan kernel vs the numpy oracle + invariants."""
 
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # not in the offline image
 from hypothesis import given, settings, strategies as st
 
 from compile import params as P
 from compile.kernels.cache_sim import cache_sim
 from compile.kernels.ref import cache_sim_ref
 
-from .conftest import mk_requests
+from conftest import mk_requests
 
 NS = P.DCACHE["n_sets"]
 

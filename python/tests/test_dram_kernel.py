@@ -2,13 +2,14 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the offline image
 from hypothesis import given, settings, strategies as st
 
 from compile import params as P
 from compile.kernels.dram_timing import dram_timing
 from compile.kernels.ref import dram_timing_ref
 
-from .conftest import mk_requests
+from conftest import mk_requests
 
 NB = P.DRAM["n_banks"]
 

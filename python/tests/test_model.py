@@ -4,7 +4,7 @@ import numpy as np
 
 from compile import model, params as P
 
-from .conftest import mk_requests
+from conftest import mk_requests
 
 
 def states(batch=64):

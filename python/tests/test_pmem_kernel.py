@@ -2,13 +2,14 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the offline image
 from hypothesis import given, settings, strategies as st
 
 from compile import params as P
 from compile.kernels.pmem_timing import pmem_timing
 from compile.kernels.ref import pmem_timing_ref
 
-from .conftest import mk_requests
+from conftest import mk_requests
 
 NB = P.PMEM["n_bufs"]
 

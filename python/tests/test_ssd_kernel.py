@@ -2,13 +2,14 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # not in the offline image
 from hypothesis import given, settings, strategies as st
 
 from compile import params as P
 from compile.kernels.ssd_timing import ssd_timing
 from compile.kernels.ref import ssd_timing_ref
 
-from .conftest import mk_requests
+from conftest import mk_requests
 
 NC = P.SSD["n_channels"]
 ND = NC * P.SSD["dies_per_channel"]

@@ -1,0 +1,53 @@
+//! Sweep-engine scaling: the full-figure campaign (Figs 3-6 + policy
+//! sweep, 25 jobs) drained serially vs with one worker per core.
+//!
+//! Prints the wall-clock speedup and asserts the engine's two promises:
+//! identical figure data at any worker count, and a real speedup on a
+//! multi-core host.
+
+mod bench_util;
+
+use bench_util::Shapes;
+use cxl_ssd_sim::coordinator::experiments::{all_figures, ExpScale};
+
+fn main() {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // Quick scale keeps the bench snappy; the ratio is what matters.
+    let scale = ExpScale::quick();
+
+    println!("=== sweep engine scaling ({cores} cores) ===");
+    let serial = all_figures(scale, 1);
+    println!(
+        "serial:   {} jobs in {:.2}s",
+        serial.timing.jobs, serial.timing.wall_seconds
+    );
+    let parallel = all_figures(scale, cores);
+    println!(
+        "parallel: {} jobs in {:.2}s ({:.1}x vs per-job cost)",
+        parallel.timing.jobs,
+        parallel.timing.wall_seconds,
+        parallel.timing.speedup()
+    );
+    println!(
+        "wall-clock speedup: {:.2}x",
+        serial.timing.wall_seconds / parallel.timing.wall_seconds.max(1e-9)
+    );
+
+    let mut s = Shapes::new();
+    let identical = serial
+        .sections
+        .iter()
+        .zip(parallel.sections.iter())
+        .filter(|((h, _), _)| !h.starts_with("sweep summary"))
+        .all(|((_, ta), (_, tb))| ta.render() == tb.render());
+    s.check("figure data identical at any worker count", identical);
+    if cores >= 2 {
+        s.check(
+            "parallel sweep faster than serial",
+            parallel.timing.wall_seconds < serial.timing.wall_seconds,
+        );
+    }
+    s.finish();
+}

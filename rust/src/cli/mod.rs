@@ -2,8 +2,9 @@
 //!
 //! ```text
 //! cxl-ssd-sim info
-//! cxl-ssd-sim run --device <dev> --workload <wl> [--config f] [--set k=v]...
-//! cxl-ssd-sim sweep --experiment fig3|fig4|fig5|fig6|policies|mshr|fastmode [--quick]
+//! cxl-ssd-sim run --device <dev|all|d1,d2,..> --workload <wl> [--config f] [--set k=v]...
+//! cxl-ssd-sim sweep --experiment all|fig3|fig4|fig5|fig6|policies|mshr|fastmode
+//!                   [--jobs N] [--quick]
 //! cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
 //! cxl-ssd-sim trace replay --in <file> --device <dev> [--fast] [--artifacts dir]
 //! ```
@@ -12,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
 use crate::coordinator::experiments::{self, ExpScale};
-use crate::coordinator::{fastmode_compare, run_with_trace};
+use crate::coordinator::{fastmode_compare, run_with_trace, sweep};
 use crate::devices::DeviceKind;
 use crate::sim::NS;
 use crate::surrogate::DEFAULT_ARTIFACTS;
@@ -23,13 +24,17 @@ const USAGE: &str = "cxl-ssd-sim — full-system CXL-SSD memory simulator
 
 USAGE:
   cxl-ssd-sim info
-  cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache>
+  cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache|all|d1,d2,..>
                     --workload <stream|membench|viper216|viper532>
                     [--config <file>] [--set section.key=value ...]
-  cxl-ssd-sim sweep --experiment <fig3|fig4|fig5|fig6|policies|mshr|fastmode>
-                    [--quick] [--artifacts <dir>]
+  cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mshr|fastmode>
+                    [--jobs <N|0=auto>] [--quick] [--artifacts <dir>]
   cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
   cxl-ssd-sim trace replay --in <file> --device <dev> [--fast] [--artifacts <dir>]
+
+Figure sweeps (fig3..fig6, policies, all) run on the parallel sweep
+engine; --jobs N drains the job list with N worker threads (0 = one per
+core). Figure data is bit-identical for any N.
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positional words.
@@ -109,6 +114,24 @@ fn parse_device(args: &Args) -> Result<DeviceKind> {
     DeviceKind::parse(name).with_context(|| format!("unknown device '{name}'"))
 }
 
+/// `--device` as a list: a single name, a comma-separated list, or `all`.
+fn parse_device_list(args: &Args) -> Result<Vec<DeviceKind>> {
+    let name = args.get("device").context("--device required")?;
+    DeviceKind::parse_list(name).with_context(|| format!("unknown device '{name}'"))
+}
+
+/// `--jobs N` (0 = one worker per core); defaults to the config's
+/// `sys.jobs`, which itself defaults to serial.
+fn parse_jobs(args: &Args, cfg: &SimConfig) -> Result<usize> {
+    let jobs = match args.get("jobs") {
+        Some(raw) => raw
+            .parse::<usize>()
+            .with_context(|| format!("--jobs '{raw}' (want an integer)"))?,
+        None => cfg.jobs,
+    };
+    Ok(if jobs == 0 { sweep::auto_jobs() } else { jobs })
+}
+
 fn parse_workload(args: &Args) -> Result<WorkloadKind> {
     let name = args.get("workload").context("--workload required")?;
     WorkloadKind::parse(name).with_context(|| format!("unknown workload '{name}'"))
@@ -134,31 +157,58 @@ pub fn main(argv: &[String]) -> Result<i32> {
         }
         "run" => {
             let cfg = build_config(&args)?;
-            let device = parse_device(&args)?;
+            let devices = parse_device_list(&args)?;
             let workload = parse_workload(&args)?;
-            let (t, extra) = experiments::run_report(device, workload, &cfg);
-            print!("{}", t.render());
-            if !extra.is_empty() {
-                println!();
-                print!("{extra}");
+            for (i, device) in devices.iter().enumerate() {
+                if i > 0 {
+                    println!();
+                }
+                let (t, extra) = experiments::run_report(*device, workload, &cfg);
+                print!("{}", t.render());
+                if !extra.is_empty() {
+                    println!();
+                    print!("{extra}");
+                }
             }
         }
         "sweep" => {
+            let cfg = build_config(&args)?;
             let exp = args.get("experiment").context("--experiment required")?;
             let scale = if args.has("quick") {
                 ExpScale::quick()
             } else {
                 ExpScale::full()
             };
+            let jobs = parse_jobs(&args, &cfg)?;
             let artifacts = args.get("artifacts").unwrap_or(DEFAULT_ARTIFACTS);
+            if exp == "all" {
+                let report = experiments::all_figures_cfg(&cfg, scale, jobs);
+                for (heading, table) in &report.sections {
+                    println!("== {heading} ==\n");
+                    print!("{}", table.render());
+                    println!();
+                }
+                println!(
+                    "{} jobs, {} worker(s): {:.2}s wall vs {:.2}s serial cost ({:.1}x)",
+                    report.timing.jobs,
+                    jobs,
+                    report.timing.wall_seconds,
+                    report.timing.job_host_seconds,
+                    report.timing.speedup()
+                );
+                return Ok(0);
+            }
+            if jobs > 1 && matches!(exp, "mshr" | "fastmode") {
+                eprintln!("note: --jobs does not apply to '{exp}' (serial ablation)");
+            }
             let table = match exp {
-                "fig3" => experiments::fig3_bandwidth(scale).0,
-                "fig4" => experiments::fig4_latency(scale).0,
-                "fig5" => experiments::fig56_viper(216, scale).0,
-                "fig6" => experiments::fig56_viper(532, scale).0,
-                "policies" => experiments::policy_sweep(216, scale).0,
-                "mshr" => experiments::mshr_ablation(scale).0,
-                "fastmode" => experiments::fastmode_ablation(artifacts, scale)?.0,
+                "fig3" => experiments::fig3_bandwidth_cfg(&cfg, scale, jobs).0,
+                "fig4" => experiments::fig4_latency_cfg(&cfg, scale, jobs).0,
+                "fig5" => experiments::fig56_viper_cfg(&cfg, 216, scale, jobs).0,
+                "fig6" => experiments::fig56_viper_cfg(&cfg, 532, scale, jobs).0,
+                "policies" => experiments::policy_sweep_cfg(&cfg, 216, scale, jobs).0,
+                "mshr" => experiments::mshr_ablation_cfg(&cfg, scale).0,
+                "fastmode" => experiments::fastmode_ablation_cfg(&cfg, artifacts, scale)?.0,
                 other => bail!("unknown experiment '{other}'"),
             };
             print!("{}", table.render());
@@ -256,6 +306,38 @@ mod tests {
     #[test]
     fn bad_device_is_error() {
         let e = main(&argv("run --device floppy --workload stream"));
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn device_lists_parse() {
+        let a = Args::parse(&argv("--device dram,pmem"));
+        assert_eq!(
+            parse_device_list(&a).unwrap(),
+            vec![DeviceKind::Dram, DeviceKind::Pmem]
+        );
+        let all = Args::parse(&argv("--device all"));
+        assert_eq!(parse_device_list(&all).unwrap().len(), 5);
+        let bad = Args::parse(&argv("--device dram,floppy"));
+        assert!(parse_device_list(&bad).is_err());
+    }
+
+    #[test]
+    fn jobs_flag_parses() {
+        let cfg = SimConfig::default();
+        let three = Args::parse(&argv("--jobs 3"));
+        assert_eq!(parse_jobs(&three, &cfg).unwrap(), 3);
+        let auto = Args::parse(&argv("--jobs 0"));
+        assert!(parse_jobs(&auto, &cfg).unwrap() >= 1);
+        let none = Args::parse(&argv("info"));
+        assert_eq!(parse_jobs(&none, &cfg).unwrap(), 1);
+        let bad = Args::parse(&argv("--jobs many"));
+        assert!(parse_jobs(&bad, &cfg).is_err());
+    }
+
+    #[test]
+    fn unknown_experiment_is_error() {
+        let e = main(&argv("sweep --experiment bogus --quick"));
         assert!(e.is_err());
     }
 }

@@ -91,6 +91,9 @@ pub struct SimConfig {
     pub device_bytes: u64,
     /// PRNG seed for workload generation.
     pub seed: u64,
+    /// Default worker-thread count for experiment sweeps (CLI `--jobs`
+    /// overrides; 0 = one worker per available core, 1 = serial).
+    pub jobs: usize,
 }
 
 impl Default for SimConfig {
@@ -152,6 +155,7 @@ impl SimConfig {
             ("sys", "main_mem_bytes") => self.main_mem_bytes = v.as_u64()?,
             ("sys", "device_bytes") => self.device_bytes = v.as_u64()?,
             ("sys", "seed") => self.seed = v.as_u64()?,
+            ("sys", "jobs") => self.jobs = v.as_u64()? as usize,
             _ => return Err(bad()),
         }
         Ok(())
@@ -209,6 +213,9 @@ mod tests {
         assert_eq!(c.ssd.nand.t_read, 50_000_000);
         c.apply_override("ssd.icl_enabled=false").unwrap();
         assert!(!c.ssd.icl_enabled);
+        assert_eq!(c.jobs, 1, "sweeps default to serial");
+        c.apply_override("sys.jobs=8").unwrap();
+        assert_eq!(c.jobs, 8);
     }
 
     #[test]

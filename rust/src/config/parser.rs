@@ -15,16 +15,38 @@ pub enum ConfigValue {
     Str(String),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error at line {0}: {1}")]
+    Io(std::io::Error),
     Parse(usize, String),
-    #[error("unknown config key: {0}")]
     UnknownKey(String),
-    #[error("bad value: {0}")]
     BadValue(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "io error: {e}"),
+            ConfigError::Parse(line, msg) => write!(f, "parse error at line {line}: {msg}"),
+            ConfigError::UnknownKey(k) => write!(f, "unknown config key: {k}"),
+            ConfigError::BadValue(v) => write!(f, "bad value: {v}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 impl ConfigValue {

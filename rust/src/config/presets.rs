@@ -35,6 +35,7 @@ pub fn table1() -> SimConfig {
         main_mem_bytes: 512 << 20,
         device_bytes: 16 << 30,
         seed: 0xC11A_55D0,
+        jobs: 1,
     }
 }
 

@@ -1,28 +1,34 @@
 //! Experiment sweeps regenerating every table and figure of the paper.
 //!
-//! Each function returns a rendered [`Table`] plus the raw numbers so the
-//! benches can both print paper-style output and assert the expected
-//! *shape* (orderings / ratios), per DESIGN.md's experiment index.
+//! Each figure function returns a rendered [`Table`] plus the raw numbers
+//! so the benches can both print paper-style output and assert the
+//! expected *shape* (orderings / ratios), per DESIGN.md's experiment
+//! index.
+//!
+//! All figure sweeps ride on the parallel sweep engine
+//! ([`crate::coordinator::sweep`]): a figure is a [`SweepSpec`] expanded
+//! into per-(device x workload x policy) jobs. The `*_jobs` variants take
+//! a worker count; the plain variants run serially. Parallel and serial
+//! runs produce **bit-identical** figure data (seeds derive from sweep
+//! coordinates, not execution order) - `rust/tests/sweep_equivalence.rs`
+//! locks this in.
 
 use anyhow::Result;
 
 use crate::cache::PolicyKind;
 use crate::config::{presets, SimConfig};
-use crate::coordinator::{fastmode_compare, run, run_with_trace, FastReport};
+use crate::coordinator::sweep::{self, SweepSpec, SweepTiming};
+use crate::coordinator::{fastmode_compare, run, run_with_trace, FastReport, RunOutput};
 use crate::cpu::Core;
 use crate::devices::DeviceKind;
 use crate::stats::Table;
 use crate::topology::System;
-use crate::workloads::{Membench, MembenchMode, Viper, WorkloadKind};
+use crate::workloads::{Membench, MembenchMode, Viper, WorkloadKind, WorkloadSpec};
 
 /// The five devices of the paper's evaluation, in figure order.
-pub const FIG_DEVICES: [DeviceKind; 5] = [
-    DeviceKind::Dram,
-    DeviceKind::CxlDram,
-    DeviceKind::Pmem,
-    DeviceKind::CxlSsd,
-    DeviceKind::CxlSsdCached,
-];
+/// Defined as [`DeviceKind::ALL`] so the ordering invariant (figure
+/// tables, `--device all`) lives in exactly one place.
+pub const FIG_DEVICES: [DeviceKind; 5] = DeviceKind::ALL;
 
 /// Scale knob: `quick` shrinks workloads for integration tests.
 #[derive(Debug, Clone, Copy)]
@@ -39,165 +45,311 @@ impl ExpScale {
         ExpScale { quick: true }
     }
 
-    fn stream_bytes(&self) -> u64 {
-        // Quick runs still need a dataset beyond the host L2 (512KB), or
-        // every device ties by serving from the CPU caches.
-        if self.quick {
-            2 << 20
-        } else {
-            8 << 20
+    /// Fig 3 workload: STREAM over a dataset beyond the host L2 (512KB),
+    /// or every device ties by serving from the CPU caches.
+    pub fn stream_spec(&self) -> WorkloadSpec {
+        WorkloadSpec::Stream {
+            dataset_bytes: if self.quick { 2 << 20 } else { 8 << 20 },
+            repeats: 2,
         }
     }
 
-    fn membench_ops(&self) -> u64 {
-        if self.quick {
-            2_000
-        } else {
-            20_000
+    /// Fig 4 workload: membench random reads over a working set the DRAM
+    /// cache can mostly hold (hot data), so the cached CXL-SSD lands
+    /// near CXL-DRAM - the paper's steady-state latency regime.
+    pub fn membench_spec(&self) -> WorkloadSpec {
+        WorkloadSpec::Membench {
+            mode: MembenchMode::RandomRead,
+            footprint: 8 << 20,
+            ops: if self.quick { 2_000 } else { 20_000 },
+            warmup: true,
         }
     }
 
-    fn viper(&self, record_bytes: u64) -> Viper {
-        let base = if record_bytes == 216 {
-            Viper::new_216()
-        } else {
+    /// Figs 5/6 workload: the Viper KV store at the given record size.
+    pub fn viper_spec(&self, record_bytes: u64) -> WorkloadSpec {
+        let base = if record_bytes == 532 {
             Viper::new_532()
-        };
-        if self.quick {
-            Viper {
-                prefill: 2_000,
-                ops_per_phase: 800,
-                ..base
-            }
         } else {
-            base
+            Viper::new_216()
+        };
+        let mut spec = WorkloadSpec::from_viper(&base);
+        if self.quick {
+            if let WorkloadSpec::Viper {
+                prefill,
+                ops_per_phase,
+                ..
+            } = &mut spec
+            {
+                *prefill = 2_000;
+                *ops_per_phase = 800;
+            }
         }
+        spec
+    }
+
+    /// §III-C workload: Viper in the paper's high-temporal-locality
+    /// regime - a store whose footprint exceeds the 16MB DRAM cache with
+    /// strongly skewed re-access (zipf 0.99), the scenario where LRU
+    /// shines, FIFO wastes effective space and 2Q's A1in penalizes
+    /// hot-but-bursty metadata.
+    pub fn policy_viper_spec(&self, record_bytes: u64) -> WorkloadSpec {
+        let mut spec = self.viper_spec(record_bytes);
+        if let WorkloadSpec::Viper {
+            prefill,
+            zipf_theta,
+            ..
+        } = &mut spec
+        {
+            *zipf_theta = 0.99;
+            if !self.quick {
+                // Footprint ~1.5x the DRAM cache: capacity pressure.
+                *prefill = (6 << 20) / record_bytes * 4;
+            }
+        }
+        spec
     }
 }
 
-/// Fig 3: stream bandwidth across the five devices.
-pub fn fig3_bandwidth(scale: ExpScale) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
-    let cfg = presets::table1();
+// ------------------------------------------------------------ helpers
+
+fn stream_figure(outs: &[&RunOutput]) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
     let mut table = Table::new(&["device", "copy MB/s", "scale MB/s", "add MB/s", "triad MB/s"]);
     let mut raw = Vec::new();
-    for kind in FIG_DEVICES {
-        let mut sys = System::new(kind, &cfg);
-        let mut core = Core::new(cfg.cpu);
-        let results = crate::workloads::Stream {
-            dataset_bytes: scale.stream_bytes(),
-            repeats: 2,
-        }
-        .run(&mut core, &mut sys);
+    for out in outs {
+        let results = out.stream.as_ref().expect("stream output");
         let mbs: Vec<f64> = results.iter().map(|r| r.mbs).collect();
-        table.row(&[
-            kind.name().to_string(),
+        table.row_owned(vec![
+            out.device.name().to_string(),
             format!("{:.1}", mbs[0]),
             format!("{:.1}", mbs[1]),
             format!("{:.1}", mbs[2]),
             format!("{:.1}", mbs[3]),
         ]);
-        raw.push((kind, mbs));
+        raw.push((out.device, mbs));
     }
     (table, raw)
 }
 
-/// Fig 4: membench random-read latency across the five devices.
-pub fn fig4_latency(scale: ExpScale) -> (Table, Vec<(DeviceKind, f64)>) {
-    let cfg = presets::table1();
+fn membench_figure(outs: &[&RunOutput]) -> (Table, Vec<(DeviceKind, f64)>) {
     let mut table = Table::new(&["device", "mean ns", "p50 ns", "p99 ns"]);
     let mut raw = Vec::new();
-    for kind in FIG_DEVICES {
-        let mut sys = System::new(kind, &cfg);
-        let mut core = Core::new(cfg.cpu);
-        let r = Membench {
-            mode: MembenchMode::RandomRead,
-            // The paper's latency test touches a working set the DRAM
-            // cache can mostly hold (hot data), so the cached CXL-SSD
-            // lands near CXL-DRAM.
-            footprint: 8 << 20,
-            ops: scale.membench_ops(),
-            seed: cfg.seed,
-            warmup: true,
-        }
-        .run(&mut core, &mut sys);
-        table.row(&[
-            kind.name().to_string(),
+    for out in outs {
+        let r = out.membench.as_ref().expect("membench output");
+        table.row_owned(vec![
+            out.device.name().to_string(),
             format!("{:.1}", r.mean_ns),
             format!("{:.1}", r.p50_ns),
             format!("{:.1}", r.p99_ns),
         ]);
-        raw.push((kind, r.mean_ns));
+        raw.push((out.device, r.mean_ns));
     }
     (table, raw)
 }
 
-/// Figs 5/6: Viper KV QPS per operation across the five devices.
-pub fn fig56_viper(
-    record_bytes: u64,
-    scale: ExpScale,
-) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
-    let cfg = presets::table1();
+fn viper_figure(outs: &[&RunOutput]) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
     let mut table = Table::new(&["device", "write", "insert", "get", "update", "delete"]);
     let mut raw = Vec::new();
-    for kind in FIG_DEVICES {
-        let mut sys = System::new(kind, &cfg);
-        let mut core = Core::new(cfg.cpu);
-        let results = scale.viper(record_bytes).run(&mut core, &mut sys);
-        let mut cells = vec![kind.name().to_string()];
+    for out in outs {
+        let results = out.viper.as_ref().expect("viper output");
+        let mut cells = vec![out.device.name().to_string()];
         let mut kv = Vec::new();
-        for r in &results {
+        for r in results {
             cells.push(format!("{:.0}", r.qps));
             kv.push((r.op.name().to_string(), r.qps));
         }
-        table.row(&cells);
-        raw.push((kind, kv));
+        table.row_owned(cells);
+        raw.push((out.device, kv));
     }
     (table, raw)
 }
 
-/// §III-C: cache replacement policy sweep on the cached CXL-SSD.
-///
-/// Uses the paper's high-temporal-locality regime: a store whose
-/// footprint exceeds the 16MB DRAM cache with strongly skewed re-access
-/// (zipf 0.99) — the scenario where LRU shines, FIFO wastes effective
-/// space and 2Q's A1in penalizes hot-but-bursty metadata.
-pub fn policy_sweep(
-    record_bytes: u64,
-    scale: ExpScale,
+fn policy_figure(
+    policies: &[PolicyKind],
+    outs: &[&RunOutput],
 ) -> (Table, Vec<(PolicyKind, f64, f64)>) {
     let mut table = Table::new(&["policy", "hit rate", "aggregate QPS"]);
     let mut raw = Vec::new();
-    for policy in PolicyKind::ALL {
-        let mut cfg = presets::table1();
-        cfg.dcache.policy = policy;
-        let mut sys = System::new(DeviceKind::CxlSsdCached, &cfg);
-        let mut core = Core::new(cfg.cpu);
-        let mut wl = scale.viper(record_bytes);
-        wl.zipf_theta = 0.99;
-        if !scale.quick {
-            // Footprint ~1.5x the DRAM cache: capacity pressure.
-            wl.prefill = (6 << 20) / record_bytes * 4;
-        }
-        let results = wl.run(&mut core, &mut sys);
-        let hit_rate = sys
-            .device_stats_kv()
-            .into_iter()
+    for (&policy, out) in policies.iter().zip(outs) {
+        let hit_rate = out
+            .device_kv
+            .iter()
             .find(|(k, _)| k == "cache_hit_rate")
-            .map(|(_, v)| v)
+            .map(|(_, v)| *v)
             .unwrap_or(0.0);
         // Harmonic aggregate: total ops / total time == ops-weighted QPS.
+        let results = out.viper.as_ref().expect("viper output");
         let total_ops: u64 = results.iter().map(|r| r.ops).sum();
         let total_secs: f64 = results.iter().map(|r| r.ops as f64 / r.qps).sum();
         let qps = total_ops as f64 / total_secs;
-        table.row(&[
+        table.row_owned(vec![
             policy.name().to_string(),
-            format!("{:.4}", hit_rate),
-            format!("{:.0}", qps),
+            format!("{hit_rate:.4}"),
+            format!("{qps:.0}"),
         ]);
         raw.push((policy, hit_rate, qps));
     }
     (table, raw)
 }
+
+fn run_figure_sweep(base: &SimConfig, workload: WorkloadSpec, n_workers: usize) -> Vec<RunOutput> {
+    let spec = SweepSpec::new(base.clone())
+        .devices(FIG_DEVICES.to_vec())
+        .workloads(vec![workload]);
+    sweep::execute(&spec.expand(), n_workers)
+}
+
+// ------------------------------------------------------------- figures
+
+/// Fig 3: stream bandwidth across the five devices (serial, Table I).
+pub fn fig3_bandwidth(scale: ExpScale) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
+    fig3_bandwidth_cfg(&presets::table1(), scale, 1)
+}
+
+/// Fig 3 on the sweep engine: caller-supplied base config (CLI
+/// `--config`/`--set`) and worker count.
+pub fn fig3_bandwidth_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
+    let outs = run_figure_sweep(base, scale.stream_spec(), n_workers);
+    stream_figure(&outs.iter().collect::<Vec<_>>())
+}
+
+/// Fig 4: membench random-read latency across the five devices (serial,
+/// Table I).
+pub fn fig4_latency(scale: ExpScale) -> (Table, Vec<(DeviceKind, f64)>) {
+    fig4_latency_cfg(&presets::table1(), scale, 1)
+}
+
+/// Fig 4 on the sweep engine: caller-supplied base config and workers.
+pub fn fig4_latency_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(DeviceKind, f64)>) {
+    let outs = run_figure_sweep(base, scale.membench_spec(), n_workers);
+    membench_figure(&outs.iter().collect::<Vec<_>>())
+}
+
+/// Figs 5/6: Viper KV QPS per operation across the five devices
+/// (serial, Table I).
+pub fn fig56_viper(
+    record_bytes: u64,
+    scale: ExpScale,
+) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
+    fig56_viper_cfg(&presets::table1(), record_bytes, scale, 1)
+}
+
+/// Figs 5/6 on the sweep engine: caller-supplied base config + workers.
+pub fn fig56_viper_cfg(
+    base: &SimConfig,
+    record_bytes: u64,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
+    let outs = run_figure_sweep(base, scale.viper_spec(record_bytes), n_workers);
+    viper_figure(&outs.iter().collect::<Vec<_>>())
+}
+
+/// §III-C: cache replacement policy sweep on the cached CXL-SSD
+/// (serial, Table I).
+pub fn policy_sweep(record_bytes: u64, scale: ExpScale) -> (Table, Vec<(PolicyKind, f64, f64)>) {
+    policy_sweep_cfg(&presets::table1(), record_bytes, scale, 1)
+}
+
+/// §III-C on the sweep engine: caller-supplied base config + workers.
+pub fn policy_sweep_cfg(
+    base: &SimConfig,
+    record_bytes: u64,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(PolicyKind, f64, f64)>) {
+    let spec = SweepSpec::new(base.clone())
+        .devices(vec![DeviceKind::CxlSsdCached])
+        .workloads(vec![scale.policy_viper_spec(record_bytes)])
+        .policies(PolicyKind::ALL.iter().map(|&p| Some(p)).collect());
+    let outs = sweep::execute(&spec.expand(), n_workers);
+    policy_figure(&PolicyKind::ALL, &outs.iter().collect::<Vec<_>>())
+}
+
+/// Every figure of the paper as one combined parallel campaign.
+pub struct AllFiguresReport {
+    /// `(heading, rendered table)` in figure order, ending with the
+    /// per-job sweep summary.
+    pub sections: Vec<(String, Table)>,
+    pub timing: SweepTiming,
+}
+
+/// Run Figs 3-6 plus the §III-C policy sweep as ONE job list drained by
+/// `n_workers` threads - the scaling path for full experiment campaigns
+/// (25 jobs; a multi-core host overlaps them).
+pub fn all_figures(scale: ExpScale, n_workers: usize) -> AllFiguresReport {
+    all_figures_cfg(&presets::table1(), scale, n_workers)
+}
+
+/// The combined campaign over a caller-supplied base config.
+pub fn all_figures_cfg(base: &SimConfig, scale: ExpScale, n_workers: usize) -> AllFiguresReport {
+    let base = base.clone();
+    let fig_spec = SweepSpec::new(base.clone())
+        .devices(FIG_DEVICES.to_vec())
+        .workloads(vec![
+            scale.stream_spec(),
+            scale.membench_spec(),
+            scale.viper_spec(216),
+            scale.viper_spec(532),
+        ]);
+    let pol_spec = SweepSpec::new(base)
+        .devices(vec![DeviceKind::CxlSsdCached])
+        .workloads(vec![scale.policy_viper_spec(216)])
+        .policies(PolicyKind::ALL.iter().map(|&p| Some(p)).collect());
+
+    let mut jobs = fig_spec.expand();
+    let n_fig_jobs = jobs.len();
+    jobs.extend(pol_spec.expand());
+    let (outs, timing) = sweep::execute_timed(&jobs, n_workers);
+
+    let by_kind = |kind: WorkloadKind| -> Vec<&RunOutput> {
+        outs[..n_fig_jobs]
+            .iter()
+            .filter(|o| o.workload == kind)
+            .collect()
+    };
+
+    let mut sections = Vec::new();
+    sections.push((
+        "Fig 3: stream bandwidth (MB/s)".to_string(),
+        stream_figure(&by_kind(WorkloadKind::Stream)).0,
+    ));
+    sections.push((
+        "Fig 4: membench random-read latency (ns)".to_string(),
+        membench_figure(&by_kind(WorkloadKind::Membench)).0,
+    ));
+    sections.push((
+        "Fig 5: Viper QPS, 216B records".to_string(),
+        viper_figure(&by_kind(WorkloadKind::Viper216)).0,
+    ));
+    sections.push((
+        "Fig 6: Viper QPS, 532B records".to_string(),
+        viper_figure(&by_kind(WorkloadKind::Viper532)).0,
+    ));
+    sections.push((
+        "SIII-C: cache policy sweep (Viper 216B)".to_string(),
+        policy_figure(
+            &PolicyKind::ALL,
+            &outs[n_fig_jobs..].iter().collect::<Vec<_>>(),
+        )
+        .0,
+    ));
+    sections.push((
+        "sweep summary (per job)".to_string(),
+        sweep::summary_table(&jobs, &outs),
+    ));
+    AllFiguresReport { sections, timing }
+}
+
+// ------------------------------------------------------- ablations etc.
 
 /// MSHR ablation: flash reads with vs without request merging.
 ///
@@ -206,6 +358,11 @@ pub fn policy_sweep(
 /// page, as a multi-outstanding host interconnect delivers them. Without
 /// MSHR tracking every overlapping request re-reads flash.
 pub fn mshr_ablation(scale: ExpScale) -> (Table, Vec<(usize, f64, f64)>) {
+    mshr_ablation_cfg(&presets::table1(), scale)
+}
+
+/// MSHR ablation over a caller-supplied base config.
+pub fn mshr_ablation_cfg(base: &SimConfig, scale: ExpScale) -> (Table, Vec<(usize, f64, f64)>) {
     use crate::devices::build_device;
 
     let mut table = Table::new(&["mshr entries", "ssd reads", "redundant", "mean us"]);
@@ -213,7 +370,7 @@ pub fn mshr_ablation(scale: ExpScale) -> (Table, Vec<(usize, f64, f64)>) {
     let pages = if scale.quick { 64 } else { 512 };
     let burst = 16; // concurrent 64B requests per 4KB page
     for entries in [0usize, 4, 64] {
-        let mut cfg = presets::table1();
+        let mut cfg = base.clone();
         cfg.dcache.mshr_entries = entries;
         // Pages must be flash-mapped or fills skip flash entirely: write
         // them, then evict them with a conflicting sweep (the dirty
@@ -262,7 +419,16 @@ pub fn mshr_ablation(scale: ExpScale) -> (Table, Vec<(usize, f64, f64)>) {
 
 /// Fast-mode ablation: surrogate accuracy + speedup per device.
 pub fn fastmode_ablation(artifacts_dir: &str, scale: ExpScale) -> Result<(Table, Vec<FastReport>)> {
-    let cfg = presets::table1();
+    fastmode_ablation_cfg(&presets::table1(), artifacts_dir, scale)
+}
+
+/// Fast-mode ablation over a caller-supplied base config.
+pub fn fastmode_ablation_cfg(
+    base: &SimConfig,
+    artifacts_dir: &str,
+    scale: ExpScale,
+) -> Result<(Table, Vec<FastReport>)> {
+    let cfg = base.clone();
     let mut table = Table::new(&[
         "device",
         "accesses",
@@ -387,5 +553,24 @@ mod tests {
         let s = t.render();
         assert!(s.contains("150 ns"));
         assert!(s.contains("16 GB"));
+    }
+
+    #[test]
+    fn spec_builders_scale_with_quick() {
+        let q = ExpScale::quick();
+        let f = ExpScale::full();
+        match (q.stream_spec(), f.stream_spec()) {
+            (
+                WorkloadSpec::Stream { dataset_bytes: a, .. },
+                WorkloadSpec::Stream { dataset_bytes: b, .. },
+            ) => assert!(a < b),
+            other => panic!("{other:?}"),
+        }
+        match q.policy_viper_spec(216) {
+            WorkloadSpec::Viper { zipf_theta, .. } => {
+                assert!((zipf_theta - 0.99).abs() < 1e-12)
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

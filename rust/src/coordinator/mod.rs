@@ -3,20 +3,20 @@
 //! experiment sweeps that regenerate the paper's figures.
 
 pub mod experiments;
+pub mod sweep;
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::SimConfig;
-use crate::cpu::Core;
 use crate::devices::{build_device, DeviceKind};
 use crate::sim::{Tick, NS};
 use crate::stats::Histogram;
 use crate::surrogate::Surrogate;
-use crate::topology::{System, SystemStats};
+use crate::topology::SystemStats;
 use crate::trace::Trace;
-use crate::workloads::{Membench, MembenchResult, Stream, StreamResult, Viper, ViperResult, WorkloadKind};
+use crate::workloads::{MembenchResult, StreamResult, ViperResult, WorkloadKind, WorkloadSpec};
 
 /// Everything a detailed run produces.
 pub struct RunOutput {
@@ -54,46 +54,10 @@ fn run_inner(
     cfg: &SimConfig,
     capture: bool,
 ) -> (RunOutput, Option<Trace>) {
-    let mut sys = System::new(device, cfg);
-    let mut core = Core::new(cfg.cpu);
-    if capture {
-        sys.enable_trace();
-    }
-    let wall = Instant::now();
-
-    let mut stream = None;
-    let mut membench = None;
-    let mut viper = None;
-    match workload {
-        WorkloadKind::Stream => {
-            stream = Some(Stream::default().run(&mut core, &mut sys));
-        }
-        WorkloadKind::Membench => {
-            membench = Some(Membench::default().run(&mut core, &mut sys));
-        }
-        WorkloadKind::Viper216 => {
-            viper = Some(Viper::new_216().run(&mut core, &mut sys));
-        }
-        WorkloadKind::Viper532 => {
-            viper = Some(Viper::new_532().run(&mut core, &mut sys));
-        }
-    }
-    sys.drain(core.now());
-
-    let host_seconds = wall.elapsed().as_secs_f64();
-    let trace = capture.then(|| sys.take_trace());
-    let out = RunOutput {
-        device,
-        workload,
-        sim_ticks: core.now(),
-        host_seconds,
-        stream,
-        membench,
-        viper,
-        system: sys.stats().clone(),
-        device_kv: sys.device_stats_kv(),
-    };
-    (out, trace)
+    // One dispatch path for one-off runs and sweep jobs (sweep::run_spec):
+    // the full-scale spec for `workload`, seeded from `cfg.seed`.
+    let spec = WorkloadSpec::default_for(workload);
+    sweep::run_spec(device, &spec, cfg, capture)
 }
 
 /// Fast-vs-detailed comparison on one trace (the fast-mode ablation).

@@ -1,0 +1,484 @@
+//! Parallel sweep engine: expand a cross-product [`SweepSpec`] into
+//! independent [`RunJob`]s and execute them across threads.
+//!
+//! This is the scaling substrate for the paper's experiment campaigns
+//! (Figs 3-6, the policy sweep, and every future multi-configuration
+//! study): one declarative spec expands into jobs, each job owns a fresh
+//! [`System`] + [`Core`], and a small worker pool over `std::thread`
+//! drains the job list (rayon is unavailable offline).
+//!
+//! ## Determinism
+//!
+//! Parallel output is **bit-identical** to serial output:
+//!
+//! - Each job's RNG seed is derived from its *coordinates* in the spec
+//!   (base seed x workload index), never from execution order, thread
+//!   identity, or wall-clock time.
+//! - Jobs share no mutable state; results land in a per-job slot, so the
+//!   output vector order matches [`SweepSpec::expand`] order regardless
+//!   of which worker finished first.
+//!
+//! The seed deliberately does *not* mix in the device or policy
+//! coordinate: every figure in the paper compares devices (or cache
+//! policies) on the **same operation stream**, so jobs that differ only
+//! by device/policy must replay identical workload randomness - the
+//! paired-comparison discipline the figures rely on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::cache::PolicyKind;
+use crate::config::SimConfig;
+use crate::coordinator::RunOutput;
+use crate::cpu::Core;
+use crate::devices::DeviceKind;
+use crate::sim::to_sec;
+use crate::stats::{Histogram, Table};
+use crate::topology::System;
+use crate::trace::Trace;
+use crate::workloads::{Membench, Stream, Viper, WorkloadKind, WorkloadSpec};
+
+/// A declarative experiment sweep: the cross product of devices,
+/// workload specs and (optional) cache-policy overrides over one base
+/// configuration.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub base: SimConfig,
+    pub devices: Vec<DeviceKind>,
+    pub workloads: Vec<WorkloadSpec>,
+    /// `None` keeps the base config's policy; `Some(p)` overrides
+    /// `dcache.policy` (only meaningful for the cached CXL-SSD).
+    pub policies: Vec<Option<PolicyKind>>,
+}
+
+impl SweepSpec {
+    pub fn new(base: SimConfig) -> Self {
+        SweepSpec {
+            base,
+            devices: Vec::new(),
+            workloads: Vec::new(),
+            policies: vec![None],
+        }
+    }
+
+    pub fn devices(mut self, devices: Vec<DeviceKind>) -> Self {
+        self.devices = devices;
+        self
+    }
+
+    pub fn workloads(mut self, workloads: Vec<WorkloadSpec>) -> Self {
+        self.workloads = workloads;
+        self
+    }
+
+    pub fn policies(mut self, policies: Vec<Option<PolicyKind>>) -> Self {
+        self.policies = policies;
+        self
+    }
+
+    /// Number of jobs `expand` produces.
+    pub fn len(&self) -> usize {
+        self.devices.len() * self.workloads.len() * self.policies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into independent jobs, device-major then workload then
+    /// policy (the iteration order the figure tables expect).
+    pub fn expand(&self) -> Vec<RunJob> {
+        // Seed salt per workload: kind ordinal in the high bits plus the
+        // occurrence index among same-kind specs. This keeps a given
+        // workload's stream identical whether it runs standalone or
+        // inside a combined campaign (fig4 alone == fig4 inside `all`),
+        // while distinct variants of one kind still get distinct seeds.
+        let mut salts = Vec::with_capacity(self.workloads.len());
+        let mut occurrence = vec![0u64; WorkloadKind::ALL.len()];
+        for w in &self.workloads {
+            let ord = WorkloadKind::ALL
+                .iter()
+                .position(|k| *k == w.kind())
+                .unwrap_or(0);
+            salts.push(((ord as u64) << 16) | occurrence[ord]);
+            occurrence[ord] += 1;
+        }
+
+        let mut jobs = Vec::with_capacity(self.len());
+        for &device in &self.devices {
+            for (wi, workload) in self.workloads.iter().enumerate() {
+                for &policy in &self.policies {
+                    let mut cfg = self.base.clone();
+                    if let Some(p) = policy {
+                        cfg.dcache.policy = p;
+                    }
+                    cfg.seed = job_seed(self.base.seed, salts[wi]);
+                    jobs.push(RunJob {
+                        device,
+                        workload: workload.clone(),
+                        policy,
+                        cfg,
+                    });
+                }
+            }
+        }
+        jobs
+    }
+}
+
+/// One fully resolved unit of work: device + workload + config (seed and
+/// policy already applied). Plain data - `Send + Sync` by construction.
+#[derive(Debug, Clone)]
+pub struct RunJob {
+    pub device: DeviceKind,
+    pub workload: WorkloadSpec,
+    pub policy: Option<PolicyKind>,
+    pub cfg: SimConfig,
+}
+
+impl RunJob {
+    /// Short label for progress/summary output.
+    pub fn label(&self) -> String {
+        match self.policy {
+            Some(p) => format!("{}+{} {}", self.device.name(), p.name(), self.workload.label()),
+            None => format!("{} {}", self.device.name(), self.workload.label()),
+        }
+    }
+}
+
+/// Deterministic per-job seed from sweep coordinates (SplitMix64 mix).
+///
+/// Depends only on the base seed and the workload salt (kind ordinal +
+/// occurrence, see [`SweepSpec::expand`]) - the module docs explain why
+/// device/policy coordinates are deliberately excluded.
+pub fn job_seed(base_seed: u64, workload_salt: u64) -> u64 {
+    let mut z = base_seed ^ workload_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run one job to completion on the current thread.
+pub fn run_job(job: &RunJob) -> RunOutput {
+    run_spec(job.device, &job.workload, &job.cfg, false).0
+}
+
+/// Run one workload spec on a fresh system — the single dispatch path
+/// shared by sweep jobs and the coordinator's one-off `run`/
+/// `run_with_trace` (so both seed workloads from `cfg.seed` and report
+/// identical numbers for identical configs). Optionally captures the
+/// device-access trace.
+pub fn run_spec(
+    device: DeviceKind,
+    workload: &WorkloadSpec,
+    cfg: &SimConfig,
+    capture: bool,
+) -> (RunOutput, Option<Trace>) {
+    let mut sys = System::new(device, cfg);
+    let mut core = Core::new(cfg.cpu);
+    if capture {
+        sys.enable_trace();
+    }
+    let wall = Instant::now();
+
+    let mut stream = None;
+    let mut membench = None;
+    let mut viper = None;
+    match workload {
+        WorkloadSpec::Stream {
+            dataset_bytes,
+            repeats,
+        } => {
+            stream = Some(
+                Stream {
+                    dataset_bytes: *dataset_bytes,
+                    repeats: *repeats,
+                }
+                .run(&mut core, &mut sys),
+            );
+        }
+        WorkloadSpec::Membench {
+            mode,
+            footprint,
+            ops,
+            warmup,
+        } => {
+            membench = Some(
+                Membench {
+                    mode: *mode,
+                    footprint: *footprint,
+                    ops: *ops,
+                    seed: cfg.seed,
+                    warmup: *warmup,
+                }
+                .run(&mut core, &mut sys),
+            );
+        }
+        WorkloadSpec::Viper {
+            record_bytes,
+            prefill,
+            ops_per_phase,
+            zipf_theta,
+            t_op_work,
+        } => {
+            viper = Some(
+                Viper {
+                    record_bytes: *record_bytes,
+                    prefill: *prefill,
+                    ops_per_phase: *ops_per_phase,
+                    zipf_theta: *zipf_theta,
+                    t_op_work: *t_op_work,
+                    seed: cfg.seed,
+                }
+                .run(&mut core, &mut sys),
+            );
+        }
+    }
+    sys.drain(core.now());
+
+    let trace = if capture { Some(sys.take_trace()) } else { None };
+    let out = RunOutput {
+        device,
+        workload: workload.kind(),
+        sim_ticks: core.now(),
+        host_seconds: wall.elapsed().as_secs_f64(),
+        stream,
+        membench,
+        viper,
+        system: sys.stats().clone(),
+        device_kv: sys.device_stats_kv(),
+    };
+    (out, trace)
+}
+
+/// Worker count for `--jobs 0` (auto): one per available core.
+pub fn auto_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Execute `jobs` with up to `n_workers` threads; the output vector is
+/// index-aligned with `jobs` (and bit-identical to a serial run - see
+/// the module docs).
+pub fn execute(jobs: &[RunJob], n_workers: usize) -> Vec<RunOutput> {
+    let workers = n_workers.max(1).min(jobs.len());
+    if workers <= 1 {
+        return jobs.iter().map(run_job).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<RunOutput>>> =
+        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let out = run_job(&jobs[i]);
+                *slots[i].lock().expect("result slot poisoned") = Some(out);
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("result slot poisoned")
+                .expect("worker pool drained every job")
+        })
+        .collect()
+}
+
+/// Aggregate wall-clock / simulated-time accounting for one sweep.
+#[derive(Debug, Clone)]
+pub struct SweepTiming {
+    pub jobs: usize,
+    /// Sum of per-job host seconds (what a serial run would cost).
+    pub job_host_seconds: f64,
+    /// Wall-clock seconds for the whole (possibly parallel) sweep.
+    pub wall_seconds: f64,
+}
+
+impl SweepTiming {
+    /// Effective speedup: serial cost / wall cost.
+    pub fn speedup(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.job_host_seconds / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Execute with timing: returns outputs plus the sweep's timing summary.
+pub fn execute_timed(jobs: &[RunJob], n_workers: usize) -> (Vec<RunOutput>, SweepTiming) {
+    let wall = Instant::now();
+    let outs = execute(jobs, n_workers);
+    let timing = SweepTiming {
+        jobs: jobs.len(),
+        job_host_seconds: outs.iter().map(|o| o.host_seconds).sum(),
+        wall_seconds: wall.elapsed().as_secs_f64(),
+    };
+    (outs, timing)
+}
+
+/// Per-job summary table (device, workload, policy, simulated time, host
+/// time, device accesses) for the CLI's sweep report.
+pub fn summary_table(jobs: &[RunJob], outs: &[RunOutput]) -> Table {
+    let mut t = Table::new(&[
+        "job",
+        "device",
+        "workload",
+        "policy",
+        "sim ms",
+        "host s",
+        "dev accesses",
+    ]);
+    for (i, (job, out)) in jobs.iter().zip(outs.iter()).enumerate() {
+        t.row_owned(vec![
+            i.to_string(),
+            job.device.name().to_string(),
+            job.workload.label(),
+            job.policy.map_or("-".to_string(), |p| p.name().to_string()),
+            format!("{:.3}", to_sec(out.sim_ticks) * 1e3),
+            format!("{:.3}", out.host_seconds),
+            (out.system.device_reads + out.system.device_writes).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Merged device-latency histogram across every job of a sweep.
+pub fn merged_device_latency(outs: &[RunOutput]) -> Histogram {
+    let mut h = Histogram::new();
+    for out in outs {
+        h.merge(&out.system.device_latency);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::workloads::MembenchMode;
+
+    fn tiny_membench() -> WorkloadSpec {
+        WorkloadSpec::Membench {
+            mode: MembenchMode::RandomRead,
+            footprint: 1 << 20,
+            ops: 300,
+            warmup: false,
+        }
+    }
+
+    fn tiny_stream() -> WorkloadSpec {
+        WorkloadSpec::Stream {
+            dataset_bytes: 192 << 10,
+            repeats: 1,
+        }
+    }
+
+    #[test]
+    fn expand_is_device_major_cross_product() {
+        let spec = SweepSpec::new(presets::small_test())
+            .devices(vec![DeviceKind::Dram, DeviceKind::Pmem])
+            .workloads(vec![tiny_membench(), tiny_stream()]);
+        let jobs = spec.expand();
+        assert_eq!(jobs.len(), 4);
+        assert_eq!(spec.len(), 4);
+        assert_eq!(jobs[0].device, DeviceKind::Dram);
+        assert_eq!(jobs[1].device, DeviceKind::Dram);
+        assert_eq!(jobs[2].device, DeviceKind::Pmem);
+        assert_eq!(jobs[0].workload.kind(), jobs[2].workload.kind());
+        // Same workload index on different devices -> same seed (paired
+        // comparison); different workload index -> different seed.
+        assert_eq!(jobs[0].cfg.seed, jobs[2].cfg.seed);
+        assert_ne!(jobs[0].cfg.seed, jobs[1].cfg.seed);
+    }
+
+    #[test]
+    fn policy_override_lands_in_job_config() {
+        let spec = SweepSpec::new(presets::small_test())
+            .devices(vec![DeviceKind::CxlSsdCached])
+            .workloads(vec![tiny_membench()])
+            .policies(vec![Some(PolicyKind::Fifo), None]);
+        let jobs = spec.expand();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].cfg.dcache.policy, PolicyKind::Fifo);
+        assert_eq!(jobs[1].cfg.dcache.policy, spec.base.dcache.policy);
+        // Policy does not perturb the seed.
+        assert_eq!(jobs[0].cfg.seed, jobs[1].cfg.seed);
+    }
+
+    #[test]
+    fn job_seed_is_pure_and_spread() {
+        assert_eq!(job_seed(1, 0), job_seed(1, 0));
+        assert_ne!(job_seed(1, 0), job_seed(1, 1));
+        assert_ne!(job_seed(1, 0), job_seed(2, 0));
+    }
+
+    #[test]
+    fn parallel_execution_matches_serial_bitwise() {
+        let spec = SweepSpec::new(presets::small_test())
+            .devices(vec![DeviceKind::Dram, DeviceKind::Pmem, DeviceKind::CxlDram])
+            .workloads(vec![tiny_membench()]);
+        let jobs = spec.expand();
+        let serial = execute(&jobs, 1);
+        let parallel = execute(&jobs, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(parallel.iter()) {
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.sim_ticks, b.sim_ticks);
+            assert_eq!(a.system.loads, b.system.loads);
+            assert_eq!(a.system.device_reads, b.system.device_reads);
+            let (ma, mb) = (a.membench.as_ref().unwrap(), b.membench.as_ref().unwrap());
+            assert_eq!(ma.mean_ns.to_bits(), mb.mean_ns.to_bits());
+            assert_eq!(ma.p99_ns.to_bits(), mb.p99_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn more_workers_than_jobs_is_fine() {
+        let spec = SweepSpec::new(presets::small_test())
+            .devices(vec![DeviceKind::Dram])
+            .workloads(vec![tiny_membench()]);
+        let outs = execute(&spec.expand(), 8);
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].sim_ticks > 0);
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        let outs = execute(&[], 4);
+        assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn timing_and_summary_cover_all_jobs() {
+        let spec = SweepSpec::new(presets::small_test())
+            .devices(vec![DeviceKind::Dram, DeviceKind::Pmem])
+            .workloads(vec![tiny_membench()]);
+        let jobs = spec.expand();
+        let (outs, timing) = execute_timed(&jobs, 2);
+        assert_eq!(timing.jobs, 2);
+        assert!(timing.wall_seconds >= 0.0);
+        assert!(timing.job_host_seconds >= 0.0);
+        let table = summary_table(&jobs, &outs).render();
+        assert!(table.contains("dram"));
+        assert!(table.contains("pmem"));
+        let merged = merged_device_latency(&outs);
+        assert_eq!(
+            merged.count(),
+            outs.iter()
+                .map(|o| o.system.device_latency.count())
+                .sum::<u64>()
+        );
+    }
+}

@@ -63,17 +63,26 @@ impl CxlMsgClass {
 }
 
 /// Errors surfaced when decoding a flit off the wire.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FlitDecodeError {
-    #[error("unknown message class byte {0:#04x}")]
     BadMsgClass(u8),
-    #[error("unknown MetaValue byte {0:#04x}")]
     BadMetaValue(u8),
-    #[error("address {0:#x} not 64B aligned")]
     UnalignedAddr(u64),
-    #[error("zero logical block count")]
     ZeroBlocks,
 }
+
+impl std::fmt::Display for FlitDecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FlitDecodeError::BadMsgClass(b) => write!(f, "unknown message class byte {b:#04x}"),
+            FlitDecodeError::BadMetaValue(b) => write!(f, "unknown MetaValue byte {b:#04x}"),
+            FlitDecodeError::UnalignedAddr(a) => write!(f, "address {a:#x} not 64B aligned"),
+            FlitDecodeError::ZeroBlocks => write!(f, "zero logical block count"),
+        }
+    }
+}
+
+impl std::error::Error for FlitDecodeError {}
 
 /// A decoded CXL.mem flit.
 #[derive(Debug, Clone, PartialEq, Eq)]

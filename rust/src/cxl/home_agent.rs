@@ -199,7 +199,7 @@ impl HomeAgent {
 
     fn release_credit(&mut self, done: Tick) {
         debug_assert!(
-            self.completions.back().is_none_or(|&b| b <= done),
+            self.completions.back().map_or(true, |&b| b <= done),
             "responses must complete in order"
         );
         self.completions.push_back(done);

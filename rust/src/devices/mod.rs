@@ -53,6 +53,17 @@ impl DeviceKind {
             DeviceKind::CxlSsdCached => "cxl-ssd-cache",
         }
     }
+
+    /// Parse a comma-separated device list; `"all"` expands to every
+    /// device in figure order. Returns `None` on any unknown name.
+    pub fn parse_list(s: &str) -> Option<Vec<DeviceKind>> {
+        if s.trim().eq_ignore_ascii_case("all") {
+            return Some(DeviceKind::ALL.to_vec());
+        }
+        s.split(',')
+            .map(|part| DeviceKind::parse(part.trim()))
+            .collect()
+    }
 }
 
 /// A memory device mapped into the extension address window.
@@ -372,6 +383,19 @@ mod tests {
             assert_eq!(DeviceKind::parse(k.name()), Some(k));
         }
         assert_eq!(DeviceKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn device_list_parsing() {
+        assert_eq!(
+            DeviceKind::parse_list("dram, pmem"),
+            Some(vec![DeviceKind::Dram, DeviceKind::Pmem])
+        );
+        assert_eq!(
+            DeviceKind::parse_list("all"),
+            Some(DeviceKind::ALL.to_vec())
+        );
+        assert_eq!(DeviceKind::parse_list("dram,floppy"), None);
     }
 
     #[test]

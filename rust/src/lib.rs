@@ -3,7 +3,9 @@
 //!
 //! Reproduction of *"A Full-System Simulation Framework for CXL-Based SSD
 //! Memory System"* (Wang et al., 2025) as a three-layer rust + JAX/Pallas
-//! stack. See `DESIGN.md` for the architecture and the experiment index.
+//! stack. See `DESIGN.md` (repo root) for the architecture, the parallel
+//! sweep engine, and the experiment index; `README.md` has build/run
+//! instructions.
 //!
 //! Layer map:
 //! - **L3 (this crate)** — the simulator: discrete-event core ([`sim`]),
@@ -11,7 +13,8 @@
 //!   timing models ([`dram`], [`pmem`], [`ssd`]), the expander DRAM cache
 //!   layer ([`cache`]), device compositions ([`devices`]), host CPU +
 //!   cache hierarchy ([`cpu`]), workloads ([`workloads`]), orchestration
-//!   ([`coordinator`]) and the CLI ([`cli`]).
+//!   plus the parallel sweep engine ([`coordinator`]) and the CLI
+//!   ([`cli`]).
 //! - **L2/L1 (python/, build-time)** — JAX surrogate models + Pallas
 //!   timing kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from
 //!   rust through [`runtime`] / [`surrogate`] in fast mode.

@@ -179,6 +179,17 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
+    /// Append a row, taking ownership of the cells (no clone).
+    pub fn row_owned(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Number of data rows.
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths = vec![0usize; ncol];
@@ -276,6 +287,16 @@ mod tests {
         assert_eq!(lines[0].len(), lines[2].len());
         assert_eq!(lines[0].len(), lines[3].len());
         assert!(lines[0].contains("device"));
+    }
+
+    #[test]
+    fn row_owned_matches_row() {
+        let mut a = Table::new(&["x", "y"]);
+        let mut b = Table::new(&["x", "y"]);
+        a.row(&["1".into(), "2".into()]);
+        b.row_owned(vec!["1".into(), "2".into()]);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.n_rows(), 1);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
 use crate::devices::DeviceKind;
-use crate::runtime::LoadedModel;
+use crate::runtime::{Literal, LoadedModel};
 use crate::sim::Tick;
 use crate::trace::Trace;
 
@@ -92,7 +92,7 @@ pub struct Surrogate {
     batch: usize,
     /// Device timing-state literals threaded between batches
     /// (order matches the artifact's trailing parameters/outputs).
-    state: Vec<xla::Literal>,
+    state: Vec<Literal>,
 }
 
 impl Surrogate {
@@ -124,9 +124,9 @@ impl Surrogate {
     }
 
     /// Fresh timing-state literals (device reset).
-    fn initial_state(kind: DeviceKind, cfg: &SimConfig) -> Vec<xla::Literal> {
-        let f64v = |n: usize| xla::Literal::vec1(&vec![0f64; n]);
-        let i32v = |n: usize, fill: i32| xla::Literal::vec1(&vec![fill; n]);
+    fn initial_state(kind: DeviceKind, cfg: &SimConfig) -> Vec<Literal> {
+        let f64v = |n: usize| Literal::vec1(&vec![0f64; n]);
+        let i32v = |n: usize, fill: i32| Literal::vec1(&vec![fill; n]);
         match kind {
             DeviceKind::Dram | DeviceKind::CxlDram => {
                 let nb = cfg.dram.n_banks;
@@ -169,10 +169,10 @@ impl Surrogate {
         live: usize,
     ) -> Result<Vec<Tick>> {
         debug_assert_eq!(idx.len(), self.batch);
-        let mut inputs: Vec<xla::Literal> = vec![
-            xla::Literal::vec1(idx),
-            xla::Literal::vec1(is_write),
-            xla::Literal::vec1(gap),
+        let mut inputs: Vec<Literal> = vec![
+            Literal::vec1(idx),
+            Literal::vec1(is_write),
+            Literal::vec1(gap),
         ];
         inputs.extend(self.state.drain(..));
         let mut outputs = self.model.execute(&inputs)?;

@@ -1,0 +1,136 @@
+//! `sim::EventQueue` invariants the parallel engine leans on: stable
+//! same-tick FIFO ordering (bit-reproducible runs), token cancellation,
+//! and monotonic time.
+
+use cxl_ssd_sim::sim::{EventQueue, EventToken, Tick};
+use cxl_ssd_sim::testing::{check, SplitMix64};
+
+#[test]
+fn same_tick_events_pop_in_insertion_order_at_scale() {
+    // Many events across few ticks, interleaved schedules: within one
+    // tick the payloads must come back in exactly insertion order.
+    let mut q = EventQueue::new();
+    let mut expected: Vec<Vec<u64>> = vec![Vec::new(); 4];
+    let mut rng = SplitMix64::new(0xF1F0);
+    for i in 0..2_000u64 {
+        let tick = rng.below(4);
+        q.schedule(tick, i);
+        expected[tick as usize].push(i);
+    }
+    let mut got: Vec<Vec<u64>> = vec![Vec::new(); 4];
+    while let Some((when, payload)) = q.pop() {
+        got[when as usize].push(payload);
+    }
+    assert_eq!(got, expected);
+}
+
+#[test]
+fn fifo_order_survives_interleaved_pops() {
+    // Pop in the middle of scheduling: later same-tick inserts still
+    // land after earlier ones.
+    let mut q = EventQueue::new();
+    q.schedule(5, "a");
+    q.schedule(5, "b");
+    assert_eq!(q.pop(), Some((5, "a")));
+    q.schedule(5, "c"); // same tick as current now: allowed
+    assert_eq!(q.pop(), Some((5, "b")));
+    assert_eq!(q.pop(), Some((5, "c")));
+    assert_eq!(q.pop(), None);
+}
+
+#[test]
+fn cancellation_by_token_skips_only_that_event() {
+    let mut q = EventQueue::new();
+    let tokens: Vec<EventToken> = (0..10).map(|i| q.schedule(10, i)).collect();
+    // Cancel every even-indexed event.
+    for (i, t) in tokens.iter().enumerate() {
+        if i % 2 == 0 {
+            q.cancel(*t);
+        }
+    }
+    let survivors: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+    assert_eq!(survivors, vec![1, 3, 5, 7, 9]);
+}
+
+#[test]
+fn cancelling_twice_or_after_pop_is_harmless() {
+    let mut q = EventQueue::new();
+    let t1 = q.schedule(1, 1);
+    let t2 = q.schedule(2, 2);
+    q.cancel(t1);
+    q.cancel(t1); // double cancel: no effect
+    assert_eq!(q.pop(), Some((2, 2)));
+    q.cancel(t2); // already popped: no effect
+    assert!(q.is_empty());
+    // Queue still works after stale cancels.
+    q.schedule(3, 3);
+    assert_eq!(q.pop(), Some((3, 3)));
+}
+
+#[test]
+fn peek_skips_cancelled_heads_and_agrees_with_pop() {
+    let mut q = EventQueue::new();
+    let a = q.schedule(1, 'a');
+    let b = q.schedule(2, 'b');
+    q.schedule(3, 'c');
+    q.cancel(a);
+    q.cancel(b);
+    assert_eq!(q.peek(), Some(3));
+    assert_eq!(q.pop(), Some((3, 'c')));
+    assert_eq!(q.peek(), None);
+    assert!(q.is_empty());
+}
+
+#[test]
+fn now_is_monotone_under_random_load() {
+    // Property: with schedules never in the past, `now()` never goes
+    // backwards across an arbitrary schedule/pop/cancel interleaving.
+    check("event queue monotonic now", 50, |rng| {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        let mut live_tokens: Vec<EventToken> = Vec::new();
+        let mut last_now: Tick = 0;
+        for step in 0..400u64 {
+            match rng.below(10) {
+                // Schedule at or after `now` (past scheduling is a
+                // debug-asserted logic error).
+                0..=5 => {
+                    let when = q.now() + rng.below(1_000);
+                    live_tokens.push(q.schedule(when, step));
+                }
+                6..=7 => {
+                    if let Some((when, _)) = q.pop() {
+                        assert!(when >= last_now, "time ran backwards");
+                        assert_eq!(q.now(), when);
+                        last_now = when;
+                    }
+                }
+                _ => {
+                    if !live_tokens.is_empty() {
+                        let i = rng.below(live_tokens.len() as u64) as usize;
+                        let t = live_tokens.swap_remove(i);
+                        q.cancel(t);
+                    }
+                }
+            }
+            assert!(q.now() >= last_now);
+        }
+        // Drain: remaining pops still monotone.
+        while let Some((when, _)) = q.pop() {
+            assert!(when >= last_now);
+            last_now = when;
+        }
+    });
+}
+
+#[test]
+fn len_is_an_upper_bound_on_live_events() {
+    let mut q = EventQueue::new();
+    let t = q.schedule(1, 1);
+    q.schedule(2, 2);
+    q.cancel(t);
+    // len() may still count the cancelled entry (documented upper
+    // bound), but is_empty()/peek() must see through it.
+    assert!(q.len() >= 1);
+    assert!(!q.is_empty());
+    assert_eq!(q.peek(), Some(2));
+}

@@ -1,0 +1,109 @@
+//! Serial-vs-parallel equivalence: every figure sweep must produce
+//! bit-identical data whether it runs on 1 worker or many.
+//!
+//! This is the core guarantee of the sweep engine (seeds derive from
+//! sweep coordinates, results land in per-job slots), and the property
+//! every later scaling PR leans on.
+
+use cxl_ssd_sim::cache::PolicyKind;
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::coordinator::experiments::{self, ExpScale};
+use cxl_ssd_sim::coordinator::sweep::{self, SweepSpec};
+use cxl_ssd_sim::devices::DeviceKind;
+
+const PAR: usize = 4;
+
+fn assert_f64_identical(name: &str, a: f64, b: f64) {
+    assert_eq!(
+        a.to_bits(),
+        b.to_bits(),
+        "{name}: serial {a} != parallel {b}"
+    );
+}
+
+#[test]
+fn fig3_serial_and_parallel_identical() {
+    let cfg = presets::table1();
+    let (ta, a) = experiments::fig3_bandwidth_cfg(&cfg, ExpScale::quick(), 1);
+    let (tb, b) = experiments::fig3_bandwidth_cfg(&cfg, ExpScale::quick(), PAR);
+    assert_eq!(ta.render(), tb.render());
+    assert_eq!(a.len(), b.len());
+    for ((da, va), (db, vb)) in a.iter().zip(b.iter()) {
+        assert_eq!(da, db);
+        assert_eq!(va.len(), vb.len());
+        for (x, y) in va.iter().zip(vb.iter()) {
+            assert_f64_identical("fig3 MB/s", *x, *y);
+        }
+    }
+}
+
+#[test]
+fn fig4_serial_and_parallel_identical() {
+    let cfg = presets::table1();
+    let (ta, a) = experiments::fig4_latency_cfg(&cfg, ExpScale::quick(), 1);
+    let (tb, b) = experiments::fig4_latency_cfg(&cfg, ExpScale::quick(), PAR);
+    assert_eq!(ta.render(), tb.render());
+    for ((da, xa), (db, xb)) in a.iter().zip(b.iter()) {
+        assert_eq!(da, db);
+        assert_f64_identical("fig4 mean ns", *xa, *xb);
+    }
+}
+
+#[test]
+fn fig5_serial_and_parallel_identical() {
+    let cfg = presets::table1();
+    let (ta, a) = experiments::fig56_viper_cfg(&cfg, 216, ExpScale::quick(), 1);
+    let (tb, b) = experiments::fig56_viper_cfg(&cfg, 216, ExpScale::quick(), PAR);
+    assert_eq!(ta.render(), tb.render());
+    for ((da, kva), (db, kvb)) in a.iter().zip(b.iter()) {
+        assert_eq!(da, db);
+        assert_eq!(kva.len(), kvb.len());
+        for ((opa, qa), (opb, qb)) in kva.iter().zip(kvb.iter()) {
+            assert_eq!(opa, opb);
+            assert_f64_identical("fig5 QPS", *qa, *qb);
+        }
+    }
+}
+
+#[test]
+fn policy_sweep_serial_and_parallel_identical() {
+    let cfg = presets::table1();
+    let (ta, a) = experiments::policy_sweep_cfg(&cfg, 216, ExpScale::quick(), 1);
+    let (tb, b) = experiments::policy_sweep_cfg(&cfg, 216, ExpScale::quick(), PAR);
+    assert_eq!(ta.render(), tb.render());
+    for ((pa, ha, qa), (pb, hb, qb)) in a.iter().zip(b.iter()) {
+        assert_eq!(pa, pb);
+        assert_f64_identical("policy hit rate", *ha, *hb);
+        assert_f64_identical("policy QPS", *qa, *qb);
+    }
+}
+
+#[test]
+fn engine_results_match_workload_order_not_finish_order() {
+    // Deliberately lopsided jobs: a slow CXL-SSD job first, fast DRAM
+    // jobs after. With several workers the fast jobs finish first; the
+    // output vector must still be in expand() order.
+    let spec = SweepSpec::new(presets::small_test())
+        .devices(vec![DeviceKind::CxlSsd, DeviceKind::Dram, DeviceKind::Pmem])
+        .workloads(vec![ExpScale::quick().membench_spec()]);
+    let jobs = spec.expand();
+    let outs = sweep::execute(&jobs, 3);
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[0].device, DeviceKind::CxlSsd);
+    assert_eq!(outs[1].device, DeviceKind::Dram);
+    assert_eq!(outs[2].device, DeviceKind::Pmem);
+}
+
+#[test]
+fn policy_jobs_share_the_workload_stream() {
+    // Jobs differing only in replacement policy must replay the same
+    // operation stream (paired comparison): their System-level load and
+    // store counts are identical even though cache behavior differs.
+    let spec = SweepSpec::new(presets::small_test())
+        .devices(vec![DeviceKind::CxlSsdCached])
+        .workloads(vec![ExpScale::quick().membench_spec()])
+        .policies(vec![Some(PolicyKind::Lru), Some(PolicyKind::Fifo)]);
+    let outs = sweep::execute(&spec.expand(), 2);
+    assert_eq!(outs[0].system.loads, outs[1].system.loads);
+    assert_eq!(outs[0].system.stores, outs[1].system.stores);
+}

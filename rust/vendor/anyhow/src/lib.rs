@@ -1,0 +1,191 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build environment has no network access to crates.io, so this
+//! path crate provides the exact surface the simulator uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait for `Result`/`Option`,
+//! and the [`anyhow!`]/[`bail!`] macros. Error values are a chain of
+//! rendered messages (outermost first); `{:#}` formatting prints the
+//! whole chain, matching real anyhow's alternate Display.
+
+use std::fmt;
+
+/// `Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error chain: `chain[0]` is the outermost message, later entries
+/// are the causes (added by [`Context`] wrapping or source() walking).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        self.chain.first().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`;
+// that is what makes the blanket `From` below coexist with the standard
+// reflexive `impl From<T> for T` (same trick real anyhow uses).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full chain, colon-separated (anyhow convention).
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.root_message())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn from_std_error_captures_chain() {
+        let e: Error = io_err().into();
+        assert_eq!(e.root_message(), "missing file");
+    }
+
+    #[test]
+    fn context_wraps_outermost() {
+        let r: Result<()> = Err(io_err()).context("opening config");
+        let e = r.unwrap_err();
+        assert_eq!(e.root_message(), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: missing file");
+        assert_eq!(format!("{e}"), "opening config");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("--device required").unwrap_err();
+        assert_eq!(e.root_message(), "--device required");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(x: u32) -> Result<()> {
+            if x > 0 {
+                bail!("bad value {x}");
+            }
+            Err(anyhow!("zero: {}", x))
+        }
+        assert_eq!(fails(3).unwrap_err().root_message(), "bad value 3");
+        assert_eq!(fails(0).unwrap_err().root_message(), "zero: 0");
+    }
+
+    #[test]
+    fn question_mark_conversion_compiles() {
+        fn inner() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(inner().is_err());
+    }
+}
