@@ -23,6 +23,12 @@ pub struct Shapes {
     failed: usize,
 }
 
+impl Default for Shapes {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Shapes {
     pub fn new() -> Self {
         Shapes { failed: 0 }

@@ -1,0 +1,50 @@
+//! MLP saturation figure: stream triad bandwidth per device as the
+//! requester's outstanding-request window grows (ISSUE 2's acceptance
+//! shape: cxl-dram and cxl-ssd-cache at least double their mlp=1
+//! bandwidth by mlp=8, while nothing regresses at higher windows).
+
+mod bench_util;
+
+use bench_util::{timed, Shapes};
+use cxl_ssd_sim::coordinator::experiments::{mlp_sweep, ExpScale, MLP_SWEEP};
+use cxl_ssd_sim::devices::DeviceKind;
+
+fn main() {
+    let (table, raw) = timed("MLP sweep: stream triad MB/s vs window size", || {
+        mlp_sweep(ExpScale::full())
+    });
+    print!("{}", table.render());
+
+    let bw = |mlp: usize, device: DeviceKind| -> f64 {
+        raw.iter()
+            .find(|(m, d, _)| *m == mlp && *d == device)
+            .map(|(_, _, x)| *x)
+            .expect("sweep covers the full grid")
+    };
+
+    let mut s = Shapes::new();
+    for device in [DeviceKind::CxlDram, DeviceKind::CxlSsdCached] {
+        let (b1, b8) = (bw(1, device), bw(8, device));
+        println!(
+            "{}: mlp=1 {b1:.1} MB/s -> mlp=8 {b8:.1} MB/s ({:.2}x)",
+            device.name(),
+            b8 / b1
+        );
+        s.check(
+            &format!("{} at least doubles by mlp=8", device.name()),
+            b8 >= 2.0 * b1,
+        );
+    }
+    // Growing the window never costs bandwidth (small tolerance for
+    // queueing noise at deep windows).
+    for device in DeviceKind::ALL {
+        let monotone = MLP_SWEEP
+            .windows(2)
+            .all(|w| bw(w[1], device) >= bw(w[0], device) * 0.95);
+        s.check(
+            &format!("{} bandwidth non-decreasing in mlp", device.name()),
+            monotone,
+        );
+    }
+    s.finish();
+}

@@ -112,18 +112,7 @@ impl PageCache {
     pub fn lookup(&mut self, now: Tick, page: u64, is_write: bool) -> Lookup {
         self.mshr.expire(now);
 
-        let frame_idx = match self.policy.kind() {
-            PolicyKind::Direct => {
-                let idx = (page % self.n_frames as u64) as usize;
-                match self.frames[idx] {
-                    Some(f) if f.page == page => Some(idx),
-                    _ => None,
-                }
-            }
-            _ => self.map.get(&page).copied(),
-        };
-
-        if let Some(idx) = frame_idx {
+        if let Some(idx) = self.frame_idx(page) {
             // Present — but a just-allocated frame may still be filling.
             let ready = self.frames[idx].as_ref().unwrap().ready;
             if now < ready {
@@ -180,17 +169,22 @@ impl PageCache {
     /// the MSHR; if the MSHR is full they become redundant flash reads.
     pub fn fill_done(&mut self, page: u64, done: Tick) {
         self.mshr.insert(page, done);
-        let idx = match self.policy.kind() {
+        if let Some(f) = self.frame_idx(page).and_then(|i| self.frames[i].as_mut()) {
+            f.ready = f.ready.max(done);
+        }
+    }
+
+    /// Frame currently holding `page`, if resident (Direct computes the
+    /// frame from the page number; associative policies consult the
+    /// map). The single source of truth for residency resolution —
+    /// lookup, fill_done, contains and clear_dirty all route through it.
+    fn frame_idx(&self, page: u64) -> Option<usize> {
+        match self.policy.kind() {
             PolicyKind::Direct => {
                 let i = (page % self.n_frames as u64) as usize;
                 matches!(self.frames[i], Some(f) if f.page == page).then_some(i)
             }
             _ => self.map.get(&page).copied(),
-        };
-        if let Some(i) = idx {
-            if let Some(f) = self.frames[i].as_mut() {
-                f.ready = f.ready.max(done);
-            }
         }
     }
 
@@ -227,13 +221,7 @@ impl PageCache {
 
     /// Is `page` currently resident (regardless of fill state)?
     pub fn contains(&self, page: u64) -> bool {
-        match self.policy.kind() {
-            PolicyKind::Direct => {
-                let idx = (page % self.n_frames as u64) as usize;
-                matches!(self.frames[idx], Some(f) if f.page == page)
-            }
-            _ => self.map.contains_key(&page),
-        }
+        self.frame_idx(page).is_some()
     }
 
     /// Number of resident pages.
@@ -242,6 +230,11 @@ impl PageCache {
     }
 
     /// Drain: list of dirty resident pages (end-of-run writeback).
+    ///
+    /// Read-only view; a flusher that actually writes the pages back
+    /// must consume dirtiness via [`take_dirty_pages`](Self::take_dirty_pages)
+    /// (or [`clear_dirty`](Self::clear_dirty) per page) or later
+    /// evictions will write the same pages back again.
     pub fn dirty_pages(&self) -> Vec<u64> {
         self.frames
             .iter()
@@ -249,6 +242,32 @@ impl PageCache {
             .filter(|f| f.dirty)
             .map(|f| f.page)
             .collect()
+    }
+
+    /// Clear `page`'s dirty bit (it has been written back); returns
+    /// whether it was dirty. Counts a writeback when it was.
+    pub fn clear_dirty(&mut self, page: u64) -> bool {
+        if let Some(f) = self.frame_idx(page).and_then(|i| self.frames[i].as_mut()) {
+            if f.dirty {
+                f.dirty = false;
+                self.stats.writebacks += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Drain every dirty page for write-back, clearing the dirty bits
+    /// and counting the writebacks — the flush path of the device
+    /// layer. Routes through [`clear_dirty`](Self::clear_dirty) so the
+    /// writeback accounting lives in exactly one place.
+    pub fn take_dirty_pages(&mut self) -> Vec<u64> {
+        let pages = self.dirty_pages();
+        for &page in &pages {
+            let _cleared = self.clear_dirty(page);
+            debug_assert!(_cleared, "dirty_pages listed a clean page");
+        }
+        pages
     }
 
     pub fn stats(&self) -> &CacheStats {
@@ -341,6 +360,87 @@ mod tests {
         c.fill_done(7, 1_000);
         c.lookup(500, 7, true); // merge + dirty
         assert_eq!(c.dirty_pages(), vec![7]);
+    }
+
+    #[test]
+    fn take_dirty_pages_consumes_dirtiness() {
+        for kind in PolicyKind::ALL {
+            let mut c = cache(kind);
+            c.lookup(0, 1, true);
+            c.lookup(0, 2, true);
+            c.lookup(0, 3, false);
+            let mut drained = c.take_dirty_pages();
+            drained.sort_unstable();
+            assert_eq!(drained, vec![1, 2], "{kind:?}");
+            assert_eq!(c.stats().writebacks, 2, "{kind:?}");
+            // Dirtiness consumed: a second drain finds nothing.
+            assert!(c.take_dirty_pages().is_empty(), "{kind:?}");
+            assert!(c.dirty_pages().is_empty(), "{kind:?}");
+            assert_eq!(c.stats().writebacks, 2, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn clear_dirty_targets_one_page() {
+        let mut c = cache(PolicyKind::Lru);
+        c.lookup(0, 1, true);
+        c.lookup(0, 2, true);
+        assert!(c.clear_dirty(1));
+        assert!(!c.clear_dirty(1), "already clean");
+        assert!(!c.clear_dirty(99), "not resident");
+        assert_eq!(c.dirty_pages(), vec![2]);
+        assert_eq!(c.stats().writebacks, 1);
+    }
+
+    #[test]
+    fn cleared_page_evicts_without_writeback() {
+        let mut c = cache(PolicyKind::Lru);
+        c.lookup(0, 0, true);
+        c.clear_dirty(0);
+        for p in 1..4 {
+            c.lookup(0, p, false);
+        }
+        // Page 0 is LRU and clean: its eviction reports no writeback.
+        match c.lookup(0, 99, false) {
+            Lookup::Miss { writeback } => assert_eq!(writeback, None),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.stats().writebacks, 1, "only the explicit clear_dirty");
+    }
+
+    #[test]
+    fn mshr_capacity_zero_counts_redundant_fills_not_allocations() {
+        // An MSHR that can track nothing: every overlapping request is a
+        // redundant flash read, and repeated fill_done registrations must
+        // not count as (or inflate) fresh allocations.
+        let mut c = PageCache::new(4, PolicyKind::Lru, 0);
+        assert!(matches!(c.lookup(0, 5, false), Lookup::Miss { .. }));
+        c.fill_done(5, 50_000); // rejected: capacity 0
+        match c.lookup(10, 5, false) {
+            Lookup::Miss { writeback } => assert_eq!(writeback, None),
+            other => panic!("expected redundant-fill miss, got {other:?}"),
+        }
+        c.fill_done(5, 60_000); // device re-serviced the miss
+        assert_eq!(c.stats().redundant_fills, 1);
+        assert_eq!(c.stats().mshr_merges, 0);
+        let m = c.mshr_stats();
+        assert_eq!(m.allocations, 0);
+        assert_eq!(m.re_registrations, 0);
+        assert_eq!(m.capacity_rejections, 2);
+    }
+
+    #[test]
+    fn refill_of_tracked_page_counts_as_re_registration() {
+        // A page whose frame was stolen while its fill was still tracked
+        // re-misses; the second fill_done re-registers the same MSHR
+        // entry and must not inflate `allocations`.
+        let mut c = cache(PolicyKind::Lru);
+        assert!(matches!(c.lookup(0, 7, false), Lookup::Miss { .. }));
+        c.fill_done(7, 1_000_000);
+        c.fill_done(7, 2_000_000); // e.g. redundant re-service
+        let m = c.mshr_stats();
+        assert_eq!(m.allocations, 1);
+        assert_eq!(m.re_registrations, 1);
     }
 
     #[test]

@@ -10,8 +10,12 @@ use crate::sim::Tick;
 
 #[derive(Debug, Default, Clone)]
 pub struct MshrStats {
-    /// Fills registered.
+    /// Fresh fills registered (pages not already tracked).
     pub allocations: u64,
+    /// Registrations for a page already in flight: the device re-serviced
+    /// a miss (redundant fill) or refreshed a completion tick. Counted
+    /// separately so `allocations` stays a true fresh-fill count.
+    pub re_registrations: u64,
     /// Requests that found an in-flight fill (redundant reads avoided).
     pub merges: u64,
     /// Registrations rejected because the table was full.
@@ -41,7 +45,14 @@ impl Mshr {
     /// overlapping requests will re-read flash (counted, so the ablation
     /// bench can show the traffic cost of an undersized MSHR).
     pub fn insert(&mut self, page: u64, done: Tick) {
-        if self.entries.len() >= self.capacity && !self.entries.contains_key(&page) {
+        if self.entries.contains_key(&page) {
+            // Already tracked: a redundant re-service (or refreshed
+            // completion), not a fresh fill.
+            self.stats.re_registrations += 1;
+            self.entries.insert(page, done);
+            return;
+        }
+        if self.entries.len() >= self.capacity {
             self.stats.capacity_rejections += 1;
             return;
         }
@@ -122,8 +133,27 @@ mod tests {
         assert_eq!(m.len(), 2);
         assert_eq!(m.stats().capacity_rejections, 1);
         assert_eq!(m.in_flight(3), None);
-        // Re-inserting an existing page is always allowed.
+        // Re-inserting an existing page is always allowed — and counted
+        // as a re-registration, not a fresh allocation.
         m.insert(1, 200);
         assert_eq!(m.in_flight(1), Some(200));
+        assert_eq!(m.stats().allocations, 2);
+        assert_eq!(m.stats().re_registrations, 1);
+    }
+
+    #[test]
+    fn re_registration_does_not_inflate_allocations() {
+        let mut m = Mshr::new(4);
+        m.insert(9, 100);
+        m.insert(9, 150);
+        m.insert(9, 175);
+        assert_eq!(m.stats().allocations, 1);
+        assert_eq!(m.stats().re_registrations, 2);
+        // The entry carries the latest completion tick.
+        assert_eq!(m.in_flight(9), Some(175));
+        // Once expired, a new insert is a fresh allocation again.
+        m.expire(175);
+        m.insert(9, 300);
+        assert_eq!(m.stats().allocations, 2);
     }
 }

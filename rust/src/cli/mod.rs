@@ -26,15 +26,20 @@ USAGE:
   cxl-ssd-sim info
   cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache|all|d1,d2,..>
                     --workload <stream|membench|viper216|viper532>
-                    [--config <file>] [--set section.key=value ...]
-  cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mshr|fastmode>
-                    [--jobs <N|0=auto>] [--quick] [--artifacts <dir>]
+                    [--mlp <N>] [--config <file>] [--set section.key=value ...]
+  cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mlp|mshr|fastmode>
+                    [--jobs <N|0=auto>] [--mlp <N>] [--quick] [--artifacts <dir>]
   cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
   cxl-ssd-sim trace replay --in <file> --device <dev> [--fast] [--artifacts <dir>]
 
-Figure sweeps (fig3..fig6, policies, all) run on the parallel sweep
+Figure sweeps (fig3..fig6, policies, mlp, all) run on the parallel sweep
 engine; --jobs N drains the job list with N worker threads (0 = one per
 core). Figure data is bit-identical for any N.
+
+--mlp N (or sys.mlp) sets the requester's outstanding-request window:
+stream and viper keep up to N loads in flight; membench always issues
+blocking loads (loaded latency). The 'mlp' experiment sweeps
+mlp in {1,2,4,8,16} x all five devices over the stream workload.
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positional words.
@@ -105,6 +110,9 @@ fn build_config(args: &Args) -> Result<SimConfig> {
     }
     if let Some(policy) = args.get("policy") {
         cfg.apply_override(&format!("dcache.policy={policy}"))?;
+    }
+    if let Some(mlp) = args.get("mlp") {
+        cfg.apply_override(&format!("sys.mlp={mlp}"))?;
     }
     Ok(cfg)
 }
@@ -201,12 +209,19 @@ pub fn main(argv: &[String]) -> Result<i32> {
             if jobs > 1 && matches!(exp, "mshr" | "fastmode") {
                 eprintln!("note: --jobs does not apply to '{exp}' (serial ablation)");
             }
+            if exp == "mlp" && args.get("mlp").is_some() {
+                eprintln!(
+                    "note: --mlp is ignored by '--experiment mlp' (the sweep walks \
+                     mlp in {{1,2,4,8,16}} itself)"
+                );
+            }
             let table = match exp {
                 "fig3" => experiments::fig3_bandwidth_cfg(&cfg, scale, jobs).0,
                 "fig4" => experiments::fig4_latency_cfg(&cfg, scale, jobs).0,
                 "fig5" => experiments::fig56_viper_cfg(&cfg, 216, scale, jobs).0,
                 "fig6" => experiments::fig56_viper_cfg(&cfg, 532, scale, jobs).0,
                 "policies" => experiments::policy_sweep_cfg(&cfg, 216, scale, jobs).0,
+                "mlp" => experiments::mlp_sweep_cfg(&cfg, scale, jobs).0,
                 "mshr" => experiments::mshr_ablation_cfg(&cfg, scale).0,
                 "fastmode" => experiments::fastmode_ablation_cfg(&cfg, artifacts, scale)?.0,
                 other => bail!("unknown experiment '{other}'"),
@@ -339,5 +354,14 @@ mod tests {
     fn unknown_experiment_is_error() {
         let e = main(&argv("sweep --experiment bogus --quick"));
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn mlp_flag_lands_in_config() {
+        let a = Args::parse(&argv("--mlp 8"));
+        let cfg = build_config(&a).unwrap();
+        assert_eq!(cfg.mlp, 8);
+        let bad = Args::parse(&argv("--mlp nope"));
+        assert!(build_config(&bad).is_err());
     }
 }

@@ -94,6 +94,12 @@ pub struct SimConfig {
     /// Default worker-thread count for experiment sweeps (CLI `--jobs`
     /// overrides; 0 = one worker per available core, 1 = serial).
     pub jobs: usize,
+    /// Requester memory-level parallelism: outstanding-request window
+    /// size for bandwidth workloads (stream, viper). `1` = blocking
+    /// in-order issue (the loaded-latency regime membench always uses);
+    /// larger values let up to `mlp` requests overlap in the devices.
+    /// CLI `--mlp` overrides.
+    pub mlp: usize,
 }
 
 impl Default for SimConfig {
@@ -156,6 +162,7 @@ impl SimConfig {
             ("sys", "device_bytes") => self.device_bytes = v.as_u64()?,
             ("sys", "seed") => self.seed = v.as_u64()?,
             ("sys", "jobs") => self.jobs = v.as_u64()? as usize,
+            ("sys", "mlp") => self.mlp = (v.as_u64()? as usize).max(1),
             _ => return Err(bad()),
         }
         Ok(())
@@ -216,6 +223,11 @@ mod tests {
         assert_eq!(c.jobs, 1, "sweeps default to serial");
         c.apply_override("sys.jobs=8").unwrap();
         assert_eq!(c.jobs, 8);
+        assert_eq!(c.mlp, 1, "blocking issue by default");
+        c.apply_override("sys.mlp=8").unwrap();
+        assert_eq!(c.mlp, 8);
+        c.apply_override("sys.mlp=0").unwrap();
+        assert_eq!(c.mlp, 1, "mlp clamps to at least 1");
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub fn table1() -> SimConfig {
         device_bytes: 16 << 30,
         seed: 0xC11A_55D0,
         jobs: 1,
+        mlp: 1,
     }
 }
 

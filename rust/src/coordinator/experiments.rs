@@ -253,6 +253,65 @@ pub fn fig56_viper_cfg(
     viper_figure(&outs.iter().collect::<Vec<_>>())
 }
 
+/// MLP values the bandwidth-saturation sweep walks (`--experiment mlp`).
+pub const MLP_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// MLP sweep: stream triad bandwidth per device as the requester's
+/// outstanding-request window grows (serial, Table I). Shows bandwidth
+/// saturating on link credits / banks / channels — the figure the
+/// synchronous one-at-a-time device API could not produce.
+pub fn mlp_sweep(scale: ExpScale) -> (Table, Vec<(usize, DeviceKind, f64)>) {
+    mlp_sweep_cfg(&presets::table1(), scale, 1)
+}
+
+/// MLP sweep on the sweep engine: caller-supplied base config + workers.
+///
+/// Jobs are the cross product mlp x device over the Fig-3 stream
+/// workload; rows are devices, columns the [`MLP_SWEEP`] window sizes,
+/// cells the triad-kernel bandwidth in MB/s. Raw tuples are
+/// `(mlp, device, triad_mbs)`.
+pub fn mlp_sweep_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(usize, DeviceKind, f64)>) {
+    let mut jobs = Vec::new();
+    for &mlp in &MLP_SWEEP {
+        let mut cfg = base.clone();
+        cfg.mlp = mlp;
+        jobs.extend(
+            SweepSpec::new(cfg)
+                .devices(FIG_DEVICES.to_vec())
+                .workloads(vec![scale.stream_spec()])
+                .expand(),
+        );
+    }
+    let outs = sweep::execute(&jobs, n_workers);
+
+    let mut header = vec!["device".to_string()];
+    header.extend(MLP_SWEEP.iter().map(|m| format!("mlp={m} MB/s")));
+    let mut table = Table::new_owned(header);
+    let mut raw = Vec::new();
+    for (di, device) in FIG_DEVICES.iter().enumerate() {
+        let mut cells = vec![device.name().to_string()];
+        for (mi, &mlp) in MLP_SWEEP.iter().enumerate() {
+            let out = &outs[mi * FIG_DEVICES.len() + di];
+            debug_assert_eq!(out.device, *device);
+            let triad = out
+                .stream
+                .as_ref()
+                .expect("stream output")
+                .last()
+                .expect("four kernels")
+                .mbs;
+            cells.push(format!("{triad:.1}"));
+            raw.push((mlp, *device, triad));
+        }
+        table.row_owned(cells);
+    }
+    (table, raw)
+}
+
 /// §III-C: cache replacement policy sweep on the cached CXL-SSD
 /// (serial, Table I).
 pub fn policy_sweep(record_bytes: u64, scale: ExpScale) -> (Table, Vec<(PolicyKind, f64, f64)>) {

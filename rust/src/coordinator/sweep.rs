@@ -176,7 +176,10 @@ pub fn run_spec(
     capture: bool,
 ) -> (RunOutput, Option<Trace>) {
     let mut sys = System::new(device, cfg);
-    let mut core = Core::new(cfg.cpu);
+    // The workload reads the window size off the core: membench always
+    // issues blocking loads (loaded latency), stream and viper switch to
+    // windowed issue at mlp > 1.
+    let mut core = Core::with_mlp(cfg.cpu, cfg.mlp);
     if capture {
         sys.enable_trace();
     }

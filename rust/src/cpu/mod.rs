@@ -9,7 +9,7 @@ pub mod cache;
 use std::collections::VecDeque;
 
 use crate::config::CpuConfig;
-use crate::sim::Tick;
+use crate::sim::{OutstandingWindow, Tick, WindowStats};
 use crate::stats::Histogram;
 use crate::topology::System;
 
@@ -22,27 +22,57 @@ pub struct CoreStats {
     pub store_stall_ticks: Tick,
 }
 
-/// One in-order core with a small store buffer.
+/// One in-order core with a small store buffer and an optional
+/// outstanding-load window ([`OutstandingWindow`]) for workloads that
+/// issue independent loads with memory-level parallelism.
 pub struct Core {
     now: Tick,
     cfg: CpuConfig,
     /// Completion times of in-flight posted stores (FIFO drain).
     store_buffer: VecDeque<Tick>,
+    /// In-flight window for [`load_async`](Self::load_async) loads.
+    load_window: OutstandingWindow,
+    /// In-flight window for [`store_after`](Self::store_after) stores
+    /// (capacity = the store-buffer entry count).
+    store_window: OutstandingWindow,
+    /// Dependent stores accepted by [`store_after`](Self::store_after)
+    /// whose input data (`ready`) has not arrived yet: `(addr, size,
+    /// ready)` in program order. Issued lazily once the core clock
+    /// reaches `ready`, so every device/bus call happens at the current
+    /// (monotone) clock — never at a future tick that would block
+    /// later loads on the call-order FCFS buses.
+    pending_stores: VecDeque<(u64, u32, Tick)>,
     stats: CoreStats,
 }
 
 impl Core {
+    /// A blocking core (`mlp == 1`): every load waits for its data.
     pub fn new(cfg: CpuConfig) -> Self {
+        Self::with_mlp(cfg, 1)
+    }
+
+    /// A core whose [`load_async`](Self::load_async) path keeps up to
+    /// `mlp` loads in flight. Blocking [`load`](Self::load) calls are
+    /// unaffected — workloads choose per-access which engine they use.
+    pub fn with_mlp(cfg: CpuConfig, mlp: usize) -> Self {
         Core {
             now: 0,
             cfg,
             store_buffer: VecDeque::with_capacity(cfg.store_buffer),
+            load_window: OutstandingWindow::new(mlp),
+            store_window: OutstandingWindow::new(cfg.store_buffer),
+            pending_stores: VecDeque::new(),
             stats: CoreStats::default(),
         }
     }
 
     pub fn now(&self) -> Tick {
         self.now
+    }
+
+    /// The outstanding-load window size this core was built with.
+    pub fn mlp(&self) -> usize {
+        self.load_window.cap()
     }
 
     /// Spend non-memory execution time.
@@ -59,6 +89,121 @@ impl Core {
         self.stats.load_latency.record(lat);
         self.now += lat;
         lat
+    }
+
+    /// Issue a load through the outstanding-request window: the load
+    /// issues as soon as a window slot is free and the core does *not*
+    /// wait for its data — an out-of-order core (or prefetch engine)
+    /// streaming independent loads. The core stalls only when all `mlp`
+    /// slots are in flight. Call [`drain_loads`](Self::drain_loads) (or
+    /// [`fence`](Self::fence)) before reading the clock as "all data
+    /// arrived".
+    ///
+    /// With `mlp == 1` the admit-then-issue sequence reproduces the
+    /// blocking [`load`](Self::load) tick-for-tick — see
+    /// [`crate::sim::window`].
+    ///
+    /// Returns the load's completion tick, so a dependent store can be
+    /// ordered after its data ([`store_after`](Self::store_after)).
+    pub fn load_async(&mut self, sys: &mut System, addr: u64, size: u32) -> Tick {
+        self.now = self.load_window.admit(self.now);
+        self.now += self.cfg.t_op_gap;
+        // Older dependent stores whose data has arrived by now issue
+        // first (program order on the buses).
+        self.issue_ready_stores(sys);
+        let lat = sys.access(self.now, addr, size, false);
+        self.stats.loads += 1;
+        self.stats.load_latency.record(lat);
+        let done = self.now + lat;
+        self.load_window.push(done);
+        done
+    }
+
+    /// Wait for every in-flight windowed load to complete.
+    pub fn drain_loads(&mut self) {
+        self.now = self.load_window.drain(self.now);
+    }
+
+    /// Stall/issue statistics of the outstanding-load window.
+    pub fn load_window_stats(&self) -> &WindowStats {
+        self.load_window.stats()
+    }
+
+    /// Posted store whose data depends on loads completing at `ready`
+    /// (`0` = no dependency): the windowed counterpart of
+    /// [`store`](Self::store), used by mlp>1 workload passes. The store
+    /// is held pending until the core clock reaches `ready` (a real
+    /// core cannot execute a store before its inputs arrive, and the
+    /// shared buses serialize in call order, so the device call must
+    /// not happen at a future tick); in-flight stores overlap in the
+    /// memory system — the device's credits/banks/channels arbitrate.
+    /// Pending and in-flight stores share the `store_buffer` entry
+    /// budget (same hard cap as the blocking path): the core stalls
+    /// when every entry is occupied. Passes using this must call
+    /// [`drain_stores`](Self::drain_stores) before their closing
+    /// [`fence`](Self::fence).
+    pub fn store_after(&mut self, sys: &mut System, addr: u64, size: u32, ready: Tick) {
+        self.now += self.cfg.t_op_gap;
+        self.stats.stores += 1;
+        // Make room: a store occupies a buffer entry from acceptance to
+        // completion, whether it is still pending or already in flight.
+        let cap = self.cfg.store_buffer.max(1);
+        loop {
+            self.issue_ready_stores(sys);
+            if self.pending_stores.len() + self.store_window.occupancy(self.now) < cap {
+                break;
+            }
+            if self.store_window.in_flight() > 0 {
+                // Next slot-freeing event: the earliest completion.
+                let t = self.store_window.wait_earliest(self.now);
+                self.stats.store_stall_ticks += t - self.now;
+                self.now = t;
+            } else {
+                // Everything is pending on data: push the oldest out.
+                self.issue_front_store(sys);
+            }
+        }
+        self.pending_stores.push_back((addr, size, ready));
+        self.issue_ready_stores(sys);
+    }
+
+    /// Issue pending dependent stores that can go right now — data
+    /// arrived (`ready <= now`) and a store-window slot is free —
+    /// without advancing the clock.
+    fn issue_ready_stores(&mut self, sys: &mut System) {
+        while let Some(&(addr, size, ready)) = self.pending_stores.front() {
+            if ready > self.now || !self.store_window.has_slot(self.now) {
+                break;
+            }
+            self.pending_stores.pop_front();
+            let lat = sys.access(self.now, addr, size, true);
+            self.store_window.push(self.now + lat);
+        }
+    }
+
+    /// Stall until the oldest pending store can issue, then issue it.
+    fn issue_front_store(&mut self, sys: &mut System) {
+        let (addr, size, ready) = *self.pending_stores.front().expect("caller checked");
+        if ready > self.now {
+            self.stats.store_stall_ticks += ready - self.now;
+            self.now = ready;
+        }
+        let admitted = self.store_window.admit(self.now);
+        self.stats.store_stall_ticks += admitted - self.now;
+        self.now = admitted;
+        self.pending_stores.pop_front();
+        let lat = sys.access(self.now, addr, size, true);
+        self.store_window.push(self.now + lat);
+    }
+
+    /// Issue every pending dependent store, stalling for data and slots
+    /// as needed. Must run before [`fence`](Self::fence) at the end of
+    /// a pass that used [`store_after`](Self::store_after) — `fence`
+    /// has no device access and debug-asserts the queue is empty.
+    pub fn drain_stores(&mut self, sys: &mut System) {
+        while !self.pending_stores.is_empty() {
+            self.issue_front_store(sys);
+        }
     }
 
     /// Posted store of `size` bytes: retires through the store buffer;
@@ -140,9 +285,24 @@ impl Core {
         self.now += done;
     }
 
-    /// Wait for every posted store to complete (memory barrier / end of
-    /// run).
+    /// Wait for every posted store *and* every in-flight windowed load
+    /// or store to complete (memory barrier / end of run).
+    ///
+    /// Pending dependent stores cannot be issued here (no device
+    /// access) — passes using [`store_after`](Self::store_after) call
+    /// [`drain_stores`](Self::drain_stores) first.
     pub fn fence(&mut self) {
+        // Hard assert (fence is cold): silently carrying un-issued
+        // dependent stores across a fence would corrupt the next pass's
+        // timing in release figure runs.
+        assert!(
+            self.pending_stores.is_empty(),
+            "drain_stores(sys) must run before fence"
+        );
+        self.drain_loads();
+        let before = self.now;
+        self.now = self.store_window.drain(self.now);
+        self.stats.store_stall_ticks += self.now - before;
         if let Some(&last) = self.store_buffer.back() {
             if last > self.now {
                 self.stats.store_stall_ticks += last - self.now;
@@ -213,6 +373,111 @@ mod tests {
         assert_eq!(core.now(), t);
         // All stores completed before now.
         assert!(core.store_buffer.is_empty());
+    }
+
+    #[test]
+    fn windowed_loads_match_blocking_at_mlp_one() {
+        // The acceptance bar of the MLP engine: with a window of 1, the
+        // async path replays the blocking path tick-for-tick.
+        let cfg = presets::small_test();
+        let addrs: Vec<u64> = (0..32u64).map(|i| i * 8192).collect();
+
+        let mut sys_a = System::new(DeviceKind::Pmem, &cfg);
+        let mut blocking = Core::new(cfg.cpu);
+        for &a in &addrs {
+            let addr = sys_a.device_addr(a);
+            blocking.load(&mut sys_a, addr, 64);
+        }
+
+        let mut sys_b = System::new(DeviceKind::Pmem, &cfg);
+        let mut windowed = Core::with_mlp(cfg.cpu, 1);
+        for &a in &addrs {
+            let addr = sys_b.device_addr(a);
+            windowed.load_async(&mut sys_b, addr, 64);
+        }
+        windowed.drain_loads();
+
+        assert_eq!(blocking.now(), windowed.now());
+        assert_eq!(
+            blocking.stats().load_latency.max(),
+            windowed.stats().load_latency.max()
+        );
+    }
+
+    #[test]
+    fn windowed_loads_overlap_at_higher_mlp() {
+        let cfg = presets::small_test();
+        let run = |mlp: usize| -> Tick {
+            let mut sys = System::new(DeviceKind::Pmem, &cfg);
+            let mut core = Core::with_mlp(cfg.cpu, mlp);
+            for i in 0..64u64 {
+                let addr = sys.device_addr(i * 8192);
+                core.load_async(&mut sys, addr, 64);
+            }
+            core.drain_loads();
+            core.now()
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        assert!(
+            t4 * 2 < t1,
+            "4 outstanding PMEM loads should overlap on the media ports: \
+             mlp=4 {t4} vs mlp=1 {t1}"
+        );
+    }
+
+    #[test]
+    fn store_after_respects_its_input_dependency() {
+        let cfg = presets::small_test();
+        let mut sys = System::new(DeviceKind::Pmem, &cfg);
+        let mut core = Core::with_mlp(cfg.cpu, 8);
+        let before = core.now();
+        let ready = 5_000_000; // input loads (pretend) complete at 5µs
+        let addr = sys.device_addr(0);
+        core.store_after(&mut sys, addr, 64, ready);
+        // Posted: the core itself advances only by the op gap...
+        assert_eq!(core.now() - before, core.cfg.t_op_gap);
+        // ...but the store cannot have completed before its inputs.
+        core.drain_stores(&mut sys);
+        core.fence();
+        assert!(core.now() > ready, "store completed before its inputs");
+    }
+
+    #[test]
+    fn dependent_stores_overlap_across_iterations() {
+        // PMEM writes take 500ns each on 4 media ports; 8 dependent
+        // stores with already-arrived inputs must overlap instead of
+        // chaining completion-to-completion.
+        let cfg = presets::small_test();
+        let mut sys = System::new(DeviceKind::Pmem, &cfg);
+        let mut core = Core::with_mlp(cfg.cpu, 8);
+        core.compute(1_000_000); // inputs "arrived" in the past
+        let t0 = core.now();
+        for i in 0..8u64 {
+            let addr = sys.device_addr(i * 8192);
+            core.store_after(&mut sys, addr, 64, 0);
+        }
+        core.drain_stores(&mut sys);
+        core.fence();
+        let elapsed = core.now() - t0;
+        // Serial chaining would cost ~8 x 500ns; 4 ports overlap it.
+        assert!(
+            elapsed < 8 * 500_000,
+            "windowed stores must overlap: {elapsed}"
+        );
+    }
+
+    #[test]
+    fn fence_waits_for_windowed_loads() {
+        let cfg = presets::small_test();
+        let mut sys = System::new(DeviceKind::Pmem, &cfg);
+        let mut core = Core::with_mlp(cfg.cpu, 8);
+        let before = core.now();
+        let addr = sys.device_addr(0);
+        core.load_async(&mut sys, addr, 64);
+        core.fence();
+        assert!(core.now() > before + 150_000, "fence must wait for data");
+        assert_eq!(core.load_window_stats().issued, 1);
     }
 
     #[test]

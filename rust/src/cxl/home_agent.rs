@@ -199,7 +199,10 @@ impl HomeAgent {
 
     fn release_credit(&mut self, done: Tick) {
         debug_assert!(
-            self.completions.back().map_or(true, |&b| b <= done),
+            match self.completions.back() {
+                Some(&back) => back <= done,
+                None => true,
+            },
             "responses must complete in order"
         );
         self.completions.push_back(done);

@@ -68,13 +68,34 @@ impl DeviceKind {
 
 /// A memory device mapped into the extension address window.
 ///
-/// `access` takes a device-relative byte address and returns the latency
-/// until the request is complete *at the requester* (CXL devices include
-/// the full link round trip).
+/// The device API is an outstanding-request engine: [`issue`] accepts a
+/// request at tick `now` and returns the absolute tick at which it
+/// completes *at the requester* (CXL devices include the full link round
+/// trip). Any number of requests may be in flight at once — a requester
+/// with memory-level parallelism (see [`crate::sim::OutstandingWindow`])
+/// issues overlapping requests and the device's internal resources
+/// resolve contention among them: the Home Agent's credit pool, DRAM
+/// bank ready-times, PMEM media ports, flash channel/die occupancy and
+/// the DRAM-cache MSHR.
+///
+/// Issue ticks need not be monotone across calls (a posted store may be
+/// handed over at a future tick while a later load issues "now"); every
+/// internal resource arbitrates with ready-time maxima, and the response
+/// path serializes completions, so interleavings stay well-defined.
+///
+/// [`issue`]: MemoryDevice::issue
 pub trait MemoryDevice {
     fn kind(&self) -> DeviceKind;
 
-    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick;
+    /// Issue a request for the device-relative byte address `addr` at
+    /// `now`; returns its completion tick (`>= now`).
+    fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick;
+
+    /// Latency form of [`issue`](Self::issue), for callers that track
+    /// their own clock.
+    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        self.issue(now, addr, is_write) - now
+    }
 
     /// End-of-run drain (flush write buffers / dirty cache pages).
     fn flush(&mut self, _now: Tick) {}
@@ -116,8 +137,8 @@ impl MemoryDevice for LocalDram {
         DeviceKind::Dram
     }
 
-    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
-        self.dram.access(now, line_index(addr), is_write)
+    fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        now + self.dram.access(now, line_index(addr), is_write)
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {
@@ -151,7 +172,7 @@ impl MemoryDevice for CxlDram {
         DeviceKind::CxlDram
     }
 
-    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+    fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
         let pkt = if is_write {
             Packet::write(addr, 64, now)
         } else {
@@ -162,8 +183,7 @@ impl MemoryDevice for CxlDram {
             .outbound(now, &pkt)
             .expect("read/write always converts");
         let lat = self.dram.access(arrival, line_index(flit.addr), is_write);
-        let done = self.ha.inbound(arrival + lat, &flit);
-        done - now
+        self.ha.inbound(arrival + lat, &flit)
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {
@@ -173,6 +193,7 @@ impl MemoryDevice for CxlDram {
             ("cxl_flits".into(), s.flits as f64),
             ("cxl_wire_bytes".into(), s.wire_bytes as f64),
             ("cxl_warnings".into(), s.warnings as f64),
+            ("cxl_credit_stall_ns".into(), crate::sim::to_ns(s.credit_stall_ticks)),
         ]
     }
 }
@@ -197,8 +218,8 @@ impl MemoryDevice for PmemDevice {
         DeviceKind::Pmem
     }
 
-    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
-        self.pmem.access(now, line_index(addr), is_write)
+    fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        now + self.pmem.access(now, line_index(addr), is_write)
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {
@@ -232,7 +253,7 @@ impl MemoryDevice for CxlSsd {
         DeviceKind::CxlSsd
     }
 
-    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+    fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
         let pkt = if is_write {
             Packet::write(addr, 64, now)
         } else {
@@ -240,8 +261,7 @@ impl MemoryDevice for CxlSsd {
         };
         let (arrival, flit) = self.ha.outbound(now, &pkt).expect("converts");
         let lat = self.ssd.access_line(arrival, line_index(flit.addr), is_write);
-        let done = self.ha.inbound(arrival + lat, &flit);
-        done - now
+        self.ha.inbound(arrival + lat, &flit)
     }
 
     fn flush(&mut self, now: Tick) {
@@ -256,6 +276,10 @@ impl MemoryDevice for CxlSsd {
             ("flash_reads".into(), (f.host_reads + f.gc_reads) as f64),
             ("flash_programs".into(), (f.host_programs + f.gc_programs) as f64),
             ("read_amp".into(), self.ssd.stats().read_amplification()),
+            (
+                "cxl_credit_stall_ns".into(),
+                crate::sim::to_ns(self.ha.stats().credit_stall_ticks),
+            ),
         ];
         if let Some(icl) = self.ssd.icl_stats() {
             kv.push(("icl_hit_rate".into(), icl.hit_rate()));
@@ -326,7 +350,7 @@ impl MemoryDevice for CxlSsdCached {
         DeviceKind::CxlSsdCached
     }
 
-    fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+    fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
         let pkt = if is_write {
             Packet::write(addr, 64, now)
         } else {
@@ -334,12 +358,14 @@ impl MemoryDevice for CxlSsdCached {
         };
         let (arrival, flit) = self.ha.outbound(now, &pkt).expect("converts");
         let lat = self.service(arrival, flit.addr, is_write);
-        let done = self.ha.inbound(arrival + lat, &flit);
-        done - now
+        self.ha.inbound(arrival + lat, &flit)
     }
 
     fn flush(&mut self, now: Tick) {
-        for page in self.cache.dirty_pages() {
+        // take_dirty_pages clears the dirty bits: pages written back here
+        // must not program flash again on a later eviction or a second
+        // flush (that double-counting inflated flash_programs/WAF).
+        for page in self.cache.take_dirty_pages() {
             self.ssd.access_page(now, page, true);
         }
         self.ssd.flush(now);
@@ -356,6 +382,10 @@ impl MemoryDevice for CxlSsdCached {
             ("redundant_fills".into(), c.redundant_fills as f64),
             ("ssd_page_reads".into(), self.ssd.stats().page_reads as f64),
             ("writebacks".into(), c.writebacks as f64),
+            (
+                "cxl_credit_stall_ns".into(),
+                crate::sim::to_ns(self.ha.stats().credit_stall_ticks),
+            ),
             ("waf".into(), f.waf()),
             ("flash_reads".into(), (f.host_reads + f.gc_reads) as f64),
             (
@@ -494,6 +524,56 @@ mod tests {
         let kv: std::collections::HashMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         assert!(kv["flash_programs"] >= 4.0);
+    }
+
+    #[test]
+    fn double_flush_does_not_double_count_flash_programs() {
+        // Regression: flush used to write dirty pages back without
+        // clearing their dirty bits, so a second flush (or a later
+        // eviction) programmed the same pages again.
+        let c = cfg();
+        let mut dev = build_device(DeviceKind::CxlSsdCached, &c);
+        let mut now = 0;
+        for p in 0..4u64 {
+            let l = dev.access(now, p * 4096, true);
+            now += l + US;
+        }
+        dev.flush(now);
+        let kv: std::collections::HashMap<String, f64> =
+            dev.stats_kv().into_iter().collect();
+        let programs = kv["flash_programs"];
+        assert!(programs >= 4.0);
+        dev.flush(now + US);
+        let kv: std::collections::HashMap<String, f64> =
+            dev.stats_kv().into_iter().collect();
+        assert_eq!(
+            kv["flash_programs"], programs,
+            "second flush must not program flash again"
+        );
+        // Flush write-backs are accounted in the cache's writeback stat.
+        assert!(kv["writebacks"] >= 4.0);
+    }
+
+    #[test]
+    fn eviction_after_flush_does_not_rewrite_clean_page() {
+        let mut c = cfg();
+        c.dcache.policy = crate::cache::PolicyKind::Direct;
+        let mut dev = CxlSsdCached::new(&c);
+        dev.access(0, 0, true); // dirty page 0
+        dev.flush(US); // page 0 written back, now clean
+        let kv: std::collections::HashMap<String, f64> =
+            dev.stats_kv().into_iter().collect();
+        let programs = kv["flash_programs"];
+        // Conflicting read evicts the (clean) page 0: no write-back.
+        let frames = c.dcache.n_frames() as u64;
+        dev.access(10 * US, frames * 4096, false);
+        dev.flush(20 * US);
+        let kv: std::collections::HashMap<String, f64> =
+            dev.stats_kv().into_iter().collect();
+        assert_eq!(
+            kv["flash_programs"], programs,
+            "clean eviction after flush must not program flash"
+        );
     }
 
     #[test]

@@ -146,6 +146,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(clippy::useless_vec)] // &Vec deref coercion is the point
     fn vec1_accepts_vec_refs() {
         // The surrogate layer passes `&vec![..]`; deref coercion must hold.
         let l = Literal::vec1(&vec![0f64; 4]);

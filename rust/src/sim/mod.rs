@@ -4,8 +4,10 @@
 //! models in this crate express latencies and ready-times in ticks.
 
 mod event;
+pub mod window;
 
 pub use event::{Event, EventQueue, EventToken};
+pub use window::{OutstandingWindow, WindowStats};
 
 /// Simulation time in picoseconds (gem5 tick convention).
 pub type Tick = u64;

@@ -1,0 +1,225 @@
+//! Outstanding-request window — the memory-level-parallelism (MLP)
+//! engine.
+//!
+//! A requester (the CPU's load unit, a DMA engine, a future multi-core
+//! front end) may keep up to `cap` requests in flight. Admission is a
+//! pure function of simulated time: completed slots retire lazily, and
+//! when the window is full the issuer stalls until the *earliest*
+//! in-flight completion frees a slot. Devices see the resulting issue
+//! ticks and resolve contention among the overlapping requests through
+//! their own resources — CXL link credits ([`crate::cxl::HomeAgent`]),
+//! DRAM bank ready-times ([`crate::dram`]), PMEM media ports
+//! ([`crate::pmem`]), flash channel/die occupancy
+//! ([`crate::ssd::Pal`]) and the DRAM-cache MSHR
+//! ([`crate::cache::mshr`]).
+//!
+//! With `cap == 1` the admit/push sequence reproduces a blocking
+//! requester tick-for-tick (admit stalls on the single outstanding
+//! completion exactly where a blocking caller would have advanced its
+//! clock), which is what keeps `mlp=1` runs bit-identical to the
+//! pre-engine simulator.
+
+use super::Tick;
+
+/// Counters for one window's lifetime.
+#[derive(Debug, Default, Clone)]
+pub struct WindowStats {
+    /// Requests pushed through the window.
+    pub issued: u64,
+    /// Ticks spent stalled on a full window waiting for a free slot.
+    pub stall_ticks: Tick,
+    /// Ticks spent in [`drain`](OutstandingWindow::drain) barriers
+    /// waiting for every in-flight request (fences, stage boundaries).
+    pub drain_ticks: Tick,
+    /// High-water mark of concurrently in-flight requests.
+    pub peak_inflight: usize,
+}
+
+/// A bounded set of in-flight request completion ticks.
+#[derive(Debug)]
+pub struct OutstandingWindow {
+    cap: usize,
+    /// Completion ticks of in-flight requests (unsorted; `cap` is small).
+    inflight: Vec<Tick>,
+    stats: WindowStats,
+}
+
+impl OutstandingWindow {
+    /// A window admitting up to `cap` in-flight requests (`cap == 0` is
+    /// clamped to 1: a blocking requester).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        OutstandingWindow {
+            cap,
+            inflight: Vec::with_capacity(cap),
+            stats: WindowStats::default(),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Earliest tick at or after `now` at which a new request may issue.
+    ///
+    /// Retires every completion at or before `now`; if the window is
+    /// still full, waits for the earliest in-flight completion (the
+    /// stall a full load queue imposes on an out-of-order core).
+    pub fn admit(&mut self, now: Tick) -> Tick {
+        self.inflight.retain(|&done| done > now);
+        if self.inflight.len() < self.cap {
+            return now;
+        }
+        self.wait_earliest(now)
+    }
+
+    /// In-flight count at `now`, after retiring completed requests.
+    pub fn occupancy(&mut self, now: Tick) -> usize {
+        self.inflight.retain(|&done| done > now);
+        self.inflight.len()
+    }
+
+    /// Is a slot free at `now` without stalling?
+    pub fn has_slot(&mut self, now: Tick) -> bool {
+        self.occupancy(now) < self.cap
+    }
+
+    /// Advance past the earliest in-flight completion, retiring it;
+    /// returns the resulting tick (`now` unchanged and nothing retired
+    /// when the window is empty). Used by requesters that must free a
+    /// budget slot without issuing anything new.
+    pub fn wait_earliest(&mut self, now: Tick) -> Tick {
+        self.inflight.retain(|&done| done > now);
+        if self.inflight.is_empty() {
+            return now;
+        }
+        let mut idx = 0;
+        for (i, &done) in self.inflight.iter().enumerate() {
+            if done < self.inflight[idx] {
+                idx = i;
+            }
+        }
+        let earliest = self.inflight.swap_remove(idx);
+        self.stats.stall_ticks += earliest - now;
+        earliest
+    }
+
+    /// Record a request (admitted earlier) completing at `done`.
+    pub fn push(&mut self, done: Tick) {
+        self.inflight.push(done);
+        self.stats.issued += 1;
+        self.stats.peak_inflight = self.stats.peak_inflight.max(self.inflight.len());
+    }
+
+    /// Wait for every in-flight request: returns the tick at which the
+    /// last one completes (at least `now`) and empties the window.
+    pub fn drain(&mut self, now: Tick) -> Tick {
+        let done = self
+            .inflight
+            .iter()
+            .copied()
+            .max()
+            .map_or(now, |last| last.max(now));
+        self.stats.drain_ticks += done - now;
+        self.inflight.clear();
+        done
+    }
+
+    pub fn stats(&self) -> &WindowStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_cap_clamps_to_blocking() {
+        let w = OutstandingWindow::new(0);
+        assert_eq!(w.cap(), 1);
+    }
+
+    #[test]
+    fn cap_one_behaves_like_blocking_requester() {
+        let mut w = OutstandingWindow::new(1);
+        assert_eq!(w.admit(100), 100);
+        w.push(500);
+        // Second request stalls until the outstanding one completes.
+        assert_eq!(w.admit(150), 500);
+        assert_eq!(w.stats().stall_ticks, 350);
+        w.push(900);
+        // A request arriving after the completion issues immediately.
+        assert_eq!(w.admit(1_000), 1_000);
+        assert_eq!(w.in_flight(), 0);
+    }
+
+    #[test]
+    fn window_overlaps_up_to_cap() {
+        let mut w = OutstandingWindow::new(4);
+        for i in 0..4u64 {
+            assert_eq!(w.admit(10), 10, "slot {i}");
+            w.push(1_000 + i);
+        }
+        assert_eq!(w.in_flight(), 4);
+        // Fifth request waits for the earliest completion (1000).
+        assert_eq!(w.admit(10), 1_000);
+        w.push(2_000);
+        assert_eq!(w.stats().peak_inflight, 4);
+        assert_eq!(w.stats().issued, 5);
+    }
+
+    #[test]
+    fn admit_retires_out_of_order_completions() {
+        let mut w = OutstandingWindow::new(2);
+        w.push(300); // completes late
+        w.push(100); // completes early
+        // At t=200 the early one has retired: a slot is free.
+        assert_eq!(w.admit(200), 200);
+        assert_eq!(w.in_flight(), 1);
+    }
+
+    #[test]
+    fn drain_returns_last_completion() {
+        let mut w = OutstandingWindow::new(8);
+        w.push(400);
+        w.push(700);
+        w.push(250);
+        assert_eq!(w.drain(300), 700);
+        assert_eq!(w.in_flight(), 0);
+        assert_eq!(w.stats().drain_ticks, 400);
+        // Draining an empty window is a no-op on time.
+        assert_eq!(w.drain(900), 900);
+        assert_eq!(w.stats().drain_ticks, 400);
+    }
+
+    #[test]
+    fn occupancy_and_wait_earliest_share_one_budget_view() {
+        let mut w = OutstandingWindow::new(4);
+        w.push(300);
+        w.push(100);
+        w.push(500);
+        assert_eq!(w.occupancy(50), 3);
+        assert!(w.has_slot(50));
+        // Wait for the earliest (100): retired, time advances.
+        assert_eq!(w.wait_earliest(50), 100);
+        assert_eq!(w.occupancy(100), 2);
+        // Already-completed entries retire without waiting.
+        assert_eq!(w.occupancy(400), 1);
+        assert_eq!(w.wait_earliest(600), 600);
+        assert_eq!(w.occupancy(600), 0);
+    }
+
+    #[test]
+    fn stall_accounting_only_counts_waits() {
+        let mut w = OutstandingWindow::new(1);
+        w.admit(0);
+        w.push(50);
+        w.admit(100); // already complete: no stall
+        assert_eq!(w.stats().stall_ticks, 0);
+    }
+}

@@ -115,13 +115,11 @@ impl Icl {
 
     /// Flush every dirty frame to flash (drain at end of run).
     pub fn flush(&mut self, now: Tick, ftl: &mut Ftl) {
-        for idx in 0..self.frames.len() {
-            if let Some(f) = self.frames[idx] {
-                if f.dirty {
-                    self.stats.writebacks += 1;
-                    ftl.write(now, f.page);
-                    self.frames[idx].as_mut().unwrap().dirty = false;
-                }
+        for f in self.frames.iter_mut().flatten() {
+            if f.dirty {
+                self.stats.writebacks += 1;
+                ftl.write(now, f.page);
+                f.dirty = false;
             }
         }
     }

@@ -174,6 +174,15 @@ impl Table {
         }
     }
 
+    /// A table with a runtime-built header (e.g. one column per swept
+    /// parameter value).
+    pub fn new_owned(header: Vec<String>) -> Self {
+        Table {
+            header,
+            rows: Vec::new(),
+        }
+    }
+
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.header.len());
         self.rows.push(cells.to_vec());

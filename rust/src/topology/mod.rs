@@ -154,9 +154,10 @@ impl System {
             if let Some(t) = self.trace.as_mut() {
                 t.push(crate::trace::TraceEntry::new(bus_done, offset, false));
             }
-            let lat = self.device.access(bus_done, offset, false);
-            self.stats.device_latency.record(bus_lat + lat);
-            bus_lat + lat
+            let done = self.device.issue(bus_done, offset, false);
+            let lat = bus_lat + (done - bus_done);
+            self.stats.device_latency.record(lat);
+            lat
         } else {
             self.stats.main_mem_accesses += 1;
             let line = addr / LINE_BYTES;
@@ -175,7 +176,7 @@ impl System {
             if let Some(t) = self.trace.as_mut() {
                 t.push(crate::trace::TraceEntry::new(bus_done, offset, true));
             }
-            bus_done + self.device.access(bus_done, offset, true)
+            self.device.issue(bus_done, offset, true)
         } else {
             self.stats.main_mem_accesses += 1;
             let line = addr / LINE_BYTES;
@@ -230,8 +231,7 @@ impl System {
             if let Some(t) = self.trace.as_mut() {
                 t.push(crate::trace::TraceEntry::new(bus_done, offset, true));
             }
-            let lat = self.device.access(bus_done, offset, true);
-            bus_done - now + lat
+            self.device.issue(bus_done, offset, true) - now
         } else {
             self.stats.main_mem_accesses += 1;
             let lat = self.main_mem.access(bus_done, line / LINE_BYTES, true);

@@ -1,0 +1,123 @@
+//! Outstanding-request (MLP) engine acceptance tests.
+//!
+//! The contract of the engine (ISSUE 2):
+//! - `mlp=1` reproduces the pre-engine simulator bit-identically — the
+//!   window-of-1 admit/issue sequence IS the blocking sequence, and
+//!   membench never uses the window at all, so Fig-4 latency data is
+//!   untouched by the knob.
+//! - `mlp=8` at least doubles stream bandwidth on the concurrency-rich
+//!   devices (cxl-dram, cxl-ssd-cache) because link credits, DRAM banks
+//!   and the expander cache finally see overlapping requests.
+//! - The MLP sweep rides the parallel sweep engine with the same
+//!   serial/parallel bit-identity guarantee as every other figure.
+
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::coordinator::experiments::{self, ExpScale, MLP_SWEEP};
+use cxl_ssd_sim::coordinator::sweep::{self, SweepSpec};
+use cxl_ssd_sim::devices::DeviceKind;
+use cxl_ssd_sim::workloads::WorkloadSpec;
+
+fn stream_bandwidth(device: DeviceKind, mlp: usize) -> f64 {
+    let mut cfg = presets::table1();
+    cfg.mlp = mlp;
+    let spec = SweepSpec::new(cfg)
+        .devices(vec![device])
+        .workloads(vec![WorkloadSpec::Stream {
+            // Beyond the 512KB host L2 so the device (not the CPU
+            // caches) serves the kernels; small enough to stay quick
+            // and to fit the 16MB expander DRAM cache.
+            dataset_bytes: 4 << 20,
+            repeats: 2,
+        }]);
+    let outs = sweep::execute(&spec.expand(), 1);
+    let r = outs[0].stream.as_ref().expect("stream output");
+    r.iter().map(|x| x.mbs).sum::<f64>() / r.len() as f64
+}
+
+#[test]
+fn mlp8_doubles_cxl_dram_stream_bandwidth() {
+    let bw1 = stream_bandwidth(DeviceKind::CxlDram, 1);
+    let bw8 = stream_bandwidth(DeviceKind::CxlDram, 8);
+    assert!(
+        bw8 >= 2.0 * bw1,
+        "cxl-dram: mlp=8 {bw8:.1} MB/s must be >= 2x mlp=1 {bw1:.1} MB/s"
+    );
+}
+
+#[test]
+fn mlp8_doubles_cached_ssd_stream_bandwidth() {
+    let bw1 = stream_bandwidth(DeviceKind::CxlSsdCached, 1);
+    let bw8 = stream_bandwidth(DeviceKind::CxlSsdCached, 8);
+    assert!(
+        bw8 >= 2.0 * bw1,
+        "cxl-ssd-cache: mlp=8 {bw8:.1} MB/s must be >= 2x mlp=1 {bw1:.1} MB/s"
+    );
+}
+
+#[test]
+fn bandwidth_is_monotone_nondecreasing_in_mlp_on_cxl_dram() {
+    let mut prev = 0.0;
+    for &mlp in &MLP_SWEEP {
+        let bw = stream_bandwidth(DeviceKind::CxlDram, mlp);
+        assert!(
+            bw >= prev * 0.98,
+            "bandwidth regressed at mlp={mlp}: {bw:.1} after {prev:.1}"
+        );
+        prev = bw;
+    }
+}
+
+#[test]
+fn fig4_latency_unaffected_by_mlp() {
+    // membench defines loaded latency with blocking loads; the mlp knob
+    // must not perturb a single bit of the Fig-4 data.
+    let base = presets::table1();
+    let (ta, a) = experiments::fig4_latency_cfg(&base, ExpScale::quick(), 1);
+    let mut cfg8 = presets::table1();
+    cfg8.mlp = 8;
+    let (tb, b) = experiments::fig4_latency_cfg(&cfg8, ExpScale::quick(), 1);
+    assert_eq!(ta.render(), tb.render());
+    for ((da, xa), (db, xb)) in a.iter().zip(b.iter()) {
+        assert_eq!(da, db);
+        assert_eq!(xa.to_bits(), xb.to_bits(), "{da:?} latency changed");
+    }
+}
+
+#[test]
+fn mlp_sweep_serial_and_parallel_identical() {
+    let cfg = presets::table1();
+    let (ta, a) = experiments::mlp_sweep_cfg(&cfg, ExpScale::quick(), 1);
+    let (tb, b) = experiments::mlp_sweep_cfg(&cfg, ExpScale::quick(), 4);
+    assert_eq!(ta.render(), tb.render());
+    assert_eq!(a.len(), b.len());
+    for ((ma, da, xa), (mb, db, xb)) in a.iter().zip(b.iter()) {
+        assert_eq!(ma, mb);
+        assert_eq!(da, db);
+        assert_eq!(xa.to_bits(), xb.to_bits(), "mlp={ma} {da:?}");
+    }
+}
+
+#[test]
+fn mlp_sweep_covers_full_grid() {
+    let cfg = presets::table1();
+    let (table, raw) = experiments::mlp_sweep_cfg(&cfg, ExpScale::quick(), 4);
+    assert_eq!(raw.len(), MLP_SWEEP.len() * DeviceKind::ALL.len());
+    assert_eq!(table.n_rows(), DeviceKind::ALL.len());
+    for (mlp, device, mbs) in &raw {
+        assert!(MLP_SWEEP.contains(mlp));
+        assert!(*mbs > 0.0, "{device:?} mlp={mlp} produced no bandwidth");
+    }
+    // Saturation headline: every CXL device gains from mlp=16 over mlp=1.
+    let bw = |mlp: usize, device: DeviceKind| {
+        raw.iter()
+            .find(|(m, d, _)| *m == mlp && *d == device)
+            .map(|(_, _, x)| *x)
+            .unwrap()
+    };
+    for device in [DeviceKind::CxlDram, DeviceKind::CxlSsdCached] {
+        assert!(
+            bw(16, device) > bw(1, device),
+            "{device:?} should saturate above its mlp=1 bandwidth"
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Differential tests for the DRAM-cache replacement policies.
+//!
+//! LRU and FIFO have exact, obviously-correct reference models (an
+//! ordered list); the real `PageCache` must track them access-for-access
+//! over thousands of randomized lookups. 2Q and LFRU have no tiny oracle,
+//! so they are held to structural invariants instead: capacity is never
+//! exceeded, the just-accessed page is always resident, and the resident
+//! set is duplicate-free (every page resolves to exactly one frame).
+
+use cxl_ssd_sim::cache::{Lookup, PageCache, PolicyKind};
+use cxl_ssd_sim::testing::{check, SplitMix64};
+
+/// Naive reference: a Vec ordered front = next victim.
+struct Reference {
+    kind: PolicyKind,
+    cap: usize,
+    /// Pages in eviction order (front evicted first).
+    order: Vec<u64>,
+}
+
+impl Reference {
+    fn new(kind: PolicyKind, cap: usize) -> Self {
+        assert!(matches!(kind, PolicyKind::Lru | PolicyKind::Fifo));
+        Reference {
+            kind,
+            cap,
+            order: Vec::new(),
+        }
+    }
+
+    /// Access `page`; returns the evicted page, if any.
+    fn touch(&mut self, page: u64) -> Option<u64> {
+        if let Some(pos) = self.order.iter().position(|&p| p == page) {
+            if self.kind == PolicyKind::Lru {
+                // LRU refreshes recency; FIFO keeps insertion order.
+                self.order.remove(pos);
+                self.order.push(page);
+            }
+            return None;
+        }
+        self.order.push(page);
+        if self.order.len() > self.cap {
+            Some(self.order.remove(0))
+        } else {
+            None
+        }
+    }
+
+    fn contains(&self, page: u64) -> bool {
+        self.order.contains(&page)
+    }
+}
+
+fn drive(kind: PolicyKind, cap: usize, span: u64, steps: u64, rng: &mut SplitMix64) {
+    let mut cache = PageCache::new(cap, kind, 8);
+    let mut reference = Reference::new(kind, cap);
+    for step in 0..steps {
+        let page = rng.below(span);
+        let is_write = rng.chance(0.3);
+        // Strictly increasing time so every fill is instantly ready (no
+        // MSHR interplay — this test isolates replacement).
+        let now = (step + 1) * 1_000_000;
+        let result = cache.lookup(now, page, is_write);
+        let expect_hit = reference.contains(page);
+        match result {
+            Lookup::Hit => assert!(expect_hit, "step {step}: spurious hit on {page}"),
+            Lookup::Miss { .. } => {
+                assert!(!expect_hit, "step {step}: spurious miss on {page}")
+            }
+            Lookup::MshrMerge { .. } => panic!("no fills in flight in this test"),
+        }
+        reference.touch(page);
+        // Identical resident sets, element for element.
+        for p in 0..span {
+            assert_eq!(
+                cache.contains(p),
+                reference.contains(p),
+                "step {step} ({kind:?}): page {p} residency diverged after touching {page}"
+            );
+        }
+        assert_eq!(cache.resident(), reference.order.len());
+    }
+}
+
+#[test]
+fn lru_matches_reference_model() {
+    check("lru differential", 8, |rng| {
+        let cap = rng.range(2, 24) as usize;
+        let span = rng.range(4, 64);
+        drive(PolicyKind::Lru, cap, span, 3_000, rng);
+    });
+}
+
+#[test]
+fn fifo_matches_reference_model() {
+    check("fifo differential", 8, |rng| {
+        let cap = rng.range(2, 24) as usize;
+        let span = rng.range(4, 64);
+        drive(PolicyKind::Fifo, cap, span, 3_000, rng);
+    });
+}
+
+#[test]
+fn twoq_and_lfru_hold_structural_invariants() {
+    check("2q/lfru invariants", 6, |rng| {
+        for kind in [PolicyKind::TwoQ, PolicyKind::Lfru] {
+            let cap = rng.range(2, 24) as usize;
+            let span = rng.range(4, 96);
+            let mut cache = PageCache::new(cap, kind, 8);
+            for step in 0..3_000u64 {
+                let page = rng.below(span);
+                let now = (step + 1) * 1_000_000;
+                cache.lookup(now, page, rng.chance(0.3));
+                // The just-accessed page is resident.
+                assert!(cache.contains(page), "{kind:?}: {page} not resident");
+                // Capacity never exceeded; no duplicates: the number of
+                // distinct resident pages equals the occupancy count.
+                assert!(cache.resident() <= cap, "{kind:?} over capacity");
+                let distinct = (0..span).filter(|&p| cache.contains(p)).count();
+                assert_eq!(
+                    distinct,
+                    cache.resident(),
+                    "{kind:?}: duplicate or phantom resident pages"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn lru_and_fifo_agree_until_first_reaccess() {
+    // On a duplicate-free access stream the two policies are literally
+    // the same algorithm; a cheap cross-check of the reference itself.
+    let mut lru = PageCache::new(8, PolicyKind::Lru, 8);
+    let mut fifo = PageCache::new(8, PolicyKind::Fifo, 8);
+    for (i, page) in (0..64u64).enumerate() {
+        let now = (i as u64 + 1) * 1_000;
+        lru.lookup(now, page, false);
+        fifo.lookup(now, page, false);
+    }
+    for p in 0..64u64 {
+        assert_eq!(lru.contains(p), fifo.contains(p), "page {p}");
+    }
+}
