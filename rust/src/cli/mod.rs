@@ -14,32 +14,48 @@ use anyhow::{bail, Context, Result};
 use crate::config::SimConfig;
 use crate::coordinator::experiments::{self, ExpScale};
 use crate::coordinator::{fastmode_compare, run_with_trace, sweep};
-use crate::devices::DeviceKind;
-use crate::sim::NS;
+use crate::devices::{build_device, DeviceKind, Instrumented};
+use crate::sim::{to_us, NS};
 use crate::surrogate::DEFAULT_ARTIFACTS;
-use crate::trace::Trace;
-use crate::workloads::WorkloadKind;
+use crate::trace::{SynthKind, SynthSpec, Trace, TraceSource};
+use crate::workloads::{Replay, ReplayMode, WorkloadKind, WorkloadSpec};
 
 const USAGE: &str = "cxl-ssd-sim — full-system CXL-SSD memory simulator
 
 USAGE:
   cxl-ssd-sim info
   cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache|all|d1,d2,..>
-                    --workload <stream|membench|viper216|viper532>
-                    [--mlp <N>] [--config <file>] [--set section.key=value ...]
-  cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mlp|mshr|fastmode>
+                    (--workload <stream|membench|viper216|viper532|replay>
+                     | --trace <file>)
+                    [--closed] [--mlp <N>] [--config <file>] [--set section.key=value ...]
+  cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mlp|replay|mshr|fastmode>
                     [--jobs <N|0=auto>] [--mlp <N>] [--quick] [--artifacts <dir>]
   cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
-  cxl-ssd-sim trace replay --in <file> --device <dev> [--fast] [--artifacts <dir>]
+  cxl-ssd-sim trace gen    --kind <uniform|zipf|seq|mixed> --out <file>
+                    [--ops <N>] [--footprint <bytes>] [--write-ratio <0..1>]
+                    [--theta <0..1>] [--gap <ns>] [--seed <N>]
+  cxl-ssd-sim trace replay --in <file> --device <dev> [--closed] [--mlp <N>]
+                    [--fast] [--artifacts <dir>]
 
-Figure sweeps (fig3..fig6, policies, mlp, all) run on the parallel sweep
-engine; --jobs N drains the job list with N worker threads (0 = one per
-core). Figure data is bit-identical for any N.
+Figure sweeps (fig3..fig6, policies, mlp, replay, all) run on the
+parallel sweep engine; --jobs N drains the job list with N worker
+threads (0 = one per core). Figure data is bit-identical for any N.
 
 --mlp N (or sys.mlp) sets the requester's outstanding-request window:
 stream and viper keep up to N loads in flight; membench always issues
 blocking loads (loaded latency). The 'mlp' experiment sweeps
 mlp in {1,2,4,8,16} x all five devices over the stream workload.
+
+Trace-driven mode: 'trace record' captures a run's post-cache device
+stream, 'trace gen' synthesizes one (uniform / zipfian-hotspot /
+sequential-scan / mixed read-write, seeded + deterministic), and
+'run --trace' or 'trace replay' feeds it back through the MLP window
+against any device, reporting response-latency percentiles
+(p50/p95/p99/p99.9). Replay is open-loop by default (trace
+inter-arrival gaps respected; queueing shows up in the tail); --closed
+(or replay.closed=true) issues as fast as the window allows. The
+'replay' experiment runs a zipfian + captured-trace campaign across
+all five devices.
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positional words.
@@ -59,7 +75,7 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // Switches (no value) vs flags (value follows).
-                let is_switch = matches!(name, "quick" | "fast" | "help");
+                let is_switch = matches!(name, "quick" | "fast" | "help" | "closed");
                 if is_switch {
                     switches.push(name.to_string());
                 } else if i + 1 < argv.len() {
@@ -114,6 +130,9 @@ fn build_config(args: &Args) -> Result<SimConfig> {
     if let Some(mlp) = args.get("mlp") {
         cfg.apply_override(&format!("sys.mlp={mlp}"))?;
     }
+    if args.has("closed") {
+        cfg.apply_override("replay.closed=true")?;
+    }
     Ok(cfg)
 }
 
@@ -166,12 +185,31 @@ pub fn main(argv: &[String]) -> Result<i32> {
         "run" => {
             let cfg = build_config(&args)?;
             let devices = parse_device_list(&args)?;
-            let workload = parse_workload(&args)?;
+            // `--trace file` replays a captured stream instead of running
+            // a workload driver; otherwise `--workload` picks one (the
+            // `replay` workload replays its default synthetic stream).
+            let spec = match args.get("trace") {
+                Some(path) => {
+                    let trace = Trace::load(path)?;
+                    println!("loaded {} accesses from {}", trace.len(), path);
+                    WorkloadSpec::Replay {
+                        source: TraceSource::captured(trace),
+                        mode: ReplayMode::from_config(&cfg),
+                    }
+                }
+                None => match WorkloadSpec::default_for(parse_workload(&args)?) {
+                    WorkloadSpec::Replay { source, .. } => WorkloadSpec::Replay {
+                        source,
+                        mode: ReplayMode::from_config(&cfg),
+                    },
+                    spec => spec,
+                },
+            };
             for (i, device) in devices.iter().enumerate() {
                 if i > 0 {
                     println!();
                 }
-                let (t, extra) = experiments::run_report(*device, workload, &cfg);
+                let (t, extra) = experiments::run_spec_report(*device, &spec, &cfg);
                 print!("{}", t.render());
                 if !extra.is_empty() {
                     println!();
@@ -222,6 +260,7 @@ pub fn main(argv: &[String]) -> Result<i32> {
                 "fig6" => experiments::fig56_viper_cfg(&cfg, 532, scale, jobs).0,
                 "policies" => experiments::policy_sweep_cfg(&cfg, 216, scale, jobs).0,
                 "mlp" => experiments::mlp_sweep_cfg(&cfg, scale, jobs).0,
+                "replay" => experiments::replay_campaign_cfg(&cfg, scale, jobs).0,
                 "mshr" => experiments::mshr_ablation_cfg(&cfg, scale).0,
                 "fastmode" => experiments::fastmode_ablation_cfg(&cfg, artifacts, scale)?.0,
                 other => bail!("unknown experiment '{other}'"),
@@ -232,12 +271,19 @@ pub fn main(argv: &[String]) -> Result<i32> {
             let sub = args
                 .positional
                 .first()
-                .context("trace needs 'record' or 'replay'")?;
+                .context("trace needs 'record', 'gen' or 'replay'")?;
             match sub.as_str() {
                 "record" => {
                     let cfg = build_config(&args)?;
                     let device = parse_device(&args)?;
                     let workload = parse_workload(&args)?;
+                    if workload == WorkloadKind::Replay {
+                        bail!(
+                            "trace record needs a detailed workload \
+                             (stream|membench|viper216|viper532): replay is \
+                             already trace-driven"
+                        );
+                    }
                     let out_path = args.get("out").context("--out required")?;
                     let (out, trace) = run_with_trace(device, workload, &cfg);
                     trace.save(out_path)?;
@@ -246,6 +292,57 @@ pub fn main(argv: &[String]) -> Result<i32> {
                         trace.len(),
                         out.system.device_reads,
                         out.system.device_writes,
+                        out_path
+                    );
+                }
+                "gen" => {
+                    let cfg = build_config(&args)?;
+                    let kind_raw = args.get("kind").unwrap_or("zipf");
+                    let kind = SynthKind::parse(kind_raw)
+                        .with_context(|| format!("unknown trace kind '{kind_raw}'"))?;
+                    let mut spec = SynthSpec::new(kind);
+                    let parse_u64 = |name: &str| -> Result<Option<u64>> {
+                        args.get(name)
+                            .map(|raw| {
+                                raw.parse::<u64>()
+                                    .with_context(|| format!("--{name} '{raw}' (want an integer)"))
+                            })
+                            .transpose()
+                    };
+                    let parse_f64 = |name: &str| -> Result<Option<f64>> {
+                        args.get(name)
+                            .map(|raw| {
+                                raw.parse::<f64>()
+                                    .with_context(|| format!("--{name} '{raw}' (want a number)"))
+                            })
+                            .transpose()
+                    };
+                    if let Some(v) = parse_u64("ops")? {
+                        spec.ops = v;
+                    }
+                    if let Some(v) = parse_u64("footprint")? {
+                        spec.footprint = v;
+                    }
+                    if let Some(v) = parse_f64("write-ratio")? {
+                        spec.write_ratio = v.clamp(0.0, 1.0);
+                    }
+                    if let Some(v) = parse_f64("theta")? {
+                        spec.zipf_theta = v;
+                    }
+                    if let Some(v) = parse_u64("gap")? {
+                        spec.gap = v * NS;
+                    }
+                    let seed = parse_u64("seed")?.unwrap_or(cfg.seed);
+                    let out_path = args.get("out").context("--out required")?;
+                    let trace = spec.generate(seed);
+                    trace.save(out_path)?;
+                    println!(
+                        "generated {} {} accesses (seed {seed}, footprint {} B, \
+                         mean gap {} ns) -> {}",
+                        trace.len(),
+                        kind.name(),
+                        spec.footprint,
+                        spec.gap / NS,
                         out_path
                     );
                 }
@@ -267,11 +364,40 @@ pub fn main(argv: &[String]) -> Result<i32> {
                             r.speedup
                         );
                     } else {
-                        let mut dev = crate::devices::build_device(device, &cfg);
-                        let lats = trace.replay(dev.as_mut());
-                        let mean =
-                            lats.iter().sum::<u64>() as f64 / lats.len().max(1) as f64 / NS as f64;
-                        println!("{} accesses, mean latency {:.1} ns", lats.len(), mean);
+                        let mode = ReplayMode::from_config(&cfg);
+                        let mut dev = Instrumented::new(build_device(device, &cfg));
+                        let r = Replay {
+                            trace: &trace,
+                            mode,
+                            mlp: cfg.mlp,
+                        }
+                        .run(&mut dev);
+                        println!(
+                            "{} accesses ({} reads / {} writes) on {} \
+                             [{} loop, mlp={}], {:.3} ms simulated",
+                            r.ops(),
+                            r.reads,
+                            r.writes,
+                            device.name(),
+                            r.mode.name(),
+                            r.mlp,
+                            crate::sim::to_sec(r.sim_ticks) * 1e3,
+                        );
+                        println!(
+                            "response: mean {:.1} ns, p50 {:.1}, p95 {:.1}, \
+                             p99 {:.1}, p99.9 {:.1} (window stall {:.1} us)",
+                            r.latency.mean_ns(),
+                            r.latency.p50_ns(),
+                            r.latency.p95_ns(),
+                            r.latency.p99_ns(),
+                            r.latency.p999_ns(),
+                            to_us(r.stall_ticks),
+                        );
+                        println!(
+                            "service:  mean {:.1} ns, p99 {:.1}",
+                            dev.latency().mean_ns(),
+                            dev.latency().p99_ns(),
+                        );
                     }
                 }
                 other => bail!("unknown trace subcommand '{other}'"),
@@ -363,5 +489,49 @@ mod tests {
         assert_eq!(cfg.mlp, 8);
         let bad = Args::parse(&argv("--mlp nope"));
         assert!(build_config(&bad).is_err());
+    }
+
+    #[test]
+    fn closed_switch_lands_in_config() {
+        let a = Args::parse(&argv("--closed"));
+        let cfg = build_config(&a).unwrap();
+        assert!(cfg.replay_closed);
+        assert_eq!(ReplayMode::from_config(&cfg), ReplayMode::Closed);
+        let open = build_config(&Args::parse(&argv("info"))).unwrap();
+        assert_eq!(ReplayMode::from_config(&open), ReplayMode::Open);
+    }
+
+    #[test]
+    fn trace_gen_then_run_trace_roundtrip() {
+        let path = "/tmp/cxl_ssd_sim_cli_gen.trace";
+        let code = main(&argv(&format!(
+            "trace gen --kind uniform --ops 40 --footprint 1048576 --gap 500 --out {path}"
+        )))
+        .unwrap();
+        assert_eq!(code, 0);
+        let code = main(&argv(&format!("run --device dram --trace {path} --closed"))).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn sweep_replay_experiment_runs() {
+        // The acceptance path: zipfian + captured-trace campaign across
+        // all five devices on the parallel engine.
+        let code = main(&argv("sweep --experiment replay --quick --jobs 2")).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn trace_gen_rejects_unknown_kind() {
+        let e = main(&argv("trace gen --kind fractal --out /tmp/x.trace"));
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn trace_record_rejects_replay_workload() {
+        let e = main(&argv(
+            "trace record --device dram --workload replay --out /tmp/x.trace",
+        ));
+        assert!(e.is_err());
     }
 }

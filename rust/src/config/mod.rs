@@ -100,6 +100,11 @@ pub struct SimConfig {
     /// larger values let up to `mlp` requests overlap in the devices.
     /// CLI `--mlp` overrides.
     pub mlp: usize,
+    /// Replay pacing: `false` = open loop (requests arrive on the
+    /// trace's own schedule; queueing shows up in the response tail),
+    /// `true` = closed loop (next request issues as soon as the MLP
+    /// window grants a slot). CLI `--closed` overrides per invocation.
+    pub replay_closed: bool,
 }
 
 impl Default for SimConfig {
@@ -163,6 +168,7 @@ impl SimConfig {
             ("sys", "seed") => self.seed = v.as_u64()?,
             ("sys", "jobs") => self.jobs = v.as_u64()? as usize,
             ("sys", "mlp") => self.mlp = (v.as_u64()? as usize).max(1),
+            ("replay", "closed") => self.replay_closed = v.as_bool()?,
             _ => return Err(bad()),
         }
         Ok(())
@@ -228,6 +234,9 @@ mod tests {
         assert_eq!(c.mlp, 8);
         c.apply_override("sys.mlp=0").unwrap();
         assert_eq!(c.mlp, 1, "mlp clamps to at least 1");
+        assert!(!c.replay_closed, "replay defaults to open loop");
+        c.apply_override("replay.closed=true").unwrap();
+        assert!(c.replay_closed);
     }
 
     #[test]

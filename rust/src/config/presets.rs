@@ -37,6 +37,7 @@ pub fn table1() -> SimConfig {
         seed: 0xC11A_55D0,
         jobs: 1,
         mlp: 1,
+        replay_closed: false,
     }
 }
 

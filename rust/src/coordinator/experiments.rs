@@ -18,12 +18,16 @@ use anyhow::Result;
 use crate::cache::PolicyKind;
 use crate::config::{presets, SimConfig};
 use crate::coordinator::sweep::{self, SweepSpec, SweepTiming};
-use crate::coordinator::{fastmode_compare, run, run_with_trace, FastReport, RunOutput};
+use crate::coordinator::{fastmode_compare, run_with_trace, FastReport, RunOutput};
 use crate::cpu::Core;
 use crate::devices::DeviceKind;
+use crate::sim::{to_us, NS};
 use crate::stats::Table;
 use crate::topology::System;
-use crate::workloads::{Membench, MembenchMode, Viper, WorkloadKind, WorkloadSpec};
+use crate::trace::{SynthKind, SynthSpec, TraceSource};
+use crate::workloads::{
+    Membench, MembenchMode, ReplayMode, ReplayResult, Viper, WorkloadKind, WorkloadSpec,
+};
 
 /// The five devices of the paper's evaluation, in figure order.
 /// Defined as [`DeviceKind::ALL`] so the ordering invariant (figure
@@ -86,6 +90,22 @@ impl ExpScale {
             }
         }
         spec
+    }
+
+    /// Replay-campaign synthetic stream: a zipfian hotspot with a 30%
+    /// write mix over a footprint the 16MB DRAM cache can hold, arriving
+    /// every ~200ns — fast enough to saturate the raw CXL-SSD (whose
+    /// open-loop tail explodes) while the cached device keeps up, the
+    /// headline contrast the latency percentiles exist to show.
+    pub fn zipf_replay_spec(&self) -> SynthSpec {
+        SynthSpec {
+            ops: if self.quick { 4_000 } else { 40_000 },
+            footprint: 8 << 20,
+            write_ratio: 0.3,
+            zipf_theta: 0.9,
+            gap: 200 * NS,
+            ..SynthSpec::new(SynthKind::Zipfian)
+        }
     }
 
     /// §III-C workload: Viper in the paper's high-temporal-locality
@@ -333,6 +353,78 @@ pub fn policy_sweep_cfg(
     policy_figure(&PolicyKind::ALL, &outs.iter().collect::<Vec<_>>())
 }
 
+/// Replay campaign (serial, Table I): see [`replay_campaign_cfg`].
+pub fn replay_campaign(scale: ExpScale) -> (Table, Vec<(DeviceKind, String, ReplayResult)>) {
+    replay_campaign_cfg(&presets::table1(), scale, 1)
+}
+
+/// `--experiment replay`: the trace-driven campaign on the sweep engine.
+///
+/// Two streams — a synthetic zipfian hotspot and a device stream
+/// captured live from a Viper run on the cached CXL-SSD — replayed
+/// against all five devices (10 jobs), reporting per-request response
+/// latency percentiles (p50/p95/p99/p99.9). The pacing mode follows
+/// `base.replay_closed` (CLI `--closed`); synthetic jobs materialize
+/// from coordinate-derived seeds, so parallel output is bit-identical
+/// to serial like every other figure sweep.
+pub fn replay_campaign_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(DeviceKind, String, ReplayResult)>) {
+    // Capture the post-cache device stream once; every job shares it.
+    let (_, captured) =
+        sweep::run_spec(DeviceKind::CxlSsdCached, &scale.viper_spec(216), base, true);
+    let captured = captured.expect("capture requested");
+    let mode = ReplayMode::from_config(base);
+    let spec = SweepSpec::new(base.clone())
+        .devices(FIG_DEVICES.to_vec())
+        .workloads(vec![
+            WorkloadSpec::Replay {
+                source: TraceSource::Synthetic(scale.zipf_replay_spec()),
+                mode,
+            },
+            WorkloadSpec::Replay {
+                source: TraceSource::captured(captured),
+                mode,
+            },
+        ]);
+    let jobs = spec.expand();
+    let outs = sweep::execute(&jobs, n_workers);
+
+    let mut table = Table::new(&[
+        "device",
+        "trace",
+        "mode",
+        "ops",
+        "mean ns",
+        "p50 ns",
+        "p95 ns",
+        "p99 ns",
+        "p99.9 ns",
+        "stall us",
+    ]);
+    let mut raw = Vec::new();
+    for (job, out) in jobs.iter().zip(outs.iter()) {
+        let r = out.replay.as_ref().expect("replay output").clone();
+        let src = job.workload.label();
+        table.row_owned(vec![
+            job.device.name().to_string(),
+            src.clone(),
+            r.mode.name().to_string(),
+            r.ops().to_string(),
+            format!("{:.1}", r.latency.mean_ns()),
+            format!("{:.1}", r.latency.p50_ns()),
+            format!("{:.1}", r.latency.p95_ns()),
+            format!("{:.1}", r.latency.p99_ns()),
+            format!("{:.1}", r.latency.p999_ns()),
+            format!("{:.1}", to_us(r.stall_ticks)),
+        ]);
+        raw.push((job.device, src, r));
+    }
+    (table, raw)
+}
+
 /// Every figure of the paper as one combined parallel campaign.
 pub struct AllFiguresReport {
     /// `(heading, rendered table)` in figure order, ending with the
@@ -550,10 +642,20 @@ pub fn table1_table() -> Table {
 
 /// One-off detailed run table for the CLI `run` command.
 pub fn run_report(device: DeviceKind, workload: WorkloadKind, cfg: &SimConfig) -> (Table, String) {
-    let out = run(device, workload, cfg);
+    run_spec_report(device, &WorkloadSpec::default_for(workload), cfg)
+}
+
+/// `run_report` over a fully parametrized spec (also the `run --trace`
+/// path, where the workload is a replay of a loaded trace).
+pub fn run_spec_report(
+    device: DeviceKind,
+    spec: &WorkloadSpec,
+    cfg: &SimConfig,
+) -> (Table, String) {
+    let (out, _) = sweep::run_spec(device, spec, cfg, false);
     let mut t = Table::new(&["metric", "value"]);
     t.row(&["device".into(), device.name().into()]);
-    t.row(&["workload".into(), workload.name().into()]);
+    t.row(&["workload".into(), spec.label()]);
     t.row(&["sim time (ms)".into(), format!("{:.3}", out.sim_ticks as f64 / 1e9)]);
     t.row(&["host time (s)".into(), format!("{:.3}", out.host_seconds)]);
     t.row(&["loads".into(), out.system.loads.to_string()]);
@@ -587,6 +689,24 @@ pub fn run_report(device: DeviceKind, workload: WorkloadKind, cfg: &SimConfig) -
             vt.row(&[r.op.name().to_string(), format!("{:.0}", r.qps)]);
         }
         extra = vt.render();
+    }
+    if let Some(r) = &out.replay {
+        extra = format!(
+            "replay [{} loop, mlp={}]: {} ops ({} reads / {} writes)\n\
+             response latency: mean {:.1} ns, p50 {:.1}, p95 {:.1}, \
+             p99 {:.1}, p99.9 {:.1}; window stall {:.1} us\n",
+            r.mode.name(),
+            r.mlp,
+            r.ops(),
+            r.reads,
+            r.writes,
+            r.latency.mean_ns(),
+            r.latency.p50_ns(),
+            r.latency.p95_ns(),
+            r.latency.p99_ns(),
+            r.latency.p999_ns(),
+            to_us(r.stall_ticks),
+        );
     }
     (t, extra)
 }

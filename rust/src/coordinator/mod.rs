@@ -16,7 +16,9 @@ use crate::stats::Histogram;
 use crate::surrogate::Surrogate;
 use crate::topology::SystemStats;
 use crate::trace::Trace;
-use crate::workloads::{MembenchResult, StreamResult, ViperResult, WorkloadKind, WorkloadSpec};
+use crate::workloads::{
+    MembenchResult, ReplayResult, StreamResult, ViperResult, WorkloadKind, WorkloadSpec,
+};
 
 /// Everything a detailed run produces.
 pub struct RunOutput {
@@ -29,6 +31,7 @@ pub struct RunOutput {
     pub stream: Option<Vec<StreamResult>>,
     pub membench: Option<MembenchResult>,
     pub viper: Option<Vec<ViperResult>>,
+    pub replay: Option<ReplayResult>,
     pub system: SystemStats,
     pub device_kv: Vec<(String, f64)>,
 }
@@ -156,5 +159,20 @@ mod tests {
             out.system.device_reads + out.system.device_writes
         );
         assert!(!trace.is_empty());
+    }
+
+    #[test]
+    fn run_with_trace_on_replay_returns_the_replayed_stream() {
+        // Regression: the replay path used to return None for the
+        // capture, panicking here. A replay run's capture is the stream
+        // it replayed (the default spec's synthetic zipfian trace).
+        let cfg = presets::small_test();
+        let (out, trace) = run_with_trace(DeviceKind::Pmem, WorkloadKind::Replay, &cfg);
+        assert!(!trace.is_empty());
+        assert_eq!(
+            trace.len() as u64,
+            out.system.device_reads + out.system.device_writes
+        );
+        assert!(out.replay.is_some());
     }
 }

@@ -32,12 +32,12 @@ use crate::cache::PolicyKind;
 use crate::config::SimConfig;
 use crate::coordinator::RunOutput;
 use crate::cpu::Core;
-use crate::devices::DeviceKind;
+use crate::devices::{build_device, DeviceKind, Instrumented};
 use crate::sim::to_sec;
 use crate::stats::{Histogram, Table};
-use crate::topology::System;
+use crate::topology::{System, SystemStats};
 use crate::trace::Trace;
-use crate::workloads::{Membench, Stream, Viper, WorkloadKind, WorkloadSpec};
+use crate::workloads::{Membench, Replay, Stream, Viper, WorkloadKind, WorkloadSpec};
 
 /// A declarative experiment sweep: the cross product of devices,
 /// workload specs and (optional) cache-policy overrides over one base
@@ -153,10 +153,7 @@ impl RunJob {
 /// occurrence, see [`SweepSpec::expand`]) - the module docs explain why
 /// device/policy coordinates are deliberately excluded.
 pub fn job_seed(base_seed: u64, workload_salt: u64) -> u64 {
-    let mut z = base_seed ^ workload_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
+    crate::testing::mix_finalize(base_seed ^ workload_salt.wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
 /// Run one job to completion on the current thread.
@@ -168,13 +165,51 @@ pub fn run_job(job: &RunJob) -> RunOutput {
 /// shared by sweep jobs and the coordinator's one-off `run`/
 /// `run_with_trace` (so both seed workloads from `cfg.seed` and report
 /// identical numbers for identical configs). Optionally captures the
-/// device-access trace.
+/// device-access trace (for replay specs the "capture" is the stream
+/// that was replayed — a synthetic source materializes once and is
+/// returned, so `run_with_trace` never panics on a replay workload).
 pub fn run_spec(
     device: DeviceKind,
     workload: &WorkloadSpec,
     cfg: &SimConfig,
     capture: bool,
 ) -> (RunOutput, Option<Trace>) {
+    // Replay is device-direct: the trace is a post-cache stream, so it
+    // drives the device model without a System/Core in front. Synthetic
+    // sources materialize from `cfg.seed` — in a sweep that seed derives
+    // from the job's coordinates, preserving serial/parallel identity.
+    if let WorkloadSpec::Replay { source, mode } = workload {
+        let wall = Instant::now();
+        let trace = source.materialize(cfg.seed);
+        let mut dev = Instrumented::new(build_device(device, cfg));
+        let result = Replay {
+            trace: &trace,
+            mode: *mode,
+            mlp: cfg.mlp,
+        }
+        .run(&mut dev);
+        let system = SystemStats {
+            device_reads: result.reads,
+            device_writes: result.writes,
+            device_latency: dev.latency().clone(),
+            ..SystemStats::default()
+        };
+        let out = RunOutput {
+            device,
+            workload: workload.kind(),
+            sim_ticks: result.sim_ticks,
+            host_seconds: wall.elapsed().as_secs_f64(),
+            stream: None,
+            membench: None,
+            viper: None,
+            replay: Some(result),
+            system,
+            device_kv: dev.stats_kv(),
+        };
+        let trace_out = capture.then(|| (*trace).clone());
+        return (out, trace_out);
+    }
+
     let mut sys = System::new(device, cfg);
     // The workload reads the window size off the core: membench always
     // issues blocking loads (loaded latency), stream and viper switch to
@@ -237,6 +272,7 @@ pub fn run_spec(
                 .run(&mut core, &mut sys),
             );
         }
+        WorkloadSpec::Replay { .. } => unreachable!("replay handled above"),
     }
     sys.drain(core.now());
 
@@ -249,6 +285,7 @@ pub fn run_spec(
         stream,
         membench,
         viper,
+        replay: None,
         system: sys.stats().clone(),
         device_kv: sys.device_stats_kv(),
     };

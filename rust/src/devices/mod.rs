@@ -13,6 +13,7 @@ use crate::mem::{line_index, page_index, Packet};
 use crate::pmem::{Pmem, PmemConfig};
 use crate::sim::Tick;
 use crate::ssd::{build as build_ssd, Ssd, SsdConfig};
+use crate::stats::Histogram;
 
 /// Device selector (CLI `--device`, bench sweeps).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -103,6 +104,55 @@ pub trait MemoryDevice {
     /// Key device statistics for reports.
     fn stats_kv(&self) -> Vec<(String, f64)> {
         Vec::new()
+    }
+}
+
+/// Per-request latency telemetry for any device: records every issued
+/// request's service latency (issue tick → completion tick) into a
+/// log-scale [`Histogram`] and surfaces its tail quantiles through
+/// [`stats_kv`](MemoryDevice::stats_kv). The replay driver wraps its
+/// device in this so service latency (device-side) and response latency
+/// (arrival → completion, including queueing) are reported separately.
+pub struct Instrumented {
+    inner: Box<dyn MemoryDevice>,
+    latency: Histogram,
+}
+
+impl Instrumented {
+    pub fn new(inner: Box<dyn MemoryDevice>) -> Self {
+        Instrumented {
+            inner,
+            latency: Histogram::new(),
+        }
+    }
+
+    /// Service-latency distribution over every issued request.
+    pub fn latency(&self) -> &Histogram {
+        &self.latency
+    }
+}
+
+impl MemoryDevice for Instrumented {
+    fn kind(&self) -> DeviceKind {
+        self.inner.kind()
+    }
+
+    fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        let done = self.inner.issue(now, addr, is_write);
+        self.latency.record(done - now);
+        done
+    }
+
+    fn flush(&mut self, now: Tick) {
+        self.inner.flush(now);
+    }
+
+    fn stats_kv(&self) -> Vec<(String, f64)> {
+        let mut kv = self.inner.stats_kv();
+        kv.push(("svc_p50_ns".into(), self.latency.p50_ns()));
+        kv.push(("svc_p99_ns".into(), self.latency.p99_ns()));
+        kv.push(("svc_p999_ns".into(), self.latency.p999_ns()));
+        kv
     }
 }
 
@@ -599,6 +649,27 @@ mod tests {
         // The fill is served from the SSD (ICL or flash) — far above the
         // 50ns cache-hit latency.
         assert!(l0 > US, "l0={l0}");
+    }
+
+    #[test]
+    fn instrumented_wrapper_is_transparent_and_records() {
+        let c = cfg();
+        let mut plain = build_device(DeviceKind::Pmem, &c);
+        let mut probed = Instrumented::new(build_device(DeviceKind::Pmem, &c));
+        let mut now = 0;
+        for i in 0..16u64 {
+            let addr = i * 8192;
+            let a = plain.access(now, addr, false);
+            let b = probed.access(now, addr, false);
+            assert_eq!(a, b, "wrapper must not perturb timing");
+            now += a + US;
+        }
+        assert_eq!(probed.latency().count(), 16);
+        let kv: std::collections::HashMap<String, f64> =
+            probed.stats_kv().into_iter().collect();
+        assert!(kv["svc_p50_ns"] > 0.0);
+        assert!(kv["svc_p50_ns"] <= kv["svc_p99_ns"]);
+        assert!(kv.contains_key("media_accesses"), "inner stats pass through");
     }
 
     #[test]

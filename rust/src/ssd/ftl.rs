@@ -25,6 +25,8 @@ pub struct FtlStats {
     pub gc_reads: u64,
     pub gc_runs: u64,
     pub erases: u64,
+    /// TRIM/deallocate commands accepted.
+    pub trims: u64,
 }
 
 impl FtlStats {
@@ -140,6 +142,24 @@ impl Ftl {
         let (done, _) = self.pal.execute(now, die, PalOp::Program);
         self.maybe_gc(now, die);
         done - now
+    }
+
+    /// TRIM/deallocate logical page `lp`: the mapping is dropped and the
+    /// physical page invalidated for GC to reclaim. No media operation
+    /// is modeled (the command completes in the controller's mapping
+    /// tables). Out-of-range pages are ignored.
+    pub fn trim(&mut self, lp: u64) {
+        if lp as usize >= self.l2p.len() {
+            return;
+        }
+        self.stats.trims += 1;
+        self.invalidate(lp);
+    }
+
+    /// Global physical page currently backing `lp`, if mapped
+    /// (diagnostics and differential tests).
+    pub fn phys_of(&self, lp: u64) -> Option<u64> {
+        self.lookup(lp).map(|a| self.encode_phys(a) as u64)
     }
 
     /// The die a never-written page times against (kernel-compatible
@@ -374,6 +394,24 @@ mod tests {
         assert!(f.stats().erases > 0);
         assert!(f.stats().waf() >= 1.0);
         assert!(f.max_erase_count() > 0);
+    }
+
+    #[test]
+    fn trim_unmaps_without_media_traffic() {
+        let mut f = Ftl::new(&small_cfg());
+        f.write(0, 5);
+        assert!(f.is_mapped(5));
+        assert!(f.phys_of(5).is_some());
+        let programs = f.stats().host_programs;
+        f.trim(5);
+        assert!(!f.is_mapped(5));
+        assert_eq!(f.phys_of(5), None);
+        assert_eq!(f.stats().trims, 1);
+        assert_eq!(f.stats().host_programs, programs, "trim is metadata-only");
+        // Re-trimming and out-of-range pages are harmless.
+        f.trim(5);
+        f.trim(u64::MAX);
+        assert_eq!(f.stats().trims, 2);
     }
 
     #[test]

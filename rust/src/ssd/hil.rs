@@ -101,6 +101,19 @@ impl Hil {
         self.ftl.is_mapped(page % self.ftl.user_pages())
     }
 
+    /// TRIM/deallocate a logical page: drop any buffered copy (its data
+    /// is dead — it must not be written back) and unmap it in the FTL
+    /// so GC can reclaim the physical page.
+    /// (`_now` is accepted for device-API symmetry; the command is
+    /// metadata-only and completes in the controller.)
+    pub fn trim(&mut self, _now: Tick, page: u64) {
+        let page = page % self.ftl.user_pages();
+        if let Some(icl) = self.icl.as_mut() {
+            icl.invalidate(page);
+        }
+        self.ftl.trim(page);
+    }
+
     /// Drain dirty ICL frames (end-of-run consistency point).
     pub fn flush(&mut self, now: Tick) {
         if let Some(icl) = self.icl.as_mut() {
@@ -178,6 +191,21 @@ mod tests {
         assert_eq!(programs, 8);
         ssd.flush(2 * crate::sim::MS);
         assert_eq!(ssd.ftl_stats().host_programs, 8);
+    }
+
+    #[test]
+    fn trim_drops_buffered_page_and_mapping() {
+        let mut ssd = Hil::new(SsdConfig::default());
+        ssd.access_page(0, 7, true); // dirty in the ICL, unmapped on flash
+        ssd.trim(crate::sim::US, 7);
+        ssd.flush(crate::sim::MS);
+        assert_eq!(
+            ssd.ftl_stats().host_programs,
+            0,
+            "trimmed page must not reach flash"
+        );
+        assert!(!ssd.is_mapped(7));
+        assert_eq!(ssd.ftl_stats().trims, 1);
     }
 
     #[test]

@@ -113,6 +113,14 @@ impl Icl {
         lat
     }
 
+    /// Drop `page` from the buffer without writing it back (TRIM: the
+    /// page's contents are dead, so dirtiness must not reach flash).
+    pub fn invalidate(&mut self, page: u64) {
+        if let Some(idx) = self.map.remove(&page) {
+            self.frames[idx] = None;
+        }
+    }
+
     /// Flush every dirty frame to flash (drain at end of run).
     pub fn flush(&mut self, now: Tick, ftl: &mut Ftl) {
         for f in self.frames.iter_mut().flatten() {
@@ -182,6 +190,18 @@ mod tests {
         }
         assert_eq!(icl.stats().writebacks, 1);
         assert_eq!(ftl.stats().host_programs, 1);
+    }
+
+    #[test]
+    fn invalidate_drops_dirty_frame_without_writeback() {
+        let (mut icl, mut ftl) = setup();
+        icl.access(0, &mut ftl, 0, true);
+        icl.invalidate(0);
+        icl.flush(0, &mut ftl);
+        assert_eq!(ftl.stats().host_programs, 0, "dead page must not flush");
+        assert_eq!(icl.resident(), 0);
+        // Invalidating an absent page is a no-op.
+        icl.invalidate(42);
     }
 
     #[test]

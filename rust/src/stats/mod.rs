@@ -3,13 +3,24 @@
 
 use crate::sim::{Tick, NS};
 
-/// Log2-bucketed latency histogram (buckets in nanoseconds).
+/// Linear sub-buckets per octave (4 bits → ~6% relative resolution).
+const SUB_BITS: usize = 4;
+const SUBS: usize = 1 << SUB_BITS;
+/// Top octave: `[2^47, 2^48)` ns ≈ 3.3 days — beyond any simulated latency.
+const MAX_EXP: usize = 47;
+/// 16 unit buckets below 16ns plus 44 octaves × 16 sub-buckets.
+const N_BUCKETS: usize = SUBS + (MAX_EXP - SUB_BITS + 1) * SUBS;
+
+/// Log-scale latency histogram (buckets in nanoseconds).
 ///
-/// Bucket `i` covers `[2^i, 2^(i+1))` ns; bucket 0 also absorbs sub-ns.
-/// 48 buckets reach ~3 days — more than any simulated latency.
+/// HDR-style layout: values below 16ns get unit-width buckets; above,
+/// each power-of-two octave splits into 16 linear sub-buckets, so
+/// percentile extraction (p50/p95/p99/p99.9) resolves to ~6% relative
+/// error instead of a full power of two. Fixed bucket boundaries make
+/// merged histograms exact and results bit-deterministic.
 #[derive(Debug, Clone)]
 pub struct Histogram {
-    buckets: [u64; 48],
+    buckets: Box<[u64; N_BUCKETS]>,
     count: u64,
     sum: u128,
     min: Tick,
@@ -25,7 +36,7 @@ impl Default for Histogram {
 impl Histogram {
     pub fn new() -> Self {
         Histogram {
-            buckets: [0; 48],
+            buckets: Box::new([0; N_BUCKETS]),
             count: 0,
             sum: 0,
             min: Tick::MAX,
@@ -33,10 +44,37 @@ impl Histogram {
         }
     }
 
+    /// Bucket index for a latency of `ns` nanoseconds.
+    fn bucket_index(ns: u64) -> usize {
+        if ns < SUBS as u64 {
+            return ns as usize;
+        }
+        let exp = 63 - ns.leading_zeros() as usize;
+        if exp > MAX_EXP {
+            // Overflow values (>= 2^48 ns ≈ 3.3 days) saturate into the
+            // terminal bucket; deriving a sub-bucket from their high
+            // bits would wrap *within* the top octave and break
+            // percentile ordering.
+            return N_BUCKETS - 1;
+        }
+        let sub = ((ns >> (exp - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        SUBS + (exp - SUB_BITS) * SUBS + sub
+    }
+
+    /// Upper bound of bucket `idx`, in nanoseconds.
+    fn bucket_upper_ns(idx: usize) -> f64 {
+        if idx < SUBS {
+            return (idx + 1) as f64;
+        }
+        let exp = SUB_BITS + (idx - SUBS) / SUBS;
+        let sub = (idx - SUBS) % SUBS;
+        let width = 1u64 << (exp - SUB_BITS);
+        ((SUBS + sub) as u64 * width + width) as f64
+    }
+
     pub fn record(&mut self, lat: Tick) {
         let ns = lat / NS;
-        let idx = (64 - ns.leading_zeros() as usize).min(47);
-        self.buckets[idx] += 1;
+        self.buckets[Self::bucket_index(ns)] += 1;
         self.count += 1;
         self.sum += lat as u128;
         self.min = self.min.min(lat);
@@ -81,10 +119,26 @@ impl Histogram {
         for (i, &b) in self.buckets.iter().enumerate() {
             seen += b;
             if seen >= target {
-                return (1u64 << i) as f64; // bucket upper bound in ns
+                return Self::bucket_upper_ns(i);
             }
         }
         self.max as f64 / NS as f64
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        self.percentile_ns(50.0)
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        self.percentile_ns(95.0)
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        self.percentile_ns(99.0)
+    }
+
+    pub fn p999_ns(&self) -> f64 {
+        self.percentile_ns(99.9)
     }
 
     pub fn merge(&mut self, other: &Histogram) {
@@ -314,5 +368,57 @@ mod tests {
         assert_eq!(h.mean(), 0.0);
         assert_eq!(h.percentile_ns(99.0), 0.0);
         assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn sub_buckets_resolve_percentiles_within_octave() {
+        // 1000 samples of 1..=1000 ns: the old power-of-two buckets could
+        // only answer p50=512; sub-buckets must land within ~7% of 500.
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * NS);
+        }
+        let p50 = h.percentile_ns(50.0);
+        assert!((468.0..=544.0).contains(&p50), "p50={p50}");
+        let p99 = h.percentile_ns(99.0);
+        assert!((928.0..=1088.0).contains(&p99), "p99={p99}");
+        let p999 = h.p999_ns();
+        assert!(p999 >= p99, "p999={p999} < p99={p99}");
+    }
+
+    #[test]
+    fn quantile_helpers_are_ordered() {
+        let mut h = Histogram::new();
+        for i in 0..10_000u64 {
+            h.record((i % 977 + 1) * NS);
+        }
+        assert!(h.p50_ns() <= h.p95_ns());
+        assert!(h.p95_ns() <= h.p99_ns());
+        assert!(h.p99_ns() <= h.p999_ns());
+    }
+
+    #[test]
+    fn bucket_layout_is_contiguous_and_monotone() {
+        // Every ns value maps to a bucket whose bounds contain it, and
+        // indexes/bounds are monotone in the value.
+        let mut prev_idx = 0;
+        for ns in 0..5_000u64 {
+            let idx = Histogram::bucket_index(ns);
+            assert!(idx >= prev_idx, "index not monotone at {ns}");
+            assert!(
+                Histogram::bucket_upper_ns(idx) > ns as f64,
+                "upper bound must exceed the value at {ns}"
+            );
+            prev_idx = idx;
+        }
+        // Overflow values (any exponent above the top octave) saturate
+        // into the terminal bucket — including the ones whose high bits
+        // would otherwise wrap to an early sub-bucket.
+        assert_eq!(Histogram::bucket_index(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_index(1u64 << 48), N_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_index((1u64 << 48) + 1), N_BUCKETS - 1);
+        // The largest in-range value maps just below the terminal bucket's
+        // reuse as a saturation sink.
+        assert_eq!(Histogram::bucket_index((1u64 << 48) - 1), N_BUCKETS - 1);
     }
 }

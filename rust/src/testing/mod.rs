@@ -6,6 +6,24 @@
 //! failing seed so any counterexample is reproducible with
 //! `SplitMix64::new(seed)`.
 
+/// SplitMix64 golden-gamma increment.
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// SplitMix64 output finalizer (no increment): the single home of the
+/// mixing constants shared by [`SplitMix64`], [`mix64`] and the sweep
+/// engine's seed derivation ([`crate::coordinator::sweep::job_seed`]).
+pub fn mix_finalize(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless SplitMix64 step: one well-mixed u64 from `x`. Used for
+/// order-scrambling (e.g. scattering Zipf ranks across a page space).
+pub fn mix64(x: u64) -> u64 {
+    mix_finalize(x.wrapping_add(GOLDEN))
+}
+
 /// SplitMix64 PRNG (Steele, Lea & Flood; the seeder used by xoshiro).
 /// Deterministic, passes BigCrush on 64-bit outputs, one u64 of state.
 #[derive(Debug, Clone)]
@@ -19,11 +37,8 @@ impl SplitMix64 {
     }
 
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^ (z >> 31)
+        self.state = self.state.wrapping_add(GOLDEN);
+        mix_finalize(self.state)
     }
 
     /// Uniform in `[0, bound)`; `bound` must be nonzero.

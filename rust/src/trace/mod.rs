@@ -11,8 +11,16 @@
 //! # cxl-ssd-sim trace v1
 //! <tick> <byte_offset> R|W
 //! ```
+//!
+//! [`source`] unifies captured traces with synthetic generators
+//! (uniform, zipfian-hotspot, sequential-scan, mixed read/write) behind
+//! one [`TraceSource`] the replay workload consumes.
 
-use std::io::{BufRead, BufWriter, Write};
+pub mod source;
+
+pub use source::{SynthKind, SynthSpec, TraceSource};
+
+use std::fmt::Write as _;
 
 use crate::sim::Tick;
 
@@ -36,7 +44,7 @@ impl TraceEntry {
 }
 
 /// An ordered device-access trace.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Trace {
     entries: Vec<TraceEntry>,
 }
@@ -71,39 +79,51 @@ impl Trace {
             .collect()
     }
 
-    pub fn save(&self, path: &str) -> std::io::Result<()> {
-        let f = std::fs::File::create(path)?;
-        let mut w = BufWriter::new(f);
-        writeln!(w, "# cxl-ssd-sim trace v1")?;
-        writeln!(w, "# entries: {}", self.entries.len())?;
+    /// Tick of the last entry (0 for an empty trace).
+    pub fn last_tick(&self) -> Tick {
+        self.entries.last().map_or(0, |e| e.tick)
+    }
+
+    /// Render to the v1 text format (the exact bytes [`save`](Self::save)
+    /// writes); [`parse`](Self::parse) is its inverse.
+    pub fn format(&self) -> String {
+        let mut s = String::with_capacity(32 + self.entries.len() * 24);
+        let _ = writeln!(s, "# cxl-ssd-sim trace v1");
+        let _ = writeln!(s, "# entries: {}", self.entries.len());
         for e in &self.entries {
-            writeln!(
-                w,
+            let _ = writeln!(
+                s,
                 "{} {} {}",
                 e.tick,
                 e.offset,
                 if e.is_write { "W" } else { "R" }
-            )?;
+            );
         }
-        Ok(())
+        s
     }
 
-    pub fn load(path: &str) -> anyhow::Result<Self> {
-        let f = std::fs::File::open(path)?;
+    /// Parse the v1 text format. Malformed lines are hard errors (with
+    /// their line number), never silently skipped: a bad tick or offset
+    /// (non-numeric, negative), a missing or unknown R/W field, and
+    /// trailing extra fields all reject the trace.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
         let mut entries = Vec::new();
-        for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
-            let line = line?;
+        for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
             let mut parts = line.split_whitespace();
-            let parse = |s: Option<&str>| -> anyhow::Result<u64> {
-                Ok(s.ok_or_else(|| anyhow::anyhow!("trace line {}: too few fields", lineno + 1))?
-                    .parse::<u64>()?)
+            let parse = |s: Option<&str>, what: &str| -> anyhow::Result<u64> {
+                let raw = s.ok_or_else(|| {
+                    anyhow::anyhow!("trace line {}: missing {}", lineno + 1, what)
+                })?;
+                raw.parse::<u64>().map_err(|e| {
+                    anyhow::anyhow!("trace line {}: bad {} '{}': {}", lineno + 1, what, raw, e)
+                })
             };
-            let tick = parse(parts.next())?;
-            let offset = parse(parts.next())?;
+            let tick = parse(parts.next(), "tick")?;
+            let offset = parse(parts.next(), "offset")?;
             let rw = parts
                 .next()
                 .ok_or_else(|| anyhow::anyhow!("trace line {}: missing R/W", lineno + 1))?;
@@ -112,9 +132,22 @@ impl Trace {
                 "W" | "w" => true,
                 other => anyhow::bail!("trace line {}: bad op '{}'", lineno + 1, other),
             };
+            if let Some(extra) = parts.next() {
+                anyhow::bail!("trace line {}: trailing field '{}'", lineno + 1, extra);
+            }
             entries.push(TraceEntry::new(tick, offset, is_write));
         }
         Ok(Trace { entries })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.format())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("trace file '{}': {}", path, e))?;
+        Self::parse(&text)
     }
 
     /// Replay against a device model; returns per-access latencies.

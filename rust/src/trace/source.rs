@@ -1,0 +1,315 @@
+//! Trace sources — the unified front end of trace-driven simulation.
+//!
+//! A [`TraceSource`] is plain data describing where a device-access
+//! stream comes from: a captured trace (shared in memory across sweep
+//! jobs) or a synthetic generator ([`SynthSpec`]). Synthetic sources
+//! materialize lazily from a seed, so sweep jobs that derive their seed
+//! from sweep coordinates reproduce bit-identical streams whether they
+//! run serially or in parallel.
+
+use std::sync::Arc;
+
+use super::{Trace, TraceEntry};
+use crate::mem::{LINE_BYTES, PAGE_BYTES};
+use crate::sim::{Tick, NS};
+use crate::testing::{SplitMix64, Zipf};
+
+/// Synthetic stream family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthKind {
+    /// Uniform random 64B offsets, read-only by default.
+    Uniform,
+    /// Zipfian-hotspot: page popularity follows a Zipf law, hot pages
+    /// scattered across the footprint, random line within the page.
+    Zipfian,
+    /// Sequential line scan, wrapping at the footprint.
+    SeqScan,
+    /// Uniform random offsets with a configurable read/write mix.
+    Mixed,
+}
+
+impl SynthKind {
+    pub const ALL: [SynthKind; 4] = [
+        SynthKind::Uniform,
+        SynthKind::Zipfian,
+        SynthKind::SeqScan,
+        SynthKind::Mixed,
+    ];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Some(SynthKind::Uniform),
+            "zipf" | "zipfian" => Some(SynthKind::Zipfian),
+            "seq" | "seq-scan" | "sequential" => Some(SynthKind::SeqScan),
+            "mixed" => Some(SynthKind::Mixed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SynthKind::Uniform => "uniform",
+            SynthKind::Zipfian => "zipfian",
+            SynthKind::SeqScan => "seq-scan",
+            SynthKind::Mixed => "mixed",
+        }
+    }
+}
+
+/// A fully parametrized synthetic trace: spec + seed = stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthSpec {
+    pub kind: SynthKind,
+    /// Number of accesses to generate.
+    pub ops: u64,
+    /// Device-window bytes the stream exercises.
+    pub footprint: u64,
+    /// Probability an access is a write.
+    pub write_ratio: f64,
+    /// Zipf skew (zipfian kind only; clamped to (0, 1)).
+    pub zipf_theta: f64,
+    /// Mean inter-arrival gap in ticks (0 = all arrivals at tick 0).
+    pub gap: Tick,
+}
+
+impl SynthSpec {
+    /// Defaults per kind: 20k ops over 8MB with a 200ns mean gap; the
+    /// mixed and zipfian kinds carry a write fraction.
+    pub fn new(kind: SynthKind) -> Self {
+        SynthSpec {
+            kind,
+            ops: 20_000,
+            footprint: 8 << 20,
+            write_ratio: match kind {
+                SynthKind::Mixed => 0.3,
+                SynthKind::Zipfian => 0.2,
+                _ => 0.0,
+            },
+            zipf_theta: 0.9,
+            gap: 200 * NS,
+        }
+    }
+
+    /// Short label for job/summary tables.
+    pub fn label(&self) -> String {
+        format!("{}/{}ops", self.kind.name(), self.ops)
+    }
+
+    /// Materialize the stream. Same spec + same seed = same trace,
+    /// bit-for-bit: one [`SplitMix64`] drives jitter, offsets and the
+    /// read/write coin in a fixed draw order.
+    pub fn generate(&self, seed: u64) -> Trace {
+        let mut rng = SplitMix64::new(seed);
+        let lines = (self.footprint / LINE_BYTES).max(1);
+        let pages = (self.footprint / PAGE_BYTES).max(1);
+        let lines_per_page = (PAGE_BYTES / LINE_BYTES).max(1);
+        let zipf = matches!(self.kind, SynthKind::Zipfian)
+            .then(|| Zipf::new(pages, self.zipf_theta.clamp(0.05, 0.99)));
+        let mut tick: Tick = 0;
+        let mut entries = Vec::with_capacity(self.ops as usize);
+        for i in 0..self.ops {
+            if self.gap > 0 {
+                // Jittered inter-arrival, mean == gap.
+                tick += self.gap / 2 + rng.below(self.gap + 1);
+            }
+            let offset = match self.kind {
+                SynthKind::Uniform | SynthKind::Mixed => rng.below(lines) * LINE_BYTES,
+                SynthKind::SeqScan => (i % lines) * LINE_BYTES,
+                SynthKind::Zipfian => {
+                    let rank = zipf.as_ref().expect("zipfian sampler").sample(&mut rng);
+                    let page = scatter(rank) % pages;
+                    // Line within the page, bounded by the footprint so
+                    // sub-page / non-page-multiple footprints never emit
+                    // out-of-range offsets (for page-multiple footprints
+                    // this is exactly `lines_per_page`).
+                    let first_line = page * lines_per_page;
+                    let avail = lines
+                        .saturating_sub(first_line)
+                        .min(lines_per_page)
+                        .max(1);
+                    (first_line + rng.below(avail)) * LINE_BYTES
+                }
+            };
+            let is_write = rng.chance(self.write_ratio);
+            entries.push(TraceEntry::new(tick, offset, is_write));
+        }
+        Trace::new(entries)
+    }
+}
+
+/// Scatter Zipf ranks across the page space so the hot set is not one
+/// contiguous prefix of the footprint.
+fn scatter(x: u64) -> u64 {
+    crate::testing::mix64(x)
+}
+
+/// Where a replay stream comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSource {
+    /// An in-memory captured (or file-loaded) trace, shared cheaply
+    /// across sweep jobs.
+    Captured(Arc<Trace>),
+    /// A synthetic generator, materialized per job from the job seed.
+    Synthetic(SynthSpec),
+}
+
+impl TraceSource {
+    pub fn captured(trace: Trace) -> Self {
+        TraceSource::Captured(Arc::new(trace))
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            TraceSource::Captured(t) => format!("capture/{}ops", t.len()),
+            TraceSource::Synthetic(s) => s.label(),
+        }
+    }
+
+    /// Resolve to a concrete trace. Captured sources ignore `seed` (the
+    /// stream is already fixed — every device replays the same bytes);
+    /// synthetic sources generate from it.
+    pub fn materialize(&self, seed: u64) -> Arc<Trace> {
+        match self {
+            TraceSource::Captured(t) => Arc::clone(t),
+            TraceSource::Synthetic(s) => Arc::new(s.generate(seed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in SynthKind::ALL {
+            assert_eq!(SynthKind::parse(k.name()), Some(k), "{k:?}");
+        }
+        assert_eq!(SynthKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        for kind in SynthKind::ALL {
+            let spec = SynthSpec {
+                ops: 500,
+                ..SynthSpec::new(kind)
+            };
+            assert_eq!(spec.generate(7), spec.generate(7), "{kind:?}");
+            assert_ne!(
+                spec.generate(7),
+                spec.generate(8),
+                "{kind:?} must depend on the seed"
+            );
+        }
+    }
+
+    #[test]
+    fn ticks_are_monotone_with_mean_gap() {
+        let spec = SynthSpec {
+            ops: 2_000,
+            ..SynthSpec::new(SynthKind::Uniform)
+        };
+        let t = spec.generate(3);
+        let mut prev = 0;
+        for e in t.entries() {
+            assert!(e.tick >= prev);
+            prev = e.tick;
+        }
+        // Mean inter-arrival within 20% of the configured gap.
+        let mean = t.last_tick() as f64 / spec.ops as f64;
+        let gap = spec.gap as f64;
+        assert!((mean - gap).abs() < 0.2 * gap, "mean gap {mean} vs {gap}");
+    }
+
+    #[test]
+    fn seq_scan_walks_lines_in_order() {
+        let spec = SynthSpec {
+            ops: 10,
+            footprint: 4 * LINE_BYTES,
+            ..SynthSpec::new(SynthKind::SeqScan)
+        };
+        let t = spec.generate(1);
+        let offsets: Vec<u64> = t.entries().iter().map(|e| e.offset).collect();
+        assert_eq!(offsets[..4], [0, 64, 128, 192]);
+        assert_eq!(offsets[4], 0, "scan wraps at the footprint");
+    }
+
+    #[test]
+    fn zipfian_concentrates_on_a_hot_set() {
+        let spec = SynthSpec {
+            ops: 10_000,
+            ..SynthSpec::new(SynthKind::Zipfian)
+        };
+        let t = spec.generate(11);
+        let mut by_page = std::collections::HashMap::new();
+        for e in t.entries() {
+            *by_page.entry(e.offset / PAGE_BYTES).or_insert(0u64) += 1;
+        }
+        let mut counts: Vec<u64> = by_page.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let hot: u64 = counts.iter().take(20).sum();
+        assert!(
+            hot as f64 / spec.ops as f64 > 0.25,
+            "top-20 pages got {hot}/{} accesses",
+            spec.ops
+        );
+        // All offsets stay inside the footprint.
+        assert!(t.entries().iter().all(|e| e.offset < spec.footprint));
+    }
+
+    #[test]
+    fn zipfian_sub_page_footprint_stays_in_range() {
+        // Regression: a footprint below one 4KB page used to emit
+        // offsets up to a full page.
+        let spec = SynthSpec {
+            ops: 2_000,
+            footprint: 2048,
+            ..SynthSpec::new(SynthKind::Zipfian)
+        };
+        let t = spec.generate(13);
+        assert!(t.entries().iter().all(|e| e.offset < 2048));
+        // Non-page-multiple footprints stay in range too.
+        let spec = SynthSpec {
+            ops: 2_000,
+            footprint: 3 * PAGE_BYTES + 512,
+            ..SynthSpec::new(SynthKind::Zipfian)
+        };
+        let t = spec.generate(13);
+        assert!(t.entries().iter().all(|e| e.offset < spec.footprint));
+    }
+
+    #[test]
+    fn write_ratio_is_respected() {
+        let spec = SynthSpec {
+            ops: 10_000,
+            write_ratio: 0.3,
+            ..SynthSpec::new(SynthKind::Mixed)
+        };
+        let t = spec.generate(5);
+        let writes = t.entries().iter().filter(|e| e.is_write).count() as f64;
+        let frac = writes / spec.ops as f64;
+        assert!((frac - 0.3).abs() < 0.03, "write fraction {frac}");
+        // Read-only kinds draw the same coin but never land a write.
+        let ro = SynthSpec {
+            ops: 1_000,
+            ..SynthSpec::new(SynthKind::Uniform)
+        };
+        assert!(ro.generate(5).entries().iter().all(|e| !e.is_write));
+    }
+
+    #[test]
+    fn source_labels_and_materialize() {
+        let synth = TraceSource::Synthetic(SynthSpec::new(SynthKind::Zipfian));
+        assert_eq!(synth.label(), "zipfian/20000ops");
+        let t = Trace::new(vec![TraceEntry::new(0, 0, false)]);
+        let cap = TraceSource::captured(t.clone());
+        assert_eq!(cap.label(), "capture/1ops");
+        // Captured sources ignore the seed.
+        assert_eq!(cap.materialize(1), cap.materialize(2));
+        // Synthetic sources derive from it.
+        let a = synth.materialize(1);
+        let b = synth.materialize(2);
+        assert_ne!(a, b);
+    }
+}

@@ -1,16 +1,21 @@
 //! Workload generators reproducing the paper's §III benchmarks:
 //! [`stream`] (Fig 3 bandwidth), [`membench`] (Fig 4 latency) and
-//! [`viper`] (Figs 5–6 key-value QPS).
+//! [`viper`] (Figs 5–6 key-value QPS) — plus [`replay`], the
+//! trace-driven mode that turns any captured or synthetic device stream
+//! into a workload.
 
 pub mod membench;
+pub mod replay;
 pub mod stream;
 pub mod viper;
 
 pub use membench::{Membench, MembenchMode, MembenchResult};
+pub use replay::{Replay, ReplayMode, ReplayResult};
 pub use stream::{Stream, StreamResult};
 pub use viper::{Viper, ViperOp, ViperResult};
 
 use crate::sim::Tick;
+use crate::trace::{SynthKind, SynthSpec, TraceSource};
 
 /// Workload selector for the CLI.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,14 +24,18 @@ pub enum WorkloadKind {
     Membench,
     Viper216,
     Viper532,
+    Replay,
 }
 
 impl WorkloadKind {
-    pub const ALL: [WorkloadKind; 4] = [
+    /// Replay is appended last: the sweep engine salts seeds by ordinal,
+    /// so existing workloads must keep their positions.
+    pub const ALL: [WorkloadKind; 5] = [
         WorkloadKind::Stream,
         WorkloadKind::Membench,
         WorkloadKind::Viper216,
         WorkloadKind::Viper532,
+        WorkloadKind::Replay,
     ];
 
     pub fn parse(s: &str) -> Option<Self> {
@@ -35,6 +44,7 @@ impl WorkloadKind {
             "membench" => Some(WorkloadKind::Membench),
             "viper216" | "viper-216" => Some(WorkloadKind::Viper216),
             "viper532" | "viper-532" => Some(WorkloadKind::Viper532),
+            "replay" => Some(WorkloadKind::Replay),
             _ => None,
         }
     }
@@ -45,6 +55,7 @@ impl WorkloadKind {
             WorkloadKind::Membench => "membench",
             WorkloadKind::Viper216 => "viper216",
             WorkloadKind::Viper532 => "viper532",
+            WorkloadKind::Replay => "replay",
         }
     }
 }
@@ -75,6 +86,12 @@ pub enum WorkloadSpec {
         zipf_theta: f64,
         t_op_work: Tick,
     },
+    /// Trace replay: a captured or synthetic device stream driven
+    /// through the MLP window against the device under test.
+    Replay {
+        source: TraceSource,
+        mode: ReplayMode,
+    },
 }
 
 impl WorkloadSpec {
@@ -98,6 +115,7 @@ impl WorkloadSpec {
                     WorkloadKind::Viper216
                 }
             }
+            WorkloadSpec::Replay { .. } => WorkloadKind::Replay,
         }
     }
 
@@ -113,6 +131,9 @@ impl WorkloadSpec {
                 ops_per_phase,
                 ..
             } => format!("viper{record_bytes}/{ops_per_phase}ops"),
+            WorkloadSpec::Replay { source, mode } => {
+                format!("replay-{}/{}", mode.name(), source.label())
+            }
         }
     }
 
@@ -131,6 +152,10 @@ impl WorkloadSpec {
             },
             WorkloadKind::Viper216 => WorkloadSpec::from_viper(&Viper::new_216()),
             WorkloadKind::Viper532 => WorkloadSpec::from_viper(&Viper::new_532()),
+            WorkloadKind::Replay => WorkloadSpec::Replay {
+                source: TraceSource::Synthetic(SynthSpec::new(SynthKind::Zipfian)),
+                mode: ReplayMode::Open,
+            },
         }
     }
 

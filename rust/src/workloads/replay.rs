@@ -1,0 +1,269 @@
+//! Trace replay — the trace-driven simulation mode.
+//!
+//! The paper positions CXL-SSD-Sim's full-system mode against
+//! trace-based simulators (MQSim); this driver is our trace-based mode:
+//! it feeds a captured or synthetic device stream ([`crate::trace`])
+//! through the MLP outstanding-request window
+//! ([`crate::sim::OutstandingWindow`]) against any of the five device
+//! models, recording per-request completion latency for tail
+//! (p50/p95/p99/p99.9) telemetry.
+//!
+//! Requests are issued in **entry order**: every device model's state
+//! machine (ICL/FTL/GC, the expander page cache, replacement policies)
+//! transitions in call order, so a closed-loop replay of a captured
+//! stream reproduces the original device counters exactly — the
+//! capture→replay regression locked by `tests/replay_determinism.rs`.
+
+use crate::devices::MemoryDevice;
+use crate::sim::{OutstandingWindow, Tick};
+use crate::stats::{Histogram, HistogramBox};
+use crate::trace::Trace;
+
+/// Pacing discipline of the replay driver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayMode {
+    /// Requests arrive on the trace's own inter-arrival schedule; when
+    /// the device falls behind, later requests queue in the window and
+    /// their response time includes the queueing delay — the open-loop
+    /// tail-latency view.
+    Open,
+    /// Arrival ticks are ignored: the next request issues as soon as
+    /// the window grants a slot (throughput view; `mlp == 1`
+    /// serializes the stream request-by-request).
+    Closed,
+}
+
+impl ReplayMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplayMode::Open => "open",
+            ReplayMode::Closed => "closed",
+        }
+    }
+
+    /// The pacing selected by `cfg.replay_closed` (`replay.closed` key,
+    /// CLI `--closed`) — the single home of that mapping.
+    pub fn from_config(cfg: &crate::config::SimConfig) -> Self {
+        if cfg.replay_closed {
+            ReplayMode::Closed
+        } else {
+            ReplayMode::Open
+        }
+    }
+}
+
+/// Aggregate result of one replay run.
+#[derive(Debug, Clone)]
+pub struct ReplayResult {
+    pub mode: ReplayMode,
+    /// Outstanding-request window size the stream was driven with.
+    pub mlp: usize,
+    pub reads: u64,
+    pub writes: u64,
+    /// Completion tick of the last request (after the final drain).
+    pub sim_ticks: Tick,
+    /// Response latency per request: scheduled arrival → completion
+    /// (open loop includes queueing; closed loop equals service time).
+    pub latency: HistogramBox,
+    /// Ticks the issuer spent stalled on a full window.
+    pub stall_ticks: Tick,
+}
+
+impl ReplayResult {
+    pub fn ops(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+/// The replay driver: a trace, a pacing mode and a window size.
+pub struct Replay<'a> {
+    pub trace: &'a Trace,
+    pub mode: ReplayMode,
+    /// Outstanding-request window size (`cfg.mlp`; clamped to >= 1).
+    pub mlp: usize,
+}
+
+impl Replay<'_> {
+    /// Drive `device` with the trace; flushes the device at the end.
+    pub fn run(&self, device: &mut dyn MemoryDevice) -> ReplayResult {
+        let mut window = OutstandingWindow::new(self.mlp);
+        let mut latency = Histogram::new();
+        let (mut reads, mut writes) = (0u64, 0u64);
+        let mut now: Tick = 0;
+        for e in self.trace.entries() {
+            // Open loop: the request exists from its trace tick (a
+            // non-monotone capture clamps to the issue clock). Closed
+            // loop: it exists once the previous request issued.
+            let arrival = match self.mode {
+                ReplayMode::Open => now.max(e.tick),
+                ReplayMode::Closed => now,
+            };
+            let issue = window.admit(arrival);
+            let done = device.issue(issue, e.offset, e.is_write);
+            window.push(done);
+            // Open loop: response time from the scheduled arrival
+            // (arrival >= e.tick, so queueing is included). Closed loop:
+            // service time from the issue tick.
+            let scheduled = match self.mode {
+                ReplayMode::Open => e.tick,
+                ReplayMode::Closed => issue,
+            };
+            latency.record(done - scheduled);
+            if e.is_write {
+                writes += 1;
+            } else {
+                reads += 1;
+            }
+            now = issue;
+        }
+        let end = window.drain(now);
+        device.flush(end);
+        ReplayResult {
+            mode: self.mode,
+            mlp: window.cap(),
+            reads,
+            writes,
+            sim_ticks: end,
+            latency: HistogramBox(Box::new(latency)),
+            stall_ticks: window.stats().stall_ticks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::devices::{build_device, DeviceKind};
+    use crate::sim::US;
+    use crate::trace::{SynthKind, SynthSpec, TraceEntry};
+
+    fn sparse_trace(ops: u64, gap: Tick) -> Trace {
+        let spec = SynthSpec {
+            ops,
+            gap,
+            ..SynthSpec::new(SynthKind::Uniform)
+        };
+        spec.generate(9)
+    }
+
+    #[test]
+    fn open_loop_respects_the_arrival_schedule() {
+        let cfg = presets::small_test();
+        let trace = sparse_trace(200, 10 * US);
+        let mut dev = build_device(DeviceKind::Pmem, &cfg);
+        let r = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 1,
+        }
+        .run(dev.as_mut());
+        assert_eq!(r.ops(), 200);
+        // PMEM serves a 150ns read inside every 10µs gap: the run spans
+        // at least the trace's own schedule.
+        assert!(r.sim_ticks >= trace.last_tick());
+    }
+
+    #[test]
+    fn closed_loop_compresses_sparse_arrivals() {
+        let cfg = presets::small_test();
+        let trace = sparse_trace(200, 10 * US);
+        let mut dev = build_device(DeviceKind::Pmem, &cfg);
+        let r = Replay {
+            trace: &trace,
+            mode: ReplayMode::Closed,
+            mlp: 1,
+        }
+        .run(dev.as_mut());
+        // 200 back-to-back PMEM reads finish far faster than 200 x 10µs.
+        assert!(
+            r.sim_ticks * 4 < trace.last_tick(),
+            "closed loop must ignore gaps: {} vs {}",
+            r.sim_ticks,
+            trace.last_tick()
+        );
+    }
+
+    #[test]
+    fn wider_window_overlaps_closed_loop_requests() {
+        let cfg = presets::small_test();
+        let trace = sparse_trace(400, 0);
+        let run = |mlp: usize| {
+            let mut dev = build_device(DeviceKind::Pmem, &cfg);
+            Replay {
+                trace: &trace,
+                mode: ReplayMode::Closed,
+                mlp,
+            }
+            .run(dev.as_mut())
+            .sim_ticks
+        };
+        let t1 = run(1);
+        let t8 = run(8);
+        assert!(
+            t8 * 2 < t1,
+            "mlp=8 must overlap on the PMEM ports: {t8} vs {t1}"
+        );
+    }
+
+    #[test]
+    fn open_loop_latency_includes_queueing() {
+        // Arrivals every 1µs against ~50µs flash reads: the queue grows
+        // and response latency dwarfs service latency.
+        let cfg = presets::small_test();
+        let spec = SynthSpec {
+            ops: 50,
+            gap: US,
+            ..SynthSpec::new(SynthKind::Uniform)
+        };
+        let trace = spec.generate(2);
+        let mut dev = build_device(DeviceKind::CxlSsd, &cfg);
+        let r = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 1,
+        }
+        .run(dev.as_mut());
+        // The last requests waited behind ~49 predecessors.
+        assert!(
+            r.latency.p99_ns() > 500_000.0,
+            "p99 {} ns should show saturation",
+            r.latency.p99_ns()
+        );
+        assert!(r.latency.p50_ns() <= r.latency.p99_ns());
+    }
+
+    #[test]
+    fn read_write_counts_match_the_trace() {
+        let cfg = presets::small_test();
+        let trace = Trace::new(vec![
+            TraceEntry::new(0, 0, false),
+            TraceEntry::new(10, 64, true),
+            TraceEntry::new(20, 4096, true),
+        ]);
+        let mut dev = build_device(DeviceKind::CxlSsdCached, &cfg);
+        let r = Replay {
+            trace: &trace,
+            mode: ReplayMode::Closed,
+            mlp: 4,
+        }
+        .run(dev.as_mut());
+        assert_eq!((r.reads, r.writes), (1, 2));
+        assert_eq!(r.latency.count(), 3);
+    }
+
+    #[test]
+    fn empty_trace_is_a_no_op() {
+        let cfg = presets::small_test();
+        let trace = Trace::default();
+        let mut dev = build_device(DeviceKind::Dram, &cfg);
+        let r = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 1,
+        }
+        .run(dev.as_mut());
+        assert_eq!(r.ops(), 0);
+        assert_eq!(r.sim_ticks, 0);
+    }
+}

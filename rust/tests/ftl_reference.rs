@@ -1,0 +1,130 @@
+//! FTL differential property test: randomized write/trim/read streams
+//! (with GC churning underneath) against a naive shadow logical map.
+//!
+//! The shadow model is deliberately trivial — a set of "currently
+//! written" logical pages. Whatever garbage collection relocates, the
+//! host-visible contract must hold:
+//! - `is_mapped(lp)` agrees with the shadow after every stream;
+//! - no physical page backs two logical pages (no double-mapping);
+//! - `waf() >= 1.0` (GC can only add programs, never remove them).
+
+use std::collections::{HashMap, HashSet};
+
+use cxl_ssd_sim::ssd::{Ftl, NandConfig, SsdConfig};
+use cxl_ssd_sim::testing::{check, SplitMix64};
+
+/// Tiny geometry so GC triggers within a few hundred writes:
+/// 4 dies x 8 blocks x 16 pages, 1/4 over-provisioned.
+fn tiny_cfg() -> SsdConfig {
+    SsdConfig {
+        nand: NandConfig {
+            n_channels: 2,
+            dies_per_channel: 2,
+            pages_per_block: 16,
+            ..NandConfig::default()
+        },
+        capacity_bytes: 4 * 8 * 16 * 4096,
+        gc_threshold: 2,
+        op_fraction_inv: 4,
+        ..SsdConfig::default()
+    }
+}
+
+/// Assert the FTL agrees with the shadow set and is internally sound.
+fn assert_consistent(ftl: &Ftl, shadow: &HashSet<u64>) {
+    let mut phys_owner: HashMap<u64, u64> = HashMap::new();
+    for lp in 0..ftl.user_pages() {
+        assert_eq!(
+            ftl.is_mapped(lp),
+            shadow.contains(&lp),
+            "mapping disagrees with shadow at lp {lp}"
+        );
+        if let Some(phys) = ftl.phys_of(lp) {
+            if let Some(other) = phys_owner.insert(phys, lp) {
+                panic!("physical page {phys} double-mapped by lp {other} and lp {lp}");
+            }
+        }
+    }
+    assert!(
+        ftl.stats().waf() >= 1.0,
+        "WAF {} below 1.0",
+        ftl.stats().waf()
+    );
+}
+
+#[test]
+fn ftl_matches_naive_shadow_under_random_streams() {
+    check("ftl vs shadow map", 10, |rng| {
+        let cfg = tiny_cfg();
+        let mut ftl = Ftl::new(&cfg);
+        let user = ftl.user_pages();
+        let mut shadow: HashSet<u64> = HashSet::new();
+        let mut now = 0u64;
+        let ops = 2_000;
+        for step in 0..ops {
+            let lp = rng.below(user);
+            match rng.below(10) {
+                // Write-heavy mix so the tiny device GCs repeatedly.
+                0..=5 => {
+                    ftl.write(now, lp);
+                    shadow.insert(lp);
+                }
+                6..=7 => {
+                    // Reads never change the mapping (unwritten pages
+                    // time media but stay unmapped).
+                    ftl.read(now, lp);
+                }
+                _ => {
+                    ftl.trim(lp);
+                    shadow.remove(&lp);
+                }
+            }
+            now += 1_000_000;
+            if step % 500 == 499 {
+                assert_consistent(&ftl, &shadow);
+            }
+        }
+        assert_consistent(&ftl, &shadow);
+        assert!(
+            ftl.stats().gc_runs > 0,
+            "stream never exercised GC ({} writes)",
+            ftl.stats().host_programs
+        );
+        assert!(ftl.stats().trims > 0, "stream never exercised trim");
+    });
+}
+
+#[test]
+fn trim_heavy_stream_keeps_waf_low() {
+    // Trimming dead data before rewriting gives GC empty victims:
+    // WAF must stay far below the no-trim overwrite worst case, and the
+    // invariants must hold throughout.
+    let cfg = tiny_cfg();
+    let mut ftl = Ftl::new(&cfg);
+    let user = ftl.user_pages();
+    let mut rng = SplitMix64::new(0xF71);
+    let mut shadow: HashSet<u64> = HashSet::new();
+    let mut now = 0u64;
+    for _round in 0..6 {
+        // Drop the whole dataset, then reload most of it: GC victims
+        // during the reload are fully dead and relocate nothing.
+        for lp in 0..user {
+            ftl.trim(lp);
+            shadow.remove(&lp);
+        }
+        for lp in 0..user {
+            if rng.chance(0.9) {
+                ftl.write(now, lp);
+                shadow.insert(lp);
+            }
+            now += 1_000_000;
+        }
+    }
+    assert_consistent(&ftl, &shadow);
+    assert!(ftl.stats().gc_runs > 0);
+    assert!(
+        ftl.stats().waf() < 1.2,
+        "trim-ahead WAF {} unexpectedly high",
+        ftl.stats().waf()
+    );
+}

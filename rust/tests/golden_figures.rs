@@ -1,0 +1,71 @@
+//! Golden-figure regression: locks the Fig-4 membench latency table
+//! (all 5 devices) and the mlp=1 Fig-3 stream table (triad column) so a
+//! refactor cannot silently shift paper figures.
+//!
+//! Protocol: the golden file self-blesses on the first run (the repo is
+//! authored in a container without a Rust toolchain, so the numbers
+//! cannot be precomputed); every later run diffs against it. After an
+//! *intended* figure change, regenerate with `BLESS_GOLDEN=1 cargo test
+//! figures_match_golden` and commit the new file.
+
+use std::path::PathBuf;
+
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::coordinator::experiments::{self, ExpScale};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/figures_quick.golden")
+}
+
+/// Render the locked figures from the Table-I config at quick scale
+/// (deterministic: fixed seeds, integer tick arithmetic, serial sweep).
+fn current_figures() -> String {
+    let cfg = presets::table1();
+    assert_eq!(cfg.mlp, 1, "golden tables are the mlp=1 baseline");
+    let (fig4, _) = experiments::fig4_latency_cfg(&cfg, ExpScale::quick(), 1);
+    let (fig3, _) = experiments::fig3_bandwidth_cfg(&cfg, ExpScale::quick(), 1);
+    format!(
+        "# cxl-ssd-sim golden figures (quick scale, Table I, mlp=1)\n\
+         # regenerate intentionally with: BLESS_GOLDEN=1 cargo test figures_match_golden\n\
+         \n== Fig 4: membench random-read latency (ns) ==\n{}\
+         \n== Fig 3: stream bandwidth (MB/s), mlp=1 ==\n{}",
+        fig4.render(),
+        fig3.render()
+    )
+}
+
+#[test]
+fn figures_match_golden() {
+    let path = golden_path();
+    let current = current_figures();
+    let bless = std::env::var_os("BLESS_GOLDEN").is_some();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &current).unwrap();
+        eprintln!(
+            "{} golden figures at {}",
+            if bless { "re-blessed" } else { "blessed (first run)" },
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        current,
+        want,
+        "figure numbers drifted from {}.\nIf the change is intended, \
+         re-bless with BLESS_GOLDEN=1 and commit the updated file.",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_tables_cover_all_devices() {
+    // Independent of the blessing state: the rendered tables must list
+    // every device exactly once, in figure order.
+    let text = current_figures();
+    for name in ["dram", "cxl-dram", "pmem", "cxl-ssd", "cxl-ssd-cache"] {
+        assert!(text.contains(name), "missing {name} in golden tables");
+    }
+    assert_eq!(text.matches("| dram").count(), 2, "one dram row per table");
+}

@@ -1,0 +1,107 @@
+//! Trace text-format round trip: `parse(format(t)) == t` over
+//! randomized traces, plus explicit error paths for malformed lines —
+//! a bad line is a hard error with its line number, never a silent skip.
+
+use cxl_ssd_sim::testing::check;
+use cxl_ssd_sim::trace::{SynthKind, SynthSpec, Trace, TraceEntry};
+
+#[test]
+fn prop_format_parse_roundtrip() {
+    check("trace roundtrip", 40, |rng| {
+        let n = rng.below(300);
+        let mut tick = 0u64;
+        let entries: Vec<TraceEntry> = (0..n)
+            .map(|_| {
+                tick += rng.below(5_000_000);
+                TraceEntry::new(tick, rng.below(1 << 34), rng.chance(0.4))
+            })
+            .collect();
+        let t = Trace::new(entries);
+        let back = Trace::parse(&t.format()).expect("formatted trace must parse");
+        assert_eq!(back, t);
+    });
+}
+
+#[test]
+fn prop_synthetic_traces_roundtrip_through_files() {
+    check("synthetic trace file roundtrip", 8, |rng| {
+        let kind = *rng.choose(&SynthKind::ALL);
+        let spec = SynthSpec {
+            ops: rng.below(200) + 1,
+            ..SynthSpec::new(kind)
+        };
+        let t = spec.generate(rng.next_u64());
+        let path = format!(
+            "/tmp/cxl_ssd_sim_trace_rt_{}_{}.txt",
+            kind.name(),
+            std::process::id()
+        );
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back, t);
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+fn parse_err(text: &str) -> String {
+    format!("{:#}", Trace::parse(text).expect_err("must reject"))
+}
+
+#[test]
+fn bad_tick_is_rejected_with_line_number() {
+    let e = parse_err("0 0 R\nabc 64 R\n");
+    assert!(e.contains("line 2"), "{e}");
+    assert!(e.contains("tick"), "{e}");
+}
+
+#[test]
+fn negative_offset_is_rejected() {
+    let e = parse_err("10 -64 R\n");
+    assert!(e.contains("offset"), "{e}");
+    assert!(e.contains("-64"), "{e}");
+}
+
+#[test]
+fn missing_rw_is_rejected() {
+    let e = parse_err("10 64\n");
+    assert!(e.contains("missing R/W"), "{e}");
+}
+
+#[test]
+fn unknown_op_is_rejected() {
+    let e = parse_err("10 64 X\n");
+    assert!(e.contains("bad op"), "{e}");
+}
+
+#[test]
+fn trailing_fields_are_rejected_not_skipped() {
+    let e = parse_err("10 64 R 99\n");
+    assert!(e.contains("trailing"), "{e}");
+}
+
+#[test]
+fn missing_fields_are_rejected() {
+    let e = parse_err("10\n");
+    assert!(e.contains("missing offset"), "{e}");
+    let e = parse_err("\n \n#c\n7\n");
+    assert!(e.contains("line 4"), "{e}");
+}
+
+#[test]
+fn comments_and_blank_lines_are_ignored() {
+    let t = Trace::parse("# header\n\n  \n5 128 W\n# tail\n").unwrap();
+    assert_eq!(t.entries(), &[TraceEntry::new(5, 128, true)]);
+}
+
+#[test]
+fn empty_trace_roundtrips() {
+    let t = Trace::default();
+    assert_eq!(Trace::parse(&t.format()).unwrap(), t);
+    assert_eq!(t.last_tick(), 0);
+}
+
+#[test]
+fn load_of_missing_file_names_the_path() {
+    let e = format!("{:#}", Trace::load("/nonexistent/trace.txt").unwrap_err());
+    assert!(e.contains("/nonexistent/trace.txt"), "{e}");
+}
