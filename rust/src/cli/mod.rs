@@ -24,11 +24,11 @@ const USAGE: &str = "cxl-ssd-sim — full-system CXL-SSD memory simulator
 
 USAGE:
   cxl-ssd-sim info
-  cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache|all|d1,d2,..>
+  cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache|pool|all|d1,d2,..>
                     (--workload <stream|membench|viper216|viper532|replay>
                      | --trace <file>)
                     [--closed] [--mlp <N>] [--config <file>] [--set section.key=value ...]
-  cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mlp|replay|mshr|fastmode>
+  cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mlp|replay|pool|mshr|fastmode>
                     [--jobs <N|0=auto>] [--mlp <N>] [--quick] [--artifacts <dir>]
   cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
   cxl-ssd-sim trace gen    --kind <uniform|zipf|seq|mixed> --out <file>
@@ -56,6 +56,16 @@ inter-arrival gaps respected; queueing shows up in the tail); --closed
 (or replay.closed=true) issues as fast as the window allows. The
 'replay' experiment runs a zipfian + captured-trace campaign across
 all five devices.
+
+Memory pools: '--device pool' builds N member devices behind a CXL
+switch, composed via pool.* keys — pool.members ('4xcxl-dram' or
+'cxl-dram,cxl-ssd'), pool.interleave (line|page|concat),
+pool.stripe_bytes, pool.tiering, pool.epoch_ns, pool.promote_threshold
+(plus pool.max_promoted, pool.port_credits, pool.arb_ns). The 'pool'
+experiment runs the pooling campaign: stream bandwidth scaling over
+line-interleaved pools of 1/2/4 cxl-dram at mlp=16, then the zipfian
+open-loop replay on a tiered cxl-dram+cxl-ssd pool vs the flat pool
+and the monolithic (un)cached CXL-SSD, with promotion counters.
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positional words.
@@ -116,6 +126,15 @@ impl Args {
     }
 }
 
+/// Print a multi-section campaign report (`== heading ==` + table each).
+fn print_sections(sections: &[(String, crate::stats::Table)]) {
+    for (heading, table) in sections {
+        println!("== {heading} ==\n");
+        print!("{}", table.render());
+        println!();
+    }
+}
+
 fn build_config(args: &Args) -> Result<SimConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => SimConfig::from_file(path)?,
@@ -144,7 +163,7 @@ fn parse_device(args: &Args) -> Result<DeviceKind> {
 /// `--device` as a list: a single name, a comma-separated list, or `all`.
 fn parse_device_list(args: &Args) -> Result<Vec<DeviceKind>> {
     let name = args.get("device").context("--device required")?;
-    DeviceKind::parse_list(name).with_context(|| format!("unknown device '{name}'"))
+    DeviceKind::parse_list(name).map_err(|e| anyhow::anyhow!("--device {name}: {e}"))
 }
 
 /// `--jobs N` (0 = one worker per core); defaults to the config's
@@ -229,11 +248,7 @@ pub fn main(argv: &[String]) -> Result<i32> {
             let artifacts = args.get("artifacts").unwrap_or(DEFAULT_ARTIFACTS);
             if exp == "all" {
                 let report = experiments::all_figures_cfg(&cfg, scale, jobs);
-                for (heading, table) in &report.sections {
-                    println!("== {heading} ==\n");
-                    print!("{}", table.render());
-                    println!();
-                }
+                print_sections(&report.sections);
                 println!(
                     "{} jobs, {} worker(s): {:.2}s wall vs {:.2}s serial cost ({:.1}x)",
                     report.timing.jobs,
@@ -242,6 +257,17 @@ pub fn main(argv: &[String]) -> Result<i32> {
                     report.timing.job_host_seconds,
                     report.timing.speedup()
                 );
+                return Ok(0);
+            }
+            if exp == "pool" {
+                if args.get("mlp").is_some() {
+                    eprintln!(
+                        "note: --mlp is ignored by '--experiment pool' (the campaign \
+                         pins mlp=16 for every job)"
+                    );
+                }
+                let report = experiments::pool_campaign_cfg(&cfg, scale, jobs);
+                print_sections(&report.sections);
                 return Ok(0);
             }
             if jobs > 1 && matches!(exp, "mshr" | "fastmode") {

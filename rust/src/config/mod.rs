@@ -10,6 +10,7 @@ use crate::cache::PolicyKind;
 use crate::cxl::HomeAgentConfig;
 use crate::dram::DramConfig;
 use crate::pmem::PmemConfig;
+use crate::pool::{InterleaveMode, PoolConfig};
 use crate::sim::Tick;
 use crate::ssd::SsdConfig;
 
@@ -85,6 +86,9 @@ pub struct SimConfig {
     pub ssd: SsdConfig,
     pub dcache: DcacheConfig,
     pub cxl: HomeAgentConfig,
+    /// Memory-pool composition for the `pool` device (`pool.*` keys):
+    /// members behind the CXL switch, interleaving, tiering.
+    pub pool: PoolConfig,
     /// Host main memory size (Table I: 512MB).
     pub main_mem_bytes: u64,
     /// Extension device window size mapped behind the Home Agent.
@@ -163,6 +167,52 @@ impl SimConfig {
             ("dcache", "t_access") => self.dcache.t_access = v.as_u64()?,
             ("cxl", "t_proto") => self.cxl.t_proto = v.as_u64()?,
             ("cxl", "credits") => self.cxl.credits = v.as_u64()? as usize,
+            ("pool", "members") => {
+                self.pool.members =
+                    crate::pool::parse_members(&v.as_str()?).map_err(ConfigError::BadValue)?
+            }
+            ("pool", "interleave") => {
+                let s = v.as_str()?;
+                self.pool.interleave = InterleaveMode::parse(&s).ok_or_else(|| {
+                    ConfigError::BadValue(format!(
+                        "pool.interleave '{s}' (want line|page|concat)"
+                    ))
+                })?
+            }
+            ("pool", "stripe_bytes") => {
+                let b = v.as_u64()?;
+                if b != 0 && (b < 64 || !b.is_power_of_two()) {
+                    return Err(ConfigError::BadValue(format!(
+                        "pool.stripe_bytes {b} (want a power of two >= 64, or 0 for the \
+                         interleave mode's default)"
+                    )));
+                }
+                self.pool.stripe_bytes = b
+            }
+            ("pool", "tiering") => self.pool.tiering = v.as_bool()?,
+            ("pool", "epoch_ns") => {
+                let ns = v.as_u64()?;
+                if ns == 0 {
+                    return Err(ConfigError::BadValue(
+                        "pool.epoch_ns 0 (epoch must be nonzero)".into(),
+                    ));
+                }
+                self.pool.epoch_ns = ns
+            }
+            ("pool", "promote_threshold") => {
+                self.pool.promote_threshold = v.as_u64()?.clamp(1, u32::MAX as u64) as u32
+            }
+            ("pool", "max_promoted") => self.pool.max_promoted = v.as_u64()? as usize,
+            ("pool", "port_credits") => {
+                let c = v.as_u64()?;
+                if c == 0 {
+                    return Err(ConfigError::BadValue(
+                        "pool.port_credits 0 (need at least one credit per port)".into(),
+                    ));
+                }
+                self.pool.port_credits = c as usize
+            }
+            ("pool", "arb_ns") => self.pool.arb_ns = v.as_u64()?,
             ("sys", "main_mem_bytes") => self.main_mem_bytes = v.as_u64()?,
             ("sys", "device_bytes") => self.device_bytes = v.as_u64()?,
             ("sys", "seed") => self.seed = v.as_u64()?,
@@ -244,5 +294,75 @@ mod tests {
         let mut c = SimConfig::default();
         assert!(c.apply_override("bogus.key=1").is_err());
         assert!(c.apply_override("nonsense").is_err());
+    }
+
+    #[test]
+    fn pool_defaults_are_sane() {
+        let c = SimConfig::default();
+        assert_eq!(
+            c.pool.members,
+            vec![crate::devices::DeviceKind::CxlDram, crate::devices::DeviceKind::CxlSsd]
+        );
+        assert_eq!(c.pool.interleave, InterleaveMode::Page);
+        assert_eq!(c.pool.effective_stripe(), 4096, "page mode defaults to 4KB chunks");
+        assert!(!c.pool.tiering);
+        assert_eq!(c.pool.max_promoted, 0, "0 = unlimited fast-tier budget");
+    }
+
+    #[test]
+    fn pool_keys_roundtrip_through_the_file_parser() {
+        // The full path a config file takes: parse_str -> apply.
+        let text = r#"
+[pool]
+members = "2xcxl-dram, cxl-ssd"
+interleave = "line"
+stripe_bytes = 256
+tiering = true
+epoch_ns = 50_000
+promote_threshold = 2
+max_promoted = 128
+port_credits = 8
+arb_ns = 3
+"#;
+        let mut c = SimConfig::default();
+        for (s, k, v) in parse_str(text).unwrap() {
+            c.apply(&s, &k, &v).unwrap();
+        }
+        use crate::devices::DeviceKind::*;
+        assert_eq!(c.pool.members, vec![CxlDram, CxlDram, CxlSsd]);
+        assert_eq!(c.pool.interleave, InterleaveMode::Line);
+        assert_eq!(c.pool.stripe_bytes, 256);
+        assert_eq!(c.pool.effective_stripe(), 256, "explicit stripe overrides the mode default");
+        assert!(c.pool.tiering);
+        assert_eq!(c.pool.epoch_ns, 50_000);
+        assert_eq!(c.pool.promote_threshold, 2);
+        assert_eq!(c.pool.max_promoted, 128);
+        assert_eq!(c.pool.port_credits, 8);
+        assert_eq!(c.pool.arb_ns, 3);
+    }
+
+    #[test]
+    fn pool_malformed_values_hard_error() {
+        let mut c = SimConfig::default();
+        // Bad interleave mode names the offending value.
+        let e = c.apply_override("pool.interleave=diagonal").unwrap_err();
+        assert!(e.to_string().contains("diagonal"), "{e}");
+        // Non-power-of-two / sub-line stripes are rejected.
+        assert!(c.apply_override("pool.stripe_bytes=96").is_err());
+        assert!(c.apply_override("pool.stripe_bytes=32").is_err());
+        assert!(c.apply_override("pool.stripe_bytes=4096").is_ok());
+        // Member-list errors surface the bad token and position.
+        let e = c.apply_override("pool.members=\"cxl-dram,floppy\"").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("floppy") && msg.contains("position 2"), "{msg}");
+        assert!(c.apply_override("pool.members=\"pool\"").is_err(), "no nesting");
+        // Zero epoch is meaningless for decay; zero credits deadlock.
+        assert!(c.apply_override("pool.epoch_ns=0").is_err());
+        assert!(c.apply_override("pool.port_credits=0").is_err());
+        // A failed apply must not corrupt earlier state.
+        assert_eq!(c.pool.stripe_bytes, 4096);
+        // Threshold clamps to at least 1.
+        c.apply_override("pool.promote_threshold=0").unwrap();
+        assert_eq!(c.pool.promote_threshold, 1);
     }
 }

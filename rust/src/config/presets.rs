@@ -32,6 +32,7 @@ pub fn table1() -> SimConfig {
         ssd: SsdConfig::default(),
         dcache: DcacheConfig::default(),
         cxl: HomeAgentConfig::default(),
+        pool: crate::pool::PoolConfig::default(),
         main_mem_bytes: 512 << 20,
         device_bytes: 16 << 30,
         seed: 0xC11A_55D0,

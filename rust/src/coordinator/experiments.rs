@@ -21,6 +21,7 @@ use crate::coordinator::sweep::{self, SweepSpec, SweepTiming};
 use crate::coordinator::{fastmode_compare, run_with_trace, FastReport, RunOutput};
 use crate::cpu::Core;
 use crate::devices::DeviceKind;
+use crate::pool::{InterleaveMode, PoolConfig};
 use crate::sim::{to_us, NS};
 use crate::stats::Table;
 use crate::topology::System;
@@ -104,6 +105,25 @@ impl ExpScale {
             write_ratio: 0.3,
             zipf_theta: 0.9,
             gap: 200 * NS,
+            ..SynthSpec::new(SynthKind::Zipfian)
+        }
+    }
+
+    /// Pool-campaign tiering stream: a zipfian hotspot over a 2MB
+    /// footprint (512 pages — 4x the SSD's 512KB internal buffer, so
+    /// the ICL cannot hide the flash tier) with a light write mix,
+    /// arriving every ~400ns. Page-interleaved across cxl-dram+cxl-ssd,
+    /// half the pages home on flash: without tiering their reuse pays
+    /// ~50µs per touch and the open-loop queue explodes; with tiering
+    /// each hot flash page pays ~promote_threshold slow touches and
+    /// then lives on the DRAM member.
+    pub fn pool_replay_spec(&self) -> SynthSpec {
+        SynthSpec {
+            ops: if self.quick { 24_000 } else { 60_000 },
+            footprint: 2 << 20,
+            write_ratio: 0.1,
+            zipf_theta: 0.9,
+            gap: 400 * NS,
             ..SynthSpec::new(SynthKind::Zipfian)
         }
     }
@@ -423,6 +443,221 @@ pub fn replay_campaign_cfg(
         raw.push((job.device, src, r));
     }
     (table, raw)
+}
+
+/// Member counts the pool bandwidth-scaling sweep walks
+/// (`--experiment pool`).
+pub const POOL_SCALING: [usize; 3] = [1, 2, 4];
+
+/// The memory-pool campaign's report: bandwidth-scaling and tiering
+/// tables plus the raw numbers the shape tests assert on.
+pub struct PoolCampaignReport {
+    /// `(heading, rendered table)` sections in campaign order.
+    pub sections: Vec<(String, Table)>,
+    /// `(row label, member count, triad MB/s)` — member count 0 is the
+    /// bare (non-pooled) cxl-dram baseline.
+    pub bandwidth: Vec<(String, usize, f64)>,
+    /// `(row label, replay result, promotions)` for the tiering rows.
+    pub tiering: Vec<(String, ReplayResult, f64)>,
+}
+
+/// Pool campaign (serial, Table I): see [`pool_campaign_cfg`].
+pub fn pool_campaign(scale: ExpScale) -> PoolCampaignReport {
+    pool_campaign_cfg(&presets::table1(), scale, 1)
+}
+
+/// `--experiment pool`: the memory-pool campaign on the sweep engine.
+///
+/// Two parts, one job list:
+///
+/// 1. **Bandwidth scaling** — the Fig-3 stream workload at `mlp = 16`
+///    on a bare cxl-dram and on line-interleaved homogeneous pools of
+///    1/2/4 cxl-dram members. A single member is bank-occupancy-bound
+///    on sequential lines; the stripe spreads consecutive lines across
+///    members (each with its own Home Agent link + DRAM), so triad
+///    bandwidth scales until the host's outstanding-request window and
+///    the shared MemBus bind.
+/// 2. **Tiering** — the zipfian open-loop replay
+///    ([`ExpScale::pool_replay_spec`]) on a tiered page-interleaved
+///    cxl-dram+cxl-ssd pool, the same pool without tiering, and the
+///    monolithic cached/uncached CXL-SSD, reporting response
+///    percentiles (p50/p95/p99/p99.9) plus the pool's promotion and
+///    migration counters.
+///
+/// Every job's seed derives from its sweep coordinates (all stream
+/// jobs share one stream; all replay jobs share one trace), so serial
+/// and parallel runs are bit-identical like every other figure sweep.
+pub fn pool_campaign_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> PoolCampaignReport {
+    let mut jobs = Vec::new();
+
+    // Part 1: bandwidth scaling.
+    let mut bw_base = base.clone();
+    bw_base.mlp = 16;
+    jobs.extend(
+        SweepSpec::new(bw_base.clone())
+            .devices(vec![DeviceKind::CxlDram])
+            .workloads(vec![scale.stream_spec()])
+            .expand(),
+    );
+    for &n in &POOL_SCALING {
+        let mut cfg = bw_base.clone();
+        // The whole PoolConfig is pinned (not field-patched): a stray
+        // user `--set pool.*` override must not silently bend the
+        // campaign's labeled line-interleave shape.
+        cfg.pool = PoolConfig {
+            members: vec![DeviceKind::CxlDram; n],
+            interleave: InterleaveMode::Line,
+            ..PoolConfig::default()
+        };
+        jobs.extend(
+            SweepSpec::new(cfg)
+                .devices(vec![DeviceKind::Pooled])
+                .workloads(vec![scale.stream_spec()])
+                .expand(),
+        );
+    }
+    let n_bw = jobs.len();
+
+    // Part 2: tiering.
+    let mode = ReplayMode::from_config(base);
+    let replay_wl = WorkloadSpec::Replay {
+        source: TraceSource::Synthetic(scale.pool_replay_spec()),
+        mode,
+    };
+    let mut tiered = base.clone();
+    tiered.mlp = 16;
+    // Pinned like the bandwidth part: the tiering shape depends on page
+    // homing and these exact knobs.
+    tiered.pool = PoolConfig {
+        members: vec![DeviceKind::CxlDram, DeviceKind::CxlSsd],
+        interleave: InterleaveMode::Page,
+        tiering: true,
+        promote_threshold: 2,
+        epoch_ns: 1_000_000, // 1ms epochs: little decay mid-run
+        ..PoolConfig::default()
+    };
+    let mut flat = tiered.clone();
+    flat.pool.tiering = false;
+    let mut mono = base.clone();
+    mono.mlp = 16;
+    jobs.extend(
+        SweepSpec::new(tiered)
+            .devices(vec![DeviceKind::Pooled])
+            .workloads(vec![replay_wl.clone()])
+            .expand(),
+    );
+    jobs.extend(
+        SweepSpec::new(flat)
+            .devices(vec![DeviceKind::Pooled])
+            .workloads(vec![replay_wl.clone()])
+            .expand(),
+    );
+    jobs.extend(
+        SweepSpec::new(mono)
+            .devices(vec![DeviceKind::CxlSsdCached, DeviceKind::CxlSsd])
+            .workloads(vec![replay_wl])
+            .expand(),
+    );
+
+    let outs = sweep::execute(&jobs, n_workers);
+
+    // Part-1 table: the bare baseline row plus one row per POOL_SCALING
+    // entry, in job order (member count 0 = bare).
+    let mut bw_labels = vec!["cxl-dram (bare)".to_string()];
+    bw_labels.extend(POOL_SCALING.iter().map(|n| format!("pool x{n}")));
+    let mut bw_members = vec![0usize];
+    bw_members.extend(POOL_SCALING.iter().copied());
+    let mut bw_table = Table::new(&["config", "members", "triad MB/s", "vs bare"]);
+    let mut bandwidth = Vec::new();
+    let bare_triad = outs[0]
+        .stream
+        .as_ref()
+        .expect("stream output")
+        .last()
+        .expect("four kernels")
+        .mbs;
+    for (i, out) in outs[..n_bw].iter().enumerate() {
+        let triad = out
+            .stream
+            .as_ref()
+            .expect("stream output")
+            .last()
+            .expect("four kernels")
+            .mbs;
+        bw_table.row_owned(vec![
+            bw_labels[i].clone(),
+            if bw_members[i] == 0 {
+                "-".to_string()
+            } else {
+                bw_members[i].to_string()
+            },
+            format!("{triad:.1}"),
+            format!("{:.2}x", triad / bare_triad),
+        ]);
+        bandwidth.push((bw_labels[i].clone(), bw_members[i], triad));
+    }
+
+    // Part-2 table.
+    let tier_labels = ["pool tiered", "pool flat", "cxl-ssd-cache", "cxl-ssd"];
+    let mut tier_table = Table::new(&[
+        "config",
+        "ops",
+        "p50 ns",
+        "p95 ns",
+        "p99 ns",
+        "p99.9 ns",
+        "promotions",
+        "migrated KB",
+    ]);
+    let mut tiering = Vec::new();
+    for (i, out) in outs[n_bw..].iter().enumerate() {
+        let r = out.replay.as_ref().expect("replay output").clone();
+        let kv_of = |key: &str| -> f64 {
+            out.device_kv
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| *v)
+                .unwrap_or(0.0)
+        };
+        let promotions = kv_of("tier.promotions");
+        tier_table.row_owned(vec![
+            tier_labels[i].to_string(),
+            r.ops().to_string(),
+            format!("{:.1}", r.latency.p50_ns()),
+            format!("{:.1}", r.latency.p95_ns()),
+            format!("{:.1}", r.latency.p99_ns()),
+            format!("{:.1}", r.latency.p999_ns()),
+            format!("{promotions:.0}"),
+            format!("{:.0}", kv_of("tier.migrated_kb")),
+        ]);
+        tiering.push((tier_labels[i].to_string(), r, promotions));
+    }
+
+    let sections = vec![
+        (
+            "Pool bandwidth scaling: stream triad at mlp=16, \
+             line-interleaved cxl-dram pools"
+                .to_string(),
+            bw_table,
+        ),
+        (
+            format!(
+                "Pool tiering: zipfian {}-loop replay, page-interleaved \
+                 cxl-dram+cxl-ssd pool vs monolithic CXL-SSD",
+                mode.name()
+            ),
+            tier_table,
+        ),
+    ];
+    PoolCampaignReport {
+        sections,
+        bandwidth,
+        tiering,
+    }
 }
 
 /// Every figure of the paper as one combined parallel campaign.

@@ -23,6 +23,11 @@ pub enum DeviceKind {
     Pmem,
     CxlSsd,
     CxlSsdCached,
+    /// A memory pool: N member devices behind a CXL switch
+    /// ([`crate::pool::PooledDevice`]); composition comes from the
+    /// `pool.*` config keys, so it is not part of [`ALL`](Self::ALL)
+    /// (the paper's five fixed single-device configurations).
+    Pooled,
 }
 
 impl DeviceKind {
@@ -41,6 +46,7 @@ impl DeviceKind {
             "pmem" => Some(DeviceKind::Pmem),
             "cxl-ssd" | "cxlssd" => Some(DeviceKind::CxlSsd),
             "cxl-ssd-cache" | "cxl-ssd-cached" | "cxlssdcache" => Some(DeviceKind::CxlSsdCached),
+            "pool" | "pooled" => Some(DeviceKind::Pooled),
             _ => None,
         }
     }
@@ -52,19 +58,49 @@ impl DeviceKind {
             DeviceKind::Pmem => "pmem",
             DeviceKind::CxlSsd => "cxl-ssd",
             DeviceKind::CxlSsdCached => "cxl-ssd-cache",
+            DeviceKind::Pooled => "pool",
         }
     }
 
     /// Parse a comma-separated device list; `"all"` expands to every
-    /// device in figure order. Returns `None` on any unknown name.
-    pub fn parse_list(s: &str) -> Option<Vec<DeviceKind>> {
+    /// device in figure order. Unknown or duplicate entries error with
+    /// the offending token and its 1-based position.
+    pub fn parse_list(s: &str) -> Result<Vec<DeviceKind>, String> {
         if s.trim().eq_ignore_ascii_case("all") {
-            return Some(DeviceKind::ALL.to_vec());
+            return Ok(DeviceKind::ALL.to_vec());
         }
-        s.split(',')
-            .map(|part| DeviceKind::parse(part.trim()))
-            .collect()
+        let mut out = Vec::new();
+        for (pos, tok) in list_tokens(s, "device list")? {
+            let kind = DeviceKind::parse(tok)
+                .ok_or_else(|| format!("unknown device '{tok}' at position {pos} in '{s}'"))?;
+            if out.contains(&kind) {
+                return Err(format!(
+                    "duplicate device '{}' at position {pos} in '{s}'",
+                    kind.name()
+                ));
+            }
+            out.push(kind);
+        }
+        Ok(out)
     }
+}
+
+/// Split a comma-separated list into trimmed `(1-based position, token)`
+/// pairs, rejecting empty tokens with an error prefixed by `what`. The
+/// shared front half of every positioned list parser
+/// ([`DeviceKind::parse_list`], [`crate::pool::parse_members`]) — token
+/// semantics stay with the callers.
+pub fn list_tokens<'a>(s: &'a str, what: &str) -> Result<Vec<(usize, &'a str)>, String> {
+    let mut out = Vec::new();
+    for (idx, raw) in s.split(',').enumerate() {
+        let pos = idx + 1;
+        let tok = raw.trim();
+        if tok.is_empty() {
+            return Err(format!("{what}: empty token at position {pos} in '{s}'"));
+        }
+        out.push((pos, tok));
+    }
+    Ok(out)
 }
 
 /// A memory device mapped into the extension address window.
@@ -116,6 +152,11 @@ pub trait MemoryDevice {
 pub struct Instrumented {
     inner: Box<dyn MemoryDevice>,
     latency: Histogram,
+    /// Optional stats namespace: when set, every `stats_kv` key (the
+    /// inner device's and the wrapper's own `svc_*`) is prefixed
+    /// `"{label}."`, so per-member histograms of a pool stay
+    /// distinguishable in campaign output.
+    label: Option<String>,
 }
 
 impl Instrumented {
@@ -123,6 +164,17 @@ impl Instrumented {
         Instrumented {
             inner,
             latency: Histogram::new(),
+            label: None,
+        }
+    }
+
+    /// An instrumented device whose stats are namespaced under `label`
+    /// (e.g. a pool member's `m0.cxl-dram`).
+    pub fn labeled(inner: Box<dyn MemoryDevice>, label: impl Into<String>) -> Self {
+        Instrumented {
+            inner,
+            latency: Histogram::new(),
+            label: Some(label.into()),
         }
     }
 
@@ -152,6 +204,11 @@ impl MemoryDevice for Instrumented {
         kv.push(("svc_p50_ns".into(), self.latency.p50_ns()));
         kv.push(("svc_p99_ns".into(), self.latency.p99_ns()));
         kv.push(("svc_p999_ns".into(), self.latency.p999_ns()));
+        if let Some(label) = &self.label {
+            for (k, _) in kv.iter_mut() {
+                *k = format!("{label}.{k}");
+            }
+        }
         kv
     }
 }
@@ -164,6 +221,7 @@ pub fn build_device(kind: DeviceKind, cfg: &SimConfig) -> Box<dyn MemoryDevice> 
         DeviceKind::Pmem => Box::new(PmemDevice::new(cfg.pmem)),
         DeviceKind::CxlSsd => Box::new(CxlSsd::new(cfg.cxl, cfg.ssd)),
         DeviceKind::CxlSsdCached => Box::new(CxlSsdCached::new(cfg)),
+        DeviceKind::Pooled => Box::new(crate::pool::PooledDevice::new(cfg)),
     }
 }
 
@@ -462,6 +520,11 @@ mod tests {
         for k in DeviceKind::ALL {
             assert_eq!(DeviceKind::parse(k.name()), Some(k));
         }
+        // The pool is addressable by name but deliberately outside ALL
+        // (its composition comes from pool.* config, not Table I).
+        assert_eq!(DeviceKind::parse("pool"), Some(DeviceKind::Pooled));
+        assert_eq!(DeviceKind::parse(DeviceKind::Pooled.name()), Some(DeviceKind::Pooled));
+        assert!(!DeviceKind::ALL.contains(&DeviceKind::Pooled));
         assert_eq!(DeviceKind::parse("bogus"), None);
     }
 
@@ -469,13 +532,23 @@ mod tests {
     fn device_list_parsing() {
         assert_eq!(
             DeviceKind::parse_list("dram, pmem"),
-            Some(vec![DeviceKind::Dram, DeviceKind::Pmem])
+            Ok(vec![DeviceKind::Dram, DeviceKind::Pmem])
         );
+        assert_eq!(DeviceKind::parse_list("all"), Ok(DeviceKind::ALL.to_vec()));
         assert_eq!(
-            DeviceKind::parse_list("all"),
-            Some(DeviceKind::ALL.to_vec())
+            DeviceKind::parse_list("cxl-ssd-cache,pool"),
+            Ok(vec![DeviceKind::CxlSsdCached, DeviceKind::Pooled])
         );
-        assert_eq!(DeviceKind::parse_list("dram,floppy"), None);
+    }
+
+    #[test]
+    fn device_list_errors_name_token_and_position() {
+        let e = DeviceKind::parse_list("dram,floppy").unwrap_err();
+        assert!(e.contains("floppy") && e.contains("position 2"), "{e}");
+        let e = DeviceKind::parse_list("dram,pmem,dram").unwrap_err();
+        assert!(e.contains("duplicate") && e.contains("position 3"), "{e}");
+        let e = DeviceKind::parse_list("dram,,pmem").unwrap_err();
+        assert!(e.contains("empty") && e.contains("position 2"), "{e}");
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //! - **L3 (this crate)** — the simulator: discrete-event core ([`sim`]),
 //!   memory packets/bus ([`mem`]), CXL.mem protocol ([`cxl`]), device
 //!   timing models ([`dram`], [`pmem`], [`ssd`]), the expander DRAM cache
-//!   layer ([`cache`]), device compositions ([`devices`]), host CPU +
+//!   layer ([`cache`]), device compositions ([`devices`]), the memory-pool
+//!   subsystem — CXL switch fan-out, interleaved multi-device pools and
+//!   hot-page tiering ([`pool`]) — host CPU +
 //!   cache hierarchy ([`cpu`]), workloads ([`workloads`]), orchestration
 //!   plus the parallel sweep engine ([`coordinator`]) and the CLI
 //!   ([`cli`]).
@@ -30,6 +32,7 @@ pub mod dram;
 pub mod fasthash;
 pub mod mem;
 pub mod pmem;
+pub mod pool;
 pub mod runtime;
 pub mod sim;
 pub mod ssd;

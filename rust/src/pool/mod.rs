@@ -1,0 +1,891 @@
+//! Memory-pool subsystem: a CXL switch fanning out to N member devices
+//! behind one pooled address window.
+//!
+//! The paper frames CXL as the fabric for *memory expansion and
+//! disaggregation*, yet the base simulator models exactly one expander
+//! behind one Home Agent. This module adds the pooling scenario the
+//! ecosystem actually evaluates (CXL-ClusterSim, CXL-DMSim): a
+//! [`CxlSwitch`] with per-port credits and arbitration latency fans out
+//! to any mix of the five member [`DeviceKind`]s; a [`PooledDevice`]
+//! implements [`MemoryDevice`] on top, routing by configurable
+//! interleaving ([`InterleaveMode`]); and an optional tiering engine
+//! tracks per-page access heat ([`HeatTracker`]) and migrates hot pages
+//! from slow members (cxl-ssd) to fast ones (cxl-dram / host DRAM),
+//! issuing the migration traffic through the members' own
+//! [`issue`](MemoryDevice::issue) paths so it contends for the same
+//! link credits, banks, ports and flash channels as foreground requests.
+//!
+//! ## Address routing
+//!
+//! Stripe modes split the pool window into `stripe_bytes` chunks dealt
+//! round-robin across members (`line` defaults to 64B chunks, `page` to
+//! 4KB); `concat` gives each member one contiguous share. A promoted
+//! page overrides the stripe map: it lives wholly on its fast member in
+//! a dedicated region *above* the pool window (`device_bytes +
+//! pool_offset`), so promoted copies never collide with any striped
+//! member-local address. Promotion targets are therefore restricted to
+//! line-granular members (dram / cxl-dram / pmem), whose timing models
+//! accept unbounded addresses and keep no per-page state; when the
+//! fastest member is a flash kind the engine tracks heat but never
+//! migrates (a cached CXL-SSD is already its own cache).
+//!
+//! ## Determinism
+//!
+//! Pool state (switch credits, heat counters, the promoted-page map)
+//! advances only inside `issue()` calls, in call order, from simulated
+//! time; victim selection scans a `BTreeMap` in ascending page order.
+//! No wall clock, no randomness, no iteration-order-sensitive decisions
+//! — pooled sweep jobs stay bit-identical between serial and parallel
+//! execution like every other device.
+
+mod switch;
+mod tiering;
+
+pub use switch::{CxlSwitch, PortStats, SwitchConfig};
+pub use tiering::{HeatStats, HeatTracker, TieringParams};
+
+use std::collections::BTreeMap;
+
+use crate::config::SimConfig;
+use crate::devices::{build_device, DeviceKind, Instrumented, MemoryDevice};
+use crate::mem::{LINE_BYTES, PAGE_BYTES};
+use crate::sim::{to_ns, Tick, NS};
+
+/// How the pool window maps onto member devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InterleaveMode {
+    /// 64B-granular stripe (default chunk: one cache line) — consecutive
+    /// lines round-robin across members; maximizes bandwidth fan-out.
+    Line,
+    /// 4KB-granular stripe (default chunk: one page) — every page is
+    /// wholly homed on one member; the natural mode for tiering.
+    Page,
+    /// Capacity concatenation: each member serves one contiguous share.
+    Concat,
+}
+
+impl InterleaveMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "line" => Some(InterleaveMode::Line),
+            "page" => Some(InterleaveMode::Page),
+            "concat" | "cat" => Some(InterleaveMode::Concat),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InterleaveMode::Line => "line",
+            InterleaveMode::Page => "page",
+            InterleaveMode::Concat => "concat",
+        }
+    }
+}
+
+/// Pool configuration (`pool.*` config keys).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Member devices, in port order (`pool.members`, e.g.
+    /// `"4xcxl-dram"` or `"cxl-dram,cxl-ssd"`).
+    pub members: Vec<DeviceKind>,
+    /// Routing mode (`pool.interleave`: line | page | concat).
+    pub interleave: InterleaveMode,
+    /// Stripe chunk override in bytes; 0 uses the mode's default
+    /// (64 for line, 4096 for page). Must be a power of two >= 64
+    /// (`pool.stripe_bytes`).
+    pub stripe_bytes: u64,
+    /// Enable the hot-page tiering engine (`pool.tiering`).
+    pub tiering: bool,
+    /// Heat-decay epoch in nanoseconds (`pool.epoch_ns`).
+    pub epoch_ns: u64,
+    /// Heat at which a slow-homed page promotes (`pool.promote_threshold`).
+    pub promote_threshold: u32,
+    /// Max pages resident on the fast tier; 0 = unlimited
+    /// (`pool.max_promoted`).
+    pub max_promoted: usize,
+    /// Switch per-port credits (`pool.port_credits`).
+    pub port_credits: usize,
+    /// Switch arbitration latency per hop, ns (`pool.arb_ns`).
+    pub arb_ns: u64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            members: vec![DeviceKind::CxlDram, DeviceKind::CxlSsd],
+            interleave: InterleaveMode::Page,
+            stripe_bytes: 0,
+            tiering: false,
+            epoch_ns: 100_000, // 100 µs
+            promote_threshold: 4,
+            max_promoted: 0,
+            port_credits: 32,
+            arb_ns: 5,
+        }
+    }
+}
+
+impl PoolConfig {
+    /// Effective stripe chunk for the configured mode (0 for concat).
+    pub fn effective_stripe(&self) -> u64 {
+        match self.interleave {
+            InterleaveMode::Concat => 0,
+            InterleaveMode::Line if self.stripe_bytes == 0 => LINE_BYTES,
+            InterleaveMode::Page if self.stripe_bytes == 0 => PAGE_BYTES,
+            _ => self.stripe_bytes,
+        }
+    }
+
+    pub fn switch_config(&self) -> SwitchConfig {
+        SwitchConfig {
+            // Saturating: an absurd arb_ns must not wrap to a tiny one.
+            t_arb: self.arb_ns.saturating_mul(NS),
+            port_credits: self.port_credits.max(1),
+        }
+    }
+}
+
+/// Parse a `pool.members` list: comma-separated device names with an
+/// optional `<count>x` replication prefix (`"2xcxl-dram,cxl-ssd"`).
+/// Errors name the offending token and its 1-based position. A device
+/// kind may appear in only one token — replicate with `NxKIND` instead
+/// of repeating it, so accidental duplicates are caught.
+pub fn parse_members(s: &str) -> Result<Vec<DeviceKind>, String> {
+    let mut out = Vec::new();
+    let mut seen: Vec<DeviceKind> = Vec::new();
+    for (pos, tok) in crate::devices::list_tokens(s, "pool.members")? {
+        // Replication prefix: leading digits followed by 'x' ("4xpmem").
+        // The digit requirement keeps the 'x' inside "cxl-..." inert.
+        let (count, name) = match tok.char_indices().find(|(_, c)| !c.is_ascii_digit()) {
+            Some((i, 'x')) if i > 0 => {
+                let n: u64 = tok[..i].parse().map_err(|_| {
+                    format!("pool.members: bad count in '{tok}' at position {pos}")
+                })?;
+                (n, &tok[i + 1..])
+            }
+            _ => (1, tok),
+        };
+        if count == 0 || count > 64 {
+            return Err(format!(
+                "pool.members: replication count must be 1..=64 in '{tok}' at position {pos}"
+            ));
+        }
+        let kind = DeviceKind::parse(name).ok_or_else(|| {
+            format!("pool.members: unknown device '{name}' in token '{tok}' at position {pos}")
+        })?;
+        if kind == DeviceKind::Pooled {
+            return Err(format!(
+                "pool.members: pools cannot nest ('{tok}' at position {pos})"
+            ));
+        }
+        if seen.contains(&kind) {
+            return Err(format!(
+                "pool.members: duplicate member kind '{}' at position {pos} \
+                 (use NxKIND to replicate)",
+                kind.name()
+            ));
+        }
+        seen.push(kind);
+        for _ in 0..count {
+            out.push(kind);
+        }
+    }
+    if out.len() > 64 {
+        return Err(format!(
+            "pool.members: at most 64 members supported (got {})",
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Speed rank for tiering decisions: lower = faster tier. Promotion
+/// moves pages toward lower ranks.
+pub fn tier_rank(kind: DeviceKind) -> u8 {
+    match kind {
+        DeviceKind::Dram => 0,
+        DeviceKind::CxlDram => 1,
+        DeviceKind::Pmem => 2,
+        DeviceKind::CxlSsdCached => 3,
+        DeviceKind::CxlSsd => 4,
+        DeviceKind::Pooled => u8::MAX, // never a member (parse + new reject)
+    }
+}
+
+/// Members whose native access granularity is the 4KB flash page: a
+/// single line access already moves the whole page internally, so a
+/// page-migration burst collapses into one access.
+fn page_granular(kind: DeviceKind) -> bool {
+    matches!(kind, DeviceKind::CxlSsd | DeviceKind::CxlSsdCached)
+}
+
+/// Stripe/concat address decomposition (the non-promoted base map).
+#[derive(Debug, Clone, Copy)]
+struct Router {
+    n: u64,
+    mode: InterleaveMode,
+    /// Stripe chunk bytes (0 in concat mode).
+    stripe: u64,
+    /// Concat share per member (0 in stripe modes).
+    share: u64,
+}
+
+impl Router {
+    fn new(pool: &PoolConfig, device_bytes: u64) -> Self {
+        let n = pool.members.len() as u64;
+        let stripe = pool.effective_stripe();
+        let share = if pool.interleave == InterleaveMode::Concat {
+            ((device_bytes / n) & !(PAGE_BYTES - 1)).max(PAGE_BYTES)
+        } else {
+            0
+        };
+        Router {
+            n,
+            mode: pool.interleave,
+            stripe,
+            share,
+        }
+    }
+
+    /// Pool offset -> (member index, member-local offset).
+    fn route(&self, addr: u64) -> (usize, u64) {
+        match self.mode {
+            InterleaveMode::Concat => {
+                let c = (addr / self.share).min(self.n - 1);
+                (c as usize, addr - c * self.share)
+            }
+            _ => {
+                let chunk = addr / self.stripe;
+                let member = (chunk % self.n) as usize;
+                (member, (chunk / self.n) * self.stripe + addr % self.stripe)
+            }
+        }
+    }
+
+    /// Members that the lines of pool page `page` map onto (distinct,
+    /// deterministic order). Test-only view of the routing math the
+    /// allocation-free [`PooledDevice::home_worst_rank`] inlines.
+    #[cfg(test)]
+    fn page_members(&self, page: u64) -> Vec<usize> {
+        let base = page * PAGE_BYTES;
+        match self.mode {
+            InterleaveMode::Concat => vec![self.route(base).0],
+            _ if self.stripe >= PAGE_BYTES => vec![self.route(base).0],
+            _ => {
+                let chunks_per_page = PAGE_BYTES / self.stripe;
+                let first = (base / self.stripe) % self.n;
+                (0..chunks_per_page.min(self.n))
+                    .map(|j| ((first + j) % self.n) as usize)
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Pool-level lifetime counters.
+#[derive(Debug, Default, Clone)]
+pub struct PoolStats {
+    /// Pages migrated slow -> fast.
+    pub promotions: u64,
+    /// Pages evicted from the fast tier back to their home member.
+    pub demotions: u64,
+    /// Migration traffic in bytes (both directions).
+    pub migrated_bytes: u64,
+    /// Promotion candidates skipped because the fast tier was full and
+    /// not clearly hotter than the coldest resident.
+    pub skipped_full: u64,
+}
+
+/// N member devices behind a CXL switch, presented as one
+/// [`MemoryDevice`].
+pub struct PooledDevice {
+    children: Vec<Instrumented>,
+    kinds: Vec<DeviceKind>,
+    ranks: Vec<u8>,
+    switch: CxlSwitch,
+    router: Router,
+    /// Heat tracker (present iff tiering is enabled).
+    heat: Option<HeatTracker>,
+    /// Promoted pages: pool page -> fast member. BTreeMap so victim
+    /// scans are deterministic.
+    promoted: BTreeMap<u64, usize>,
+    /// Member-local base of the promoted-page region (one page slot per
+    /// pool page, disjoint from every striped member-local address).
+    promote_base: u64,
+    /// Cached coldest promoted page `(heat, page, member)` for the
+    /// full-tier fast path; invalidated on demotion, on a touch of the
+    /// cached page, and at epoch boundaries (`coldest_epoch` stamp).
+    coldest: Option<(u32, u64, usize)>,
+    coldest_epoch: u64,
+    max_promoted: usize,
+    /// Members on the fastest tier (promotion targets, spread by page).
+    fast_members: Vec<usize>,
+    fast_rank: u8,
+    /// Migration is possible at all: some member is slower than the
+    /// fast tier AND the fast tier is line-granular (see `tier_touch`).
+    /// Precomputed so impossible-migration pools skip the per-touch
+    /// routing work and keep only the heat statistics.
+    can_migrate: bool,
+    stats: PoolStats,
+}
+
+impl PooledDevice {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let pool = &cfg.pool;
+        assert!(!pool.members.is_empty(), "pool.members must be nonempty");
+        assert!(
+            pool.members.iter().all(|&k| k != DeviceKind::Pooled),
+            "pools cannot nest"
+        );
+        let kinds = pool.members.clone();
+        let children: Vec<Instrumented> = kinds
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| {
+                Instrumented::labeled(build_device(k, cfg), format!("m{i}.{}", k.name()))
+            })
+            .collect();
+        let ranks: Vec<u8> = kinds.iter().map(|&k| tier_rank(k)).collect();
+        let fast_rank = *ranks.iter().min().expect("nonempty members");
+        let fast_members: Vec<usize> = ranks
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| r == fast_rank)
+            .map(|(i, _)| i)
+            .collect();
+        let heat = pool.tiering.then(|| {
+            HeatTracker::new(TieringParams {
+                // Saturating: an absurd epoch_ns must not wrap to a tiny
+                // (or zero) epoch; saturation just means "never decay".
+                epoch: pool.epoch_ns.max(1).saturating_mul(NS),
+                promote_threshold: pool.promote_threshold.max(1),
+            })
+        });
+        let can_migrate = ranks.iter().any(|&r| r > fast_rank)
+            && !page_granular(kinds[fast_members[0]]);
+        PooledDevice {
+            switch: CxlSwitch::new(kinds.len(), pool.switch_config()),
+            router: Router::new(pool, cfg.device_bytes),
+            children,
+            ranks,
+            kinds,
+            can_migrate,
+            heat,
+            promoted: BTreeMap::new(),
+            promote_base: (cfg.device_bytes + PAGE_BYTES - 1) & !(PAGE_BYTES - 1),
+            coldest: None,
+            coldest_epoch: 0,
+            max_promoted: pool.max_promoted,
+            fast_members,
+            fast_rank,
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn n_members(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn pool_stats(&self) -> &PoolStats {
+        &self.stats
+    }
+
+    /// Pages currently resident on the fast tier.
+    pub fn promoted_pages(&self) -> usize {
+        self.promoted.len()
+    }
+
+    /// Per-member service-latency telemetry (the [`Instrumented`]
+    /// wrapper around member `i`).
+    pub fn member(&self, i: usize) -> &Instrumented {
+        &self.children[i]
+    }
+
+    /// Resolve a pool offset, honoring promoted-page overrides.
+    fn route_addr(&self, addr: u64) -> (usize, u64) {
+        if !self.promoted.is_empty() {
+            if let Some(&c) = self.promoted.get(&(addr / PAGE_BYTES)) {
+                // Promoted pages live in the dedicated region above the
+                // pool window on the fast member: no collision with any
+                // striped member-local address (see the module docs).
+                return (c, self.promote_base + addr);
+            }
+        }
+        self.router.route(addr)
+    }
+
+    /// Slowest tier any line of `page` currently maps to under the base
+    /// stripe map (promotion is worthwhile iff this exceeds the fast
+    /// tier's rank). Allocation-free: this runs on every touch of a hot
+    /// unpromoted page.
+    fn home_worst_rank(&self, page: u64) -> u8 {
+        let base = page * PAGE_BYTES;
+        let r = &self.router;
+        match r.mode {
+            InterleaveMode::Concat => self.ranks[r.route(base).0],
+            _ if r.stripe >= PAGE_BYTES => self.ranks[r.route(base).0],
+            _ => {
+                let chunks_per_page = PAGE_BYTES / r.stripe;
+                let first = (base / r.stripe) % r.n;
+                (0..chunks_per_page.min(r.n))
+                    .map(|j| self.ranks[((first + j) % r.n) as usize])
+                    .max()
+                    .expect("page maps to at least one chunk")
+            }
+        }
+    }
+
+    /// Heat bookkeeping + migration decisions, run after each serviced
+    /// request. `now` is the request's completion tick, so migrations
+    /// never reach back in time before the access that triggered them.
+    fn tier_touch(&mut self, now: Tick, addr: u64) {
+        let page = addr / PAGE_BYTES;
+        let (threshold, h) = match self.heat.as_mut() {
+            Some(t) => {
+                let h = t.touch(now, page);
+                (t.params().promote_threshold, h)
+            }
+            None => return,
+        };
+        if self.promoted.contains_key(&page) {
+            // Any touch of the cached coldest resident raises its heat
+            // (threshold or not): drop the cache so the next victim
+            // scan re-ranks it.
+            if matches!(self.coldest, Some((_, p, _)) if p == page) {
+                self.coldest = None;
+            }
+            return;
+        }
+        if h < threshold || !self.can_migrate {
+            // `can_migrate` is false for homogeneous pools and for pools
+            // whose fastest member is a flash kind: no dedicated promoted
+            // region exists on a page-stateful member (a cached SSD is
+            // already its own cache), so the engine tracks heat but never
+            // migrates — and skips the routing work below entirely.
+            return;
+        }
+        if self.home_worst_rank(page) <= self.fast_rank {
+            return; // already wholly on the fast tier
+        }
+        let target = self.fast_members[(page % self.fast_members.len() as u64) as usize];
+        if self.max_promoted > 0 && self.promoted.len() >= self.max_promoted {
+            let (vh, vp, vc) = self.coldest_victim();
+            if h < vh.saturating_mul(2) {
+                // Not clearly hotter than the coldest resident: keep it.
+                self.stats.skipped_full += 1;
+                return;
+            }
+            self.coldest = None;
+            self.demote(now, vp, vc);
+        }
+        self.promote(now, page, target);
+    }
+
+    /// Coldest promoted page `(heat, page, member)`, from the cache when
+    /// valid. Deterministic: ties break toward the lowest page index
+    /// (ascending BTreeMap scan with strict `<`). The cache stays valid
+    /// between epochs because resident heats only change by being
+    /// touched (which invalidates it) or by the epoch decay's uniform
+    /// right-shift (which preserves the ordering but stales the cached
+    /// heat value, hence the epoch stamp).
+    fn coldest_victim(&mut self) -> (u32, u64, usize) {
+        let tracker = self.heat.as_ref().expect("tiering enabled");
+        let epochs = tracker.stats().epochs;
+        if self.coldest.is_none() || self.coldest_epoch != epochs {
+            let mut victim: Option<(u32, u64, usize)> = None;
+            for (&p, &c) in &self.promoted {
+                let hp = tracker.heat(p);
+                let colder = match victim {
+                    None => true,
+                    Some((vh, _, _)) => hp < vh,
+                };
+                if colder {
+                    victim = Some((hp, p, c));
+                }
+            }
+            self.coldest = Some(victim.expect("fast tier is full, so nonempty"));
+            self.coldest_epoch = epochs;
+        }
+        self.coldest.expect("just computed")
+    }
+
+    /// Migrate `page` from its base (striped) location onto `target`'s
+    /// promoted region.
+    fn promote(&mut self, now: Tick, page: u64, target: usize) {
+        let base = page * PAGE_BYTES;
+        let src: Vec<(usize, u64)> = (0..PAGE_BYTES / LINE_BYTES)
+            .map(|i| self.router.route(base + i * LINE_BYTES))
+            .collect();
+        let dst: Vec<(usize, u64)> = (0..PAGE_BYTES / LINE_BYTES)
+            .map(|i| (target, self.promote_base + base + i * LINE_BYTES))
+            .collect();
+        self.copy_page(now, &src, &dst);
+        self.promoted.insert(page, target);
+        self.stats.promotions += 1;
+        self.stats.migrated_bytes += PAGE_BYTES;
+    }
+
+    /// Write a promoted page back to its home (striped) location.
+    fn demote(&mut self, now: Tick, page: u64, from: usize) {
+        self.promoted.remove(&page);
+        let base = page * PAGE_BYTES;
+        let src: Vec<(usize, u64)> = (0..PAGE_BYTES / LINE_BYTES)
+            .map(|i| (from, self.promote_base + base + i * LINE_BYTES))
+            .collect();
+        let dst: Vec<(usize, u64)> = (0..PAGE_BYTES / LINE_BYTES)
+            .map(|i| self.router.route(base + i * LINE_BYTES))
+            .collect();
+        self.copy_page(now, &src, &dst);
+        self.stats.demotions += 1;
+        self.stats.migrated_bytes += PAGE_BYTES;
+    }
+
+    /// DMA one 4KB page: reads along `src`, then writes along `dst`
+    /// once the last read datum is in the switch buffer. Every transfer
+    /// goes through the switch (credits + arbitration) and the members'
+    /// own `issue()` paths, so migration contends with foreground
+    /// traffic for real resources; the migration itself is asynchronous
+    /// (its latency is not charged to any request).
+    fn copy_page(&mut self, now: Tick, src: &[(usize, u64)], dst: &[(usize, u64)]) {
+        let reads = Self::collapse(src, &self.kinds);
+        let mut ready = now;
+        for (c, a) in reads {
+            let at = self.switch.forward(now, c);
+            let done = self.children[c].issue(at, a, false);
+            ready = ready.max(self.switch.respond(c, done));
+        }
+        let writes = Self::collapse(dst, &self.kinds);
+        for (c, a) in writes {
+            let at = self.switch.forward(ready, c);
+            let done = self.children[c].issue(at, a, true);
+            self.switch.respond(c, done);
+        }
+    }
+
+    /// Collapse a per-line route list: page-granular members (flash
+    /// kinds) move the whole 4KB on their first access, so only one
+    /// transfer per such member is issued; line-granular members get the
+    /// full burst.
+    fn collapse(routes: &[(usize, u64)], kinds: &[DeviceKind]) -> Vec<(usize, u64)> {
+        let mut seen = vec![false; kinds.len()];
+        let mut out = Vec::with_capacity(routes.len());
+        for &(c, a) in routes {
+            if page_granular(kinds[c]) {
+                if !seen[c] {
+                    seen[c] = true;
+                    out.push((c, a));
+                }
+            } else {
+                out.push((c, a));
+            }
+        }
+        out
+    }
+}
+
+impl MemoryDevice for PooledDevice {
+    fn kind(&self) -> DeviceKind {
+        DeviceKind::Pooled
+    }
+
+    fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
+        let (port, member_addr) = self.route_addr(addr);
+        let at = self.switch.forward(now, port);
+        let member_done = self.children[port].issue(at, member_addr, is_write);
+        let done = self.switch.respond(port, member_done);
+        if self.heat.is_some() {
+            self.tier_touch(done, addr);
+        }
+        done
+    }
+
+    fn flush(&mut self, now: Tick) {
+        for c in &mut self.children {
+            c.flush(now);
+        }
+    }
+
+    fn stats_kv(&self) -> Vec<(String, f64)> {
+        let mut kv = vec![("pool.members".to_string(), self.children.len() as f64)];
+        for i in 0..self.children.len() {
+            let s = self.switch.port_stats(i);
+            kv.push((format!("switch.p{i}.requests"), s.forwarded as f64));
+            kv.push((format!("switch.p{i}.stall_ns"), to_ns(s.credit_stall_ticks)));
+        }
+        if let Some(t) = &self.heat {
+            kv.push(("tier.promotions".into(), self.stats.promotions as f64));
+            kv.push(("tier.demotions".into(), self.stats.demotions as f64));
+            kv.push(("tier.migrated_kb".into(), self.stats.migrated_bytes as f64 / 1024.0));
+            kv.push(("tier.skipped_full".into(), self.stats.skipped_full as f64));
+            kv.push(("tier.resident".into(), self.promoted.len() as f64));
+            kv.push(("tier.tracked_pages".into(), t.tracked() as f64));
+            kv.push(("tier.epochs".into(), t.stats().epochs as f64));
+        }
+        for c in &self.children {
+            kv.extend(c.stats_kv());
+        }
+        kv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::sim::US;
+
+    fn pool_cfg(members: Vec<DeviceKind>, mode: InterleaveMode) -> SimConfig {
+        let mut cfg = presets::small_test();
+        cfg.pool.members = members;
+        cfg.pool.interleave = mode;
+        cfg
+    }
+
+    fn kv(dev: &PooledDevice) -> std::collections::HashMap<String, f64> {
+        dev.stats_kv().into_iter().collect()
+    }
+
+    #[test]
+    fn line_stripe_routing_round_robins() {
+        let cfg = pool_cfg(
+            vec![DeviceKind::Dram, DeviceKind::Dram, DeviceKind::Dram],
+            InterleaveMode::Line,
+        );
+        let dev = PooledDevice::new(&cfg);
+        assert_eq!(dev.router.route(0), (0, 0));
+        assert_eq!(dev.router.route(64), (1, 0));
+        assert_eq!(dev.router.route(128), (2, 0));
+        assert_eq!(dev.router.route(192), (0, 64));
+        assert_eq!(dev.router.route(200), (0, 72));
+    }
+
+    #[test]
+    fn page_stripe_homes_whole_pages() {
+        let cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::Pmem], InterleaveMode::Page);
+        let dev = PooledDevice::new(&cfg);
+        // All lines of page 0 on member 0; page 1 on member 1.
+        for i in 0..64 {
+            assert_eq!(dev.router.route(i * 64).0, 0);
+            assert_eq!(dev.router.route(4096 + i * 64).0, 1);
+        }
+        assert_eq!(dev.router.route(2 * 4096), (0, 4096));
+        assert_eq!(dev.router.page_members(0), vec![0]);
+        assert_eq!(dev.router.page_members(1), vec![1]);
+    }
+
+    #[test]
+    fn concat_splits_capacity_contiguously() {
+        let mut cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::Pmem], InterleaveMode::Concat);
+        cfg.device_bytes = 8 << 20;
+        let dev = PooledDevice::new(&cfg);
+        let share = 4 << 20;
+        assert_eq!(dev.router.route(0), (0, 0));
+        assert_eq!(dev.router.route(share - 64), (0, share - 64));
+        assert_eq!(dev.router.route(share), (1, 0));
+        // Addresses past the last share clamp to the last member.
+        assert_eq!(dev.router.route(2 * share + 64).0, 1);
+    }
+
+    #[test]
+    fn line_stripe_pages_span_members() {
+        let cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::CxlSsd], InterleaveMode::Line);
+        let dev = PooledDevice::new(&cfg);
+        assert_eq!(dev.router.page_members(0), vec![0, 1]);
+        assert_eq!(dev.home_worst_rank(0), tier_rank(DeviceKind::CxlSsd));
+    }
+
+    #[test]
+    fn member_parser_accepts_replication_and_mixes() {
+        assert_eq!(parse_members("4xcxl-dram"), Ok(vec![DeviceKind::CxlDram; 4]));
+        assert_eq!(
+            parse_members("2xcxl-dram, cxl-ssd"),
+            Ok(vec![DeviceKind::CxlDram, DeviceKind::CxlDram, DeviceKind::CxlSsd])
+        );
+        assert_eq!(parse_members("pmem"), Ok(vec![DeviceKind::Pmem]));
+    }
+
+    #[test]
+    fn member_parser_names_bad_token_and_position() {
+        let e = parse_members("cxl-dram,floppy").unwrap_err();
+        assert!(e.contains("floppy") && e.contains("position 2"), "{e}");
+        let e = parse_members("cxl-dram,cxl-dram").unwrap_err();
+        assert!(e.contains("duplicate") && e.contains("position 2"), "{e}");
+        let e = parse_members("0xpmem").unwrap_err();
+        assert!(e.contains("0xpmem") && e.contains("position 1"), "{e}");
+        let e = parse_members("pmem,,dram").unwrap_err();
+        assert!(e.contains("position 2"), "{e}");
+        let e = parse_members("pool").unwrap_err();
+        assert!(e.contains("nest"), "{e}");
+        assert!(parse_members("65xdram").is_err(), "member cap");
+    }
+
+    #[test]
+    fn pooled_issue_spreads_across_members() {
+        let cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::Dram], InterleaveMode::Line);
+        let mut dev = PooledDevice::new(&cfg);
+        let mut now = 0;
+        for i in 0..32u64 {
+            let done = dev.issue(now, i * 64, false);
+            assert!(done > now);
+            now = done + US;
+        }
+        let kv = kv(&dev);
+        assert_eq!(kv["switch.p0.requests"], 16.0);
+        assert_eq!(kv["switch.p1.requests"], 16.0);
+        // Labeled member stats surface distinguishably.
+        assert!(kv.contains_key("m0.dram.reads"));
+        assert!(kv.contains_key("m1.dram.reads"));
+        assert!(kv.contains_key("m0.dram.svc_p50_ns"));
+    }
+
+    #[test]
+    fn pool_pays_switch_arbitration_over_bare_member() {
+        let cfg = pool_cfg(vec![DeviceKind::Pmem], InterleaveMode::Page);
+        let mut pool = PooledDevice::new(&cfg);
+        let mut bare = build_device(DeviceKind::Pmem, &cfg);
+        let lp = pool.access(0, 0, false);
+        let lb = bare.access(0, 0, false);
+        assert_eq!(lp, lb + 2 * cfg.pool.arb_ns * NS);
+    }
+
+    #[test]
+    fn hot_ssd_page_promotes_and_gets_fast() {
+        let mut cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::CxlSsd], InterleaveMode::Page);
+        cfg.pool.tiering = true;
+        cfg.pool.promote_threshold = 3;
+        cfg.pool.epoch_ns = 1_000_000_000; // no decay within the test
+        let mut dev = PooledDevice::new(&cfg);
+        // Page 1 homes on the ssd member (page stripe, 2 members).
+        let addr = 4096;
+        let mut now = 0;
+        let mut lats = Vec::new();
+        for _ in 0..6 {
+            let l = dev.access(now, addr, false);
+            lats.push(l);
+            now += l + 500 * US; // drain between touches
+        }
+        assert_eq!(dev.pool_stats().promotions, 1);
+        assert_eq!(dev.promoted_pages(), 1);
+        // Before promotion: flash-class (tens of µs); after: dram-class.
+        assert!(lats[0] > 10 * US, "cold={}", lats[0]);
+        assert!(*lats.last().unwrap() < US, "promoted access still slow: {lats:?}");
+        let kv = kv(&dev);
+        assert!(kv["tier.promotions"] >= 1.0);
+        assert!(kv["tier.migrated_kb"] >= 4.0);
+    }
+
+    #[test]
+    fn fast_homed_pages_never_promote() {
+        let mut cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::CxlSsd], InterleaveMode::Page);
+        cfg.pool.tiering = true;
+        cfg.pool.promote_threshold = 2;
+        let mut dev = PooledDevice::new(&cfg);
+        // Page 0 homes on the dram member: heat accrues, no migration.
+        let mut now = 0;
+        for _ in 0..8 {
+            let l = dev.access(now, 0, false);
+            now += l + US;
+        }
+        assert_eq!(dev.pool_stats().promotions, 0);
+    }
+
+    #[test]
+    fn full_fast_tier_demotes_the_coldest_page() {
+        let mut cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::CxlSsd], InterleaveMode::Page);
+        cfg.pool.tiering = true;
+        cfg.pool.promote_threshold = 2;
+        cfg.pool.max_promoted = 1;
+        cfg.pool.epoch_ns = 1_000_000_000;
+        let mut dev = PooledDevice::new(&cfg);
+        let mut now = 0;
+        // Promote ssd-homed page 1 (2 touches).
+        for _ in 0..2 {
+            let l = dev.access(now, 4096, false);
+            now += l + 500 * US;
+        }
+        assert_eq!(dev.pool_stats().promotions, 1);
+        // Page 3 (also ssd-homed) gets >= 2x the victim's heat: the
+        // tier is full, so page 1 demotes and page 3 takes the slot.
+        for _ in 0..5 {
+            let l = dev.access(now, 3 * 4096, false);
+            now += l + 500 * US;
+        }
+        assert_eq!(dev.pool_stats().promotions, 2);
+        assert_eq!(dev.pool_stats().demotions, 1);
+        assert_eq!(dev.promoted_pages(), 1);
+    }
+
+    #[test]
+    fn flash_fast_tier_tracks_heat_but_never_migrates() {
+        // Fastest member is a flash kind: there is no stateless promoted
+        // region to migrate into, so promotion is disabled by design.
+        let mut cfg = pool_cfg(
+            vec![DeviceKind::CxlSsdCached, DeviceKind::CxlSsd],
+            InterleaveMode::Page,
+        );
+        cfg.pool.tiering = true;
+        cfg.pool.promote_threshold = 1;
+        let mut dev = PooledDevice::new(&cfg);
+        let mut now = 0;
+        for _ in 0..6 {
+            let l = dev.access(now, 4096, false); // ssd-homed page
+            now += l + 500 * US;
+        }
+        assert_eq!(dev.pool_stats().promotions, 0);
+        let kv = kv(&dev);
+        assert!(kv["tier.tracked_pages"] >= 1.0, "heat still tracked");
+    }
+
+    #[test]
+    fn promoted_pages_use_the_dedicated_region() {
+        // Promoted copies must land above the pool window on the fast
+        // member, never colliding with striped member-local addresses.
+        let mut cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::CxlSsd], InterleaveMode::Page);
+        cfg.pool.tiering = true;
+        cfg.pool.promote_threshold = 2;
+        let mut dev = PooledDevice::new(&cfg);
+        let mut now = 0;
+        for _ in 0..3 {
+            let l = dev.access(now, 4096, false);
+            now += l + 500 * US;
+        }
+        assert_eq!(dev.pool_stats().promotions, 1);
+        let (member, addr) = dev.route_addr(4096);
+        assert_eq!(member, 0);
+        assert_eq!(addr, cfg.device_bytes + 4096);
+    }
+
+    #[test]
+    fn homogeneous_pool_never_migrates() {
+        let mut cfg = pool_cfg(vec![DeviceKind::CxlDram; 4], InterleaveMode::Line);
+        cfg.pool.tiering = true;
+        cfg.pool.promote_threshold = 1;
+        let mut dev = PooledDevice::new(&cfg);
+        let mut now = 0;
+        for _ in 0..16 {
+            let l = dev.access(now, 64, false);
+            now += l + US;
+        }
+        // Every member is on the fastest tier: nothing to promote.
+        assert_eq!(dev.pool_stats().promotions, 0);
+    }
+
+    #[test]
+    fn flush_reaches_every_member() {
+        let cfg = pool_cfg(
+            vec![DeviceKind::CxlSsdCached, DeviceKind::CxlSsd],
+            InterleaveMode::Page,
+        );
+        let mut dev = PooledDevice::new(&cfg);
+        let mut now = 0;
+        for p in 0..4u64 {
+            let l = dev.access(now, p * 4096, true);
+            now += l + US;
+        }
+        dev.flush(now);
+        let kv = kv(&dev);
+        // The cached member's dirty pages were written back on flush.
+        assert!(kv["m0.cxl-ssd-cache.flash_programs"] >= 1.0);
+    }
+}

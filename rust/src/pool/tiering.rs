@@ -1,0 +1,193 @@
+//! Hot-page heat tracking for the memory-pool tiering engine.
+//!
+//! Access heat is a per-page counter, halved at every epoch boundary
+//! (`pool.epoch_ns`), so sustained reuse accumulates while stale history
+//! ages out geometrically — the classic epoch-decayed "exponential
+//! moving popularity" used by tiered-memory systems. The engine only
+//! tracks heat; the [`PooledDevice`](super::PooledDevice) decides what
+//! to migrate (it knows member speeds and the promoted-page budget) and
+//! issues the migration traffic.
+//!
+//! Determinism: state advances only inside `touch` calls, in call order,
+//! from simulated time — decay is a pure halving of every counter, so
+//! hash-map iteration order cannot influence any observable decision.
+
+use std::collections::HashMap;
+
+use crate::sim::Tick;
+
+/// Heat-tracking parameters (a slice of
+/// [`PoolConfig`](super::PoolConfig)).
+#[derive(Debug, Clone, Copy)]
+pub struct TieringParams {
+    /// Epoch length in ticks; every boundary halves all counters.
+    pub epoch: Tick,
+    /// Heat at which a page becomes a promotion candidate.
+    pub promote_threshold: u32,
+}
+
+/// Lifetime counters of the heat tracker.
+#[derive(Debug, Default, Clone)]
+pub struct HeatStats {
+    /// Epoch boundaries crossed (decay rounds applied).
+    pub epochs: u64,
+    /// Pages dropped after decaying to zero heat.
+    pub cooled_out: u64,
+}
+
+/// Epoch-decayed per-page access counters.
+#[derive(Debug)]
+pub struct HeatTracker {
+    params: TieringParams,
+    heat: HashMap<u64, u32>,
+    epoch_end: Tick,
+    stats: HeatStats,
+}
+
+impl HeatTracker {
+    pub fn new(params: TieringParams) -> Self {
+        assert!(params.epoch > 0, "tiering epoch must be nonzero");
+        HeatTracker {
+            epoch_end: params.epoch,
+            params,
+            heat: HashMap::new(),
+            stats: HeatStats::default(),
+        }
+    }
+
+    pub fn params(&self) -> TieringParams {
+        self.params
+    }
+
+    /// Record one access to `page` at `now`; returns the page's heat
+    /// after the touch (epoch decay applied first). Missed epochs are
+    /// applied in one pass (k halvings == one right-shift by k), so an
+    /// idle gap spanning billions of tiny epochs costs one table walk,
+    /// not one per epoch.
+    pub fn touch(&mut self, now: Tick, page: u64) -> u32 {
+        if now >= self.epoch_end {
+            let missed = (now - self.epoch_end) / self.params.epoch + 1;
+            self.decay_by(missed);
+            self.epoch_end += missed * self.params.epoch;
+        }
+        let h = self.heat.entry(page).or_insert(0);
+        *h = h.saturating_add(1);
+        *h
+    }
+
+    /// Current heat of `page` (0 if untracked).
+    pub fn heat(&self, page: u64) -> u32 {
+        self.heat.get(&page).copied().unwrap_or(0)
+    }
+
+    /// Is `page` at or above the promotion threshold right now?
+    pub fn is_hot(&self, page: u64) -> bool {
+        self.heat(page) >= self.params.promote_threshold
+    }
+
+    /// Pages with nonzero heat.
+    pub fn tracked(&self) -> usize {
+        self.heat.len()
+    }
+
+    pub fn stats(&self) -> &HeatStats {
+        &self.stats
+    }
+
+    /// Apply `rounds` halvings to every counter in one pass (a shift;
+    /// anything survives at most 31 rounds), dropping pages that cool
+    /// to zero. Pure per-entry arithmetic: iteration order is
+    /// unobservable.
+    fn decay_by(&mut self, rounds: u64) {
+        let shift = rounds.min(31) as u32;
+        let before = self.heat.len();
+        self.heat.retain(|_, h| {
+            *h >>= shift;
+            *h > 0
+        });
+        self.stats.cooled_out += (before - self.heat.len()) as u64;
+        self.stats.epochs += rounds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::US;
+
+    fn tracker(epoch: Tick, threshold: u32) -> HeatTracker {
+        HeatTracker::new(TieringParams {
+            epoch,
+            promote_threshold: threshold,
+        })
+    }
+
+    #[test]
+    fn heat_accumulates_within_an_epoch() {
+        let mut t = tracker(100 * US, 4);
+        for i in 0..4 {
+            t.touch(i, 7);
+        }
+        assert_eq!(t.heat(7), 4);
+        assert!(t.is_hot(7));
+        assert!(!t.is_hot(8));
+        assert_eq!(t.tracked(), 1);
+    }
+
+    #[test]
+    fn epoch_boundary_halves_heat() {
+        let mut t = tracker(100 * US, 4);
+        for i in 0..8 {
+            t.touch(i, 1);
+        }
+        assert_eq!(t.heat(1), 8);
+        // Crossing one epoch halves; the touch then adds one.
+        assert_eq!(t.touch(100 * US, 1), 5);
+        assert_eq!(t.stats().epochs, 1);
+    }
+
+    #[test]
+    fn long_idle_gap_applies_every_missed_epoch() {
+        let mut t = tracker(100 * US, 4);
+        for i in 0..32 {
+            t.touch(i, 1);
+        }
+        // Four epochs pass: 32 -> 16 -> 8 -> 4 -> 2, then +1.
+        assert_eq!(t.touch(400 * US, 1), 3);
+        assert_eq!(t.stats().epochs, 4);
+    }
+
+    #[test]
+    fn cold_pages_cool_out_of_the_table() {
+        let mut t = tracker(100 * US, 4);
+        t.touch(0, 1);
+        t.touch(0, 2);
+        // One epoch: heat 1 -> 0, both dropped.
+        t.touch(100 * US, 3);
+        assert_eq!(t.tracked(), 1);
+        assert_eq!(t.heat(1), 0);
+        assert_eq!(t.stats().cooled_out, 2);
+    }
+
+    #[test]
+    fn pathological_epoch_gap_is_constant_time() {
+        // 1ns epochs with a 1s idle gap span 1e9 epoch boundaries; they
+        // must be applied as one batched decay, not a 1e9-iteration loop.
+        let mut t = tracker(1_000, 4);
+        t.touch(0, 1);
+        assert_eq!(t.touch(crate::sim::SEC, 1), 1, "heat fully cooled, then +1");
+        assert_eq!(t.stats().epochs, 1_000_000_000);
+    }
+
+    #[test]
+    fn non_monotone_touch_ticks_are_tolerated() {
+        // Posted writes can hand completions over at future ticks while
+        // later loads issue earlier; decay must not run backwards.
+        let mut t = tracker(100 * US, 4);
+        t.touch(150 * US, 1); // crosses one epoch
+        assert_eq!(t.stats().epochs, 1);
+        t.touch(50 * US, 1); // earlier tick: no extra epoch
+        assert_eq!(t.stats().epochs, 1);
+        assert_eq!(t.heat(1), 2);
+    }
+}

@@ -43,6 +43,9 @@ pub fn artifact_name(kind: DeviceKind) -> &'static str {
         DeviceKind::Pmem => "pmem",
         DeviceKind::CxlSsd => "ssd",
         DeviceKind::CxlSsdCached => "cached_ssd",
+        // No surrogate is lowered for pools (composition is config-time);
+        // Surrogate::load rejects the kind before touching artifacts.
+        DeviceKind::Pooled => "pool",
     }
 }
 
@@ -98,6 +101,12 @@ pub struct Surrogate {
 impl Surrogate {
     /// Load the artifact for `kind` from `dir`, verifying the manifest.
     pub fn load(kind: DeviceKind, dir: &str, cfg: &SimConfig) -> Result<Self> {
+        if kind == DeviceKind::Pooled {
+            anyhow::bail!(
+                "fast mode does not support the pooled device (its composition is \
+                 config-defined; run the members individually)"
+            );
+        }
         let manifest = load_manifest(dir)?;
         check_manifest(&manifest, cfg)?;
         let batch: usize = manifest
@@ -151,6 +160,7 @@ impl Surrogate {
                 let nd = nc * cfg.ssd.nand.dies_per_channel;
                 vec![i32v(ns, -1), i32v(ns, 0), f64v(nc), f64v(nd), f64v(1)]
             }
+            DeviceKind::Pooled => unreachable!("load() rejects the pooled device"),
         }
     }
 

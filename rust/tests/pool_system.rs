@@ -1,0 +1,205 @@
+//! End-to-end memory-pool smoke + the pool campaign's acceptance
+//! shapes, at quick scale (the CI test-job pool smoke).
+//!
+//! Covers the two pool archetypes the subsystem exists for:
+//! - an interleaved homogeneous pool (bandwidth fan-out), driven through
+//!   the full System/Core path;
+//! - a tiered heterogeneous pool (hot-page migration), driven by the
+//!   open-loop replay engine against the same zipfian stream as the
+//!   monolithic devices it is compared to.
+
+use std::collections::HashMap;
+
+use cxl_ssd_sim::config::{presets, SimConfig};
+use cxl_ssd_sim::coordinator::experiments::ExpScale;
+use cxl_ssd_sim::coordinator::sweep::run_spec;
+use cxl_ssd_sim::devices::{build_device, DeviceKind, Instrumented};
+use cxl_ssd_sim::pool::InterleaveMode;
+use cxl_ssd_sim::trace::Trace;
+use cxl_ssd_sim::workloads::{MembenchMode, Replay, ReplayMode, ReplayResult, WorkloadSpec};
+
+fn kv_map(kv: &[(String, f64)]) -> HashMap<String, f64> {
+    kv.iter().cloned().collect()
+}
+
+fn pool_of(members: Vec<DeviceKind>, mode: InterleaveMode, base: &SimConfig) -> SimConfig {
+    let mut cfg = base.clone();
+    cfg.pool.members = members;
+    cfg.pool.interleave = mode;
+    cfg.pool.tiering = false;
+    cfg
+}
+
+/// Table-I config with the tiered cxl-dram+cxl-ssd pool the campaign
+/// evaluates (page-interleaved, promote after 2 touches, 1ms epochs).
+fn tiered_pool_cfg(base: &SimConfig) -> SimConfig {
+    let mut cfg = pool_of(
+        vec![DeviceKind::CxlDram, DeviceKind::CxlSsd],
+        InterleaveMode::Page,
+        base,
+    );
+    cfg.pool.tiering = true;
+    cfg.pool.promote_threshold = 2;
+    cfg.pool.epoch_ns = 1_000_000;
+    cfg
+}
+
+/// Stream-triad bandwidth of `device` under `cfg` at quick scale.
+fn triad_mbs(device: DeviceKind, cfg: &SimConfig) -> f64 {
+    let (out, _) = run_spec(device, &ExpScale::quick().stream_spec(), cfg, false);
+    out.stream.expect("stream output").last().expect("triad").mbs
+}
+
+/// Open-loop replay of `trace` against `device`, returning the result
+/// plus the device's stats (promotion counters for pools).
+fn replay_open(
+    trace: &Trace,
+    device: DeviceKind,
+    cfg: &SimConfig,
+) -> (ReplayResult, HashMap<String, f64>) {
+    let mut dev = Instrumented::new(build_device(device, cfg));
+    let r = Replay {
+        trace,
+        mode: ReplayMode::Open,
+        mlp: cfg.mlp,
+    }
+    .run(&mut dev);
+    let kv = kv_map(&dev.stats_kv());
+    (r, kv)
+}
+
+#[test]
+fn two_member_interleaved_pool_runs_end_to_end() {
+    // Full host path (L1/L2 -> MemBus -> pool) over a 2-member pool.
+    let cfg = pool_of(
+        vec![DeviceKind::CxlDram, DeviceKind::CxlDram],
+        InterleaveMode::Line,
+        &presets::table1(),
+    );
+    let spec = WorkloadSpec::Membench {
+        mode: MembenchMode::RandomRead,
+        footprint: 4 << 20,
+        ops: 2_000,
+        warmup: true,
+    };
+    let (out, _) = run_spec(DeviceKind::Pooled, &spec, &cfg, false);
+    assert!(out.sim_ticks > 0);
+    assert!(out.system.device_reads > 0);
+    let kv = kv_map(&out.device_kv);
+    // Both switch ports carried traffic and both members report
+    // label-prefixed stats.
+    assert_eq!(kv["pool.members"], 2.0);
+    assert!(kv["switch.p0.requests"] > 0.0);
+    assert!(kv["switch.p1.requests"] > 0.0);
+    assert!(kv.contains_key("m0.cxl-dram.row_hit_rate"));
+    assert!(kv.contains_key("m1.cxl-dram.svc_p50_ns"));
+    // The line stripe splits the random stream roughly evenly.
+    let (p0, p1) = (kv["switch.p0.requests"], kv["switch.p1.requests"]);
+    assert!((p0 - p1).abs() / (p0 + p1) < 0.2, "p0={p0} p1={p1}");
+}
+
+#[test]
+fn concat_pool_routes_by_capacity_share() {
+    // Concat mode: a membench footprint smaller than member 0's share
+    // never touches member 1.
+    let mut cfg = pool_of(
+        vec![DeviceKind::Dram, DeviceKind::Pmem],
+        InterleaveMode::Concat,
+        &presets::table1(),
+    );
+    cfg.device_bytes = 1 << 30;
+    let spec = WorkloadSpec::Membench {
+        mode: MembenchMode::RandomRead,
+        footprint: 1 << 20, // far below the 512MB share
+        ops: 500,
+        warmup: false,
+    };
+    let (out, _) = run_spec(DeviceKind::Pooled, &spec, &cfg, false);
+    let kv = kv_map(&out.device_kv);
+    assert!(kv["switch.p0.requests"] > 0.0);
+    assert_eq!(kv["switch.p1.requests"], 0.0);
+}
+
+/// Acceptance shape: a line-interleaved pool of 4 cxl-dram members
+/// sustains at least twice the stream triad bandwidth of a single bare
+/// cxl-dram at mlp=16. A single member is DRAM-bank-occupancy-bound on
+/// sequential lines; the stripe spreads consecutive lines over four
+/// members, each with its own Home Agent link and banks.
+#[test]
+fn interleaved_pool_of_4_doubles_stream_bandwidth_at_mlp16() {
+    let mut base = presets::table1();
+    base.mlp = 16;
+    let bare = triad_mbs(DeviceKind::CxlDram, &base);
+    let pool4_cfg = pool_of(vec![DeviceKind::CxlDram; 4], InterleaveMode::Line, &base);
+    let pool2_cfg = pool_of(vec![DeviceKind::CxlDram; 2], InterleaveMode::Line, &base);
+    let pool4 = triad_mbs(DeviceKind::Pooled, &pool4_cfg);
+    let pool2 = triad_mbs(DeviceKind::Pooled, &pool2_cfg);
+    assert!(
+        pool4 >= 2.0 * bare,
+        "pool x4 must at least double the bare member: {pool4:.1} vs {bare:.1} MB/s"
+    );
+    assert!(
+        pool2 > bare,
+        "pool x2 must beat the bare member: {pool2:.1} vs {bare:.1} MB/s"
+    );
+    assert!(
+        pool4 > pool2,
+        "scaling must be monotone in members: {pool4:.1} vs {pool2:.1} MB/s"
+    );
+}
+
+/// Acceptance shape: on the zipfian open-loop replay, the tiered
+/// cxl-dram+cxl-ssd pool's p99 response latency is at least an order of
+/// magnitude below the uncached CXL-SSD's, with nonzero promotions.
+#[test]
+fn tiered_pool_p99_beats_uncached_ssd_by_an_order_of_magnitude() {
+    let trace = ExpScale::quick().pool_replay_spec().generate(0xC11A_55D0);
+    let mut base = presets::table1();
+    base.mlp = 16;
+    let tiered_cfg = tiered_pool_cfg(&base);
+
+    let (tiered, tkv) = replay_open(&trace, DeviceKind::Pooled, &tiered_cfg);
+    let (raw, _) = replay_open(&trace, DeviceKind::CxlSsd, &base);
+
+    assert!(
+        tkv["tier.promotions"] > 0.0,
+        "tiering must actually migrate pages"
+    );
+    assert!(tkv["tier.migrated_kb"] >= 4.0 * tkv["tier.promotions"]);
+    let (p99_tiered, p99_raw) = (tiered.latency.p99_ns(), raw.latency.p99_ns());
+    assert!(
+        10.0 * p99_tiered <= p99_raw,
+        "tiered pool p99 {p99_tiered:.0} ns must be >= 10x below uncached {p99_raw:.0} ns"
+    );
+    // Ordinary sanity: both replayed the whole stream.
+    assert_eq!(tiered.ops(), raw.ops());
+}
+
+#[test]
+fn tiering_reduces_p99_versus_the_flat_pool() {
+    // The ablation inside the pool: same members, same stream, tiering
+    // on vs off.
+    let trace = ExpScale::quick().pool_replay_spec().generate(7);
+    let mut base = presets::table1();
+    base.mlp = 16;
+    let tiered_cfg = tiered_pool_cfg(&base);
+    let mut flat_cfg = tiered_cfg.clone();
+    flat_cfg.pool.tiering = false;
+    let (tiered, _) = replay_open(&trace, DeviceKind::Pooled, &tiered_cfg);
+    let (flat, _) = replay_open(&trace, DeviceKind::Pooled, &flat_cfg);
+    let (t99, f99) = (tiered.latency.p99_ns(), flat.latency.p99_ns());
+    assert!(
+        t99 < f99,
+        "tiering must improve the flat pool's tail: {t99:.0} vs {f99:.0} ns"
+    );
+}
+
+#[test]
+fn cli_pool_sweep_smoke() {
+    // The CI smoke: the whole campaign through the CLI entry point.
+    let argv: Vec<String> = "sweep --experiment pool --quick --jobs 2"
+        .split_whitespace()
+        .map(String::from)
+        .collect();
+    assert_eq!(cxl_ssd_sim::cli::main(&argv).unwrap(), 0);
+}

@@ -153,6 +153,60 @@ fn prop_device_latencies_monotone_nonnegative() {
 }
 
 #[test]
+fn prop_histogram_percentiles_monotone_and_merge_conserves() {
+    // Over randomized streams — including the >= 2^48 ns saturation path
+    // (values that would wrap sub-buckets without the terminal-bucket
+    // clamp) — percentiles stay monotone and record/merge conserve
+    // counts, sums and extrema exactly.
+    use cxl_ssd_sim::sim::NS;
+    let sample = |rng: &mut SplitMix64| -> u64 {
+        if rng.chance(0.05) {
+            // Saturation regime: >= 2^48 ns, spread across exponents
+            // that used to alias into low sub-buckets.
+            (1u64 << 48).saturating_mul(NS).saturating_add(rng.next_u64() >> 8)
+        } else {
+            rng.below(1u64 << 45)
+        }
+    };
+    check("histogram monotone + merge", 50, |rng| {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let (na, nb) = (rng.range(1, 300), rng.range(0, 300));
+        let mut sum: u128 = 0;
+        let mut max = 0u64;
+        for _ in 0..na {
+            let v = sample(rng);
+            sum += v as u128;
+            max = max.max(v);
+            a.record(v);
+        }
+        for _ in 0..nb {
+            let v = sample(rng);
+            sum += v as u128;
+            max = max.max(v);
+            b.record(v);
+        }
+        for h in [&a, &b] {
+            assert!(h.p50_ns() <= h.p95_ns());
+            assert!(h.p95_ns() <= h.p99_ns());
+            assert!(h.p99_ns() <= h.p999_ns());
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), na + nb, "count conservation");
+        assert_eq!(merged.max(), max, "max conservation");
+        assert_eq!(merged.min(), a.min().min(if nb > 0 { b.min() } else { u64::MAX }));
+        let total = merged.count() as f64;
+        assert!((merged.mean() - sum as f64 / total).abs() <= 1e-3 * merged.mean().max(1.0));
+        assert!(merged.p50_ns() <= merged.p999_ns());
+        // Merged percentiles are bracketed by the parts' extremes.
+        let lo = a.p50_ns().min(if nb > 0 { b.p50_ns() } else { f64::MAX });
+        let hi = a.p50_ns().max(b.p50_ns());
+        assert!(merged.p50_ns() >= lo && merged.p50_ns() <= hi.max(lo));
+    });
+}
+
+#[test]
 fn prop_histogram_mean_within_min_max() {
     check("histogram bounds", 100, |rng| {
         let mut h = Histogram::new();

@@ -79,6 +79,35 @@ fn policy_sweep_serial_and_parallel_identical() {
 }
 
 #[test]
+fn pool_campaign_serial_and_parallel_identical() {
+    // The pool campaign mixes pooled and monolithic devices, stream and
+    // replay workloads, and tiering migrations — all of it must stay
+    // bit-identical across worker counts like every other figure sweep.
+    let cfg = presets::table1();
+    let a = experiments::pool_campaign_cfg(&cfg, ExpScale::quick(), 1);
+    let b = experiments::pool_campaign_cfg(&cfg, ExpScale::quick(), PAR);
+    assert_eq!(a.sections.len(), b.sections.len());
+    for ((ha, ta), (hb, tb)) in a.sections.iter().zip(b.sections.iter()) {
+        assert_eq!(ha, hb);
+        assert_eq!(ta.render(), tb.render());
+    }
+    assert_eq!(a.bandwidth.len(), b.bandwidth.len());
+    for ((la, ma, xa), (lb, mb, xb)) in a.bandwidth.iter().zip(b.bandwidth.iter()) {
+        assert_eq!(la, lb);
+        assert_eq!(ma, mb);
+        assert_f64_identical("pool triad MB/s", *xa, *xb);
+    }
+    assert_eq!(a.tiering.len(), b.tiering.len());
+    for ((la, ra, pa), (lb, rb, pb)) in a.tiering.iter().zip(b.tiering.iter()) {
+        assert_eq!(la, lb);
+        assert_eq!(ra.sim_ticks, rb.sim_ticks, "{la}");
+        assert_eq!(ra.latency.count(), rb.latency.count(), "{la}");
+        assert_f64_identical("pool replay p99", ra.latency.p99_ns(), rb.latency.p99_ns());
+        assert_f64_identical("pool promotions", *pa, *pb);
+    }
+}
+
+#[test]
 fn engine_results_match_workload_order_not_finish_order() {
     // Deliberately lopsided jobs: a slow CXL-SSD job first, fast DRAM
     // jobs after. With several workers the fast jobs finish first; the
