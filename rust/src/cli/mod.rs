@@ -2,9 +2,11 @@
 //!
 //! ```text
 //! cxl-ssd-sim info
-//! cxl-ssd-sim run --device <dev|all|d1,d2,..> --workload <wl> [--config f] [--set k=v]...
-//! cxl-ssd-sim sweep --experiment all|fig3|fig4|fig5|fig6|policies|mshr|fastmode
-//!                   [--jobs N] [--quick]
+//! cxl-ssd-sim run --device <dev|all|d1,d2,..> --workload <wl> [--out dir] [--set k=v]...
+//! cxl-ssd-sim sweep --experiment all|fig3|fig4|fig5|fig6|policies|mlp|replay|pool|mshr|fastmode
+//!                   [--jobs N] [--quick] [--out dir]
+//! cxl-ssd-sim report --figures <dir> | --baseline <dir> --candidate <dir> | --bench <dir>
+//! cxl-ssd-sim docs [--out docs/CONFIG.md]
 //! cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
 //! cxl-ssd-sim trace replay --in <file> --device <dev> [--fast] [--artifacts dir]
 //! ```
@@ -15,7 +17,9 @@ use crate::config::SimConfig;
 use crate::coordinator::experiments::{self, ExpScale};
 use crate::coordinator::{fastmode_compare, run_with_trace, sweep};
 use crate::devices::{build_device, DeviceKind, Instrumented};
+use crate::results::{self, report, Section, SectionKind};
 use crate::sim::{to_us, NS};
+use crate::stats::latency_summary;
 use crate::surrogate::DEFAULT_ARTIFACTS;
 use crate::trace::{SynthKind, SynthSpec, Trace, TraceSource};
 use crate::workloads::{Replay, ReplayMode, WorkloadKind, WorkloadSpec};
@@ -27,9 +31,15 @@ USAGE:
   cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache|pool|all|d1,d2,..>
                     (--workload <stream|membench|viper216|viper532|replay>
                      | --trace <file>)
-                    [--closed] [--mlp <N>] [--config <file>] [--set section.key=value ...]
+                    [--closed] [--mlp <N>] [--out <dir>]
+                    [--config <file>] [--set section.key=value ...]
   cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mlp|replay|pool|mshr|fastmode>
-                    [--jobs <N|0=auto>] [--mlp <N>] [--quick] [--artifacts <dir>]
+                    [--jobs <N|0=auto>] [--mlp <N>] [--quick] [--out <dir>]
+                    [--artifacts <dir>]
+  cxl-ssd-sim report --figures <dir>
+  cxl-ssd-sim report --baseline <dir> --candidate <dir> [--threshold <pct>]
+  cxl-ssd-sim report --bench <dir> [--bench-out <file>]
+  cxl-ssd-sim docs  [--out <file>]
   cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
   cxl-ssd-sim trace gen    --kind <uniform|zipf|seq|mixed> --out <file>
                     [--ops <N>] [--footprint <bytes>] [--write-ratio <0..1>]
@@ -66,6 +76,17 @@ experiment runs the pooling campaign: stream bandwidth scaling over
 line-interleaved pools of 1/2/4 cxl-dram at mlp=16, then the zipfian
 open-loop replay on a tiered cxl-dram+cxl-ssd pool vs the flat pool
 and the monolithic (un)cached CXL-SSD, with promotion counters.
+
+Artifacts & reporting: 'run --out dir' and 'sweep --out dir' write a
+schema-versioned artifact directory (campaign.json + one record per
+job: resolved config, seeds, counters, latency histogram). 'report
+--figures dir' re-renders the campaign's tables from artifacts alone;
+'report --baseline a --candidate b' diffs two artifact sets per metric
+and exits nonzero on drift beyond --threshold (default 0: the
+simulator is bit-deterministic, any drift is a change); 'report
+--bench dir' exports headline metrics as BENCH_sweep.json for the
+perf trajectory. 'docs' prints the generated config-key reference
+(docs/CONFIG.md).
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positional words.
@@ -224,16 +245,34 @@ pub fn main(argv: &[String]) -> Result<i32> {
                     spec => spec,
                 },
             };
+            // One artifact section per device: `report --figures` then
+            // re-renders the exact per-device tables this loop prints.
+            let mut sections = Vec::new();
             for (i, device) in devices.iter().enumerate() {
                 if i > 0 {
                     println!();
                 }
-                let (t, extra) = experiments::run_spec_report(*device, &spec, &cfg);
-                print!("{}", t.render());
+                let section_id = format!("run{i}");
+                let (record, extra) =
+                    experiments::run_spec_outcome(*device, &spec, &cfg, &section_id);
+                let section = Section {
+                    id: section_id,
+                    kind: SectionKind::Run,
+                    heading: format!("run: {} {}", device.name(), spec.label()),
+                    records: vec![record],
+                };
+                print!("{}", report::section_table(&section).render());
                 if !extra.is_empty() {
                     println!();
                     print!("{extra}");
                 }
+                sections.push(section);
+            }
+            if let Some(dir) = args.get("out") {
+                let mut campaign = results::Campaign::new("run", false);
+                campaign.sections = sections;
+                results::write_campaign_to(dir, &campaign)?;
+                println!("wrote {} run record(s) to {dir}", devices.len());
             }
         }
         "sweep" => {
@@ -246,52 +285,129 @@ pub fn main(argv: &[String]) -> Result<i32> {
             };
             let jobs = parse_jobs(&args, &cfg)?;
             let artifacts = args.get("artifacts").unwrap_or(DEFAULT_ARTIFACTS);
-            if exp == "all" {
-                let report = experiments::all_figures_cfg(&cfg, scale, jobs);
-                print_sections(&report.sections);
-                println!(
-                    "{} jobs, {} worker(s): {:.2}s wall vs {:.2}s serial cost ({:.1}x)",
-                    report.timing.jobs,
-                    jobs,
-                    report.timing.wall_seconds,
-                    report.timing.job_host_seconds,
-                    report.timing.speedup()
-                );
+            let out_dir = args.get("out");
+
+            // The serial ablations have no sweep jobs and emit no
+            // artifact campaigns; they keep their own paths.
+            if matches!(exp, "mshr" | "fastmode") {
+                if jobs > 1 {
+                    eprintln!("note: --jobs does not apply to '{exp}' (serial ablation)");
+                }
+                if out_dir.is_some() {
+                    eprintln!("note: --out is not supported for '{exp}' (serial ablation)");
+                }
+                let table = match exp {
+                    "mshr" => experiments::mshr_ablation_cfg(&cfg, scale).0,
+                    _ => experiments::fastmode_ablation_cfg(&cfg, artifacts, scale)?.0,
+                };
+                print!("{}", table.render());
                 return Ok(0);
             }
-            if exp == "pool" {
-                if args.get("mlp").is_some() {
-                    eprintln!(
-                        "note: --mlp is ignored by '--experiment pool' (the campaign \
-                         pins mlp=16 for every job)"
+
+            if matches!(exp, "pool" | "mlp") && args.get("mlp").is_some() {
+                eprintln!(
+                    "note: --mlp is ignored by '--experiment {exp}' (the campaign \
+                     pins its own window sizes)"
+                );
+            }
+
+            let mut run = experiments::build_campaign(exp, &cfg, scale, jobs)?;
+            match exp {
+                "all" => {
+                    let mut sections = report::campaign_sections(&run.campaign);
+                    sections.push((
+                        "sweep summary (per job)".to_string(),
+                        run.summary.take().expect("all campaign has a summary"),
+                    ));
+                    print_sections(&sections);
+                    println!(
+                        "{} jobs, {} worker(s): {:.2}s wall vs {:.2}s serial cost ({:.1}x)",
+                        run.timing.jobs,
+                        jobs,
+                        run.timing.wall_seconds,
+                        run.timing.job_host_seconds,
+                        run.timing.speedup()
                     );
                 }
-                let report = experiments::pool_campaign_cfg(&cfg, scale, jobs);
-                print_sections(&report.sections);
-                return Ok(0);
+                "pool" => print_sections(&report::campaign_sections(&run.campaign)),
+                _ => {
+                    let table = report::section_table(&run.campaign.sections[0]);
+                    print!("{}", table.render());
+                }
             }
-            if jobs > 1 && matches!(exp, "mshr" | "fastmode") {
-                eprintln!("note: --jobs does not apply to '{exp}' (serial ablation)");
-            }
-            if exp == "mlp" && args.get("mlp").is_some() {
-                eprintln!(
-                    "note: --mlp is ignored by '--experiment mlp' (the sweep walks \
-                     mlp in {{1,2,4,8,16}} itself)"
+            if let Some(dir) = out_dir {
+                results::write_campaign_to(dir, &run.campaign)?;
+                println!(
+                    "wrote {} job artifact(s) to {dir}",
+                    run.campaign.records().count()
                 );
             }
-            let table = match exp {
-                "fig3" => experiments::fig3_bandwidth_cfg(&cfg, scale, jobs).0,
-                "fig4" => experiments::fig4_latency_cfg(&cfg, scale, jobs).0,
-                "fig5" => experiments::fig56_viper_cfg(&cfg, 216, scale, jobs).0,
-                "fig6" => experiments::fig56_viper_cfg(&cfg, 532, scale, jobs).0,
-                "policies" => experiments::policy_sweep_cfg(&cfg, 216, scale, jobs).0,
-                "mlp" => experiments::mlp_sweep_cfg(&cfg, scale, jobs).0,
-                "replay" => experiments::replay_campaign_cfg(&cfg, scale, jobs).0,
-                "mshr" => experiments::mshr_ablation_cfg(&cfg, scale).0,
-                "fastmode" => experiments::fastmode_ablation_cfg(&cfg, artifacts, scale)?.0,
-                other => bail!("unknown experiment '{other}'"),
+        }
+        "report" => {
+            if let Some(dir) = args.get("figures") {
+                let campaign = results::load_campaign_from(dir)?;
+                println!(
+                    "experiment '{}'{} from {dir}\n",
+                    campaign.experiment,
+                    if campaign.quick { " (quick scale)" } else { "" },
+                );
+                print_sections(&report::campaign_sections(&campaign));
+                return Ok(0);
+            }
+            if let Some(dir) = args.get("bench") {
+                let campaign = results::load_campaign_from(dir)?;
+                let text = report::bench_json(&campaign);
+                let out = args.get("bench-out").unwrap_or("BENCH_sweep.json");
+                std::fs::write(out, &text)
+                    .with_context(|| format!("writing bench trajectory to {out}"))?;
+                println!(
+                    "wrote bench trajectory for experiment '{}' to {out}",
+                    campaign.experiment
+                );
+                return Ok(0);
+            }
+            let base_dir = args.get("baseline").context(
+                "report needs --figures <dir>, --bench <dir>, or \
+                 --baseline <dir> --candidate <dir>",
+            )?;
+            let cand_dir = args
+                .get("candidate")
+                .context("--candidate required with --baseline")?;
+            let threshold = match args.get("threshold") {
+                Some(raw) => raw
+                    .parse::<f64>()
+                    .with_context(|| format!("--threshold '{raw}' (want a percentage)"))?,
+                None => 0.0,
             };
-            print!("{}", table.render());
+            let base = results::load_campaign_from(base_dir)?;
+            let cand = results::load_campaign_from(cand_dir)?;
+            let diff = report::diff_campaigns(&base, &cand, threshold)?;
+            for m in &diff.mismatches {
+                eprintln!("mismatch: {m}");
+            }
+            if diff.flagged > 0 {
+                print!("{}", diff.table.render());
+            }
+            println!(
+                "report: {} metric(s) compared, {} beyond {:.3}% threshold, \
+                 {} structural mismatch(es)",
+                diff.compared,
+                diff.flagged,
+                threshold,
+                diff.mismatches.len()
+            );
+            return Ok(if diff.passes() { 0 } else { 1 });
+        }
+        "docs" => {
+            let text = crate::config::render_config_md();
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)
+                        .with_context(|| format!("writing config reference to {path}"))?;
+                    println!("wrote config reference to {path}");
+                }
+                None => print!("{text}"),
+            }
         }
         "trace" => {
             let sub = args
@@ -410,13 +526,8 @@ pub fn main(argv: &[String]) -> Result<i32> {
                             crate::sim::to_sec(r.sim_ticks) * 1e3,
                         );
                         println!(
-                            "response: mean {:.1} ns, p50 {:.1}, p95 {:.1}, \
-                             p99 {:.1}, p99.9 {:.1} (window stall {:.1} us)",
-                            r.latency.mean_ns(),
-                            r.latency.p50_ns(),
-                            r.latency.p95_ns(),
-                            r.latency.p99_ns(),
-                            r.latency.p999_ns(),
+                            "response: {} (window stall {:.1} us)",
+                            latency_summary(&r.latency),
                             to_us(r.stall_ticks),
                         );
                         println!(
@@ -559,5 +670,81 @@ mod tests {
             "trace record --device dram --workload replay --out /tmp/x.trace",
         ));
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn sweep_out_then_report_figures_and_self_diff() {
+        // The acceptance path end to end: sweep --out, report --figures,
+        // report --baseline X --candidate X exits 0.
+        let dir = "/tmp/cxl_ssd_sim_cli_artifacts";
+        let _ = std::fs::remove_dir_all(dir);
+        let code = main(&argv(&format!(
+            "sweep --experiment fig4 --quick --jobs 2 --out {dir}"
+        )))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(std::path::Path::new(dir).join("campaign.json").exists());
+        let code = main(&argv(&format!("report --figures {dir}"))).unwrap();
+        assert_eq!(code, 0);
+        let code = main(&argv(&format!(
+            "report --baseline {dir} --candidate {dir}"
+        )))
+        .unwrap();
+        assert_eq!(code, 0, "self-diff must pass with all-zero deltas");
+    }
+
+    #[test]
+    fn report_bench_exports_trajectory() {
+        let dir = "/tmp/cxl_ssd_sim_cli_bench_artifacts";
+        let out = "/tmp/cxl_ssd_sim_BENCH_sweep.json";
+        let _ = std::fs::remove_dir_all(dir);
+        let _ = std::fs::remove_file(out);
+        let code = main(&argv(&format!(
+            "sweep --experiment fig3 --quick --jobs 2 --out {dir}"
+        )))
+        .unwrap();
+        assert_eq!(code, 0);
+        let code = main(&argv(&format!("report --bench {dir} --bench-out {out}"))).unwrap();
+        assert_eq!(code, 0);
+        let text = std::fs::read_to_string(out).unwrap();
+        assert!(text.contains("stream.triad_mbs"), "{text}");
+    }
+
+    #[test]
+    fn report_requires_a_mode() {
+        assert!(main(&argv("report")).is_err());
+        assert!(main(&argv("report --baseline /tmp/nowhere")).is_err());
+        assert!(main(&argv("report --figures /tmp/definitely_missing_dir")).is_err());
+    }
+
+    #[test]
+    fn run_emits_artifacts_with_out() {
+        let dir = "/tmp/cxl_ssd_sim_cli_run_artifacts";
+        let _ = std::fs::remove_dir_all(dir);
+        let code = main(&argv(&format!(
+            "run --device dram,pmem --workload membench --out {dir} \
+             --set sys.seed=5"
+        )))
+        .unwrap();
+        assert_eq!(code, 0);
+        let campaign = crate::results::load_campaign_from(dir).unwrap();
+        assert_eq!(campaign.experiment, "run");
+        // One single-record section per device, so report --figures
+        // re-renders the same per-device tables the live run printed.
+        assert_eq!(campaign.sections.len(), 2);
+        assert!(campaign.sections.iter().all(|s| s.records.len() == 1));
+        assert_eq!(campaign.sections[1].records[0].device, "pmem");
+        let code = main(&argv(&format!("report --figures {dir}"))).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn docs_command_prints_reference() {
+        assert_eq!(main(&argv("docs")).unwrap(), 0);
+        let path = "/tmp/cxl_ssd_sim_cli_config.md";
+        let _ = std::fs::remove_file(path);
+        assert_eq!(main(&argv(&format!("docs --out {path}"))).unwrap(), 0);
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text, crate::config::render_config_md());
     }
 }

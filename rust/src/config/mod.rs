@@ -1,10 +1,14 @@
 //! Configuration system: typed config structs, Table-I presets, a small
-//! TOML-subset parser for config files, and `section.key=value` overrides.
+//! TOML-subset parser for config files, `section.key=value` overrides,
+//! and the key registry ([`registry`]) that documents and serializes
+//! every recognized key.
 
 mod parser;
 pub mod presets;
+pub mod registry;
 
 pub use parser::{parse_file, parse_str, ConfigError, ConfigValue};
+pub use registry::{dump_kv, render_config_md, KeyDoc, REGISTRY};
 
 use crate::cache::PolicyKind;
 use crate::cxl::HomeAgentConfig;

@@ -1,0 +1,384 @@
+//! The single registry of every recognized config key.
+//!
+//! Each entry pairs a `section.key` name with a one-line doc and a
+//! getter that reads the current value out of a [`SimConfig`]. The
+//! registry drives three things that must never drift apart:
+//!
+//! 1. **`docs/CONFIG.md`** — the `cxl-ssd-sim docs` subcommand renders
+//!    the reference table from this list (name, type, default, doc);
+//!    `rust/tests/config_docs.rs` fails if the checked-in file differs
+//!    from a fresh render.
+//! 2. **Artifact config dumps** — [`dump_kv`] serializes a resolved
+//!    config into run artifacts; every value re-parses through
+//!    `SimConfig::apply_override`, so artifacts round-trip configs.
+//! 3. **Coverage tests** — `rust/tests/config_docs.rs` asserts every
+//!    entry's rendered value is accepted by `apply_override`, and
+//!    `registry_covers_apply` (below) extracts the accepted key set
+//!    from `SimConfig::apply`'s own source and requires it to equal
+//!    the registry's, in both directions.
+//!
+//! Types are inferred from each entry's default value; string-valued
+//! keys render quoted (the form the TOML-subset parser reads back).
+
+use super::{ConfigValue, SimConfig};
+
+/// One recognized config key.
+pub struct KeyDoc {
+    /// Full `section.key` name.
+    pub key: &'static str,
+    /// One-line description for the generated reference.
+    pub doc: &'static str,
+    /// Read the key's current value from a config.
+    pub get: fn(&SimConfig) -> ConfigValue,
+}
+
+impl KeyDoc {
+    /// The key's section (text before the first dot).
+    pub fn section(&self) -> &'static str {
+        self.key.split_once('.').map(|(s, _)| s).unwrap_or(self.key)
+    }
+
+    /// Type label derived from the value the getter returns.
+    pub fn type_name(&self, cfg: &SimConfig) -> &'static str {
+        match (self.get)(cfg) {
+            ConfigValue::Int(_) => "int",
+            ConfigValue::Float(_) => "float",
+            ConfigValue::Bool(_) => "bool",
+            ConfigValue::Str(_) => "string",
+        }
+    }
+}
+
+macro_rules! key {
+    ($name:literal, $doc:literal, $get:expr) => {
+        KeyDoc {
+            key: $name,
+            doc: $doc,
+            get: $get,
+        }
+    };
+}
+
+fn int(v: u64) -> ConfigValue {
+    ConfigValue::Int(v)
+}
+
+fn uint(v: usize) -> ConfigValue {
+    ConfigValue::Int(v as u64)
+}
+
+/// Every recognized `section.key`, in documentation order (sections
+/// grouped, keys in `SimConfig::apply` order).
+pub static REGISTRY: &[KeyDoc] = &[
+    // --- cpu ---
+    key!("cpu.l1_bytes", "L1D capacity in bytes (Table I: 64KB)", |c| int(c.cpu.l1_bytes)),
+    key!("cpu.l1_ways", "L1D associativity", |c| uint(c.cpu.l1_ways)),
+    key!("cpu.t_l1", "L1 hit latency in ticks (1 tick = 1 ps)", |c| int(c.cpu.t_l1)),
+    key!("cpu.l2_bytes", "L2 capacity in bytes (Table I: 512KB)", |c| int(c.cpu.l2_bytes)),
+    key!("cpu.l2_ways", "L2 associativity", |c| uint(c.cpu.l2_ways)),
+    key!("cpu.t_l2", "L2 hit latency in ticks (Table I: 25ns)", |c| int(c.cpu.t_l2)),
+    key!("cpu.t_op_gap", "mean non-memory work between memory ops, ticks", |c| int(c.cpu.t_op_gap)),
+    key!(
+        "cpu.store_buffer",
+        "store-buffer entries (stores retire asynchronously)",
+        |c| uint(c.cpu.store_buffer)
+    ),
+    // --- dram ---
+    key!("dram.n_banks", "DDR4 banks per device", |c| uint(c.dram.n_banks)),
+    key!(
+        "dram.lines_per_row",
+        "64B lines per DRAM row (8KB row / 64B)",
+        |c| int(c.dram.lines_per_row)
+    ),
+    key!("dram.t_cl", "CAS latency, ticks", |c| int(c.dram.t_cl)),
+    key!("dram.t_rcd", "RAS-to-CAS delay, ticks", |c| int(c.dram.t_rcd)),
+    key!("dram.t_rp", "row precharge time, ticks", |c| int(c.dram.t_rp)),
+    key!("dram.t_burst", "data burst transfer time, ticks", |c| int(c.dram.t_burst)),
+    key!("dram.t_wr", "write recovery time, ticks", |c| int(c.dram.t_wr)),
+    key!("dram.t_refi", "refresh interval, ticks (0 disables refresh)", |c| int(c.dram.t_refi)),
+    key!("dram.t_rfc", "refresh cycle time, ticks", |c| int(c.dram.t_rfc)),
+    // --- pmem ---
+    key!(
+        "pmem.rowbuf_bytes",
+        "internal row-buffer size in bytes (Table I: 256B)",
+        |c| int(c.pmem.rowbuf_bytes)
+    ),
+    key!("pmem.n_bufs", "row-buffer entries (fully associative)", |c| uint(c.pmem.n_bufs)),
+    key!("pmem.n_ports", "concurrent media access units", |c| uint(c.pmem.n_ports)),
+    key!("pmem.t_read", "media read latency, ticks (Table I: 150ns)", |c| int(c.pmem.t_read)),
+    key!("pmem.t_write", "media write latency, ticks (Table I: 500ns)", |c| int(c.pmem.t_write)),
+    key!("pmem.t_buf_hit", "open-buffer hit latency, ticks", |c| int(c.pmem.t_buf_hit)),
+    // --- ssd ---
+    key!(
+        "ssd.capacity_bytes",
+        "device capacity in bytes (Table I: 16GB)",
+        |c| int(c.ssd.capacity_bytes)
+    ),
+    key!(
+        "ssd.icl_bytes",
+        "internal buffer (ICL) size in bytes (Table I: 512KB)",
+        |c| int(c.ssd.icl_bytes)
+    ),
+    key!("ssd.t_icl", "ICL service latency, ticks", |c| int(c.ssd.t_icl)),
+    key!(
+        "ssd.icl_enabled",
+        "enable the internal cache layer",
+        |c| ConfigValue::Bool(c.ssd.icl_enabled)
+    ),
+    key!(
+        "ssd.gc_threshold",
+        "free-block low watermark per die that triggers GC",
+        |c| uint(c.ssd.gc_threshold)
+    ),
+    key!("ssd.n_channels", "flash channels", |c| uint(c.ssd.nand.n_channels)),
+    key!("ssd.dies_per_channel", "flash dies per channel", |c| uint(c.ssd.nand.dies_per_channel)),
+    key!("ssd.pages_per_block", "4KB pages per flash block", |c| uint(c.ssd.nand.pages_per_block)),
+    key!("ssd.t_cmd", "command/DMA setup time, ticks", |c| int(c.ssd.nand.t_cmd)),
+    key!("ssd.t_read", "flash array read (tR), ticks", |c| int(c.ssd.nand.t_read)),
+    key!("ssd.t_prog", "page program (tPROG), ticks", |c| int(c.ssd.nand.t_prog)),
+    key!("ssd.t_erase", "block erase (tBERS), ticks", |c| int(c.ssd.nand.t_erase)),
+    key!("ssd.t_xfer", "4KB page transfer over one channel, ticks", |c| int(c.ssd.nand.t_xfer)),
+    // --- dcache ---
+    key!(
+        "dcache.bytes",
+        "expander DRAM cache capacity in bytes (Table I: 16MB)",
+        |c| int(c.dcache.bytes)
+    ),
+    key!("dcache.policy", "replacement policy: direct, lru, fifo, 2q or lfru", |c| {
+        ConfigValue::Str(c.dcache.policy.name().to_string())
+    }),
+    key!(
+        "dcache.mshr_entries",
+        "MSHR entries for in-flight 4KB fills",
+        |c| uint(c.dcache.mshr_entries)
+    ),
+    key!(
+        "dcache.t_access",
+        "DRAM cache access latency, ticks (paper: 50ns)",
+        |c| int(c.dcache.t_access)
+    ),
+    // --- cxl ---
+    key!(
+        "cxl.t_proto",
+        "CXL.mem protocol latency per direction, ticks (paper: 25ns)",
+        |c| int(c.cxl.t_proto)
+    ),
+    key!("cxl.credits", "link-layer credits (max in-flight M2S requests)", |c| uint(c.cxl.credits)),
+    // --- pool ---
+    key!("pool.members", "pool member devices, e.g. \"4xcxl-dram\" or \"cxl-dram,cxl-ssd\"", |c| {
+        // Run-length encode as NxKIND: `parse_members` rejects a kind
+        // repeated as separate plain tokens, so "cxl-dram,cxl-dram"
+        // would not re-parse — "2xcxl-dram" does.
+        let ms = &c.pool.members;
+        let mut parts: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < ms.len() {
+            let kind = ms[i];
+            let mut n = 1;
+            while i + n < ms.len() && ms[i + n] == kind {
+                n += 1;
+            }
+            parts.push(if n == 1 {
+                kind.name().to_string()
+            } else {
+                format!("{n}x{}", kind.name())
+            });
+            i += n;
+        }
+        ConfigValue::Str(parts.join(","))
+    }),
+    key!("pool.interleave", "pool routing mode: line, page or concat", |c| {
+        ConfigValue::Str(c.pool.interleave.name().to_string())
+    }),
+    key!(
+        "pool.stripe_bytes",
+        "stripe chunk override; 0 uses the mode default (power of two >= 64)",
+        |c| int(c.pool.stripe_bytes)
+    ),
+    key!(
+        "pool.tiering",
+        "enable the hot-page tiering engine",
+        |c| ConfigValue::Bool(c.pool.tiering)
+    ),
+    key!(
+        "pool.epoch_ns",
+        "heat-decay epoch in nanoseconds (must be nonzero)",
+        |c| int(c.pool.epoch_ns)
+    ),
+    key!(
+        "pool.promote_threshold",
+        "heat at which a slow-homed page promotes (clamps to >= 1)",
+        |c| int(c.pool.promote_threshold as u64)
+    ),
+    key!(
+        "pool.max_promoted",
+        "max pages resident on the fast tier; 0 = unlimited",
+        |c| uint(c.pool.max_promoted)
+    ),
+    key!(
+        "pool.port_credits",
+        "switch per-port credits (must be nonzero)",
+        |c| uint(c.pool.port_credits)
+    ),
+    key!("pool.arb_ns", "switch arbitration latency per hop, ns", |c| int(c.pool.arb_ns)),
+    // --- sys ---
+    key!("sys.main_mem_bytes", "host main memory size (Table I: 512MB)", |c| int(c.main_mem_bytes)),
+    key!(
+        "sys.device_bytes",
+        "extension device window size behind the Home Agent",
+        |c| int(c.device_bytes)
+    ),
+    key!("sys.seed", "PRNG seed for workload generation", |c| int(c.seed)),
+    key!(
+        "sys.jobs",
+        "default sweep worker threads; 0 = one per core, 1 = serial",
+        |c| uint(c.jobs)
+    ),
+    key!(
+        "sys.mlp",
+        "outstanding-request window for bandwidth workloads (clamps to >= 1)",
+        |c| uint(c.mlp)
+    ),
+    // --- replay ---
+    key!(
+        "replay.closed",
+        "replay pacing: false = open loop (trace schedule), true = closed loop",
+        |c| ConfigValue::Bool(c.replay_closed)
+    ),
+];
+
+/// Dump a resolved config as `(key, value)` string pairs, in registry
+/// order. Values are in [`ConfigValue`] display form — the exact
+/// spelling `SimConfig::apply_override` parses back (strings quoted,
+/// integers bare) — so an artifact's config block rebuilds the same
+/// `SimConfig`.
+pub fn dump_kv(cfg: &SimConfig) -> Vec<(String, String)> {
+    REGISTRY
+        .iter()
+        .map(|e| (e.key.to_string(), (e.get)(cfg).to_string()))
+        .collect()
+}
+
+/// Render the generated configuration reference (`docs/CONFIG.md`).
+/// Deterministic: registry order, defaults from `SimConfig::default()`.
+pub fn render_config_md() -> String {
+    let defaults = SimConfig::default();
+    let mut out = String::new();
+    out.push_str("# Configuration reference\n");
+    out.push('\n');
+    out.push_str(
+        "Generated by `cxl-ssd-sim docs` from the key registry\n\
+         (`rust/src/config/registry.rs`). Do not edit by hand: regenerate\n\
+         with `cargo run --release -- docs --out ../docs/CONFIG.md` (from\n\
+         `rust/`). `rust/tests/config_docs.rs` fails when this file drifts\n\
+         from the code.\n",
+    );
+    out.push('\n');
+    out.push_str(
+        "Keys are set in a TOML-subset config file (`--config <file>`,\n\
+         `[section]` headers + `key = value` lines, `#` comments) or per\n\
+         invocation with `--set section.key=value`. Integer values accept\n\
+         `_` separators and `k`/`M`/`G` binary suffixes (`16M` = 16777216).\n\
+         Latencies are in simulator ticks: 1 tick = 1 ps, so 1 ns = 1000\n\
+         ticks.\n",
+    );
+    let mut section = "";
+    for entry in REGISTRY {
+        if entry.section() != section {
+            section = entry.section();
+            out.push('\n');
+            out.push_str(&format!("## [{section}]\n"));
+            out.push('\n');
+            out.push_str("| key | type | default | description |\n");
+            out.push_str("|---|---|---|---|\n");
+        }
+        out.push_str(&format!(
+            "| `{}` | {} | `{}` | {} |\n",
+            entry.key,
+            entry.type_name(&defaults),
+            (entry.get)(&defaults),
+            entry.doc
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the dump -> apply_override -> dump round-trip (defaults and
+    // mutated configs) is covered at the public-API level by
+    // `rust/tests/config_docs.rs`; this module tests only what needs
+    // registry internals.
+
+    #[test]
+    fn registry_keys_are_unique_and_well_formed() {
+        let mut seen = std::collections::HashSet::new();
+        for entry in REGISTRY {
+            assert!(seen.insert(entry.key), "duplicate key {}", entry.key);
+            assert!(
+                entry.key.split_once('.').is_some(),
+                "key {} lacks a section",
+                entry.key
+            );
+            assert!(!entry.doc.is_empty(), "key {} lacks a doc", entry.key);
+        }
+    }
+
+    #[test]
+    fn registry_covers_apply() {
+        // `SimConfig::apply` must recognize exactly the registry's keys,
+        // in both directions. The accepted key set is extracted from the
+        // `apply` source itself (its match arms are `("sec", "key") =>`
+        // tuples, one per line), so adding a key to either side without
+        // the other fails here — not just a length count.
+        let src_path =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src/config/mod.rs");
+        let src = std::fs::read_to_string(&src_path).unwrap();
+        let mut apply_keys = Vec::new();
+        for line in src.lines() {
+            let line = line.trim_start();
+            let Some(rest) = line.strip_prefix("(\"") else {
+                continue;
+            };
+            let Some(tuple) = rest.split("\") =>").next().filter(|_| rest.contains("\") =>"))
+            else {
+                continue;
+            };
+            if let Some((section, key)) = tuple.split_once("\", \"") {
+                apply_keys.push(format!("{section}.{key}"));
+            }
+        }
+        let registry_keys: Vec<String> = REGISTRY.iter().map(|e| e.key.to_string()).collect();
+        for k in &registry_keys {
+            assert!(
+                apply_keys.contains(k),
+                "registry key {k} has no match arm in SimConfig::apply"
+            );
+        }
+        for k in &apply_keys {
+            assert!(
+                registry_keys.contains(k),
+                "SimConfig::apply accepts {k} but the registry (and docs/CONFIG.md) misses it"
+            );
+        }
+        assert_eq!(apply_keys.len(), registry_keys.len());
+    }
+
+    #[test]
+    fn config_md_mentions_every_key() {
+        let md = render_config_md();
+        for entry in REGISTRY {
+            assert!(md.contains(entry.key), "CONFIG.md misses {}", entry.key);
+        }
+        let sections = [
+            "[cpu]", "[dram]", "[pmem]", "[ssd]", "[dcache]", "[cxl]", "[pool]", "[sys]",
+            "[replay]",
+        ];
+        for section in sections {
+            assert!(md.contains(section), "CONFIG.md misses section {section}");
+        }
+        assert!(md.ends_with('\n') && !md.ends_with("\n\n"));
+    }
+}

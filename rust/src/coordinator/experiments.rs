@@ -7,23 +7,30 @@
 //!
 //! All figure sweeps ride on the parallel sweep engine
 //! ([`crate::coordinator::sweep`]): a figure is a [`SweepSpec`] expanded
-//! into per-(device x workload x policy) jobs. The `*_jobs` variants take
+//! into per-(device x workload x policy) jobs. The `*_cfg` variants take
 //! a worker count; the plain variants run serially. Parallel and serial
 //! runs produce **bit-identical** figure data (seeds derive from sweep
 //! coordinates, not execution order) - `rust/tests/sweep_equivalence.rs`
 //! locks this in.
+//!
+//! Every campaign is built as structured [`RunRecord`]s first
+//! ([`build_campaign`]); the printed tables are rendered *from the
+//! records* by [`crate::results::report`], the same renderers `report
+//! --figures` applies to loaded artifacts — so a live sweep and a
+//! re-render from its `--out` directory produce identical bytes by
+//! construction.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::cache::PolicyKind;
 use crate::config::{presets, SimConfig};
-use crate::coordinator::sweep::{self, SweepSpec, SweepTiming};
+use crate::coordinator::sweep::{self, RunJob, SweepSpec, SweepTiming};
 use crate::coordinator::{fastmode_compare, run_with_trace, FastReport, RunOutput};
 use crate::cpu::Core;
 use crate::devices::DeviceKind;
 use crate::pool::{InterleaveMode, PoolConfig};
-use crate::sim::{to_us, NS};
-use crate::stats::Table;
+use crate::results::{self, report, Campaign, RunRecord, Section, SectionKind};
+use crate::stats::{HistogramBox, Table};
 use crate::topology::System;
 use crate::trace::{SynthKind, SynthSpec, TraceSource};
 use crate::workloads::{
@@ -104,7 +111,7 @@ impl ExpScale {
             footprint: 8 << 20,
             write_ratio: 0.3,
             zipf_theta: 0.9,
-            gap: 200 * NS,
+            gap: 200 * crate::sim::NS,
             ..SynthSpec::new(SynthKind::Zipfian)
         }
     }
@@ -123,7 +130,7 @@ impl ExpScale {
             footprint: 2 << 20,
             write_ratio: 0.1,
             zipf_theta: 0.9,
-            gap: 400 * NS,
+            gap: 400 * crate::sim::NS,
             ..SynthSpec::new(SynthKind::Zipfian)
         }
     }
@@ -151,170 +158,169 @@ impl ExpScale {
     }
 }
 
-// ------------------------------------------------------------ helpers
+// --------------------------------------------------- campaign building
 
-fn stream_figure(outs: &[&RunOutput]) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
-    let mut table = Table::new(&["device", "copy MB/s", "scale MB/s", "add MB/s", "triad MB/s"]);
-    let mut raw = Vec::new();
-    for out in outs {
-        let results = out.stream.as_ref().expect("stream output");
-        let mbs: Vec<f64> = results.iter().map(|r| r.mbs).collect();
-        table.row_owned(vec![
-            out.device.name().to_string(),
-            format!("{:.1}", mbs[0]),
-            format!("{:.1}", mbs[1]),
-            format!("{:.1}", mbs[2]),
-            format!("{:.1}", mbs[3]),
-        ]);
-        raw.push((out.device, mbs));
-    }
-    (table, raw)
+/// A fully executed campaign: the artifact-ready records plus the
+/// sweep's wall-clock accounting and (for `all`) the per-job summary.
+pub struct CampaignRun {
+    pub campaign: Campaign,
+    pub timing: SweepTiming,
+    /// `all` only: the per-job sweep summary table (host seconds are
+    /// volatile, so it is printed live but never written to artifacts).
+    pub summary: Option<Table>,
 }
 
-fn membench_figure(outs: &[&RunOutput]) -> (Table, Vec<(DeviceKind, f64)>) {
-    let mut table = Table::new(&["device", "mean ns", "p50 ns", "p99 ns"]);
-    let mut raw = Vec::new();
-    for out in outs {
-        let r = out.membench.as_ref().expect("membench output");
-        table.row_owned(vec![
-            out.device.name().to_string(),
-            format!("{:.1}", r.mean_ns),
-            format!("{:.1}", r.p50_ns),
-            format!("{:.1}", r.p99_ns),
-        ]);
-        raw.push((out.device, r.mean_ns));
+/// Section headings — stored in the campaign (and its artifacts), so
+/// `report --figures` prints exactly what the live sweep printed.
+fn fig_heading(id: &str) -> &'static str {
+    match id {
+        "fig3" => "Fig 3: stream bandwidth (MB/s)",
+        "fig4" => "Fig 4: membench random-read latency (ns)",
+        "fig5" => "Fig 5: Viper QPS, 216B records",
+        "fig6" => "Fig 6: Viper QPS, 532B records",
+        "policies" => "SIII-C: cache policy sweep (Viper 216B)",
+        "mlp" => "MLP sweep: stream triad MB/s per outstanding-request window",
+        "replay" => "Replay campaign: response-latency percentiles per device",
+        other => unreachable!("no heading for section '{other}'"),
     }
-    (table, raw)
 }
 
-fn viper_figure(outs: &[&RunOutput]) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
-    let mut table = Table::new(&["device", "write", "insert", "get", "update", "delete"]);
-    let mut raw = Vec::new();
-    for out in outs {
-        let results = out.viper.as_ref().expect("viper output");
-        let mut cells = vec![out.device.name().to_string()];
-        let mut kv = Vec::new();
-        for r in results {
-            cells.push(format!("{:.0}", r.qps));
-            kv.push((r.op.name().to_string(), r.qps));
-        }
-        table.row_owned(cells);
-        raw.push((out.device, kv));
-    }
-    (table, raw)
+/// Build a section's records from executed jobs (records are keyed by
+/// their index in expansion order — the sweep coordinate — never by
+/// completion order; `execute` already returns index-aligned outputs).
+fn section_records(
+    experiment: &str,
+    id: &str,
+    jobs: &[RunJob],
+    outs: &[RunOutput],
+) -> Vec<RunRecord> {
+    jobs.iter()
+        .zip(outs.iter())
+        .enumerate()
+        .map(|(i, (job, out))| results::record_from_job(experiment, id, i, job, out))
+        .collect()
 }
 
-fn policy_figure(
-    policies: &[PolicyKind],
-    outs: &[&RunOutput],
-) -> (Table, Vec<(PolicyKind, f64, f64)>) {
-    let mut table = Table::new(&["policy", "hit rate", "aggregate QPS"]);
-    let mut raw = Vec::new();
-    for (&policy, out) in policies.iter().zip(outs) {
-        let hit_rate = out
-            .device_kv
-            .iter()
-            .find(|(k, _)| k == "cache_hit_rate")
-            .map(|(_, v)| *v)
-            .unwrap_or(0.0);
-        // Harmonic aggregate: total ops / total time == ops-weighted QPS.
-        let results = out.viper.as_ref().expect("viper output");
-        let total_ops: u64 = results.iter().map(|r| r.ops).sum();
-        let total_secs: f64 = results.iter().map(|r| r.ops as f64 / r.qps).sum();
-        let qps = total_ops as f64 / total_secs;
-        table.row_owned(vec![
-            policy.name().to_string(),
-            format!("{hit_rate:.4}"),
-            format!("{qps:.0}"),
-        ]);
-        raw.push((policy, hit_rate, qps));
+fn single_section_campaign(
+    experiment: &str,
+    kind: SectionKind,
+    heading: &str,
+    quick: bool,
+    jobs: Vec<RunJob>,
+    n_workers: usize,
+) -> CampaignRun {
+    let (outs, timing) = sweep::execute_timed(&jobs, n_workers);
+    let mut campaign = Campaign::new(experiment, quick);
+    campaign.sections.push(Section {
+        id: experiment.to_string(),
+        kind,
+        heading: heading.to_string(),
+        records: section_records(experiment, experiment, &jobs, &outs),
+    });
+    CampaignRun {
+        campaign,
+        timing,
+        summary: None,
     }
-    (table, raw)
 }
 
-fn run_figure_sweep(base: &SimConfig, workload: WorkloadSpec, n_workers: usize) -> Vec<RunOutput> {
-    let spec = SweepSpec::new(base.clone())
+/// Build and execute the named experiment as an artifact campaign —
+/// the single dispatch the CLI's `sweep` command (and `--out` artifact
+/// emission) goes through. Errors on experiments that have no sweep
+/// jobs (`mshr`, `fastmode` — serial ablations).
+pub fn build_campaign(
+    exp: &str,
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> Result<CampaignRun> {
+    match exp {
+        "fig3" => Ok(fig_workload_campaign(
+            "fig3",
+            SectionKind::Stream,
+            base,
+            scale.stream_spec(),
+            scale.quick,
+            n_workers,
+        )),
+        "fig4" => Ok(fig_workload_campaign(
+            "fig4",
+            SectionKind::Membench,
+            base,
+            scale.membench_spec(),
+            scale.quick,
+            n_workers,
+        )),
+        "fig5" => Ok(fig_workload_campaign(
+            "fig5",
+            SectionKind::Viper,
+            base,
+            scale.viper_spec(216),
+            scale.quick,
+            n_workers,
+        )),
+        "fig6" => Ok(fig_workload_campaign(
+            "fig6",
+            SectionKind::Viper,
+            base,
+            scale.viper_spec(532),
+            scale.quick,
+            n_workers,
+        )),
+        "policies" => Ok(policy_campaign(base, scale, 216, n_workers)),
+        "mlp" => Ok(mlp_campaign(base, scale, n_workers)),
+        "replay" => Ok(replay_campaign_build(base, scale, n_workers)),
+        "pool" => Ok(pool_campaign_build(base, scale, n_workers)),
+        "all" => Ok(all_campaign(base, scale, n_workers)),
+        "mshr" | "fastmode" => bail!(
+            "'{exp}' is a serial ablation without sweep jobs; it does not \
+             emit artifact campaigns"
+        ),
+        other => bail!("unknown experiment '{other}'"),
+    }
+}
+
+/// One workload across the five figure devices (Figs 3-6).
+fn fig_workload_campaign(
+    id: &str,
+    kind: SectionKind,
+    base: &SimConfig,
+    workload: WorkloadSpec,
+    quick: bool,
+    n_workers: usize,
+) -> CampaignRun {
+    let jobs = SweepSpec::new(base.clone())
         .devices(FIG_DEVICES.to_vec())
-        .workloads(vec![workload]);
-    sweep::execute(&spec.expand(), n_workers)
+        .workloads(vec![workload])
+        .expand();
+    single_section_campaign(id, kind, fig_heading(id), quick, jobs, n_workers)
 }
 
-// ------------------------------------------------------------- figures
-
-/// Fig 3: stream bandwidth across the five devices (serial, Table I).
-pub fn fig3_bandwidth(scale: ExpScale) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
-    fig3_bandwidth_cfg(&presets::table1(), scale, 1)
-}
-
-/// Fig 3 on the sweep engine: caller-supplied base config (CLI
-/// `--config`/`--set`) and worker count.
-pub fn fig3_bandwidth_cfg(
+fn policy_campaign(
     base: &SimConfig,
     scale: ExpScale,
-    n_workers: usize,
-) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
-    let outs = run_figure_sweep(base, scale.stream_spec(), n_workers);
-    stream_figure(&outs.iter().collect::<Vec<_>>())
-}
-
-/// Fig 4: membench random-read latency across the five devices (serial,
-/// Table I).
-pub fn fig4_latency(scale: ExpScale) -> (Table, Vec<(DeviceKind, f64)>) {
-    fig4_latency_cfg(&presets::table1(), scale, 1)
-}
-
-/// Fig 4 on the sweep engine: caller-supplied base config and workers.
-pub fn fig4_latency_cfg(
-    base: &SimConfig,
-    scale: ExpScale,
-    n_workers: usize,
-) -> (Table, Vec<(DeviceKind, f64)>) {
-    let outs = run_figure_sweep(base, scale.membench_spec(), n_workers);
-    membench_figure(&outs.iter().collect::<Vec<_>>())
-}
-
-/// Figs 5/6: Viper KV QPS per operation across the five devices
-/// (serial, Table I).
-pub fn fig56_viper(
     record_bytes: u64,
-    scale: ExpScale,
-) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
-    fig56_viper_cfg(&presets::table1(), record_bytes, scale, 1)
-}
-
-/// Figs 5/6 on the sweep engine: caller-supplied base config + workers.
-pub fn fig56_viper_cfg(
-    base: &SimConfig,
-    record_bytes: u64,
-    scale: ExpScale,
     n_workers: usize,
-) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
-    let outs = run_figure_sweep(base, scale.viper_spec(record_bytes), n_workers);
-    viper_figure(&outs.iter().collect::<Vec<_>>())
+) -> CampaignRun {
+    let jobs = SweepSpec::new(base.clone())
+        .devices(vec![DeviceKind::CxlSsdCached])
+        .workloads(vec![scale.policy_viper_spec(record_bytes)])
+        .policies(PolicyKind::ALL.iter().map(|&p| Some(p)).collect())
+        .expand();
+    single_section_campaign(
+        "policies",
+        SectionKind::Policy,
+        fig_heading("policies"),
+        scale.quick,
+        jobs,
+        n_workers,
+    )
 }
 
 /// MLP values the bandwidth-saturation sweep walks (`--experiment mlp`).
 pub const MLP_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
 
-/// MLP sweep: stream triad bandwidth per device as the requester's
-/// outstanding-request window grows (serial, Table I). Shows bandwidth
-/// saturating on link credits / banks / channels — the figure the
-/// synchronous one-at-a-time device API could not produce.
-pub fn mlp_sweep(scale: ExpScale) -> (Table, Vec<(usize, DeviceKind, f64)>) {
-    mlp_sweep_cfg(&presets::table1(), scale, 1)
-}
-
-/// MLP sweep on the sweep engine: caller-supplied base config + workers.
-///
-/// Jobs are the cross product mlp x device over the Fig-3 stream
-/// workload; rows are devices, columns the [`MLP_SWEEP`] window sizes,
-/// cells the triad-kernel bandwidth in MB/s. Raw tuples are
-/// `(mlp, device, triad_mbs)`.
-pub fn mlp_sweep_cfg(
-    base: &SimConfig,
-    scale: ExpScale,
-    n_workers: usize,
-) -> (Table, Vec<(usize, DeviceKind, f64)>) {
+fn mlp_campaign(base: &SimConfig, scale: ExpScale, n_workers: usize) -> CampaignRun {
     let mut jobs = Vec::new();
     for &mlp in &MLP_SWEEP {
         let mut cfg = base.clone();
@@ -326,78 +332,23 @@ pub fn mlp_sweep_cfg(
                 .expand(),
         );
     }
-    let outs = sweep::execute(&jobs, n_workers);
-
-    let mut header = vec!["device".to_string()];
-    header.extend(MLP_SWEEP.iter().map(|m| format!("mlp={m} MB/s")));
-    let mut table = Table::new_owned(header);
-    let mut raw = Vec::new();
-    for (di, device) in FIG_DEVICES.iter().enumerate() {
-        let mut cells = vec![device.name().to_string()];
-        for (mi, &mlp) in MLP_SWEEP.iter().enumerate() {
-            let out = &outs[mi * FIG_DEVICES.len() + di];
-            debug_assert_eq!(out.device, *device);
-            let triad = out
-                .stream
-                .as_ref()
-                .expect("stream output")
-                .last()
-                .expect("four kernels")
-                .mbs;
-            cells.push(format!("{triad:.1}"));
-            raw.push((mlp, *device, triad));
-        }
-        table.row_owned(cells);
-    }
-    (table, raw)
+    single_section_campaign(
+        "mlp",
+        SectionKind::Mlp,
+        fig_heading("mlp"),
+        scale.quick,
+        jobs,
+        n_workers,
+    )
 }
 
-/// §III-C: cache replacement policy sweep on the cached CXL-SSD
-/// (serial, Table I).
-pub fn policy_sweep(record_bytes: u64, scale: ExpScale) -> (Table, Vec<(PolicyKind, f64, f64)>) {
-    policy_sweep_cfg(&presets::table1(), record_bytes, scale, 1)
-}
-
-/// §III-C on the sweep engine: caller-supplied base config + workers.
-pub fn policy_sweep_cfg(
-    base: &SimConfig,
-    record_bytes: u64,
-    scale: ExpScale,
-    n_workers: usize,
-) -> (Table, Vec<(PolicyKind, f64, f64)>) {
-    let spec = SweepSpec::new(base.clone())
-        .devices(vec![DeviceKind::CxlSsdCached])
-        .workloads(vec![scale.policy_viper_spec(record_bytes)])
-        .policies(PolicyKind::ALL.iter().map(|&p| Some(p)).collect());
-    let outs = sweep::execute(&spec.expand(), n_workers);
-    policy_figure(&PolicyKind::ALL, &outs.iter().collect::<Vec<_>>())
-}
-
-/// Replay campaign (serial, Table I): see [`replay_campaign_cfg`].
-pub fn replay_campaign(scale: ExpScale) -> (Table, Vec<(DeviceKind, String, ReplayResult)>) {
-    replay_campaign_cfg(&presets::table1(), scale, 1)
-}
-
-/// `--experiment replay`: the trace-driven campaign on the sweep engine.
-///
-/// Two streams — a synthetic zipfian hotspot and a device stream
-/// captured live from a Viper run on the cached CXL-SSD — replayed
-/// against all five devices (10 jobs), reporting per-request response
-/// latency percentiles (p50/p95/p99/p99.9). The pacing mode follows
-/// `base.replay_closed` (CLI `--closed`); synthetic jobs materialize
-/// from coordinate-derived seeds, so parallel output is bit-identical
-/// to serial like every other figure sweep.
-pub fn replay_campaign_cfg(
-    base: &SimConfig,
-    scale: ExpScale,
-    n_workers: usize,
-) -> (Table, Vec<(DeviceKind, String, ReplayResult)>) {
+fn replay_campaign_build(base: &SimConfig, scale: ExpScale, n_workers: usize) -> CampaignRun {
     // Capture the post-cache device stream once; every job shares it.
     let (_, captured) =
         sweep::run_spec(DeviceKind::CxlSsdCached, &scale.viper_spec(216), base, true);
     let captured = captured.expect("capture requested");
     let mode = ReplayMode::from_config(base);
-    let spec = SweepSpec::new(base.clone())
+    let jobs = SweepSpec::new(base.clone())
         .devices(FIG_DEVICES.to_vec())
         .workloads(vec![
             WorkloadSpec::Replay {
@@ -408,90 +359,23 @@ pub fn replay_campaign_cfg(
                 source: TraceSource::captured(captured),
                 mode,
             },
-        ]);
-    let jobs = spec.expand();
-    let outs = sweep::execute(&jobs, n_workers);
-
-    let mut table = Table::new(&[
-        "device",
-        "trace",
-        "mode",
-        "ops",
-        "mean ns",
-        "p50 ns",
-        "p95 ns",
-        "p99 ns",
-        "p99.9 ns",
-        "stall us",
-    ]);
-    let mut raw = Vec::new();
-    for (job, out) in jobs.iter().zip(outs.iter()) {
-        let r = out.replay.as_ref().expect("replay output").clone();
-        let src = job.workload.label();
-        table.row_owned(vec![
-            job.device.name().to_string(),
-            src.clone(),
-            r.mode.name().to_string(),
-            r.ops().to_string(),
-            format!("{:.1}", r.latency.mean_ns()),
-            format!("{:.1}", r.latency.p50_ns()),
-            format!("{:.1}", r.latency.p95_ns()),
-            format!("{:.1}", r.latency.p99_ns()),
-            format!("{:.1}", r.latency.p999_ns()),
-            format!("{:.1}", to_us(r.stall_ticks)),
-        ]);
-        raw.push((job.device, src, r));
-    }
-    (table, raw)
+        ])
+        .expand();
+    single_section_campaign(
+        "replay",
+        SectionKind::Replay,
+        fig_heading("replay"),
+        scale.quick,
+        jobs,
+        n_workers,
+    )
 }
 
 /// Member counts the pool bandwidth-scaling sweep walks
 /// (`--experiment pool`).
 pub const POOL_SCALING: [usize; 3] = [1, 2, 4];
 
-/// The memory-pool campaign's report: bandwidth-scaling and tiering
-/// tables plus the raw numbers the shape tests assert on.
-pub struct PoolCampaignReport {
-    /// `(heading, rendered table)` sections in campaign order.
-    pub sections: Vec<(String, Table)>,
-    /// `(row label, member count, triad MB/s)` — member count 0 is the
-    /// bare (non-pooled) cxl-dram baseline.
-    pub bandwidth: Vec<(String, usize, f64)>,
-    /// `(row label, replay result, promotions)` for the tiering rows.
-    pub tiering: Vec<(String, ReplayResult, f64)>,
-}
-
-/// Pool campaign (serial, Table I): see [`pool_campaign_cfg`].
-pub fn pool_campaign(scale: ExpScale) -> PoolCampaignReport {
-    pool_campaign_cfg(&presets::table1(), scale, 1)
-}
-
-/// `--experiment pool`: the memory-pool campaign on the sweep engine.
-///
-/// Two parts, one job list:
-///
-/// 1. **Bandwidth scaling** — the Fig-3 stream workload at `mlp = 16`
-///    on a bare cxl-dram and on line-interleaved homogeneous pools of
-///    1/2/4 cxl-dram members. A single member is bank-occupancy-bound
-///    on sequential lines; the stripe spreads consecutive lines across
-///    members (each with its own Home Agent link + DRAM), so triad
-///    bandwidth scales until the host's outstanding-request window and
-///    the shared MemBus bind.
-/// 2. **Tiering** — the zipfian open-loop replay
-///    ([`ExpScale::pool_replay_spec`]) on a tiered page-interleaved
-///    cxl-dram+cxl-ssd pool, the same pool without tiering, and the
-///    monolithic cached/uncached CXL-SSD, reporting response
-///    percentiles (p50/p95/p99/p99.9) plus the pool's promotion and
-///    migration counters.
-///
-/// Every job's seed derives from its sweep coordinates (all stream
-/// jobs share one stream; all replay jobs share one trace), so serial
-/// and parallel runs are bit-identical like every other figure sweep.
-pub fn pool_campaign_cfg(
-    base: &SimConfig,
-    scale: ExpScale,
-    n_workers: usize,
-) -> PoolCampaignReport {
+fn pool_campaign_build(base: &SimConfig, scale: ExpScale, n_workers: usize) -> CampaignRun {
     let mut jobs = Vec::new();
 
     // Part 1: bandwidth scaling.
@@ -563,96 +447,430 @@ pub fn pool_campaign_cfg(
             .expand(),
     );
 
-    let outs = sweep::execute(&jobs, n_workers);
+    let (outs, timing) = sweep::execute_timed(&jobs, n_workers);
 
-    // Part-1 table: the bare baseline row plus one row per POOL_SCALING
-    // entry, in job order (member count 0 = bare).
+    // Row labels ride as record tags: the renderers (live and
+    // artifact-loaded alike) print them without re-deriving campaign
+    // structure.
+    let mut bw_records = section_records("pool", "pool-bw", &jobs[..n_bw], &outs[..n_bw]);
     let mut bw_labels = vec!["cxl-dram (bare)".to_string()];
     bw_labels.extend(POOL_SCALING.iter().map(|n| format!("pool x{n}")));
-    let mut bw_members = vec![0usize];
-    bw_members.extend(POOL_SCALING.iter().copied());
-    let mut bw_table = Table::new(&["config", "members", "triad MB/s", "vs bare"]);
-    let mut bandwidth = Vec::new();
-    let bare_triad = outs[0]
-        .stream
-        .as_ref()
-        .expect("stream output")
-        .last()
-        .expect("four kernels")
-        .mbs;
-    for (i, out) in outs[..n_bw].iter().enumerate() {
-        let triad = out
-            .stream
-            .as_ref()
-            .expect("stream output")
-            .last()
-            .expect("four kernels")
-            .mbs;
-        bw_table.row_owned(vec![
-            bw_labels[i].clone(),
-            if bw_members[i] == 0 {
-                "-".to_string()
-            } else {
-                bw_members[i].to_string()
-            },
-            format!("{triad:.1}"),
-            format!("{:.2}x", triad / bare_triad),
-        ]);
-        bandwidth.push((bw_labels[i].clone(), bw_members[i], triad));
+    let mut bw_members = vec!["-".to_string()];
+    bw_members.extend(POOL_SCALING.iter().map(|n| n.to_string()));
+    for (i, r) in bw_records.iter_mut().enumerate() {
+        r.tags.push(("row_label".into(), bw_labels[i].clone()));
+        r.tags.push(("members".into(), bw_members[i].clone()));
     }
 
-    // Part-2 table.
+    let mut tier_records = section_records("pool", "pool-tier", &jobs[n_bw..], &outs[n_bw..]);
+    // Re-index: section_records numbered them relative to the slice
+    // start already (enumerate over the slice), so indexes are 0-based
+    // per section as required.
     let tier_labels = ["pool tiered", "pool flat", "cxl-ssd-cache", "cxl-ssd"];
-    let mut tier_table = Table::new(&[
-        "config",
-        "ops",
-        "p50 ns",
-        "p95 ns",
-        "p99 ns",
-        "p99.9 ns",
-        "promotions",
-        "migrated KB",
-    ]);
-    let mut tiering = Vec::new();
-    for (i, out) in outs[n_bw..].iter().enumerate() {
-        let r = out.replay.as_ref().expect("replay output").clone();
-        let kv_of = |key: &str| -> f64 {
-            out.device_kv
-                .iter()
-                .find(|(k, _)| k == key)
-                .map(|(_, v)| *v)
-                .unwrap_or(0.0)
-        };
-        let promotions = kv_of("tier.promotions");
-        tier_table.row_owned(vec![
-            tier_labels[i].to_string(),
-            r.ops().to_string(),
-            format!("{:.1}", r.latency.p50_ns()),
-            format!("{:.1}", r.latency.p95_ns()),
-            format!("{:.1}", r.latency.p99_ns()),
-            format!("{:.1}", r.latency.p999_ns()),
-            format!("{promotions:.0}"),
-            format!("{:.0}", kv_of("tier.migrated_kb")),
-        ]);
-        tiering.push((tier_labels[i].to_string(), r, promotions));
+    for (i, r) in tier_records.iter_mut().enumerate() {
+        r.tags.push(("row_label".into(), tier_labels[i].to_string()));
     }
 
-    let sections = vec![
-        (
-            "Pool bandwidth scaling: stream triad at mlp=16, \
-             line-interleaved cxl-dram pools"
-                .to_string(),
-            bw_table,
+    let mut campaign = Campaign::new("pool", scale.quick);
+    campaign.sections.push(Section {
+        id: "pool-bw".into(),
+        kind: SectionKind::PoolBandwidth,
+        heading: "Pool bandwidth scaling: stream triad at mlp=16, \
+                  line-interleaved cxl-dram pools"
+            .into(),
+        records: bw_records,
+    });
+    campaign.sections.push(Section {
+        id: "pool-tier".into(),
+        kind: SectionKind::PoolTiering,
+        heading: format!(
+            "Pool tiering: zipfian {}-loop replay, page-interleaved \
+             cxl-dram+cxl-ssd pool vs monolithic CXL-SSD",
+            mode.name()
         ),
-        (
-            format!(
-                "Pool tiering: zipfian {}-loop replay, page-interleaved \
-                 cxl-dram+cxl-ssd pool vs monolithic CXL-SSD",
-                mode.name()
-            ),
-            tier_table,
-        ),
-    ];
+        records: tier_records,
+    });
+    CampaignRun {
+        campaign,
+        timing,
+        summary: None,
+    }
+}
+
+/// Figs 3-6 plus the §III-C policy sweep as ONE job list drained by
+/// `n_workers` threads — the scaling path for full experiment
+/// campaigns (25 jobs; a multi-core host overlaps them).
+fn all_campaign(base: &SimConfig, scale: ExpScale, n_workers: usize) -> CampaignRun {
+    let fig_spec = SweepSpec::new(base.clone())
+        .devices(FIG_DEVICES.to_vec())
+        .workloads(vec![
+            scale.stream_spec(),
+            scale.membench_spec(),
+            scale.viper_spec(216),
+            scale.viper_spec(532),
+        ]);
+    let pol_spec = SweepSpec::new(base.clone())
+        .devices(vec![DeviceKind::CxlSsdCached])
+        .workloads(vec![scale.policy_viper_spec(216)])
+        .policies(PolicyKind::ALL.iter().map(|&p| Some(p)).collect());
+
+    let mut jobs = fig_spec.expand();
+    let n_fig_jobs = jobs.len();
+    jobs.extend(pol_spec.expand());
+    let (outs, timing) = sweep::execute_timed(&jobs, n_workers);
+
+    // Slice the one job list back into per-figure sections, preserving
+    // job order within each (device-major — the figure row order).
+    let select = |kind: WorkloadKind| -> (Vec<&RunJob>, Vec<&RunOutput>) {
+        let mut js = Vec::new();
+        let mut os = Vec::new();
+        for (job, out) in jobs[..n_fig_jobs].iter().zip(outs[..n_fig_jobs].iter()) {
+            if job.workload.kind() == kind {
+                js.push(job);
+                os.push(out);
+            }
+        }
+        (js, os)
+    };
+    let section_for = |id: &str, kind: SectionKind, wl: WorkloadKind| -> Section {
+        let (js, os) = select(wl);
+        Section {
+            id: id.to_string(),
+            kind,
+            heading: fig_heading(id).to_string(),
+            records: js
+                .iter()
+                .zip(os.iter())
+                .enumerate()
+                .map(|(i, (job, out))| results::record_from_job("all", id, i, job, out))
+                .collect(),
+        }
+    };
+
+    let mut campaign = Campaign::new("all", scale.quick);
+    campaign
+        .sections
+        .push(section_for("fig3", SectionKind::Stream, WorkloadKind::Stream));
+    campaign
+        .sections
+        .push(section_for("fig4", SectionKind::Membench, WorkloadKind::Membench));
+    campaign
+        .sections
+        .push(section_for("fig5", SectionKind::Viper, WorkloadKind::Viper216));
+    campaign
+        .sections
+        .push(section_for("fig6", SectionKind::Viper, WorkloadKind::Viper532));
+    campaign.sections.push(Section {
+        id: "policies".into(),
+        kind: SectionKind::Policy,
+        heading: fig_heading("policies").to_string(),
+        records: section_records("all", "policies", &jobs[n_fig_jobs..], &outs[n_fig_jobs..]),
+    });
+
+    CampaignRun {
+        campaign,
+        timing,
+        summary: Some(sweep::summary_table(&jobs, &outs)),
+    }
+}
+
+// ------------------------------------------------- raw-tuple extraction
+
+fn device_of(r: &RunRecord) -> DeviceKind {
+    DeviceKind::parse(&r.device).expect("records carry canonical device names")
+}
+
+fn stream_raw(records: &[RunRecord]) -> Vec<(DeviceKind, Vec<f64>)> {
+    records
+        .iter()
+        .map(|r| {
+            let mbs = ["copy", "scale", "add", "triad"]
+                .iter()
+                .map(|k| r.metric_or(&format!("stream.{k}_mbs"), f64::NAN))
+                .collect();
+            (device_of(r), mbs)
+        })
+        .collect()
+}
+
+fn membench_raw(records: &[RunRecord]) -> Vec<(DeviceKind, f64)> {
+    records
+        .iter()
+        .map(|r| (device_of(r), r.metric_or("membench.mean_ns", f64::NAN)))
+        .collect()
+}
+
+fn viper_raw(records: &[RunRecord]) -> Vec<(DeviceKind, Vec<(String, f64)>)> {
+    records
+        .iter()
+        .map(|r| {
+            let kv = r
+                .metrics
+                .iter()
+                .filter_map(|(k, v)| {
+                    k.strip_prefix("viper.")
+                        .and_then(|rest| rest.strip_suffix("_qps"))
+                        .filter(|op| *op != "aggregate")
+                        .map(|op| (op.to_string(), *v))
+                })
+                .collect();
+            (device_of(r), kv)
+        })
+        .collect()
+}
+
+fn policy_raw(records: &[RunRecord]) -> Vec<(PolicyKind, f64, f64)> {
+    records
+        .iter()
+        .map(|r| {
+            (
+                PolicyKind::parse(&r.policy).expect("policy sweep records carry policy names"),
+                r.metric_or("cache_hit_rate", 0.0),
+                r.metric_or("viper.aggregate_qps", f64::NAN),
+            )
+        })
+        .collect()
+}
+
+fn mlp_raw(records: &[RunRecord]) -> Vec<(usize, DeviceKind, f64)> {
+    // Device-major tuples (the bench's historical order), regardless of
+    // the mlp-major record order; the axes come from the same pivot the
+    // table renderer uses.
+    let (devices, mlps) = report::mlp_axes(records);
+    let mut raw = Vec::new();
+    for device in &devices {
+        for &mlp in &mlps {
+            let r = records
+                .iter()
+                .find(|r| &r.device == device && r.mlp == mlp)
+                .expect("mlp sweep is a full cross product");
+            raw.push((mlp, device_of(r), r.metric_or("stream.triad_mbs", f64::NAN)));
+        }
+    }
+    raw
+}
+
+/// Rebuild a [`ReplayResult`] from a replay record (the record's
+/// histogram *is* the response-latency histogram, so percentiles are
+/// bit-identical to the live run's).
+fn replay_result_of(r: &RunRecord) -> ReplayResult {
+    ReplayResult {
+        mode: if r.tag("mode") == Some("closed") {
+            ReplayMode::Closed
+        } else {
+            ReplayMode::Open
+        },
+        mlp: r.mlp,
+        reads: r.metric_or("replay.reads", 0.0) as u64,
+        writes: r.metric_or("replay.writes", 0.0) as u64,
+        sim_ticks: r.sim_ticks,
+        latency: HistogramBox(Box::new(r.latency.clone())),
+        stall_ticks: r.metric_or("replay.stall_ticks", 0.0) as u64,
+    }
+}
+
+fn replay_raw(records: &[RunRecord]) -> Vec<(DeviceKind, String, ReplayResult)> {
+    records
+        .iter()
+        .map(|r| (device_of(r), r.workload.clone(), replay_result_of(r)))
+        .collect()
+}
+
+// ------------------------------------------------------------- figures
+
+/// Fig 3: stream bandwidth across the five devices (serial, Table I).
+pub fn fig3_bandwidth(scale: ExpScale) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
+    fig3_bandwidth_cfg(&presets::table1(), scale, 1)
+}
+
+/// Fig 3 on the sweep engine: caller-supplied base config (CLI
+/// `--config`/`--set`) and worker count.
+pub fn fig3_bandwidth_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
+    let run = build_campaign("fig3", base, scale, n_workers).expect("known experiment");
+    let sec = &run.campaign.sections[0];
+    (report::section_table(sec), stream_raw(&sec.records))
+}
+
+/// Fig 4: membench random-read latency across the five devices (serial,
+/// Table I).
+pub fn fig4_latency(scale: ExpScale) -> (Table, Vec<(DeviceKind, f64)>) {
+    fig4_latency_cfg(&presets::table1(), scale, 1)
+}
+
+/// Fig 4 on the sweep engine: caller-supplied base config and workers.
+pub fn fig4_latency_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(DeviceKind, f64)>) {
+    let run = build_campaign("fig4", base, scale, n_workers).expect("known experiment");
+    let sec = &run.campaign.sections[0];
+    (report::section_table(sec), membench_raw(&sec.records))
+}
+
+/// Figs 5/6: Viper KV QPS per operation across the five devices
+/// (serial, Table I).
+pub fn fig56_viper(
+    record_bytes: u64,
+    scale: ExpScale,
+) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
+    fig56_viper_cfg(&presets::table1(), record_bytes, scale, 1)
+}
+
+/// Figs 5/6 on the sweep engine: caller-supplied base config + workers.
+pub fn fig56_viper_cfg(
+    base: &SimConfig,
+    record_bytes: u64,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
+    let exp = if record_bytes == 532 { "fig6" } else { "fig5" };
+    let run = build_campaign(exp, base, scale, n_workers).expect("known experiment");
+    let sec = &run.campaign.sections[0];
+    (report::section_table(sec), viper_raw(&sec.records))
+}
+
+/// MLP sweep: stream triad bandwidth per device as the requester's
+/// outstanding-request window grows (serial, Table I). Shows bandwidth
+/// saturating on link credits / banks / channels — the figure the
+/// synchronous one-at-a-time device API could not produce.
+pub fn mlp_sweep(scale: ExpScale) -> (Table, Vec<(usize, DeviceKind, f64)>) {
+    mlp_sweep_cfg(&presets::table1(), scale, 1)
+}
+
+/// MLP sweep on the sweep engine: caller-supplied base config + workers.
+///
+/// Jobs are the cross product mlp x device over the Fig-3 stream
+/// workload; rows are devices, columns the [`MLP_SWEEP`] window sizes,
+/// cells the triad-kernel bandwidth in MB/s. Raw tuples are
+/// `(mlp, device, triad_mbs)`.
+pub fn mlp_sweep_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(usize, DeviceKind, f64)>) {
+    let run = build_campaign("mlp", base, scale, n_workers).expect("known experiment");
+    let sec = &run.campaign.sections[0];
+    (report::section_table(sec), mlp_raw(&sec.records))
+}
+
+/// §III-C: cache replacement policy sweep on the cached CXL-SSD
+/// (serial, Table I).
+pub fn policy_sweep(record_bytes: u64, scale: ExpScale) -> (Table, Vec<(PolicyKind, f64, f64)>) {
+    policy_sweep_cfg(&presets::table1(), record_bytes, scale, 1)
+}
+
+/// §III-C on the sweep engine: caller-supplied base config + workers.
+pub fn policy_sweep_cfg(
+    base: &SimConfig,
+    record_bytes: u64,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(PolicyKind, f64, f64)>) {
+    let run = policy_campaign(base, scale, record_bytes, n_workers);
+    let sec = &run.campaign.sections[0];
+    (report::section_table(sec), policy_raw(&sec.records))
+}
+
+/// Replay campaign (serial, Table I): see [`replay_campaign_cfg`].
+pub fn replay_campaign(scale: ExpScale) -> (Table, Vec<(DeviceKind, String, ReplayResult)>) {
+    replay_campaign_cfg(&presets::table1(), scale, 1)
+}
+
+/// `--experiment replay`: the trace-driven campaign on the sweep engine.
+///
+/// Two streams — a synthetic zipfian hotspot and a device stream
+/// captured live from a Viper run on the cached CXL-SSD — replayed
+/// against all five devices (10 jobs), reporting per-request response
+/// latency percentiles (p50/p95/p99/p99.9). The pacing mode follows
+/// `base.replay_closed` (CLI `--closed`); synthetic jobs materialize
+/// from coordinate-derived seeds, so parallel output is bit-identical
+/// to serial like every other figure sweep.
+pub fn replay_campaign_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> (Table, Vec<(DeviceKind, String, ReplayResult)>) {
+    let run = build_campaign("replay", base, scale, n_workers).expect("known experiment");
+    let sec = &run.campaign.sections[0];
+    (report::section_table(sec), replay_raw(&sec.records))
+}
+
+/// The memory-pool campaign's report: bandwidth-scaling and tiering
+/// tables plus the raw numbers the shape tests assert on.
+pub struct PoolCampaignReport {
+    /// `(heading, rendered table)` sections in campaign order.
+    pub sections: Vec<(String, Table)>,
+    /// `(row label, member count, triad MB/s)` — member count 0 is the
+    /// bare (non-pooled) cxl-dram baseline.
+    pub bandwidth: Vec<(String, usize, f64)>,
+    /// `(row label, replay result, promotions)` for the tiering rows.
+    pub tiering: Vec<(String, ReplayResult, f64)>,
+}
+
+/// Pool campaign (serial, Table I): see [`pool_campaign_cfg`].
+pub fn pool_campaign(scale: ExpScale) -> PoolCampaignReport {
+    pool_campaign_cfg(&presets::table1(), scale, 1)
+}
+
+/// `--experiment pool`: the memory-pool campaign on the sweep engine.
+///
+/// Two parts, one job list:
+///
+/// 1. **Bandwidth scaling** — the Fig-3 stream workload at `mlp = 16`
+///    on a bare cxl-dram and on line-interleaved homogeneous pools of
+///    1/2/4 cxl-dram members. A single member is bank-occupancy-bound
+///    on sequential lines; the stripe spreads consecutive lines across
+///    members (each with its own Home Agent link + DRAM), so triad
+///    bandwidth scales until the host's outstanding-request window and
+///    the shared MemBus bind.
+/// 2. **Tiering** — the zipfian open-loop replay
+///    ([`ExpScale::pool_replay_spec`]) on a tiered page-interleaved
+///    cxl-dram+cxl-ssd pool, the same pool without tiering, and the
+///    monolithic cached/uncached CXL-SSD, reporting response
+///    percentiles (p50/p95/p99/p99.9) plus the pool's promotion and
+///    migration counters.
+///
+/// Every job's seed derives from its sweep coordinates (all stream
+/// jobs share one stream; all replay jobs share one trace), so serial
+/// and parallel runs are bit-identical like every other figure sweep.
+pub fn pool_campaign_cfg(
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> PoolCampaignReport {
+    let run = build_campaign("pool", base, scale, n_workers).expect("known experiment");
+    let sections = report::campaign_sections(&run.campaign);
+    let bw = &run.campaign.sections[0].records;
+    let bandwidth = bw
+        .iter()
+        .map(|r| {
+            let members = r
+                .tag("members")
+                .and_then(|m| m.parse::<usize>().ok())
+                .unwrap_or(0);
+            (
+                r.tag("row_label").unwrap_or(&r.device).to_string(),
+                members,
+                r.metric_or("stream.triad_mbs", f64::NAN),
+            )
+        })
+        .collect();
+    let tiering = run.campaign.sections[1]
+        .records
+        .iter()
+        .map(|r| {
+            (
+                r.tag("row_label").unwrap_or(&r.device).to_string(),
+                replay_result_of(r),
+                r.metric_or("tier.promotions", 0.0),
+            )
+        })
+        .collect();
     PoolCampaignReport {
         sections,
         bandwidth,
@@ -677,62 +895,16 @@ pub fn all_figures(scale: ExpScale, n_workers: usize) -> AllFiguresReport {
 
 /// The combined campaign over a caller-supplied base config.
 pub fn all_figures_cfg(base: &SimConfig, scale: ExpScale, n_workers: usize) -> AllFiguresReport {
-    let base = base.clone();
-    let fig_spec = SweepSpec::new(base.clone())
-        .devices(FIG_DEVICES.to_vec())
-        .workloads(vec![
-            scale.stream_spec(),
-            scale.membench_spec(),
-            scale.viper_spec(216),
-            scale.viper_spec(532),
-        ]);
-    let pol_spec = SweepSpec::new(base)
-        .devices(vec![DeviceKind::CxlSsdCached])
-        .workloads(vec![scale.policy_viper_spec(216)])
-        .policies(PolicyKind::ALL.iter().map(|&p| Some(p)).collect());
-
-    let mut jobs = fig_spec.expand();
-    let n_fig_jobs = jobs.len();
-    jobs.extend(pol_spec.expand());
-    let (outs, timing) = sweep::execute_timed(&jobs, n_workers);
-
-    let by_kind = |kind: WorkloadKind| -> Vec<&RunOutput> {
-        outs[..n_fig_jobs]
-            .iter()
-            .filter(|o| o.workload == kind)
-            .collect()
-    };
-
-    let mut sections = Vec::new();
-    sections.push((
-        "Fig 3: stream bandwidth (MB/s)".to_string(),
-        stream_figure(&by_kind(WorkloadKind::Stream)).0,
-    ));
-    sections.push((
-        "Fig 4: membench random-read latency (ns)".to_string(),
-        membench_figure(&by_kind(WorkloadKind::Membench)).0,
-    ));
-    sections.push((
-        "Fig 5: Viper QPS, 216B records".to_string(),
-        viper_figure(&by_kind(WorkloadKind::Viper216)).0,
-    ));
-    sections.push((
-        "Fig 6: Viper QPS, 532B records".to_string(),
-        viper_figure(&by_kind(WorkloadKind::Viper532)).0,
-    ));
-    sections.push((
-        "SIII-C: cache policy sweep (Viper 216B)".to_string(),
-        policy_figure(
-            &PolicyKind::ALL,
-            &outs[n_fig_jobs..].iter().collect::<Vec<_>>(),
-        )
-        .0,
-    ));
+    let run = build_campaign("all", base, scale, n_workers).expect("known experiment");
+    let mut sections = report::campaign_sections(&run.campaign);
     sections.push((
         "sweep summary (per job)".to_string(),
-        sweep::summary_table(&jobs, &outs),
+        run.summary.expect("all campaign builds a summary"),
     ));
-    AllFiguresReport { sections, timing }
+    AllFiguresReport {
+        sections,
+        timing: run.timing,
+    }
 }
 
 // ------------------------------------------------------- ablations etc.
@@ -880,30 +1052,29 @@ pub fn run_report(device: DeviceKind, workload: WorkloadKind, cfg: &SimConfig) -
     run_spec_report(device, &WorkloadSpec::default_for(workload), cfg)
 }
 
-/// `run_report` over a fully parametrized spec (also the `run --trace`
-/// path, where the workload is a replay of a loaded trace).
-pub fn run_spec_report(
+/// Run one spec and return its artifact record plus the human extras
+/// (workload-specific block + host time; both stay out of the record,
+/// which must hold only deterministic data). `section` is the artifact
+/// section id the record will live in (the CLI uses one single-record
+/// section per device, so re-rendered tables match the live ones).
+pub fn run_spec_outcome(
     device: DeviceKind,
     spec: &WorkloadSpec,
     cfg: &SimConfig,
-) -> (Table, String) {
+    section: &str,
+) -> (RunRecord, String) {
     let (out, _) = sweep::run_spec(device, spec, cfg, false);
-    let mut t = Table::new(&["metric", "value"]);
-    t.row(&["device".into(), device.name().into()]);
-    t.row(&["workload".into(), spec.label()]);
-    t.row(&["sim time (ms)".into(), format!("{:.3}", out.sim_ticks as f64 / 1e9)]);
-    t.row(&["host time (s)".into(), format!("{:.3}", out.host_seconds)]);
-    t.row(&["loads".into(), out.system.loads.to_string()]);
-    t.row(&["stores".into(), out.system.stores.to_string()]);
-    t.row(&["device reads".into(), out.system.device_reads.to_string()]);
-    t.row(&["device writes".into(), out.system.device_writes.to_string()]);
-    t.row(&[
-        "device mean lat (ns)".into(),
-        format!("{:.1}", out.system.device_latency.mean_ns()),
-    ]);
-    for (k, v) in &out.device_kv {
-        t.row(&[k.clone(), format!("{v:.4}")]);
-    }
+    let record = results::record_from_parts(
+        "run",
+        section,
+        0,
+        device.name(),
+        &spec.label(),
+        "-",
+        cfg,
+        &out,
+    );
+
     let mut extra = String::new();
     if let Some(rs) = &out.stream {
         let mut st = Table::new(&["kernel", "MB/s"]);
@@ -928,22 +1099,37 @@ pub fn run_spec_report(
     if let Some(r) = &out.replay {
         extra = format!(
             "replay [{} loop, mlp={}]: {} ops ({} reads / {} writes)\n\
-             response latency: mean {:.1} ns, p50 {:.1}, p95 {:.1}, \
-             p99 {:.1}, p99.9 {:.1}; window stall {:.1} us\n",
+             response latency: {}; window stall {:.1} us\n",
             r.mode.name(),
             r.mlp,
             r.ops(),
             r.reads,
             r.writes,
-            r.latency.mean_ns(),
-            r.latency.p50_ns(),
-            r.latency.p95_ns(),
-            r.latency.p99_ns(),
-            r.latency.p999_ns(),
-            to_us(r.stall_ticks),
+            crate::stats::latency_summary(&r.latency),
+            crate::sim::to_us(r.stall_ticks),
         );
     }
-    (t, extra)
+    extra.push_str(&format!("host time: {:.3} s\n", out.host_seconds));
+    (record, extra)
+}
+
+/// `run_report` over a fully parametrized spec (also the `run --trace`
+/// path, where the workload is a replay of a loaded trace). The table
+/// is the record's generic metric/value rendering — identical to what
+/// `report --figures` re-renders from a `run --out` artifact.
+pub fn run_spec_report(
+    device: DeviceKind,
+    spec: &WorkloadSpec,
+    cfg: &SimConfig,
+) -> (Table, String) {
+    let (record, extra) = run_spec_outcome(device, spec, cfg, "run");
+    let section = Section {
+        id: "run".into(),
+        kind: SectionKind::Run,
+        heading: String::new(),
+        records: vec![record],
+    };
+    (report::section_table(&section), extra)
 }
 
 #[cfg(test)]
@@ -986,5 +1172,42 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn build_campaign_rejects_non_sweep_experiments() {
+        let cfg = presets::small_test();
+        assert!(build_campaign("mshr", &cfg, ExpScale::quick(), 1).is_err());
+        assert!(build_campaign("fastmode", &cfg, ExpScale::quick(), 1).is_err());
+        assert!(build_campaign("bogus", &cfg, ExpScale::quick(), 1).is_err());
+    }
+
+    #[test]
+    fn campaign_records_carry_coordinates_and_config() {
+        let cfg = presets::small_test();
+        let run = build_campaign("fig4", &cfg, ExpScale::quick(), 2).unwrap();
+        let sec = &run.campaign.sections[0];
+        assert_eq!(sec.records.len(), 5);
+        for (i, r) in sec.records.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.device, FIG_DEVICES[i].name());
+            assert_eq!(r.experiment, "fig4");
+            assert!(r.metric("membench.mean_ns").is_some());
+            assert!(r.config.iter().any(|(k, _)| k == "sys.seed"));
+            assert!(r.latency.count() > 0);
+        }
+        // Paired comparison: every device job replays the same stream,
+        // so all records carry the same coordinate-derived seed.
+        assert!(sec.records.iter().all(|r| r.seed == sec.records[0].seed));
+    }
+
+    #[test]
+    fn run_spec_report_renders_record_table() {
+        let cfg = presets::small_test();
+        let (table, extra) = run_report(DeviceKind::Pmem, WorkloadKind::Membench, &cfg);
+        let s = table.render();
+        assert!(s.contains("pmem"));
+        assert!(s.contains("system.loads"));
+        assert!(extra.contains("host time"));
     }
 }

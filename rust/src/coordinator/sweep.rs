@@ -23,6 +23,12 @@
 //! policies) on the **same operation stream**, so jobs that differ only
 //! by device/policy must replay identical workload randomness - the
 //! paired-comparison discipline the figures rely on.
+//!
+//! The same coordinate discipline carries into run artifacts
+//! ([`crate::results`]): records are keyed by a job's position in
+//! [`SweepSpec::expand`] order (never completion order) and hold no
+//! wall-clock fields, so `--out` directories are byte-identical across
+//! worker counts.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

@@ -15,11 +15,24 @@
 //!   subsystem — CXL switch fan-out, interleaved multi-device pools and
 //!   hot-page tiering ([`pool`]) — host CPU +
 //!   cache hierarchy ([`cpu`]), workloads ([`workloads`]), orchestration
-//!   plus the parallel sweep engine ([`coordinator`]) and the CLI
+//!   plus the parallel sweep engine ([`coordinator`]), structured run
+//!   artifacts and the report/diff layer ([`results`]) and the CLI
 //!   ([`cli`]).
 //! - **L2/L1 (python/, build-time)** — JAX surrogate models + Pallas
 //!   timing kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from
 //!   rust through [`runtime`] / [`surrogate`] in fast mode.
+//!
+//! Cross-cutting invariants (each module's docs go deeper):
+//!
+//! - **Determinism.** 1 tick = 1 ps integer arithmetic throughout; no
+//!   wall clock or thread identity ever feeds a simulated number. Sweep
+//!   seeds derive from sweep *coordinates* ([`coordinator::sweep`]), so
+//!   parallel campaigns are bit-identical to serial ones, and run
+//!   artifacts ([`results`]) are byte-identical across worker counts.
+//! - **Offline build.** The only dependency is the vendored `anyhow`
+//!   subset; serde, rayon, criterion and proptest are replaced by
+//!   hand-rolled equivalents ([`config`], [`results::json`],
+//!   [`testing`]).
 
 pub mod cache;
 pub mod cli;
@@ -33,6 +46,7 @@ pub mod fasthash;
 pub mod mem;
 pub mod pmem;
 pub mod pool;
+pub mod results;
 pub mod runtime;
 pub mod sim;
 pub mod ssd;

@@ -1,0 +1,519 @@
+//! Minimal JSON reader/writer for run artifacts (no serde offline).
+//!
+//! Mirrors the philosophy of `config/parser.rs`: implement exactly the
+//! subset the artifacts need, deterministically. The writer emits a
+//! canonical form — objects keep insertion order, floats print in
+//! Rust's shortest round-trip form, indentation is fixed at two
+//! spaces — so identical records always serialize to identical bytes
+//! (the property the byte-identical artifact-directory tests rely on).
+//! The parser is a strict recursive-descent reader of that subset plus
+//! ordinary interchange JSON: malformed input is a hard error with a
+//! byte offset, never a silently skipped value.
+
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value. Unsigned integers get their own arm ([`Json::UInt`],
+/// `u128`-wide so histogram tick sums never truncate); everything with
+/// a decimal point or exponent parses as [`Json::Float`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    UInt(u128),
+    Float(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Object as an association list: key order is preserved on both
+    /// write and parse (canonical bytes need a canonical order).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn str(s: impl AsRef<str>) -> Json {
+        Json::Str(s.as_ref().to_string())
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Required object field, as an error with context when absent.
+    pub fn field(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow!("missing field '{key}'"))
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Json::UInt(v) if *v <= u64::MAX as u128 => Ok(*v as u64),
+            other => bail!("expected u64, got {other:?}"),
+        }
+    }
+
+    pub fn as_u128(&self) -> Result<u128> {
+        match self {
+            Json::UInt(v) => Ok(*v),
+            other => bail!("expected unsigned integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Float(v) => Ok(*v),
+            Json::UInt(v) => Ok(*v as f64),
+            Json::Null => Ok(f64::NAN),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(items) => Ok(items),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&[(String, Json)]> {
+        match self {
+            Json::Obj(fields) => Ok(fields),
+            other => bail!("expected object, got {other:?}"),
+        }
+    }
+
+    /// Canonical pretty serialization (two-space indent, `\n` endings,
+    /// insertion-ordered keys). Deterministic: equal values produce
+    /// equal bytes.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        self.write_value(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_value(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::UInt(v) => {
+                let _ = write!(out, "{v}");
+            }
+            Json::Float(v) => write_f64(out, *v),
+            Json::Str(s) => write_string(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    item.write_value(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    write_string(out, k);
+                    out.push_str(": ");
+                    v.write_value(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a JSON document (one value, optionally surrounded by
+    /// whitespace). Errors carry the byte offset of the problem.
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing data at byte {pos}");
+        }
+        Ok(value)
+    }
+}
+
+/// Maximum container nesting. Artifacts nest four levels deep; the cap
+/// turns a pathological/corrupt document into the documented hard error
+/// instead of a recursion stack overflow.
+const MAX_DEPTH: usize = 128;
+
+fn push_indent(out: &mut String, levels: usize) {
+    for _ in 0..levels {
+        out.push_str("  ");
+    }
+}
+
+/// Floats print in Rust's shortest-round-trip `Display` form, with a
+/// trailing `.0` forced onto integral values so the reader can tell
+/// them apart from [`Json::UInt`]s. Non-finite values (no JSON
+/// spelling) serialize as `null` and read back as NaN.
+fn write_f64(out: &mut String, v: f64) {
+    if !v.is_finite() {
+        out.push_str("null");
+        return;
+    }
+    let s = format!("{v}");
+    out.push_str(&s);
+    if !s.contains('.') && !s.contains('e') && !s.contains("inf") {
+        out.push_str(".0");
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, b: u8) -> Result<()> {
+    if *pos < bytes.len() && bytes[*pos] == b {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("expected '{}' at byte {}", b as char, *pos)
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    if depth > MAX_DEPTH {
+        bail!("nesting deeper than {MAX_DEPTH} at byte {}", *pos);
+    }
+    skip_ws(bytes, pos);
+    let Some(&b) = bytes.get(*pos) else {
+        bail!("unexpected end of input at byte {}", *pos);
+    };
+    match b {
+        b'n' => parse_keyword(bytes, pos, "null", Json::Null),
+        b't' => parse_keyword(bytes, pos, "true", Json::Bool(true)),
+        b'f' => parse_keyword(bytes, pos, "false", Json::Bool(false)),
+        b'"' => Ok(Json::Str(parse_string(bytes, pos)?)),
+        b'[' => parse_array(bytes, pos, depth),
+        b'{' => parse_object(bytes, pos, depth),
+        b'-' | b'0'..=b'9' => parse_number(bytes, pos),
+        other => bail!("unexpected byte '{}' at {}", other as char, *pos),
+    }
+}
+
+fn parse_keyword(bytes: &[u8], pos: &mut usize, word: &str, value: Json) -> Result<Json> {
+    if bytes[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(value)
+    } else {
+        bail!("bad keyword at byte {}", *pos)
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        let Some(&b) = bytes.get(*pos) else {
+            bail!("unterminated string at byte {}", *pos);
+        };
+        *pos += 1;
+        match b {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let Some(&esc) = bytes.get(*pos) else {
+                    bail!("unterminated escape at byte {}", *pos);
+                };
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = bytes
+                            .get(*pos..*pos + 4)
+                            .ok_or_else(|| anyhow!("truncated \\u escape at byte {}", *pos))?;
+                        let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)
+                            .map_err(|e| anyhow!("bad \\u escape at byte {}: {e}", *pos))?;
+                        *pos += 4;
+                        // Surrogates are not produced by our writer;
+                        // reject rather than emit replacement chars.
+                        let c = char::from_u32(code)
+                            .ok_or_else(|| anyhow!("invalid \\u code point at byte {}", *pos))?;
+                        out.push(c);
+                    }
+                    other => bail!("bad escape '\\{}' at byte {}", other as char, *pos),
+                }
+            }
+            _ => {
+                // Decode one UTF-8 scalar starting at the byte we just
+                // consumed (the document is a &str, so the sequence is
+                // valid; the length comes from the lead byte).
+                let start = *pos - 1;
+                let len = match b {
+                    0x00..=0x7F => 1,
+                    0xC0..=0xDF => 2,
+                    0xE0..=0xEF => 3,
+                    _ => 4,
+                };
+                let s = std::str::from_utf8(&bytes[start..start + len])
+                    .map_err(|e| anyhow!("invalid utf-8 at byte {start}: {e}"))?;
+                out.push_str(s);
+                *pos = start + len;
+            }
+        }
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    if bytes.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let mut is_float = false;
+    while let Some(&b) = bytes.get(*pos) {
+        match b {
+            b'0'..=b'9' => *pos += 1,
+            b'.' | b'e' | b'E' | b'+' | b'-' => {
+                is_float = true;
+                *pos += 1;
+            }
+            _ => break,
+        }
+    }
+    let raw = std::str::from_utf8(&bytes[start..*pos]).expect("ascii number");
+    if is_float || raw.starts_with('-') {
+        let v = raw
+            .parse::<f64>()
+            .map_err(|e| anyhow!("bad number '{raw}' at byte {start}: {e}"))?;
+        Ok(Json::Float(v))
+    } else {
+        let v = raw
+            .parse::<u128>()
+            .map_err(|e| anyhow!("bad integer '{raw}' at byte {start}: {e}"))?;
+        Ok(Json::UInt(v))
+    }
+}
+
+fn parse_array(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    expect(bytes, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos, depth + 1)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => {
+                *pos += 1;
+            }
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => bail!("expected ',' or ']' at byte {}", *pos),
+        }
+    }
+}
+
+fn parse_object(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    expect(bytes, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(fields));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        expect(bytes, pos, b':')?;
+        let value = parse_value(bytes, pos, depth + 1)?;
+        fields.push((key, value));
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => {
+                *pos += 1;
+            }
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            _ => bail!("expected ',' or '}}' at byte {}", *pos),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: &Json) {
+        let text = v.to_text();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(&back, v, "{text}");
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        roundtrip(&Json::Null);
+        roundtrip(&Json::Bool(true));
+        roundtrip(&Json::Bool(false));
+        roundtrip(&Json::UInt(0));
+        roundtrip(&Json::UInt(u128::MAX));
+        roundtrip(&Json::Float(0.5));
+        roundtrip(&Json::Float(1e-30));
+        roundtrip(&Json::str("hello"));
+    }
+
+    #[test]
+    fn integral_floats_stay_floats() {
+        let text = Json::Float(3.0).to_text();
+        assert_eq!(text.trim(), "3.0");
+        roundtrip(&Json::Float(3.0));
+    }
+
+    #[test]
+    fn nonfinite_floats_serialize_as_null() {
+        assert_eq!(Json::Float(f64::INFINITY).to_text().trim(), "null");
+        assert_eq!(Json::Float(f64::NAN).to_text().trim(), "null");
+        // Readers treat null-as-number as NaN.
+        assert!(Json::Null.as_f64().unwrap().is_nan());
+    }
+
+    #[test]
+    fn strings_escape_and_unescape() {
+        roundtrip(&Json::str("quote \" backslash \\ newline \n tab \t"));
+        roundtrip(&Json::str("unicode: µs → ∞"));
+        let parsed = Json::parse("\"\\u0041\\u00b5\"").unwrap();
+        assert_eq!(parsed, Json::str("Aµ"));
+    }
+
+    #[test]
+    fn containers_roundtrip_preserving_order() {
+        let v = Json::Obj(vec![
+            ("zeta".into(), Json::UInt(1)),
+            ("alpha".into(), Json::Arr(vec![Json::Float(1.5), Json::Null])),
+            ("empty_arr".into(), Json::Arr(vec![])),
+            ("empty_obj".into(), Json::Obj(vec![])),
+        ]);
+        roundtrip(&v);
+        // Key order survives the round trip (no sorting).
+        let back = Json::parse(&v.to_text()).unwrap();
+        let keys: Vec<_> = back.as_obj().unwrap().iter().map(|(k, _)| k.clone()).collect();
+        assert_eq!(keys, ["zeta", "alpha", "empty_arr", "empty_obj"]);
+    }
+
+    #[test]
+    fn canonical_bytes_are_stable() {
+        let v = Json::Obj(vec![("a".into(), Json::UInt(1))]);
+        assert_eq!(v.to_text(), v.to_text());
+        assert_eq!(v.to_text(), "{\n  \"a\": 1\n}\n");
+    }
+
+    #[test]
+    fn malformed_inputs_hard_error() {
+        for bad in [
+            "",
+            "{",
+            "[1,",
+            "{\"a\" 1}",
+            "tru",
+            "\"unterminated",
+            "1 2",
+            "{\"a\":1,}",
+            "nul",
+            "\"bad \\x escape\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_a_hard_error_not_a_crash() {
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "{err}");
+        // At the cap itself, parsing still works.
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        Json::parse(&ok).unwrap();
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers_parse_as_floats() {
+        assert_eq!(Json::parse("-3").unwrap(), Json::Float(-3.0));
+        assert_eq!(Json::parse("2.5e3").unwrap(), Json::Float(2500.0));
+        assert_eq!(Json::parse("7").unwrap(), Json::UInt(7));
+    }
+
+    #[test]
+    fn field_accessors_report_context() {
+        let v = Json::parse("{\"x\": 1}").unwrap();
+        assert_eq!(v.field("x").unwrap().as_u64().unwrap(), 1);
+        let err = v.field("y").unwrap_err().to_string();
+        assert!(err.contains("'y'"), "{err}");
+        assert!(v.field("x").unwrap().as_str().is_err());
+    }
+}

@@ -1,0 +1,743 @@
+//! Structured run artifacts: schema-versioned records of every sweep
+//! job, written to and re-loaded from artifact directories.
+//!
+//! The paper's contribution is an *evaluation tool*: its value is the
+//! latency/bandwidth/benchmark tables it produces. This module makes
+//! those results first-class data instead of terminal text — every
+//! `run` and `sweep` invocation can emit an artifact directory
+//! (`--out <dir>`) holding one [`RunRecord`] per job plus a campaign
+//! manifest, and the `report` subcommand re-renders figures, diffs two
+//! artifact sets and exports bench trajectories from the artifacts
+//! alone, without re-simulating.
+//!
+//! ## Invariants
+//!
+//! - **Schema-versioned.** Every file carries [`SCHEMA_VERSION`];
+//!   loading an artifact written by a different schema is a hard error
+//!   naming both versions, never a silent misread.
+//! - **Deterministic bytes.** Records are keyed by *sweep coordinate*
+//!   (section + index in expansion order), hold no wall-clock or
+//!   host-dependent fields, and serialize through the canonical
+//!   [`json`] writer — so a 1-worker and a 4-worker campaign emit
+//!   byte-identical artifact directories (locked by
+//!   `rust/tests/results_roundtrip.rs`).
+//! - **Exact round trip.** `parse(write(record)) == record`, including
+//!   the full latency histogram (sparse buckets + count/sum/min/max,
+//!   saturation bucket included) and the resolved config. Floats use
+//!   Rust's shortest round-trip form.
+//! - **Integrity-checked.** The campaign manifest stores a
+//!   [`content_checksum`] (built on [`crate::testing::mix64`] — the
+//!   same mixer as the sweep seed derivation) for every job file;
+//!   loading verifies them.
+//!
+//! ## Directory layout
+//!
+//! ```text
+//! <out>/campaign.json          manifest: experiment, sections, checksums
+//! <out>/jobs/<section>-<index>-<device>.json   one RunRecord per job
+//! ```
+
+pub mod json;
+pub mod report;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::sweep::RunJob;
+use crate::coordinator::RunOutput;
+use crate::stats::Histogram;
+use crate::testing::{mix64, mix_finalize};
+use json::Json;
+
+/// Artifact schema version; bump on any incompatible layout change.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// What kind of table a campaign section renders to — the dispatch key
+/// for [`report::section_table`]. Serialized by name in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SectionKind {
+    /// STREAM kernels per device (Fig 3).
+    Stream,
+    /// membench latency per device (Fig 4).
+    Membench,
+    /// Viper per-op QPS per device (Figs 5-6).
+    Viper,
+    /// Cache-policy sweep (§III-C).
+    Policy,
+    /// MLP × device triad-bandwidth pivot.
+    Mlp,
+    /// Trace-replay tail-latency campaign.
+    Replay,
+    /// Pool bandwidth-scaling rows.
+    PoolBandwidth,
+    /// Pool tiering rows.
+    PoolTiering,
+    /// Generic one-off `run` records (metric/value table).
+    Run,
+}
+
+impl SectionKind {
+    pub const ALL: [SectionKind; 9] = [
+        SectionKind::Stream,
+        SectionKind::Membench,
+        SectionKind::Viper,
+        SectionKind::Policy,
+        SectionKind::Mlp,
+        SectionKind::Replay,
+        SectionKind::PoolBandwidth,
+        SectionKind::PoolTiering,
+        SectionKind::Run,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SectionKind::Stream => "stream",
+            SectionKind::Membench => "membench",
+            SectionKind::Viper => "viper",
+            SectionKind::Policy => "policy",
+            SectionKind::Mlp => "mlp",
+            SectionKind::Replay => "replay",
+            SectionKind::PoolBandwidth => "pool-bandwidth",
+            SectionKind::PoolTiering => "pool-tiering",
+            SectionKind::Run => "run",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// Everything one job produced, as plain serializable data.
+///
+/// A record is identified by its sweep coordinate — `(section, index)`
+/// in the campaign's expansion order — plus the human coordinates
+/// (device, workload label, policy, mlp). `host_seconds` and other
+/// wall-clock fields are deliberately absent: artifacts must be
+/// bit-identical across worker counts and hosts.
+///
+/// Equality is NaN-tolerant on metric values (NaN == NaN): undefined
+/// ratios serialize as JSON `null` and read back as NaN, and a round
+/// trip must still compare equal. Non-finite metrics are normalized to
+/// NaN at construction ([`record_from_parts`]) for the same reason.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub experiment: String,
+    /// Campaign section id (e.g. `fig3`, `pool-bw`).
+    pub section: String,
+    /// Position within the section, in sweep-expansion order.
+    pub index: usize,
+    pub device: String,
+    /// Workload spec label (fully parametrized, e.g. `membench/2000ops`).
+    pub workload: String,
+    /// Cache-policy override name, `-` when none.
+    pub policy: String,
+    /// Outstanding-request window the job ran with (`sys.mlp`).
+    pub mlp: usize,
+    /// The coordinate-derived job seed (see
+    /// [`crate::coordinator::sweep::job_seed`]).
+    pub seed: u64,
+    /// Simulated duration in ticks.
+    pub sim_ticks: u64,
+    /// Free-form string metadata (`mode`, `row_label`, ...).
+    pub tags: Vec<(String, String)>,
+    /// The full resolved config, from the key registry
+    /// ([`crate::config::dump_kv`]); values re-parse with
+    /// `SimConfig::apply_override`.
+    pub config: Vec<(String, String)>,
+    /// Flattened numeric results: system counters, workload metrics,
+    /// latency percentiles and every device `stats_kv` entry.
+    pub metrics: Vec<(String, f64)>,
+    /// The job's primary latency histogram (replay response latency for
+    /// replay jobs, device read latency otherwise).
+    pub latency: Histogram,
+}
+
+impl PartialEq for RunRecord {
+    fn eq(&self, other: &Self) -> bool {
+        let metrics_eq = self.metrics.len() == other.metrics.len()
+            && self
+                .metrics
+                .iter()
+                .zip(other.metrics.iter())
+                .all(|((ka, va), (kb, vb))| {
+                    ka == kb && (va == vb || (va.is_nan() && vb.is_nan()))
+                });
+        metrics_eq
+            && self.experiment == other.experiment
+            && self.section == other.section
+            && self.index == other.index
+            && self.device == other.device
+            && self.workload == other.workload
+            && self.policy == other.policy
+            && self.mlp == other.mlp
+            && self.seed == other.seed
+            && self.sim_ticks == other.sim_ticks
+            && self.tags == other.tags
+            && self.config == other.config
+            && self.latency == other.latency
+    }
+}
+
+impl RunRecord {
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Metric with a default (matches the live renderers' `unwrap_or`).
+    pub fn metric_or(&self, name: &str, default: f64) -> f64 {
+        self.metric(name).unwrap_or(default)
+    }
+
+    pub fn tag(&self, name: &str) -> Option<&str> {
+        self.tags
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Artifact file name: keyed by sweep coordinate, not completion
+    /// order.
+    pub fn file_name(&self) -> String {
+        format!("{}-{:03}-{}.json", self.section, self.index, self.device)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pairs = |kv: &[(String, String)]| {
+            Json::Obj(kv.iter().map(|(k, v)| (k.clone(), Json::str(v))).collect())
+        };
+        let latency = Json::Obj(vec![
+            ("count".into(), Json::UInt(self.latency.count() as u128)),
+            ("sum".into(), Json::UInt(self.latency.sum())),
+            ("min".into(), Json::UInt(self.latency.raw_min() as u128)),
+            ("max".into(), Json::UInt(self.latency.max() as u128)),
+            (
+                "buckets".into(),
+                Json::Arr(
+                    self.latency
+                        .sparse_buckets()
+                        .into_iter()
+                        .map(|(i, c)| {
+                            Json::Arr(vec![Json::UInt(i as u128), Json::UInt(c as u128)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        Json::Obj(vec![
+            ("schema_version".into(), Json::UInt(SCHEMA_VERSION as u128)),
+            ("experiment".into(), Json::str(&self.experiment)),
+            ("section".into(), Json::str(&self.section)),
+            ("index".into(), Json::UInt(self.index as u128)),
+            ("device".into(), Json::str(&self.device)),
+            ("workload".into(), Json::str(&self.workload)),
+            ("policy".into(), Json::str(&self.policy)),
+            ("mlp".into(), Json::UInt(self.mlp as u128)),
+            ("seed".into(), Json::UInt(self.seed as u128)),
+            ("sim_ticks".into(), Json::UInt(self.sim_ticks as u128)),
+            ("tags".into(), pairs(&self.tags)),
+            ("config".into(), pairs(&self.config)),
+            (
+                "metrics".into(),
+                Json::Obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Float(*v)))
+                        .collect(),
+                ),
+            ),
+            ("latency".into(), latency),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunRecord> {
+        let version = v.field("schema_version")?.as_u64()?;
+        if version != SCHEMA_VERSION {
+            bail!(
+                "record schema v{version}, this binary reads v{SCHEMA_VERSION} \
+                 (re-run the sweep to regenerate artifacts)"
+            );
+        }
+        let str_pairs = |field: &str| -> Result<Vec<(String, String)>> {
+            v.field(field)?
+                .as_obj()?
+                .iter()
+                .map(|(k, val)| Ok((k.clone(), val.as_str()?.to_string())))
+                .collect()
+        };
+        let lat = v.field("latency")?;
+        let mut sparse = Vec::new();
+        for pair in lat.field("buckets")?.as_arr()? {
+            let pair = pair.as_arr()?;
+            if pair.len() != 2 {
+                bail!("latency bucket entry must be [index, count]");
+            }
+            sparse.push((pair[0].as_u64()? as usize, pair[1].as_u64()?));
+        }
+        let latency = Histogram::from_parts(
+            &sparse,
+            lat.field("count")?.as_u64()?,
+            lat.field("sum")?.as_u128()?,
+            lat.field("min")?.as_u64()?,
+            lat.field("max")?.as_u64()?,
+        )
+        .map_err(|e| anyhow::anyhow!("corrupt latency histogram: {e}"))?;
+        Ok(RunRecord {
+            experiment: v.field("experiment")?.as_str()?.to_string(),
+            section: v.field("section")?.as_str()?.to_string(),
+            index: v.field("index")?.as_u64()? as usize,
+            device: v.field("device")?.as_str()?.to_string(),
+            workload: v.field("workload")?.as_str()?.to_string(),
+            policy: v.field("policy")?.as_str()?.to_string(),
+            mlp: v.field("mlp")?.as_u64()? as usize,
+            seed: v.field("seed")?.as_u64()?,
+            sim_ticks: v.field("sim_ticks")?.as_u64()?,
+            tags: str_pairs("tags")?,
+            config: str_pairs("config")?,
+            metrics: v
+                .field("metrics")?
+                .as_obj()?
+                .iter()
+                .map(|(k, val)| Ok((k.clone(), val.as_f64()?)))
+                .collect::<Result<Vec<_>>>()?,
+            latency,
+        })
+    }
+}
+
+/// Flatten one executed sweep job into a [`RunRecord`].
+///
+/// The record's seed is the job's coordinate-derived `cfg.seed` (the
+/// sweep engine's `job_seed` already mixed it — nothing re-derives
+/// seeds here), and the config dump goes through the single key
+/// registry so every recognized key round-trips.
+pub fn record_from_job(
+    experiment: &str,
+    section: &str,
+    index: usize,
+    job: &RunJob,
+    out: &RunOutput,
+) -> RunRecord {
+    let policy = job
+        .policy
+        .map_or("-".to_string(), |p| p.name().to_string());
+    record_from_parts(
+        experiment,
+        section,
+        index,
+        job.device.name(),
+        &job.workload.label(),
+        &policy,
+        &job.cfg,
+        out,
+    )
+}
+
+/// [`record_from_job`] without a `RunJob` (the one-off `run` path).
+#[allow(clippy::too_many_arguments)]
+pub fn record_from_parts(
+    experiment: &str,
+    section: &str,
+    index: usize,
+    device: &str,
+    workload: &str,
+    policy: &str,
+    cfg: &crate::config::SimConfig,
+    out: &RunOutput,
+) -> RunRecord {
+    let mut metrics: Vec<(String, f64)> = vec![
+        ("system.loads".into(), out.system.loads as f64),
+        ("system.stores".into(), out.system.stores as f64),
+        ("system.device_reads".into(), out.system.device_reads as f64),
+        ("system.device_writes".into(), out.system.device_writes as f64),
+    ];
+
+    // The primary latency histogram: response latency for replay jobs,
+    // device read latency otherwise.
+    let latency: Histogram = match &out.replay {
+        Some(r) => (*r.latency).clone(),
+        None => out.system.device_latency.clone(),
+    };
+    metrics.push(("latency.mean_ns".into(), latency.mean_ns()));
+    metrics.push(("latency.p50_ns".into(), latency.p50_ns()));
+    metrics.push(("latency.p95_ns".into(), latency.p95_ns()));
+    metrics.push(("latency.p99_ns".into(), latency.p99_ns()));
+    metrics.push(("latency.p999_ns".into(), latency.p999_ns()));
+
+    let mut tags: Vec<(String, String)> = Vec::new();
+    if let Some(rs) = &out.stream {
+        for r in rs {
+            metrics.push((format!("stream.{}_mbs", r.kernel), r.mbs));
+        }
+    }
+    if let Some(m) = &out.membench {
+        metrics.push(("membench.ops".into(), m.ops as f64));
+        metrics.push(("membench.mean_ns".into(), m.mean_ns));
+        metrics.push(("membench.p50_ns".into(), m.p50_ns));
+        metrics.push(("membench.p99_ns".into(), m.p99_ns));
+    }
+    if let Some(vs) = &out.viper {
+        for r in vs {
+            metrics.push((format!("viper.{}_ops", r.op.name()), r.ops as f64));
+            metrics.push((format!("viper.{}_qps", r.op.name()), r.qps));
+        }
+        // Harmonic aggregate: total ops / total time == ops-weighted QPS
+        // (the §III-C policy table's throughput column).
+        let total_ops: u64 = vs.iter().map(|r| r.ops).sum();
+        let total_secs: f64 = vs.iter().map(|r| r.ops as f64 / r.qps).sum();
+        metrics.push(("viper.aggregate_qps".into(), total_ops as f64 / total_secs));
+    }
+    if let Some(r) = &out.replay {
+        metrics.push(("replay.reads".into(), r.reads as f64));
+        metrics.push(("replay.writes".into(), r.writes as f64));
+        metrics.push(("replay.stall_ticks".into(), r.stall_ticks as f64));
+        tags.push(("mode".into(), r.mode.name().into()));
+    }
+    for (k, v) in &out.device_kv {
+        metrics.push((k.clone(), *v));
+    }
+    // Non-finite values have no JSON spelling (they serialize as null
+    // and read back as NaN) — normalize so write/parse is the identity.
+    for (_, v) in metrics.iter_mut() {
+        if !v.is_finite() {
+            *v = f64::NAN;
+        }
+    }
+
+    RunRecord {
+        experiment: experiment.to_string(),
+        section: section.to_string(),
+        index,
+        device: device.to_string(),
+        workload: workload.to_string(),
+        policy: policy.to_string(),
+        mlp: cfg.mlp,
+        seed: cfg.seed,
+        sim_ticks: out.sim_ticks,
+        tags,
+        config: crate::config::dump_kv(cfg),
+        metrics,
+        latency,
+    }
+}
+
+/// One campaign section: an id, the heading the CLI prints above its
+/// table, the renderer kind and the records in coordinate order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub id: String,
+    pub kind: SectionKind,
+    pub heading: String,
+    pub records: Vec<RunRecord>,
+}
+
+/// A full campaign: every section of one `run`/`sweep` invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Campaign {
+    pub experiment: String,
+    /// Ran at quick (test) scale rather than full paper scale.
+    pub quick: bool,
+    pub sections: Vec<Section>,
+}
+
+impl Campaign {
+    pub fn new(experiment: impl Into<String>, quick: bool) -> Self {
+        Campaign {
+            experiment: experiment.into(),
+            quick,
+            sections: Vec::new(),
+        }
+    }
+
+    /// All records across sections, in section then coordinate order.
+    pub fn records(&self) -> impl Iterator<Item = &RunRecord> {
+        self.sections.iter().flat_map(|s| s.records.iter())
+    }
+
+    pub fn section(&self, id: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| s.id == id)
+    }
+}
+
+/// Deterministic 64-bit content checksum over a byte string, chained
+/// through [`mix64`] (the same SplitMix64 finalizer the sweep engine's
+/// seed derivation uses — one mixing function for the whole crate).
+pub fn content_checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0x5EED_BA5E_u64;
+    for chunk in bytes.chunks(8) {
+        let mut word = [0u8; 8];
+        word[..chunk.len()].copy_from_slice(chunk);
+        h = mix64(h ^ u64::from_le_bytes(word));
+    }
+    mix_finalize(h ^ bytes.len() as u64)
+}
+
+/// Write a campaign to `dir` (created if needed). The `dir/jobs/`
+/// subdirectory is cleared first so re-using an `--out` directory never
+/// leaves stale, un-manifested records from a previous campaign behind;
+/// then job files are written and finally the manifest
+/// `dir/campaign.json` with per-file checksums.
+pub fn write_campaign(dir: &Path, campaign: &Campaign) -> Result<()> {
+    let jobs_dir = dir.join("jobs");
+    if jobs_dir.exists() {
+        std::fs::remove_dir_all(&jobs_dir)
+            .with_context(|| format!("clearing stale artifact dir {}", jobs_dir.display()))?;
+    }
+    std::fs::create_dir_all(&jobs_dir)
+        .with_context(|| format!("creating artifact dir {}", jobs_dir.display()))?;
+
+    let mut checksums: Vec<(String, Json)> = Vec::new();
+    let mut sections_json = Vec::new();
+    for section in &campaign.sections {
+        let mut files = Vec::new();
+        for (i, record) in section.records.iter().enumerate() {
+            debug_assert_eq!(record.index, i, "records must be in coordinate order");
+            let name = record.file_name();
+            let text = record.to_json().to_text();
+            let path = jobs_dir.join(&name);
+            std::fs::write(&path, &text)
+                .with_context(|| format!("writing {}", path.display()))?;
+            checksums.push((
+                format!("jobs/{name}"),
+                Json::str(format!("{:016x}", content_checksum(text.as_bytes()))),
+            ));
+            files.push(Json::str(&name));
+        }
+        sections_json.push(Json::Obj(vec![
+            ("id".into(), Json::str(&section.id)),
+            ("kind".into(), Json::str(section.kind.name())),
+            ("heading".into(), Json::str(&section.heading)),
+            ("jobs".into(), Json::Arr(files)),
+        ]));
+    }
+    let manifest = Json::Obj(vec![
+        ("schema_version".into(), Json::UInt(SCHEMA_VERSION as u128)),
+        ("experiment".into(), Json::str(&campaign.experiment)),
+        ("quick".into(), Json::Bool(campaign.quick)),
+        ("sections".into(), Json::Arr(sections_json)),
+        ("checksums".into(), Json::Obj(checksums)),
+    ]);
+    let path = dir.join("campaign.json");
+    std::fs::write(&path, manifest.to_text())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a campaign from an artifact directory: schema check, manifest
+/// parse, per-file checksum verification, record parse.
+pub fn load_campaign(dir: &Path) -> Result<Campaign> {
+    let manifest_path = dir.join("campaign.json");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    // NOTE: the vendored anyhow has no `Context` impl for
+    // `Result<_, anyhow::Error>` (only std errors and Option), so
+    // context on already-anyhow results goes through `Error::context`.
+    let manifest = Json::parse(&text)
+        .map_err(|e| e.context(format!("parsing {}", manifest_path.display())))?;
+    let version = manifest.field("schema_version")?.as_u64()?;
+    if version != SCHEMA_VERSION {
+        bail!(
+            "artifact {} has schema v{version}, this binary reads v{SCHEMA_VERSION}",
+            dir.display()
+        );
+    }
+    let checksums = manifest.field("checksums")?;
+    let mut campaign = Campaign::new(
+        manifest.field("experiment")?.as_str()?.to_string(),
+        manifest.field("quick")?.as_bool()?,
+    );
+    for sec in manifest.field("sections")?.as_arr()? {
+        let id = sec.field("id")?.as_str()?.to_string();
+        let kind_name = sec.field("kind")?.as_str()?;
+        let kind = SectionKind::parse(kind_name)
+            .with_context(|| format!("unknown section kind '{kind_name}'"))?;
+        let mut records = Vec::new();
+        for (i, file) in sec.field("jobs")?.as_arr()?.iter().enumerate() {
+            let name = file.as_str()?;
+            let rel = format!("jobs/{name}");
+            let path = dir.join(&rel);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let want = checksums
+                .get(&rel)
+                .with_context(|| format!("manifest has no checksum for {rel}"))?
+                .as_str()?
+                .to_string();
+            let got = format!("{:016x}", content_checksum(&bytes));
+            if got != want {
+                bail!(
+                    "checksum mismatch for {}: manifest {want}, file {got} \
+                     (artifact corrupted or edited)",
+                    path.display()
+                );
+            }
+            let parsed = Json::parse(std::str::from_utf8(&bytes)?)
+                .map_err(|e| e.context(format!("parsing {}", path.display())))?;
+            let record = RunRecord::from_json(&parsed)
+                .map_err(|e| e.context(format!("decoding {}", path.display())))?;
+            if record.section != id || record.index != i {
+                bail!(
+                    "record {} claims coordinate {}[{}], manifest lists it as {}[{}]",
+                    path.display(),
+                    record.section,
+                    record.index,
+                    id,
+                    i
+                );
+            }
+            records.push(record);
+        }
+        campaign.sections.push(Section {
+            id,
+            kind,
+            heading: sec.field("heading")?.as_str()?.to_string(),
+            records,
+        });
+    }
+    Ok(campaign)
+}
+
+/// `write_campaign` with a string path (CLI convenience).
+pub fn write_campaign_to(dir: &str, campaign: &Campaign) -> Result<()> {
+    write_campaign(&PathBuf::from(dir), campaign)
+}
+
+/// `load_campaign` with a string path (CLI convenience).
+pub fn load_campaign_from(dir: &str) -> Result<Campaign> {
+    load_campaign(&PathBuf::from(dir))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NS;
+
+    fn sample_record(index: usize) -> RunRecord {
+        let mut latency = Histogram::new();
+        for i in 1..=50u64 {
+            latency.record(i * 100 * NS);
+        }
+        RunRecord {
+            experiment: "fig4".into(),
+            section: "fig4".into(),
+            index,
+            device: "dram".into(),
+            workload: "membench/2000ops".into(),
+            policy: "-".into(),
+            mlp: 1,
+            seed: 0xDEAD_BEEF,
+            sim_ticks: 123_456_789,
+            tags: vec![("mode".into(), "open".into())],
+            config: vec![("cpu.l1_bytes".into(), "65536".into())],
+            metrics: vec![
+                ("system.loads".into(), 2000.0),
+                ("membench.mean_ns".into(), 431.25),
+            ],
+            latency,
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip_is_exact() {
+        let r = sample_record(0);
+        let back = RunRecord::from_json(&Json::parse(&r.to_json().to_text()).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn record_rejects_future_schema() {
+        let r = sample_record(0);
+        let mut v = r.to_json();
+        if let Json::Obj(fields) = &mut v {
+            fields[0].1 = Json::UInt(99);
+        }
+        let err = RunRecord::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("v99") && err.contains("v1"), "{err}");
+    }
+
+    #[test]
+    fn campaign_write_load_roundtrip() {
+        let dir = PathBuf::from("/tmp/cxl_ssd_sim_results_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let campaign = Campaign {
+            experiment: "fig4".into(),
+            quick: true,
+            sections: vec![Section {
+                id: "fig4".into(),
+                kind: SectionKind::Membench,
+                heading: "Fig 4: membench random-read latency (ns)".into(),
+                records: vec![sample_record(0)],
+            }],
+        };
+        write_campaign(&dir, &campaign).unwrap();
+        let back = load_campaign(&dir).unwrap();
+        assert_eq!(back, campaign);
+    }
+
+    #[test]
+    fn load_detects_tampered_job_file() {
+        let dir = PathBuf::from("/tmp/cxl_ssd_sim_results_tamper");
+        let _ = std::fs::remove_dir_all(&dir);
+        let campaign = Campaign {
+            experiment: "fig4".into(),
+            quick: true,
+            sections: vec![Section {
+                id: "fig4".into(),
+                kind: SectionKind::Membench,
+                heading: "h".into(),
+                records: vec![sample_record(0)],
+            }],
+        };
+        write_campaign(&dir, &campaign).unwrap();
+        let job = dir.join("jobs").join(campaign.sections[0].records[0].file_name());
+        let mut text = std::fs::read_to_string(&job).unwrap();
+        text = text.replace("2000.0", "2001.0");
+        std::fs::write(&job, text).unwrap();
+        let err = load_campaign(&dir).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn rewriting_a_directory_clears_stale_job_files() {
+        // Re-using an --out directory must not leave records from a
+        // previous campaign behind (they would ride into a committed
+        // golden baseline unmanifested).
+        let dir = PathBuf::from("/tmp/cxl_ssd_sim_results_rewrite");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut campaign = Campaign {
+            experiment: "fig4".into(),
+            quick: true,
+            sections: vec![Section {
+                id: "fig4".into(),
+                kind: SectionKind::Membench,
+                heading: "h".into(),
+                records: vec![sample_record(0)],
+            }],
+        };
+        write_campaign(&dir, &campaign).unwrap();
+        let old_file = dir.join("jobs").join(campaign.sections[0].records[0].file_name());
+        assert!(old_file.exists());
+        // Second write with a different device name -> different file.
+        campaign.sections[0].records[0].device = "pmem".into();
+        write_campaign(&dir, &campaign).unwrap();
+        assert!(!old_file.exists(), "stale job file must be cleared");
+        assert_eq!(load_campaign(&dir).unwrap(), campaign);
+    }
+
+    #[test]
+    fn checksum_is_deterministic_and_length_sensitive() {
+        assert_eq!(content_checksum(b"abc"), content_checksum(b"abc"));
+        assert_ne!(content_checksum(b"abc"), content_checksum(b"abd"));
+        assert_ne!(content_checksum(b"abc"), content_checksum(b"abc\0"));
+        assert_ne!(content_checksum(b""), content_checksum(b"\0"));
+    }
+
+    #[test]
+    fn section_kind_names_roundtrip() {
+        for k in SectionKind::ALL {
+            assert_eq!(SectionKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(SectionKind::parse("bogus"), None);
+    }
+}

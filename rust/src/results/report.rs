@@ -1,0 +1,560 @@
+//! Re-render figures, diff artifact sets and export bench trajectories
+//! — all from [`RunRecord`]s alone, without re-simulating.
+//!
+//! These renderers are not a parallel implementation of the live
+//! tables: the experiment campaigns in
+//! [`crate::coordinator::experiments`] render *their* tables through
+//! the same functions, so `sweep --experiment fig4 --out a/` followed
+//! by `report --figures a/` reproduces the identical bytes by
+//! construction.
+
+use anyhow::{bail, Result};
+
+use crate::results::{Campaign, RunRecord, Section, SectionKind};
+use crate::stats::{percentile_cells, Table, PERCENTILE_HEADERS};
+
+/// Format a metric value the way the run/diff tables print it:
+/// integral values as plain integers, everything else with four
+/// decimals.
+pub fn fmt_value(v: f64) -> String {
+    if v.is_finite() && v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+fn fmt1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+/// Render one section's table from its records (dispatch on
+/// [`SectionKind`]).
+pub fn section_table(section: &Section) -> Table {
+    let records = &section.records;
+    match section.kind {
+        SectionKind::Stream => stream_table(records),
+        SectionKind::Membench => membench_table(records),
+        SectionKind::Viper => viper_table(records),
+        SectionKind::Policy => policy_table(records),
+        SectionKind::Mlp => mlp_table(records),
+        SectionKind::Replay => replay_table(records),
+        SectionKind::PoolBandwidth => pool_bandwidth_table(records),
+        SectionKind::PoolTiering => pool_tiering_table(records),
+        SectionKind::Run => run_table(records),
+    }
+}
+
+/// All `(heading, table)` sections of a campaign, in campaign order —
+/// what the CLI prints for both live sweeps and `report --figures`.
+pub fn campaign_sections(campaign: &Campaign) -> Vec<(String, Table)> {
+    campaign
+        .sections
+        .iter()
+        .map(|s| (s.heading.clone(), section_table(s)))
+        .collect()
+}
+
+fn stream_table(records: &[RunRecord]) -> Table {
+    let mut t = Table::new(&["device", "copy MB/s", "scale MB/s", "add MB/s", "triad MB/s"]);
+    for r in records {
+        t.row_owned(vec![
+            r.device.clone(),
+            fmt1(r.metric_or("stream.copy_mbs", f64::NAN)),
+            fmt1(r.metric_or("stream.scale_mbs", f64::NAN)),
+            fmt1(r.metric_or("stream.add_mbs", f64::NAN)),
+            fmt1(r.metric_or("stream.triad_mbs", f64::NAN)),
+        ]);
+    }
+    t
+}
+
+fn membench_table(records: &[RunRecord]) -> Table {
+    let mut t = Table::new(&["device", "mean ns", "p50 ns", "p99 ns"]);
+    for r in records {
+        t.row_owned(vec![
+            r.device.clone(),
+            fmt1(r.metric_or("membench.mean_ns", f64::NAN)),
+            fmt1(r.metric_or("membench.p50_ns", f64::NAN)),
+            fmt1(r.metric_or("membench.p99_ns", f64::NAN)),
+        ]);
+    }
+    t
+}
+
+/// Viper op columns, in phase order (matches `ViperOp::ALL`).
+const VIPER_OPS: [&str; 5] = ["write", "insert", "get", "update", "delete"];
+
+fn viper_table(records: &[RunRecord]) -> Table {
+    let mut t = Table::new(&["device", "write", "insert", "get", "update", "delete"]);
+    for r in records {
+        let mut cells = vec![r.device.clone()];
+        for op in VIPER_OPS {
+            cells.push(format!("{:.0}", r.metric_or(&format!("viper.{op}_qps"), f64::NAN)));
+        }
+        t.row_owned(cells);
+    }
+    t
+}
+
+fn policy_table(records: &[RunRecord]) -> Table {
+    let mut t = Table::new(&["policy", "hit rate", "aggregate QPS"]);
+    for r in records {
+        t.row_owned(vec![
+            r.policy.clone(),
+            format!("{:.4}", r.metric_or("cache_hit_rate", 0.0)),
+            format!("{:.0}", r.metric_or("viper.aggregate_qps", f64::NAN)),
+        ]);
+    }
+    t
+}
+
+/// Distinct device / window-size axes of an mlp section, in
+/// first-appearance order — the single pivot derivation shared by
+/// [`section_table`] and the raw-tuple extraction in
+/// `coordinator::experiments`, so table and raw data cannot disagree
+/// about the grid.
+pub fn mlp_axes(records: &[RunRecord]) -> (Vec<String>, Vec<usize>) {
+    let mut devices: Vec<String> = Vec::new();
+    let mut mlps: Vec<usize> = Vec::new();
+    for r in records {
+        if !devices.contains(&r.device) {
+            devices.push(r.device.clone());
+        }
+        if !mlps.contains(&r.mlp) {
+            mlps.push(r.mlp);
+        }
+    }
+    (devices, mlps)
+}
+
+fn mlp_table(records: &[RunRecord]) -> Table {
+    // Pivot: records arrive mlp-major (all devices at mlp=1, then
+    // mlp=2, ...); rows are devices, columns the distinct window sizes.
+    let (devices, mlps) = mlp_axes(records);
+    let mut header = vec!["device".to_string()];
+    header.extend(mlps.iter().map(|m| format!("mlp={m} MB/s")));
+    let mut t = Table::new_owned(header);
+    for device in &devices {
+        let mut cells = vec![device.clone()];
+        for &mlp in &mlps {
+            let triad = records
+                .iter()
+                .find(|r| &r.device == device && r.mlp == mlp)
+                .map(|r| r.metric_or("stream.triad_mbs", f64::NAN))
+                .unwrap_or(f64::NAN);
+            cells.push(fmt1(triad));
+        }
+        t.row_owned(cells);
+    }
+    t
+}
+
+fn replay_table(records: &[RunRecord]) -> Table {
+    let mut header: Vec<String> = ["device", "trace", "mode", "ops", "mean ns"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    header.extend(PERCENTILE_HEADERS.iter().map(|s| s.to_string()));
+    header.push("stall us".to_string());
+    let mut t = Table::new_owned(header);
+    for r in records {
+        let ops = r.metric_or("replay.reads", 0.0) + r.metric_or("replay.writes", 0.0);
+        let stall_ticks = r.metric_or("replay.stall_ticks", 0.0) as u64;
+        let mut cells = vec![
+            r.device.clone(),
+            r.workload.clone(),
+            r.tag("mode").unwrap_or("?").to_string(),
+            format!("{ops:.0}"),
+            fmt1(r.latency.mean_ns()),
+        ];
+        cells.extend(percentile_cells(&r.latency));
+        cells.push(fmt1(crate::sim::to_us(stall_ticks)));
+        t.row_owned(cells);
+    }
+    t
+}
+
+fn pool_bandwidth_table(records: &[RunRecord]) -> Table {
+    let mut t = Table::new(&["config", "members", "triad MB/s", "vs bare"]);
+    let bare_triad = records
+        .first()
+        .map(|r| r.metric_or("stream.triad_mbs", f64::NAN))
+        .unwrap_or(f64::NAN);
+    for r in records {
+        let triad = r.metric_or("stream.triad_mbs", f64::NAN);
+        t.row_owned(vec![
+            r.tag("row_label").unwrap_or(&r.device).to_string(),
+            r.tag("members").unwrap_or("-").to_string(),
+            fmt1(triad),
+            format!("{:.2}x", triad / bare_triad),
+        ]);
+    }
+    t
+}
+
+fn pool_tiering_table(records: &[RunRecord]) -> Table {
+    let mut header: Vec<String> = ["config", "ops"].iter().map(|s| s.to_string()).collect();
+    header.extend(PERCENTILE_HEADERS.iter().map(|s| s.to_string()));
+    header.push("promotions".to_string());
+    header.push("migrated KB".to_string());
+    let mut t = Table::new_owned(header);
+    for r in records {
+        let ops = r.metric_or("replay.reads", 0.0) + r.metric_or("replay.writes", 0.0);
+        let mut cells = vec![
+            r.tag("row_label").unwrap_or(&r.device).to_string(),
+            format!("{ops:.0}"),
+        ];
+        cells.extend(percentile_cells(&r.latency));
+        cells.push(format!("{:.0}", r.metric_or("tier.promotions", 0.0)));
+        cells.push(format!("{:.0}", r.metric_or("tier.migrated_kb", 0.0)));
+        t.row_owned(cells);
+    }
+    t
+}
+
+fn run_table(records: &[RunRecord]) -> Table {
+    // Generic metric/value listing — one block per record.
+    let mut t = Table::new(&["metric", "value"]);
+    for r in records {
+        t.row_owned(vec!["device".into(), r.device.clone()]);
+        t.row_owned(vec!["workload".into(), r.workload.clone()]);
+        t.row_owned(vec!["policy".into(), r.policy.clone()]);
+        t.row_owned(vec!["mlp".into(), r.mlp.to_string()]);
+        t.row_owned(vec!["seed".into(), r.seed.to_string()]);
+        t.row_owned(vec![
+            "sim time (ms)".into(),
+            format!("{:.3}", r.sim_ticks as f64 / 1e9),
+        ]);
+        for (k, v) in &r.metrics {
+            t.row_owned(vec![k.clone(), fmt_value(*v)]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------- diff
+
+/// Outcome of comparing two artifact sets.
+pub struct DiffReport {
+    /// One row per metric whose relative delta exceeds the threshold.
+    pub table: Table,
+    /// Metrics compared (matched on both sides).
+    pub compared: usize,
+    /// Metrics beyond the threshold (the regression count).
+    pub flagged: usize,
+    /// Structural problems: missing sections/records/metrics, identity
+    /// mismatches. Any entry here is a failure, like `flagged > 0`.
+    pub mismatches: Vec<String>,
+}
+
+impl DiffReport {
+    /// True when the candidate passes: no flagged deltas, no
+    /// structural mismatches.
+    pub fn passes(&self) -> bool {
+        self.flagged == 0 && self.mismatches.is_empty()
+    }
+}
+
+/// Relative delta in percent. Exact equality (including NaN == NaN,
+/// which artifacts use for undefined ratios) is 0; a zero baseline with
+/// a nonzero candidate is infinite.
+fn delta_pct(base: f64, cand: f64) -> f64 {
+    if base == cand || (base.is_nan() && cand.is_nan()) {
+        return 0.0;
+    }
+    // A metric flipping between defined and undefined is infinite
+    // drift, not a NaN that slips under every threshold.
+    if base.is_nan() != cand.is_nan() || base == 0.0 {
+        return f64::INFINITY;
+    }
+    (cand - base) / base.abs() * 100.0
+}
+
+/// Compare every metric of `cand` against `base`, flagging relative
+/// deltas beyond `threshold_pct`. With the simulator's bit-determinism
+/// the right default threshold is 0: any drift at all is a change that
+/// must be either intended (re-bless the baseline) or a regression.
+pub fn diff_campaigns(base: &Campaign, cand: &Campaign, threshold_pct: f64) -> Result<DiffReport> {
+    if base.experiment != cand.experiment {
+        bail!(
+            "experiment mismatch: baseline is '{}', candidate is '{}'",
+            base.experiment,
+            cand.experiment
+        );
+    }
+    let mut table = Table::new(&[
+        "section",
+        "job",
+        "metric",
+        "baseline",
+        "candidate",
+        "delta %",
+    ]);
+    let mut compared = 0usize;
+    let mut flagged = 0usize;
+    let mut mismatches = Vec::new();
+
+    for bs in &base.sections {
+        let Some(cs) = cand.section(&bs.id) else {
+            mismatches.push(format!("candidate is missing section '{}'", bs.id));
+            continue;
+        };
+        if bs.records.len() != cs.records.len() {
+            mismatches.push(format!(
+                "section '{}': baseline has {} jobs, candidate {}",
+                bs.id,
+                bs.records.len(),
+                cs.records.len()
+            ));
+        }
+        for (br, cr) in bs.records.iter().zip(cs.records.iter()) {
+            let job = format!("{:03} {}", br.index, br.device);
+            if br.device != cr.device || br.workload != cr.workload || br.policy != cr.policy {
+                mismatches.push(format!(
+                    "section '{}' job {}: coordinates differ \
+                     ({}/{}/{} vs {}/{}/{})",
+                    bs.id,
+                    br.index,
+                    br.device,
+                    br.workload,
+                    br.policy,
+                    cr.device,
+                    cr.workload,
+                    cr.policy
+                ));
+                continue;
+            }
+            // sim_ticks participates as an implicit metric.
+            let base_metrics = std::iter::once(("sim_ticks".to_string(), br.sim_ticks as f64))
+                .chain(br.metrics.iter().cloned());
+            for (name, bv) in base_metrics {
+                let cv = if name == "sim_ticks" {
+                    Some(cr.sim_ticks as f64)
+                } else {
+                    cr.metric(&name)
+                };
+                let Some(cv) = cv else {
+                    mismatches.push(format!(
+                        "section '{}' job {}: candidate lacks metric '{}'",
+                        bs.id, br.index, name
+                    ));
+                    continue;
+                };
+                compared += 1;
+                let delta = delta_pct(bv, cv);
+                if delta.abs() > threshold_pct {
+                    flagged += 1;
+                    table.row_owned(vec![
+                        bs.id.clone(),
+                        job.clone(),
+                        name.clone(),
+                        fmt_value(bv),
+                        fmt_value(cv),
+                        if delta.is_finite() {
+                            format!("{delta:+.3}")
+                        } else {
+                            "inf".to_string()
+                        },
+                    ]);
+                }
+            }
+            for (name, _) in &cr.metrics {
+                if br.metric(name).is_none() {
+                    mismatches.push(format!(
+                        "section '{}' job {}: baseline lacks metric '{}'",
+                        bs.id, br.index, name
+                    ));
+                }
+            }
+        }
+    }
+    for cs in &cand.sections {
+        if base.section(&cs.id).is_none() {
+            mismatches.push(format!("baseline is missing section '{}'", cs.id));
+        }
+    }
+    Ok(DiffReport {
+        table,
+        compared,
+        flagged,
+        mismatches,
+    })
+}
+
+// --------------------------------------------------------------- bench
+
+/// Headline metrics exported to the bench trajectory, when present.
+const BENCH_METRICS: [&str; 6] = [
+    "stream.triad_mbs",
+    "membench.mean_ns",
+    "viper.aggregate_qps",
+    "latency.p50_ns",
+    "latency.p99_ns",
+    "latency.p999_ns",
+];
+
+/// Serialize a campaign's headline metrics as `BENCH_sweep.json`
+/// content: a flat `name -> value` map keyed by sweep coordinate, so
+/// the perf trajectory can track paper figures across commits.
+pub fn bench_json(campaign: &Campaign) -> String {
+    use crate::results::json::Json;
+    let mut metrics: Vec<(String, Json)> = Vec::new();
+    for section in &campaign.sections {
+        for r in &section.records {
+            for name in BENCH_METRICS {
+                if let Some(v) = r.metric(name) {
+                    metrics.push((
+                        format!("{}/{:03}-{}/{}", section.id, r.index, r.device, name),
+                        Json::Float(v),
+                    ));
+                }
+            }
+        }
+    }
+    Json::Obj(vec![
+        ("schema_version".into(), Json::UInt(crate::results::SCHEMA_VERSION as u128)),
+        ("experiment".into(), Json::str(&campaign.experiment)),
+        ("quick".into(), Json::Bool(campaign.quick)),
+        ("metrics".into(), Json::Obj(metrics)),
+    ])
+    .to_text()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NS;
+    use crate::stats::Histogram;
+
+    fn record(section: &str, index: usize, device: &str, metrics: &[(&str, f64)]) -> RunRecord {
+        let mut latency = Histogram::new();
+        latency.record(100 * NS);
+        RunRecord {
+            experiment: "test".into(),
+            section: section.into(),
+            index,
+            device: device.into(),
+            workload: "membench/10ops".into(),
+            policy: "-".into(),
+            mlp: 1,
+            seed: 7,
+            sim_ticks: 1000,
+            tags: vec![],
+            config: vec![],
+            metrics: metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            latency,
+        }
+    }
+
+    fn campaign_of(records: Vec<RunRecord>) -> Campaign {
+        Campaign {
+            experiment: "test".into(),
+            quick: true,
+            sections: vec![Section {
+                id: records[0].section.clone(),
+                kind: SectionKind::Membench,
+                heading: "h".into(),
+                records,
+            }],
+        }
+    }
+
+    #[test]
+    fn self_diff_is_all_zero() {
+        let c = campaign_of(vec![record(
+            "fig4",
+            0,
+            "dram",
+            &[("membench.mean_ns", 431.5), ("system.loads", 10.0)],
+        )]);
+        let d = diff_campaigns(&c, &c, 0.0).unwrap();
+        assert!(d.passes());
+        assert_eq!(d.flagged, 0);
+        assert!(d.compared >= 3, "sim_ticks + 2 metrics");
+        assert_eq!(d.table.n_rows(), 0);
+    }
+
+    #[test]
+    fn drifted_metric_is_flagged_beyond_threshold() {
+        let base = campaign_of(vec![record("fig4", 0, "dram", &[("membench.mean_ns", 100.0)])]);
+        let mut cand = base.clone();
+        cand.sections[0].records[0].metrics[0].1 = 103.0;
+        // 3% drift: caught at threshold 0, ignored at threshold 5.
+        let strict = diff_campaigns(&base, &cand, 0.0).unwrap();
+        assert!(!strict.passes());
+        assert_eq!(strict.flagged, 1);
+        assert!(strict.table.render().contains("membench.mean_ns"));
+        let loose = diff_campaigns(&base, &cand, 5.0).unwrap();
+        assert!(loose.passes());
+    }
+
+    #[test]
+    fn zero_baseline_nonzero_candidate_is_infinite_drift() {
+        let base = campaign_of(vec![record("fig4", 0, "dram", &[("m", 0.0)])]);
+        let mut cand = base.clone();
+        cand.sections[0].records[0].metrics[0].1 = 1.0;
+        let d = diff_campaigns(&base, &cand, 1e9).unwrap();
+        assert_eq!(d.flagged, 1, "infinite drift beats any threshold");
+        assert!(d.table.render().contains("inf"));
+    }
+
+    #[test]
+    fn nan_equals_nan_in_diff() {
+        let c = campaign_of(vec![record("fig4", 0, "dram", &[("waf", f64::NAN)])]);
+        let d = diff_campaigns(&c, &c, 0.0).unwrap();
+        assert!(d.passes(), "NaN metrics must self-compare as equal");
+    }
+
+    #[test]
+    fn structural_mismatches_fail() {
+        let base = campaign_of(vec![record("fig4", 0, "dram", &[("m", 1.0)])]);
+        let mut cand = base.clone();
+        cand.sections[0].records[0].device = "pmem".into();
+        let d = diff_campaigns(&base, &cand, 0.0).unwrap();
+        assert!(!d.passes());
+        assert!(!d.mismatches.is_empty());
+
+        let mut extra = base.clone();
+        extra.sections[0]
+            .records[0]
+            .metrics
+            .push(("extra_metric".into(), 1.0));
+        let d = diff_campaigns(&base, &extra, 0.0).unwrap();
+        assert!(d.mismatches.iter().any(|m| m.contains("extra_metric")));
+    }
+
+    #[test]
+    fn experiment_mismatch_is_an_error() {
+        let base = campaign_of(vec![record("fig4", 0, "dram", &[])]);
+        let mut cand = base.clone();
+        cand.experiment = "fig3".into();
+        assert!(diff_campaigns(&base, &cand, 0.0).is_err());
+    }
+
+    #[test]
+    fn bench_json_exports_headline_metrics() {
+        let c = campaign_of(vec![record(
+            "fig4",
+            0,
+            "dram",
+            &[("membench.mean_ns", 431.5), ("not_headline", 1.0)],
+        )]);
+        let text = bench_json(&c);
+        assert!(text.contains("fig4/000-dram/membench.mean_ns"));
+        assert!(text.contains("431.5"));
+        assert!(!text.contains("not_headline"));
+        // Valid JSON.
+        crate::results::json::Json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn run_table_lists_coordinates_and_metrics() {
+        let r = record("run", 0, "dram", &[("system.loads", 10.0)]);
+        let t = run_table(&[r]);
+        let s = t.render();
+        assert!(s.contains("device") && s.contains("dram"));
+        assert!(s.contains("system.loads") && s.contains("| 10"));
+        assert!(s.contains("sim time (ms)"));
+    }
+}

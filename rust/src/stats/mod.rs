@@ -1,5 +1,25 @@
 //! Metrics: counters, latency histograms, derived bandwidth/QPS figures
 //! and the fixed-width report tables the benches print.
+//!
+//! ## Invariants
+//!
+//! - **Determinism.** Every number here is integer tick arithmetic or a
+//!   pure function of it: histograms have *fixed* bucket boundaries (no
+//!   data-dependent resizing), so merging is exact, percentile
+//!   extraction is reproducible bit-for-bit, and serial/parallel sweeps
+//!   report identical figures.
+//! - **Histogram resolution.** [`Histogram`] is HDR-style: unit-width
+//!   buckets below 16 ns, then 16 linear sub-buckets per power-of-two
+//!   octave (~6% relative error) up to the `[2^47, 2^48)` ns octave.
+//!   Values at or above 2^48 ns (≈ 3.3 days — beyond any simulated
+//!   latency) saturate into the terminal bucket rather than wrapping
+//!   within the top octave; `count`/`sum`/`min`/`max` still record the
+//!   exact values, so the mean and extrema are unaffected by bucketing.
+//! - **Serialization.** [`Histogram::sparse_buckets`] /
+//!   [`Histogram::from_parts`] expose the exact internal state (sparse
+//!   nonzero buckets + count/sum/min/max) for the artifact layer
+//!   ([`crate::results`]); a round-tripped histogram is `==` the
+//!   original, including the saturation bucket.
 
 use crate::sim::{Tick, NS};
 
@@ -18,7 +38,7 @@ const N_BUCKETS: usize = SUBS + (MAX_EXP - SUB_BITS + 1) * SUBS;
 /// percentile extraction (p50/p95/p99/p99.9) resolves to ~6% relative
 /// error instead of a full power of two. Fixed bucket boundaries make
 /// merged histograms exact and results bit-deterministic.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
     buckets: Box<[u64; N_BUCKETS]>,
     count: u64,
@@ -150,6 +170,97 @@ impl Histogram {
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
+
+    /// Total recorded ticks (the numerator of [`mean`](Self::mean)).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Raw minimum field: `Tick::MAX` while empty (unlike
+    /// [`min`](Self::min), which reports 0 for an empty histogram).
+    /// Serialization uses this so a round trip is exact.
+    pub fn raw_min(&self) -> Tick {
+        self.min
+    }
+
+    /// Nonzero buckets as `(index, count)` pairs in index order — the
+    /// sparse form the artifact layer serializes.
+    pub fn sparse_buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c != 0)
+            .map(|(i, &c)| (i, c))
+            .collect()
+    }
+
+    /// Rebuild a histogram from its serialized parts. Validates that
+    /// bucket indexes are in range and that the bucket counts sum to
+    /// `count` (a corrupt artifact is a hard error, not a skewed
+    /// percentile).
+    pub fn from_parts(
+        sparse: &[(usize, u64)],
+        count: u64,
+        sum: u128,
+        min: Tick,
+        max: Tick,
+    ) -> Result<Self, String> {
+        let mut h = Histogram::new();
+        let mut total = 0u64;
+        for &(idx, c) in sparse {
+            if idx >= N_BUCKETS {
+                return Err(format!("bucket index {idx} out of range (max {})", N_BUCKETS - 1));
+            }
+            if h.buckets[idx] != 0 {
+                return Err(format!("duplicate bucket index {idx}"));
+            }
+            h.buckets[idx] = c;
+            total = total
+                .checked_add(c)
+                .ok_or_else(|| format!("bucket counts overflow u64 at index {idx}"))?;
+        }
+        if total != count {
+            return Err(format!("bucket counts sum to {total}, header says {count}"));
+        }
+        if count > 0 && min > max {
+            return Err(format!("min {min} > max {max} with count {count}"));
+        }
+        h.count = count;
+        h.sum = sum;
+        h.min = min;
+        h.max = max;
+        Ok(h)
+    }
+}
+
+/// Header labels matching [`percentile_cells`] — the one place the
+/// p50/p95/p99/p99.9 column set is defined (replay tables, pool tables
+/// and the `report` re-renderers all share it).
+pub const PERCENTILE_HEADERS: [&str; 4] = ["p50 ns", "p95 ns", "p99 ns", "p99.9 ns"];
+
+/// The p50/p95/p99/p99.9 cells of a latency table row, formatted the
+/// way every campaign table prints them (`{:.1}` ns).
+pub fn percentile_cells(h: &Histogram) -> [String; 4] {
+    [
+        format!("{:.1}", h.p50_ns()),
+        format!("{:.1}", h.p95_ns()),
+        format!("{:.1}", h.p99_ns()),
+        format!("{:.1}", h.p999_ns()),
+    ]
+}
+
+/// One-line latency summary (`mean … p50 … p95 … p99 … p99.9`), shared
+/// by the CLI's replay report and `run`'s replay extra so the two never
+/// drift apart in format.
+pub fn latency_summary(h: &Histogram) -> String {
+    format!(
+        "mean {:.1} ns, p50 {:.1}, p95 {:.1}, p99 {:.1}, p99.9 {:.1}",
+        h.mean_ns(),
+        h.p50_ns(),
+        h.p95_ns(),
+        h.p99_ns(),
+        h.p999_ns()
+    )
 }
 
 /// Aggregate result of one workload run on one device.
@@ -395,6 +506,57 @@ mod tests {
         assert!(h.p50_ns() <= h.p95_ns());
         assert!(h.p95_ns() <= h.p99_ns());
         assert!(h.p99_ns() <= h.p999_ns());
+    }
+
+    #[test]
+    fn sparse_parts_roundtrip_exactly() {
+        let mut h = Histogram::new();
+        for i in [1u64, 5, 100, 100, 7_777, 1 << 20] {
+            h.record(i * NS);
+        }
+        h.record((1u64 << 50) * NS); // saturation bucket
+        let back = Histogram::from_parts(
+            &h.sparse_buckets(),
+            h.count(),
+            h.sum(),
+            h.raw_min(),
+            h.max(),
+        )
+        .unwrap();
+        assert_eq!(back, h);
+        // Empty histogram round-trips too (raw min is Tick::MAX).
+        let empty = Histogram::new();
+        let back = Histogram::from_parts(&[], 0, 0, empty.raw_min(), 0).unwrap();
+        assert_eq!(back, empty);
+    }
+
+    #[test]
+    fn from_parts_rejects_corrupt_input() {
+        let mut h = Histogram::new();
+        h.record(100 * NS);
+        let sparse = h.sparse_buckets();
+        // Count mismatch.
+        assert!(Histogram::from_parts(&sparse, 2, h.sum(), h.raw_min(), h.max()).is_err());
+        // Out-of-range bucket.
+        assert!(Histogram::from_parts(&[(N_BUCKETS, 1)], 1, 0, 0, 0).is_err());
+        // Duplicate bucket.
+        assert!(Histogram::from_parts(&[(3, 1), (3, 1)], 2, 0, 0, 0).is_err());
+        // Inverted extrema.
+        assert!(Histogram::from_parts(&sparse, 1, h.sum(), 5, 1).is_err());
+    }
+
+    #[test]
+    fn percentile_helpers_match_table_formatting() {
+        let mut h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record(i * NS);
+        }
+        let cells = percentile_cells(&h);
+        assert_eq!(cells[0], format!("{:.1}", h.p50_ns()));
+        assert_eq!(cells[3], format!("{:.1}", h.p999_ns()));
+        let line = latency_summary(&h);
+        assert!(line.starts_with("mean ") && line.contains("p99.9"), "{line}");
+        assert_eq!(PERCENTILE_HEADERS.len(), cells.len());
     }
 
     #[test]

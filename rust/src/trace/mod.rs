@@ -15,6 +15,21 @@
 //! [`source`] unifies captured traces with synthetic generators
 //! (uniform, zipfian-hotspot, sequential-scan, mixed read/write) behind
 //! one [`TraceSource`] the replay workload consumes.
+//!
+//! ## Invariants
+//!
+//! - **Determinism.** A synthetic spec plus a seed is a stream,
+//!   bit-for-bit: one `SplitMix64` drives every draw in a fixed order.
+//!   In sweeps the seed derives from the job's coordinates, so replay
+//!   jobs are serial/parallel bit-identical like every other workload.
+//! - **Strict parsing.** Malformed trace lines (bad tick/offset,
+//!   missing or unknown R/W, trailing fields) are hard errors with line
+//!   numbers, never silently skipped — a replayed stream is exactly the
+//!   file's stream or nothing.
+//! - **Entry order is state order.** Replay issues requests in entry
+//!   order; every device state machine transitions at call time, so a
+//!   closed-loop `mlp=1` replay of a capture walks the device through
+//!   the original state sequence (`tests/replay_determinism.rs`).
 
 pub mod source;
 

@@ -1,0 +1,71 @@
+//! The generated config reference can never drift from the code: the
+//! checked-in `docs/CONFIG.md` must equal a fresh render of the key
+//! registry, and every registry value must round-trip through
+//! `apply_override` (the same path artifact config blocks take).
+
+use std::path::PathBuf;
+
+use cxl_ssd_sim::config::{self, SimConfig};
+
+fn checked_in_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../docs/CONFIG.md")
+}
+
+#[test]
+fn config_reference_is_up_to_date() {
+    let generated = config::render_config_md();
+    let path = checked_in_path();
+    let committed = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("docs/CONFIG.md must be checked in ({e})"));
+    assert_eq!(
+        committed,
+        generated,
+        "docs/CONFIG.md drifted from the key registry.\n\
+         Regenerate with: cargo run --release -- docs --out {}",
+        path.display()
+    );
+}
+
+#[test]
+fn every_documented_key_is_recognized() {
+    // The registry dump of a default config must be fully re-applicable
+    // — a key documented in CONFIG.md that `apply` rejects would make
+    // the reference (and artifact config blocks) lies.
+    let cfg = SimConfig::default();
+    let mut rebuilt = SimConfig::default();
+    for (key, value) in config::dump_kv(&cfg) {
+        rebuilt
+            .apply_override(&format!("{key}={value}"))
+            .unwrap_or_else(|e| panic!("documented key {key}={value} rejected: {e}"));
+    }
+    assert_eq!(config::dump_kv(&cfg), config::dump_kv(&rebuilt));
+}
+
+#[test]
+fn artifact_config_block_rebuilds_a_modified_config() {
+    // End-to-end shape of the artifact round trip: mutate, dump,
+    // re-apply onto defaults, compare dumps.
+    let mut cfg = SimConfig::default();
+    for ov in [
+        "dcache.policy=2q",
+        "dcache.bytes=32M",
+        "pool.members=\"4xcxl-dram\"",
+        "pool.interleave=line",
+        "pool.tiering=true",
+        "sys.mlp=16",
+        "sys.seed=42",
+        "replay.closed=true",
+        "ssd.t_read=30000000",
+    ] {
+        cfg.apply_override(ov).unwrap();
+    }
+    let dump = config::dump_kv(&cfg);
+    let mut rebuilt = SimConfig::default();
+    for (key, value) in &dump {
+        rebuilt.apply_override(&format!("{key}={value}")).unwrap();
+    }
+    assert_eq!(dump, config::dump_kv(&rebuilt));
+    assert_eq!(rebuilt.mlp, 16);
+    assert_eq!(rebuilt.seed, 42);
+    assert_eq!(rebuilt.pool.members.len(), 4);
+}

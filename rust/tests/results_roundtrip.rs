@@ -1,0 +1,254 @@
+//! Artifact-layer guarantees: exact record round trips (property-tested
+//! over randomized stats maps and histograms, saturation bucket
+//! included), byte-identical artifact directories across worker counts,
+//! and live-vs-reloaded table equality — the `report --figures`
+//! acceptance path.
+
+use std::path::{Path, PathBuf};
+
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::coordinator::experiments::{self, ExpScale};
+use cxl_ssd_sim::results::{self, json::Json, report, RunRecord};
+use cxl_ssd_sim::sim::NS;
+use cxl_ssd_sim::stats::Histogram;
+use cxl_ssd_sim::testing::{check, SplitMix64};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cxl_ssd_sim_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Random printable-ish string exercising the JSON escaper.
+fn rand_string(rng: &mut SplitMix64) -> String {
+    let alphabet: Vec<char> = "abcXYZ019 _-./\\\"\n\tµ∞{}[]:,".chars().collect();
+    let len = rng.range(1, 12) as usize;
+    (0..len).map(|_| *rng.choose(&alphabet)).collect()
+}
+
+fn rand_metric_value(rng: &mut SplitMix64) -> f64 {
+    match rng.below(5) {
+        0 => rng.below(1_000_000) as f64, // integral
+        1 => rng.f64() * 1e12,
+        2 => -rng.f64() * 1e3,
+        3 => rng.f64() * 1e-9, // tiny
+        _ => rng.f64(),
+    }
+}
+
+fn rand_histogram(rng: &mut SplitMix64) -> Histogram {
+    let mut h = Histogram::new();
+    let n = rng.below(200);
+    for _ in 0..n {
+        // Latencies spanning the whole bucket range, including values
+        // at and above the 2^48 ns saturation boundary.
+        let ns = match rng.below(10) {
+            0 => (1u64 << 48) + rng.below(1 << 20), // saturation bucket
+            1 => (1u64 << 47) + rng.below(1 << 46), // top octave
+            _ => rng.below(1 << 40) + 1,
+        };
+        h.record(ns.saturating_mul(NS));
+    }
+    h
+}
+
+fn rand_record(rng: &mut SplitMix64) -> RunRecord {
+    let n_metrics = rng.range(1, 12) as usize;
+    let metrics = (0..n_metrics)
+        .map(|i| (format!("m{i}.{}", rng.below(100)), rand_metric_value(rng)))
+        .collect();
+    let n_tags = rng.below(4) as usize;
+    let tags = (0..n_tags)
+        .map(|i| (format!("t{i}"), rand_string(rng)))
+        .collect();
+    let n_cfg = rng.below(6) as usize;
+    let config = (0..n_cfg)
+        .map(|i| (format!("sec.key{i}"), rand_string(rng)))
+        .collect();
+    RunRecord {
+        experiment: rand_string(rng),
+        section: "sec".into(),
+        index: rng.below(1000) as usize,
+        device: rand_string(rng),
+        workload: rand_string(rng),
+        policy: rand_string(rng),
+        mlp: rng.range(1, 64) as usize,
+        seed: rng.next_u64(),
+        sim_ticks: rng.next_u64() >> 4,
+        tags,
+        config,
+        metrics,
+        latency: rand_histogram(rng),
+    }
+}
+
+#[test]
+fn parse_write_roundtrip_property() {
+    check("record json roundtrip", 200, |rng| {
+        let record = rand_record(rng);
+        let text = record.to_json().to_text();
+        let back = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, record, "round trip must be exact:\n{text}");
+        // Canonical writer: re-serializing the parsed record gives the
+        // same bytes.
+        assert_eq!(back.to_json().to_text(), text);
+    });
+}
+
+#[test]
+fn saturated_histogram_roundtrips() {
+    // The >= 2^48 ns saturation bucket explicitly.
+    let mut h = Histogram::new();
+    h.record(u64::MAX);
+    h.record((1u64 << 48) * NS);
+    h.record(100 * NS);
+    let mut record = rand_record(&mut SplitMix64::new(7));
+    record.latency = h;
+    let text = record.to_json().to_text();
+    let back = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.latency, record.latency);
+    assert_eq!(back.latency.max(), u64::MAX);
+}
+
+fn dir_listing(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut files = Vec::new();
+    fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, Vec<u8>)>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.push((rel, std::fs::read(&path).unwrap()));
+            }
+        }
+    }
+    walk(dir, dir, &mut files);
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    files
+}
+
+#[test]
+fn worker_count_does_not_change_artifact_bytes() {
+    // 1-worker and 4-worker campaigns must emit byte-identical artifact
+    // directories: records are keyed by sweep coordinate and hold no
+    // wall-clock fields.
+    let cfg = presets::small_test();
+    let serial = experiments::build_campaign("fig4", &cfg, ExpScale::quick(), 1).unwrap();
+    let parallel = experiments::build_campaign("fig4", &cfg, ExpScale::quick(), 4).unwrap();
+    let dir_a = tmp_dir("artifacts_serial");
+    let dir_b = tmp_dir("artifacts_parallel");
+    results::write_campaign(&dir_a, &serial.campaign).unwrap();
+    results::write_campaign(&dir_b, &parallel.campaign).unwrap();
+    let a = dir_listing(&dir_a);
+    let b = dir_listing(&dir_b);
+    assert_eq!(
+        a.iter().map(|(n, _)| n).collect::<Vec<_>>(),
+        b.iter().map(|(n, _)| n).collect::<Vec<_>>(),
+        "file sets must match"
+    );
+    for ((name, bytes_a), (_, bytes_b)) in a.iter().zip(b.iter()) {
+        assert_eq!(bytes_a, bytes_b, "{name} differs between worker counts");
+    }
+    assert!(a.iter().any(|(n, _)| n == "campaign.json"));
+    assert_eq!(a.len(), 6, "campaign.json + 5 device records");
+}
+
+#[test]
+fn replay_campaign_artifacts_are_worker_count_invariant() {
+    // Replay jobs materialize synthetic traces from coordinate-derived
+    // seeds; their histograms and artifacts must match too.
+    let cfg = presets::small_test();
+    let serial = experiments::build_campaign("replay", &cfg, ExpScale::quick(), 1).unwrap();
+    let parallel = experiments::build_campaign("replay", &cfg, ExpScale::quick(), 4).unwrap();
+    let dir_a = tmp_dir("replay_artifacts_serial");
+    let dir_b = tmp_dir("replay_artifacts_parallel");
+    results::write_campaign(&dir_a, &serial.campaign).unwrap();
+    results::write_campaign(&dir_b, &parallel.campaign).unwrap();
+    for ((name, bytes_a), (_, bytes_b)) in
+        dir_listing(&dir_a).iter().zip(dir_listing(&dir_b).iter())
+    {
+        assert_eq!(bytes_a, bytes_b, "{name} differs between worker counts");
+    }
+}
+
+#[test]
+fn reloaded_figures_render_identical_tables() {
+    // The acceptance criterion: report --figures over a --out directory
+    // reproduces the live table byte-for-byte.
+    let cfg = presets::small_test();
+    let run = experiments::build_campaign("fig4", &cfg, ExpScale::quick(), 2).unwrap();
+    let live: Vec<(String, String)> = report::campaign_sections(&run.campaign)
+        .into_iter()
+        .map(|(h, t)| (h, t.render()))
+        .collect();
+    let dir = tmp_dir("figures_roundtrip");
+    results::write_campaign(&dir, &run.campaign).unwrap();
+    let loaded = results::load_campaign(&dir).unwrap();
+    assert_eq!(loaded, run.campaign, "loaded campaign must equal the live one");
+    let reloaded: Vec<(String, String)> = report::campaign_sections(&loaded)
+        .into_iter()
+        .map(|(h, t)| (h, t.render()))
+        .collect();
+    assert_eq!(live, reloaded);
+
+    // And the self-diff over the loaded campaign is all-zero.
+    let diff = report::diff_campaigns(&run.campaign, &loaded, 0.0).unwrap();
+    assert!(diff.passes(), "mismatches: {:?}", diff.mismatches);
+}
+
+#[test]
+fn load_rejects_corrupt_artifacts() {
+    let cfg = presets::small_test();
+    let run = experiments::build_campaign("fig4", &cfg, ExpScale::quick(), 1).unwrap();
+    let dir = tmp_dir("corrupt_artifacts");
+    results::write_campaign(&dir, &run.campaign).unwrap();
+
+    // Truncated manifest.
+    let manifest = dir.join("campaign.json");
+    let text = std::fs::read_to_string(&manifest).unwrap();
+    std::fs::write(&manifest, &text[..text.len() / 2]).unwrap();
+    assert!(results::load_campaign(&dir).is_err());
+
+    // Wrong schema version.
+    std::fs::write(
+        &manifest,
+        text.replacen("\"schema_version\": 1", "\"schema_version\": 9", 1),
+    )
+    .unwrap();
+    let err = results::load_campaign(&dir).unwrap_err().to_string();
+    assert!(err.contains("v9"), "{err}");
+
+    // Tampered job file (checksum catches it).
+    std::fs::write(&manifest, &text).unwrap();
+    assert!(results::load_campaign(&dir).is_ok(), "restored manifest loads");
+    let job = dir
+        .join("jobs")
+        .join(run.campaign.sections[0].records[0].file_name());
+    let job_text = std::fs::read_to_string(&job).unwrap();
+    std::fs::write(&job, job_text.replacen(" 2", " 3", 1)).unwrap();
+    let err = results::load_campaign(&dir).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+}
+
+#[test]
+fn pool_campaign_artifacts_roundtrip_with_tags() {
+    // Pool sections carry row-label tags; they must survive the round
+    // trip and drive the same table rendering.
+    let cfg = presets::table1();
+    let run = experiments::build_campaign("pool", &cfg, ExpScale::quick(), 4).unwrap();
+    let dir = tmp_dir("pool_artifacts");
+    results::write_campaign(&dir, &run.campaign).unwrap();
+    let loaded = results::load_campaign(&dir).unwrap();
+    assert_eq!(loaded.sections.len(), 2);
+    assert_eq!(
+        loaded.sections[0].records[0].tag("row_label"),
+        Some("cxl-dram (bare)")
+    );
+    let live = report::campaign_sections(&run.campaign);
+    let back = report::campaign_sections(&loaded);
+    for ((ha, ta), (hb, tb)) in live.iter().zip(back.iter()) {
+        assert_eq!(ha, hb);
+        assert_eq!(ta.render(), tb.render());
+    }
+}
