@@ -1,0 +1,151 @@
+//! The baseline ratchet: grandfathered diagnostic counts per rule.
+//!
+//! A checked-in baseline file (`rust/simlint.baseline.json`) records
+//! how many diagnostics each rule is allowed to report. The lint run
+//! fails as soon as any rule's live count *exceeds* its grandfathered
+//! count — new violations cannot land, while old ones are paid down
+//! over time (shrinking counts always pass; re-bless the lower water
+//! mark with `lint --write-baseline`). The shipped tree is fully
+//! self-applied, so the committed baseline is all zeros and the
+//! ratchet degenerates into "no diagnostics at all".
+//!
+//! The file is canonical JSON through [`crate::results::json`], same
+//! as run artifacts: insertion-ordered keys in [`RULES`] order, so a
+//! regenerated baseline is byte-stable.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::rules::RULES;
+use crate::results::json::Json;
+
+/// Schema version of the baseline file.
+pub const BASELINE_FORMAT: u64 = 1;
+
+/// Grandfathered diagnostic count per rule id, in [`RULES`] order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Baseline {
+    pub counts: Vec<(String, u64)>,
+}
+
+impl Baseline {
+    /// The empty baseline: every rule must report zero diagnostics.
+    pub fn zero() -> Baseline {
+        Baseline {
+            counts: RULES.iter().map(|r| (r.id.to_string(), 0)).collect(),
+        }
+    }
+
+    /// Bless the given live counts as the new baseline.
+    pub fn from_counts(counts: &[(&'static str, u64)]) -> Baseline {
+        Baseline {
+            counts: counts.iter().map(|(r, n)| (r.to_string(), *n)).collect(),
+        }
+    }
+
+    /// Grandfathered count for `rule` (0 if absent from the file).
+    pub fn allowed(&self, rule: &str) -> u64 {
+        self.counts
+            .iter()
+            .find(|(r, _)| r == rule)
+            .map_or(0, |(_, n)| *n)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("format".to_string(), Json::UInt(BASELINE_FORMAT as u128)),
+            (
+                "rules".to_string(),
+                Json::Obj(
+                    self.counts
+                        .iter()
+                        .map(|(r, n)| (r.clone(), Json::UInt(*n as u128)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Canonical file bytes ([`Json::to_text`] ends with a newline).
+    pub fn to_text(&self) -> String {
+        self.to_json().to_text()
+    }
+
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let json = Json::parse(text)?;
+        let format = json.field("format")?.as_u64()?;
+        if format != BASELINE_FORMAT {
+            bail!("unsupported baseline format {format} (want {BASELINE_FORMAT})");
+        }
+        let mut counts = Vec::new();
+        for (rule, count) in json.field("rules")?.as_obj()? {
+            if !RULES.iter().any(|r| r.id == rule) {
+                bail!("baseline names unknown rule '{rule}'");
+            }
+            counts.push((rule.clone(), count.as_u64()?));
+        }
+        Ok(Baseline { counts })
+    }
+
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        Baseline::parse(&text)
+    }
+
+    /// Ratchet check: one message per rule whose live count exceeds
+    /// its grandfathered count. Empty means the run passes.
+    pub fn violations(&self, counts: &[(&'static str, u64)]) -> Vec<String> {
+        let mut out = Vec::new();
+        for (rule, n) in counts {
+            let cap = self.allowed(rule);
+            if *n > cap {
+                out.push(format!(
+                    "{rule}: {n} diagnostic(s) exceeds the baseline of {cap} — fix or \
+                     annotate the new finding(s), or deliberately re-bless with \
+                     `lint --write-baseline`"
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_baseline_round_trips() {
+        let b = Baseline::zero();
+        let parsed = Baseline::parse(&b.to_text()).unwrap();
+        assert_eq!(parsed, b);
+        assert_eq!(b.counts.len(), RULES.len());
+        assert!(b.to_text().ends_with('\n'));
+    }
+
+    #[test]
+    fn ratchet_passes_at_or_below_and_fails_above() {
+        let b = Baseline::from_counts(&[("unwrap-in-lib", 2)]);
+        assert!(b.violations(&[("unwrap-in-lib", 2)]).is_empty());
+        assert!(b.violations(&[("unwrap-in-lib", 0)]).is_empty());
+        let v = b.violations(&[("unwrap-in-lib", 3)]);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("exceeds the baseline of 2"), "{}", v[0]);
+    }
+
+    #[test]
+    fn rules_missing_from_the_file_default_to_zero() {
+        let b = Baseline::from_counts(&[]);
+        assert!(b.violations(&[("wall-clock", 0)]).is_empty());
+        assert_eq!(b.violations(&[("wall-clock", 1)]).len(), 1);
+    }
+
+    #[test]
+    fn bad_files_are_rejected() {
+        assert!(Baseline::parse("not json").is_err());
+        assert!(Baseline::parse("{\"format\": 2, \"rules\": {}}").is_err());
+        assert!(Baseline::parse("{\"format\": 1, \"rules\": {\"bogus\": 0}}").is_err());
+    }
+}

@@ -1,0 +1,503 @@
+//! Comment/string-aware line lexer for Rust sources.
+//!
+//! The scanner classifies every character of a source file as *code*,
+//! *comment* or *literal* so the rule engine (`super::rules`) only ever
+//! matches patterns against code text — a rule name or banned API
+//! spelled inside a string literal (including this subsystem's own
+//! pattern tables) must never trip a rule. Hand-rolled in the style of
+//! [`crate::results::json`]: a char-level state machine over physical
+//! lines, no regex, no dependencies.
+//!
+//! One pass produces three artifacts:
+//!
+//! - [`SourceLine`]s — per-line code text with comments removed and
+//!   literal contents blanked, the contents of string literals
+//!   attributed to the line each literal *starts* on (so multi-line
+//!   strings are checked once), and an `is_test` flag covering
+//!   `#[cfg(test)]` items;
+//! - [`Allow`]s — parsed suppression annotations, each bound to the
+//!   code line it covers: a trailing comment suppresses its own line,
+//!   a standalone comment line suppresses the next code line (several
+//!   standalone annotations stack onto that line);
+//! - bad annotations — any comment carrying the `simlint` marker that
+//!   does not parse as an allow, or an allow missing its
+//!   justification. These become diagnostics under the `annotation`
+//!   meta-rule.
+//!
+//! The lexer knows the annotation *grammar* but not the rule *names*;
+//! `super::rules` validates rule ids so unknown rules are reported
+//! exactly once, next to the rule table.
+
+/// One physical source line after lexing.
+#[derive(Debug, Clone)]
+pub struct SourceLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code text: comments stripped, literal contents blanked.
+    pub code: String,
+    /// Contents of string literals that start on this line.
+    pub strings: Vec<String>,
+    /// Inside a `#[cfg(test)]` item (exempt from most rules).
+    pub is_test: bool,
+}
+
+/// A parsed suppression annotation — `allow(<rule>): <justification>`
+/// after the `simlint` marker — bound to the code line it suppresses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub justification: String,
+}
+
+/// Lexer output for one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub lines: Vec<SourceLine>,
+    pub allows: Vec<Allow>,
+    /// Malformed annotations as `(line, problem)`.
+    pub bad_annotations: Vec<(usize, String)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Mode {
+    Normal,
+    /// Inside `/* .. */`; block comments nest.
+    Block { depth: u32 },
+    /// Inside a `"` string (escape-processed).
+    Str,
+    /// Inside a raw string closed by `"` + `hashes` `#`s.
+    RawStr { hashes: usize },
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Raw/byte literal opener at `chars[i]` (`r"`, `r#"`, `b"`, `br#"`):
+/// the mode it opens and how many chars the opener spans.
+fn literal_prefix(chars: &[char], i: usize) -> Option<(Mode, usize)> {
+    let c = chars[i];
+    let n = chars.len();
+    let mut j = i + 1;
+    if c == 'b' && j < n && chars[j] == 'r' {
+        j += 1;
+    }
+    if c == 'b' && j < n && chars[j] == '"' {
+        // `b".."` (and `br".."`): escape handling is close enough for
+        // lint purposes — contents are blanked either way.
+        return Some((Mode::Str, j + 1 - i));
+    }
+    if c == 'r' || j > i + 1 {
+        let mut hashes = 0usize;
+        while j < n && chars[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j < n && chars[j] == '"' {
+            return Some((Mode::RawStr { hashes }, j + 1 - i));
+        }
+    }
+    None
+}
+
+/// Skip a char literal (`'x'`, `'\n'`) or a lifetime tick at
+/// `chars[i] == '\''`; returns the index to resume scanning at.
+fn skip_char_or_lifetime(chars: &[char], i: usize) -> usize {
+    let n = chars.len();
+    if i + 1 < n && chars[i + 1] == '\\' {
+        let mut j = i + 2;
+        while j < n && chars[j] != '\'' {
+            j += 1;
+        }
+        return j + 1;
+    }
+    if i + 2 < n && chars[i + 2] == '\'' {
+        return i + 3;
+    }
+    // A lifetime: skip the tick, let the ident lex as code.
+    i + 1
+}
+
+/// What one line comment means to the linter.
+enum Ann {
+    /// No annotation marker at all.
+    None,
+    Allow { rule: String, justification: String },
+    Bad(String),
+}
+
+fn parse_annotation(comment: &str) -> Ann {
+    let t = comment.trim();
+    let Some(pos) = t.find("simlint:") else {
+        return Ann::None;
+    };
+    let rest = t[pos + "simlint:".len()..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Ann::Bad("unrecognized simlint annotation (want allow(<rule>): <why>)".to_string());
+    };
+    let Some(close) = rest.find(')') else {
+        return Ann::Bad("unclosed allow(<rule>) in simlint annotation".to_string());
+    };
+    let rule = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    if after.is_empty() {
+        return Ann::Bad(format!("allow({rule}) needs a non-empty justification"));
+    }
+    let Some(justification) = after.strip_prefix(':') else {
+        return Ann::Bad("unrecognized simlint annotation (want allow(<rule>): <why>)".to_string());
+    };
+    let justification = justification.trim();
+    if justification.is_empty() {
+        return Ann::Bad(format!("allow({rule}) needs a non-empty justification"));
+    }
+    Ann::Allow {
+        rule,
+        justification: justification.to_string(),
+    }
+}
+
+/// Lex a whole source file. Never fails: unterminated literals or
+/// comments simply blank the rest of the file, which is what a lint
+/// pass wants from a file that would not compile anyway.
+pub fn lex(text: &str) -> Lexed {
+    let mut lines: Vec<SourceLine> = Vec::new();
+    // At most one line comment per physical line (it runs to EOL).
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut mode = Mode::Normal;
+    // String literal being collected: (start line, contents so far).
+    let mut cur: Option<(usize, String)> = None;
+
+    for (idx, raw) in text.split('\n').enumerate() {
+        let number = idx + 1;
+        let chars: Vec<char> = raw.chars().collect();
+        let n = chars.len();
+        let mut code = String::new();
+        let mut strings: Vec<String> = Vec::new();
+        let mut i = 0usize;
+        while i < n {
+            let c = chars[i];
+            match mode {
+                Mode::Block { depth } => {
+                    if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                        i += 2;
+                        mode = if depth == 1 {
+                            Mode::Normal
+                        } else {
+                            Mode::Block { depth: depth - 1 }
+                        };
+                    } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        mode = Mode::Block { depth: depth + 1 };
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                Mode::Str => {
+                    if c == '\\' {
+                        if let (Some((_, buf)), Some(&esc)) = (cur.as_mut(), chars.get(i + 1)) {
+                            buf.push(esc);
+                        }
+                        i += 2;
+                    } else if c == '"' {
+                        if let Some((start, buf)) = cur.take() {
+                            if start == number {
+                                strings.push(buf);
+                            } else if let Some(line) = lines.get_mut(start - 1) {
+                                line.strings.push(buf);
+                            }
+                        }
+                        mode = Mode::Normal;
+                        i += 1;
+                    } else {
+                        if let Some((_, buf)) = cur.as_mut() {
+                            buf.push(c);
+                        }
+                        i += 1;
+                    }
+                }
+                Mode::RawStr { hashes } => {
+                    let closes = c == '"'
+                        && i + 1 + hashes <= n
+                        && chars[i + 1..i + 1 + hashes].iter().all(|&h| h == '#');
+                    if closes {
+                        if let Some((start, buf)) = cur.take() {
+                            if start == number {
+                                strings.push(buf);
+                            } else if let Some(line) = lines.get_mut(start - 1) {
+                                line.strings.push(buf);
+                            }
+                        }
+                        mode = Mode::Normal;
+                        i += 1 + hashes;
+                    } else {
+                        if let Some((_, buf)) = cur.as_mut() {
+                            buf.push(c);
+                        }
+                        i += 1;
+                    }
+                }
+                Mode::Normal => {
+                    if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                        comments.push((number, chars[i + 2..].iter().collect()));
+                        break;
+                    }
+                    if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        mode = Mode::Block { depth: 1 };
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        cur = Some((number, String::new()));
+                        mode = Mode::Str;
+                        i += 1;
+                        continue;
+                    }
+                    let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+                    if (c == 'r' || c == 'b') && !prev_ident {
+                        if let Some((m, skip)) = literal_prefix(&chars, i) {
+                            cur = Some((number, String::new()));
+                            mode = m;
+                            i += skip;
+                            continue;
+                        }
+                        code.push(c);
+                        i += 1;
+                        continue;
+                    }
+                    if c == '\'' {
+                        i = skip_char_or_lifetime(&chars, i);
+                        continue;
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        lines.push(SourceLine {
+            number,
+            code,
+            strings,
+            is_test: false,
+        });
+    }
+
+    // Bind annotations to code lines.
+    let mut comment_for: Vec<Option<String>> = vec![None; lines.len()];
+    for (ln, c) in comments {
+        if ln >= 1 && ln <= comment_for.len() {
+            comment_for[ln - 1] = Some(c);
+        }
+    }
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut bad_annotations: Vec<(usize, String)> = Vec::new();
+    // Standalone (comment-only-line) annotations waiting for code.
+    let mut pending: Vec<(String, String)> = Vec::new();
+    for line in &lines {
+        match comment_for[line.number - 1].as_deref().map(parse_annotation) {
+            Some(Ann::Bad(msg)) => bad_annotations.push((line.number, msg)),
+            Some(Ann::Allow {
+                rule,
+                justification,
+            }) => {
+                if line.code.trim().is_empty() {
+                    pending.push((rule, justification));
+                } else {
+                    allows.push(Allow {
+                        line: line.number,
+                        rule,
+                        justification,
+                    });
+                }
+            }
+            Some(Ann::None) | None => {}
+        }
+        if !line.code.trim().is_empty() {
+            for (rule, justification) in pending.drain(..) {
+                allows.push(Allow {
+                    line: line.number,
+                    rule,
+                    justification,
+                });
+            }
+        }
+    }
+
+    // Mark `#[cfg(test)]` regions: the attribute arms the *next* item;
+    // a braced item opens a region at the pre-item brace depth, a
+    // bodyless item (ends in `;`) covers just itself.
+    let mut depth: i64 = 0;
+    let mut pending_attr = false;
+    let mut test_base: Option<i64> = None;
+    for line in &mut lines {
+        let code = line.code.clone();
+        let mut in_test = test_base.is_some() || pending_attr;
+        if test_base.is_none() {
+            if code.contains("#[cfg(test)]") {
+                pending_attr = true;
+                in_test = true;
+            } else if pending_attr && !code.trim().is_empty() {
+                in_test = true;
+                if code.contains('{') {
+                    test_base = Some(depth);
+                    pending_attr = false;
+                } else if code.trim().ends_with(';') {
+                    pending_attr = false;
+                }
+            }
+        }
+        line.is_test = in_test;
+        depth += code.matches('{').count() as i64 - code.matches('}').count() as i64;
+        if let Some(base) = test_base {
+            if depth <= base {
+                test_base = None;
+            }
+        }
+    }
+
+    Lexed {
+        lines,
+        allows,
+        bad_annotations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(lexed: &Lexed, line: usize) -> &str {
+        &lexed.lines[line - 1].code
+    }
+
+    #[test]
+    fn comments_are_stripped() {
+        let l = lex("let x = 1; // trailing Instant\n/* Instant */ let y = 2;\n");
+        assert_eq!(code_of(&l, 1), "let x = 1; ");
+        assert_eq!(code_of(&l, 2), " let y = 2;");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let l = lex("a /* x /* y */ z */ b\n/* open\nstill\n*/ tail\n");
+        assert_eq!(code_of(&l, 1), "a  b");
+        assert_eq!(code_of(&l, 2), "");
+        assert_eq!(code_of(&l, 3), "");
+        assert_eq!(code_of(&l, 4), " tail");
+    }
+
+    #[test]
+    fn string_contents_are_blanked_and_collected() {
+        let l = lex("let s = \"Instant::now()\"; f(s)\n");
+        assert_eq!(code_of(&l, 1), "let s = ; f(s)");
+        assert_eq!(l.lines[0].strings, vec!["Instant::now()".to_string()]);
+    }
+
+    #[test]
+    fn escapes_do_not_end_strings() {
+        let l = lex("let s = \"a\\\"b\";\n");
+        assert_eq!(code_of(&l, 1), "let s = ;");
+        assert_eq!(l.lines[0].strings, vec!["a\"b".to_string()]);
+    }
+
+    #[test]
+    fn raw_strings_close_on_matching_hashes() {
+        let l = lex("let s = r#\"has \"quotes\" inside\"#; g()\n");
+        assert_eq!(code_of(&l, 1), "let s = ; g()");
+        assert_eq!(l.lines[0].strings, vec!["has \"quotes\" inside".to_string()]);
+    }
+
+    #[test]
+    fn multiline_strings_attribute_to_start_line() {
+        let l = lex("let s = \"first\nsecond\";\nnext();\n");
+        assert_eq!(l.lines[0].strings, vec!["firstsecond".to_string()]);
+        assert!(l.lines[1].strings.is_empty());
+        assert_eq!(code_of(&l, 3), "next();");
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let l = lex("fn f<'a>(x: &'a str) { if c == '\"' || c == '\\n' {} }\n");
+        // The quote chars never open string mode.
+        assert!(l.lines[0].strings.is_empty());
+        assert!(code_of(&l, 1).contains("fn f<"));
+    }
+
+    #[test]
+    fn trailing_annotation_binds_to_its_line() {
+        let l = lex("m.retain(f); // simlint: allow(unordered-iter): order-free\n");
+        assert_eq!(
+            l.allows,
+            vec![Allow {
+                line: 1,
+                rule: "unordered-iter".to_string(),
+                justification: "order-free".to_string(),
+            }]
+        );
+    }
+
+    #[test]
+    fn standalone_annotations_bind_to_next_code_line() {
+        let src = "// simlint: allow(unwrap-in-lib): invariant A\n\
+                   // simlint: allow(unordered-iter): invariant B\n\
+                   let x = m.iter();\n";
+        let l = lex(src);
+        assert_eq!(l.allows.len(), 2);
+        assert!(l.allows.iter().all(|a| a.line == 3));
+    }
+
+    #[test]
+    fn empty_justification_is_rejected() {
+        let l = lex("x(); // simlint: allow(unwrap-in-lib):\n");
+        assert!(l.allows.is_empty());
+        assert_eq!(l.bad_annotations.len(), 1);
+        assert!(l.bad_annotations[0].1.contains("justification"));
+        let l = lex("x(); // simlint: allow(unwrap-in-lib)\n");
+        assert_eq!(l.bad_annotations.len(), 1);
+    }
+
+    #[test]
+    fn malformed_marker_is_reported() {
+        let l = lex("x(); // simlint: suppress everything\n");
+        assert_eq!(l.bad_annotations.len(), 1);
+        // A comment without the marker is not an annotation at all.
+        let l = lex("x(); // ordinary words\n");
+        assert!(l.bad_annotations.is_empty());
+    }
+
+    #[test]
+    fn annotations_inside_strings_are_inert() {
+        let l = lex("let s = \"// simlint: allow(unwrap-in-lib): nope\";\n");
+        assert!(l.allows.is_empty());
+        assert!(l.bad_annotations.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn lib() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { y.unwrap(); }\n\
+                   }\n\
+                   fn lib2() {}\n";
+        let l = lex(src);
+        let flags: Vec<bool> = l.lines.iter().map(|line| line.is_test).collect();
+        assert_eq!(flags[..6], [false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_fn_region_closes_at_its_brace() {
+        let src = "#[cfg(test)]\nfn helper() {\n    body();\n}\nfn lib() {}\n";
+        let l = lex(src);
+        let flags: Vec<bool> = l.lines.iter().map(|line| line.is_test).collect();
+        assert_eq!(flags[..5], [true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_use_item_covers_one_line() {
+        let src = "#[cfg(test)]\nuse crate::testing::SplitMix64;\nfn lib() {}\n";
+        let l = lex(src);
+        let flags: Vec<bool> = l.lines.iter().map(|line| line.is_test).collect();
+        assert_eq!(flags[..3], [true, true, false]);
+    }
+}

@@ -1,0 +1,278 @@
+//! Static analysis over the simulator's own sources (`simlint`).
+//!
+//! The crate's headline guarantees — deterministic runs, wall-clock-free
+//! artifacts byte-identical across worker counts, coordinate-derived
+//! seeds — are otherwise enforced only by runtime tests that sample a
+//! few campaigns. This subsystem makes the contract hold by
+//! construction: a zero-dependency source scanner walks `rust/src/**`
+//! and flags the hazard patterns those tests can miss, as
+//! `file:line: rule-id: message` diagnostics plus a machine-readable
+//! report through the canonical-JSON layer ([`crate::results::json`]).
+//!
+//! Layout:
+//! - [`lexer`] — comment/string-aware line lexer (rules match code
+//!   text only) and the suppression-annotation grammar;
+//! - [`rules`] — the rule table ([`RULES`]) and per-file engine;
+//! - [`baseline`] — the grandfathering ratchet; the shipped tree is
+//!   fully self-applied, so the committed baseline is all zeros.
+//!
+//! A finding is silenced by an inline annotation carrying its rule id
+//! and a non-empty justification (see `docs/LINT.md`, generated from
+//! the rule table via [`render_lint_md`]); trailing comments cover
+//! their own line, standalone comment lines cover the next code line.
+//! The `lint` CLI subcommand drives [`lint_tree`] and exits nonzero
+//! when any rule exceeds its baselined count.
+
+// The analyzer holds itself to the rule it enforces: no panicking
+// escape hatches in lib code (tests may unwrap freely).
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use baseline::Baseline;
+pub use rules::{check_file, Diagnostic, FileReport, Rule, Suppression, RULES};
+
+use crate::results::json::Json;
+
+/// Schema version of the JSON lint report.
+pub const REPORT_FORMAT: u64 = 1;
+
+/// Tree-wide lint results.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Scanned files, root-relative with `/` separators, sorted.
+    pub files: Vec<String>,
+    pub diagnostics: Vec<Diagnostic>,
+    pub suppressed: Vec<Suppression>,
+}
+
+impl LintReport {
+    /// Live diagnostic count per rule, in [`RULES`] order.
+    pub fn counts(&self) -> Vec<(&'static str, u64)> {
+        RULES
+            .iter()
+            .map(|r| {
+                (
+                    r.id,
+                    self.diagnostics.iter().filter(|d| d.rule == r.id).count() as u64,
+                )
+            })
+            .collect()
+    }
+
+    /// Human-readable report: one `file:line: rule: message` line per
+    /// diagnostic plus a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!(
+                "{}:{}: {}: {}\n",
+                d.file, d.line, d.rule, d.message
+            ));
+        }
+        out.push_str(&format!(
+            "{} file(s) scanned: {} diagnostic(s), {} finding(s) suppressed by annotation\n",
+            self.files.len(),
+            self.diagnostics.len(),
+            self.suppressed.len()
+        ));
+        out
+    }
+
+    /// Machine-readable report through the canonical-JSON layer.
+    pub fn to_json(&self) -> Json {
+        let diagnostics = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::Obj(vec![
+                    ("file".to_string(), Json::str(&d.file)),
+                    ("line".to_string(), Json::UInt(d.line as u128)),
+                    ("rule".to_string(), Json::str(d.rule)),
+                    ("message".to_string(), Json::str(&d.message)),
+                ])
+            })
+            .collect();
+        let suppressed = self
+            .suppressed
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("file".to_string(), Json::str(&s.file)),
+                    ("line".to_string(), Json::UInt(s.line as u128)),
+                    ("rule".to_string(), Json::str(s.rule)),
+                    ("justification".to_string(), Json::str(&s.justification)),
+                ])
+            })
+            .collect();
+        let counts = self
+            .counts()
+            .into_iter()
+            .map(|(rule, n)| (rule.to_string(), Json::UInt(n as u128)))
+            .collect();
+        Json::Obj(vec![
+            ("format".to_string(), Json::UInt(REPORT_FORMAT as u128)),
+            ("files".to_string(), Json::UInt(self.files.len() as u128)),
+            ("counts".to_string(), Json::Obj(counts)),
+            ("diagnostics".to_string(), Json::Arr(diagnostics)),
+            ("suppressed".to_string(), Json::Arr(suppressed)),
+        ])
+    }
+}
+
+/// Recursively collect `*.rs` files under `dir` as root-relative
+/// `/`-separated paths. Deterministic: children sorted by name.
+fn collect_rs_files(dir: &Path, prefix: &str, out: &mut Vec<String>) -> Result<()> {
+    let mut entries: Vec<(bool, String, std::path::PathBuf)> = Vec::new();
+    let listing =
+        std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for entry in listing {
+        let entry = entry.with_context(|| format!("listing {}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        entries.push((path.is_dir(), name, path));
+    }
+    entries.sort_by(|a, b| a.1.cmp(&b.1));
+    for (is_dir, name, path) in entries {
+        let rel = if prefix.is_empty() {
+            name.clone()
+        } else {
+            format!("{prefix}/{name}")
+        };
+        if is_dir {
+            collect_rs_files(&path, &rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `*.rs` file under `root` (normally `rust/src`). File
+/// order, diagnostic order and the JSON report are deterministic.
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut files = Vec::new();
+    collect_rs_files(root, "", &mut files)?;
+    files.sort();
+    let mut report = LintReport {
+        files: Vec::new(),
+        diagnostics: Vec::new(),
+        suppressed: Vec::new(),
+    };
+    for rel in files {
+        let path = root.join(&rel);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut fr = rules::check_file(&rel, &text);
+        report.diagnostics.append(&mut fr.diagnostics);
+        report.suppressed.append(&mut fr.suppressed);
+        report.files.push(rel);
+    }
+    Ok(report)
+}
+
+/// Render `docs/LINT.md` from the rule table. Pure function of
+/// [`RULES`]; `rust/tests/simlint.rs` fails when the checked-in file
+/// drifts from a fresh render.
+pub fn render_lint_md() -> String {
+    let mut out = String::new();
+    out.push_str("# Lint rule reference (simlint)\n");
+    out.push('\n');
+    out.push_str(
+        "Generated by `cxl-ssd-sim docs --kind lint` from the rule table\n\
+         (`rust/src/analysis/rules.rs`). Do not edit by hand: regenerate\n\
+         with `cargo run --release -- docs --kind lint --out ../docs/LINT.md`\n\
+         (from `rust/`). `rust/tests/simlint.rs` fails when this file\n\
+         drifts from the code.\n",
+    );
+    out.push('\n');
+    out.push_str(
+        "`cxl-ssd-sim lint` scans `rust/src/**` with a comment/string-aware\n\
+         lexer, so banned names inside comments and string literals never\n\
+         fire. Diagnostics print as `file:line: rule-id: message`; `--format\n\
+         json` emits the machine-readable report. A finding is suppressed by\n\
+         an inline annotation naming its rule with a non-empty justification:\n",
+    );
+    out.push('\n');
+    out.push_str(
+        "```rust\n\
+         self.heat.retain(|_, h| *h > 0); // simlint: allow(unordered-iter): <why>\n\
+         ```\n",
+    );
+    out.push('\n');
+    out.push_str(
+        "Trailing comments cover their own line; standalone comment lines\n\
+         cover the next code line. The checked-in baseline\n\
+         (`rust/simlint.baseline.json`) grandfathers per-rule counts and the\n\
+         lint fails when any rule's live count exceeds it (the ratchet); the\n\
+         shipped tree is fully self-applied, so the committed baseline is all\n\
+         zeros. `lint --write-baseline` re-blesses the current counts.\n",
+    );
+    for rule in &RULES {
+        out.push('\n');
+        out.push_str(&format!("## `{}`\n", rule.id));
+        out.push('\n');
+        out.push_str(&format!("{}.\n", rule.summary));
+        out.push('\n');
+        out.push_str(&format!("- **Matches:** {}.\n", rule.matches));
+        out.push_str(&format!("- **Fix:** {}.\n", rule.action));
+        out.push_str(&format!(
+            "- **Suppressible:** {}.\n",
+            if rule.suppressible { "yes" } else { "no" }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_counts_and_json_shape() {
+        let mut report = LintReport::default();
+        report.files.push("sim/x.rs".to_string());
+        let fr = check_file("sim/x.rs", "fn f() { x.unwrap(); }\n");
+        report.diagnostics.extend(fr.diagnostics);
+        let counts = report.counts();
+        assert_eq!(counts.len(), RULES.len());
+        assert!(counts.contains(&("unwrap-in-lib", 1)));
+        let json = report.to_json();
+        assert_eq!(json.field("files").unwrap().as_u64().unwrap(), 1);
+        let diags = json.field("diagnostics").unwrap().as_arr().unwrap();
+        assert_eq!(diags.len(), 1);
+        assert_eq!(
+            diags[0].field("rule").unwrap().as_str().unwrap(),
+            "unwrap-in-lib"
+        );
+        // Canonical text parses back.
+        let round = Json::parse(&json.to_text()).unwrap();
+        assert_eq!(round.to_text(), json.to_text());
+    }
+
+    #[test]
+    fn render_text_has_one_line_per_diagnostic() {
+        let mut report = LintReport::default();
+        report.files.push("pool/x.rs".to_string());
+        let fr = check_file("pool/x.rs", "struct S { m: HashMap<u64, u64> }\n");
+        report.diagnostics.extend(fr.diagnostics);
+        let text = report.render_text();
+        assert!(text.starts_with("pool/x.rs:1: unordered-iter:"), "{text}");
+        assert!(text.trim_end().ends_with("suppressed by annotation"));
+    }
+
+    #[test]
+    fn lint_md_covers_every_rule() {
+        let md = render_lint_md();
+        for rule in &RULES {
+            assert!(md.contains(&format!("## `{}`", rule.id)), "{}", rule.id);
+        }
+        assert!(md.ends_with('\n') && !md.ends_with("\n\n"));
+    }
+}

@@ -1,0 +1,769 @@
+//! The simlint rule table and per-file rule engine.
+//!
+//! Every rule encodes one of the crate's documented cross-cutting
+//! invariants (see `lib.rs` and DESIGN.md): determinism (1 tick = 1 ps
+//! integers, no wall clock in simulated numbers, coordinate-derived
+//! seeds, byte-identical artifacts across worker counts) and the
+//! offline build. [`RULES`] is the single source of truth: the
+//! generated `docs/LINT.md` reference, the baseline file's rule keys
+//! and the JSON report's count object are all driven from this table,
+//! with a drift test in `rust/tests/simlint.rs`.
+//!
+//! Rules match against the lexer's *code* text only (comments and
+//! literal contents are blanked), so banned names quoted in strings —
+//! including this module's own pattern tables — never fire. Findings
+//! on a line covered by a justified allow annotation are suppressed
+//! and reported separately; the `annotation` meta-rule itself cannot
+//! be suppressed.
+
+use std::collections::BTreeSet;
+
+use super::lexer;
+
+pub const WALL_CLOCK: &str = "wall-clock";
+pub const UNORDERED_ITER: &str = "unordered-iter";
+pub const AMBIENT_ENTROPY: &str = "ambient-entropy";
+pub const UNWRAP_IN_LIB: &str = "unwrap-in-lib";
+pub const STATS_KEY_STYLE: &str = "stats-key-style";
+pub const ANNOTATION: &str = "annotation";
+
+/// One lint rule, with the prose that docs/LINT.md renders.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub id: &'static str,
+    /// One-line summary.
+    pub summary: &'static str,
+    /// What the rule matches, and where.
+    pub matches: &'static str,
+    /// How to fix a finding — or what a justification must argue.
+    pub action: &'static str,
+    /// Can an allow annotation suppress it?
+    pub suppressible: bool,
+}
+
+/// The rule table, in report order. Field strings are single-line
+/// literals on purpose: `docs/LINT.md` is rendered from this table and
+/// cross-checked outside cargo, so the prose must be extractable
+/// without evaluating escape continuations.
+#[rustfmt::skip]
+pub const RULES: [Rule; 6] = [
+    Rule {
+        id: WALL_CLOCK,
+        summary: "wall-clock time is banned outside the coordinator",
+        matches: "`Instant` / `SystemTime` in any module except the coordinator allowlist (`coordinator/mod.rs`, `coordinator/sweep.rs`), where host-side sweep timing is measured and never enters a `RunRecord`",
+        action: "derive simulated numbers from ticks (1 tick = 1 ps); host-side timing belongs in the coordinator",
+        suppressible: true,
+    },
+    Rule {
+        id: UNORDERED_ITER,
+        summary: "iterating unordered containers in simulation state needs a justification",
+        matches: "`HashMap` / `HashSet` declarations and iteration (`iter`, `keys`, `values`, `retain`, `drain`, `into_iter`, `for .. in ..`) in the sim-state modules: cache, cpu, cxl, devices, dram, mem, pmem, pool, sim, ssd, topology, trace, workloads",
+        action: "use `BTreeMap`/`BTreeSet` where order can reach any output, or annotate with an argument why iteration order is unobservable",
+        suppressible: true,
+    },
+    Rule {
+        id: AMBIENT_ENTROPY,
+        summary: "ambient entropy sources are banned",
+        matches: "`thread_rng`, `from_entropy`, `getrandom`, `RandomState`, `DefaultHasher` and the `rand::` crate path, anywhere in library code",
+        action: "seeds must trace to `testing::mix64` / `testing::mix_finalize` (sweep seeds derive from sweep coordinates); hash containers must not feed hashed order into results",
+        suppressible: true,
+    },
+    Rule {
+        id: UNWRAP_IN_LIB,
+        summary: "unwrap/expect/panic in library code needs a justification",
+        matches: "`.unwrap()`, `.expect(..)` and the `panic!` family (`unreachable!`, `todo!`, `unimplemented!`) outside `#[cfg(test)]` items",
+        action: "convert fallible paths to the crate's `Result` with context, or annotate with the invariant that makes the failure impossible",
+        suppressible: true,
+    },
+    Rule {
+        id: STATS_KEY_STYLE,
+        summary: "stats keys are lowercase dotted identifiers",
+        matches: "string literals inside `fn stats_kv` / `fn device_stats_kv` bodies whose text (after dropping format placeholders) strays outside lowercase letters, digits, dots, underscores and dashes",
+        action: "rename the key to the label-prefix convention (`member.metric`, e.g. `m0.cxl-dram.svc_p50_ns`)",
+        suppressible: true,
+    },
+    Rule {
+        id: ANNOTATION,
+        summary: "allow annotations must parse and justify",
+        matches: "any `simlint:` comment that is not `allow(<rule>): <justification>` with a known rule and a non-empty justification",
+        action: "fix the annotation; this meta-rule cannot be suppressed",
+        suppressible: false,
+    },
+];
+
+/// Top-level `rust/src` directories holding simulation state, where
+/// unordered iteration can silently break run-to-run determinism.
+const SIM_STATE_DIRS: [&str; 13] = [
+    "cache",
+    "cpu",
+    "cxl",
+    "devices",
+    "dram",
+    "mem",
+    "pmem",
+    "pool",
+    "sim",
+    "ssd",
+    "topology",
+    "trace",
+    "workloads",
+];
+
+/// Files allowed to read the wall clock: host-side sweep timing that
+/// never enters a run artifact.
+const WALL_CLOCK_ALLOWED: [&str; 2] = ["coordinator/mod.rs", "coordinator/sweep.rs"];
+
+const ENTROPY_WORDS: [&str; 5] = [
+    "thread_rng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+    "DefaultHasher",
+];
+
+const PANIC_MACROS: [&str; 4] = ["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+const ITER_METHODS: [&str; 10] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".retain(",
+    ".drain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+];
+
+/// One finding, keyed for the `file:line: rule: message` report line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// A finding silenced by a justified allow annotation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Suppression {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub justification: String,
+}
+
+/// Rule-engine output for one file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub suppressed: Vec<Suppression>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does `code` contain `word` with non-ident chars on both sides?
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(rel) = code[start..].find(word) {
+        let idx = start + rel;
+        let end = idx + word.len();
+        let before_ok = idx == 0 || !is_ident_byte(bytes[idx - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// A `rand::` path use (word boundary before `rand`).
+fn has_rand_path(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(rel) = code[start..].find("rand::") {
+        let idx = start + rel;
+        if idx == 0 || !is_ident_byte(bytes[idx - 1]) {
+            return true;
+        }
+        start = idx + "rand::".len();
+    }
+    false
+}
+
+fn leading_ident(s: &str) -> &str {
+    let bytes = s.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() && is_ident_byte(bytes[i]) {
+        i += 1;
+    }
+    &s[..i]
+}
+
+fn trailing_ident(s: &str) -> &str {
+    let bytes = s.as_bytes();
+    let mut i = bytes.len();
+    while i > 0 && is_ident_byte(bytes[i - 1]) {
+        i -= 1;
+    }
+    &s[i..]
+}
+
+fn valid_ident(s: &str) -> bool {
+    !s.is_empty() && !s.as_bytes()[0].is_ascii_digit()
+}
+
+/// Idents bound to an unordered container on this line: field or
+/// binding type annotations (`name: HashMap<..>`) and constructor
+/// bindings (`let [mut] name = HashMap::new()`).
+fn decl_idents(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for ty in ["HashMap", "HashSet"] {
+        typed_decls(code, ty, &mut out);
+        if let Some(id) = let_ctor_ident(code, ty) {
+            out.push(id);
+        }
+    }
+    out
+}
+
+/// `name: [std::collections::]Ty<` — struct fields and typed lets.
+fn typed_decls(code: &str, ty: &str, out: &mut Vec<String>) {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(rel) = code[start..].find(ty) {
+        let idx = start + rel;
+        start = idx + ty.len();
+        if !code[idx + ty.len()..].starts_with('<') {
+            continue;
+        }
+        if idx > 0 && is_ident_byte(bytes[idx - 1]) {
+            continue;
+        }
+        let mut head = &code[..idx];
+        if let Some(h) = head.strip_suffix("std::collections::") {
+            head = h;
+        }
+        let head = head.trim_end();
+        let Some(head) = head.strip_suffix(':') else {
+            continue;
+        };
+        if head.ends_with(':') {
+            continue; // `some::path::Ty<..>`, not a binding
+        }
+        let ident = trailing_ident(head.trim_end());
+        if valid_ident(ident) {
+            out.push(ident.to_string());
+        }
+    }
+}
+
+/// `let [mut] name = [std::collections::]Ty::{new,with_capacity,default}(`.
+fn let_ctor_ident(code: &str, ty: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut search = 0;
+    while let Some(rel) = code[search..].find("let ") {
+        let at = search + rel;
+        search = at + "let ".len();
+        if at > 0 && is_ident_byte(bytes[at - 1]) {
+            continue;
+        }
+        let mut rest = code[at + "let ".len()..].trim_start();
+        if let Some(r) = rest.strip_prefix("mut ") {
+            rest = r.trim_start();
+        }
+        let ident = leading_ident(rest);
+        if !valid_ident(ident) {
+            continue;
+        }
+        let after = rest[ident.len()..].trim_start();
+        let Some(after) = after.strip_prefix('=') else {
+            continue;
+        };
+        let mut after = after.trim_start();
+        if let Some(a) = after.strip_prefix("std::collections::") {
+            after = a;
+        }
+        let Some(after) = after.strip_prefix(ty) else {
+            continue;
+        };
+        let Some(after) = after.strip_prefix("::") else {
+            continue;
+        };
+        for ctor in ["new(", "with_capacity(", "default("] {
+            if after.starts_with(ctor) {
+                return Some(ident.to_string());
+            }
+        }
+    }
+    None
+}
+
+/// `ident.method(..)` with a word boundary before `ident`.
+fn word_method_call(code: &str, ident: &str, method: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(rel) = code[start..].find(ident) {
+        let idx = start + rel;
+        start = idx + ident.len();
+        if idx > 0 && is_ident_byte(bytes[idx - 1]) {
+            continue;
+        }
+        if code[idx + ident.len()..].starts_with(method) {
+            return true;
+        }
+    }
+    false
+}
+
+fn find_word_from(code: &str, word: &str, from: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut start = from.min(code.len());
+    while let Some(rel) = code[start..].find(word) {
+        let idx = start + rel;
+        let end = idx + word.len();
+        let before_ok = idx == 0 || !is_ident_byte(bytes[idx - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return Some(idx);
+        }
+        start = end;
+    }
+    None
+}
+
+/// A `for .. in ..` loop whose iterated expression names `ident`
+/// (preceded by `&` or a space — a direct borrow or move of the
+/// container, not a method-call receiver chain).
+fn for_in_iterates(code: &str, ident: &str) -> bool {
+    let Some(fpos) = find_word_from(code, "for", 0) else {
+        return false;
+    };
+    let Some(ipos) = find_word_from(code, "in", fpos + "for".len()) else {
+        return false;
+    };
+    let tail = &code[ipos + "in".len()..];
+    let bytes = tail.as_bytes();
+    let mut start = 0;
+    while let Some(rel) = tail[start..].find(ident) {
+        let idx = start + rel;
+        start = idx + ident.len();
+        if idx == 0 {
+            continue;
+        }
+        let prev = bytes[idx - 1];
+        if prev != b'&' && prev != b' ' {
+            continue;
+        }
+        let end = idx + ident.len();
+        if end < bytes.len() && is_ident_byte(bytes[end]) {
+            continue;
+        }
+        return true;
+    }
+    false
+}
+
+/// First tracked ident iterated on this line, with how.
+fn iteration_hit(code: &str, tracked: &BTreeSet<String>) -> Option<(String, String)> {
+    for ident in tracked {
+        for m in ITER_METHODS {
+            if word_method_call(code, ident, m) {
+                let how: String = m
+                    .chars()
+                    .filter(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                return Some((ident.clone(), how));
+            }
+        }
+        if for_in_iterates(code, ident) {
+            return Some((ident.clone(), "for-in loop".to_string()));
+        }
+    }
+    None
+}
+
+/// Drop `{..}` format placeholders from a key literal.
+fn strip_placeholders(s: &str) -> String {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '{' {
+            for inner in chars.by_ref() {
+                if inner == '}' {
+                    break;
+                }
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn is_stats_key(s: &str) -> bool {
+    s.chars()
+        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || matches!(c, '.' | '_' | '-'))
+}
+
+/// Run every rule over one file. `rel` is the path relative to the
+/// scan root (`rust/src`), with `/` separators — rule scoping (the
+/// sim-state dirs, the wall-clock allowlist) keys off it.
+pub fn check_file(rel: &str, text: &str) -> FileReport {
+    let lexed = lexer::lex(text);
+    let mut diagnostics: Vec<Diagnostic> = Vec::new();
+
+    // Validated allow annotations: (line, rule) -> justification.
+    let mut allows: std::collections::BTreeMap<(usize, &str), &str> =
+        std::collections::BTreeMap::new();
+    for a in &lexed.allows {
+        match RULES.iter().find(|r| r.id == a.rule) {
+            Some(rule) if rule.suppressible => {
+                allows.insert((a.line, rule.id), a.justification.as_str());
+            }
+            Some(rule) => diagnostics.push(Diagnostic {
+                file: rel.to_string(),
+                line: a.line,
+                rule: ANNOTATION,
+                message: format!("rule '{}' cannot be suppressed", rule.id),
+            }),
+            None => diagnostics.push(Diagnostic {
+                file: rel.to_string(),
+                line: a.line,
+                rule: ANNOTATION,
+                message: format!("unknown rule '{}' in allow annotation", a.rule),
+            }),
+        }
+    }
+    for (line, msg) in &lexed.bad_annotations {
+        diagnostics.push(Diagnostic {
+            file: rel.to_string(),
+            line: *line,
+            rule: ANNOTATION,
+            message: msg.clone(),
+        });
+    }
+
+    let top = rel.split('/').next().unwrap_or("");
+    let sim_state = SIM_STATE_DIRS.contains(&top);
+
+    // Unordered containers declared anywhere in the file's library
+    // code; iteration over them is then flagged on any line.
+    let mut tracked: BTreeSet<String> = BTreeSet::new();
+    if sim_state {
+        for line in &lexed.lines {
+            if !line.is_test {
+                tracked.extend(decl_idents(&line.code));
+            }
+        }
+    }
+
+    // (line, rule, message) findings before suppression.
+    let mut findings: Vec<(usize, &'static str, String)> = Vec::new();
+    let mut depth: i64 = 0;
+    // Brace depth at which the enclosing stats_kv fn opened.
+    let mut stats_span: Option<i64> = None;
+    for line in &lexed.lines {
+        let code = &line.code;
+        let ln = line.number;
+        if !line.is_test {
+            if !WALL_CLOCK_ALLOWED.contains(&rel) {
+                for w in ["Instant", "SystemTime"] {
+                    if has_word(code, w) {
+                        findings.push((
+                            ln,
+                            WALL_CLOCK,
+                            format!(
+                                "`{w}` is wall-clock time; simulated numbers must \
+                                 derive from ticks"
+                            ),
+                        ));
+                        break;
+                    }
+                }
+            }
+
+            let mut entropy_hit = false;
+            for w in ENTROPY_WORDS {
+                if has_word(code, w) {
+                    findings.push((
+                        ln,
+                        AMBIENT_ENTROPY,
+                        format!(
+                            "`{w}` is ambient entropy; seeds must trace to \
+                             testing::mix64/mix_finalize"
+                        ),
+                    ));
+                    entropy_hit = true;
+                    break;
+                }
+            }
+            if !entropy_hit && has_rand_path(code) {
+                findings.push((
+                    ln,
+                    AMBIENT_ENTROPY,
+                    "the `rand::` crate is banned; use testing::SplitMix64".to_string(),
+                ));
+            }
+
+            if code.contains(".unwrap()") || code.contains(".expect(") {
+                findings.push((
+                    ln,
+                    UNWRAP_IN_LIB,
+                    "unwrap/expect in library code: convert to the Result path \
+                     or justify with an allow annotation"
+                        .to_string(),
+                ));
+            } else {
+                for p in PANIC_MACROS {
+                    if code.contains(p) {
+                        findings.push((
+                            ln,
+                            UNWRAP_IN_LIB,
+                            format!(
+                                "`{p}(..)` in library code: convert to the Result \
+                                 path or justify with an allow annotation"
+                            ),
+                        ));
+                        break;
+                    }
+                }
+            }
+
+            if sim_state {
+                let decls = decl_idents(code);
+                if !decls.is_empty() {
+                    findings.push((
+                        ln,
+                        UNORDERED_ITER,
+                        format!(
+                            "unordered container in simulation state ({})",
+                            decls.join(", ")
+                        ),
+                    ));
+                } else if let Some((ident, how)) = iteration_hit(code, &tracked) {
+                    findings.push((
+                        ln,
+                        UNORDERED_ITER,
+                        format!("iteration over unordered `{ident}` ({how})"),
+                    ));
+                }
+            }
+
+            if stats_span.is_none()
+                && (code.contains("fn stats_kv") || code.contains("fn device_stats_kv"))
+            {
+                stats_span = Some(depth);
+            }
+            if stats_span.is_some() {
+                for s in &line.strings {
+                    let stripped = strip_placeholders(s);
+                    if !stripped.is_empty() && !is_stats_key(&stripped) {
+                        findings.push((
+                            ln,
+                            STATS_KEY_STYLE,
+                            format!(
+                                "stats key \"{s}\" is not a lowercase dotted \
+                                 identifier ([a-z0-9._-])"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        depth += code.matches('{').count() as i64 - code.matches('}').count() as i64;
+        if let Some(base) = stats_span {
+            if depth <= base {
+                stats_span = None;
+            }
+        }
+    }
+
+    let mut suppressed: Vec<Suppression> = Vec::new();
+    for (line, rule, message) in findings {
+        match allows.get(&(line, rule)) {
+            Some(just) => suppressed.push(Suppression {
+                file: rel.to_string(),
+                line,
+                rule,
+                justification: (*just).to_string(),
+            }),
+            None => diagnostics.push(Diagnostic {
+                file: rel.to_string(),
+                line,
+                rule,
+                message,
+            }),
+        }
+    }
+    diagnostics.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    suppressed.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    FileReport {
+        diagnostics,
+        suppressed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(report: &FileReport) -> Vec<&'static str> {
+        report.diagnostics.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn rule_table_ids_are_unique_and_kebab() {
+        for r in &RULES {
+            assert!(
+                r.id.chars()
+                    .all(|c| c.is_ascii_lowercase() || c == '-'),
+                "{}",
+                r.id
+            );
+            assert_eq!(RULES.iter().filter(|o| o.id == r.id).count(), 1);
+        }
+    }
+
+    #[test]
+    fn wall_clock_flags_and_allowlist_passes() {
+        let src = "use std::time::Instant;\n";
+        assert_eq!(rules_fired(&check_file("sim/mod.rs", src)), [WALL_CLOCK]);
+        assert!(check_file("coordinator/sweep.rs", src).diagnostics.is_empty());
+        // In a string it is data, not code.
+        let quoted = "let s = \"Instant\";\n";
+        assert!(check_file("sim/mod.rs", quoted).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn entropy_words_and_rand_path_flag() {
+        let r = check_file("pool/mod.rs", "let r = rand::thread_rng();\n");
+        assert_eq!(rules_fired(&r), [AMBIENT_ENTROPY]);
+        let r = check_file("results/mod.rs", "use std::collections::hash_map::RandomState;\n");
+        assert_eq!(rules_fired(&r), [AMBIENT_ENTROPY]);
+        // `operand::` is not the rand crate.
+        let r = check_file("sim/mod.rs", "let x = operand::thing();\n");
+        assert!(r.diagnostics.is_empty());
+    }
+
+    #[test]
+    fn unwrap_flags_in_lib_not_in_tests() {
+        let src = "fn f() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { y.unwrap(); z.expect(\"ok\"); }\n\
+                   }\n";
+        let r = check_file("results/mod.rs", src);
+        assert_eq!(rules_fired(&r), [UNWRAP_IN_LIB]);
+        assert_eq!(r.diagnostics[0].line, 1);
+    }
+
+    #[test]
+    fn unwrap_or_is_not_unwrap() {
+        let src = "fn f() { x.unwrap_or(0); y.unwrap_or_else(g); }\n";
+        assert!(check_file("results/mod.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn panic_macros_flag() {
+        let r = check_file("cxl/mod.rs", "fn f() { unreachable!(\"no\"); }\n");
+        assert_eq!(rules_fired(&r), [UNWRAP_IN_LIB]);
+    }
+
+    #[test]
+    fn unordered_decl_and_iteration_flag_in_sim_state() {
+        let src = "struct S { heat: HashMap<u64, u32> }\n\
+                   impl S { fn d(&mut self) { self.heat.retain(|_, h| *h > 0); } }\n";
+        let r = check_file("pool/x.rs", src);
+        assert_eq!(rules_fired(&r), [UNORDERED_ITER, UNORDERED_ITER]);
+        // Same text outside sim-state dirs: no unordered-iter rule.
+        assert!(check_file("results/x.rs", src).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn let_ctor_and_for_loop_flag() {
+        let src = "fn f() {\n\
+                       let mut seen = HashSet::new();\n\
+                       for x in &seen { g(x); }\n\
+                   }\n";
+        let r = check_file("sim/x.rs", src);
+        assert_eq!(rules_fired(&r), [UNORDERED_ITER, UNORDERED_ITER]);
+        assert_eq!(r.diagnostics[1].line, 3);
+    }
+
+    #[test]
+    fn lookup_only_maps_pass() {
+        let src = "struct S { map: HashMap<u64, usize> }\n\
+                   // simlint: allow(unordered-iter): lookup-only map\n\
+                   impl S { fn g(&self, k: u64) -> Option<&usize> { self.map.get(&k) } }\n";
+        // The decl still needs its annotation, but plain get() is fine.
+        let r = check_file("ssd/x.rs", src);
+        assert_eq!(rules_fired(&r), [UNORDERED_ITER]);
+        assert_eq!(r.diagnostics[0].line, 1);
+    }
+
+    #[test]
+    fn justified_allow_suppresses_and_is_reported() {
+        let src = "struct S {\n\
+                       // simlint: allow(unordered-iter): decayed uniformly, order-free\n\
+                       heat: HashMap<u64, u32>,\n\
+                   }\n";
+        let r = check_file("pool/x.rs", src);
+        assert!(r.diagnostics.is_empty());
+        assert_eq!(r.suppressed.len(), 1);
+        assert_eq!(r.suppressed[0].rule, UNORDERED_ITER);
+        assert_eq!(r.suppressed[0].justification, "decayed uniformly, order-free");
+    }
+
+    #[test]
+    fn allow_without_justification_is_rejected_and_does_not_suppress() {
+        let src = "fn f() { x.unwrap(); } // simlint: allow(unwrap-in-lib)\n";
+        let r = check_file("results/x.rs", src);
+        let mut rules = rules_fired(&r);
+        rules.sort_unstable();
+        assert_eq!(rules, [ANNOTATION, UNWRAP_IN_LIB]);
+        assert!(r.suppressed.is_empty());
+    }
+
+    #[test]
+    fn allow_with_unknown_rule_is_rejected() {
+        let src = "fn f() {} // simlint: allow(no-such-rule): because\n";
+        let r = check_file("results/x.rs", src);
+        assert_eq!(rules_fired(&r), [ANNOTATION]);
+    }
+
+    #[test]
+    fn allow_for_wrong_rule_does_not_suppress() {
+        let src = "// simlint: allow(wall-clock): wrong rule\n\
+                   fn f() { x.unwrap(); }\n";
+        let r = check_file("results/x.rs", src);
+        assert_eq!(rules_fired(&r), [UNWRAP_IN_LIB]);
+    }
+
+    #[test]
+    fn stats_key_style_inside_stats_kv_only() {
+        let src = "fn stats_kv(&self) -> Vec<(String, f64)> {\n\
+                       out.push((\"row_hit_rate\".to_string(), x));\n\
+                       out.push((\"BadKey\".to_string(), y));\n\
+                       out.push((format!(\"m{i}.{kind}.svc_p50_ns\"), z));\n\
+                   }\n\
+                   fn other(&self) { takes(\"Not A Key\"); }\n";
+        let r = check_file("devices/x.rs", src);
+        assert_eq!(rules_fired(&r), [STATS_KEY_STYLE]);
+        assert_eq!(r.diagnostics[0].line, 3);
+    }
+
+    #[test]
+    fn clean_source_is_clean() {
+        let src = "pub fn add(a: u64, b: u64) -> u64 {\n    a + b\n}\n";
+        for rel in ["sim/x.rs", "results/x.rs", "coordinator/mod.rs"] {
+            let r = check_file(rel, src);
+            assert!(r.diagnostics.is_empty(), "{rel}: {:?}", r.diagnostics);
+        }
+    }
+}

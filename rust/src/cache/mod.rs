@@ -114,12 +114,12 @@ impl PageCache {
 
         if let Some(idx) = self.frame_idx(page) {
             // Present — but a just-allocated frame may still be filling.
-            let ready = self.frames[idx].as_ref().unwrap().ready;
+            let ready = self.frame(idx).ready;
             if now < ready {
                 if let Some(tracked) = self.mshr.in_flight(page) {
                     self.stats.mshr_merges += 1;
                     if is_write {
-                        self.frames[idx].as_mut().unwrap().dirty = true;
+                        self.frame_mut(idx).dirty = true;
                     }
                     return Lookup::MshrMerge { ready: tracked };
                 }
@@ -128,14 +128,14 @@ impl PageCache {
                 self.stats.redundant_fills += 1;
                 self.stats.misses += 1;
                 if is_write {
-                    self.frames[idx].as_mut().unwrap().dirty = true;
+                    self.frame_mut(idx).dirty = true;
                 }
                 return Lookup::Miss { writeback: None };
             }
             self.stats.hits += 1;
             self.policy.on_hit(idx, page);
             if is_write {
-                self.frames[idx].as_mut().unwrap().dirty = true;
+                self.frame_mut(idx).dirty = true;
             }
             return Lookup::Hit;
         }
@@ -188,6 +188,18 @@ impl PageCache {
         }
     }
 
+    /// The occupied frame at `idx` (an index `frame_idx` returned).
+    fn frame(&self, idx: usize) -> &Frame {
+        // simlint: allow(unwrap-in-lib): frame_idx only resolves occupied frames
+        self.frames[idx].as_ref().expect("occupied frame")
+    }
+
+    /// Mutable view of the occupied frame at `idx`.
+    fn frame_mut(&mut self, idx: usize) -> &mut Frame {
+        // simlint: allow(unwrap-in-lib): frame_idx only resolves occupied frames
+        self.frames[idx].as_mut().expect("occupied frame")
+    }
+
     /// Pick and clear the frame for `page`'s residence.
     fn allocate(&mut self, page: u64) -> (usize, Option<Frame>) {
         let idx = match self.policy.kind() {
@@ -199,6 +211,7 @@ impl PageCache {
                     self.frames
                         .iter()
                         .position(|f| f.is_none())
+                        // simlint: allow(unwrap-in-lib): occupied < n_frames guarantees a free frame
                         .expect("occupancy count out of sync")
                 } else {
                     self.policy.victim()

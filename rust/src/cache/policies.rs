@@ -300,14 +300,19 @@ impl Policy {
     /// subsequent [`on_evict`](Self::on_evict) removes the bookkeeping.
     pub fn victim(&mut self) -> usize {
         match &mut self.inner {
+            // simlint: allow(unwrap-in-lib): Cache::allocate never asks Direct for a victim
             Inner::Direct => unreachable!("direct mapping computes its frame"),
+            // simlint: allow(unwrap-in-lib): victim() is only called with every frame occupied
             Inner::Lru(l) => l.lru().expect("victim() on empty LRU"),
+            // simlint: allow(unwrap-in-lib): victim() is only called with every frame occupied
             Inner::Fifo(q) => *q.front().expect("victim() on empty FIFO"),
             Inner::TwoQ(t) => {
                 // Evict from A1in while it exceeds its share; else Am LRU.
                 if t.a1in.len() > t.a1in_cap || t.am.lru().is_none() {
+                    // simlint: allow(unwrap-in-lib): a full cache keeps at least one queue nonempty
                     *t.a1in.front().expect("2Q victim with both queues empty")
                 } else {
+                    // simlint: allow(unwrap-in-lib): the branch guard checked lru().is_some()
                     t.am.lru().unwrap()
                 }
             }

@@ -6,7 +6,9 @@
 //! cxl-ssd-sim sweep --experiment all|fig3|fig4|fig5|fig6|policies|mlp|replay|pool|mshr|fastmode
 //!                   [--jobs N] [--quick] [--out dir]
 //! cxl-ssd-sim report --figures <dir> | --baseline <dir> --candidate <dir> | --bench <dir>
-//! cxl-ssd-sim docs [--out docs/CONFIG.md]
+//! cxl-ssd-sim docs [--kind config|lint] [--out docs/CONFIG.md]
+//! cxl-ssd-sim lint [--root dir] [--format text|json] [--out file]
+//!                  [--baseline file] [--write-baseline]
 //! cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
 //! cxl-ssd-sim trace replay --in <file> --device <dev> [--fast] [--artifacts dir]
 //! ```
@@ -39,7 +41,9 @@ USAGE:
   cxl-ssd-sim report --figures <dir>
   cxl-ssd-sim report --baseline <dir> --candidate <dir> [--threshold <pct>]
   cxl-ssd-sim report --bench <dir> [--bench-out <file>]
-  cxl-ssd-sim docs  [--out <file>]
+  cxl-ssd-sim docs  [--kind <config|lint>] [--out <file>]
+  cxl-ssd-sim lint  [--root <dir>] [--format <text|json>] [--out <file>]
+                    [--baseline <file>] [--write-baseline]
   cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
   cxl-ssd-sim trace gen    --kind <uniform|zipf|seq|mixed> --out <file>
                     [--ops <N>] [--footprint <bytes>] [--write-ratio <0..1>]
@@ -85,8 +89,18 @@ job: resolved config, seeds, counters, latency histogram). 'report
 and exits nonzero on drift beyond --threshold (default 0: the
 simulator is bit-deterministic, any drift is a change); 'report
 --bench dir' exports headline metrics as BENCH_sweep.json for the
-perf trajectory. 'docs' prints the generated config-key reference
-(docs/CONFIG.md).
+perf trajectory. 'docs' prints a generated reference: --kind config
+(default, docs/CONFIG.md) or --kind lint (docs/LINT.md).
+
+Static analysis: 'lint' scans the simulator's own sources (default
+rust/src) for determinism and offline-invariant hazards — wall-clock
+reads, ambient entropy, order-unstable iteration near simulation
+state, panicking escape hatches, stats-key style — printing
+file:line: rule-id: message diagnostics (--format json for the
+machine-readable report). Suppressions are inline
+'simlint: allow(<rule>): <justification>' comments; the checked-in
+baseline (rust/simlint.baseline.json) caps per-rule counts and the
+command exits nonzero when any rule exceeds it. See docs/LINT.md.
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positional words.
@@ -106,7 +120,8 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // Switches (no value) vs flags (value follows).
-                let is_switch = matches!(name, "quick" | "fast" | "help" | "closed");
+                let is_switch =
+                    matches!(name, "quick" | "fast" | "help" | "closed" | "write-baseline");
                 if is_switch {
                     switches.push(name.to_string());
                 } else if i + 1 < argv.len() {
@@ -317,7 +332,9 @@ pub fn main(argv: &[String]) -> Result<i32> {
                     let mut sections = report::campaign_sections(&run.campaign);
                     sections.push((
                         "sweep summary (per job)".to_string(),
-                        run.summary.take().expect("all campaign has a summary"),
+                        run.summary
+                            .take()
+                            .context("the 'all' campaign always builds a summary table")?,
                     ));
                     print_sections(&sections);
                     println!(
@@ -399,14 +416,70 @@ pub fn main(argv: &[String]) -> Result<i32> {
             return Ok(if diff.passes() { 0 } else { 1 });
         }
         "docs" => {
-            let text = crate::config::render_config_md();
+            let kind = args.get("kind").unwrap_or("config");
+            let text = match kind {
+                "config" => crate::config::render_config_md(),
+                "lint" => crate::analysis::render_lint_md(),
+                other => bail!("unknown docs kind '{other}' (want config|lint)"),
+            };
             match args.get("out") {
                 Some(path) => {
                     std::fs::write(path, &text)
-                        .with_context(|| format!("writing config reference to {path}"))?;
-                    println!("wrote config reference to {path}");
+                        .with_context(|| format!("writing {kind} reference to {path}"))?;
+                    println!("wrote {kind} reference to {path}");
                 }
                 None => print!("{text}"),
+            }
+        }
+        "lint" => {
+            let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+            let root = match args.get("root") {
+                Some(dir) => std::path::PathBuf::from(dir),
+                None => manifest.join("src"),
+            };
+            let report = crate::analysis::lint_tree(&root)?;
+            let baseline_path = match args.get("baseline") {
+                Some(path) => std::path::PathBuf::from(path),
+                None => manifest.join("simlint.baseline.json"),
+            };
+            if args.has("write-baseline") {
+                let blessed = crate::analysis::Baseline::from_counts(&report.counts());
+                std::fs::write(&baseline_path, blessed.to_text()).with_context(|| {
+                    format!("writing baseline {}", baseline_path.display())
+                })?;
+                println!(
+                    "blessed {} diagnostic(s) into {}",
+                    report.diagnostics.len(),
+                    baseline_path.display()
+                );
+                return Ok(0);
+            }
+            let text = match args.get("format").unwrap_or("text") {
+                "text" => report.render_text(),
+                "json" => report.to_json().to_text(),
+                other => bail!("unknown lint format '{other}' (want text|json)"),
+            };
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &text)
+                        .with_context(|| format!("writing lint report to {path}"))?;
+                    println!("wrote lint report to {path}");
+                }
+                None => print!("{text}"),
+            }
+            // Missing baseline file means the strictest possible ratchet:
+            // every rule capped at zero.
+            let baseline = if baseline_path.exists() {
+                crate::analysis::Baseline::load(&baseline_path)?
+            } else {
+                crate::analysis::Baseline::zero()
+            };
+            let violations = baseline.violations(&report.counts());
+            if !violations.is_empty() {
+                for v in &violations {
+                    eprintln!("simlint: {v}");
+                }
+                return Ok(1);
             }
         }
         "trace" => {
@@ -746,5 +819,62 @@ mod tests {
         assert_eq!(main(&argv(&format!("docs --out {path}"))).unwrap(), 0);
         let text = std::fs::read_to_string(path).unwrap();
         assert_eq!(text, crate::config::render_config_md());
+    }
+
+    #[test]
+    fn docs_kind_lint_writes_rule_reference() {
+        let path = "/tmp/cxl_ssd_sim_cli_lint_docs.md";
+        let _ = std::fs::remove_file(path);
+        assert_eq!(
+            main(&argv(&format!("docs --kind lint --out {path}"))).unwrap(),
+            0
+        );
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text, crate::analysis::render_lint_md());
+        assert!(main(&argv("docs --kind bogus")).is_err());
+    }
+
+    #[test]
+    fn lint_self_scan_is_clean() {
+        // The shipped tree is fully self-applied against the all-zero
+        // committed baseline, so the default invocation must exit 0.
+        assert_eq!(main(&argv("lint")).unwrap(), 0);
+    }
+
+    #[test]
+    fn lint_json_report_lands_in_out_file() {
+        let out = "/tmp/cxl_ssd_sim_cli_lint.json";
+        let _ = std::fs::remove_file(out);
+        let code = main(&argv(&format!("lint --format json --out {out}"))).unwrap();
+        assert_eq!(code, 0);
+        let json = crate::results::json::Json::parse(&std::fs::read_to_string(out).unwrap())
+            .unwrap();
+        assert!(json.field("files").unwrap().as_u64().unwrap() > 10);
+        assert!(json.field("counts").is_ok());
+        assert!(main(&argv("lint --format yaml")).is_err());
+    }
+
+    #[test]
+    fn lint_flags_injected_violation() {
+        let root = "/tmp/cxl_ssd_sim_cli_lint_root";
+        let _ = std::fs::remove_dir_all(root);
+        std::fs::create_dir_all(format!("{root}/sim")).unwrap();
+        std::fs::write(
+            format!("{root}/sim/bad.rs"),
+            "pub fn now() -> std::time::Instant { std::time::Instant::now() }\n",
+        )
+        .unwrap();
+        // Default (all-zero) baseline: one wall-clock diagnostic fails.
+        assert_eq!(main(&argv(&format!("lint --root {root}"))).unwrap(), 1);
+        // Blessing the current counts makes the same scan pass, and the
+        // blessed file round-trips through the ratchet check.
+        let bl = format!("{root}/baseline.json");
+        let code = main(&argv(&format!(
+            "lint --root {root} --baseline {bl} --write-baseline"
+        )))
+        .unwrap();
+        assert_eq!(code, 0);
+        let code = main(&argv(&format!("lint --root {root} --baseline {bl}"))).unwrap();
+        assert_eq!(code, 0);
     }
 }

@@ -3,6 +3,12 @@
 //! and the key registry ([`registry`]) that documents and serializes
 //! every recognized key.
 
+// Audited by the `unwrap-in-lib` lint pass: the parser, presets and
+// registry surface every failure as ConfigError/Result; the unwraps in
+// this subtree all live in `#[cfg(test)]` modules, and this deny keeps
+// it that way.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 mod parser;
 pub mod presets;
 pub mod registry;

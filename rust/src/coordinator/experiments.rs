@@ -181,6 +181,7 @@ fn fig_heading(id: &str) -> &'static str {
         "policies" => "SIII-C: cache policy sweep (Viper 216B)",
         "mlp" => "MLP sweep: stream triad MB/s per outstanding-request window",
         "replay" => "Replay campaign: response-latency percentiles per device",
+        // simlint: allow(unwrap-in-lib): section ids come from the fixed experiment tables above
         other => unreachable!("no heading for section '{other}'"),
     }
 }
@@ -346,6 +347,7 @@ fn replay_campaign_build(base: &SimConfig, scale: ExpScale, n_workers: usize) ->
     // Capture the post-cache device stream once; every job shares it.
     let (_, captured) =
         sweep::run_spec(DeviceKind::CxlSsdCached, &scale.viper_spec(216), base, true);
+    // simlint: allow(unwrap-in-lib): run_spec(capture=true) always returns a trace
     let captured = captured.expect("capture requested");
     let mode = ReplayMode::from_config(base);
     let jobs = SweepSpec::new(base.clone())
@@ -577,6 +579,7 @@ fn all_campaign(base: &SimConfig, scale: ExpScale, n_workers: usize) -> Campaign
 // ------------------------------------------------- raw-tuple extraction
 
 fn device_of(r: &RunRecord) -> DeviceKind {
+    // simlint: allow(unwrap-in-lib): records are built from DeviceKind::name round-trips
     DeviceKind::parse(&r.device).expect("records carry canonical device names")
 }
 
@@ -624,6 +627,7 @@ fn policy_raw(records: &[RunRecord]) -> Vec<(PolicyKind, f64, f64)> {
         .iter()
         .map(|r| {
             (
+                // simlint: allow(unwrap-in-lib): records are built from PolicyKind::name round-trips
                 PolicyKind::parse(&r.policy).expect("policy sweep records carry policy names"),
                 r.metric_or("cache_hit_rate", 0.0),
                 r.metric_or("viper.aggregate_qps", f64::NAN),
@@ -643,6 +647,7 @@ fn mlp_raw(records: &[RunRecord]) -> Vec<(usize, DeviceKind, f64)> {
             let r = records
                 .iter()
                 .find(|r| &r.device == device && r.mlp == mlp)
+                // simlint: allow(unwrap-in-lib): mlp_axes pivots the same records it scans here
                 .expect("mlp sweep is a full cross product");
             raw.push((mlp, device_of(r), r.metric_or("stream.triad_mbs", f64::NAN)));
         }
@@ -690,7 +695,7 @@ pub fn fig3_bandwidth_cfg(
     scale: ExpScale,
     n_workers: usize,
 ) -> (Table, Vec<(DeviceKind, Vec<f64>)>) {
-    let run = build_campaign("fig3", base, scale, n_workers).expect("known experiment");
+    let run = build_campaign("fig3", base, scale, n_workers).expect("known experiment"); // simlint: allow(unwrap-in-lib): literal experiment name defined in this module
     let sec = &run.campaign.sections[0];
     (report::section_table(sec), stream_raw(&sec.records))
 }
@@ -707,7 +712,7 @@ pub fn fig4_latency_cfg(
     scale: ExpScale,
     n_workers: usize,
 ) -> (Table, Vec<(DeviceKind, f64)>) {
-    let run = build_campaign("fig4", base, scale, n_workers).expect("known experiment");
+    let run = build_campaign("fig4", base, scale, n_workers).expect("known experiment"); // simlint: allow(unwrap-in-lib): literal experiment name defined in this module
     let sec = &run.campaign.sections[0];
     (report::section_table(sec), membench_raw(&sec.records))
 }
@@ -729,7 +734,7 @@ pub fn fig56_viper_cfg(
     n_workers: usize,
 ) -> (Table, Vec<(DeviceKind, Vec<(String, f64)>)>) {
     let exp = if record_bytes == 532 { "fig6" } else { "fig5" };
-    let run = build_campaign(exp, base, scale, n_workers).expect("known experiment");
+    let run = build_campaign(exp, base, scale, n_workers).expect("known experiment"); // simlint: allow(unwrap-in-lib): literal experiment name defined in this module
     let sec = &run.campaign.sections[0];
     (report::section_table(sec), viper_raw(&sec.records))
 }
@@ -753,7 +758,7 @@ pub fn mlp_sweep_cfg(
     scale: ExpScale,
     n_workers: usize,
 ) -> (Table, Vec<(usize, DeviceKind, f64)>) {
-    let run = build_campaign("mlp", base, scale, n_workers).expect("known experiment");
+    let run = build_campaign("mlp", base, scale, n_workers).expect("known experiment"); // simlint: allow(unwrap-in-lib): literal experiment name defined in this module
     let sec = &run.campaign.sections[0];
     (report::section_table(sec), mlp_raw(&sec.records))
 }
@@ -795,7 +800,7 @@ pub fn replay_campaign_cfg(
     scale: ExpScale,
     n_workers: usize,
 ) -> (Table, Vec<(DeviceKind, String, ReplayResult)>) {
-    let run = build_campaign("replay", base, scale, n_workers).expect("known experiment");
+    let run = build_campaign("replay", base, scale, n_workers).expect("known experiment"); // simlint: allow(unwrap-in-lib): literal experiment name defined in this module
     let sec = &run.campaign.sections[0];
     (report::section_table(sec), replay_raw(&sec.records))
 }
@@ -843,7 +848,7 @@ pub fn pool_campaign_cfg(
     scale: ExpScale,
     n_workers: usize,
 ) -> PoolCampaignReport {
-    let run = build_campaign("pool", base, scale, n_workers).expect("known experiment");
+    let run = build_campaign("pool", base, scale, n_workers).expect("known experiment"); // simlint: allow(unwrap-in-lib): literal experiment name defined in this module
     let sections = report::campaign_sections(&run.campaign);
     let bw = &run.campaign.sections[0].records;
     let bandwidth = bw
@@ -895,10 +900,11 @@ pub fn all_figures(scale: ExpScale, n_workers: usize) -> AllFiguresReport {
 
 /// The combined campaign over a caller-supplied base config.
 pub fn all_figures_cfg(base: &SimConfig, scale: ExpScale, n_workers: usize) -> AllFiguresReport {
-    let run = build_campaign("all", base, scale, n_workers).expect("known experiment");
+    let run = build_campaign("all", base, scale, n_workers).expect("known experiment"); // simlint: allow(unwrap-in-lib): literal experiment name defined in this module
     let mut sections = report::campaign_sections(&run.campaign);
     sections.push((
         "sweep summary (per job)".to_string(),
+        // simlint: allow(unwrap-in-lib): build_campaign("all") always fills the summary
         run.summary.expect("all campaign builds a summary"),
     ));
     AllFiguresReport {
@@ -944,7 +950,7 @@ pub fn mshr_ablation_cfg(base: &SimConfig, scale: ExpScale) -> (Table, Vec<(usiz
             now += 100 * crate::sim::US;
         }
         now += 50 * crate::sim::MS; // let the die queues drain
-        let kv0: std::collections::HashMap<String, f64> =
+        let kv0: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         let base_reads = kv0["ssd_page_reads"];
 
@@ -959,7 +965,7 @@ pub fn mshr_ablation_cfg(base: &SimConfig, scale: ExpScale) -> (Table, Vec<(usiz
                 n += 1;
             }
         }
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         let ssd_reads = kv["ssd_page_reads"] - base_reads;
         let redundant = kv["redundant_fills"];

@@ -48,6 +48,7 @@ pub fn run_with_trace(
     cfg: &SimConfig,
 ) -> (RunOutput, Trace) {
     let (out, trace) = run_inner(device, workload, cfg, true);
+    // simlint: allow(unwrap-in-lib): run_inner always captures when asked (capture=true)
     (out, trace.expect("trace requested"))
 }
 

@@ -278,6 +278,7 @@ pub fn run_spec(
                 .run(&mut core, &mut sys),
             );
         }
+        // simlint: allow(unwrap-in-lib): the replay arm returned earlier in this function
         WorkloadSpec::Replay { .. } => unreachable!("replay handled above"),
     }
     sys.drain(core.now());
@@ -326,6 +327,7 @@ pub fn execute(jobs: &[RunJob], n_workers: usize) -> Vec<RunOutput> {
                     break;
                 }
                 let out = run_job(&jobs[i]);
+                // simlint: allow(unwrap-in-lib): a poisoned slot means a worker already panicked
                 *slots[i].lock().expect("result slot poisoned") = Some(out);
             });
         }
@@ -335,7 +337,9 @@ pub fn execute(jobs: &[RunJob], n_workers: usize) -> Vec<RunOutput> {
         .into_iter()
         .map(|m| {
             m.into_inner()
+                // simlint: allow(unwrap-in-lib): a poisoned slot means a worker already panicked
                 .expect("result slot poisoned")
+                // simlint: allow(unwrap-in-lib): fetch_add hands every index to exactly one worker
                 .expect("worker pool drained every job")
         })
         .collect()

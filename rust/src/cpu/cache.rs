@@ -73,13 +73,15 @@ impl HostCache {
         // Allocate: free way or LRU victim.
         let way = match set.iter().position(|l| l.is_none()) {
             Some(w) => w,
-            None => {
-                set.iter()
-                    .enumerate()
-                    .min_by_key(|(_, l)| l.unwrap().stamp)
-                    .map(|(w, _)| w)
-                    .unwrap()
-            }
+            // Every way is occupied in this branch, so the LRU scan sees
+            // the full set; an empty set cannot reach here (ways >= 1).
+            None => set
+                .iter()
+                .enumerate()
+                .filter_map(|(w, l)| l.as_ref().map(|line| (w, line.stamp)))
+                .min_by_key(|&(_, stamp)| stamp)
+                .map(|(w, _)| w)
+                .unwrap_or(0),
         };
         let evicted = set[way];
         set[way] = Some(Line {

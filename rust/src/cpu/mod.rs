@@ -187,8 +187,11 @@ impl Core {
     }
 
     /// Stall until the oldest pending store can issue, then issue it.
+    /// No-op when the pending queue is empty.
     fn issue_front_store(&mut self, sys: &mut System) {
-        let (addr, size, ready) = *self.pending_stores.front().expect("caller checked");
+        let Some(&(addr, size, ready)) = self.pending_stores.front() else {
+            return;
+        };
         if ready > self.now {
             self.stats.store_stall_ticks += ready - self.now;
             self.now = ready;
@@ -218,12 +221,13 @@ impl Core {
         self.now += self.cfg.t_op_gap;
         self.drain_completed();
         if self.store_buffer.len() >= self.cfg.store_buffer.max(1) {
-            let front = *self.store_buffer.front().unwrap();
-            if front > self.now {
-                self.stats.store_stall_ticks += front - self.now;
-                self.now = front;
+            if let Some(&front) = self.store_buffer.front() {
+                if front > self.now {
+                    self.stats.store_stall_ticks += front - self.now;
+                    self.now = front;
+                }
+                self.store_buffer.pop_front();
             }
-            self.store_buffer.pop_front();
         }
         // Stores drain in order: each begins after its predecessor.
         let issue = self
@@ -259,12 +263,13 @@ impl Core {
         for _ in 0..n {
             self.drain_completed();
             if self.store_buffer.len() >= self.cfg.store_buffer.max(1) {
-                let front = *self.store_buffer.front().unwrap();
-                if front > self.now {
-                    self.stats.store_stall_ticks += front - self.now;
-                    self.now = front;
+                if let Some(&front) = self.store_buffer.front() {
+                    if front > self.now {
+                        self.stats.store_stall_ticks += front - self.now;
+                        self.now = front;
+                    }
+                    self.store_buffer.pop_front();
                 }
-                self.store_buffer.pop_front();
             }
             let done = sys.store_line_nt(self.now, a);
             self.stats.store_latency.record(done.saturating_sub(self.now));

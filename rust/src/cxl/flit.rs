@@ -158,7 +158,7 @@ impl Flit {
             None
         };
         let tag = u16::from_le_bytes([b[2], b[3]]);
-        let addr = u64::from_le_bytes(b[4..12].try_into().unwrap());
+        let addr = u64::from_le_bytes([b[4], b[5], b[6], b[7], b[8], b[9], b[10], b[11]]);
         if addr % 64 != 0 {
             return Err(FlitDecodeError::UnalignedAddr(addr));
         }

@@ -107,6 +107,7 @@ impl HomeAgent {
                 self.stats.m2s_rwd += 1;
                 Flit::m2s_rwd(tag, addr, blocks, meta)
             }
+            // simlint: allow(unwrap-in-lib): to_cxl_cmd returned Some only for the two M2S commands
             _ => unreachable!("to_cxl_cmd only yields M2S commands"),
         };
 
@@ -118,6 +119,7 @@ impl HomeAgent {
         #[cfg(debug_assertions)]
         {
             let wire = flit.encode();
+            // simlint: allow(unwrap-in-lib): debug-only codec round-trip check; a failure IS the bug
             let decoded = Flit::decode(&wire).expect("self-encoded flit must decode");
             debug_assert_eq!(decoded, flit);
         }
@@ -190,6 +192,7 @@ impl HomeAgent {
         let earliest = self
             .completions
             .pop_front()
+            // simlint: allow(unwrap-in-lib): outstanding == credits > 0 implies a queued completion
             .expect("outstanding == credits implies a pending completion");
         let start = now.max(earliest);
         self.stats.credit_stall_ticks += start - now;

@@ -289,6 +289,7 @@ impl MemoryDevice for CxlDram {
         let (arrival, flit) = self
             .ha
             .outbound(now, &pkt)
+            // simlint: allow(unwrap-in-lib): Packet::read/write commands always map to M2S flits
             .expect("read/write always converts");
         let lat = self.dram.access(arrival, line_index(flit.addr), is_write);
         self.ha.inbound(arrival + lat, &flit)
@@ -367,6 +368,7 @@ impl MemoryDevice for CxlSsd {
         } else {
             Packet::read(addr, 64, now)
         };
+        // simlint: allow(unwrap-in-lib): Packet::read/write commands always map to M2S flits
         let (arrival, flit) = self.ha.outbound(now, &pkt).expect("converts");
         let lat = self.ssd.access_line(arrival, line_index(flit.addr), is_write);
         self.ha.inbound(arrival + lat, &flit)
@@ -464,6 +466,7 @@ impl MemoryDevice for CxlSsdCached {
         } else {
             Packet::read(addr, 64, now)
         };
+        // simlint: allow(unwrap-in-lib): Packet::read/write commands always map to M2S flits
         let (arrival, flit) = self.ha.outbound(now, &pkt).expect("converts");
         let lat = self.service(arrival, flit.addr, is_write);
         self.ha.inbound(arrival + lat, &flit)
@@ -644,7 +647,7 @@ mod tests {
             now += l + US;
         }
         dev.flush(now);
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         assert!(kv["flash_programs"] >= 4.0);
     }
@@ -662,12 +665,12 @@ mod tests {
             now += l + US;
         }
         dev.flush(now);
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         let programs = kv["flash_programs"];
         assert!(programs >= 4.0);
         dev.flush(now + US);
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         assert_eq!(
             kv["flash_programs"], programs,
@@ -684,14 +687,14 @@ mod tests {
         let mut dev = CxlSsdCached::new(&c);
         dev.access(0, 0, true); // dirty page 0
         dev.flush(US); // page 0 written back, now clean
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         let programs = kv["flash_programs"];
         // Conflicting read evicts the (clean) page 0: no write-back.
         let frames = c.dcache.n_frames() as u64;
         dev.access(10 * US, frames * 4096, false);
         dev.flush(20 * US);
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         assert_eq!(
             kv["flash_programs"], programs,
@@ -716,7 +719,7 @@ mod tests {
         let t = 10 * US;
         let l0 = dev.access(t, 0, false);
         let _l1 = dev.access(t, 64, false);
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         assert!(kv["mshr_merges"] >= 1.0, "merges={}", kv["mshr_merges"]);
         // The fill is served from the SSD (ICL or flash) — far above the
@@ -738,7 +741,7 @@ mod tests {
             now += a + US;
         }
         assert_eq!(probed.latency().count(), 16);
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             probed.stats_kv().into_iter().collect();
         assert!(kv["svc_p50_ns"] > 0.0);
         assert!(kv["svc_p50_ns"] <= kv["svc_p99_ns"]);
@@ -752,7 +755,7 @@ mod tests {
         // First-ever read of a never-written page: no flash read needed.
         let lat = dev.access(0, 123 * 4096, false);
         assert!(lat < 2 * US, "unmapped fill should be cheap: {lat}");
-        let kv: std::collections::HashMap<String, f64> =
+        let kv: std::collections::BTreeMap<String, f64> =
             dev.stats_kv().into_iter().collect();
         assert_eq!(kv["flash_reads"], 0.0);
     }

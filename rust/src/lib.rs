@@ -33,7 +33,14 @@
 //!   subset; serde, rayon, criterion and proptest are replaced by
 //!   hand-rolled equivalents ([`config`], [`results::json`],
 //!   [`testing`]).
+//!
+//! Both invariants are additionally enforced *statically*: the
+//! [`analysis`] subsystem (`cxl-ssd-sim lint`) scans this crate's own
+//! sources for wall-clock reads, ambient entropy, order-unstable
+//! iteration near simulation state, and panicking escape hatches, with
+//! a zero-count checked-in baseline (see `docs/LINT.md`).
 
+pub mod analysis;
 pub mod cache;
 pub mod cli;
 pub mod config;

@@ -12,6 +12,7 @@ impl AddrRange {
         assert!(size > 0, "empty address range");
         AddrRange {
             start,
+            // simlint: allow(unwrap-in-lib): deliberate guard — a wrapping range is a config bug
             end: start.checked_add(size).expect("address range overflow"),
         }
     }

@@ -71,8 +71,8 @@ pub struct Pmem {
 impl Pmem {
     pub fn new(cfg: PmemConfig) -> Self {
         Pmem {
-            bufs: vec![None; cfg.n_bufs],
-            stamps: vec![0; cfg.n_bufs],
+            bufs: vec![None; cfg.n_bufs.max(1)],
+            stamps: vec![0; cfg.n_bufs.max(1)],
             ports: vec![0; cfg.n_ports.max(1)],
             cfg,
             stats: PmemStats::default(),
@@ -95,6 +95,7 @@ impl Pmem {
             // LRU fill (mirrors the kernel's argmin-over-stamps).
             (0..self.bufs.len())
                 .min_by_key(|&i| self.stamps[i])
+                // simlint: allow(unwrap-in-lib): bufs is built with len n_bufs.max(1)
                 .expect("n_bufs > 0")
         });
         let lat = if !is_write && hit_slot.is_some() {
@@ -110,6 +111,7 @@ impl Pmem {
             };
             let port = (0..self.ports.len())
                 .min_by_key(|&i| self.ports[i])
+                // simlint: allow(unwrap-in-lib): ports is built with len n_ports.max(1)
                 .expect("n_ports > 0");
             let done = now.max(self.ports[port]) + media;
             self.ports[port] = done;

@@ -347,6 +347,7 @@ impl PooledDevice {
             })
             .collect();
         let ranks: Vec<u8> = kinds.iter().map(|&k| tier_rank(k)).collect();
+        // simlint: allow(unwrap-in-lib): PoolSpec::parse rejects empty member lists
         let fast_rank = *ranks.iter().min().expect("nonempty members");
         let fast_members: Vec<usize> = ranks
             .iter()
@@ -431,6 +432,7 @@ impl PooledDevice {
                 (0..chunks_per_page.min(r.n))
                     .map(|j| self.ranks[((first + j) % r.n) as usize])
                     .max()
+                    // simlint: allow(unwrap-in-lib): stripe < PAGE_BYTES here, so chunks_per_page >= 1 and n >= 1
                     .expect("page maps to at least one chunk")
             }
         }
@@ -490,6 +492,7 @@ impl PooledDevice {
     /// right-shift (which preserves the ordering but stales the cached
     /// heat value, hence the epoch stamp).
     fn coldest_victim(&mut self) -> (u32, u64, usize) {
+        // simlint: allow(unwrap-in-lib): only reached from tier_touch after the heat tracker matched Some
         let tracker = self.heat.as_ref().expect("tiering enabled");
         let epochs = tracker.stats().epochs;
         if self.coldest.is_none() || self.coldest_epoch != epochs {
@@ -504,9 +507,11 @@ impl PooledDevice {
                     victim = Some((hp, p, c));
                 }
             }
+            // simlint: allow(unwrap-in-lib): caller checked promoted.len() >= max_promoted > 0
             self.coldest = Some(victim.expect("fast tier is full, so nonempty"));
             self.coldest_epoch = epochs;
         }
+        // simlint: allow(unwrap-in-lib): the branch above just filled the cache
         self.coldest.expect("just computed")
     }
 
@@ -642,7 +647,7 @@ mod tests {
         cfg
     }
 
-    fn kv(dev: &PooledDevice) -> std::collections::HashMap<String, f64> {
+    fn kv(dev: &PooledDevice) -> std::collections::BTreeMap<String, f64> {
         dev.stats_kv().into_iter().collect()
     }
 

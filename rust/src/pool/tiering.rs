@@ -39,6 +39,7 @@ pub struct HeatStats {
 #[derive(Debug)]
 pub struct HeatTracker {
     params: TieringParams,
+    // simlint: allow(unordered-iter): key-addressed counters; the only sweep is the uniform per-entry decay below
     heat: HashMap<u64, u32>,
     epoch_end: Tick,
     stats: HeatStats,
@@ -101,6 +102,7 @@ impl HeatTracker {
     fn decay_by(&mut self, rounds: u64) {
         let shift = rounds.min(31) as u32;
         let before = self.heat.len();
+        // simlint: allow(unordered-iter): uniform halving + drop-at-zero is order-independent
         self.heat.retain(|_, h| {
             *h >>= shift;
             *h > 0

@@ -10,6 +10,10 @@
 //! ordinary interchange JSON: malformed input is a hard error with a
 //! byte offset, never a silently skipped value.
 
+// Audited by the `unwrap-in-lib` lint pass: every fallible path in the
+// reader/writer reports through `Result`; only the test module unwraps.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
 use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
@@ -339,7 +343,10 @@ fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json> {
             _ => break,
         }
     }
-    let raw = std::str::from_utf8(&bytes[start..*pos]).expect("ascii number");
+    // The matched span is ASCII digits/signs/dots by construction, but
+    // fail soft instead of panicking on a parser bug.
+    let raw = std::str::from_utf8(&bytes[start..*pos])
+        .map_err(|e| anyhow!("non-ascii number at byte {start}: {e}"))?;
     if is_float || raw.starts_with('-') {
         let v = raw
             .parse::<f64>()

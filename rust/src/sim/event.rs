@@ -50,6 +50,7 @@ impl<T> Ord for Event<T> {
 pub struct EventQueue<T> {
     heap: BinaryHeap<Event<T>>,
     next_seq: u64,
+    // simlint: allow(unordered-iter): membership-only set (insert/remove/contains); never iterated
     cancelled: std::collections::HashSet<u64>,
     now: Tick,
 }

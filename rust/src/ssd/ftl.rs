@@ -226,6 +226,7 @@ impl Ftl {
             let newb = self.dies[die]
                 .free_blocks
                 .pop()
+                // simlint: allow(unwrap-in-lib): GC runs after every program to hold the free watermark
                 .expect("die out of free blocks (GC failed to keep up)");
             self.dies[die].open_block = newb;
             self.dies[die].next_page = 0;

@@ -65,6 +65,7 @@ impl Icl {
         self.clock += 1;
         if let Some(&idx) = self.map.get(&page) {
             self.stats.hits += 1;
+            // simlint: allow(unwrap-in-lib): map entries always point at occupied frames
             let f = self.frames[idx].as_mut().expect("mapped frame occupied");
             f.touched = self.clock;
             f.dirty |= is_write;

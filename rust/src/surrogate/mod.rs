@@ -160,6 +160,7 @@ impl Surrogate {
                 let nd = nc * cfg.ssd.nand.dies_per_channel;
                 vec![i32v(ns, -1), i32v(ns, 0), f64v(nc), f64v(nd), f64v(1)]
             }
+            // simlint: allow(unwrap-in-lib): load() rejected the pooled device before this match
             DeviceKind::Pooled => unreachable!("load() rejects the pooled device"),
         }
     }

@@ -116,6 +116,7 @@ impl SynthSpec {
                 SynthKind::Uniform | SynthKind::Mixed => rng.below(lines) * LINE_BYTES,
                 SynthKind::SeqScan => (i % lines) * LINE_BYTES,
                 SynthKind::Zipfian => {
+                    // simlint: allow(unwrap-in-lib): zipf is Some exactly for the Zipfian kind matched here
                     let rank = zipf.as_ref().expect("zipfian sampler").sample(&mut rng);
                     let page = scatter(rank) % pages;
                     // Line within the page, bounded by the footprint so

@@ -1,0 +1,235 @@
+//! The simlint static-analysis pass, exercised three ways: inline
+//! fixtures proving every documented rule both fires and can be
+//! suppressed, the baseline ratchet, and the real acceptance check —
+//! the shipped tree itself scans clean against the committed all-zero
+//! baseline, and `docs/LINT.md` matches a fresh render of the rule
+//! table.
+
+use std::path::PathBuf;
+
+use cxl_ssd_sim::analysis::{self, check_file, Baseline, FileReport, RULES};
+
+fn rules_fired(report: &FileReport) -> Vec<&'static str> {
+    report.diagnostics.iter().map(|d| d.rule).collect()
+}
+
+fn assert_clean(report: &FileReport) {
+    assert!(
+        report.diagnostics.is_empty(),
+        "expected no diagnostics, got {:?}",
+        report.diagnostics
+    );
+}
+
+// ------------------------------------------------ per-rule fixtures
+// Each rule gets the pair docs/LINT.md promises: a fixture the rule
+// flags, and the same code accepted under a justified allow.
+
+#[test]
+fn wall_clock_fires_and_suppresses() {
+    let bad = "pub fn stamp() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+    let r = check_file("sim/clock.rs", bad);
+    assert_eq!(rules_fired(&r), vec!["wall-clock", "wall-clock"]);
+
+    let ok = "pub fn stamp() -> u64 {\n\
+              \x20   // simlint: allow(wall-clock): host-side progress logging, never a simulated number\n\
+              \x20   f(std::time::Instant::now())\n}\n";
+    let r = check_file("sim/clock.rs", ok);
+    assert_clean(&r);
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.suppressed[0].rule, "wall-clock");
+}
+
+#[test]
+fn wall_clock_allows_the_coordinator_timing_files() {
+    let code = "pub fn wall() -> std::time::Instant { std::time::Instant::now() }\n";
+    assert_clean(&check_file("coordinator/sweep.rs", code));
+    assert_eq!(rules_fired(&check_file("coordinator/other.rs", code)), [
+        "wall-clock"
+    ]);
+}
+
+#[test]
+fn unordered_iter_fires_on_decl_and_iteration_in_sim_state() {
+    let bad = "use std::collections::HashMap;\n\
+               pub struct Tab {\n    m: HashMap<u64, u64>,\n}\n\
+               impl Tab {\n    pub fn sum(&self) -> u64 {\n        self.m.values().sum()\n    }\n}\n";
+    let fired = rules_fired(&check_file("pool/tab.rs", bad));
+    assert_eq!(fired, vec!["unordered-iter", "unordered-iter"]);
+
+    // Outside the simulation-state directories the rule stays quiet.
+    assert_clean(&check_file("results/tab.rs", bad));
+
+    let ok = "use std::collections::HashMap;\n\
+              pub struct Tab {\n\
+              \x20   // simlint: allow(unordered-iter): membership-only table\n\
+              \x20   m: HashMap<u64, u64>,\n}\n\
+              impl Tab {\n    pub fn sum(&self) -> u64 {\n\
+              \x20       // simlint: allow(unordered-iter): commutative fold\n\
+              \x20       self.m.values().sum()\n    }\n}\n";
+    let r = check_file("pool/tab.rs", ok);
+    assert_clean(&r);
+    assert_eq!(r.suppressed.len(), 2);
+}
+
+#[test]
+fn ambient_entropy_fires_and_suppresses() {
+    let bad = "pub fn seed() -> u64 { u64::from(thread_rng().gen::<u32>()) }\n";
+    let r = check_file("workloads/seed.rs", bad);
+    assert_eq!(rules_fired(&r), vec!["ambient-entropy"]);
+
+    let ok = "pub fn seed() -> u64 {\n\
+              \x20   // simlint: allow(ambient-entropy): feeds host-side shuffling only\n\
+              \x20   u64::from(thread_rng().gen::<u32>())\n}\n";
+    let r = check_file("workloads/seed.rs", ok);
+    assert_clean(&r);
+    assert_eq!(r.suppressed.len(), 1);
+}
+
+#[test]
+fn unwrap_in_lib_fires_and_suppresses() {
+    let bad = "pub fn f(x: Option<u64>) -> u64 { x.unwrap() }\n";
+    assert_eq!(
+        rules_fired(&check_file("mem/f.rs", bad)),
+        vec!["unwrap-in-lib"]
+    );
+
+    let ok = "pub fn f(x: Option<u64>) -> u64 {\n\
+              \x20   x.unwrap() // simlint: allow(unwrap-in-lib): caller guarantees Some\n}\n";
+    let r = check_file("mem/f.rs", ok);
+    assert_clean(&r);
+    assert_eq!(r.suppressed.len(), 1);
+    assert_eq!(r.suppressed[0].justification, "caller guarantees Some");
+}
+
+#[test]
+fn unwrap_in_lib_exempts_test_code() {
+    let code = "pub fn f() {}\n\
+                #[cfg(test)]\n\
+                mod tests {\n\
+                \x20   #[test]\n\
+                \x20   fn t() {\n        Some(1).unwrap();\n        panic!(\"boom\");\n    }\n}\n";
+    assert_clean(&check_file("mem/f.rs", code));
+}
+
+#[test]
+fn stats_key_style_fires_and_suppresses() {
+    let bad = "impl Dev {\n\
+               \x20   pub fn stats_kv(&self) -> Vec<(String, f64)> {\n\
+               \x20       vec![(\"Total_Reads\".to_string(), 1.0)]\n    }\n}\n";
+    assert_eq!(
+        rules_fired(&check_file("devices/d.rs", bad)),
+        vec!["stats-key-style"]
+    );
+
+    // Lowercase dotted keys (and {placeholder} prefixes) pass as-is.
+    let good = "impl Dev {\n\
+                \x20   pub fn stats_kv(&self) -> Vec<(String, f64)> {\n\
+                \x20       vec![(format!(\"{label}.reads.total\"), 1.0)]\n    }\n}\n";
+    assert_clean(&check_file("devices/d.rs", good));
+
+    let allowed = "impl Dev {\n\
+                   \x20   pub fn stats_kv(&self) -> Vec<(String, f64)> {\n\
+                   \x20       // simlint: allow(stats-key-style): legacy dashboard key\n\
+                   \x20       vec![(\"Total_Reads\".to_string(), 1.0)]\n    }\n}\n";
+    let r = check_file("devices/d.rs", allowed);
+    assert_clean(&r);
+    assert_eq!(r.suppressed.len(), 1);
+}
+
+// --------------------------------------------- the annotation meta-rule
+
+#[test]
+fn unjustified_allow_is_rejected_and_suppresses_nothing() {
+    let code = "pub fn f(x: Option<u64>) -> u64 {\n\
+                \x20   x.unwrap() // simlint: allow(unwrap-in-lib):\n}\n";
+    let fired = rules_fired(&check_file("mem/f.rs", code));
+    assert!(fired.contains(&"annotation"), "{fired:?}");
+    assert!(fired.contains(&"unwrap-in-lib"), "{fired:?}");
+}
+
+#[test]
+fn unknown_rule_in_allow_is_flagged() {
+    let code = "// simlint: allow(made-up-rule): because\npub fn f() {}\n";
+    assert_eq!(rules_fired(&check_file("mem/f.rs", code)), ["annotation"]);
+}
+
+#[test]
+fn annotation_rule_itself_cannot_be_suppressed() {
+    let code = "// simlint: allow(annotation): trying to silence the meta-rule\npub fn f() {}\n";
+    assert_eq!(rules_fired(&check_file("mem/f.rs", code)), ["annotation"]);
+}
+
+// ------------------------------------------------------- the ratchet
+
+#[test]
+fn baseline_ratchet_fails_only_on_growth() {
+    let b = Baseline::from_counts(&[("unwrap-in-lib", 3)]);
+    assert!(b.violations(&[("unwrap-in-lib", 3)]).is_empty());
+    assert!(b.violations(&[("unwrap-in-lib", 1)]).is_empty());
+    let grown = b.violations(&[("unwrap-in-lib", 4), ("wall-clock", 1)]);
+    assert_eq!(grown.len(), 2, "{grown:?}");
+    assert!(grown[0].contains("unwrap-in-lib"), "{}", grown[0]);
+}
+
+#[test]
+fn committed_baseline_is_the_all_zero_canonical_form() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("simlint.baseline.json");
+    let committed = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("rust/simlint.baseline.json must be checked in ({e})"));
+    assert_eq!(
+        committed,
+        Baseline::zero().to_text(),
+        "the committed baseline drifted from canonical zero; the tree is \
+         meant to stay fully self-applied"
+    );
+    assert_eq!(Baseline::parse(&committed).unwrap(), Baseline::zero());
+}
+
+// ------------------------------------------- the tree and its docs
+
+#[test]
+fn shipped_tree_scans_clean() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = analysis::lint_tree(&src).unwrap();
+    assert!(
+        report.files.len() > 40,
+        "suspiciously few files scanned: {:?}",
+        report.files
+    );
+    assert!(
+        report.diagnostics.is_empty(),
+        "the tree must stay self-applied; new findings:\n{}",
+        report.render_text()
+    );
+    // The self-application left a annotated trail, every entry justified.
+    assert!(!report.suppressed.is_empty());
+    assert!(report.suppressed.iter().all(|s| !s.justification.is_empty()));
+    // And the zero baseline therefore passes.
+    assert!(Baseline::zero().violations(&report.counts()).is_empty());
+}
+
+#[test]
+fn lint_reference_is_up_to_date() {
+    let generated = analysis::render_lint_md();
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../docs/LINT.md");
+    let committed = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("docs/LINT.md must be checked in ({e})"));
+    assert_eq!(
+        committed,
+        generated,
+        "docs/LINT.md drifted from the rule table.\n\
+         Regenerate with: cargo run --release -- docs --kind lint --out {}",
+        path.display()
+    );
+}
+
+#[test]
+fn every_rule_is_documented_with_id_and_fix() {
+    let md = analysis::render_lint_md();
+    for rule in &RULES {
+        assert!(md.contains(&format!("## `{}`", rule.id)), "{}", rule.id);
+        assert!(!rule.summary.is_empty() && !rule.matches.is_empty());
+        assert!(!rule.action.is_empty());
+    }
+}
