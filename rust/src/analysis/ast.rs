@@ -1,0 +1,926 @@
+//! Token-tree parser for Rust sources (the simcheck front end).
+//!
+//! Where [`super::lexer`] works line-at-a-time and powers the lexical
+//! rules, this module scans whole files into brace/bracket/paren-aware
+//! token *trees* ([`Tree`]) and extracts the per-file [`Outline`] the
+//! cross-file semantic rules ([`super::semantic`]) consume: enum
+//! definitions with their variants, `match` expressions with their arm
+//! patterns, `fn` bodies with the string literals they emit, field
+//! reads, and bare `+`/`-`/`*` arithmetic candidates.
+//!
+//! The scanner is written independently of the line lexer on purpose:
+//! both classify every character of a file as code / comment / string
+//! ([`Class`]), and `rust/tests/simlint.rs` runs the two over all of
+//! `rust/src/**` asserting byte-identical classifications — each
+//! implementation validates the other. The shared conventions:
+//!
+//! - a line comment covers `//` up to (not including) the newline;
+//! - block comments (nesting) cover `/*` through `*/` inclusive;
+//! - string literals cover the opening prefix/quote through the
+//!   closing quote (plus raw-string hashes) inclusive, newlines
+//!   included for multi-line literals;
+//! - char literals (`'x'`, `'\n'`) are string-class; a lone lifetime
+//!   tick is code;
+//! - every other character, including newlines in normal mode, is
+//!   code.
+//!
+//! Like the lexer, the scanner never fails: unterminated constructs
+//! blank to end of file, and stray close-delimiters close the
+//! innermost open group (a file that does not compile still lints).
+
+use std::collections::BTreeSet;
+
+pub use super::lexer::Class;
+
+/// Group delimiter of a [`Tree::Group`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Delim {
+    Paren,
+    Bracket,
+    Brace,
+}
+
+/// One node of the token tree. Lines are 1-based.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tree {
+    /// Identifier or keyword.
+    Ident { text: String, line: usize },
+    /// Number literal (digits plus trailing ident chars: `0x1f`, `10u64`).
+    Num { text: String, line: usize },
+    /// String literal *contents* (escapes resolved to the escaped char).
+    Lit { text: String, line: usize },
+    /// Any other single non-whitespace character.
+    Punct { ch: char, line: usize },
+    /// A `(..)`, `[..]` or `{..}` group.
+    Group {
+        delim: Delim,
+        line: usize,
+        trees: Vec<Tree>,
+    },
+}
+
+impl Tree {
+    pub fn line(&self) -> usize {
+        match self {
+            Tree::Ident { line, .. }
+            | Tree::Num { line, .. }
+            | Tree::Lit { line, .. }
+            | Tree::Punct { line, .. }
+            | Tree::Group { line, .. } => *line,
+        }
+    }
+
+    fn is_punct(&self, want: char) -> bool {
+        matches!(self, Tree::Punct { ch, .. } if *ch == want)
+    }
+
+    fn ident_text(&self) -> Option<&str> {
+        match self {
+            Tree::Ident { text, .. } => Some(text),
+            _ => None,
+        }
+    }
+
+    /// Compact display form for messages.
+    fn display(&self) -> String {
+        match self {
+            Tree::Ident { text, .. } | Tree::Num { text, .. } => text.clone(),
+            Tree::Lit { .. } => "\"..\"".to_string(),
+            Tree::Punct { ch, .. } => ch.to_string(),
+            Tree::Group { delim, .. } => match delim {
+                Delim::Paren => "(..)".to_string(),
+                Delim::Bracket => "[..]".to_string(),
+                Delim::Brace => "{..}".to_string(),
+            },
+        }
+    }
+}
+
+/// Whole-file scan output: one [`Class`] per `char` of the input, plus
+/// the top-level token trees.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub classes: Vec<Class>,
+    pub trees: Vec<Tree>,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+/// Raw/byte literal opener at `chars[i]` (`r"`, `r#"`, `b"`, `br#"`):
+/// number of opener chars and the raw-string hash count (`None` for a
+/// plain escape-processed `b".."`). Mirrors the line lexer's rules.
+fn literal_opener(chars: &[char], i: usize) -> Option<(usize, Option<usize>)> {
+    let c = chars[i];
+    let n = chars.len();
+    let mut j = i + 1;
+    if c == 'b' && j < n && chars[j] == 'r' {
+        j += 1;
+    }
+    if c == 'b' && j < n && chars[j] == '"' {
+        return Some((j + 1 - i, None));
+    }
+    if c == 'r' || j > i + 1 {
+        let mut hashes = 0usize;
+        while j < n && chars[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j < n && chars[j] == '"' {
+            return Some((j + 1 - i, Some(hashes)));
+        }
+    }
+    None
+}
+
+/// Scan a whole file into per-char classes and token trees.
+pub fn scan(text: &str) -> Scan {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut classes: Vec<Class> = Vec::with_capacity(n);
+    // Open groups: (delim, start line, children); `top` is the current
+    // sink for finished tokens.
+    let mut stack: Vec<(Delim, usize, Vec<Tree>)> = Vec::new();
+    let mut top: Vec<Tree> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Push `k` copies of `class` (consumed chars advance `line` at
+    // the call sites that can consume newlines).
+    macro_rules! emit {
+        ($class:expr, $k:expr) => {
+            for _ in 0..$k {
+                classes.push($class);
+            }
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            classes.push(Class::Code);
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            classes.push(Class::Code);
+            i += 1;
+            continue;
+        }
+        // Line comment: through end of line, newline stays code.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            emit!(Class::Comment, j - i);
+            i = j;
+            continue;
+        }
+        // Block comment: nests, may span lines, covers both delimiters.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            emit!(Class::Comment, 2);
+            while j < n && depth > 0 {
+                if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    emit!(Class::Comment, 2);
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    emit!(Class::Comment, 2);
+                    j += 2;
+                } else {
+                    emit!(Class::Comment, 1);
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // String literals: plain, byte, raw (with hashes).
+        let prev_ident = i > 0 && is_ident_char(chars[i - 1]);
+        let opener = if c == '"' {
+            Some((1usize, None))
+        } else if (c == 'r' || c == 'b') && !prev_ident {
+            literal_opener(&chars, i)
+        } else {
+            None
+        };
+        if let Some((skip, raw_hashes)) = opener {
+            let start_line = line;
+            emit!(Class::Str, skip);
+            let mut j = i + skip;
+            let mut buf = String::new();
+            match raw_hashes {
+                // Escape-processed string: `\x` contributes `x`.
+                None => {
+                    while j < n {
+                        if chars[j] == '\\' {
+                            if let Some(&esc) = chars.get(j + 1) {
+                                buf.push(esc);
+                                if esc == '\n' {
+                                    line += 1;
+                                }
+                            }
+                            let took = (j + 2).min(n) - j;
+                            emit!(Class::Str, took);
+                            j += 2;
+                        } else if chars[j] == '"' {
+                            emit!(Class::Str, 1);
+                            j += 1;
+                            break;
+                        } else {
+                            if chars[j] == '\n' {
+                                line += 1;
+                            }
+                            buf.push(chars[j]);
+                            emit!(Class::Str, 1);
+                            j += 1;
+                        }
+                    }
+                }
+                // Raw string: closes on `"` + `hashes` `#`s, no escapes.
+                Some(hashes) => {
+                    while j < n {
+                        let closes = chars[j] == '"'
+                            && j + 1 + hashes <= n
+                            && chars[j + 1..j + 1 + hashes].iter().all(|&h| h == '#');
+                        if closes {
+                            emit!(Class::Str, 1 + hashes);
+                            j += 1 + hashes;
+                            break;
+                        }
+                        if chars[j] == '\n' {
+                            line += 1;
+                        }
+                        buf.push(chars[j]);
+                        emit!(Class::Str, 1);
+                        j += 1;
+                    }
+                }
+            }
+            top.push(Tree::Lit {
+                text: buf,
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime tick — the line lexer's heuristic,
+        // additionally fenced at newlines (a tick at end of line is a
+        // lifetime there, since its scan window is the physical line).
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                let mut j = i + 2;
+                while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                    j += 1;
+                }
+                if j < n && chars[j] == '\'' {
+                    j += 1;
+                }
+                emit!(Class::Str, j - i);
+                i = j;
+                continue;
+            }
+            if i + 2 < n && chars[i + 1] != '\n' && chars[i + 2] == '\'' {
+                emit!(Class::Str, 3);
+                i += 3;
+                continue;
+            }
+            classes.push(Class::Code);
+            top.push(Tree::Punct { ch: '\'', line });
+            i += 1;
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            emit!(Class::Code, j - i);
+            top.push(Tree::Ident {
+                text: chars[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Number (digits plus trailing ident chars: hex, suffixes).
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_ident_char(chars[j]) {
+                j += 1;
+            }
+            emit!(Class::Code, j - i);
+            top.push(Tree::Num {
+                text: chars[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Group delimiters.
+        let open = match c {
+            '(' => Some(Delim::Paren),
+            '[' => Some(Delim::Bracket),
+            '{' => Some(Delim::Brace),
+            _ => None,
+        };
+        if let Some(delim) = open {
+            classes.push(Class::Code);
+            stack.push((delim, line, std::mem::take(&mut top)));
+            i += 1;
+            continue;
+        }
+        if matches!(c, ')' | ']' | '}') {
+            classes.push(Class::Code);
+            // Close the innermost open group; a stray closer with no
+            // open group is dropped (lint-tolerant recovery).
+            if let Some((delim, open_line, parent)) = stack.pop() {
+                let children = std::mem::replace(&mut top, parent);
+                top.push(Tree::Group {
+                    delim,
+                    line: open_line,
+                    trees: children,
+                });
+            }
+            i += 1;
+            continue;
+        }
+        // Any other symbol.
+        classes.push(Class::Code);
+        top.push(Tree::Punct { ch: c, line });
+        i += 1;
+    }
+    // Unterminated groups close at end of file.
+    while let Some((delim, open_line, parent)) = stack.pop() {
+        let children = std::mem::replace(&mut top, parent);
+        top.push(Tree::Group {
+            delim,
+            line: open_line,
+            trees: children,
+        });
+    }
+    Scan {
+        classes,
+        trees: top,
+    }
+}
+
+/// Per-char class of every character in `text` (differential surface
+/// against [`super::lexer::lex`]'s `classes`).
+pub fn classify(text: &str) -> Vec<Class> {
+    scan(text).classes
+}
+
+/// Parse a whole file into top-level token trees.
+pub fn parse(text: &str) -> Vec<Tree> {
+    scan(text).trees
+}
+
+// ---------------------------------------------------------------- outline
+
+/// An `enum` definition with its variant names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnumDef {
+    pub name: String,
+    pub line: usize,
+    pub variants: Vec<String>,
+}
+
+/// One `match` arm: the `Enum::Variant` paths its pattern names, and
+/// whether it is a catch-all (a lone `_` / lowercase binding ident).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Arm {
+    pub line: usize,
+    pub path_pairs: Vec<(String, String)>,
+    pub is_catch_all: bool,
+}
+
+/// A `match` expression: scrutinee display text plus its arms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatchExpr {
+    pub line: usize,
+    pub scrutinee: String,
+    pub arms: Vec<Arm>,
+}
+
+/// A named `fn` with a body, and the string literals the body contains.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FnDef {
+    pub name: String,
+    pub line: usize,
+    /// `(line, contents)` of every literal in the body, in order.
+    pub strings: Vec<(usize, String)>,
+}
+
+/// A bare `+` / `-` / `*` between value operands (compound assignments
+/// and arrows excluded). The semantic tick-arithmetic rule filters
+/// these by operand-identifier names.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TickOp {
+    pub line: usize,
+    pub op: char,
+    pub lhs: String,
+    pub rhs: String,
+    /// Resolved identifier of the left operand, when it is one.
+    pub lhs_ident: Option<String>,
+    /// Final identifier of the right operand's field chain, when the
+    /// operand is a plain (non-call) path.
+    pub rhs_ident: Option<String>,
+}
+
+/// Everything the semantic rules need from one file.
+#[derive(Debug, Default)]
+pub struct Outline {
+    pub enums: Vec<EnumDef>,
+    pub matches: Vec<MatchExpr>,
+    pub fns: Vec<FnDef>,
+    /// Idents read as fields (`expr.name` not followed by a call).
+    pub field_reads: BTreeSet<String>,
+    pub tick_ops: Vec<TickOp>,
+}
+
+/// Left-operand idents that are keywords, not values (`return -x`).
+const LHS_KEYWORDS: [&str; 10] = [
+    "return", "break", "continue", "if", "else", "in", "as", "match", "move", "ref",
+];
+
+/// Extract the outline of a parsed file.
+pub fn outline(trees: &[Tree]) -> Outline {
+    let mut out = Outline::default();
+    walk(trees, &mut out);
+    out
+}
+
+/// Recursive walker: scans one token slice for expression-level facts
+/// (tick ops, field reads), handles the item forms it knows (`enum`,
+/// `fn`, `match`), and recurses into every group it does not consume.
+fn walk(trees: &[Tree], out: &mut Outline) {
+    scan_ops_and_reads(trees, out);
+    let mut i = 0;
+    while i < trees.len() {
+        match trees[i].ident_text() {
+            Some("enum") => {
+                if let Some(next) = parse_enum(trees, i, out) {
+                    i = next;
+                    continue;
+                }
+            }
+            Some("fn") => {
+                if let Some(next) = parse_fn(trees, i, out) {
+                    i = next;
+                    continue;
+                }
+            }
+            Some("match") => {
+                if let Some(next) = parse_match(trees, i, out) {
+                    i = next;
+                    continue;
+                }
+            }
+            _ => {}
+        }
+        if let Tree::Group { trees: inner, .. } = &trees[i] {
+            walk(inner, out);
+        }
+        i += 1;
+    }
+}
+
+/// Bare-operator and field-read scan over one slice (groups are
+/// scanned when the walker recurses into them).
+fn scan_ops_and_reads(trees: &[Tree], out: &mut Outline) {
+    for j in 0..trees.len() {
+        // `expr.name` without a call: a field read.
+        if trees[j].is_punct('.') {
+            if let Some(Tree::Ident { text, .. }) = trees.get(j + 1) {
+                let is_call = matches!(
+                    trees.get(j + 2),
+                    Some(Tree::Group {
+                        delim: Delim::Paren,
+                        ..
+                    })
+                );
+                if !is_call {
+                    out.field_reads.insert(text.clone());
+                }
+            }
+        }
+        let op = match &trees[j] {
+            Tree::Punct { ch, .. } if matches!(ch, '+' | '-' | '*') => *ch,
+            _ => continue,
+        };
+        // `+=` / `-=` / `*=` compound assignments and `->` arrows.
+        if matches!(trees.get(j + 1), Some(t) if t.is_punct('=') || t.is_punct('>')) {
+            continue;
+        }
+        let (Some(lhs), Some(rhs)) = (
+            j.checked_sub(1).and_then(|k| trees.get(k)),
+            trees.get(j + 1),
+        ) else {
+            continue;
+        };
+        if !is_operand(lhs) || !is_operand(rhs) {
+            continue;
+        }
+        let lhs_ident = lhs
+            .ident_text()
+            .filter(|t| !LHS_KEYWORDS.contains(t))
+            .map(str::to_string);
+        if lhs.ident_text().is_some() && lhs_ident.is_none() {
+            continue; // keyword operand: `return -x` is unary
+        }
+        let rhs_ident = chain_ident(trees, j + 1);
+        out.tick_ops.push(TickOp {
+            line: trees[j].line(),
+            op,
+            lhs: lhs.display(),
+            rhs: rhs.display(),
+            lhs_ident,
+            rhs_ident,
+        });
+    }
+}
+
+/// Can this token be a binary-operator operand?
+fn is_operand(t: &Tree) -> bool {
+    matches!(
+        t,
+        Tree::Ident { .. }
+            | Tree::Num { .. }
+            | Tree::Group {
+                delim: Delim::Paren | Delim::Bracket,
+                ..
+            }
+    )
+}
+
+/// Follow a field chain starting at `trees[j]` (`a.b.c`) and return
+/// the final identifier — `None` when the operand is not an ident or
+/// the chain ends in a call (`a.b()`), whose name says nothing about
+/// the value.
+fn chain_ident(trees: &[Tree], j: usize) -> Option<String> {
+    trees[j].ident_text()?;
+    let mut k = j;
+    loop {
+        let dot = matches!(trees.get(k + 1), Some(t) if t.is_punct('.'));
+        let next_ident = matches!(trees.get(k + 2), Some(Tree::Ident { .. }));
+        if dot && next_ident {
+            k += 2;
+        } else {
+            break;
+        }
+    }
+    let is_call = matches!(
+        trees.get(k + 1),
+        Some(Tree::Group {
+            delim: Delim::Paren,
+            ..
+        })
+    );
+    if is_call {
+        return None;
+    }
+    trees[k].ident_text().map(str::to_string)
+}
+
+/// `enum Name { V1, V2(..), #[attr] V3 = 4, .. }` starting at
+/// `trees[i] == "enum"`. Returns the index after the body.
+fn parse_enum(trees: &[Tree], i: usize, out: &mut Outline) -> Option<usize> {
+    let name = trees.get(i + 1)?.ident_text()?.to_string();
+    let line = trees[i].line();
+    // Body: the first brace group after the name (generics between).
+    let mut j = i + 2;
+    let body = loop {
+        match trees.get(j)? {
+            Tree::Group {
+                delim: Delim::Brace,
+                trees: inner,
+                ..
+            } => break inner,
+            Tree::Punct { ch: ';', .. } => return None,
+            _ => j += 1,
+        }
+    };
+    let mut variants = Vec::new();
+    let mut expect = true;
+    let mut k = 0;
+    while k < body.len() {
+        // Skip `#[attr]` before a variant.
+        if body[k].is_punct('#')
+            && matches!(
+                body.get(k + 1),
+                Some(Tree::Group {
+                    delim: Delim::Bracket,
+                    ..
+                })
+            )
+        {
+            k += 2;
+            continue;
+        }
+        if body[k].is_punct(',') {
+            expect = true;
+            k += 1;
+            continue;
+        }
+        if expect {
+            if let Some(text) = body[k].ident_text() {
+                variants.push(text.to_string());
+                expect = false;
+            }
+        }
+        k += 1;
+    }
+    out.enums.push(EnumDef {
+        name,
+        line,
+        variants,
+    });
+    Some(j + 1)
+}
+
+/// `fn name(..) .. { body }` or a bodyless trait method (`fn f(..);`)
+/// starting at `trees[i] == "fn"`. Returns the index after the item.
+/// A bare `fn(..)` pointer type has no name ident and is left to the
+/// generic walk.
+fn parse_fn(trees: &[Tree], i: usize, out: &mut Outline) -> Option<usize> {
+    let name = trees.get(i + 1)?.ident_text()?.to_string();
+    let line = trees[i].line();
+    let mut j = i + 2;
+    loop {
+        match trees.get(j)? {
+            Tree::Group {
+                delim: Delim::Brace,
+                trees: body,
+                ..
+            } => {
+                let mut strings = Vec::new();
+                collect_strings(body, &mut strings);
+                out.fns.push(FnDef {
+                    name,
+                    line,
+                    strings,
+                });
+                walk(body, out);
+                return Some(j + 1);
+            }
+            Tree::Punct { ch: ';', .. } => return Some(j + 1),
+            t => {
+                if let Tree::Group { trees: inner, .. } = t {
+                    walk(inner, out); // params / where-clause groups
+                }
+                j += 1;
+            }
+        }
+    }
+}
+
+fn collect_strings(trees: &[Tree], out: &mut Vec<(usize, String)>) {
+    for t in trees {
+        match t {
+            Tree::Lit { text, line } => out.push((*line, text.clone())),
+            Tree::Group { trees: inner, .. } => collect_strings(inner, out),
+            _ => {}
+        }
+    }
+}
+
+/// `match scrutinee { pat => body, .. }` starting at
+/// `trees[i] == "match"`. Returns the index after the body.
+fn parse_match(trees: &[Tree], i: usize, out: &mut Outline) -> Option<usize> {
+    let line = trees[i].line();
+    let mut j = i + 1;
+    let body = loop {
+        match trees.get(j)? {
+            Tree::Group {
+                delim: Delim::Brace,
+                trees: inner,
+                ..
+            } => break inner,
+            t => {
+                if let Tree::Group { trees: inner, .. } = t {
+                    walk(inner, out); // nested exprs in the scrutinee
+                }
+                j += 1;
+            }
+        }
+    };
+    let scrutinee: Vec<String> = trees[i + 1..j].iter().map(Tree::display).collect();
+    let mut arms = Vec::new();
+    let mut k = 0;
+    while k < body.len() {
+        let pat_start = k;
+        // Pattern: up to the top-level `=>`.
+        while k < body.len() {
+            if body[k].is_punct('=') && matches!(body.get(k + 1), Some(t) if t.is_punct('>')) {
+                break;
+            }
+            k += 1;
+        }
+        if k >= body.len() {
+            break; // trailing tokens without an arrow: not an arm
+        }
+        let pat = &body[pat_start..k];
+        let arm_line = pat.first().map_or(body[k].line(), Tree::line);
+        let mut path_pairs = Vec::new();
+        collect_path_pairs(pat, &mut path_pairs);
+        // A guard disqualifies an arm from catching all.
+        let has_guard = pat.iter().any(|t| t.ident_text() == Some("if"));
+        let is_catch_all = !has_guard
+            && pat.len() == 1
+            && pat[0].ident_text().is_some_and(|t| {
+                t.starts_with('_') || t.chars().next().is_some_and(|c| c.is_ascii_lowercase())
+            });
+        arms.push(Arm {
+            line: arm_line,
+            path_pairs,
+            is_catch_all,
+        });
+        k += 2; // skip `=>`
+        // Body: one brace group, or expression tokens to the comma.
+        if let Some(Tree::Group {
+            delim: Delim::Brace,
+            trees: inner,
+            ..
+        }) = body.get(k)
+        {
+            walk(inner, out);
+            k += 1;
+        } else {
+            let body_start = k;
+            while k < body.len() && !body[k].is_punct(',') {
+                k += 1;
+            }
+            walk(&body[body_start..k], out);
+        }
+        if matches!(body.get(k), Some(t) if t.is_punct(',')) {
+            k += 1;
+        }
+    }
+    out.matches.push(MatchExpr {
+        line,
+        scrutinee: scrutinee.join(" "),
+        arms,
+    });
+    Some(j + 1)
+}
+
+/// Adjacent `A :: B` ident pairs anywhere in a pattern (groups
+/// included): the `Enum::Variant` paths the exhaustiveness rule keys
+/// off. Multi-segment paths contribute every adjacent pair.
+fn collect_path_pairs(trees: &[Tree], out: &mut Vec<(String, String)>) {
+    for j in 0..trees.len() {
+        if let Some(a) = trees[j].ident_text() {
+            let sep = matches!(trees.get(j + 1), Some(t) if t.is_punct(':'))
+                && matches!(trees.get(j + 2), Some(t) if t.is_punct(':'));
+            if sep {
+                if let Some(Tree::Ident { text: b, .. }) = trees.get(j + 3) {
+                    out.push((a.to_string(), b.clone()));
+                }
+            }
+        }
+        if let Tree::Group { trees: inner, .. } = &trees[j] {
+            collect_path_pairs(inner, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(trees: &[Tree]) -> Vec<String> {
+        trees
+            .iter()
+            .filter_map(|t| t.ident_text().map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn classes_cover_every_char() {
+        let src = "fn f() { g(\"s\"); } // end\n";
+        let classes = classify(src);
+        assert_eq!(classes.len(), src.chars().count());
+    }
+
+    #[test]
+    fn groups_nest_and_close() {
+        let trees = parse("f(a[1], { b })\n");
+        assert_eq!(idents(&trees), ["f"]);
+        let Tree::Group { delim, trees: args, .. } = &trees[1] else {
+            panic!("expected group, got {:?}", trees[1]);
+        };
+        assert_eq!(*delim, Delim::Paren);
+        assert!(args.iter().any(|t| matches!(
+            t,
+            Tree::Group {
+                delim: Delim::Brace,
+                ..
+            }
+        )));
+    }
+
+    #[test]
+    fn unterminated_and_stray_delims_recover() {
+        let trees = parse("fn f( {\n");
+        assert!(!trees.is_empty());
+        let trees = parse(") fine }\n");
+        assert!(idents(&trees).contains(&"fine".to_string()));
+    }
+
+    #[test]
+    fn enum_variants_extract() {
+        let src = "pub enum Kind {\n    A,\n    #[cfg(x)]\n    B(u64),\n    C { f: u8 },\n    D = 4,\n}\n";
+        let o = outline(&parse(src));
+        assert_eq!(o.enums.len(), 1);
+        assert_eq!(o.enums[0].name, "Kind");
+        assert_eq!(o.enums[0].variants, ["A", "B", "C", "D"]);
+    }
+
+    #[test]
+    fn match_arms_paths_and_catch_all() {
+        let src = "fn f(k: Kind) -> u8 {\n    match k {\n        Kind::A => 0,\n        Kind::B | Kind::C => 1,\n        other => 2,\n    }\n}\n";
+        let o = outline(&parse(src));
+        assert_eq!(o.matches.len(), 1);
+        let m = &o.matches[0];
+        assert_eq!(m.scrutinee, "k");
+        assert_eq!(m.arms.len(), 3);
+        assert_eq!(m.arms[0].path_pairs, [("Kind".to_string(), "A".to_string())]);
+        assert_eq!(m.arms[1].path_pairs.len(), 2);
+        assert!(m.arms[2].is_catch_all);
+        assert!(!m.arms[0].is_catch_all);
+    }
+
+    #[test]
+    fn guards_and_unit_variants_are_not_catch_alls() {
+        let src = "fn f() { match x { n if n > 0 => 1, None => 2, _ => 3 } }\n";
+        let o = outline(&parse(src));
+        let arms = &o.matches[0].arms;
+        assert!(!arms[0].is_catch_all, "guarded arm");
+        assert!(!arms[1].is_catch_all, "unit-variant pattern");
+        assert!(arms[2].is_catch_all);
+    }
+
+    #[test]
+    fn fn_strings_and_nested_matches() {
+        let src = "fn stats_kv() {\n    push(\"waf\");\n    match k { A::B => f(\"inner\"), _ => {} }\n}\n";
+        let o = outline(&parse(src));
+        assert_eq!(o.fns.len(), 1);
+        let strings: Vec<&str> = o.fns[0].strings.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(strings, ["waf", "inner"]);
+        assert_eq!(o.matches.len(), 1, "match inside the fn body is seen");
+    }
+
+    #[test]
+    fn field_reads_exclude_calls() {
+        let src = "fn f() { let a = s.field + t.method(); }\n";
+        let o = outline(&parse(src));
+        assert!(o.field_reads.contains("field"));
+        assert!(!o.field_reads.contains("method"));
+    }
+
+    #[test]
+    fn tick_ops_capture_operands() {
+        let src = "fn f() { let d = done - now; let t = self.now + lat; }\n";
+        let o = outline(&parse(src));
+        assert_eq!(o.tick_ops.len(), 2);
+        assert_eq!(o.tick_ops[0].op, '-');
+        assert_eq!(o.tick_ops[0].lhs_ident.as_deref(), Some("done"));
+        assert_eq!(o.tick_ops[0].rhs_ident.as_deref(), Some("now"));
+        assert_eq!(o.tick_ops[1].lhs_ident.as_deref(), Some("now"));
+    }
+
+    #[test]
+    fn compound_arrow_and_unary_are_not_ops() {
+        let src = "fn f() -> u64 { x += y; let a = -b; z *= 2; 0 }\n";
+        let o = outline(&parse(src));
+        assert!(o.tick_ops.is_empty(), "{:?}", o.tick_ops);
+    }
+
+    #[test]
+    fn call_results_resolve_to_no_rhs_ident() {
+        let src = "fn f() { let l = self.issue(now) - now; let m = a - b.c(); }\n";
+        let o = outline(&parse(src));
+        assert_eq!(o.tick_ops.len(), 2);
+        assert_eq!(o.tick_ops[0].lhs, "(..)");
+        assert_eq!(o.tick_ops[0].rhs_ident.as_deref(), Some("now"));
+        assert_eq!(o.tick_ops[1].rhs_ident, None, "method-call rhs");
+    }
+}

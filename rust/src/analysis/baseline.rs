@@ -1,13 +1,18 @@
-//! The baseline ratchet: grandfathered diagnostic counts per rule.
+//! The baseline ratchet: grandfathered diagnostic *and* suppression
+//! counts per rule.
 //!
 //! A checked-in baseline file (`rust/simlint.baseline.json`) records
-//! how many diagnostics each rule is allowed to report. The lint run
-//! fails as soon as any rule's live count *exceeds* its grandfathered
-//! count — new violations cannot land, while old ones are paid down
-//! over time (shrinking counts always pass; re-bless the lower water
-//! mark with `lint --write-baseline`). The shipped tree is fully
-//! self-applied, so the committed baseline is all zeros and the
-//! ratchet degenerates into "no diagnostics at all".
+//! how many diagnostics each rule is allowed to report and how many
+//! suppression annotations each rule may carry. The lint run fails as
+//! soon as any rule's live diagnostic count *exceeds* its
+//! grandfathered count — new violations cannot land, while old ones
+//! are paid down over time (shrinking counts always pass; re-bless
+//! the lower water mark with `lint --write-baseline`) — and likewise
+//! when `simlint` allow(..) annotations proliferate past the pinned
+//! suppression count: an annotation is a debt entry, so adding one is
+//! a deliberate act that requires re-blessing. The shipped tree is
+//! fully self-applied, so the committed diagnostic baseline is all
+//! zeros and the ratchet degenerates into "no diagnostics at all".
 //!
 //! The file is canonical JSON through [`crate::results::json`], same
 //! as run artifacts: insertion-ordered keys in [`RULES`] order, so a
@@ -20,33 +25,56 @@ use anyhow::{bail, Context, Result};
 use super::rules::RULES;
 use crate::results::json::Json;
 
-/// Schema version of the baseline file.
-pub const BASELINE_FORMAT: u64 = 1;
+/// Schema version of the baseline file. Format 2 added the
+/// `suppressions` object; format-1 files no longer parse (re-bless
+/// with `lint --write-baseline`).
+pub const BASELINE_FORMAT: u64 = 2;
 
-/// Grandfathered diagnostic count per rule id, in [`RULES`] order.
+/// Grandfathered counts per rule id, in [`RULES`] order.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Baseline {
+    /// Allowed live diagnostics per rule.
     pub counts: Vec<(String, u64)>,
+    /// Allowed suppression annotations per rule.
+    pub suppressions: Vec<(String, u64)>,
 }
 
 impl Baseline {
-    /// The empty baseline: every rule must report zero diagnostics.
+    /// The empty baseline: every rule must report zero diagnostics
+    /// and carry zero suppressions. This is also the default when no
+    /// baseline file exists — the strictest possible ratchet.
     pub fn zero() -> Baseline {
         Baseline {
             counts: RULES.iter().map(|r| (r.id.to_string(), 0)).collect(),
+            suppressions: RULES.iter().map(|r| (r.id.to_string(), 0)).collect(),
         }
     }
 
     /// Bless the given live counts as the new baseline.
-    pub fn from_counts(counts: &[(&'static str, u64)]) -> Baseline {
+    pub fn from_counts(
+        counts: &[(&'static str, u64)],
+        suppressions: &[(&'static str, u64)],
+    ) -> Baseline {
         Baseline {
             counts: counts.iter().map(|(r, n)| (r.to_string(), *n)).collect(),
+            suppressions: suppressions
+                .iter()
+                .map(|(r, n)| (r.to_string(), *n))
+                .collect(),
         }
     }
 
-    /// Grandfathered count for `rule` (0 if absent from the file).
+    /// Grandfathered diagnostic count for `rule` (0 if absent).
     pub fn allowed(&self, rule: &str) -> u64 {
         self.counts
+            .iter()
+            .find(|(r, _)| r == rule)
+            .map_or(0, |(_, n)| *n)
+    }
+
+    /// Pinned suppression count for `rule` (0 if absent).
+    pub fn allowed_suppressions(&self, rule: &str) -> u64 {
+        self.suppressions
             .iter()
             .find(|(r, _)| r == rule)
             .map_or(0, |(_, n)| *n)
@@ -64,6 +92,15 @@ impl Baseline {
                         .collect(),
                 ),
             ),
+            (
+                "suppressions".to_string(),
+                Json::Obj(
+                    self.suppressions
+                        .iter()
+                        .map(|(r, n)| (r.clone(), Json::UInt(*n as u128)))
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -76,7 +113,10 @@ impl Baseline {
         let json = Json::parse(text)?;
         let format = json.field("format")?.as_u64()?;
         if format != BASELINE_FORMAT {
-            bail!("unsupported baseline format {format} (want {BASELINE_FORMAT})");
+            bail!(
+                "unsupported baseline format {format} (want {BASELINE_FORMAT}); \
+                 re-bless with `lint --write-baseline`"
+            );
         }
         let mut counts = Vec::new();
         for (rule, count) in json.field("rules")?.as_obj()? {
@@ -85,7 +125,17 @@ impl Baseline {
             }
             counts.push((rule.clone(), count.as_u64()?));
         }
-        Ok(Baseline { counts })
+        let mut suppressions = Vec::new();
+        for (rule, count) in json.field("suppressions")?.as_obj()? {
+            if !RULES.iter().any(|r| r.id == rule) {
+                bail!("baseline suppressions name unknown rule '{rule}'");
+            }
+            suppressions.push((rule.clone(), count.as_u64()?));
+        }
+        Ok(Baseline {
+            counts,
+            suppressions,
+        })
     }
 
     pub fn load(path: &Path) -> Result<Baseline> {
@@ -94,9 +144,15 @@ impl Baseline {
         Baseline::parse(&text)
     }
 
-    /// Ratchet check: one message per rule whose live count exceeds
-    /// its grandfathered count. Empty means the run passes.
-    pub fn violations(&self, counts: &[(&'static str, u64)]) -> Vec<String> {
+    /// Ratchet check: one message per rule whose live diagnostic
+    /// count exceeds its grandfathered count, plus one per rule whose
+    /// suppression count grew past its pin. Empty means the run
+    /// passes.
+    pub fn violations(
+        &self,
+        counts: &[(&'static str, u64)],
+        suppressed: &[(&'static str, u64)],
+    ) -> Vec<String> {
         let mut out = Vec::new();
         for (rule, n) in counts {
             let cap = self.allowed(rule);
@@ -105,6 +161,16 @@ impl Baseline {
                     "{rule}: {n} diagnostic(s) exceeds the baseline of {cap} — fix or \
                      annotate the new finding(s), or deliberately re-bless with \
                      `lint --write-baseline`"
+                ));
+            }
+        }
+        for (rule, n) in suppressed {
+            let cap = self.allowed_suppressions(rule);
+            if *n > cap {
+                out.push(format!(
+                    "{rule}: {n} suppression(s) exceeds the pinned count of {cap} — \
+                     remove the new allow annotation(s), or deliberately re-bless \
+                     with `lint --write-baseline`"
                 ));
             }
         }
@@ -122,30 +188,50 @@ mod tests {
         let parsed = Baseline::parse(&b.to_text()).unwrap();
         assert_eq!(parsed, b);
         assert_eq!(b.counts.len(), RULES.len());
+        assert_eq!(b.suppressions.len(), RULES.len());
         assert!(b.to_text().ends_with('\n'));
     }
 
     #[test]
     fn ratchet_passes_at_or_below_and_fails_above() {
-        let b = Baseline::from_counts(&[("unwrap-in-lib", 2)]);
-        assert!(b.violations(&[("unwrap-in-lib", 2)]).is_empty());
-        assert!(b.violations(&[("unwrap-in-lib", 0)]).is_empty());
-        let v = b.violations(&[("unwrap-in-lib", 3)]);
+        let b = Baseline::from_counts(&[("unwrap-in-lib", 2)], &[]);
+        assert!(b.violations(&[("unwrap-in-lib", 2)], &[]).is_empty());
+        assert!(b.violations(&[("unwrap-in-lib", 0)], &[]).is_empty());
+        let v = b.violations(&[("unwrap-in-lib", 3)], &[]);
         assert_eq!(v.len(), 1);
         assert!(v[0].contains("exceeds the baseline of 2"), "{}", v[0]);
     }
 
     #[test]
+    fn suppression_ratchet_fails_only_on_growth() {
+        let b = Baseline::from_counts(&[], &[("unordered-iter", 5)]);
+        assert!(b.violations(&[], &[("unordered-iter", 5)]).is_empty());
+        assert!(b.violations(&[], &[("unordered-iter", 3)]).is_empty());
+        let v = b.violations(&[], &[("unordered-iter", 6)]);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("exceeds the pinned count of 5"), "{}", v[0]);
+    }
+
+    #[test]
     fn rules_missing_from_the_file_default_to_zero() {
-        let b = Baseline::from_counts(&[]);
-        assert!(b.violations(&[("wall-clock", 0)]).is_empty());
-        assert_eq!(b.violations(&[("wall-clock", 1)]).len(), 1);
+        let b = Baseline::from_counts(&[], &[]);
+        assert!(b.violations(&[("wall-clock", 0)], &[]).is_empty());
+        assert_eq!(b.violations(&[("wall-clock", 1)], &[]).len(), 1);
+        assert_eq!(b.violations(&[], &[("wall-clock", 1)]).len(), 1);
     }
 
     #[test]
     fn bad_files_are_rejected() {
         assert!(Baseline::parse("not json").is_err());
-        assert!(Baseline::parse("{\"format\": 2, \"rules\": {}}").is_err());
-        assert!(Baseline::parse("{\"format\": 1, \"rules\": {\"bogus\": 0}}").is_err());
+        // Format-1 files (no suppressions object) are stale.
+        assert!(Baseline::parse("{\"format\": 1, \"rules\": {}}").is_err());
+        assert!(Baseline::parse(
+            "{\"format\": 2, \"rules\": {\"bogus\": 0}, \"suppressions\": {}}"
+        )
+        .is_err());
+        assert!(Baseline::parse(
+            "{\"format\": 2, \"rules\": {}, \"suppressions\": {\"bogus\": 0}}"
+        )
+        .is_err());
     }
 }

@@ -1,0 +1,282 @@
+//! The simcheck symbol index: one walk over `rust/src/**`, everything
+//! the cross-file rules need.
+//!
+//! [`build`] lexes and parses every file once (the line lexer for
+//! allow annotations and `#[cfg(test)]` regions, the token-tree
+//! parser for the [`Outline`]) and aggregates the crate-wide views:
+//! enum → variants, fn → defining files, the stats-key literals
+//! emitted by `stats_kv` bodies, and the `key!(..)` entries of the
+//! config registry with the `SimConfig` field each getter reads. The
+//! index holds no file handles and does no I/O — callers feed it
+//! `(rel, text)` pairs, so fixture tests can build one from strings.
+
+use std::collections::BTreeMap;
+
+use super::ast::{self, Outline, Tree};
+use super::lexer::{self, Allow};
+
+/// Everything indexed about one file.
+#[derive(Debug)]
+pub struct FileIndex {
+    /// Path relative to the scan root, `/` separators.
+    pub rel: String,
+    pub outline: Outline,
+    /// Validated-later suppression annotations, as lexed.
+    pub allows: Vec<Allow>,
+    /// `is_test` per 1-based line (index `line - 1`).
+    pub test_lines: Vec<bool>,
+}
+
+impl FileIndex {
+    pub fn is_test_line(&self, line: usize) -> bool {
+        line >= 1 && self.test_lines.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+/// A stats-key literal emitted inside a `stats_kv` body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StatsKey {
+    pub file: String,
+    pub line: usize,
+    /// The literal as written, placeholders included
+    /// (`switch.p{i}.requests`).
+    pub literal: String,
+}
+
+/// One `key!(..)` entry of `config/registry.rs`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigKey {
+    pub file: String,
+    /// Line of the key-name literal.
+    pub line: usize,
+    /// The dotted key (`pool.promote_threshold`).
+    pub key: String,
+    /// Last field of the getter's `c.section.field` chain, when the
+    /// getter reads one.
+    pub field: Option<String>,
+}
+
+/// The crate-wide symbol index.
+#[derive(Debug, Default)]
+pub struct SymbolIndex {
+    /// Indexed files, in input (sorted-walk) order.
+    pub files: Vec<FileIndex>,
+    /// Enum name → (defining file, variants). First definition wins;
+    /// the tree has no duplicate enum names that matter to the rules.
+    pub enums: BTreeMap<String, (String, Vec<String>)>,
+    /// Fn name → files defining one by that name.
+    pub fns: BTreeMap<String, Vec<String>>,
+    /// Every stats-key literal, in file order.
+    pub stats_keys: Vec<StatsKey>,
+    /// Every config-registry key, in registry order.
+    pub config_keys: Vec<ConfigKey>,
+}
+
+/// The registry file the config-key rules read.
+pub const REGISTRY_FILE: &str = "config/registry.rs";
+
+/// Fn names whose string literals are emitted stats keys.
+pub const STATS_FNS: [&str; 2] = ["stats_kv", "device_stats_kv"];
+
+/// Build the index from `(rel, text)` pairs.
+pub fn build(files: &[(String, String)]) -> SymbolIndex {
+    let mut index = SymbolIndex::default();
+    for (rel, text) in files {
+        let lexed = lexer::lex(text);
+        let outline = ast::outline(&ast::parse(text));
+        let test_lines: Vec<bool> = lexed.lines.iter().map(|l| l.is_test).collect();
+
+        for e in &outline.enums {
+            index
+                .enums
+                .entry(e.name.clone())
+                .or_insert_with(|| (rel.clone(), e.variants.clone()));
+        }
+        for f in &outline.fns {
+            index.fns.entry(f.name.clone()).or_default().push(rel.clone());
+        }
+        for f in &outline.fns {
+            if !STATS_FNS.contains(&f.name.as_str()) {
+                continue;
+            }
+            for (line, lit) in &f.strings {
+                index.stats_keys.push(StatsKey {
+                    file: rel.clone(),
+                    line: *line,
+                    literal: lit.clone(),
+                });
+            }
+        }
+        if rel == REGISTRY_FILE {
+            collect_config_keys(&ast::parse(text), rel, &mut index.config_keys);
+        }
+
+        index.files.push(FileIndex {
+            rel: rel.clone(),
+            outline,
+            allows: lexed.allows,
+            test_lines,
+        });
+    }
+    index
+}
+
+/// Walk trees for `key!( "name", "doc", |c| getter )` invocations.
+fn collect_config_keys(trees: &[Tree], rel: &str, out: &mut Vec<ConfigKey>) {
+    let mut i = 0;
+    while i < trees.len() {
+        if let Tree::Group { trees: inner, .. } = &trees[i] {
+            // A `key!` call: the ident, a `!`, then the paren group.
+            let is_key_bang = i >= 2
+                && matches!(&trees[i - 2], Tree::Ident { text, .. } if text == "key")
+                && matches!(&trees[i - 1], Tree::Punct { ch: '!', .. });
+            if is_key_bang {
+                if let Some(ck) = parse_key_args(inner, rel) {
+                    out.push(ck);
+                }
+            }
+            collect_config_keys(inner, rel, out);
+        }
+        i += 1;
+    }
+}
+
+/// `("name", "doc", |c| getter)`: the name literal and the getter's
+/// backing field.
+fn parse_key_args(args: &[Tree], rel: &str) -> Option<ConfigKey> {
+    let (key, line) = match args.first()? {
+        Tree::Lit { text, line } => (text.clone(), *line),
+        _ => return None,
+    };
+    // Getter tokens: everything after the second top-level comma.
+    let mut commas = 0;
+    let mut getter_start = args.len();
+    for (j, t) in args.iter().enumerate() {
+        if matches!(t, Tree::Punct { ch: ',', .. }) {
+            commas += 1;
+            if commas == 2 {
+                getter_start = j + 1;
+                break;
+            }
+        }
+    }
+    let field = backing_field(args.get(getter_start..).unwrap_or(&[]));
+    Some(ConfigKey {
+        file: rel.to_string(),
+        line,
+        key,
+        field,
+    })
+}
+
+/// The `SimConfig` field a getter reads: follow the first
+/// `c.section.field` chain (depth-first in token order) and take the
+/// last chain ident that is not a method call.
+fn backing_field(trees: &[Tree]) -> Option<String> {
+    for (j, t) in trees.iter().enumerate() {
+        if matches!(t, Tree::Ident { text, .. } if text == "c")
+            && matches!(trees.get(j + 1), Some(Tree::Punct { ch: '.', .. }))
+        {
+            let mut k = j;
+            let mut best: Option<String> = None;
+            loop {
+                let dot = matches!(trees.get(k + 1), Some(Tree::Punct { ch: '.', .. }));
+                let Some(Tree::Ident { text, .. }) = (if dot { trees.get(k + 2) } else { None })
+                else {
+                    break;
+                };
+                k += 2;
+                let is_call = matches!(
+                    trees.get(k + 1),
+                    Some(Tree::Group {
+                        delim: ast::Delim::Paren,
+                        ..
+                    })
+                );
+                if !is_call {
+                    best = Some(text.clone());
+                }
+            }
+            if best.is_some() {
+                return best;
+            }
+        }
+        if let Tree::Group { trees: inner, .. } = t {
+            if let Some(f) = backing_field(inner) {
+                return Some(f);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn files(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+        pairs
+            .iter()
+            .map(|(r, t)| (r.to_string(), t.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn enums_fns_and_stats_keys_index() {
+        let idx = build(&files(&[
+            (
+                "devices/mod.rs",
+                "pub enum Kind { A, B }\nfn stats_kv(&self) { out.push((\"waf\".to_string(), x)); }\n",
+            ),
+            ("pool/mod.rs", "fn stats_kv(&self) { f(\"tier.promotions\"); }\n"),
+        ]));
+        assert_eq!(idx.enums["Kind"].1, ["A", "B"]);
+        assert_eq!(idx.fns["stats_kv"].len(), 2);
+        let lits: Vec<&str> = idx.stats_keys.iter().map(|k| k.literal.as_str()).collect();
+        assert_eq!(lits, ["waf", "tier.promotions"]);
+    }
+
+    #[test]
+    fn config_keys_resolve_backing_fields() {
+        let src = "pub const REGISTRY: &[KeyDoc] = &[\n\
+                       key!(\"cpu.mlp\", \"window\", |c| uint(c.mlp)),\n\
+                       key!(\"pool.promote\", \"thr\", |c| int(c.pool.promote_threshold as u64)),\n\
+                       key!(\"dcache.policy\", \"name\", |c| s(c.dcache.policy.name())),\n\
+                   ];\n";
+        let idx = build(&files(&[(REGISTRY_FILE, src)]));
+        let got: Vec<(String, Option<String>)> = idx
+            .config_keys
+            .iter()
+            .map(|k| (k.key.clone(), k.field.clone()))
+            .collect();
+        assert_eq!(
+            got,
+            [
+                ("cpu.mlp".to_string(), Some("mlp".to_string())),
+                ("pool.promote".to_string(), Some("promote_threshold".to_string())),
+                ("dcache.policy".to_string(), Some("policy".to_string())),
+            ]
+        );
+    }
+
+    #[test]
+    fn registry_parsing_only_applies_to_the_registry_file() {
+        let idx = build(&files(&[("cli/mod.rs", "key!(\"a.b\", \"d\", |c| c.x)\n")]));
+        assert!(idx.config_keys.is_empty());
+    }
+
+    #[test]
+    fn test_lines_and_allows_carry_through() {
+        let src = "fn lib() {}\n\
+                   // simlint: allow(unordered-iter): order-free\n\
+                   fn g() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests { fn t() {} }\n";
+        let idx = build(&files(&[("sim/x.rs", src)]));
+        let f = &idx.files[0];
+        assert_eq!(f.allows.len(), 1);
+        assert_eq!(f.allows[0].line, 3);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(5));
+    }
+}

@@ -50,6 +50,21 @@ pub struct Allow {
     pub justification: String,
 }
 
+/// What one character of a source file is. The conventions (shared
+/// with the independent scanner in [`super::ast`], and checked
+/// byte-for-byte by the differential test in `rust/tests/simlint.rs`):
+/// line comments cover `//` to end of line exclusive, block comments
+/// cover both delimiters, string literals cover prefix/quotes/hashes
+/// inclusive, char literals are string-class, a lone lifetime tick is
+/// code, and a newline takes the class of the mode it falls in
+/// (code / comment / string).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    Code,
+    Comment,
+    Str,
+}
+
 /// Lexer output for one file.
 #[derive(Debug, Default)]
 pub struct Lexed {
@@ -57,6 +72,8 @@ pub struct Lexed {
     pub allows: Vec<Allow>,
     /// Malformed annotations as `(line, problem)`.
     pub bad_annotations: Vec<(usize, String)>,
+    /// One [`Class`] per `char` of the input, newlines included.
+    pub classes: Vec<Class>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -167,6 +184,8 @@ pub fn lex(text: &str) -> Lexed {
     let mut mode = Mode::Normal;
     // String literal being collected: (start line, contents so far).
     let mut cur: Option<(usize, String)> = None;
+    let mut classes: Vec<Class> = Vec::with_capacity(text.len());
+    let total_lines = text.split('\n').count();
 
     for (idx, raw) in text.split('\n').enumerate() {
         let number = idx + 1;
@@ -180,6 +199,7 @@ pub fn lex(text: &str) -> Lexed {
             match mode {
                 Mode::Block { depth } => {
                     if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                        classes.extend([Class::Comment, Class::Comment]);
                         i += 2;
                         mode = if depth == 1 {
                             Mode::Normal
@@ -187,9 +207,11 @@ pub fn lex(text: &str) -> Lexed {
                             Mode::Block { depth: depth - 1 }
                         };
                     } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        classes.extend([Class::Comment, Class::Comment]);
                         mode = Mode::Block { depth: depth + 1 };
                         i += 2;
                     } else {
+                        classes.push(Class::Comment);
                         i += 1;
                     }
                 }
@@ -197,6 +219,9 @@ pub fn lex(text: &str) -> Lexed {
                     if c == '\\' {
                         if let (Some((_, buf)), Some(&esc)) = (cur.as_mut(), chars.get(i + 1)) {
                             buf.push(esc);
+                        }
+                        for _ in i..(i + 2).min(n) {
+                            classes.push(Class::Str);
                         }
                         i += 2;
                     } else if c == '"' {
@@ -207,12 +232,14 @@ pub fn lex(text: &str) -> Lexed {
                                 line.strings.push(buf);
                             }
                         }
+                        classes.push(Class::Str);
                         mode = Mode::Normal;
                         i += 1;
                     } else {
                         if let Some((_, buf)) = cur.as_mut() {
                             buf.push(c);
                         }
+                        classes.push(Class::Str);
                         i += 1;
                     }
                 }
@@ -228,27 +255,36 @@ pub fn lex(text: &str) -> Lexed {
                                 line.strings.push(buf);
                             }
                         }
+                        for _ in 0..1 + hashes {
+                            classes.push(Class::Str);
+                        }
                         mode = Mode::Normal;
                         i += 1 + hashes;
                     } else {
                         if let Some((_, buf)) = cur.as_mut() {
                             buf.push(c);
                         }
+                        classes.push(Class::Str);
                         i += 1;
                     }
                 }
                 Mode::Normal => {
                     if c == '/' && i + 1 < n && chars[i + 1] == '/' {
                         comments.push((number, chars[i + 2..].iter().collect()));
+                        for _ in i..n {
+                            classes.push(Class::Comment);
+                        }
                         break;
                     }
                     if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        classes.extend([Class::Comment, Class::Comment]);
                         mode = Mode::Block { depth: 1 };
                         i += 2;
                         continue;
                     }
                     if c == '"' {
                         cur = Some((number, String::new()));
+                        classes.push(Class::Str);
                         mode = Mode::Str;
                         i += 1;
                         continue;
@@ -257,22 +293,44 @@ pub fn lex(text: &str) -> Lexed {
                     if (c == 'r' || c == 'b') && !prev_ident {
                         if let Some((m, skip)) = literal_prefix(&chars, i) {
                             cur = Some((number, String::new()));
+                            for _ in 0..skip {
+                                classes.push(Class::Str);
+                            }
                             mode = m;
                             i += skip;
                             continue;
                         }
                         code.push(c);
+                        classes.push(Class::Code);
                         i += 1;
                         continue;
                     }
                     if c == '\'' {
-                        i = skip_char_or_lifetime(&chars, i);
+                        let next = skip_char_or_lifetime(&chars, i);
+                        if next == i + 1 {
+                            classes.push(Class::Code); // lifetime tick
+                        } else {
+                            for _ in i..next.min(n) {
+                                classes.push(Class::Str);
+                            }
+                        }
+                        i = next;
                         continue;
                     }
                     code.push(c);
+                    classes.push(Class::Code);
                     i += 1;
                 }
             }
+        }
+        // The newline between this segment and the next takes the
+        // class of whatever mode it falls inside.
+        if number < total_lines {
+            classes.push(match mode {
+                Mode::Normal => Class::Code,
+                Mode::Block { .. } => Class::Comment,
+                Mode::Str | Mode::RawStr { .. } => Class::Str,
+            });
         }
         lines.push(SourceLine {
             number,
@@ -359,6 +417,7 @@ pub fn lex(text: &str) -> Lexed {
         lines,
         allows,
         bad_annotations,
+        classes,
     }
 }
 
@@ -491,6 +550,32 @@ mod tests {
         let l = lex(src);
         let flags: Vec<bool> = l.lines.iter().map(|line| line.is_test).collect();
         assert_eq!(flags[..5], [true, true, true, true, false]);
+    }
+
+    #[test]
+    fn classes_cover_every_char_with_the_documented_conventions() {
+        let src = "let s = \"x\"; // c\nlet y = 1;\n";
+        let l = lex(src);
+        assert_eq!(l.classes.len(), src.chars().count());
+        let render: String = l
+            .classes
+            .iter()
+            .map(|c| match c {
+                Class::Code => '.',
+                Class::Comment => '#',
+                Class::Str => 's',
+            })
+            .collect();
+        // `let s = ` `"x"` `; ` `// c` `\n` `let y = 1;` `\n`
+        assert_eq!(render, "........sss..####............");
+    }
+
+    #[test]
+    fn multiline_string_newline_is_string_class() {
+        let l = lex("a(\"x\ny\");\n");
+        let nl = "a(\"x".chars().count();
+        assert_eq!(l.classes[nl], Class::Str);
+        assert_eq!(l.classes[l.classes.len() - 1], Class::Code);
     }
 
     #[test]

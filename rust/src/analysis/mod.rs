@@ -9,29 +9,42 @@
 //! `file:line: rule-id: message` diagnostics plus a machine-readable
 //! report through the canonical-JSON layer ([`crate::results::json`]).
 //!
-//! Layout:
+//! Layout — two layers over the same sources:
 //! - [`lexer`] — comment/string-aware line lexer (rules match code
 //!   text only) and the suppression-annotation grammar;
-//! - [`rules`] — the rule table ([`RULES`]) and per-file engine;
-//! - [`baseline`] — the grandfathering ratchet; the shipped tree is
-//!   fully self-applied, so the committed baseline is all zeros.
+//! - [`rules`] — the rule table ([`RULES`]) and the per-file lexical
+//!   engine, with a relaxed [`rules::Profile::Test`] for
+//!   `lint --include-tests`;
+//! - [`ast`] / [`index`] / [`semantic`] — **simcheck**, the semantic
+//!   layer (`lint --semantic`): a token-tree parser, a crate-wide
+//!   symbol index built in one walk, and the cross-file rules
+//!   (exhaustive-kind, tick-arithmetic, stats-key-coverage,
+//!   config-key-liveness);
+//! - [`baseline`] — the grandfathering ratchet over per-rule
+//!   diagnostic *and* suppression counts; the shipped tree is fully
+//!   self-applied, so the committed diagnostic baseline is all zeros
+//!   and the suppression counts are pinned.
 //!
 //! A finding is silenced by an inline annotation carrying its rule id
 //! and a non-empty justification (see `docs/LINT.md`, generated from
 //! the rule table via [`render_lint_md`]); trailing comments cover
 //! their own line, standalone comment lines cover the next code line.
-//! The `lint` CLI subcommand drives [`lint_tree`] and exits nonzero
-//! when any rule exceeds its baselined count.
+//! The `lint` CLI subcommand drives [`lint_tree_with`] and exits
+//! nonzero when any rule exceeds its baselined diagnostic or
+//! suppression count.
 
 // The analyzer holds itself to the rule it enforces: no panicking
 // escape hatches in lib code (tests may unwrap freely).
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
+pub mod ast;
 pub mod baseline;
+pub mod index;
 pub mod lexer;
 pub mod rules;
+pub mod semantic;
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -40,8 +53,9 @@ pub use rules::{check_file, Diagnostic, FileReport, Rule, Suppression, RULES};
 
 use crate::results::json::Json;
 
-/// Schema version of the JSON lint report.
-pub const REPORT_FORMAT: u64 = 1;
+/// Schema version of the JSON lint report. Format 2 added the
+/// per-rule `suppressed_counts` object (the suppression ratchet).
+pub const REPORT_FORMAT: u64 = 2;
 
 /// Tree-wide lint results.
 #[derive(Debug, Default)]
@@ -61,6 +75,19 @@ impl LintReport {
                 (
                     r.id,
                     self.diagnostics.iter().filter(|d| d.rule == r.id).count() as u64,
+                )
+            })
+            .collect()
+    }
+
+    /// Live suppression count per rule, in [`RULES`] order.
+    pub fn suppressed_counts(&self) -> Vec<(&'static str, u64)> {
+        RULES
+            .iter()
+            .map(|r| {
+                (
+                    r.id,
+                    self.suppressed.iter().filter(|s| s.rule == r.id).count() as u64,
                 )
             })
             .collect()
@@ -116,10 +143,16 @@ impl LintReport {
             .into_iter()
             .map(|(rule, n)| (rule.to_string(), Json::UInt(n as u128)))
             .collect();
+        let suppressed_counts = self
+            .suppressed_counts()
+            .into_iter()
+            .map(|(rule, n)| (rule.to_string(), Json::UInt(n as u128)))
+            .collect();
         Json::Obj(vec![
             ("format".to_string(), Json::UInt(REPORT_FORMAT as u128)),
             ("files".to_string(), Json::UInt(self.files.len() as u128)),
             ("counts".to_string(), Json::Obj(counts)),
+            ("suppressed_counts".to_string(), Json::Obj(suppressed_counts)),
             ("diagnostics".to_string(), Json::Arr(diagnostics)),
             ("suppressed".to_string(), Json::Arr(suppressed)),
         ])
@@ -154,26 +187,150 @@ fn collect_rs_files(dir: &Path, prefix: &str, out: &mut Vec<String>) -> Result<(
     Ok(())
 }
 
-/// Lint every `*.rs` file under `root` (normally `rust/src`). File
-/// order, diagnostic order and the JSON report are deterministic.
+/// How [`lint_tree_with`] scans.
+#[derive(Debug, Default)]
+pub struct LintOptions {
+    /// Run the simcheck semantic rules (needs the symbol index).
+    pub semantic: bool,
+    /// Also scan this directory (normally `rust/tests`) under the
+    /// relaxed [`rules::Profile::Test`]; files report as `tests/<rel>`.
+    pub tests_root: Option<PathBuf>,
+    /// Extra `(name, text)` reference corpora for stats-key-coverage,
+    /// on top of the in-tree renderer files
+    /// ([`semantic::RENDERER_PREFIXES`]): tests, docs, README, DESIGN.
+    pub references: Vec<(String, String)>,
+}
+
+/// The tests directory paired with a scan root: `<root>/../tests`
+/// (`rust/src` → `rust/tests`, and fixture roots `<tmp>/src` →
+/// `<tmp>/tests`).
+pub fn tests_dir_for(root: &Path) -> PathBuf {
+    match root.parent() {
+        Some(p) => p.join("tests"),
+        None => PathBuf::from("tests"),
+    }
+}
+
+/// Best-effort reference corpora for a scan rooted at `root`
+/// (normally `rust/src`): every `rust/tests/**/*.rs`, `docs/*.md`,
+/// `README.md` and `DESIGN.md` that exists. Missing paths are
+/// skipped, so fixture roots under `/tmp` simply contribute nothing.
+pub fn external_references(root: &Path) -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = Vec::new();
+    let tests = tests_dir_for(root);
+    if tests.is_dir() {
+        let mut rels = Vec::new();
+        if collect_rs_files(&tests, "", &mut rels).is_ok() {
+            rels.sort();
+            for rel in rels {
+                if let Ok(text) = std::fs::read_to_string(tests.join(&rel)) {
+                    out.push((format!("tests/{rel}"), text));
+                }
+            }
+        }
+    }
+    let repo = root.parent().and_then(Path::parent);
+    if let Some(repo) = repo {
+        let docs = repo.join("docs");
+        if docs.is_dir() {
+            let mut names: Vec<String> = Vec::new();
+            if let Ok(listing) = std::fs::read_dir(&docs) {
+                for entry in listing.flatten() {
+                    let name = entry.file_name().to_string_lossy().into_owned();
+                    if name.ends_with(".md") {
+                        names.push(name);
+                    }
+                }
+            }
+            names.sort();
+            for name in names {
+                if let Ok(text) = std::fs::read_to_string(docs.join(&name)) {
+                    out.push((format!("docs/{name}"), text));
+                }
+            }
+        }
+        for name in ["README.md", "DESIGN.md"] {
+            if let Ok(text) = std::fs::read_to_string(repo.join(name)) {
+                out.push((name.to_string(), text));
+            }
+        }
+    }
+    out
+}
+
+/// Lint every `*.rs` file under `root` (normally `rust/src`) with the
+/// lexical rules only — [`lint_tree_with`] adds the test profile and
+/// the semantic layer. File order, diagnostic order and the JSON
+/// report are deterministic.
 pub fn lint_tree(root: &Path) -> Result<LintReport> {
-    let mut files = Vec::new();
-    collect_rs_files(root, "", &mut files)?;
-    files.sort();
-    let mut report = LintReport {
-        files: Vec::new(),
-        diagnostics: Vec::new(),
-        suppressed: Vec::new(),
-    };
-    for rel in files {
+    lint_tree_with(root, &LintOptions::default())
+}
+
+/// Lint `root` under `opts`: the lexical rules over `rust/src/**`,
+/// optionally the relaxed test profile over `opts.tests_root`, and
+/// optionally the simcheck semantic rules over the crate-wide symbol
+/// index. Everything is deterministic: files are walked sorted and
+/// findings are globally ordered by `(file, line, rule)`.
+pub fn lint_tree_with(root: &Path, opts: &LintOptions) -> Result<LintReport> {
+    let mut rels = Vec::new();
+    collect_rs_files(root, "", &mut rels)?;
+    rels.sort();
+    let mut src_files: Vec<(String, String)> = Vec::new();
+    for rel in rels {
         let path = root.join(&rel);
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
-        let mut fr = rules::check_file(&rel, &text);
+        src_files.push((rel, text));
+    }
+
+    let mut report = LintReport::default();
+    for (rel, text) in &src_files {
+        let mut fr = rules::check_file_with(rel, text, rules::Profile::Lib);
         report.diagnostics.append(&mut fr.diagnostics);
         report.suppressed.append(&mut fr.suppressed);
-        report.files.push(rel);
+        report.files.push(rel.clone());
     }
+
+    if let Some(tests_root) = &opts.tests_root {
+        let mut trels = Vec::new();
+        collect_rs_files(tests_root, "", &mut trels)
+            .with_context(|| format!("walking tests under {}", tests_root.display()))?;
+        trels.sort();
+        for rel in trels {
+            let path = tests_root.join(&rel);
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let prefixed = format!("tests/{rel}");
+            let mut fr = rules::check_file_with(&prefixed, &text, rules::Profile::Test);
+            report.diagnostics.append(&mut fr.diagnostics);
+            report.suppressed.append(&mut fr.suppressed);
+            report.files.push(prefixed);
+        }
+    }
+
+    if opts.semantic {
+        let symbol_index = index::build(&src_files);
+        let mut refs: Vec<(String, String)> = src_files
+            .iter()
+            .filter(|(rel, _)| {
+                semantic::RENDERER_PREFIXES
+                    .iter()
+                    .any(|p| rel.starts_with(p))
+            })
+            .cloned()
+            .collect();
+        refs.extend(opts.references.iter().cloned());
+        let mut fr = semantic::check(&symbol_index, &refs);
+        report.diagnostics.append(&mut fr.diagnostics);
+        report.suppressed.append(&mut fr.suppressed);
+    }
+
+    report
+        .diagnostics
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report
+        .suppressed
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
     Ok(report)
 }
 
@@ -195,9 +352,16 @@ pub fn render_lint_md() -> String {
     out.push_str(
         "`cxl-ssd-sim lint` scans `rust/src/**` with a comment/string-aware\n\
          lexer, so banned names inside comments and string literals never\n\
-         fire. Diagnostics print as `file:line: rule-id: message`; `--format\n\
-         json` emits the machine-readable report. A finding is suppressed by\n\
-         an inline annotation naming its rule with a non-empty justification:\n",
+         fire. `--semantic` adds the simcheck layer: a token-tree parser and\n\
+         a crate-wide symbol index drive the cross-file rules (exhaustive\n\
+         kind matches, tick arithmetic, stats-key coverage, config-key\n\
+         liveness). `--include-tests` also walks `rust/tests/**` under a\n\
+         relaxed profile (unwrap/expect permitted; wall-clock and ambient\n\
+         entropy still banned — test determinism is what makes golden\n\
+         self-blessing sound). Diagnostics print as `file:line: rule-id:\n\
+         message`; `--format json` emits the machine-readable report. A\n\
+         finding is suppressed by an inline annotation naming its rule with\n\
+         a non-empty justification:\n",
     );
     out.push('\n');
     out.push_str(
@@ -209,10 +373,12 @@ pub fn render_lint_md() -> String {
     out.push_str(
         "Trailing comments cover their own line; standalone comment lines\n\
          cover the next code line. The checked-in baseline\n\
-         (`rust/simlint.baseline.json`) grandfathers per-rule counts and the\n\
-         lint fails when any rule's live count exceeds it (the ratchet); the\n\
-         shipped tree is fully self-applied, so the committed baseline is all\n\
-         zeros. `lint --write-baseline` re-blesses the current counts.\n",
+         (`rust/simlint.baseline.json`) grandfathers per-rule diagnostic\n\
+         counts *and* per-rule suppression counts: the lint fails when any\n\
+         rule's live diagnostic count exceeds its baseline (the ratchet) or\n\
+         when annotations proliferate past the pinned suppression count.\n\
+         The shipped tree is fully self-applied, so the committed diagnostic\n\
+         baseline is all zeros. `lint --write-baseline` re-blesses both.\n",
     );
     for rule in &RULES {
         out.push('\n');
@@ -222,6 +388,14 @@ pub fn render_lint_md() -> String {
         out.push('\n');
         out.push_str(&format!("- **Matches:** {}.\n", rule.matches));
         out.push_str(&format!("- **Fix:** {}.\n", rule.action));
+        out.push_str(&format!(
+            "- **Layer:** {}.\n",
+            if rule.semantic {
+                "semantic (`lint --semantic`)"
+            } else {
+                "lexical"
+            }
+        ));
         out.push_str(&format!(
             "- **Suppressible:** {}.\n",
             if rule.suppressible { "yes" } else { "no" }

@@ -25,6 +25,10 @@ pub const UNORDERED_ITER: &str = "unordered-iter";
 pub const AMBIENT_ENTROPY: &str = "ambient-entropy";
 pub const UNWRAP_IN_LIB: &str = "unwrap-in-lib";
 pub const STATS_KEY_STYLE: &str = "stats-key-style";
+pub const EXHAUSTIVE_KIND: &str = "exhaustive-kind";
+pub const TICK_ARITHMETIC: &str = "tick-arithmetic";
+pub const STATS_KEY_COVERAGE: &str = "stats-key-coverage";
+pub const CONFIG_KEY_LIVENESS: &str = "config-key-liveness";
 pub const ANNOTATION: &str = "annotation";
 
 /// One lint rule, with the prose that docs/LINT.md renders.
@@ -39,6 +43,9 @@ pub struct Rule {
     pub action: &'static str,
     /// Can an allow annotation suppress it?
     pub suppressible: bool,
+    /// Lexical (per-line, always on) or semantic (cross-file, needs
+    /// the simcheck symbol index — `lint --semantic`)?
+    pub semantic: bool,
 }
 
 /// The rule table, in report order. Field strings are single-line
@@ -46,13 +53,14 @@ pub struct Rule {
 /// cross-checked outside cargo, so the prose must be extractable
 /// without evaluating escape continuations.
 #[rustfmt::skip]
-pub const RULES: [Rule; 6] = [
+pub const RULES: [Rule; 10] = [
     Rule {
         id: WALL_CLOCK,
         summary: "wall-clock time is banned outside the coordinator",
         matches: "`Instant` / `SystemTime` in any module except the coordinator allowlist (`coordinator/mod.rs`, `coordinator/sweep.rs`), where host-side sweep timing is measured and never enters a `RunRecord`",
         action: "derive simulated numbers from ticks (1 tick = 1 ps); host-side timing belongs in the coordinator",
         suppressible: true,
+        semantic: false,
     },
     Rule {
         id: UNORDERED_ITER,
@@ -60,6 +68,7 @@ pub const RULES: [Rule; 6] = [
         matches: "`HashMap` / `HashSet` declarations and iteration (`iter`, `keys`, `values`, `retain`, `drain`, `into_iter`, `for .. in ..`) in the sim-state modules: cache, cpu, cxl, devices, dram, mem, pmem, pool, sim, ssd, topology, trace, workloads",
         action: "use `BTreeMap`/`BTreeSet` where order can reach any output, or annotate with an argument why iteration order is unobservable",
         suppressible: true,
+        semantic: false,
     },
     Rule {
         id: AMBIENT_ENTROPY,
@@ -67,13 +76,15 @@ pub const RULES: [Rule; 6] = [
         matches: "`thread_rng`, `from_entropy`, `getrandom`, `RandomState`, `DefaultHasher` and the `rand::` crate path, anywhere in library code",
         action: "seeds must trace to `testing::mix64` / `testing::mix_finalize` (sweep seeds derive from sweep coordinates); hash containers must not feed hashed order into results",
         suppressible: true,
+        semantic: false,
     },
     Rule {
         id: UNWRAP_IN_LIB,
         summary: "unwrap/expect/panic in library code needs a justification",
-        matches: "`.unwrap()`, `.expect(..)` and the `panic!` family (`unreachable!`, `todo!`, `unimplemented!`) outside `#[cfg(test)]` items",
+        matches: "`.unwrap()`, `.expect(..)` and the `panic!` family (`unreachable!`, `todo!`, `unimplemented!`) outside `#[cfg(test)]` items; relaxed off under the `--include-tests` test profile",
         action: "convert fallible paths to the crate's `Result` with context, or annotate with the invariant that makes the failure impossible",
         suppressible: true,
+        semantic: false,
     },
     Rule {
         id: STATS_KEY_STYLE,
@@ -81,6 +92,39 @@ pub const RULES: [Rule; 6] = [
         matches: "string literals inside `fn stats_kv` / `fn device_stats_kv` bodies whose text (after dropping format placeholders) strays outside lowercase letters, digits, dots, underscores and dashes",
         action: "rename the key to the label-prefix convention (`member.metric`, e.g. `m0.cxl-dram.svc_p50_ns`)",
         suppressible: true,
+        semantic: false,
+    },
+    Rule {
+        id: EXHAUSTIVE_KIND,
+        summary: "matches on the kind enums must name every variant or justify their catch-all",
+        matches: "a `match` whose arms name `DeviceKind::` / `WorkloadKind::` / `ConfigValue::` variants but route the rest into a `_` or binding catch-all arm while naming fewer variants than the enum defines — adding a variant must break the build or the lint, never silently take a default",
+        action: "name the missing variants explicitly (a catch-all over all remaining variants is fine once every variant is spelled somewhere in the match), or annotate the match line with why the default is correct for every future variant",
+        suppressible: true,
+        semantic: true,
+    },
+    Rule {
+        id: TICK_ARITHMETIC,
+        summary: "bare tick arithmetic in simulation state needs saturating/checked forms",
+        matches: "bare `+` / `-` / `*` between operands whose identifiers look tick-typed (`now`, `*_ns`, `*_tick`, `*_ticks`) in the sim-state modules; compound assignments (`+=`) are exempt because accumulators are bounded by simulated time",
+        action: "use `saturating_add` / `saturating_sub` / `saturating_mul` (or the `checked_` forms when overflow must be surfaced), or annotate with the invariant bounding the operands",
+        suppressible: true,
+        semantic: true,
+    },
+    Rule {
+        id: STATS_KEY_COVERAGE,
+        summary: "every emitted stats key must be referenced somewhere",
+        matches: "a string literal emitted inside a `fn stats_kv` / `fn device_stats_kv` body whose literal segments (the text between format placeholders, which cover the `Instrumented::labeled` prefix scheme) appear in no renderer, doc or test",
+        action: "render the key in a report, assert it in a test or document it; delete the key if nothing will ever read it, or annotate why it must exist unread",
+        suppressible: true,
+        semantic: true,
+    },
+    Rule {
+        id: CONFIG_KEY_LIVENESS,
+        summary: "every config-registry key must back a field read outside config/",
+        matches: "a `key!(..)` entry in `config/registry.rs` whose backing `SimConfig` field is never read by any module outside `config/` — a knob nothing consumes",
+        action: "wire the knob into the simulator or delete the registry entry (and the field), or annotate the registry line with why the knob must stay",
+        suppressible: true,
+        semantic: true,
     },
     Rule {
         id: ANNOTATION,
@@ -88,12 +132,14 @@ pub const RULES: [Rule; 6] = [
         matches: "any `simlint:` comment that is not `allow(<rule>): <justification>` with a known rule and a non-empty justification",
         action: "fix the annotation; this meta-rule cannot be suppressed",
         suppressible: false,
+        semantic: false,
     },
 ];
 
 /// Top-level `rust/src` directories holding simulation state, where
-/// unordered iteration can silently break run-to-run determinism.
-const SIM_STATE_DIRS: [&str; 13] = [
+/// unordered iteration can silently break run-to-run determinism (and
+/// where the semantic tick-arithmetic rule applies).
+pub const SIM_STATE_DIRS: [&str; 13] = [
     "cache",
     "cpu",
     "cxl",
@@ -411,10 +457,28 @@ fn is_stats_key(s: &str) -> bool {
         .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || matches!(c, '.' | '_' | '-'))
 }
 
-/// Run every rule over one file. `rel` is the path relative to the
-/// scan root (`rust/src`), with `/` separators — rule scoping (the
-/// sim-state dirs, the wall-clock allowlist) keys off it.
+/// Which lexical rules apply to a file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// Library sources: every rule.
+    Lib,
+    /// Test sources (`lint --include-tests`): unwrap/expect and the
+    /// stats-key style rule are relaxed off; wall-clock, ambient
+    /// entropy and the annotation meta-rule still apply — test
+    /// determinism is what makes golden self-blessing sound.
+    Test,
+}
+
+/// Run every lexical rule over one library file (see
+/// [`check_file_with`] for the test profile). `rel` is the path
+/// relative to the scan root (`rust/src`), with `/` separators — rule
+/// scoping (the sim-state dirs, the wall-clock allowlist) keys off it.
 pub fn check_file(rel: &str, text: &str) -> FileReport {
+    check_file_with(rel, text, Profile::Lib)
+}
+
+/// Run the lexical rules for `profile` over one file.
+pub fn check_file_with(rel: &str, text: &str, profile: Profile) -> FileReport {
     let lexed = lexer::lex(text);
     let mut diagnostics: Vec<Diagnostic> = Vec::new();
 
@@ -511,26 +575,28 @@ pub fn check_file(rel: &str, text: &str) -> FileReport {
                 ));
             }
 
-            if code.contains(".unwrap()") || code.contains(".expect(") {
-                findings.push((
-                    ln,
-                    UNWRAP_IN_LIB,
-                    "unwrap/expect in library code: convert to the Result path \
-                     or justify with an allow annotation"
-                        .to_string(),
-                ));
-            } else {
-                for p in PANIC_MACROS {
-                    if code.contains(p) {
-                        findings.push((
-                            ln,
-                            UNWRAP_IN_LIB,
-                            format!(
-                                "`{p}(..)` in library code: convert to the Result \
-                                 path or justify with an allow annotation"
-                            ),
-                        ));
-                        break;
+            if profile == Profile::Lib {
+                if code.contains(".unwrap()") || code.contains(".expect(") {
+                    findings.push((
+                        ln,
+                        UNWRAP_IN_LIB,
+                        "unwrap/expect in library code: convert to the Result path \
+                         or justify with an allow annotation"
+                            .to_string(),
+                    ));
+                } else {
+                    for p in PANIC_MACROS {
+                        if code.contains(p) {
+                            findings.push((
+                                ln,
+                                UNWRAP_IN_LIB,
+                                format!(
+                                    "`{p}(..)` in library code: convert to the Result \
+                                     path or justify with an allow annotation"
+                                ),
+                            ));
+                            break;
+                        }
                     }
                 }
             }
@@ -555,7 +621,8 @@ pub fn check_file(rel: &str, text: &str) -> FileReport {
                 }
             }
 
-            if stats_span.is_none()
+            if profile == Profile::Lib
+                && stats_span.is_none()
                 && (code.contains("fn stats_kv") || code.contains("fn device_stats_kv"))
             {
                 stats_span = Some(depth);
@@ -756,6 +823,18 @@ mod tests {
         let r = check_file("devices/x.rs", src);
         assert_eq!(rules_fired(&r), [STATS_KEY_STYLE]);
         assert_eq!(r.diagnostics[0].line, 3);
+    }
+
+    #[test]
+    fn test_profile_relaxes_unwrap_but_not_determinism() {
+        let src = "use std::time::Instant;\nfn t() { x.unwrap(); y.expect(\"ok\"); }\n";
+        let r = check_file_with("tests/sweep.rs", src, Profile::Test);
+        assert_eq!(rules_fired(&r), [WALL_CLOCK]);
+        let r = check_file_with("tests/x.rs", "let h = RandomState::new();\n", Profile::Test);
+        assert_eq!(rules_fired(&r), [AMBIENT_ENTROPY]);
+        // The annotation meta-rule still applies to tests.
+        let r = check_file_with("tests/x.rs", "f(); // simlint: gibberish\n", Profile::Test);
+        assert_eq!(rules_fired(&r), [ANNOTATION]);
     }
 
     #[test]

@@ -1,0 +1,472 @@
+//! The simcheck cross-file rules, driven by the symbol index.
+//!
+//! Four rules (`lint --semantic`), each encoding a refactor hazard the
+//! lexical pass cannot see:
+//!
+//! - **exhaustive-kind** — a `match` naming `DeviceKind` /
+//!   `WorkloadKind` / `ConfigValue` variants must name all of them
+//!   before it may carry a catch-all arm, so adding a variant breaks
+//!   the lint instead of silently routing into a default;
+//! - **tick-arithmetic** — bare `+`/`-`/`*` between tick-looking
+//!   identifiers (`now`, `*_ns`, `*_tick(s)`) in the sim-state dirs:
+//!   billion-request horizons overflow u64 tick math, so the
+//!   saturating/checked forms are required;
+//! - **stats-key-coverage** — every key literal emitted by a
+//!   `stats_kv` body must appear in at least one renderer, doc or
+//!   test, modulo the `Instrumented::labeled` prefix scheme (format
+//!   placeholders split the literal into segments that must match in
+//!   order);
+//! - **config-key-liveness** — every `config/registry.rs` key's
+//!   backing field must be read somewhere outside `config/`.
+//!
+//! Findings flow through the same suppression annotations as the
+//! lexical rules: an allow(<rule>) comment with a justification on
+//! the flagged line. [`check`] is pure — it sees only the index and the
+//! reference texts the caller supplies.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::index::SymbolIndex;
+use super::rules::{
+    Diagnostic, FileReport, Suppression, CONFIG_KEY_LIVENESS, EXHAUSTIVE_KIND, SIM_STATE_DIRS,
+    STATS_KEY_COVERAGE, TICK_ARITHMETIC,
+};
+
+/// Enums whose matches must stay exhaustiveness-honest: the device
+/// zoo, the workload zoo and the config value union — exactly the
+/// enums a ROADMAP-scale refactor extends.
+pub const TRACKED_ENUMS: [&str; 3] = ["DeviceKind", "WorkloadKind", "ConfigValue"];
+
+/// Scan-root-relative prefixes whose files count as in-tree stats-key
+/// renderers (reports, the CLI table printer, the coordinator).
+pub const RENDERER_PREFIXES: [&str; 4] = ["results/", "coordinator/", "cli/", "stats/"];
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Split a key literal into the text between `{..}` placeholders.
+fn segments(lit: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut chars = lit.chars();
+    while let Some(c) = chars.next() {
+        if c == '{' {
+            for inner in chars.by_ref() {
+                if inner == '}' {
+                    break;
+                }
+            }
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+        } else {
+            cur.push(c);
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Do the segments appear in `text`, in order, with a word boundary
+/// before the first and after the last? `.` and `-` are boundaries,
+/// so a prefixed reference (`m0.dram.reads`) covers the bare emitted
+/// key (`reads`).
+fn covers(text: &str, segs: &[String]) -> bool {
+    let Some(first) = segs.first() else {
+        return false;
+    };
+    let bytes = text.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = text[from..].find(first.as_str()) {
+        let start = from + rel;
+        from = start + 1;
+        if start > 0 && is_word_byte(bytes[start - 1]) {
+            continue;
+        }
+        let mut pos = start + first.len();
+        let mut all = true;
+        for s in &segs[1..] {
+            match text[pos..].find(s.as_str()) {
+                Some(r) => pos += r + s.len(),
+                None => {
+                    all = false;
+                    break;
+                }
+            }
+        }
+        if !all {
+            // Later starts only push `pos` further right; a missing
+            // later segment stays missing.
+            return false;
+        }
+        if pos < bytes.len() && is_word_byte(bytes[pos]) {
+            continue;
+        }
+        return true;
+    }
+    false
+}
+
+/// Does this identifier look tick-typed?
+fn tickish(name: &str) -> bool {
+    let plain = name
+        .chars()
+        .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+    plain
+        && (name == "now"
+            || name.ends_with("_ns")
+            || name.ends_with("_tick")
+            || name.ends_with("_ticks"))
+}
+
+fn clip(s: &str, max: usize) -> String {
+    if s.chars().count() <= max {
+        s.to_string()
+    } else {
+        let head: String = s.chars().take(max).collect();
+        format!("{head}..")
+    }
+}
+
+/// Run every semantic rule. `references` are `(name, text)` pairs the
+/// stats-key-coverage rule may match against *in addition to* the
+/// in-tree renderer files ([`RENDERER_PREFIXES`]) — the CLI feeds it
+/// `rust/tests/**`, `docs/*.md`, README.md and DESIGN.md.
+pub fn check(index: &SymbolIndex, references: &[(String, String)]) -> FileReport {
+    // (file, line, rule, message) findings before suppression.
+    let mut findings: Vec<(String, usize, &'static str, String)> = Vec::new();
+
+    // --- exhaustive-kind -------------------------------------------------
+    for file in &index.files {
+        for m in &file.outline.matches {
+            if file.is_test_line(m.line) {
+                continue;
+            }
+            let has_catch_all = m.arms.iter().any(|a| a.is_catch_all);
+            if !has_catch_all {
+                continue;
+            }
+            for name in TRACKED_ENUMS {
+                let Some((_, variants)) = index.enums.get(name) else {
+                    continue;
+                };
+                let named: BTreeSet<&str> = m
+                    .arms
+                    .iter()
+                    .flat_map(|a| a.path_pairs.iter())
+                    .filter(|(e, v)| e == name && variants.iter().any(|x| x == v))
+                    .map(|(_, v)| v.as_str())
+                    .collect();
+                if named.is_empty() || named.len() >= variants.len() {
+                    continue;
+                }
+                let missing: Vec<&str> = variants
+                    .iter()
+                    .map(String::as_str)
+                    .filter(|v| !named.contains(v))
+                    .collect();
+                findings.push((
+                    file.rel.clone(),
+                    m.line,
+                    EXHAUSTIVE_KIND,
+                    format!(
+                        "match on `{name}` (`match {}`) has a catch-all arm but names \
+                         {}/{} variants (missing: {}); name them or annotate why the \
+                         default holds for every future variant",
+                        clip(&m.scrutinee, 40),
+                        named.len(),
+                        variants.len(),
+                        missing.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+
+    // --- tick-arithmetic -------------------------------------------------
+    for file in &index.files {
+        let top = file.rel.split('/').next().unwrap_or("");
+        if !SIM_STATE_DIRS.contains(&top) {
+            continue;
+        }
+        for op in &file.outline.tick_ops {
+            if file.is_test_line(op.line) {
+                continue;
+            }
+            let lhs_tick = op.lhs_ident.as_deref().is_some_and(tickish);
+            let rhs_tick = op.rhs_ident.as_deref().is_some_and(tickish);
+            if !lhs_tick && !rhs_tick {
+                continue;
+            }
+            let verb = match op.op {
+                '+' => "saturating_add",
+                '-' => "saturating_sub",
+                _ => "saturating_mul",
+            };
+            findings.push((
+                file.rel.clone(),
+                op.line,
+                TICK_ARITHMETIC,
+                format!(
+                    "bare `{} {} {}` on tick-typed values; use `{verb}` (or the \
+                     checked_ form), or annotate the invariant bounding the operands",
+                    clip(&op.lhs, 24),
+                    op.op,
+                    clip(&op.rhs, 24)
+                ),
+            ));
+        }
+    }
+
+    // --- stats-key-coverage ----------------------------------------------
+    // Reference corpus: the caller supplies every text a key may be
+    // referenced from — the in-tree renderer files (see
+    // [`RENDERER_PREFIXES`] and `lint_tree_with`) plus tests and docs.
+    let ref_texts: Vec<&str> = references.iter().map(|(_, t)| t.as_str()).collect();
+    for key in &index.stats_keys {
+        let Some(file) = index.files.iter().find(|f| f.rel == key.file) else {
+            continue;
+        };
+        if file.is_test_line(key.line) {
+            continue;
+        }
+        let segs = segments(&key.literal);
+        if !segs
+            .iter()
+            .any(|s| s.chars().any(|c| c.is_ascii_alphanumeric()))
+        {
+            continue; // pure-placeholder literal, nothing to match
+        }
+        if ref_texts.iter().any(|t| covers(t, &segs)) {
+            continue;
+        }
+        findings.push((
+            key.file.clone(),
+            key.line,
+            STATS_KEY_COVERAGE,
+            format!(
+                "stats key \"{}\" is emitted but never referenced by any renderer, \
+                 doc or test; render it, document it, or delete it",
+                key.literal
+            ),
+        ));
+    }
+
+    // --- config-key-liveness ---------------------------------------------
+    let mut readers: BTreeSet<&str> = BTreeSet::new();
+    for file in &index.files {
+        if file.rel.starts_with("config/") {
+            continue;
+        }
+        for f in &file.outline.field_reads {
+            readers.insert(f.as_str());
+        }
+    }
+    for ck in &index.config_keys {
+        let dead = match &ck.field {
+            Some(field) => !readers.contains(field.as_str()),
+            None => true,
+        };
+        if !dead {
+            continue;
+        }
+        let detail = match &ck.field {
+            Some(field) => format!("backing field `{field}` is never read outside config/"),
+            None => "its getter reads no SimConfig field the liveness rule can track".to_string(),
+        };
+        findings.push((
+            ck.file.clone(),
+            ck.line,
+            CONFIG_KEY_LIVENESS,
+            format!(
+                "config key `{}` looks dead: {detail}; wire it up, delete it, or annotate",
+                ck.key
+            ),
+        ));
+    }
+
+    // --- suppression ------------------------------------------------------
+    let mut allows: BTreeMap<(&str, usize, &str), &str> = BTreeMap::new();
+    for file in &index.files {
+        for a in &file.allows {
+            allows.insert(
+                (file.rel.as_str(), a.line, a.rule.as_str()),
+                a.justification.as_str(),
+            );
+        }
+    }
+    let mut report = FileReport::default();
+    for (file, line, rule, message) in findings {
+        match allows.get(&(file.as_str(), line, rule)) {
+            Some(just) => report.suppressed.push(Suppression {
+                file,
+                line,
+                rule,
+                justification: (*just).to_string(),
+            }),
+            None => report.diagnostics.push(Diagnostic {
+                file,
+                line,
+                rule,
+                message,
+            }),
+        }
+    }
+    report
+        .diagnostics
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report
+        .suppressed
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::index;
+
+    fn build(pairs: &[(&str, &str)]) -> SymbolIndex {
+        let files: Vec<(String, String)> = pairs
+            .iter()
+            .map(|(r, t)| (r.to_string(), t.to_string()))
+            .collect();
+        index::build(&files)
+    }
+
+    fn rules_fired(r: &FileReport) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.rule).collect()
+    }
+
+    const KIND_ENUM: &str = "pub enum DeviceKind { Dram, Pmem, CxlSsd }\n";
+
+    #[test]
+    fn exhaustive_kind_fires_on_partial_match_with_catch_all() {
+        let m = "fn f(k: DeviceKind) -> u8 {\n    match k {\n        DeviceKind::Dram => 0,\n        _ => 1,\n    }\n}\n";
+        let idx = build(&[("devices/mod.rs", KIND_ENUM), ("pool/mod.rs", m)]);
+        let r = check(&idx, &[]);
+        assert_eq!(rules_fired(&r), [EXHAUSTIVE_KIND]);
+        assert_eq!(r.diagnostics[0].file, "pool/mod.rs");
+        assert_eq!(r.diagnostics[0].line, 2);
+        assert!(r.diagnostics[0].message.contains("CxlSsd"));
+        assert!(r.diagnostics[0].message.contains("Pmem"));
+    }
+
+    #[test]
+    fn exhaustive_kind_passes_when_all_variants_named_or_no_catch_all() {
+        let all = "fn f(k: DeviceKind) -> u8 {\n    match k {\n        DeviceKind::Dram | DeviceKind::Pmem => 0,\n        DeviceKind::CxlSsd => 1,\n        _ => 2,\n    }\n}\n";
+        let no_catch = "fn g(k: DeviceKind) -> u8 {\n    match k {\n        DeviceKind::Dram => 0,\n        other => 1,\n    }\n}\n";
+        let idx = build(&[("devices/mod.rs", KIND_ENUM), ("pool/a.rs", all)]);
+        assert!(check(&idx, &[]).diagnostics.is_empty());
+        // A catch-all over an enum the match never names is not ours
+        // to police — but a binding arm IS a catch-all when variants
+        // are named, so `no_catch` (one variant + binding) fires.
+        let idx = build(&[("devices/mod.rs", KIND_ENUM), ("pool/b.rs", no_catch)]);
+        assert_eq!(rules_fired(&check(&idx, &[])), [EXHAUSTIVE_KIND]);
+    }
+
+    #[test]
+    fn exhaustive_kind_suppresses_on_the_match_line() {
+        let m = "fn f(k: DeviceKind) -> u8 {\n    // simlint: allow(exhaustive-kind): default latency holds for every kind\n    match k {\n        DeviceKind::Dram => 0,\n        _ => 1,\n    }\n}\n";
+        let idx = build(&[("devices/mod.rs", KIND_ENUM), ("pool/mod.rs", m)]);
+        let r = check(&idx, &[]);
+        assert!(r.diagnostics.is_empty());
+        assert_eq!(r.suppressed.len(), 1);
+        assert_eq!(r.suppressed[0].rule, EXHAUSTIVE_KIND);
+    }
+
+    #[test]
+    fn tick_arithmetic_fires_in_sim_state_only() {
+        let src = "fn f(now: u64, done_ns: u64) -> u64 { done_ns - now }\n";
+        let idx = build(&[("sim/x.rs", src)]);
+        assert_eq!(rules_fired(&check(&idx, &[])), [TICK_ARITHMETIC]);
+        let idx = build(&[("results/x.rs", src)]);
+        assert!(check(&idx, &[]).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn tick_arithmetic_ignores_saturating_and_non_tick_names() {
+        let src = "fn f(now: u64, lat: u64) -> u64 {\n    let a = done.saturating_sub(now);\n    let b = count + lat;\n    a + b\n}\n";
+        let idx = build(&[("sim/x.rs", src)]);
+        assert!(check(&idx, &[]).diagnostics.is_empty(), "{:?}", check(&idx, &[]).diagnostics);
+    }
+
+    #[test]
+    fn tick_arithmetic_suppresses() {
+        let src = "fn f(now: u64, start_ns: u64) -> u64 {\n    // simlint: allow(tick-arithmetic): start_ns <= now by construction\n    now - start_ns\n}\n";
+        let idx = build(&[("cpu/x.rs", src)]);
+        let r = check(&idx, &[]);
+        assert!(r.diagnostics.is_empty());
+        assert_eq!(r.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn stats_key_coverage_fires_and_matches_prefixed_references() {
+        let dev = "fn stats_kv(&self) {\n    f(\"reads\");\n    f(\"orphan_metric\");\n    f(\"switch.p{i}.requests\");\n}\n";
+        let refs = [(
+            "tests/pool.rs".to_string(),
+            "assert!(kv(\"m0.dram.reads\") > 0.0); check(\"switch.p0.requests\");".to_string(),
+        )];
+        let idx = build(&[("devices/mod.rs", dev)]);
+        let r = check(&idx, &refs);
+        assert_eq!(rules_fired(&r), [STATS_KEY_COVERAGE]);
+        assert!(r.diagnostics[0].message.contains("orphan_metric"));
+    }
+
+    #[test]
+    fn stats_key_coverage_boundary_rejects_substrings() {
+        let dev = "fn stats_kv(&self) { f(\"reads\"); }\n";
+        let refs = [("d".to_string(), "the spreadsheet".to_string())];
+        let idx = build(&[("devices/mod.rs", dev)]);
+        assert_eq!(rules_fired(&check(&idx, &refs)), [STATS_KEY_COVERAGE]);
+        let refs = [("d".to_string(), "table lists `reads` per device".to_string())];
+        assert!(check(&idx, &refs).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn stats_key_coverage_suppresses() {
+        let dev = "fn stats_kv(&self) {\n    // simlint: allow(stats-key-coverage): exported for external dashboards\n    f(\"reads\");\n}\n";
+        let idx = build(&[("devices/mod.rs", dev)]);
+        let r = check(&idx, &[]);
+        assert!(r.diagnostics.is_empty());
+        assert_eq!(r.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn config_key_liveness_fires_on_dead_field() {
+        let reg = "key!(\"cpu.mlp\", \"d\", |c| uint(c.mlp));\nkey!(\"cpu.ghost\", \"d\", |c| uint(c.ghost));\n";
+        let user = "fn f(cfg: &SimConfig) -> u64 { cfg.mlp }\n";
+        let idx = build(&[("config/registry.rs", reg), ("cpu/mod.rs", user)]);
+        let r = check(&idx, &[]);
+        assert_eq!(rules_fired(&r), [CONFIG_KEY_LIVENESS]);
+        assert!(r.diagnostics[0].message.contains("cpu.ghost"));
+        assert_eq!(r.diagnostics[0].file, "config/registry.rs");
+    }
+
+    #[test]
+    fn config_key_liveness_ignores_reads_inside_config() {
+        let reg = "key!(\"cpu.mlp\", \"d\", |c| uint(c.mlp));\n";
+        let cfg_user = "fn apply(cfg: &SimConfig) -> u64 { cfg.mlp }\n";
+        let idx = build(&[("config/registry.rs", reg), ("config/mod.rs", cfg_user)]);
+        assert_eq!(rules_fired(&check(&idx, &[])), [CONFIG_KEY_LIVENESS]);
+    }
+
+    #[test]
+    fn config_key_liveness_suppresses() {
+        let reg = "// simlint: allow(config-key-liveness): reserved for the fabric PR\nkey!(\"cpu.ghost\", \"d\", |c| uint(c.ghost));\n";
+        let idx = build(&[("config/registry.rs", reg)]);
+        let r = check(&idx, &[]);
+        assert!(r.diagnostics.is_empty());
+        assert_eq!(r.suppressed.len(), 1);
+    }
+
+    #[test]
+    fn segments_split_on_placeholders() {
+        assert_eq!(segments("switch.p{i}.requests"), ["switch.p", ".requests"]);
+        assert_eq!(segments("{}.{}"), ["."]);
+        assert_eq!(segments("waf"), ["waf"]);
+    }
+}

@@ -42,7 +42,8 @@ USAGE:
   cxl-ssd-sim report --baseline <dir> --candidate <dir> [--threshold <pct>]
   cxl-ssd-sim report --bench <dir> [--bench-out <file>]
   cxl-ssd-sim docs  [--kind <config|lint>] [--out <file>]
-  cxl-ssd-sim lint  [--root <dir>] [--format <text|json>] [--out <file>]
+  cxl-ssd-sim lint  [--root <dir>] [--semantic] [--include-tests]
+                    [--format <text|json>] [--out <file>]
                     [--baseline <file>] [--write-baseline]
   cxl-ssd-sim trace record --device <dev> --workload <wl> --out <file>
   cxl-ssd-sim trace gen    --kind <uniform|zipf|seq|mixed> --out <file>
@@ -97,10 +98,16 @@ rust/src) for determinism and offline-invariant hazards — wall-clock
 reads, ambient entropy, order-unstable iteration near simulation
 state, panicking escape hatches, stats-key style — printing
 file:line: rule-id: message diagnostics (--format json for the
-machine-readable report). Suppressions are inline
+machine-readable report). '--semantic' adds the cross-file simcheck
+layer — a crate-wide symbol index feeding exhaustive-kind,
+tick-arithmetic, stats-key-coverage, and config-key-liveness —
+and '--include-tests' extends the walk to rust/tests/** under a
+relaxed profile (unwrap/expect allowed; wall-clock and ambient
+entropy still banned). Suppressions are inline
 'simlint: allow(<rule>): <justification>' comments; the checked-in
-baseline (rust/simlint.baseline.json) caps per-rule counts and the
-command exits nonzero when any rule exceeds it. See docs/LINT.md.
+baseline (rust/simlint.baseline.json) caps per-rule diagnostic AND
+suppression counts and the command exits nonzero when either grows.
+See docs/LINT.md.
 ";
 
 /// Tiny flag parser: `--key value` pairs plus positional words.
@@ -120,8 +127,16 @@ impl Args {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
                 // Switches (no value) vs flags (value follows).
-                let is_switch =
-                    matches!(name, "quick" | "fast" | "help" | "closed" | "write-baseline");
+                let is_switch = matches!(
+                    name,
+                    "quick"
+                        | "fast"
+                        | "help"
+                        | "closed"
+                        | "write-baseline"
+                        | "semantic"
+                        | "include-tests"
+                );
                 if is_switch {
                     switches.push(name.to_string());
                 } else if i + 1 < argv.len() {
@@ -418,7 +433,7 @@ pub fn main(argv: &[String]) -> Result<i32> {
         "docs" => {
             let kind = args.get("kind").unwrap_or("config");
             let text = match kind {
-                "config" => crate::config::render_config_md(),
+                "config" => crate::config::render_config_md()?,
                 "lint" => crate::analysis::render_lint_md(),
                 other => bail!("unknown docs kind '{other}' (want config|lint)"),
             };
@@ -437,19 +452,31 @@ pub fn main(argv: &[String]) -> Result<i32> {
                 Some(dir) => std::path::PathBuf::from(dir),
                 None => manifest.join("src"),
             };
-            let report = crate::analysis::lint_tree(&root)?;
+            let mut opts = crate::analysis::LintOptions::default();
+            if args.has("semantic") {
+                opts.semantic = true;
+                opts.references = crate::analysis::external_references(&root);
+            }
+            if args.has("include-tests") {
+                opts.tests_root = Some(crate::analysis::tests_dir_for(&root));
+            }
+            let report = crate::analysis::lint_tree_with(&root, &opts)?;
             let baseline_path = match args.get("baseline") {
                 Some(path) => std::path::PathBuf::from(path),
                 None => manifest.join("simlint.baseline.json"),
             };
             if args.has("write-baseline") {
-                let blessed = crate::analysis::Baseline::from_counts(&report.counts());
+                let blessed = crate::analysis::Baseline::from_counts(
+                    &report.counts(),
+                    &report.suppressed_counts(),
+                );
                 std::fs::write(&baseline_path, blessed.to_text()).with_context(|| {
                     format!("writing baseline {}", baseline_path.display())
                 })?;
                 println!(
-                    "blessed {} diagnostic(s) into {}",
+                    "blessed {} diagnostic(s) and {} suppression(s) into {}",
                     report.diagnostics.len(),
+                    report.suppressed.len(),
                     baseline_path.display()
                 );
                 return Ok(0);
@@ -474,7 +501,8 @@ pub fn main(argv: &[String]) -> Result<i32> {
             } else {
                 crate::analysis::Baseline::zero()
             };
-            let violations = baseline.violations(&report.counts());
+            let violations =
+                baseline.violations(&report.counts(), &report.suppressed_counts());
             if !violations.is_empty() {
                 for v in &violations {
                     eprintln!("simlint: {v}");
@@ -818,7 +846,7 @@ mod tests {
         let _ = std::fs::remove_file(path);
         assert_eq!(main(&argv(&format!("docs --out {path}"))).unwrap(), 0);
         let text = std::fs::read_to_string(path).unwrap();
-        assert_eq!(text, crate::config::render_config_md());
+        assert_eq!(text, crate::config::render_config_md().unwrap());
     }
 
     #[test]

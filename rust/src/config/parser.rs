@@ -75,7 +75,9 @@ impl ConfigValue {
         match self {
             ConfigValue::Int(v) => Ok(*v),
             ConfigValue::Float(f) if f.fract() == 0.0 && *f >= 0.0 => Ok(*f as u64),
-            other => Err(ConfigError::BadValue(format!("{other:?} (want integer)"))),
+            other @ (ConfigValue::Float(_) | ConfigValue::Bool(_) | ConfigValue::Str(_)) => {
+                Err(ConfigError::BadValue(format!("{other:?} (want integer)")))
+            }
         }
     }
 
@@ -83,21 +85,27 @@ impl ConfigValue {
         match self {
             ConfigValue::Int(v) => Ok(*v as f64),
             ConfigValue::Float(f) => Ok(*f),
-            other => Err(ConfigError::BadValue(format!("{other:?} (want number)"))),
+            other @ (ConfigValue::Bool(_) | ConfigValue::Str(_)) => {
+                Err(ConfigError::BadValue(format!("{other:?} (want number)")))
+            }
         }
     }
 
     pub fn as_bool(&self) -> Result<bool, ConfigError> {
         match self {
             ConfigValue::Bool(b) => Ok(*b),
-            other => Err(ConfigError::BadValue(format!("{other:?} (want bool)"))),
+            other @ (ConfigValue::Int(_) | ConfigValue::Float(_) | ConfigValue::Str(_)) => {
+                Err(ConfigError::BadValue(format!("{other:?} (want bool)")))
+            }
         }
     }
 
     pub fn as_str(&self) -> Result<String, ConfigError> {
         match self {
             ConfigValue::Str(s) => Ok(s.clone()),
-            other => Err(ConfigError::BadValue(format!("{other:?} (want string)"))),
+            other @ (ConfigValue::Int(_) | ConfigValue::Float(_) | ConfigValue::Bool(_)) => {
+                Err(ConfigError::BadValue(format!("{other:?} (want string)")))
+            }
         }
     }
 }

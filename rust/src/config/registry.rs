@@ -20,6 +20,8 @@
 //! Types are inferred from each entry's default value; string-valued
 //! keys render quoted (the form the TOML-subset parser reads back).
 
+use anyhow::{bail, Result};
+
 use super::{ConfigValue, SimConfig};
 
 /// One recognized config key.
@@ -33,9 +35,19 @@ pub struct KeyDoc {
 }
 
 impl KeyDoc {
-    /// The key's section (text before the first dot).
-    pub fn section(&self) -> &'static str {
-        self.key.split_once('.').map(|(s, _)| s).unwrap_or(self.key)
+    /// The key's section (text before the first dot). Every registry
+    /// key must be dotted `section.key`; a dotless key is a hard error
+    /// so it cannot silently become its own one-key section in the
+    /// generated reference.
+    pub fn section(&self) -> Result<&'static str> {
+        match self.key.split_once('.') {
+            Some((section, _)) => Ok(section),
+            None => bail!(
+                "registry key '{}' has no section: every key must be \
+                 dotted 'section.key'",
+                self.key
+            ),
+        }
     }
 
     /// Type label derived from the value the getter returns.
@@ -222,6 +234,7 @@ pub static REGISTRY: &[KeyDoc] = &[
     ),
     key!("pool.arb_ns", "switch arbitration latency per hop, ns", |c| int(c.pool.arb_ns)),
     // --- sys ---
+    // simlint: allow(config-key-liveness): Table I documentation value; the topology models host DRAM below DEVICE_BASE regardless of the configured size
     key!("sys.main_mem_bytes", "host main memory size (Table I: 512MB)", |c| int(c.main_mem_bytes)),
     key!(
         "sys.device_bytes",
@@ -261,7 +274,8 @@ pub fn dump_kv(cfg: &SimConfig) -> Vec<(String, String)> {
 
 /// Render the generated configuration reference (`docs/CONFIG.md`).
 /// Deterministic: registry order, defaults from `SimConfig::default()`.
-pub fn render_config_md() -> String {
+/// Errors if any registry key lacks a `section.` prefix.
+pub fn render_config_md() -> Result<String> {
     let defaults = SimConfig::default();
     let mut out = String::new();
     out.push_str("# Configuration reference\n");
@@ -284,8 +298,8 @@ pub fn render_config_md() -> String {
     );
     let mut section = "";
     for entry in REGISTRY {
-        if entry.section() != section {
-            section = entry.section();
+        if entry.section()? != section {
+            section = entry.section()?;
             out.push('\n');
             out.push_str(&format!("## [{section}]\n"));
             out.push('\n');
@@ -300,7 +314,7 @@ pub fn render_config_md() -> String {
             entry.doc
         ));
     }
-    out
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -318,7 +332,7 @@ mod tests {
         for entry in REGISTRY {
             assert!(seen.insert(entry.key), "duplicate key {}", entry.key);
             assert!(
-                entry.key.split_once('.').is_some(),
+                entry.section().is_ok(),
                 "key {} lacks a section",
                 entry.key
             );
@@ -367,8 +381,29 @@ mod tests {
     }
 
     #[test]
+    fn dotless_keys_are_a_hard_registry_error() {
+        let bad = KeyDoc {
+            key: "seed",
+            doc: "a key that forgot its section",
+            get: |c| int(c.seed),
+        };
+        let err = bad.section().unwrap_err().to_string();
+        assert!(err.contains("'seed' has no section"), "{err}");
+        assert_eq!(
+            KeyDoc {
+                key: "sys.seed",
+                doc: "ok",
+                get: |c| int(c.seed),
+            }
+            .section()
+            .unwrap(),
+            "sys"
+        );
+    }
+
+    #[test]
     fn config_md_mentions_every_key() {
-        let md = render_config_md();
+        let md = render_config_md().unwrap();
         for entry in REGISTRY {
             assert!(md.contains(entry.key), "CONFIG.md misses {}", entry.key);
         }

@@ -118,7 +118,7 @@ impl Core {
         let lat = sys.access(self.now, addr, size, false);
         self.stats.loads += 1;
         self.stats.load_latency.record(lat);
-        let done = self.now + lat;
+        let done = self.now.saturating_add(lat);
         self.load_window.push(done);
         done
     }
@@ -160,7 +160,7 @@ impl Core {
             if self.store_window.in_flight() > 0 {
                 // Next slot-freeing event: the earliest completion.
                 let t = self.store_window.wait_earliest(self.now);
-                self.stats.store_stall_ticks += t - self.now;
+                self.stats.store_stall_ticks += t.saturating_sub(self.now);
                 self.now = t;
             } else {
                 // Everything is pending on data: push the oldest out.
@@ -182,7 +182,7 @@ impl Core {
             self.pending_stores.pop_front();
             let lat = sys.access(self.now, addr, size, true);
             self.stats.store_latency.record(lat);
-            self.store_window.push(self.now + lat);
+            self.store_window.push(self.now.saturating_add(lat));
         }
     }
 
@@ -193,16 +193,16 @@ impl Core {
             return;
         };
         if ready > self.now {
-            self.stats.store_stall_ticks += ready - self.now;
+            self.stats.store_stall_ticks += ready.saturating_sub(self.now);
             self.now = ready;
         }
         let admitted = self.store_window.admit(self.now);
-        self.stats.store_stall_ticks += admitted - self.now;
+        self.stats.store_stall_ticks += admitted.saturating_sub(self.now);
         self.now = admitted;
         self.pending_stores.pop_front();
         let lat = sys.access(self.now, addr, size, true);
         self.stats.store_latency.record(lat);
-        self.store_window.push(self.now + lat);
+        self.store_window.push(self.now.saturating_add(lat));
     }
 
     /// Issue every pending dependent store, stalling for data and slots
@@ -223,7 +223,7 @@ impl Core {
         if self.store_buffer.len() >= self.cfg.store_buffer.max(1) {
             if let Some(&front) = self.store_buffer.front() {
                 if front > self.now {
-                    self.stats.store_stall_ticks += front - self.now;
+                    self.stats.store_stall_ticks += front.saturating_sub(self.now);
                     self.now = front;
                 }
                 self.store_buffer.pop_front();
@@ -265,7 +265,7 @@ impl Core {
             if self.store_buffer.len() >= self.cfg.store_buffer.max(1) {
                 if let Some(&front) = self.store_buffer.front() {
                     if front > self.now {
-                        self.stats.store_stall_ticks += front - self.now;
+                        self.stats.store_stall_ticks += front.saturating_sub(self.now);
                         self.now = front;
                     }
                     self.store_buffer.pop_front();
@@ -315,10 +315,10 @@ impl Core {
         self.drain_loads();
         let before = self.now;
         self.now = self.store_window.drain(self.now);
-        self.stats.store_stall_ticks += self.now - before;
+        self.stats.store_stall_ticks += self.now.saturating_sub(before);
         if let Some(&last) = self.store_buffer.back() {
             if last > self.now {
-                self.stats.store_stall_ticks += last - self.now;
+                self.stats.store_stall_ticks += last.saturating_sub(self.now);
                 self.now = last;
             }
         }

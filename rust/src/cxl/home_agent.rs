@@ -195,7 +195,7 @@ impl HomeAgent {
             // simlint: allow(unwrap-in-lib): outstanding == credits > 0 implies a queued completion
             .expect("outstanding == credits implies a pending completion");
         let start = now.max(earliest);
-        self.stats.credit_stall_ticks += start - now;
+        self.stats.credit_stall_ticks += start.saturating_sub(now);
         // One completes, one starts: outstanding unchanged.
         start
     }

@@ -131,7 +131,7 @@ pub trait MemoryDevice {
     /// Latency form of [`issue`](Self::issue), for callers that track
     /// their own clock.
     fn access(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
-        self.issue(now, addr, is_write) - now
+        self.issue(now, addr, is_write).saturating_sub(now)
     }
 
     /// End-of-run drain (flush write buffers / dirty cache pages).
@@ -191,7 +191,7 @@ impl MemoryDevice for Instrumented {
 
     fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
         let done = self.inner.issue(now, addr, is_write);
-        self.latency.record(done - now);
+        self.latency.record(done.saturating_sub(now));
         done
     }
 
@@ -246,7 +246,7 @@ impl MemoryDevice for LocalDram {
     }
 
     fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
-        now + self.dram.access(now, line_index(addr), is_write)
+        now.saturating_add(self.dram.access(now, line_index(addr), is_write))
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {
@@ -328,7 +328,7 @@ impl MemoryDevice for PmemDevice {
     }
 
     fn issue(&mut self, now: Tick, addr: u64, is_write: bool) -> Tick {
-        now + self.pmem.access(now, line_index(addr), is_write)
+        now.saturating_add(self.pmem.access(now, line_index(addr), is_write))
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {

@@ -152,7 +152,7 @@ impl Dram {
         }
         self.bank_ready[bank] = busy_until;
         self.open_row[bank] = Some(row);
-        done - now
+        done.saturating_sub(now)
     }
 
     /// Fold due refreshes into bank readiness (all-bank refresh closes rows).

@@ -115,7 +115,7 @@ impl Pmem {
                 .expect("n_ports > 0");
             let done = now.max(self.ports[port]) + media;
             self.ports[port] = done;
-            done - now
+            done.saturating_sub(now)
         };
         self.bufs[slot] = Some(row);
         self.stamps[slot] = now;

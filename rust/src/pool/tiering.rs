@@ -67,7 +67,7 @@ impl HeatTracker {
     /// not one per epoch.
     pub fn touch(&mut self, now: Tick, page: u64) -> u32 {
         if now >= self.epoch_end {
-            let missed = (now - self.epoch_end) / self.params.epoch + 1;
+            let missed = now.saturating_sub(self.epoch_end) / self.params.epoch + 1;
             self.decay_by(missed);
             self.epoch_end += missed * self.params.epoch;
         }

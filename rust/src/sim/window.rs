@@ -104,7 +104,7 @@ impl OutstandingWindow {
             }
         }
         let earliest = self.inflight.swap_remove(idx);
-        self.stats.stall_ticks += earliest - now;
+        self.stats.stall_ticks += earliest.saturating_sub(now);
         earliest
     }
 
@@ -124,7 +124,7 @@ impl OutstandingWindow {
             .copied()
             .max()
             .map_or(now, |last| last.max(now));
-        self.stats.drain_ticks += done - now;
+        self.stats.drain_ticks += done.saturating_sub(now);
         self.inflight.clear();
         done
     }

@@ -128,7 +128,7 @@ impl Ftl {
             None => self.static_die(lp),
         };
         let (done, _) = self.pal.execute(now, die, PalOp::Read);
-        done - now
+        done.saturating_sub(now)
     }
 
     /// Write logical page `lp` at `now`; returns host-visible latency.
@@ -141,7 +141,7 @@ impl Ftl {
         self.map(lp, phys);
         let (done, _) = self.pal.execute(now, die, PalOp::Program);
         self.maybe_gc(now, die);
-        done - now
+        done.saturating_sub(now)
     }
 
     /// TRIM/deallocate logical page `lp`: the mapping is dropped and the

@@ -122,8 +122,8 @@ impl Pal {
         let die_ready = self.die_ready[die];
         let ch_ready = self.channel_ready[ch];
 
-        let start = (now + self.cfg.t_cmd).max(die_ready);
-        self.stats.die_wait_ticks += start.saturating_sub(now + self.cfg.t_cmd);
+        let start = now.saturating_add(self.cfg.t_cmd).max(die_ready);
+        self.stats.die_wait_ticks += start.saturating_sub(now.saturating_add(self.cfg.t_cmd));
 
         let (done, die_busy, ch_busy) = match op {
             PalOp::Read => {

@@ -100,7 +100,7 @@ impl System {
             t += self.access_line(t, a, is_write);
             a += LINE_BYTES;
         }
-        t - now
+        t.saturating_sub(now)
     }
 
     /// One 64B access through the cache hierarchy.
@@ -139,20 +139,20 @@ impl System {
             }
             CacheResult::Miss { writeback } => {
                 if let Some(wb) = writeback {
-                    self.backing_write(now + lat, wb);
+                    self.backing_write(now.saturating_add(lat), wb);
                 }
             }
         }
 
         // Backing store fill (the fill itself is the critical path).
-        lat += self.backing_read(now + lat, addr);
+        lat += self.backing_read(now.saturating_add(lat), addr);
         lat
     }
 
     /// Read the line at `addr` from its backing store (critical path).
     fn backing_read(&mut self, now: Tick, addr: u64) -> Tick {
         let bus_done = self.membus.send(now, LINE_BYTES);
-        let bus_lat = bus_done - now;
+        let bus_lat = bus_done.saturating_sub(now);
         if self.device_range.contains(addr) {
             self.stats.device_reads += 1;
             let offset = self.device_range.offset(addr);
@@ -182,7 +182,7 @@ impl System {
                 t.push(crate::trace::TraceEntry::new(bus_done, offset, true));
             }
             let done = self.device.issue(bus_done, offset, true);
-            self.stats.device_write_latency.record(done - now);
+            self.stats.device_write_latency.record(done.saturating_sub(now));
             done
         } else {
             self.stats.main_mem_accesses += 1;
@@ -239,12 +239,12 @@ impl System {
                 t.push(crate::trace::TraceEntry::new(bus_done, offset, true));
             }
             let done = self.device.issue(bus_done, offset, true);
-            self.stats.device_write_latency.record(done - now);
-            done - now
+            self.stats.device_write_latency.record(done.saturating_sub(now));
+            done.saturating_sub(now)
         } else {
             self.stats.main_mem_accesses += 1;
             let lat = self.main_mem.access(bus_done, line / LINE_BYTES, true);
-            bus_done - now + lat
+            bus_done.saturating_sub(now).saturating_add(lat)
         }
     }
 

@@ -1,13 +1,18 @@
-//! The simlint static-analysis pass, exercised three ways: inline
+//! The simlint static-analysis pass, exercised four ways: inline
 //! fixtures proving every documented rule both fires and can be
-//! suppressed, the baseline ratchet, and the real acceptance check —
-//! the shipped tree itself scans clean against the committed all-zero
-//! baseline, and `docs/LINT.md` matches a fresh render of the rule
-//! table.
+//! suppressed (lexical rules via `check_file`, semantic rules via
+//! `lint_tree_with` on throwaway fixture trees), the diagnostic and
+//! suppression ratchets, the lexer-vs-parser byte differential, and
+//! the real acceptance check — the shipped tree itself scans clean
+//! under the full `--semantic --include-tests` scan against the
+//! committed baseline (zero diagnostics, pinned suppressions), and
+//! `docs/LINT.md` matches a fresh render of the rule table.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use cxl_ssd_sim::analysis::{self, check_file, Baseline, FileReport, RULES};
+use cxl_ssd_sim::analysis::{
+    self, ast, check_file, lexer, Baseline, FileReport, LintOptions, RULES,
+};
 
 fn rules_fired(report: &FileReport) -> Vec<&'static str> {
     report.diagnostics.iter().map(|d| d.rule).collect()
@@ -160,38 +165,266 @@ fn annotation_rule_itself_cannot_be_suppressed() {
     assert_eq!(rules_fired(&check_file("mem/f.rs", code)), ["annotation"]);
 }
 
+// ------------------------------------------ semantic-rule fixtures
+// The cross-file rules need a symbol index, so their fixtures are
+// throwaway trees driven through the same `lint_tree_with` entry
+// point the CLI uses.
+
+/// Write `files` under a fresh fixture root and scan it with the
+/// semantic layer on, `extra_refs` standing in for renderers/docs.
+fn semantic_scan(
+    name: &str,
+    files: &[(&str, &str)],
+    extra_refs: &[(&str, &str)],
+) -> analysis::LintReport {
+    let root = std::env::temp_dir().join(format!("cxl_ssd_sim_simcheck_{name}"));
+    let _ = std::fs::remove_dir_all(&root);
+    for (rel, text) in files {
+        let path = root.join(rel);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(path, text).unwrap();
+    }
+    let opts = LintOptions {
+        semantic: true,
+        references: extra_refs
+            .iter()
+            .map(|(n, t)| (n.to_string(), t.to_string()))
+            .collect(),
+        ..LintOptions::default()
+    };
+    let report = analysis::lint_tree_with(&root, &opts).unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+    report
+}
+
+#[test]
+fn exhaustive_kind_fires_and_suppresses() {
+    let enum_def = "pub enum DeviceKind {\n    Dram,\n    Pmem,\n    CxlSsd,\n}\n";
+    let bad = "pub fn cost(k: DeviceKind) -> u64 {\n\
+               \x20   match k {\n\
+               \x20       DeviceKind::Dram => 1,\n\
+               \x20       _ => 0,\n\
+               \x20   }\n}\n";
+    let report = semantic_scan(
+        "exh_fires",
+        &[("devices/mod.rs", enum_def), ("sim/cost.rs", bad)],
+        &[],
+    );
+    let rules: Vec<&str> = report.diagnostics.iter().map(|d| d.rule).collect();
+    assert_eq!(rules, vec!["exhaustive-kind"], "{}", report.render_text());
+    assert!(report.diagnostics[0].message.contains("missing: Pmem, CxlSsd"));
+
+    // Naming every variant makes the same catch-all fine...
+    let full = "pub fn cost(k: DeviceKind) -> u64 {\n\
+                \x20   match k {\n\
+                \x20       DeviceKind::Dram | DeviceKind::Pmem => 1,\n\
+                \x20       DeviceKind::CxlSsd => 2,\n\
+                \x20   }\n}\n";
+    let report = semantic_scan(
+        "exh_full",
+        &[("devices/mod.rs", enum_def), ("sim/cost.rs", full)],
+        &[],
+    );
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+
+    // ...and so does a justified allow on the match line.
+    let allowed = "pub fn cost(k: DeviceKind) -> u64 {\n\
+                   \x20   // simlint: allow(exhaustive-kind): every non-DRAM device costs the same\n\
+                   \x20   match k {\n\
+                   \x20       DeviceKind::Dram => 1,\n\
+                   \x20       _ => 0,\n\
+                   \x20   }\n}\n";
+    let report = semantic_scan(
+        "exh_allow",
+        &[("devices/mod.rs", enum_def), ("sim/cost.rs", allowed)],
+        &[],
+    );
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, "exhaustive-kind");
+}
+
+#[test]
+fn tick_arithmetic_fires_in_sim_state_and_suppresses() {
+    let bad = "pub fn done(now: u64, lat_ns: u64) -> u64 {\n    now + lat_ns\n}\n";
+    let report = semantic_scan("tick_fires", &[("sim/clock.rs", bad)], &[]);
+    let rules: Vec<&str> = report.diagnostics.iter().map(|d| d.rule).collect();
+    assert_eq!(rules, vec!["tick-arithmetic"], "{}", report.render_text());
+    assert!(report.diagnostics[0].message.contains("saturating_add"));
+
+    // The same expression outside the sim-state dirs is not tick math.
+    let report = semantic_scan("tick_results", &[("results/clock.rs", bad)], &[]);
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+
+    // The saturating form passes, as does an annotated invariant.
+    let ok = "pub fn done(now: u64, lat_ns: u64) -> u64 {\n    now.saturating_add(lat_ns)\n}\n";
+    let report = semantic_scan("tick_ok", &[("sim/clock.rs", ok)], &[]);
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+
+    let allowed = "pub fn done(now: u64, lat_ns: u64) -> u64 {\n\
+                   \x20   // simlint: allow(tick-arithmetic): lat_ns < 2^20 by construction\n\
+                   \x20   now + lat_ns\n}\n";
+    let report = semantic_scan("tick_allow", &[("sim/clock.rs", allowed)], &[]);
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, "tick-arithmetic");
+}
+
+#[test]
+fn stats_key_coverage_fires_and_is_satisfied_by_docs() {
+    let emitter = "impl Dev {\n\
+                   \x20   pub fn stats_kv(&self) -> Vec<(String, f64)> {\n\
+                   \x20       vec![(\"orphan.reads\".to_string(), 1.0)]\n    }\n}\n";
+    let report = semantic_scan("cov_fires", &[("devices/d.rs", emitter)], &[]);
+    let rules: Vec<&str> = report.diagnostics.iter().map(|d| d.rule).collect();
+    assert_eq!(rules, vec!["stats-key-coverage"], "{}", report.render_text());
+
+    // A doc (or renderer/test) that names the key satisfies the rule.
+    let report = semantic_scan(
+        "cov_doc",
+        &[("devices/d.rs", emitter)],
+        &[("docs/KEYS.md", "| `orphan.reads` | device read count |\n")],
+    );
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+
+    // A justified allow on the emitting line also works.
+    let allowed = "impl Dev {\n\
+                   \x20   pub fn stats_kv(&self) -> Vec<(String, f64)> {\n\
+                   \x20       // simlint: allow(stats-key-coverage): staged for the next report revision\n\
+                   \x20       vec![(\"orphan.reads\".to_string(), 1.0)]\n    }\n}\n";
+    let report = semantic_scan("cov_allow", &[("devices/d.rs", allowed)], &[]);
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, "stats-key-coverage");
+}
+
+#[test]
+fn config_key_liveness_fires_and_sees_readers() {
+    let registry = "pub static KEYS: &[KeyDoc] = &[\n\
+                    \x20   key!(\"sim.quantum\", \"scheduler quantum\", |c| int(c.quantum)),\n];\n";
+    let report = semantic_scan("live_fires", &[("config/registry.rs", registry)], &[]);
+    let rules: Vec<&str> = report.diagnostics.iter().map(|d| d.rule).collect();
+    assert_eq!(
+        rules,
+        vec!["config-key-liveness"],
+        "{}",
+        report.render_text()
+    );
+    assert!(report.diagnostics[0].message.contains("sim.quantum"));
+
+    // A reader outside config/ makes the key live.
+    let reader = "pub fn quantum(cfg: &SimConfig) -> u64 {\n    cfg.quantum\n}\n";
+    let report = semantic_scan(
+        "live_read",
+        &[("config/registry.rs", registry), ("sim/sched.rs", reader)],
+        &[],
+    );
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+
+    let allowed = "pub static KEYS: &[KeyDoc] = &[\n\
+                   \x20   // simlint: allow(config-key-liveness): documentation-only Table I value\n\
+                   \x20   key!(\"sim.quantum\", \"scheduler quantum\", |c| int(c.quantum)),\n];\n";
+    let report = semantic_scan("live_allow", &[("config/registry.rs", allowed)], &[]);
+    assert!(report.diagnostics.is_empty(), "{}", report.render_text());
+    assert_eq!(report.suppressed.len(), 1);
+    assert_eq!(report.suppressed[0].rule, "config-key-liveness");
+}
+
+#[test]
+fn include_tests_walks_the_test_tree_under_the_relaxed_profile() {
+    let root = std::env::temp_dir().join("cxl_ssd_sim_simcheck_inc_tests");
+    let _ = std::fs::remove_dir_all(&root);
+    let src = root.join("src");
+    std::fs::create_dir_all(src.join("sim")).unwrap();
+    std::fs::write(src.join("sim/ok.rs"), "pub fn f() -> u64 { 1 }\n").unwrap();
+    std::fs::create_dir_all(root.join("tests")).unwrap();
+    // unwrap is fine in tests; wall-clock is not.
+    std::fs::write(
+        root.join("tests/t.rs"),
+        "#[test]\nfn t() {\n    Some(std::time::Instant::now()).unwrap();\n}\n",
+    )
+    .unwrap();
+
+    let plain = analysis::lint_tree(&src).unwrap();
+    assert!(plain.diagnostics.is_empty(), "{}", plain.render_text());
+
+    let opts = LintOptions {
+        tests_root: Some(analysis::tests_dir_for(&src)),
+        ..LintOptions::default()
+    };
+    let full = analysis::lint_tree_with(&src, &opts).unwrap();
+    let rules: Vec<&str> = full.diagnostics.iter().map(|d| d.rule).collect();
+    assert_eq!(rules, vec!["wall-clock"], "{}", full.render_text());
+    assert_eq!(full.diagnostics[0].file, "tests/t.rs");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
 // ------------------------------------------------------- the ratchet
 
 #[test]
 fn baseline_ratchet_fails_only_on_growth() {
-    let b = Baseline::from_counts(&[("unwrap-in-lib", 3)]);
-    assert!(b.violations(&[("unwrap-in-lib", 3)]).is_empty());
-    assert!(b.violations(&[("unwrap-in-lib", 1)]).is_empty());
-    let grown = b.violations(&[("unwrap-in-lib", 4), ("wall-clock", 1)]);
+    let b = Baseline::from_counts(&[("unwrap-in-lib", 3)], &[("unordered-iter", 2)]);
+    assert!(b.violations(&[("unwrap-in-lib", 3)], &[]).is_empty());
+    assert!(b.violations(&[("unwrap-in-lib", 1)], &[]).is_empty());
+    let grown = b.violations(&[("unwrap-in-lib", 4), ("wall-clock", 1)], &[]);
     assert_eq!(grown.len(), 2, "{grown:?}");
     assert!(grown[0].contains("unwrap-in-lib"), "{}", grown[0]);
+
+    // The suppression ratchet: at or below the pin passes, growth fails.
+    assert!(b.violations(&[], &[("unordered-iter", 2)]).is_empty());
+    let grown = b.violations(&[], &[("unordered-iter", 3)]);
+    assert_eq!(grown.len(), 1, "{grown:?}");
+    assert!(grown[0].contains("pinned count of 2"), "{}", grown[0]);
 }
 
 #[test]
-fn committed_baseline_is_the_all_zero_canonical_form() {
+fn committed_baseline_pins_zero_diagnostics_and_live_suppressions() {
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("simlint.baseline.json");
     let committed = std::fs::read_to_string(&path)
         .unwrap_or_else(|e| panic!("rust/simlint.baseline.json must be checked in ({e})"));
-    assert_eq!(
-        committed,
-        Baseline::zero().to_text(),
-        "the committed baseline drifted from canonical zero; the tree is \
-         meant to stay fully self-applied"
-    );
-    assert_eq!(Baseline::parse(&committed).unwrap(), Baseline::zero());
+    let baseline = Baseline::parse(&committed).unwrap();
+    // Canonical bytes: a re-render is a no-op.
+    assert_eq!(committed, baseline.to_text(), "baseline not canonical JSON");
+    // Zero diagnostics grandfathered: the tree stays fully self-applied.
+    for (rule, n) in &baseline.counts {
+        assert_eq!(*n, 0, "rule {rule} grandfathers {n} diagnostics");
+    }
+    assert_eq!(baseline.counts.len(), RULES.len());
+    // The pinned suppression counts match the live tree exactly — a
+    // removed annotation must be re-blessed too, so the pin never
+    // overstates the debt.
+    let report = full_scan();
+    for (rule, live) in report.suppressed_counts() {
+        assert_eq!(
+            baseline.allowed_suppressions(rule),
+            live,
+            "pinned suppression count for {rule} drifted from the tree; \
+             re-bless with `lint --semantic --include-tests --write-baseline`"
+        );
+    }
 }
 
 // ------------------------------------------- the tree and its docs
 
+fn src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+/// The full scan CI runs: lexical + semantic over `src`, plus the
+/// test tree under the relaxed profile.
+fn full_scan() -> analysis::LintReport {
+    let src = src_root();
+    let opts = LintOptions {
+        semantic: true,
+        tests_root: Some(analysis::tests_dir_for(&src)),
+        references: analysis::external_references(&src),
+    };
+    analysis::lint_tree_with(&src, &opts).unwrap()
+}
+
 #[test]
 fn shipped_tree_scans_clean() {
-    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
-    let report = analysis::lint_tree(&src).unwrap();
+    let report = analysis::lint_tree(&src_root()).unwrap();
     assert!(
         report.files.len() > 40,
         "suspiciously few files scanned: {:?}",
@@ -202,11 +435,90 @@ fn shipped_tree_scans_clean() {
         "the tree must stay self-applied; new findings:\n{}",
         report.render_text()
     );
-    // The self-application left a annotated trail, every entry justified.
+    // The self-application left an annotated trail, every entry justified.
     assert!(!report.suppressed.is_empty());
     assert!(report.suppressed.iter().all(|s| !s.justification.is_empty()));
-    // And the zero baseline therefore passes.
-    assert!(Baseline::zero().violations(&report.counts()).is_empty());
+    // And the committed baseline therefore passes.
+    let baseline =
+        Baseline::load(&PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("simlint.baseline.json"))
+            .unwrap();
+    assert!(baseline
+        .violations(&report.counts(), &report.suppressed_counts())
+        .is_empty());
+}
+
+#[test]
+fn shipped_tree_scans_clean_under_the_full_semantic_scan() {
+    let report = full_scan();
+    // The test tree rides along...
+    assert!(
+        report.files.iter().any(|f| f.starts_with("tests/")),
+        "tests/ missing from the walk: {:?}",
+        report.files
+    );
+    // ...and the whole thing is clean: zero diagnostics from the
+    // lexical rules, the test-profile rules, and all four simcheck
+    // semantic rules.
+    assert!(
+        report.diagnostics.is_empty(),
+        "the tree must stay self-applied under --semantic --include-tests:\n{}",
+        report.render_text()
+    );
+}
+
+#[test]
+fn lexer_and_parser_classify_every_byte_identically() {
+    // The token-tree parser (ast.rs) re-derives comment/string/code
+    // classification independently of the line lexer. The two must
+    // agree on every char of every shipped source and test file —
+    // divergence means one of them mis-lexes real code the other
+    // rules depend on.
+    fn walk(dir: &Path, files: &mut Vec<PathBuf>) {
+        let mut entries: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                walk(&path, files);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    let mut files = Vec::new();
+    walk(&src_root(), &mut files);
+    walk(
+        &PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests"),
+        &mut files,
+    );
+    assert!(files.len() > 50, "suspiciously few files: {}", files.len());
+    for path in files {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let from_lexer = lexer::lex(&text).classes;
+        let from_parser = ast::classify(&text);
+        assert_eq!(
+            from_lexer.len(),
+            from_parser.len(),
+            "class-vector length diverged on {}",
+            path.display()
+        );
+        if let Some(i) = (0..from_lexer.len()).find(|&i| from_lexer[i] != from_parser[i]) {
+            let upto: String = text.chars().take(i).collect();
+            let line = upto.matches('\n').count() + 1;
+            let ctx: String = text.chars().skip(i.saturating_sub(30)).take(60).collect();
+            panic!(
+                "{}:{}: char {} classified {:?} by the lexer but {:?} by the parser\n...{}...",
+                path.display(),
+                line,
+                i,
+                from_lexer[i],
+                from_parser[i],
+                ctx.replace('\n', "\\n")
+            );
+        }
+    }
 }
 
 #[test]
@@ -232,4 +544,9 @@ fn every_rule_is_documented_with_id_and_fix() {
         assert!(!rule.summary.is_empty() && !rule.matches.is_empty());
         assert!(!rule.action.is_empty());
     }
+    // Both layers are represented, and the docs say which is which.
+    assert!(RULES.iter().any(|r| r.semantic));
+    assert!(RULES.iter().any(|r| !r.semantic));
+    assert!(md.contains("- **Layer:** semantic (`lint --semantic`)."));
+    assert!(md.contains("- **Layer:** lexical."));
 }

@@ -5,6 +5,7 @@
 //! This file holds exactly one test so it runs alone in its own test
 //! binary — timing is not perturbed by sibling tests on other threads.
 
+// simlint: allow(wall-clock): this test exists to measure host wall-clock speedup; timings never enter figure data
 use std::time::Instant;
 
 use cxl_ssd_sim::coordinator::experiments::{self, ExpScale};
@@ -15,11 +16,11 @@ fn parallel_all_figures_is_not_slower_and_identical() {
         .map(|n| n.get())
         .unwrap_or(1);
 
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // simlint: allow(wall-clock): serial-leg timing for the speedup assertion only
     let serial = experiments::all_figures(ExpScale::quick(), 1);
     let serial_wall = t0.elapsed().as_secs_f64();
 
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // simlint: allow(wall-clock): parallel-leg timing for the speedup assertion only
     let parallel = experiments::all_figures(ExpScale::quick(), 4);
     let parallel_wall = t0.elapsed().as_secs_f64();
 
