@@ -105,7 +105,7 @@ pub const RULES: [Rule; 10] = [
     Rule {
         id: TICK_ARITHMETIC,
         summary: "bare tick arithmetic in simulation state needs saturating/checked forms",
-        matches: "bare `+` / `-` / `*` between operands whose identifiers look tick-typed (`now`, `*_ns`, `*_tick`, `*_ticks`) in the sim-state modules; compound assignments (`+=`) are exempt because accumulators are bounded by simulated time",
+        matches: "bare `+` / `-` / `*` between operands whose identifiers look tick-typed (`now`, `done`, `scheduled`, `*_ns`, `*_tick`, `*_ticks`) in the sim-state modules; compound assignments (`+=`) are exempt because accumulators are bounded by simulated time",
         action: "use `saturating_add` / `saturating_sub` / `saturating_mul` (or the `checked_` forms when overflow must be surfaced), or annotate with the invariant bounding the operands",
         suppressible: true,
         semantic: true,

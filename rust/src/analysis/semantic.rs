@@ -8,7 +8,8 @@
 //!   before it may carry a catch-all arm, so adding a variant breaks
 //!   the lint instead of silently routing into a default;
 //! - **tick-arithmetic** — bare `+`/`-`/`*` between tick-looking
-//!   identifiers (`now`, `*_ns`, `*_tick(s)`) in the sim-state dirs:
+//!   identifiers (`now`, `done`, `scheduled`, `*_ns`, `*_tick(s)`) in
+//!   the sim-state dirs:
 //!   billion-request horizons overflow u64 tick math, so the
 //!   saturating/checked forms are required;
 //! - **stats-key-coverage** — every key literal emitted by a
@@ -117,6 +118,8 @@ fn tickish(name: &str) -> bool {
         .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
     plain
         && (name == "now"
+            || name == "done"
+            || name == "scheduled"
             || name.ends_with("_ns")
             || name.ends_with("_tick")
             || name.ends_with("_ticks"))
@@ -385,6 +388,16 @@ mod tests {
         assert_eq!(rules_fired(&check(&idx, &[])), [TICK_ARITHMETIC]);
         let idx = build(&[("results/x.rs", src)]);
         assert!(check(&idx, &[]).diagnostics.is_empty());
+    }
+
+    #[test]
+    fn tick_arithmetic_covers_completion_tick_names() {
+        // `done` and `scheduled` are the conventional completion-tick
+        // bindings around the event engine; bare math on them is
+        // exactly the replay-underflow bug class.
+        let src = "fn f(done: u64, scheduled: u64) -> u64 { done - scheduled }\n";
+        let idx = build(&[("workloads/x.rs", src)]);
+        assert_eq!(rules_fired(&check(&idx, &[])), [TICK_ARITHMETIC]);
     }
 
     #[test]

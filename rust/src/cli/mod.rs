@@ -6,6 +6,7 @@
 //! cxl-ssd-sim sweep --experiment all|fig3|fig4|fig5|fig6|policies|mlp|replay|pool|mshr|fastmode
 //!                   [--jobs N] [--quick] [--out dir]
 //! cxl-ssd-sim report --figures <dir> | --baseline <dir> --candidate <dir> | --bench <dir>
+//!                    | --bench-engine [--quick]
 //! cxl-ssd-sim docs [--kind config|lint] [--out docs/CONFIG.md]
 //! cxl-ssd-sim lint [--root dir] [--format text|json] [--out file]
 //!                  [--baseline file] [--write-baseline]
@@ -17,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
 use crate::coordinator::experiments::{self, ExpScale};
-use crate::coordinator::{fastmode_compare, run_with_trace, sweep};
+use crate::coordinator::{engine_bench, fastmode_compare, run_with_trace, sweep};
 use crate::devices::{build_device, DeviceKind, Instrumented};
 use crate::results::{self, report, Section, SectionKind};
 use crate::sim::{to_us, NS};
@@ -41,6 +42,7 @@ USAGE:
   cxl-ssd-sim report --figures <dir>
   cxl-ssd-sim report --baseline <dir> --candidate <dir> [--threshold <pct>]
   cxl-ssd-sim report --bench <dir> [--bench-out <file>]
+  cxl-ssd-sim report --bench-engine [--quick] [--bench-out <file>]
   cxl-ssd-sim docs  [--kind <config|lint>] [--out <file>]
   cxl-ssd-sim lint  [--root <dir>] [--semantic] [--include-tests]
                     [--format <text|json>] [--out <file>]
@@ -90,7 +92,12 @@ job: resolved config, seeds, counters, latency histogram). 'report
 and exits nonzero on drift beyond --threshold (default 0: the
 simulator is bit-deterministic, any drift is a change); 'report
 --bench dir' exports headline metrics as BENCH_sweep.json for the
-perf trajectory. 'docs' prints a generated reference: --kind config
+perf trajectory; 'report --bench-engine' runs the engine throughput
+benchmark — a fixed closed-loop zipfian replay over all five devices
+— and writes requests-simulated-per-wall-second rows as
+BENCH_engine.json (the engine under test follows sys.engine:
+event-queue by default, --set sys.engine=tick for the legacy walker).
+'docs' prints a generated reference: --kind config
 (default, docs/CONFIG.md) or --kind lint (docs/LINT.md).
 
 Static analysis: 'lint' scans the simulator's own sources (default
@@ -136,6 +143,7 @@ impl Args {
                         | "write-baseline"
                         | "semantic"
                         | "include-tests"
+                        | "bench-engine"
                 );
                 if is_switch {
                     switches.push(name.to_string());
@@ -398,9 +406,37 @@ pub fn main(argv: &[String]) -> Result<i32> {
                 );
                 return Ok(0);
             }
+            if args.has("bench-engine") {
+                let cfg = build_config(&args)?;
+                let quick = args.has("quick");
+                let rows = engine_bench(&cfg, quick);
+                let json_rows: Vec<(String, u64, f64)> = rows
+                    .iter()
+                    .map(|r| (r.device.name().to_string(), r.requests, r.req_per_sec()))
+                    .collect();
+                let text = report::engine_bench_json(&json_rows, quick);
+                let out = args.get("bench-out").unwrap_or("BENCH_engine.json");
+                std::fs::write(out, &text)
+                    .with_context(|| format!("writing engine bench to {out}"))?;
+                let mut table =
+                    crate::stats::Table::new(&["device", "requests", "req/wall-s"]);
+                for r in &rows {
+                    table.row_owned(vec![
+                        r.device.name().to_string(),
+                        r.requests.to_string(),
+                        format!("{:.0}", r.req_per_sec()),
+                    ]);
+                }
+                print!("{}", table.render());
+                println!(
+                    "wrote engine bench ({} engine) to {out}",
+                    cfg.engine.name()
+                );
+                return Ok(0);
+            }
             let base_dir = args.get("baseline").context(
-                "report needs --figures <dir>, --bench <dir>, or \
-                 --baseline <dir> --candidate <dir>",
+                "report needs --figures <dir>, --bench <dir>, --bench-engine, \
+                 or --baseline <dir> --candidate <dir>",
             )?;
             let cand_dir = args
                 .get("candidate")
@@ -809,6 +845,21 @@ mod tests {
         assert_eq!(code, 0);
         let text = std::fs::read_to_string(out).unwrap();
         assert!(text.contains("stream.triad_mbs"), "{text}");
+    }
+
+    #[test]
+    fn report_bench_engine_writes_artifact() {
+        let out = "/tmp/cxl_ssd_sim_BENCH_engine.json";
+        let _ = std::fs::remove_file(out);
+        let code = main(&argv(&format!(
+            "report --bench-engine --quick --bench-out {out}"
+        )))
+        .unwrap();
+        assert_eq!(code, 0);
+        let text = std::fs::read_to_string(out).unwrap();
+        assert!(text.contains("engine-bench"), "{text}");
+        assert!(text.contains("req_per_wall_s"), "{text}");
+        crate::results::json::Json::parse(&text).unwrap();
     }
 
     #[test]

@@ -119,6 +119,12 @@ pub struct SimConfig {
     /// `true` = closed loop (next request issues as soon as the MLP
     /// window grants a slot). CLI `--closed` overrides per invocation.
     pub replay_closed: bool,
+    /// Completion engine driving each run: `event` (the default) posts
+    /// every window/switch-port completion to one per-run
+    /// [`crate::sim::Engine`] queue; `tick` keeps the legacy private
+    /// tick walks. Numerics are bit-identical either way (locked by
+    /// `tests/engine_equivalence.rs`).
+    pub engine: crate::sim::EngineMode,
 }
 
 impl Default for SimConfig {
@@ -228,6 +234,12 @@ impl SimConfig {
             ("sys", "seed") => self.seed = v.as_u64()?,
             ("sys", "jobs") => self.jobs = v.as_u64()? as usize,
             ("sys", "mlp") => self.mlp = (v.as_u64()? as usize).max(1),
+            ("sys", "engine") => {
+                let s = v.as_str()?;
+                self.engine = crate::sim::EngineMode::parse(&s).ok_or_else(|| {
+                    ConfigError::BadValue(format!("sys.engine '{s}' (want tick|event)"))
+                })?
+            }
             ("replay", "closed") => self.replay_closed = v.as_bool()?,
             _ => return Err(bad()),
         }
@@ -297,6 +309,13 @@ mod tests {
         assert!(!c.replay_closed, "replay defaults to open loop");
         c.apply_override("replay.closed=true").unwrap();
         assert!(c.replay_closed);
+        assert_eq!(c.engine, crate::sim::EngineMode::Event, "event engine by default");
+        c.apply_override("sys.engine=tick").unwrap();
+        assert_eq!(c.engine, crate::sim::EngineMode::Tick);
+        c.apply_override("sys.engine=event").unwrap();
+        assert_eq!(c.engine, crate::sim::EngineMode::Event);
+        let e = c.apply_override("sys.engine=warp").unwrap_err();
+        assert!(e.to_string().contains("warp"), "{e}");
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub fn table1() -> SimConfig {
         jobs: 1,
         mlp: 1,
         replay_closed: false,
+        engine: crate::sim::EngineMode::Event,
     }
 }
 

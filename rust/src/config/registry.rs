@@ -252,6 +252,9 @@ pub static REGISTRY: &[KeyDoc] = &[
         "outstanding-request window for bandwidth workloads (clamps to >= 1)",
         |c| uint(c.mlp)
     ),
+    key!("sys.engine", "completion engine: event (shared per-run queue) or tick (legacy)", |c| {
+        ConfigValue::Str(c.engine.name().to_string())
+    }),
     // --- replay ---
     key!(
         "replay.closed",

@@ -17,7 +17,8 @@ use crate::surrogate::Surrogate;
 use crate::topology::SystemStats;
 use crate::trace::Trace;
 use crate::workloads::{
-    MembenchResult, ReplayResult, StreamResult, ViperResult, WorkloadKind, WorkloadSpec,
+    MembenchResult, ReplayMode, ReplayResult, StreamResult, ViperResult, WorkloadKind,
+    WorkloadSpec,
 };
 
 /// Everything a detailed run produces.
@@ -62,6 +63,56 @@ fn run_inner(
     // the full-scale spec for `workload`, seeded from `cfg.seed`.
     let spec = WorkloadSpec::default_for(workload);
     sweep::run_spec(device, &spec, cfg, capture)
+}
+
+/// One device's row of the engine throughput benchmark
+/// (`report --bench-engine` → `BENCH_engine.json`).
+#[derive(Debug, Clone)]
+pub struct EngineBench {
+    pub device: DeviceKind,
+    /// Requests simulated (reads + writes through the device).
+    pub requests: u64,
+    /// Host wall-clock seconds the replay took.
+    pub host_seconds: f64,
+}
+
+impl EngineBench {
+    /// Requests simulated per host wall-second — the tracked figure.
+    pub fn req_per_sec(&self) -> f64 {
+        if self.host_seconds > 0.0 {
+            self.requests as f64 / self.host_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Engine throughput benchmark: a fixed closed-loop zipfian replay
+/// (the replay campaign's synthetic stream, arrival gaps ignored) over
+/// the five paper devices, reporting requests simulated per host
+/// wall-second. Runs serially so rows are not perturbed by scheduling;
+/// the engine mode under test comes from `cfg.engine`.
+pub fn engine_bench(cfg: &SimConfig, quick: bool) -> Vec<EngineBench> {
+    let scale = if quick {
+        experiments::ExpScale::quick()
+    } else {
+        experiments::ExpScale::full()
+    };
+    let spec = WorkloadSpec::Replay {
+        source: crate::trace::TraceSource::Synthetic(scale.zipf_replay_spec()),
+        mode: ReplayMode::Closed,
+    };
+    DeviceKind::ALL
+        .iter()
+        .map(|&device| {
+            let (out, _) = sweep::run_spec(device, &spec, cfg, false);
+            EngineBench {
+                device,
+                requests: out.system.device_reads + out.system.device_writes,
+                host_seconds: out.host_seconds,
+            }
+        })
+        .collect()
 }
 
 /// Fast-vs-detailed comparison on one trace (the fast-mode ablation).

@@ -39,7 +39,7 @@ use crate::config::SimConfig;
 use crate::coordinator::RunOutput;
 use crate::cpu::Core;
 use crate::devices::{build_device, DeviceKind, Instrumented};
-use crate::sim::to_sec;
+use crate::sim::{to_sec, Engine, EngineMode};
 use crate::stats::{Histogram, Table};
 use crate::topology::{System, SystemStats};
 use crate::trace::Trace;
@@ -103,12 +103,12 @@ impl SweepSpec {
         let mut salts = Vec::with_capacity(self.workloads.len());
         let mut occurrence = vec![0u64; WorkloadKind::ALL.len()];
         for w in &self.workloads {
-            let ord = WorkloadKind::ALL
-                .iter()
-                .position(|k| *k == w.kind())
-                .unwrap_or(0);
-            salts.push(((ord as u64) << 16) | occurrence[ord]);
-            occurrence[ord] += 1;
+            // Exhaustive lookup (WorkloadKind::ordinal): a kind missing
+            // from ALL can no longer silently salt-collide with
+            // ordinal 0 and corrupt paired-comparison seeds.
+            let ord = w.kind().ordinal();
+            salts.push((ord << 16) | occurrence[ord as usize]);
+            occurrence[ord as usize] += 1;
         }
 
         let mut jobs = Vec::with_capacity(self.len());
@@ -188,12 +188,22 @@ pub fn run_spec(
         let wall = Instant::now();
         let trace = source.materialize(cfg.seed);
         let mut dev = Instrumented::new(build_device(device, cfg));
+        let engine = (cfg.engine == EngineMode::Event).then(Engine::new);
         let result = Replay {
             trace: &trace,
             mode: *mode,
             mlp: cfg.mlp,
         }
-        .run(&mut dev);
+        .run_with_engine(&mut dev, engine.as_ref());
+        if let Some(engine) = &engine {
+            let stats = engine.finish();
+            // >= not ==: a pooled device's switch ports post their own
+            // completions on top of the replay window's one per request.
+            debug_assert!(
+                stats.posted >= result.reads + result.writes,
+                "engine saw every replay completion"
+            );
+        }
         let system = SystemStats {
             device_reads: result.reads,
             device_writes: result.writes,
@@ -221,6 +231,11 @@ pub fn run_spec(
     // issues blocking loads (loaded latency), stream and viper switch to
     // windowed issue at mlp > 1.
     let mut core = Core::with_mlp(cfg.cpu, cfg.mlp);
+    let engine = (cfg.engine == EngineMode::Event).then(Engine::new);
+    if let Some(engine) = &engine {
+        sys.attach_engine(engine);
+        core.attach_engine(engine);
+    }
     if capture {
         sys.enable_trace();
     }
@@ -282,6 +297,9 @@ pub fn run_spec(
         WorkloadSpec::Replay { .. } => unreachable!("replay handled above"),
     }
     sys.drain(core.now());
+    if let Some(engine) = &engine {
+        engine.finish();
+    }
 
     let trace = if capture { Some(sys.take_trace()) } else { None };
     let out = RunOutput {

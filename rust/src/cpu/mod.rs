@@ -74,6 +74,17 @@ impl Core {
         self.now
     }
 
+    /// Attach both request windows to the run's shared completion
+    /// engine ([`crate::sim::Engine`]): loads post tagged
+    /// [`CoreLoad`](crate::sim::CompletionTag::CoreLoad), windowed
+    /// stores tagged [`CoreStore`](crate::sim::CompletionTag::CoreStore).
+    pub fn attach_engine(&mut self, engine: &crate::sim::Engine) {
+        self.load_window
+            .attach(engine, crate::sim::CompletionTag::CoreLoad);
+        self.store_window
+            .attach(engine, crate::sim::CompletionTag::CoreStore);
+    }
+
     /// The outstanding-load window size this core was built with.
     pub fn mlp(&self) -> usize {
         self.load_window.cap()

@@ -137,6 +137,12 @@ pub trait MemoryDevice {
     /// End-of-run drain (flush write buffers / dirty cache pages).
     fn flush(&mut self, _now: Tick) {}
 
+    /// Attach any internal completion windows to the run's shared
+    /// completion engine ([`crate::sim::Engine`]). Flat devices have
+    /// none (their resources are ready-time maxima, not windows); the
+    /// pooled device attaches its switch-port credit windows.
+    fn attach_engine(&mut self, _engine: &crate::sim::Engine) {}
+
     /// Key device statistics for reports.
     fn stats_kv(&self) -> Vec<(String, f64)> {
         Vec::new()
@@ -197,6 +203,10 @@ impl MemoryDevice for Instrumented {
 
     fn flush(&mut self, now: Tick) {
         self.inner.flush(now);
+    }
+
+    fn attach_engine(&mut self, engine: &crate::sim::Engine) {
+        self.inner.attach_engine(engine);
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {

@@ -142,7 +142,11 @@ impl Dram {
             }
         };
         let done = start + core + self.cfg.t_burst;
-        let busy_until = if is_write { done + self.cfg.t_wr } else { done };
+        let busy_until = if is_write {
+            done.saturating_add(self.cfg.t_wr)
+        } else {
+            done
+        };
 
         self.stats.busy_ticks += busy_until - start;
         if is_write {

@@ -611,6 +611,13 @@ impl MemoryDevice for PooledDevice {
         }
     }
 
+    fn attach_engine(&mut self, engine: &crate::sim::Engine) {
+        self.switch.attach_engine(engine);
+        for c in &mut self.children {
+            c.attach_engine(engine);
+        }
+    }
+
     fn stats_kv(&self) -> Vec<(String, f64)> {
         let mut kv = vec![("pool.members".to_string(), self.children.len() as f64)];
         for i in 0..self.children.len() {

@@ -20,7 +20,7 @@
 //! explicit call-order state transitions (no wall clock, no randomness),
 //! so pooled runs stay bit-deterministic across serial/parallel sweeps.
 
-use crate::sim::{OutstandingWindow, Tick};
+use crate::sim::{CompletionTag, Engine, OutstandingWindow, Tick};
 
 /// Switch timing/flow-control parameters (`pool.arb_ns`,
 /// `pool.port_credits`).
@@ -74,6 +74,14 @@ impl CxlSwitch {
 
     pub fn n_ports(&self) -> usize {
         self.ports.len()
+    }
+
+    /// Attach every port's credit window to the run's completion
+    /// engine; each port posts tagged with its own index.
+    pub fn attach_engine(&mut self, engine: &Engine) {
+        for (i, port) in self.ports.iter_mut().enumerate() {
+            port.attach(engine, CompletionTag::Port(i as u16));
+        }
     }
 
     /// Request path: acquire a credit on `port` (stalling if the port is
@@ -162,6 +170,22 @@ mod tests {
         let a2 = s.forward(1_000_000, 0);
         assert_eq!(a2, 1_000_000 + 5 * NS);
         assert_eq!(s.port_stats(0).credit_stall_ticks, 0);
+    }
+
+    #[test]
+    fn attached_ports_post_completions_to_the_engine() {
+        let engine = Engine::new();
+        let mut s = switch(2, 1);
+        s.attach_engine(&engine);
+        let a1 = s.forward(0, 0);
+        s.respond(0, a1 + 10 * NS);
+        assert_eq!(engine.stats().posted, 1);
+        // Saturated port: the next forward waits on the completion and
+        // consumes it from the shared queue.
+        s.forward(0, 0);
+        assert_eq!(engine.stats().consumed, 1);
+        let stats = engine.finish();
+        assert_eq!(stats.posted, stats.consumed);
     }
 
     #[test]

@@ -421,6 +421,26 @@ pub fn bench_json(campaign: &Campaign) -> String {
     .to_text()
 }
 
+/// Serialize the engine throughput benchmark as `BENCH_engine.json`
+/// content: one `device/requests` and `device/req_per_wall_s` metric
+/// pair per row, in the same canonical shape as [`bench_json`] so the
+/// trajectory tooling can ingest both files identically.
+pub fn engine_bench_json(rows: &[(String, u64, f64)], quick: bool) -> String {
+    use crate::results::json::Json;
+    let mut metrics: Vec<(String, Json)> = Vec::new();
+    for (device, requests, req_per_sec) in rows {
+        metrics.push((format!("{device}/requests"), Json::UInt(*requests as u128)));
+        metrics.push((format!("{device}/req_per_wall_s"), Json::Float(*req_per_sec)));
+    }
+    Json::Obj(vec![
+        ("schema_version".into(), Json::UInt(crate::results::SCHEMA_VERSION as u128)),
+        ("experiment".into(), Json::str("engine-bench")),
+        ("quick".into(), Json::Bool(quick)),
+        ("metrics".into(), Json::Obj(metrics)),
+    ])
+    .to_text()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -545,6 +565,16 @@ mod tests {
         assert!(text.contains("431.5"));
         assert!(!text.contains("not_headline"));
         // Valid JSON.
+        crate::results::json::Json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn engine_bench_json_exports_per_device_throughput() {
+        let rows = vec![("dram".to_string(), 4000, 123456.78)];
+        let text = engine_bench_json(&rows, true);
+        assert!(text.contains("engine-bench"));
+        assert!(text.contains("dram/requests"));
+        assert!(text.contains("dram/req_per_wall_s"));
         crate::results::json::Json::parse(&text).unwrap();
     }
 

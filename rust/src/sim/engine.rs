@@ -1,0 +1,207 @@
+//! Per-run completion engine: one shared [`EventQueue`] that every
+//! completion source of a run posts into.
+//!
+//! ## What posts, what consumes
+//!
+//! The CPU core's load/store windows, the replay driver's window and
+//! every pool-switch port ([`crate::pool`]) are attached to one
+//! [`Engine`] per run. Each completion a window records
+//! ([`crate::sim::OutstandingWindow::push`]) is posted to the shared
+//! queue tagged with its source ([`CompletionTag`]); whenever a window
+//! advances time to a completion (`wait_earliest`, `drain`), it
+//! consumes every queued completion at or before that horizon from the
+//! queue head.
+//!
+//! ## The bit-identity invariant
+//!
+//! The engine is a wake-up bus, not a scheduler: each window's private
+//! in-flight set stays authoritative for *which* tick a waiter advances
+//! to, and the leaf latency model is still the devices'
+//! `issue(now, addr, is_write) -> done` trait call. The queue therefore
+//! observes exactly the completion stream the tick-walk engine produced
+//! — every number is bit-identical with the engine attached or not
+//! (locked by `rust/tests/engine_equivalence.rs`). What the queue adds
+//! is a single global, deterministically ordered completion timeline:
+//! the substrate for multi-requester fabrics, where waiters block on
+//! the queue head instead of private scans.
+//!
+//! Windows attached to one engine have *unsynchronized effective
+//! clocks* (a pool port's admit tick can trail the core's clock, and
+//! posted stores complete out of order), so consumption is anonymous
+//! and horizon-based rather than tag-matched. The conservation
+//! invariant — every posted completion is consumed exactly once by the
+//! end of the run — is checked in [`Engine::finish`].
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::{EventQueue, Tick};
+
+/// Which component posted a completion to the run's engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionTag {
+    /// The CPU core's outstanding-load window.
+    CoreLoad,
+    /// The CPU core's store window (posted/dependent stores).
+    CoreStore,
+    /// The trace-replay driver's request window.
+    Replay,
+    /// A pool-switch port window (by port index).
+    Port(u16),
+}
+
+/// Which completion engine drives a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Legacy: every component privately walks its own in-flight ticks.
+    Tick,
+    /// Completions post to one per-run [`Engine`] queue (the default).
+    Event,
+}
+
+impl EngineMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "tick" => Some(EngineMode::Tick),
+            "event" => Some(EngineMode::Event),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineMode::Tick => "tick",
+            EngineMode::Event => "event",
+        }
+    }
+}
+
+/// Lifetime counters of one engine (conservation telemetry).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    /// Completions posted to the shared queue.
+    pub posted: u64,
+    /// Completions consumed from the queue head.
+    pub consumed: u64,
+}
+
+#[derive(Debug, Default)]
+struct EngineState {
+    queue: EventQueue<CompletionTag>,
+    stats: EngineStats,
+}
+
+/// Shared handle to one run's completion queue. Cloning is cheap and
+/// every clone refers to the same queue — windows, the core, the
+/// switch ports and the run driver all hold the same engine.
+///
+/// Single-threaded by construction (`Rc<RefCell<..>>`): a run — and
+/// therefore its engine — lives entirely on one sweep worker.
+#[derive(Debug, Clone, Default)]
+pub struct Engine {
+    inner: Rc<RefCell<EngineState>>,
+}
+
+impl Engine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Post a completion at `when` (unclamped: sources with trailing
+    /// effective clocks may post behind the queue's popped time).
+    pub fn post(&self, when: Tick, tag: CompletionTag) {
+        let mut s = self.inner.borrow_mut();
+        s.queue.post(when, tag);
+        s.stats.posted += 1;
+    }
+
+    /// Consume every queued completion at or before `horizon`; returns
+    /// how many were consumed. Called by waiters after they compute
+    /// their wake tick from their own in-flight set.
+    pub fn consume_until(&self, horizon: Tick) -> u64 {
+        let mut s = self.inner.borrow_mut();
+        let mut n = 0;
+        while s.queue.peek().is_some_and(|when| when <= horizon) {
+            s.queue.pop();
+            n += 1;
+        }
+        s.stats.consumed += n;
+        n
+    }
+
+    /// Completions still queued (posted, not yet consumed).
+    pub fn pending(&self) -> usize {
+        self.inner.borrow().queue.len()
+    }
+
+    /// End of run: drain every remaining completion and return the
+    /// lifetime counters. Conservation (`posted == consumed`) holds by
+    /// construction afterwards and is debug-asserted.
+    pub fn finish(&self) -> EngineStats {
+        let mut s = self.inner.borrow_mut();
+        while s.queue.pop().is_some() {
+            s.stats.consumed += 1;
+        }
+        debug_assert_eq!(
+            s.stats.posted, s.stats.consumed,
+            "engine conservation: every posted completion is consumed"
+        );
+        s.stats
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.inner.borrow().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn post_and_consume_by_horizon() {
+        let e = Engine::new();
+        e.post(100, CompletionTag::CoreLoad);
+        e.post(300, CompletionTag::CoreStore);
+        e.post(200, CompletionTag::Replay);
+        assert_eq!(e.consume_until(50), 0);
+        assert_eq!(e.consume_until(200), 2);
+        assert_eq!(e.pending(), 1);
+        let stats = e.finish();
+        assert_eq!(stats.posted, 3);
+        assert_eq!(stats.consumed, 3);
+    }
+
+    #[test]
+    fn clones_share_one_queue() {
+        let e = Engine::new();
+        let peer = e.clone();
+        peer.post(10, CompletionTag::Port(3));
+        assert_eq!(e.pending(), 1);
+        assert_eq!(e.consume_until(10), 1);
+        assert_eq!(peer.stats().posted, 1);
+        assert_eq!(peer.stats().consumed, 1);
+    }
+
+    #[test]
+    fn out_of_order_posts_consume_cleanly() {
+        // A pool port posting behind an already-consumed horizon (the
+        // non-monotone admit ticks posted writes produce) still drains.
+        let e = Engine::new();
+        e.post(500, CompletionTag::CoreLoad);
+        assert_eq!(e.consume_until(500), 1);
+        e.post(100, CompletionTag::Port(0));
+        assert_eq!(e.consume_until(100), 1);
+        let stats = e.finish();
+        assert_eq!(stats.posted, stats.consumed);
+    }
+
+    #[test]
+    fn engine_mode_parses_and_names() {
+        assert_eq!(EngineMode::parse("tick"), Some(EngineMode::Tick));
+        assert_eq!(EngineMode::parse("event"), Some(EngineMode::Event));
+        assert_eq!(EngineMode::parse("warp"), None);
+        assert_eq!(EngineMode::Event.name(), "event");
+        assert_eq!(EngineMode::Tick.name(), "tick");
+    }
+}

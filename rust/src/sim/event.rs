@@ -19,7 +19,6 @@ pub struct Event<T> {
     pub when: Tick,
     pub payload: T,
     seq: u64,
-    cancelled: bool,
 }
 
 impl<T> PartialEq for Event<T> {
@@ -46,12 +45,20 @@ impl<T> Ord for Event<T> {
 
 /// Earliest-first event queue with stable same-tick ordering and
 /// cancellation support.
+///
+/// Cancellation bookkeeping is bounded: `cancel` only records a seq
+/// that is still pending in the heap (it validates liveness and returns
+/// whether anything was cancelled), and every recorded seq is removed
+/// again when its heap entry is discarded — a DES-driven long run
+/// cannot accumulate stale cancel records.
 #[derive(Debug)]
 pub struct EventQueue<T> {
     heap: BinaryHeap<Event<T>>,
     next_seq: u64,
     // simlint: allow(unordered-iter): membership-only set (insert/remove/contains); never iterated
     cancelled: std::collections::HashSet<u64>,
+    // simlint: allow(unordered-iter): membership-only set (insert/remove/contains); never iterated
+    live: std::collections::HashSet<u64>,
     now: Tick,
 }
 
@@ -67,6 +74,7 @@ impl<T> EventQueue<T> {
             heap: BinaryHeap::new(),
             next_seq: 0,
             cancelled: std::collections::HashSet::new(),
+            live: std::collections::HashSet::new(),
             now: 0,
         }
     }
@@ -82,30 +90,52 @@ impl<T> EventQueue<T> {
     /// and debug-assert so release runs degrade gracefully.
     pub fn schedule(&mut self, when: Tick, payload: T) -> EventToken {
         debug_assert!(when >= self.now, "scheduling in the past");
+        self.insert(when.max(self.now), payload)
+    }
+
+    /// Insert `payload` at `when` with no past-scheduling clamp.
+    ///
+    /// The completion-engine variant of [`schedule`](Self::schedule):
+    /// components with unsynchronized effective clocks (pool switch
+    /// ports under posted writes) legitimately observe completion ticks
+    /// behind the queue's `now`. [`pop`](Self::pop) keeps `now`
+    /// monotone regardless of insertion order.
+    pub fn post(&mut self, when: Tick, payload: T) -> EventToken {
+        self.insert(when, payload)
+    }
+
+    fn insert(&mut self, when: Tick, payload: T) -> EventToken {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Event {
-            when: when.max(self.now),
-            payload,
-            seq,
-            cancelled: false,
-        });
+        self.live.insert(seq);
+        self.heap.push(Event { when, payload, seq });
         EventToken(seq)
     }
 
-    /// Cancel a previously scheduled event. Cancelled events are skipped
-    /// (and dropped) when they reach the head of the queue.
-    pub fn cancel(&mut self, token: EventToken) {
-        self.cancelled.insert(token.0);
+    /// Cancel a previously scheduled event. Returns `true` when the
+    /// event was still pending (it will be skipped and dropped when it
+    /// reaches the head of the queue); `false` when the token was
+    /// already popped or already cancelled — in that case nothing is
+    /// recorded, so stale cancels cannot grow internal state.
+    pub fn cancel(&mut self, token: EventToken) -> bool {
+        if self.live.remove(&token.0) {
+            self.cancelled.insert(token.0);
+            true
+        } else {
+            false
+        }
     }
 
     /// Pop the earliest live event, advancing `now` to its tick.
     pub fn pop(&mut self) -> Option<(Tick, T)> {
         while let Some(ev) = self.heap.pop() {
-            if self.cancelled.remove(&ev.seq) || ev.cancelled {
+            if self.cancelled.remove(&ev.seq) {
                 continue;
             }
-            self.now = ev.when;
+            self.live.remove(&ev.seq);
+            // max(): posted events may carry ticks behind `now`
+            // (see [`post`](Self::post)); popped time never regresses.
+            self.now = self.now.max(ev.when);
             return Some((ev.when, ev.payload));
         }
         None
@@ -175,9 +205,20 @@ mod tests {
         let mut q = EventQueue::new();
         let t1 = q.schedule(10, 1);
         q.schedule(20, 2);
-        q.cancel(t1);
+        assert!(q.cancel(t1));
         assert_eq!(q.pop(), Some((20, 2)));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cancel_reports_liveness() {
+        let mut q = EventQueue::new();
+        let t1 = q.schedule(1, 1);
+        let t2 = q.schedule(2, 2);
+        assert!(q.cancel(t1), "pending event cancels");
+        assert!(!q.cancel(t1), "double cancel reports dead");
+        assert_eq!(q.pop(), Some((2, 2)));
+        assert!(!q.cancel(t2), "cancel after pop reports dead");
     }
 
     #[test]
@@ -188,6 +229,18 @@ mod tests {
         q.cancel(t);
         assert_eq!(q.peek(), Some(9));
         assert_eq!(q.pop(), Some((9, 2)));
+    }
+
+    #[test]
+    fn post_accepts_past_ticks_and_now_stays_monotone() {
+        let mut q = EventQueue::new();
+        q.schedule(100, "late");
+        assert_eq!(q.pop(), Some((100, "late")));
+        // A completion observed behind the queue clock still enqueues
+        // (no clamp, no assert) and pops with its true tick.
+        q.post(40, "early");
+        assert_eq!(q.pop(), Some((40, "early")));
+        assert_eq!(q.now(), 100, "popped time never regresses");
     }
 
     #[test]

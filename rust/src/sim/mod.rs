@@ -3,9 +3,11 @@
 //! Tick convention follows gem5: **1 tick = 1 picosecond**. All device
 //! models in this crate express latencies and ready-times in ticks.
 
+pub mod engine;
 mod event;
 pub mod window;
 
+pub use engine::{CompletionTag, Engine, EngineMode, EngineStats};
 pub use event::{Event, EventQueue, EventToken};
 pub use window::{OutstandingWindow, WindowStats};
 

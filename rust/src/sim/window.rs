@@ -19,6 +19,7 @@
 //! clock), which is what keeps `mlp=1` runs bit-identical to the
 //! pre-engine simulator.
 
+use super::engine::{CompletionTag, Engine};
 use super::Tick;
 
 /// Counters for one window's lifetime.
@@ -36,11 +37,20 @@ pub struct WindowStats {
 }
 
 /// A bounded set of in-flight request completion ticks.
+///
+/// When attached to a run's [`Engine`], every completion pushed into
+/// the window is also posted to the shared event queue, and waits
+/// (`wait_earliest`, `drain`) consume the queued completions up to the
+/// tick they advance to. The private `inflight` set stays authoritative
+/// for timing — the queue is a global completion timeline layered on
+/// top (see [`crate::sim::engine`] for the bit-identity argument).
 #[derive(Debug)]
 pub struct OutstandingWindow {
     cap: usize,
     /// Completion ticks of in-flight requests (unsorted; `cap` is small).
     inflight: Vec<Tick>,
+    /// Shared per-run completion queue + this window's source tag.
+    engine: Option<(Engine, CompletionTag)>,
     stats: WindowStats,
 }
 
@@ -52,8 +62,15 @@ impl OutstandingWindow {
         OutstandingWindow {
             cap,
             inflight: Vec::with_capacity(cap),
+            engine: None,
             stats: WindowStats::default(),
         }
+    }
+
+    /// Attach this window to a run's shared completion queue: pushes
+    /// post completions tagged `tag`, waits consume from the queue.
+    pub fn attach(&mut self, engine: &Engine, tag: CompletionTag) {
+        self.engine = Some((engine.clone(), tag));
     }
 
     pub fn cap(&self) -> usize {
@@ -105,11 +122,20 @@ impl OutstandingWindow {
         }
         let earliest = self.inflight.swap_remove(idx);
         self.stats.stall_ticks += earliest.saturating_sub(now);
+        // The wake tick came from the private in-flight set; consume
+        // the shared queue up to the same horizon (anonymous: windows
+        // on one engine have unsynchronized effective clocks).
+        if let Some((engine, _)) = &self.engine {
+            engine.consume_until(earliest);
+        }
         earliest
     }
 
     /// Record a request (admitted earlier) completing at `done`.
     pub fn push(&mut self, done: Tick) {
+        if let Some((engine, tag)) = &self.engine {
+            engine.post(done, *tag);
+        }
         self.inflight.push(done);
         self.stats.issued += 1;
         self.stats.peak_inflight = self.stats.peak_inflight.max(self.inflight.len());
@@ -126,6 +152,9 @@ impl OutstandingWindow {
             .map_or(now, |last| last.max(now));
         self.stats.drain_ticks += done.saturating_sub(now);
         self.inflight.clear();
+        if let Some((engine, _)) = &self.engine {
+            engine.consume_until(done);
+        }
         done
     }
 
@@ -212,6 +241,25 @@ mod tests {
         assert_eq!(w.occupancy(400), 1);
         assert_eq!(w.wait_earliest(600), 600);
         assert_eq!(w.occupancy(600), 0);
+    }
+
+    #[test]
+    fn attached_window_posts_and_consumes_through_the_engine() {
+        let engine = Engine::new();
+        let mut w = OutstandingWindow::new(2);
+        w.attach(&engine, CompletionTag::Replay);
+        assert_eq!(w.admit(0), 0);
+        w.push(100);
+        w.push(300);
+        assert_eq!(engine.stats().posted, 2);
+        // Full window: the wait advances to the earliest completion and
+        // consumes the queue up to that horizon.
+        assert_eq!(w.admit(0), 100);
+        assert_eq!(engine.stats().consumed, 1);
+        assert_eq!(w.drain(100), 300);
+        let stats = engine.finish();
+        assert_eq!(stats.posted, 2);
+        assert_eq!(stats.consumed, 2);
     }
 
     #[test]

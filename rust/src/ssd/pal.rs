@@ -139,7 +139,7 @@ impl Pal {
                 let xfer_start = start.max(ch_ready);
                 self.stats.channel_wait_ticks += xfer_start.saturating_sub(start);
                 let done = xfer_start + self.cfg.t_xfer;
-                (done, done + self.cfg.t_prog, done)
+                (done, done.saturating_add(self.cfg.t_prog), done)
             }
             PalOp::Erase => {
                 self.stats.erases += 1;

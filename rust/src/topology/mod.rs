@@ -80,6 +80,12 @@ impl System {
         self.device.kind()
     }
 
+    /// Attach the device's internal completion windows (pool switch
+    /// ports) to the run's shared completion engine.
+    pub fn attach_engine(&mut self, engine: &crate::sim::Engine) {
+        self.device.attach_engine(engine);
+    }
+
     pub fn device_range(&self) -> AddrRange {
         self.device_range
     }
@@ -160,7 +166,7 @@ impl System {
                 t.push(crate::trace::TraceEntry::new(bus_done, offset, false));
             }
             let done = self.device.issue(bus_done, offset, false);
-            let lat = bus_lat + (done - bus_done);
+            let lat = bus_lat + done.saturating_sub(bus_done);
             self.stats.device_latency.record(lat);
             lat
         } else {

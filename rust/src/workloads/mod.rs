@@ -58,6 +58,21 @@ impl WorkloadKind {
             WorkloadKind::Replay => "replay",
         }
     }
+
+    /// Stable ordinal used to salt paired-comparison seeds (the sweep
+    /// engine mixes it into every job's RNG stream). Exhaustive on
+    /// purpose: a new kind *must* pick a fresh ordinal here — the old
+    /// `ALL.position().unwrap_or(0)` lookup silently collided any kind
+    /// missing from [`ALL`](Self::ALL) with `Stream`'s seeds.
+    pub fn ordinal(self) -> u64 {
+        match self {
+            WorkloadKind::Stream => 0,
+            WorkloadKind::Membench => 1,
+            WorkloadKind::Viper216 => 2,
+            WorkloadKind::Viper532 => 3,
+            WorkloadKind::Replay => 4,
+        }
+    }
 }
 
 /// A fully parametrized workload description.
@@ -181,6 +196,13 @@ mod tests {
             assert_eq!(WorkloadKind::parse(k.name()), Some(k));
         }
         assert_eq!(WorkloadKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn ordinal_matches_position_in_all() {
+        for (i, k) in WorkloadKind::ALL.iter().enumerate() {
+            assert_eq!(k.ordinal(), i as u64, "{k:?}");
+        }
     }
 
     #[test]

@@ -86,7 +86,23 @@ pub struct Replay<'a> {
 impl Replay<'_> {
     /// Drive `device` with the trace; flushes the device at the end.
     pub fn run(&self, device: &mut dyn MemoryDevice) -> ReplayResult {
+        self.run_with_engine(device, None)
+    }
+
+    /// [`run`](Self::run) with the request window — and the device's
+    /// internal windows (pool switch ports) — attached to the run's
+    /// shared completion engine. Timing is bit-identical with or
+    /// without an engine (see [`crate::sim::engine`]).
+    pub fn run_with_engine(
+        &self,
+        device: &mut dyn MemoryDevice,
+        engine: Option<&crate::sim::Engine>,
+    ) -> ReplayResult {
         let mut window = OutstandingWindow::new(self.mlp);
+        if let Some(engine) = engine {
+            window.attach(engine, crate::sim::CompletionTag::Replay);
+            device.attach_engine(engine);
+        }
         let mut latency = Histogram::new();
         let (mut reads, mut writes) = (0u64, 0u64);
         let mut now: Tick = 0;
@@ -108,7 +124,10 @@ impl Replay<'_> {
                 ReplayMode::Open => e.tick,
                 ReplayMode::Closed => issue,
             };
-            latency.record(done - scheduled);
+            // Saturating: a posted-write completion can land before the
+            // scheduled arrival (the non-monotone ticks pool/switch.rs
+            // documents); a bare subtraction wrapped into a ~2^64 sample.
+            latency.record(done.saturating_sub(scheduled));
             if e.is_write {
                 writes += 1;
             } else {
@@ -250,6 +269,75 @@ mod tests {
         .run(dev.as_mut());
         assert_eq!((r.reads, r.writes), (1, 2));
         assert_eq!(r.latency.count(), 3);
+    }
+
+    #[test]
+    fn early_completions_do_not_wrap_the_latency_histogram() {
+        // Regression: open-loop latency was `done - scheduled` with a
+        // bare subtraction. A device completing a posted write *before*
+        // the request's scheduled arrival (non-monotone issue ticks —
+        // see pool/switch.rs) underflowed into a ~2^64 sample.
+        struct EarlyWriter;
+        impl MemoryDevice for EarlyWriter {
+            fn kind(&self) -> DeviceKind {
+                DeviceKind::Dram
+            }
+            fn issue(&mut self, now: Tick, _addr: u64, is_write: bool) -> Tick {
+                // Writes are posted: ack at half the issue tick (always
+                // before an open-loop arrival schedule with gaps).
+                if is_write {
+                    now / 2
+                } else {
+                    now + 100
+                }
+            }
+        }
+        let entries: Vec<TraceEntry> = (0..64)
+            .map(|i| TraceEntry::new(i * US, i * 64, i % 4 != 0))
+            .collect();
+        let trace = Trace::new(entries);
+        let mut dev = EarlyWriter;
+        let r = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 4,
+        }
+        .run(&mut dev);
+        assert_eq!(r.ops(), 64);
+        assert_eq!(r.latency.count(), 64);
+        // Early completions clamp to zero latency instead of wrapping.
+        assert!(
+            r.latency.max() < US,
+            "wrapped sample in histogram: max={}",
+            r.latency.max()
+        );
+    }
+
+    #[test]
+    fn engine_attachment_preserves_replay_numbers() {
+        let cfg = presets::small_test();
+        let trace = sparse_trace(200, US);
+        let mut dev_a = build_device(DeviceKind::CxlSsdCached, &cfg);
+        let plain = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 4,
+        }
+        .run(dev_a.as_mut());
+        let engine = crate::sim::Engine::new();
+        let mut dev_b = build_device(DeviceKind::CxlSsdCached, &cfg);
+        let driven = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 4,
+        }
+        .run_with_engine(dev_b.as_mut(), Some(&engine));
+        assert_eq!(plain.sim_ticks, driven.sim_ticks);
+        assert_eq!(plain.stall_ticks, driven.stall_ticks);
+        assert_eq!(plain.latency.max(), driven.latency.max());
+        let stats = engine.finish();
+        assert_eq!(stats.posted, 200, "one completion per request");
+        assert_eq!(stats.posted, stats.consumed);
     }
 
     #[test]

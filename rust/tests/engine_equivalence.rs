@@ -1,0 +1,73 @@
+//! Event-engine vs tick-walk equivalence: the per-run completion queue
+//! (`sys.engine=event`, the default) is observational — every window
+//! keeps its private inflight list as the timing authority — so every
+//! campaign must produce bit-identical figures whether completions
+//! drain through the shared event queue or the legacy tick walk.
+//!
+//! This is the acceptance gate of the event-engine rework: any metric
+//! drift between the two modes means the queue started steering
+//! simulated time instead of observing it.
+
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::coordinator::experiments::{self, ExpScale};
+use cxl_ssd_sim::results::{report, Campaign};
+use cxl_ssd_sim::sim::EngineMode;
+
+fn campaign(exp: &str, mode: EngineMode) -> Campaign {
+    let mut cfg = presets::small_test();
+    cfg.engine = mode;
+    experiments::build_campaign(exp, &cfg, ExpScale::quick(), 2)
+        .unwrap()
+        .campaign
+}
+
+/// Run `exp` under both engines and require a zero-threshold diff pass
+/// plus byte-identical rendered section tables.
+fn assert_engine_invariant(exp: &str) {
+    let tick = campaign(exp, EngineMode::Tick);
+    let event = campaign(exp, EngineMode::Event);
+    let diff = report::diff_campaigns(&tick, &event, 0.0).unwrap();
+    assert!(
+        diff.passes(),
+        "{exp}: tick vs event engines drifted ({} flagged, {} mismatches):\n{}\n{:?}",
+        diff.flagged,
+        diff.mismatches.len(),
+        diff.table.render(),
+        diff.mismatches
+    );
+    assert!(diff.compared > 0, "{exp}: diff compared nothing");
+    let ta = report::campaign_sections(&tick);
+    let tb = report::campaign_sections(&event);
+    assert_eq!(ta.len(), tb.len(), "{exp}: section counts differ");
+    for ((ha, a), (hb, b)) in ta.iter().zip(tb.iter()) {
+        assert_eq!(ha, hb, "{exp}: section headings differ");
+        assert_eq!(a.render(), b.render(), "{exp}/{ha}: table bytes differ");
+    }
+}
+
+#[test]
+fn mlp_campaign_is_engine_invariant() {
+    // Windowed stream loads: Core's load/store windows post to the
+    // queue at every MLP setting.
+    assert_engine_invariant("mlp");
+}
+
+#[test]
+fn replay_campaign_is_engine_invariant() {
+    // The replay window path (zipfian + captured-trace campaign).
+    assert_engine_invariant("replay");
+}
+
+#[test]
+fn pool_campaign_is_engine_invariant() {
+    // Pool switch ports post per-port completions on top of the
+    // workload window's — the non-monotone producer case.
+    assert_engine_invariant("pool");
+}
+
+#[test]
+fn combined_campaign_is_engine_invariant() {
+    // The full `all` campaign: fig3-fig6, policies, mlp and replay in
+    // one artifact set — the ISSUE's acceptance criterion.
+    assert_engine_invariant("all");
+}

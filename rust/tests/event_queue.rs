@@ -123,6 +123,69 @@ fn now_is_monotone_under_random_load() {
 }
 
 #[test]
+fn differential_against_a_sorted_vec_model() {
+    // Property: across arbitrary schedule/post/cancel/pop
+    // interleavings, the heap-based queue agrees with a naive
+    // insertion-ordered vec model on every pop result and every cancel
+    // verdict. The model picks the live entry with the smallest
+    // (when, insertion index) pair — same-tick FIFO falls out of the
+    // index — so any heap/cancellation bookkeeping bug diverges.
+    check("event queue vs sorted-vec model", 60, |rng| {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        // One entry per insertion: (when, payload, live). Entry index i
+        // corresponds to tokens[i] because both grow in lockstep.
+        let mut model: Vec<(Tick, u64, bool)> = Vec::new();
+        let mut tokens: Vec<EventToken> = Vec::new();
+        let pop_and_check = |q: &mut EventQueue<u64>,
+                             model: &mut Vec<(Tick, u64, bool)>| {
+            let expect = model
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.2)
+                .min_by_key(|&(i, e)| (e.0, i))
+                .map(|(i, e)| (i, e.0, e.1));
+            let got = q.pop();
+            assert_eq!(got, expect.map(|(_, when, payload)| (when, payload)));
+            if let Some((i, _, _)) = expect {
+                model[i].2 = false;
+            }
+        };
+        for step in 0..500u64 {
+            match rng.below(10) {
+                0..=3 => {
+                    // Future-or-now schedule (the clamped entry point).
+                    let when = q.now() + rng.below(50);
+                    tokens.push(q.schedule(when, step));
+                    model.push((when, step, true));
+                }
+                4..=5 => {
+                    // Unclamped post, possibly behind `now` — the pool
+                    // switch-port producer case.
+                    let when = rng.below(200);
+                    tokens.push(q.post(when, step));
+                    model.push((when, step, true));
+                }
+                6..=7 => pop_and_check(&mut q, &mut model),
+                _ => {
+                    if !tokens.is_empty() {
+                        let i = rng.below(tokens.len() as u64) as usize;
+                        // Cancel verdicts must track model liveness,
+                        // including double cancels and dead tokens.
+                        assert_eq!(q.cancel(tokens[i]), model[i].2);
+                        model[i].2 = false;
+                    }
+                }
+            }
+        }
+        while model.iter().any(|e| e.2) {
+            pop_and_check(&mut q, &mut model);
+        }
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    });
+}
+
+#[test]
 fn len_is_an_upper_bound_on_live_events() {
     let mut q = EventQueue::new();
     let t = q.schedule(1, 1);
