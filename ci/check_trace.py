@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Structural check for the simulator's Chrome trace-event export.
+
+CI runs this over the JSON produced by `cxl-ssd-sim trace export` (or
+`run --trace-out`) to assert the artifact is actually loadable by
+Perfetto / chrome://tracing and that the determinism contract's
+side-promises hold:
+
+- top level is {"traceEvents": [...], "displayTimeUnit": "ns"};
+- at least one "M" process-name metadata event, one "X" complete
+  (span) event and one "C" counter event;
+- every "X" span carries finite non-negative ts/dur, pid/tid, and the
+  six-phase breakdown in its args, with the phases summing back to the
+  span duration (the conservation invariant, re-checked downstream of
+  the exporter);
+- every "C" counter value is finite (NaN tracks must be omitted, not
+  serialized as null);
+- the file stays under a size budget so the upload cannot balloon.
+
+Stdlib only; exits nonzero with a message on the first violation.
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+
+PHASE_KEYS = ["queue_ns", "switch_ns", "link_ns", "bank_ns", "flash_ns", "other_ns"]
+COUNTER_NAMES = {"inflight", "issued", "hit_rate", "credit_stall_ns", "waf"}
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_finite_number(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
+def check_span(i, ev):
+    for key in ("ts", "dur"):
+        if not is_finite_number(ev.get(key)) or ev[key] < 0:
+            fail(f"event {i}: span {key!r} must be a finite non-negative number, got {ev.get(key)!r}")
+    for key in ("pid", "tid"):
+        if not isinstance(ev.get(key), int):
+            fail(f"event {i}: span {key!r} must be an integer, got {ev.get(key)!r}")
+    if ev.get("name") not in ("read", "write"):
+        fail(f"event {i}: span name must be read/write, got {ev.get('name')!r}")
+    args = ev.get("args")
+    if not isinstance(args, dict):
+        fail(f"event {i}: span has no args object")
+    for key in ("seq", "addr"):
+        if not isinstance(args.get(key), int):
+            fail(f"event {i}: span args.{key} must be an integer")
+    phase_sum = 0.0
+    for key in PHASE_KEYS:
+        v = args.get(key)
+        if not is_finite_number(v) or v < 0:
+            fail(f"event {i}: span args.{key} must be a finite non-negative number, got {v!r}")
+        phase_sum += v
+    # Phases are ns, dur is us; conservation survives the float round
+    # trip to well under a picosecond per phase.
+    dur_ns = ev["dur"] * 1000.0
+    if abs(phase_sum - dur_ns) > max(1e-6 * dur_ns, 1e-3):
+        fail(
+            f"event {i}: phase sum {phase_sum} ns != span duration {dur_ns} ns "
+            "(conservation broken)"
+        )
+
+
+def check_counter(i, ev):
+    name = ev.get("name")
+    if name not in COUNTER_NAMES:
+        fail(f"event {i}: unknown counter track {name!r}")
+    if not is_finite_number(ev.get("ts")) or ev["ts"] < 0:
+        fail(f"event {i}: counter ts must be a finite non-negative number")
+    args = ev.get("args")
+    if not isinstance(args, dict) or not is_finite_number(args.get(name)):
+        fail(f"event {i}: counter {name!r} value must be a finite number, got {args!r}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="path to the exported trace-event JSON")
+    ap.add_argument(
+        "--max-bytes",
+        type=int,
+        default=8 << 20,
+        help="size budget for the export (default 8 MiB)",
+    )
+    opts = ap.parse_args()
+
+    size = os.path.getsize(opts.trace)
+    if size > opts.max_bytes:
+        fail(f"{opts.trace} is {size} bytes, over the {opts.max_bytes}-byte budget")
+
+    with open(opts.trace, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    if doc.get("displayTimeUnit") != "ns":
+        fail(f"displayTimeUnit must be 'ns', got {doc.get('displayTimeUnit')!r}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty array")
+
+    counts = {"M": 0, "X": 0, "C": 0}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event {i}: not an object")
+        ph = ev.get("ph")
+        if ph not in counts:
+            fail(f"event {i}: unexpected phase {ph!r}")
+        counts[ph] += 1
+        if ph == "M":
+            if ev.get("name") != "process_name" or not isinstance(ev.get("pid"), int):
+                fail(f"event {i}: metadata event must name a process with a pid")
+            if not isinstance(ev.get("args", {}).get("name"), str):
+                fail(f"event {i}: metadata args.name must be a string")
+        elif ph == "X":
+            check_span(i, ev)
+        else:
+            check_counter(i, ev)
+
+    for ph, n in counts.items():
+        if n == 0:
+            fail(f"no {ph!r} events in the trace")
+
+    print(
+        f"check_trace: OK: {counts['X']} spans, {counts['C']} counter samples, "
+        f"{counts['M']} processes, {size} bytes (budget {opts.max_bytes})"
+    )
+
+
+if __name__ == "__main__":
+    main()

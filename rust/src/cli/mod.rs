@@ -34,12 +34,13 @@ USAGE:
   cxl-ssd-sim run   --device <dram|cxl-dram|pmem|cxl-ssd|cxl-ssd-cache|pool|all|d1,d2,..>
                     (--workload <stream|membench|viper216|viper532|replay>
                      | --trace <file>)
-                    [--closed] [--mlp <N>] [--out <dir>]
+                    [--closed] [--mlp <N>] [--out <dir>] [--trace-out <file>]
                     [--config <file>] [--set section.key=value ...]
   cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mlp|replay|pool|mshr|fastmode>
                     [--jobs <N|0=auto>] [--mlp <N>] [--quick] [--out <dir>]
                     [--artifacts <dir>]
   cxl-ssd-sim report --figures <dir>
+  cxl-ssd-sim report --attribution <dir>
   cxl-ssd-sim report --baseline <dir> --candidate <dir> [--threshold <pct>]
   cxl-ssd-sim report --bench <dir> [--bench-out <file>]
   cxl-ssd-sim report --bench-engine [--quick] [--bench-out <file>]
@@ -53,6 +54,7 @@ USAGE:
                     [--theta <0..1>] [--gap <ns>] [--seed <N>]
   cxl-ssd-sim trace replay --in <file> --device <dev> [--closed] [--mlp <N>]
                     [--fast] [--artifacts <dir>]
+  cxl-ssd-sim trace export --in <artifact-dir> --out <file.json>
 
 Figure sweeps (fig3..fig6, policies, mlp, replay, all) run on the
 parallel sweep engine; --jobs N drains the job list with N worker
@@ -99,6 +101,20 @@ BENCH_engine.json (the engine under test follows sys.engine:
 event-queue by default, --set sys.engine=tick for the legacy walker).
 'docs' prints a generated reference: --kind config
 (default, docs/CONFIG.md) or --kind lint (docs/LINT.md).
+
+Observability: obs.trace_cap=N keeps the newest N request-lifecycle
+spans per replay job in a deterministic ring buffer (scheduled /
+issue / done ticks plus a conserved per-phase stall breakdown:
+queue, switch, link, bank, flash, other); obs.sample_ns=T snapshots
+queue depth, hit rate, credit stalls and WAF every T ns of sim time.
+Both default to 0 (off) and ride the run record ('--out'). 'run
+--trace-out file.json' enables tracing (trace_cap 4096 if unset) and
+exports the run as Chrome trace-event JSON — load it in Perfetto
+(ui.perfetto.dev) or chrome://tracing; 'trace export --in dir --out
+file.json' converts an existing traced artifact directory; 'report
+--attribution dir' decomposes each traced job's p50/p95/p99/p99.9
+response time into per-phase stall time (the phase columns sum
+exactly to the response column).
 
 Static analysis: 'lint' scans the simulator's own sources (default
 rust/src) for determinism and offline-invariant hazards — wall-clock
@@ -261,7 +277,12 @@ pub fn main(argv: &[String]) -> Result<i32> {
             print!("{}", experiments::table1_table().render());
         }
         "run" => {
-            let cfg = build_config(&args)?;
+            let mut cfg = build_config(&args)?;
+            // --trace-out implies tracing: default the ring capacity if
+            // the user didn't size it explicitly.
+            if args.get("trace-out").is_some() && cfg.obs.trace_cap == 0 {
+                cfg.apply_override("obs.trace_cap=4096")?;
+            }
             let devices = parse_device_list(&args)?;
             // `--trace file` replays a captured stream instead of running
             // a workload driver; otherwise `--workload` picks one (the
@@ -306,9 +327,18 @@ pub fn main(argv: &[String]) -> Result<i32> {
                 }
                 sections.push(section);
             }
+            let mut campaign = results::Campaign::new("run", false);
+            campaign.sections = sections;
+            if let Some(path) = args.get("trace-out") {
+                let json = results::trace::chrome_trace(&campaign)?;
+                std::fs::write(path, json.to_text())
+                    .with_context(|| format!("writing trace export to {path}"))?;
+                println!(
+                    "wrote Chrome trace-event JSON to {path} \
+                     (load in Perfetto or chrome://tracing)"
+                );
+            }
             if let Some(dir) = args.get("out") {
-                let mut campaign = results::Campaign::new("run", false);
-                campaign.sections = sections;
                 results::write_campaign_to(dir, &campaign)?;
                 println!("wrote {} run record(s) to {dir}", devices.len());
             }
@@ -394,6 +424,16 @@ pub fn main(argv: &[String]) -> Result<i32> {
                 print_sections(&report::campaign_sections(&campaign));
                 return Ok(0);
             }
+            if let Some(dir) = args.get("attribution") {
+                let campaign = results::load_campaign_from(dir)?;
+                let table = report::attribution_table(&campaign)?;
+                println!(
+                    "tail-latency attribution for experiment '{}' from {dir}\n",
+                    campaign.experiment
+                );
+                print!("{}", table.render());
+                return Ok(0);
+            }
             if let Some(dir) = args.get("bench") {
                 let campaign = results::load_campaign_from(dir)?;
                 let text = report::bench_json(&campaign);
@@ -435,7 +475,8 @@ pub fn main(argv: &[String]) -> Result<i32> {
                 return Ok(0);
             }
             let base_dir = args.get("baseline").context(
-                "report needs --figures <dir>, --bench <dir>, --bench-engine, \
+                "report needs --figures <dir>, --attribution <dir>, \
+                 --bench <dir>, --bench-engine, \
                  or --baseline <dir> --candidate <dir>",
             )?;
             let cand_dir = args
@@ -550,7 +591,7 @@ pub fn main(argv: &[String]) -> Result<i32> {
             let sub = args
                 .positional
                 .first()
-                .context("trace needs 'record', 'gen' or 'replay'")?;
+                .context("trace needs 'record', 'gen', 'replay' or 'export'")?;
             match sub.as_str() {
                 "record" => {
                     let cfg = build_config(&args)?;
@@ -673,6 +714,19 @@ pub fn main(argv: &[String]) -> Result<i32> {
                             dev.latency().p99_ns(),
                         );
                     }
+                }
+                "export" => {
+                    let in_dir = args.get("in").context("--in required (artifact dir)")?;
+                    let out_path = args.get("out").context("--out required")?;
+                    let campaign = results::load_campaign_from(in_dir)?;
+                    let json = results::trace::chrome_trace(&campaign)?;
+                    std::fs::write(out_path, json.to_text())
+                        .with_context(|| format!("writing trace export to {out_path}"))?;
+                    println!(
+                        "exported experiment '{}' as Chrome trace-event JSON \
+                         -> {out_path} (load in Perfetto or chrome://tracing)",
+                        campaign.experiment
+                    );
                 }
                 other => bail!("unknown trace subcommand '{other}'"),
             }

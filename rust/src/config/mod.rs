@@ -125,6 +125,10 @@ pub struct SimConfig {
     /// tick walks. Numerics are bit-identical either way (locked by
     /// `tests/engine_equivalence.rs`).
     pub engine: crate::sim::EngineMode,
+    /// Observability knobs (`obs.*` keys): request-lifecycle tracing
+    /// ring capacity and time-series sampling epoch. Both default to 0
+    /// (off) so hot paths and existing artifacts are unperturbed.
+    pub obs: crate::obs::ObsConfig,
 }
 
 impl Default for SimConfig {
@@ -241,6 +245,8 @@ impl SimConfig {
                 })?
             }
             ("replay", "closed") => self.replay_closed = v.as_bool()?,
+            ("obs", "trace_cap") => self.obs.trace_cap = v.as_u64()? as usize,
+            ("obs", "sample_ns") => self.obs.sample_ns = v.as_u64()?,
             _ => return Err(bad()),
         }
         Ok(())
@@ -316,6 +322,12 @@ mod tests {
         assert_eq!(c.engine, crate::sim::EngineMode::Event);
         let e = c.apply_override("sys.engine=warp").unwrap_err();
         assert!(e.to_string().contains("warp"), "{e}");
+        assert_eq!(c.obs.trace_cap, 0, "tracing off by default");
+        assert_eq!(c.obs.sample_ns, 0, "sampling off by default");
+        c.apply_override("obs.trace_cap=4096").unwrap();
+        c.apply_override("obs.sample_ns=1000").unwrap();
+        assert_eq!(c.obs.trace_cap, 4096);
+        assert_eq!(c.obs.sample_ns, 1000);
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub fn table1() -> SimConfig {
         mlp: 1,
         replay_closed: false,
         engine: crate::sim::EngineMode::Event,
+        obs: crate::obs::ObsConfig::default(),
     }
 }
 

@@ -261,6 +261,17 @@ pub static REGISTRY: &[KeyDoc] = &[
         "replay pacing: false = open loop (trace schedule), true = closed loop",
         |c| ConfigValue::Bool(c.replay_closed)
     ),
+    // --- obs ---
+    key!(
+        "obs.trace_cap",
+        "request-lifecycle span ring capacity (newest N kept); 0 = tracing off",
+        |c| uint(c.obs.trace_cap)
+    ),
+    key!(
+        "obs.sample_ns",
+        "time-series sampling epoch in ns; 0 = sampling off",
+        |c| int(c.obs.sample_ns)
+    ),
 ];
 
 /// Dump a resolved config as `(key, value)` string pairs, in registry
@@ -412,7 +423,7 @@ mod tests {
         }
         let sections = [
             "[cpu]", "[dram]", "[pmem]", "[ssd]", "[dcache]", "[cxl]", "[pool]", "[sys]",
-            "[replay]",
+            "[replay]", "[obs]",
         ];
         for section in sections {
             assert!(md.contains(section), "CONFIG.md misses section {section}");

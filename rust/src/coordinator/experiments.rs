@@ -1115,6 +1115,12 @@ pub fn run_spec_outcome(
             crate::sim::to_us(r.stall_ticks),
         );
     }
+    // Engine conservation counters are summary-only (never record
+    // metrics): the tick engine has none, and campaign artifacts must
+    // stay byte-identical across engine modes.
+    for (k, v) in &out.engine_kv {
+        extra.push_str(&format!("{k}: {v:.0}\n"));
+    }
     extra.push_str(&format!("host time: {:.3} s\n", out.host_seconds));
     (record, extra)
 }

@@ -35,6 +35,14 @@ pub struct RunOutput {
     pub replay: Option<ReplayResult>,
     pub system: SystemStats,
     pub device_kv: Vec<(String, f64)>,
+    /// Engine conservation counters (`engine.*`), present only under the
+    /// event engine. Deliberately kept out of campaign record metrics so
+    /// event-vs-tick artifacts stay byte-identical; surfaced in run
+    /// summaries instead.
+    pub engine_kv: Vec<(String, f64)>,
+    /// Flight-recorder report when `obs.trace_cap`/`obs.sample_ns` is
+    /// enabled (replay workloads only). `None` keeps artifacts unchanged.
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 /// Run `workload` on `device` in detailed mode.

@@ -189,14 +189,17 @@ pub fn run_spec(
         let trace = source.materialize(cfg.seed);
         let mut dev = Instrumented::new(build_device(device, cfg));
         let engine = (cfg.engine == EngineMode::Event).then(Engine::new);
+        let mut observer = crate::obs::Observer::from_config(&cfg.obs);
         let result = Replay {
             trace: &trace,
             mode: *mode,
             mlp: cfg.mlp,
         }
-        .run_with_engine(&mut dev, engine.as_ref());
+        .run_observed(&mut dev, engine.as_ref(), observer.as_mut());
+        let mut engine_kv = Vec::new();
         if let Some(engine) = &engine {
             let stats = engine.finish();
+            engine_kv = stats.stats_kv();
             // >= not ==: a pooled device's switch ports post their own
             // completions on top of the replay window's one per request.
             debug_assert!(
@@ -221,6 +224,8 @@ pub fn run_spec(
             replay: Some(result),
             system,
             device_kv: dev.stats_kv(),
+            engine_kv,
+            obs: observer.map(|o| o.into_report()),
         };
         let trace_out = capture.then(|| (*trace).clone());
         return (out, trace_out);
@@ -297,8 +302,9 @@ pub fn run_spec(
         WorkloadSpec::Replay { .. } => unreachable!("replay handled above"),
     }
     sys.drain(core.now());
+    let mut engine_kv = Vec::new();
     if let Some(engine) = &engine {
-        engine.finish();
+        engine_kv = engine.finish().stats_kv();
     }
 
     let trace = if capture { Some(sys.take_trace()) } else { None };
@@ -313,6 +319,8 @@ pub fn run_spec(
         replay: None,
         system: sys.stats().clone(),
         device_kv: sys.device_stats_kv(),
+        engine_kv,
+        obs: None,
     };
     (out, trace)
 }

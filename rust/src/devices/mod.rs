@@ -143,6 +143,18 @@ pub trait MemoryDevice {
     /// pooled device attaches its switch-port credit windows.
     fn attach_engine(&mut self, _engine: &crate::sim::Engine) {}
 
+    /// Raw per-phase service estimate for this device's most recent
+    /// [`issue`](Self::issue) call: switch/credit wait, link traversal,
+    /// bank-or-channel occupancy, and flash media time where the device
+    /// exposes them. Estimates are unclamped —
+    /// [`crate::obs::Phases::attribute`] budget-clamps them against the
+    /// span's recorded response time, so conservation never depends on
+    /// their quality. The default (all zeros) lands the whole service
+    /// time in the span's `other` phase.
+    fn last_phases(&self) -> crate::obs::ServicePhases {
+        crate::obs::ServicePhases::default()
+    }
+
     /// Key device statistics for reports.
     fn stats_kv(&self) -> Vec<(String, f64)> {
         Vec::new()
@@ -209,14 +221,27 @@ impl MemoryDevice for Instrumented {
         self.inner.attach_engine(engine);
     }
 
+    fn last_phases(&self) -> crate::obs::ServicePhases {
+        self.inner.last_phases()
+    }
+
     fn stats_kv(&self) -> Vec<(String, f64)> {
         let mut kv = self.inner.stats_kv();
         kv.push(("svc_p50_ns".into(), self.latency.p50_ns()));
         kv.push(("svc_p99_ns".into(), self.latency.p99_ns()));
         kv.push(("svc_p999_ns".into(), self.latency.p999_ns()));
         if let Some(label) = &self.label {
+            // Separator guard: labels and inner keys join with exactly
+            // one '.' however the caller spelled the label (nested
+            // labeled wrappers used to concatenate into '..' runs).
+            let prefix = label.trim_matches('.');
             for (k, _) in kv.iter_mut() {
-                *k = format!("{label}.{k}");
+                let key = k.trim_start_matches('.');
+                *k = if prefix.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{prefix}.{key}")
+                };
             }
         }
         kv
@@ -259,6 +284,13 @@ impl MemoryDevice for LocalDram {
         now.saturating_add(self.dram.access(now, line_index(addr), is_write))
     }
 
+    fn last_phases(&self) -> crate::obs::ServicePhases {
+        crate::obs::ServicePhases {
+            bank: self.dram.last_wait(),
+            ..Default::default()
+        }
+    }
+
     fn stats_kv(&self) -> Vec<(String, f64)> {
         vec![
             ("row_hit_rate".into(), self.dram.stats().row_hit_rate()),
@@ -274,6 +306,7 @@ impl MemoryDevice for LocalDram {
 pub struct CxlDram {
     ha: HomeAgent,
     dram: Dram,
+    last: crate::obs::ServicePhases,
 }
 
 impl CxlDram {
@@ -281,6 +314,7 @@ impl CxlDram {
         CxlDram {
             ha: HomeAgent::new(cxl),
             dram: Dram::new(dram),
+            last: crate::obs::ServicePhases::default(),
         }
     }
 }
@@ -296,13 +330,29 @@ impl MemoryDevice for CxlDram {
         } else {
             Packet::read(addr, 64, now)
         };
+        let stall0 = self.ha.stats().credit_stall_ticks;
         let (arrival, flit) = self
             .ha
             .outbound(now, &pkt)
             // simlint: allow(unwrap-in-lib): Packet::read/write commands always map to M2S flits
             .expect("read/write always converts");
+        let credit = self.ha.stats().credit_stall_ticks.saturating_sub(stall0);
         let lat = self.dram.access(arrival, line_index(flit.addr), is_write);
-        self.ha.inbound(arrival + lat, &flit)
+        let done = self.ha.inbound(arrival + lat, &flit);
+        self.last = crate::obs::ServicePhases {
+            arb: credit,
+            link: arrival
+                .saturating_sub(now)
+                .saturating_sub(credit)
+                .saturating_add(done.saturating_sub(arrival.saturating_add(lat))),
+            bank: self.dram.last_wait(),
+            flash: 0,
+        };
+        done
+    }
+
+    fn last_phases(&self) -> crate::obs::ServicePhases {
+        self.last
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {
@@ -341,6 +391,13 @@ impl MemoryDevice for PmemDevice {
         now.saturating_add(self.pmem.access(now, line_index(addr), is_write))
     }
 
+    fn last_phases(&self) -> crate::obs::ServicePhases {
+        crate::obs::ServicePhases {
+            bank: self.pmem.last_wait(),
+            ..Default::default()
+        }
+    }
+
     fn stats_kv(&self) -> Vec<(String, f64)> {
         vec![
             ("buf_hit_rate".into(), self.pmem.stats().buf_hit_rate()),
@@ -351,11 +408,43 @@ impl MemoryDevice for PmemDevice {
 
 // -------------------------------------------------------------- CXL-SSD
 
+/// Delta two PAL snapshots into `(bank, flash)` phase estimates for the
+/// access between them: die/channel queueing waits, plus the isolated
+/// media time of every read/program the access triggered. GC and
+/// victim-writeback operations pollute the delta (they run on the same
+/// PAL); the attribution budget clamp absorbs any over-estimate.
+fn pal_phase_delta(
+    before: &crate::ssd::PalStats,
+    after: &crate::ssd::PalStats,
+    nand: &crate::ssd::NandConfig,
+) -> (Tick, Tick) {
+    let bank = after
+        .die_wait_ticks
+        .saturating_sub(before.die_wait_ticks)
+        .saturating_add(
+            after
+                .channel_wait_ticks
+                .saturating_sub(before.channel_wait_ticks),
+        );
+    let flash = after
+        .reads
+        .saturating_sub(before.reads)
+        .saturating_mul(nand.isolated_read())
+        .saturating_add(
+            after
+                .programs
+                .saturating_sub(before.programs)
+                .saturating_mul(nand.isolated_write()),
+        );
+    (bank, flash)
+}
+
 /// SSD behind the CXL.mem link, no expander cache: every 64B access
 /// becomes a 4KB flash page access (§II-A read/write amplification).
 pub struct CxlSsd {
     ha: HomeAgent,
     ssd: Ssd,
+    last: crate::obs::ServicePhases,
 }
 
 impl CxlSsd {
@@ -363,6 +452,7 @@ impl CxlSsd {
         CxlSsd {
             ha: HomeAgent::new(cxl),
             ssd: build_ssd(ssd),
+            last: crate::obs::ServicePhases::default(),
         }
     }
 }
@@ -378,10 +468,28 @@ impl MemoryDevice for CxlSsd {
         } else {
             Packet::read(addr, 64, now)
         };
+        let stall0 = self.ha.stats().credit_stall_ticks;
+        let pal0 = self.ssd.pal_stats().clone();
         // simlint: allow(unwrap-in-lib): Packet::read/write commands always map to M2S flits
         let (arrival, flit) = self.ha.outbound(now, &pkt).expect("converts");
+        let credit = self.ha.stats().credit_stall_ticks.saturating_sub(stall0);
         let lat = self.ssd.access_line(arrival, line_index(flit.addr), is_write);
-        self.ha.inbound(arrival + lat, &flit)
+        let done = self.ha.inbound(arrival + lat, &flit);
+        let (bank, flash) = pal_phase_delta(&pal0, self.ssd.pal_stats(), &self.ssd.cfg().nand);
+        self.last = crate::obs::ServicePhases {
+            arb: credit,
+            link: arrival
+                .saturating_sub(now)
+                .saturating_sub(credit)
+                .saturating_add(done.saturating_sub(arrival.saturating_add(lat))),
+            bank,
+            flash,
+        };
+        done
+    }
+
+    fn last_phases(&self) -> crate::obs::ServicePhases {
+        self.last
     }
 
     fn flush(&mut self, now: Tick) {
@@ -418,6 +526,7 @@ pub struct CxlSsdCached {
     cache: PageCache,
     ssd: Ssd,
     t_cache: Tick,
+    last: crate::obs::ServicePhases,
 }
 
 impl CxlSsdCached {
@@ -431,6 +540,7 @@ impl CxlSsdCached {
             ),
             ssd: build_ssd(cfg.ssd),
             t_cache: cfg.dcache.t_access,
+            last: crate::obs::ServicePhases::default(),
         }
     }
 
@@ -476,10 +586,30 @@ impl MemoryDevice for CxlSsdCached {
         } else {
             Packet::read(addr, 64, now)
         };
+        let stall0 = self.ha.stats().credit_stall_ticks;
+        let pal0 = self.ssd.pal_stats().clone();
         // simlint: allow(unwrap-in-lib): Packet::read/write commands always map to M2S flits
         let (arrival, flit) = self.ha.outbound(now, &pkt).expect("converts");
+        let credit = self.ha.stats().credit_stall_ticks.saturating_sub(stall0);
         let lat = self.service(arrival, flit.addr, is_write);
-        self.ha.inbound(arrival + lat, &flit)
+        let done = self.ha.inbound(arrival + lat, &flit);
+        let (bank, flash) = pal_phase_delta(&pal0, self.ssd.pal_stats(), &self.ssd.cfg().nand);
+        // Cache-hit / MSHR-wait time carries no phase estimate of its
+        // own: it lands in the span's `other` remainder.
+        self.last = crate::obs::ServicePhases {
+            arb: credit,
+            link: arrival
+                .saturating_sub(now)
+                .saturating_sub(credit)
+                .saturating_add(done.saturating_sub(arrival.saturating_add(lat))),
+            bank,
+            flash,
+        };
+        done
+    }
+
+    fn last_phases(&self) -> crate::obs::ServicePhases {
+        self.last
     }
 
     fn flush(&mut self, now: Tick) {
@@ -756,6 +886,58 @@ mod tests {
         assert!(kv["svc_p50_ns"] > 0.0);
         assert!(kv["svc_p50_ns"] <= kv["svc_p99_ns"]);
         assert!(kv.contains_key("media_accesses"), "inner stats pass through");
+    }
+
+    #[test]
+    fn labeled_wrappers_nest_with_single_dot_joins() {
+        // Regression: nesting a labeled wrapper inside a pool member
+        // concatenated prefixes without a separator guard, so labels
+        // spelled with stray dots produced '..' runs in stats keys.
+        let c = cfg();
+        let member = Instrumented::labeled(build_device(DeviceKind::Pmem, &c), "m0.pmem.");
+        let mut pool = Instrumented::labeled(Box::new(member), ".pool");
+        pool.access(0, 0, false);
+        let kv = pool.stats_kv();
+        assert!(!kv.is_empty());
+        for (k, _) in &kv {
+            assert!(!k.contains(".."), "double dot in key {k}");
+            assert!(!k.starts_with('.') && !k.ends_with('.'), "stray dot in key {k}");
+            assert!(
+                k.starts_with("pool.m0.pmem.") || k.starts_with("pool.svc_"),
+                "unexpected nested prefix in key {k}"
+            );
+        }
+        assert!(kv.iter().any(|(k, _)| k == "pool.m0.pmem.svc_p50_ns"));
+        assert!(kv.iter().any(|(k, _)| k == "pool.m0.pmem.media_accesses"));
+    }
+
+    #[test]
+    fn last_phases_report_contention_and_pass_through_instrumented() {
+        let c = cfg();
+        // Two back-to-back same-bank DRAM accesses: the second waits on
+        // the busy bank and last_phases reports exactly that wait.
+        let mut dev = Instrumented::new(build_device(DeviceKind::Dram, &c));
+        assert_eq!(dev.last_phases(), crate::obs::ServicePhases::default());
+        let done0 = dev.issue(0, 0, false);
+        let done1 = dev.issue(0, 64, false);
+        assert!(done1 > done0);
+        let p = dev.last_phases();
+        assert_eq!(p.bank, done0, "second access waits out the first");
+        assert_eq!(p.arb, 0);
+        assert_eq!(p.link, 0);
+        assert_eq!(p.flash, 0);
+
+        // A CXL-SSD read decomposes into link + flash, and the raw
+        // estimates stay within the observed service time.
+        let mut ssd = build_device(DeviceKind::CxlSsd, &c);
+        let done = ssd.issue(0, 0, false);
+        let p = ssd.last_phases();
+        assert!(p.link >= 2 * c.cxl.t_proto, "two protocol hops: {}", p.link);
+        assert_eq!(p.flash, c.ssd.nand.isolated_read());
+        assert!(
+            p.arb + p.link + p.bank + p.flash <= done,
+            "uncontended estimates must not exceed service time"
+        );
     }
 
     #[test]

@@ -99,6 +99,10 @@ pub struct Dram {
     open_row: Vec<Option<u64>>,
     /// Next refresh deadline (all-bank refresh).
     next_refresh: Tick,
+    /// Bank wait the most recent access paid before its column command
+    /// started (includes refresh holds) — observability taps this for
+    /// per-span bank attribution.
+    last_wait: Tick,
     stats: DramStats,
 }
 
@@ -108,6 +112,7 @@ impl Dram {
             bank_ready: vec![0; cfg.n_banks],
             open_row: vec![None; cfg.n_banks],
             next_refresh: if cfg.t_refi > 0 { cfg.t_refi } else { Tick::MAX },
+            last_wait: 0,
             cfg,
             stats: DramStats::default(),
         }
@@ -127,6 +132,7 @@ impl Dram {
         let (bank, row) = self.decode(line_idx);
 
         let start = now.max(self.bank_ready[bank]);
+        self.last_wait = start.saturating_sub(now);
         let core = match self.open_row[bank] {
             Some(open) if open == row => {
                 self.stats.row_hits += 1;
@@ -176,6 +182,12 @@ impl Dram {
         &self.stats
     }
 
+    /// Bank wait (busy bank + refresh hold) the most recent access paid
+    /// before service began.
+    pub fn last_wait(&self) -> Tick {
+        self.last_wait
+    }
+
     pub fn cfg(&self) -> &DramConfig {
         &self.cfg
     }
@@ -183,6 +195,7 @@ impl Dram {
     pub fn reset(&mut self) {
         self.bank_ready.iter_mut().for_each(|t| *t = 0);
         self.open_row.iter_mut().for_each(|r| *r = None);
+        self.last_wait = 0;
         self.next_refresh = if self.cfg.t_refi > 0 {
             self.cfg.t_refi
         } else {

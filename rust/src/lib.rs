@@ -51,6 +51,7 @@ pub mod devices;
 pub mod dram;
 pub mod fasthash;
 pub mod mem;
+pub mod obs;
 pub mod pmem;
 pub mod pool;
 pub mod results;

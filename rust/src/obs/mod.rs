@@ -1,0 +1,754 @@
+//! Observability: deterministic request-lifecycle tracing and
+//! time-series telemetry (the `simtrace` flight recorder).
+//!
+//! The simulator's figures report end-state counters and percentile
+//! histograms; this subsystem records *what a request actually did*.
+//! A [`Span`] is one request's lifecycle on the sim-tick timebase —
+//! arrival (`scheduled`), window admission (`issue`), completion
+//! (`done`) — tagged with the engine's [`CompletionTag`] and decomposed
+//! into a per-phase stall breakdown ([`Phases`]): window-queue wait,
+//! switch-arbitration/credit wait, CXL link traversal, bank/channel
+//! occupancy, flash read/program time, and an explicit remainder.
+//!
+//! Determinism rules (the same contract run artifacts obey):
+//!
+//! - everything derives from ticks; no wall clock, no host state;
+//! - the ring buffer ([`Recorder`]) evicts oldest-first, so the
+//!   retained set is a pure function of the request stream — the
+//!   newest `obs.trace_cap` spans, byte-identical across sweep worker
+//!   counts and across `sys.engine=event` vs `tick`;
+//! - per-phase times are **budget-clamped**: phases are charged in
+//!   fixed priority order (queue, switch, link, bank, flash) against
+//!   the recorded response time, and the remainder lands in `other`,
+//!   so `sum(phases) == done - scheduled` holds exactly for every span
+//!   (the conservation invariant `report --attribution` relies on).
+//!
+//! Tracing is **default-off** (`obs.trace_cap = 0`, `obs.sample_ns =
+//! 0`): the hot paths see one `Option` check and existing artifacts
+//! are byte-unchanged. With tracing on, [`ObsReport`] rides the run
+//! record through the canonical-JSON layer and exports as a Chrome
+//! trace-event / Perfetto-loadable JSON via `trace export` (see
+//! `results/trace.rs`).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::results::json::Json;
+use crate::sim::{CompletionTag, Tick, NS};
+
+/// Schema version of the embedded observability block. Bump on any
+/// field change; readers hard-error on mismatch.
+pub const OBS_SCHEMA_VERSION: u64 = 1;
+
+/// Observability knobs (the `obs.*` config section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ObsConfig {
+    /// Ring-buffer capacity in spans; 0 disables span recording.
+    pub trace_cap: usize,
+    /// Time-series sampling epoch in nanoseconds; 0 disables sampling.
+    pub sample_ns: u64,
+}
+
+/// Raw per-phase service-time estimate a device reports for its most
+/// recent `issue()` call (see `MemoryDevice::last_phases`). Unclamped:
+/// [`Phases::attribute`] charges these against the span's response-time
+/// budget, so over-estimates (e.g. victim-writeback pollution of PAL
+/// counters) can never break conservation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServicePhases {
+    /// Switch arbitration hops and Home-Agent credit stalls.
+    pub arb: Tick,
+    /// CXL link traversal (protocol + bus, both directions), minus
+    /// credit stall time.
+    pub link: Tick,
+    /// Bank/port/die/channel occupancy waits inside the device.
+    pub bank: Tick,
+    /// Flash media time (read/program host-visible cost).
+    pub flash: Tick,
+}
+
+impl ServicePhases {
+    /// Component-wise saturating sum (composition: a pool adds its
+    /// switch hops on top of the member's own phases).
+    pub fn merged(self, other: ServicePhases) -> ServicePhases {
+        ServicePhases {
+            arb: self.arb.saturating_add(other.arb),
+            link: self.link.saturating_add(other.link),
+            bank: self.bank.saturating_add(other.bank),
+            flash: self.flash.saturating_add(other.flash),
+        }
+    }
+}
+
+/// One span's conserved phase breakdown, in ticks. The six phases sum
+/// exactly to the span's recorded response time (`done - scheduled`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Phases {
+    /// Window-queue wait before admission (`issue - scheduled`).
+    pub queue: Tick,
+    /// Switch arbitration + credit stalls (JSON key `switch`).
+    pub arb: Tick,
+    /// CXL link traversal.
+    pub link: Tick,
+    /// Bank/port/die/channel occupancy.
+    pub bank: Tick,
+    /// Flash media time.
+    pub flash: Tick,
+    /// Unattributed remainder (cache/device-internal service time).
+    pub other: Tick,
+}
+
+impl Phases {
+    /// Phase names in breakdown order — the JSON/export key spelling
+    /// (`switch`, not the field name `arb`: `switch` is a Rust
+    /// keyword).
+    pub const KEYS: [&'static str; 6] = ["queue", "switch", "link", "bank", "flash", "other"];
+
+    /// Budget-clamped attribution: charge the queue wait first, then
+    /// the device-reported phases in fixed priority order, each capped
+    /// by what is left of the response time; the remainder is `other`.
+    /// This makes conservation structural — even a device whose `done`
+    /// precedes `issue` (early-completing posted writes) yields phases
+    /// summing exactly to `done.saturating_sub(scheduled)`.
+    pub fn attribute(scheduled: Tick, issue: Tick, done: Tick, svc: ServicePhases) -> Phases {
+        let response = done.saturating_sub(scheduled);
+        let mut remaining = response;
+        let queue = issue.saturating_sub(scheduled).min(remaining);
+        remaining = remaining.saturating_sub(queue);
+        let arb = svc.arb.min(remaining);
+        remaining = remaining.saturating_sub(arb);
+        let link = svc.link.min(remaining);
+        remaining = remaining.saturating_sub(link);
+        let bank = svc.bank.min(remaining);
+        remaining = remaining.saturating_sub(bank);
+        let flash = svc.flash.min(remaining);
+        remaining = remaining.saturating_sub(flash);
+        Phases {
+            queue,
+            arb,
+            link,
+            bank,
+            flash,
+            other: remaining,
+        }
+    }
+
+    /// The phases in [`Phases::KEYS`] order.
+    pub fn as_array(&self) -> [Tick; 6] {
+        [
+            self.queue, self.arb, self.link, self.bank, self.flash, self.other,
+        ]
+    }
+
+    /// Saturating sum of all phases (== the span's response time).
+    pub fn total(&self) -> Tick {
+        self.as_array()
+            .iter()
+            .fold(0u64, |acc, p| acc.saturating_add(*p))
+    }
+
+    fn to_json(self) -> Json {
+        Json::Obj(
+            Self::KEYS
+                .iter()
+                .zip(self.as_array().iter())
+                .map(|(k, v)| (k.to_string(), Json::UInt(*v as u128)))
+                .collect(),
+        )
+    }
+
+    fn from_json(v: &Json) -> Result<Phases> {
+        Ok(Phases {
+            queue: v.field("queue")?.as_u64()?,
+            arb: v.field("switch")?.as_u64()?,
+            link: v.field("link")?.as_u64()?,
+            bank: v.field("bank")?.as_u64()?,
+            flash: v.field("flash")?.as_u64()?,
+            other: v.field("other")?.as_u64()?,
+        })
+    }
+}
+
+/// Stable artifact spelling of a [`CompletionTag`].
+pub fn tag_name(tag: CompletionTag) -> String {
+    match tag {
+        CompletionTag::CoreLoad => "core-load".to_string(),
+        CompletionTag::CoreStore => "core-store".to_string(),
+        CompletionTag::Replay => "replay".to_string(),
+        CompletionTag::Port(n) => format!("port{n}"),
+    }
+}
+
+/// Parse the spelling [`tag_name`] produced.
+pub fn parse_tag(s: &str) -> Result<CompletionTag> {
+    match s {
+        "core-load" => Ok(CompletionTag::CoreLoad),
+        "core-store" => Ok(CompletionTag::CoreStore),
+        "replay" => Ok(CompletionTag::Replay),
+        other => match other.strip_prefix("port").and_then(|n| n.parse::<u16>().ok()) {
+            Some(n) => Ok(CompletionTag::Port(n)),
+            None => bail!("unknown completion tag '{other}'"),
+        },
+    }
+}
+
+/// One request's recorded lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Monotone record number (survives ring eviction: the retained
+    /// window is always the newest `trace_cap` sequence numbers).
+    pub seq: u64,
+    /// Which completion source the request belongs to.
+    pub tag: CompletionTag,
+    /// Device address of the access.
+    pub addr: u64,
+    pub is_write: bool,
+    /// Arrival tick (open loop: the trace schedule; closed loop: the
+    /// admission tick) — response time is measured from here.
+    pub scheduled: Tick,
+    /// Window-admission tick (when the device saw the request).
+    pub issue: Tick,
+    /// Completion tick at the requester.
+    pub done: Tick,
+    /// Conserved phase breakdown (sums to [`Span::response`]).
+    pub phases: Phases,
+}
+
+impl Span {
+    /// Recorded response time (arrival to completion).
+    pub fn response(&self) -> Tick {
+        self.done.saturating_sub(self.scheduled)
+    }
+
+    fn to_json(self) -> Json {
+        Json::Obj(vec![
+            ("seq".to_string(), Json::UInt(self.seq as u128)),
+            ("tag".to_string(), Json::str(tag_name(self.tag))),
+            ("addr".to_string(), Json::UInt(self.addr as u128)),
+            ("is_write".to_string(), Json::Bool(self.is_write)),
+            ("scheduled".to_string(), Json::UInt(self.scheduled as u128)),
+            ("issue".to_string(), Json::UInt(self.issue as u128)),
+            ("done".to_string(), Json::UInt(self.done as u128)),
+            ("phases".to_string(), self.phases.to_json()),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Span> {
+        Ok(Span {
+            seq: v.field("seq")?.as_u64()?,
+            tag: parse_tag(v.field("tag")?.as_str()?)?,
+            addr: v.field("addr")?.as_u64()?,
+            is_write: v.field("is_write")?.as_bool()?,
+            scheduled: v.field("scheduled")?.as_u64()?,
+            issue: v.field("issue")?.as_u64()?,
+            done: v.field("done")?.as_u64()?,
+            phases: Phases::from_json(v.field("phases")?)?,
+        })
+    }
+}
+
+/// Bounded span ring buffer: keeps the newest `cap` spans, counts the
+/// evicted rest. Eviction is oldest-first and purely stream-driven, so
+/// the retained window is deterministic.
+#[derive(Debug)]
+pub struct Recorder {
+    cap: usize,
+    next_seq: u64,
+    dropped: u64,
+    ring: VecDeque<Span>,
+}
+
+impl Recorder {
+    /// `cap` must be nonzero (a zero cap means tracing is off — the
+    /// caller holds no Recorder at all).
+    pub fn new(cap: usize) -> Recorder {
+        Recorder {
+            cap: cap.max(1),
+            next_seq: 0,
+            dropped: 0,
+            ring: VecDeque::new(),
+        }
+    }
+
+    /// Record one completed request; assigns the span's `seq`.
+    pub fn record(
+        &mut self,
+        tag: CompletionTag,
+        addr: u64,
+        is_write: bool,
+        scheduled: Tick,
+        issue: Tick,
+        done: Tick,
+        svc: ServicePhases,
+    ) {
+        let span = Span {
+            seq: self.next_seq,
+            tag,
+            addr,
+            is_write,
+            scheduled,
+            issue,
+            done,
+            phases: Phases::attribute(scheduled, issue, done, svc),
+        };
+        self.next_seq += 1;
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(span);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Spans evicted by the ring (total recorded = len + dropped).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained spans, oldest first.
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.ring.iter()
+    }
+
+    fn into_spans(self) -> Vec<Span> {
+        self.ring.into_iter().collect()
+    }
+}
+
+/// One time-series snapshot (the `obs.sample_ns` epoch sampler).
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    /// Sim tick the sample was taken at.
+    pub tick: Tick,
+    /// Requests issued so far.
+    pub issued: u64,
+    /// Requests in flight in the driver's window.
+    pub inflight: u64,
+    /// Cumulative Home-Agent credit stall (`cxl_credit_stall_ns`),
+    /// NaN when the device has no CXL link.
+    pub credit_stall_ns: f64,
+    /// Device cache hit rate (first of `cache_hit_rate`,
+    /// `icl_hit_rate`, `buf_hit_rate`, `row_hit_rate`); NaN if none.
+    pub hit_rate: f64,
+    /// Write amplification (`waf`); NaN for non-flash devices.
+    pub waf: f64,
+}
+
+/// NaN-tolerant exact equality: NaN == NaN, otherwise bit equality —
+/// samples must be byte-stable across engine modes and worker counts.
+fn feq(a: f64, b: f64) -> bool {
+    (a.is_nan() && b.is_nan()) || a.to_bits() == b.to_bits()
+}
+
+impl PartialEq for Sample {
+    fn eq(&self, other: &Sample) -> bool {
+        self.tick == other.tick
+            && self.issued == other.issued
+            && self.inflight == other.inflight
+            && feq(self.credit_stall_ns, other.credit_stall_ns)
+            && feq(self.hit_rate, other.hit_rate)
+            && feq(self.waf, other.waf)
+    }
+}
+
+impl Sample {
+    fn to_json(self) -> Json {
+        Json::Obj(vec![
+            ("tick".to_string(), Json::UInt(self.tick as u128)),
+            ("issued".to_string(), Json::UInt(self.issued as u128)),
+            ("inflight".to_string(), Json::UInt(self.inflight as u128)),
+            (
+                "credit_stall_ns".to_string(),
+                Json::Float(self.credit_stall_ns),
+            ),
+            ("hit_rate".to_string(), Json::Float(self.hit_rate)),
+            ("waf".to_string(), Json::Float(self.waf)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Sample> {
+        Ok(Sample {
+            tick: v.field("tick")?.as_u64()?,
+            issued: v.field("issued")?.as_u64()?,
+            inflight: v.field("inflight")?.as_u64()?,
+            credit_stall_ns: v.field("credit_stall_ns")?.as_f64()?,
+            hit_rate: v.field("hit_rate")?.as_f64()?,
+            waf: v.field("waf")?.as_f64()?,
+        })
+    }
+}
+
+/// Find `name` in a flat stats map, tolerating `Instrumented::labeled`
+/// prefixes (`m0.cxl-dram.waf` matches `waf`).
+fn kv_lookup(kv: &[(String, f64)], name: &str) -> f64 {
+    let suffix = format!(".{name}");
+    kv.iter()
+        .find(|(k, _)| k == name || k.ends_with(&suffix))
+        .map(|(_, v)| *v)
+        .unwrap_or(f64::NAN)
+}
+
+/// The per-run flight recorder a driver threads through its request
+/// loop: span recording (when `obs.trace_cap > 0`) and epoch-driven
+/// time-series sampling (when `obs.sample_ns > 0`).
+#[derive(Debug)]
+pub struct Observer {
+    trace_cap: usize,
+    sample_ns: u64,
+    recorder: Option<Recorder>,
+    /// Sampling epoch length in ticks (0 = sampling off).
+    sample_ticks: Tick,
+    /// Next epoch index to sample at.
+    next_epoch: u64,
+    samples: Vec<Sample>,
+    issued: u64,
+}
+
+impl Observer {
+    /// Build an observer from config; `None` when both knobs are off,
+    /// so disabled runs pay nothing and records stay byte-identical to
+    /// pre-observability artifacts.
+    pub fn from_config(cfg: &ObsConfig) -> Option<Observer> {
+        if cfg.trace_cap == 0 && cfg.sample_ns == 0 {
+            return None;
+        }
+        Some(Observer {
+            trace_cap: cfg.trace_cap,
+            sample_ns: cfg.sample_ns,
+            recorder: (cfg.trace_cap > 0).then(|| Recorder::new(cfg.trace_cap)),
+            sample_ticks: cfg.sample_ns.saturating_mul(NS),
+            next_epoch: 0,
+            samples: Vec::new(),
+            issued: 0,
+        })
+    }
+
+    /// Record one completed request.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_complete(
+        &mut self,
+        tag: CompletionTag,
+        addr: u64,
+        is_write: bool,
+        scheduled: Tick,
+        issue: Tick,
+        done: Tick,
+        svc: ServicePhases,
+    ) {
+        self.issued += 1;
+        if let Some(r) = self.recorder.as_mut() {
+            r.record(tag, addr, is_write, scheduled, issue, done, svc);
+        }
+    }
+
+    /// Cheap gate: has the sampling clock crossed into an unsampled
+    /// epoch? Callers only gather `stats_kv` when this is true.
+    pub fn sample_due(&self, now: Tick) -> bool {
+        self.sample_ticks > 0 && now / self.sample_ticks >= self.next_epoch
+    }
+
+    /// Take one snapshot at `now` (call only when [`Observer::sample_due`]).
+    pub fn sample(&mut self, now: Tick, inflight: u64, kv: &[(String, f64)]) {
+        if self.sample_ticks == 0 {
+            return;
+        }
+        let epoch = now / self.sample_ticks;
+        if epoch < self.next_epoch {
+            return;
+        }
+        self.next_epoch = epoch + 1;
+        let hit_rate = ["cache_hit_rate", "icl_hit_rate", "buf_hit_rate", "row_hit_rate"]
+            .iter()
+            .map(|name| kv_lookup(kv, name))
+            .find(|v| !v.is_nan())
+            .unwrap_or(f64::NAN);
+        self.samples.push(Sample {
+            tick: now,
+            issued: self.issued,
+            inflight,
+            credit_stall_ns: kv_lookup(kv, "cxl_credit_stall_ns"),
+            hit_rate,
+            waf: kv_lookup(kv, "waf"),
+        });
+    }
+
+    /// Finalize into the artifact-embedded report.
+    pub fn into_report(self) -> ObsReport {
+        let (dropped, spans) = match self.recorder {
+            Some(r) => (r.dropped, r.into_spans()),
+            None => (0, Vec::new()),
+        };
+        ObsReport {
+            trace_cap: self.trace_cap as u64,
+            sample_ns: self.sample_ns,
+            dropped,
+            spans,
+            samples: self.samples,
+        }
+    }
+}
+
+/// The observability block embedded in a `RunRecord` when tracing or
+/// sampling was enabled. Wall-clock-free, schema-versioned, and
+/// byte-identical across worker counts and engine modes.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ObsReport {
+    /// The ring capacity the run used.
+    pub trace_cap: u64,
+    /// The sampling epoch the run used (ns; 0 = sampling off).
+    pub sample_ns: u64,
+    /// Spans evicted by the ring buffer.
+    pub dropped: u64,
+    /// Retained spans, oldest first.
+    pub spans: Vec<Span>,
+    /// Time-series samples in epoch order.
+    pub samples: Vec<Sample>,
+}
+
+impl ObsReport {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "obs_schema_version".to_string(),
+                Json::UInt(OBS_SCHEMA_VERSION as u128),
+            ),
+            ("trace_cap".to_string(), Json::UInt(self.trace_cap as u128)),
+            ("sample_ns".to_string(), Json::UInt(self.sample_ns as u128)),
+            ("dropped".to_string(), Json::UInt(self.dropped as u128)),
+            (
+                "spans".to_string(),
+                Json::Arr(self.spans.iter().map(|s| s.to_json()).collect()),
+            ),
+            (
+                "samples".to_string(),
+                Json::Arr(self.samples.iter().map(|s| s.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ObsReport> {
+        let version = v.field("obs_schema_version")?.as_u64()?;
+        if version != OBS_SCHEMA_VERSION {
+            bail!(
+                "observability schema version {version} (this build reads \
+                 {OBS_SCHEMA_VERSION})"
+            );
+        }
+        let spans = v
+            .field("spans")?
+            .as_arr()?
+            .iter()
+            .map(Span::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let samples = v
+            .field("samples")?
+            .as_arr()?
+            .iter()
+            .map(Sample::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ObsReport {
+            trace_cap: v.field("trace_cap")?.as_u64()?,
+            sample_ns: v.field("sample_ns")?.as_u64()?,
+            dropped: v.field("dropped")?.as_u64()?,
+            spans,
+            samples,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribution_is_conserved_in_the_normal_case() {
+        let svc = ServicePhases {
+            arb: 50,
+            link: 100,
+            bank: 200,
+            flash: 400,
+        };
+        let p = Phases::attribute(1_000, 1_300, 2_300, svc);
+        assert_eq!(p.queue, 300);
+        assert_eq!(p.arb, 50);
+        assert_eq!(p.link, 100);
+        assert_eq!(p.bank, 200);
+        assert_eq!(p.flash, 400);
+        assert_eq!(p.other, 1_300 - (300 + 50 + 100 + 200 + 400));
+        assert_eq!(p.total(), 1_300);
+    }
+
+    #[test]
+    fn attribution_clamps_overreported_phases() {
+        // A device over-reporting (e.g. GC victim writebacks polluting
+        // PAL deltas) is clamped by the remaining budget, never
+        // breaking conservation.
+        let svc = ServicePhases {
+            arb: 1_000_000,
+            link: 1_000_000,
+            bank: 1_000_000,
+            flash: 1_000_000,
+        };
+        let p = Phases::attribute(0, 100, 500, svc);
+        assert_eq!(p.queue, 100);
+        assert_eq!(p.arb, 400);
+        assert_eq!(p.link, 0);
+        assert_eq!(p.other, 0);
+        assert_eq!(p.total(), 500);
+    }
+
+    #[test]
+    fn attribution_survives_early_completion() {
+        // Posted writes can complete before their admission tick
+        // (done < issue) — the queue phase is clamped to the response
+        // budget and conservation still holds exactly.
+        let svc = ServicePhases {
+            arb: 10,
+            link: 10,
+            bank: 10,
+            flash: 10,
+        };
+        let p = Phases::attribute(100, 400, 250, svc);
+        assert_eq!(p.total(), 150);
+        assert_eq!(p.queue, 150);
+        // done before scheduled: zero response, all phases zero.
+        let p = Phases::attribute(400, 400, 100, svc);
+        assert_eq!(p.total(), 0);
+        assert_eq!(p, Phases::default());
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_n_spans() {
+        let mut r = Recorder::new(4);
+        for i in 0..10u64 {
+            r.record(
+                CompletionTag::Replay,
+                i,
+                false,
+                i * 100,
+                i * 100,
+                i * 100 + 50,
+                ServicePhases::default(),
+            );
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let seqs: Vec<u64> = r.spans().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn tags_round_trip_through_names() {
+        for tag in [
+            CompletionTag::CoreLoad,
+            CompletionTag::CoreStore,
+            CompletionTag::Replay,
+            CompletionTag::Port(0),
+            CompletionTag::Port(513),
+        ] {
+            assert_eq!(parse_tag(&tag_name(tag)).unwrap(), tag);
+        }
+        assert!(parse_tag("warp").is_err());
+        assert!(parse_tag("portx").is_err());
+    }
+
+    #[test]
+    fn observer_samples_once_per_epoch() {
+        let mut o = Observer::from_config(&ObsConfig {
+            trace_cap: 0,
+            sample_ns: 1, // 1ns epochs = 1000 ticks
+        })
+        .unwrap();
+        let kv = vec![("waf".to_string(), 1.5)];
+        assert!(o.sample_due(0));
+        o.sample(0, 1, &kv);
+        assert!(!o.sample_due(999));
+        assert!(o.sample_due(1_000));
+        o.sample(5_500, 2, &kv);
+        assert!(!o.sample_due(5_900));
+        assert!(o.sample_due(6_000));
+        let report = o.into_report();
+        assert_eq!(report.samples.len(), 2);
+        assert_eq!(report.samples[1].tick, 5_500);
+        assert_eq!(report.samples[1].waf, 1.5);
+        assert!(report.samples[1].hit_rate.is_nan());
+    }
+
+    #[test]
+    fn kv_lookup_tolerates_label_prefixes() {
+        let kv = vec![
+            ("m0.cxl-dram.waf".to_string(), 2.0),
+            ("row_hit_rate".to_string(), 0.5),
+        ];
+        assert_eq!(kv_lookup(&kv, "waf"), 2.0);
+        assert_eq!(kv_lookup(&kv, "row_hit_rate"), 0.5);
+        assert!(kv_lookup(&kv, "icl_hit_rate").is_nan());
+    }
+
+    #[test]
+    fn report_round_trips_through_canonical_json() {
+        let mut o = Observer::from_config(&ObsConfig {
+            trace_cap: 8,
+            sample_ns: 1,
+        })
+        .unwrap();
+        o.on_complete(
+            CompletionTag::Replay,
+            0x40,
+            false,
+            100,
+            150,
+            900,
+            ServicePhases {
+                arb: 5,
+                link: 50,
+                bank: 100,
+                flash: 300,
+            },
+        );
+        o.on_complete(
+            CompletionTag::Port(2),
+            0x80,
+            true,
+            200,
+            200,
+            1_200,
+            ServicePhases::default(),
+        );
+        o.sample(1_200, 1, &[("waf".to_string(), f64::NAN)]);
+        let report = o.into_report();
+        let text = report.to_json().to_text();
+        let back = ObsReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, report);
+        // Canonical bytes are stable.
+        assert_eq!(back.to_json().to_text(), text);
+    }
+
+    #[test]
+    fn schema_mismatch_is_a_hard_error() {
+        let mut json = ObsReport::default().to_json();
+        if let Json::Obj(fields) = &mut json {
+            fields[0].1 = Json::UInt(99);
+        }
+        let err = ObsReport::from_json(&json).unwrap_err().to_string();
+        assert!(err.contains("99"), "{err}");
+    }
+
+    #[test]
+    fn disabled_config_builds_no_observer() {
+        assert!(Observer::from_config(&ObsConfig::default()).is_none());
+        assert!(Observer::from_config(&ObsConfig {
+            trace_cap: 4,
+            sample_ns: 0
+        })
+        .is_some());
+    }
+}

@@ -65,6 +65,10 @@ pub struct Pmem {
     stamps: Vec<Tick>,
     /// Per-port media ready times (misses pick the earliest-free port).
     ports: Vec<Tick>,
+    /// Port wait the most recent media access paid before service began
+    /// (0 on buffer hits) — observability taps this for per-span bank
+    /// attribution.
+    last_wait: Tick,
     stats: PmemStats,
 }
 
@@ -74,6 +78,7 @@ impl Pmem {
             bufs: vec![None; cfg.n_bufs.max(1)],
             stamps: vec![0; cfg.n_bufs.max(1)],
             ports: vec![0; cfg.n_ports.max(1)],
+            last_wait: 0,
             cfg,
             stats: PmemStats::default(),
         }
@@ -98,6 +103,7 @@ impl Pmem {
                 // simlint: allow(unwrap-in-lib): bufs is built with len n_bufs.max(1)
                 .expect("n_bufs > 0")
         });
+        self.last_wait = 0;
         let lat = if !is_write && hit_slot.is_some() {
             self.stats.buf_hits += 1;
             self.cfg.t_buf_hit
@@ -113,7 +119,9 @@ impl Pmem {
                 .min_by_key(|&i| self.ports[i])
                 // simlint: allow(unwrap-in-lib): ports is built with len n_ports.max(1)
                 .expect("n_ports > 0");
-            let done = now.max(self.ports[port]) + media;
+            let start = now.max(self.ports[port]);
+            self.last_wait = start.saturating_sub(now);
+            let done = start + media;
             self.ports[port] = done;
             done.saturating_sub(now)
         };
@@ -126,6 +134,12 @@ impl Pmem {
         &self.stats
     }
 
+    /// Media-port wait the most recent access paid before service began
+    /// (0 on buffer hits).
+    pub fn last_wait(&self) -> Tick {
+        self.last_wait
+    }
+
     pub fn cfg(&self) -> &PmemConfig {
         &self.cfg
     }
@@ -134,6 +148,7 @@ impl Pmem {
         self.bufs.iter_mut().for_each(|b| *b = None);
         self.stamps.iter_mut().for_each(|s| *s = 0);
         self.ports.iter_mut().for_each(|p| *p = 0);
+        self.last_wait = 0;
         self.stats = PmemStats::default();
     }
 }

@@ -327,6 +327,9 @@ pub struct PooledDevice {
     /// Precomputed so impossible-migration pools skip the per-touch
     /// routing work and keep only the heat statistics.
     can_migrate: bool,
+    /// Phase estimate of the most recent foreground `issue()`: the
+    /// member's own phases plus both switch hops (which land in `arb`).
+    last: crate::obs::ServicePhases,
     stats: PoolStats,
 }
 
@@ -380,6 +383,7 @@ impl PooledDevice {
             max_promoted: pool.max_promoted,
             fast_members,
             fast_rank,
+            last: crate::obs::ServicePhases::default(),
             stats: PoolStats::default(),
         }
     }
@@ -599,6 +603,15 @@ impl MemoryDevice for PooledDevice {
         let at = self.switch.forward(now, port);
         let member_done = self.children[port].issue(at, member_addr, is_write);
         let done = self.switch.respond(port, member_done);
+        // Both switch hops — port-credit stall + arbitration out, and
+        // arbitration back — are switch time (the span's `switch` phase).
+        let hops = at
+            .saturating_sub(now)
+            .saturating_add(done.saturating_sub(member_done));
+        self.last = self.children[port].last_phases().merged(crate::obs::ServicePhases {
+            arb: hops,
+            ..Default::default()
+        });
         if self.heat.is_some() {
             self.tier_touch(done, addr);
         }
@@ -616,6 +629,10 @@ impl MemoryDevice for PooledDevice {
         for c in &mut self.children {
             c.attach_engine(engine);
         }
+    }
+
+    fn last_phases(&self) -> crate::obs::ServicePhases {
+        self.last
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {
@@ -656,6 +673,23 @@ mod tests {
 
     fn kv(dev: &PooledDevice) -> std::collections::BTreeMap<String, f64> {
         dev.stats_kv().into_iter().collect()
+    }
+
+    #[test]
+    fn pooled_last_phases_merge_member_phases_with_switch_hops() {
+        let cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::Pmem], InterleaveMode::Page);
+        let mut dev = PooledDevice::new(&cfg);
+        let done0 = dev.issue(0, 0, false);
+        let p = dev.last_phases();
+        // Uncontended: the switch contribution is exactly the two
+        // arbitration hops, and the member (cold DRAM bank) adds none.
+        assert_eq!(p.arb, 2 * cfg.pool.arb_ns * crate::sim::NS);
+        assert_eq!(p.bank, 0);
+        // Back-to-back same-bank access: the member's bank wait shows
+        // through the pool's merged estimate.
+        dev.issue(0, 64, false);
+        let p = dev.last_phases();
+        assert!(p.bank > 0, "member bank wait must surface, done0={done0}");
     }
 
     #[test]

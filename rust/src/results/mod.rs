@@ -39,6 +39,7 @@
 
 pub mod json;
 pub mod report;
+pub mod trace;
 
 use std::path::{Path, PathBuf};
 
@@ -152,6 +153,11 @@ pub struct RunRecord {
     /// The job's primary latency histogram (replay response latency for
     /// replay jobs, device read latency otherwise).
     pub latency: Histogram,
+    /// Flight-recorder report ([`crate::obs`]) when the job ran with
+    /// `obs.trace_cap`/`obs.sample_ns` enabled. Serialized only when
+    /// present, so default-off artifacts are byte-identical to records
+    /// written before the field existed.
+    pub obs: Option<crate::obs::ObsReport>,
 }
 
 impl PartialEq for RunRecord {
@@ -177,6 +183,7 @@ impl PartialEq for RunRecord {
             && self.tags == other.tags
             && self.config == other.config
             && self.latency == other.latency
+            && self.obs == other.obs
     }
 }
 
@@ -225,7 +232,7 @@ impl RunRecord {
                 ),
             ),
         ]);
-        Json::Obj(vec![
+        let mut fields = vec![
             ("schema_version".into(), Json::UInt(SCHEMA_VERSION as u128)),
             ("experiment".into(), Json::str(&self.experiment)),
             ("section".into(), Json::str(&self.section)),
@@ -248,7 +255,14 @@ impl RunRecord {
                 ),
             ),
             ("latency".into(), latency),
-        ])
+        ];
+        // Optional trailing field: absent entirely when tracing is off,
+        // keeping default-off artifacts byte-identical to the pre-obs
+        // schema (no version bump needed).
+        if let Some(obs) = &self.obs {
+            fields.push(("obs".into(), obs.to_json()));
+        }
+        Json::Obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<RunRecord> {
@@ -302,6 +316,10 @@ impl RunRecord {
                 .map(|(k, val)| Ok((k.clone(), val.as_f64()?)))
                 .collect::<Result<Vec<_>>>()?,
             latency,
+            obs: match v.get("obs") {
+                Some(o) => Some(crate::obs::ObsReport::from_json(o)?),
+                None => None,
+            },
         })
     }
 }
@@ -419,6 +437,7 @@ pub fn record_from_parts(
         config: crate::config::dump_kv(cfg),
         metrics,
         latency,
+        obs: out.obs.clone(),
     }
 }
 
@@ -635,7 +654,32 @@ mod tests {
                 ("membench.mean_ns".into(), 431.25),
             ],
             latency,
+            obs: None,
         }
+    }
+
+    #[test]
+    fn record_with_obs_report_roundtrips_and_off_records_omit_the_key() {
+        let mut off = sample_record(0);
+        assert!(!off.to_json().to_text().contains("\"obs\""));
+        let mut rec = crate::obs::Recorder::new(4);
+        rec.record(
+            crate::sim::CompletionTag::Replay,
+            4096,
+            false,
+            0,
+            10 * NS,
+            30 * NS,
+            crate::obs::ServicePhases::default(),
+        );
+        let mut obs = crate::obs::ObsReport::default();
+        obs.trace_cap = 4;
+        obs.spans = rec.spans().cloned().collect();
+        off.obs = Some(obs);
+        let text = off.to_json().to_text();
+        assert!(text.contains("\"obs\""));
+        let back = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, off);
     }
 
     #[test]

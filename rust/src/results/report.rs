@@ -233,6 +233,72 @@ fn run_table(records: &[RunRecord]) -> Table {
     t
 }
 
+// --------------------------------------------------------- attribution
+
+/// Tail percentiles the attribution breakdown reports, as
+/// `(label, numerator, denominator)` over the span count.
+const ATTR_PCTS: [(&str, u64, u64); 4] = [
+    ("p50", 50, 100),
+    ("p95", 95, 100),
+    ("p99", 99, 100),
+    ("p99.9", 999, 1000),
+];
+
+/// `report --attribution`: decompose each traced job's response-time
+/// percentiles into per-phase stall time. For every record carrying
+/// spans, the retained spans are sorted by `(response, seq)` and the
+/// span at each percentile rank is rendered with its conserved phase
+/// breakdown — the phase columns sum exactly to the response column
+/// (the [`crate::obs::Phases::attribute`] invariant), so the table
+/// answers "*where* does the p99 live: queue, link, bank or flash?".
+///
+/// Errors when no record in the campaign has spans (tracing was off).
+pub fn attribution_table(campaign: &Campaign) -> Result<Table> {
+    let mut header: Vec<String> = ["job", "device", "trace", "pct", "response us"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    header.extend(crate::obs::Phases::KEYS.iter().map(|k| format!("{k} us")));
+    let mut t = Table::new_owned(header);
+    let mut any = false;
+    for section in &campaign.sections {
+        for r in &section.records {
+            let Some(obs) = &r.obs else { continue };
+            if obs.spans.is_empty() {
+                continue;
+            }
+            any = true;
+            let mut spans: Vec<&crate::obs::Span> = obs.spans.iter().collect();
+            spans.sort_by_key(|s| (s.response(), s.seq));
+            for (label, num, den) in ATTR_PCTS {
+                let idx = ((spans.len() - 1) as u64 * num / den) as usize;
+                let s = spans[idx];
+                let mut cells = vec![
+                    format!("{}-{:03}", r.section, r.index),
+                    r.device.clone(),
+                    r.workload.clone(),
+                    label.to_string(),
+                    format!("{:.3}", crate::sim::to_us(s.response())),
+                ];
+                cells.extend(
+                    s.phases
+                        .as_array()
+                        .iter()
+                        .map(|&p| format!("{:.3}", crate::sim::to_us(p))),
+                );
+                t.row_owned(cells);
+            }
+        }
+    }
+    if !any {
+        bail!(
+            "no observability spans in this artifact set — re-run with \
+             `--set obs.trace_cap=N` (or `run --trace-out`) to record them"
+        );
+    }
+    Ok(t)
+}
+
 // ---------------------------------------------------------------- diff
 
 /// Outcome of comparing two artifact sets.
@@ -464,6 +530,7 @@ mod tests {
             config: vec![],
             metrics: metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
             latency,
+            obs: None,
         }
     }
 
@@ -576,6 +643,65 @@ mod tests {
         assert!(text.contains("dram/requests"));
         assert!(text.contains("dram/req_per_wall_s"));
         crate::results::json::Json::parse(&text).unwrap();
+    }
+
+    fn traced_record() -> RunRecord {
+        use crate::obs::{Observer, ObsConfig, ServicePhases};
+        use crate::sim::CompletionTag;
+        let mut o = Observer::from_config(&ObsConfig {
+            trace_cap: 16,
+            sample_ns: 0,
+        })
+        .unwrap();
+        // Ascending responses with phase mixes that exercise clamping.
+        for i in 0..10u64 {
+            o.on_complete(
+                CompletionTag::Replay,
+                i * 64,
+                false,
+                i * 1000 * NS,
+                i * 1000 * NS + 100 * NS,
+                i * 1000 * NS + (i + 1) * 500 * NS,
+                ServicePhases {
+                    arb: 20 * NS,
+                    link: 80 * NS,
+                    bank: i * 60 * NS,
+                    flash: 200 * NS,
+                },
+            );
+        }
+        let mut r = record("replay", 0, "cxl-ssd", &[]);
+        r.obs = Some(o.into_report());
+        r
+    }
+
+    #[test]
+    fn attribution_rows_conserve_phase_sums() {
+        let c = campaign_of(vec![traced_record()]);
+        let t = attribution_table(&c).unwrap();
+        assert_eq!(t.n_rows(), 4, "one row per percentile");
+        let rendered = t.render();
+        assert!(rendered.contains("p99.9"));
+        assert!(rendered.contains("cxl-ssd"));
+        // Lock conservation through the rendered cells: the six phase
+        // columns sum to the response column (within column rounding).
+        for line in rendered.lines().skip(2) {
+            let cells: Vec<f64> = line
+                .split('|')
+                .filter_map(|c| c.trim().parse::<f64>().ok())
+                .collect();
+            // response + 6 phases parsed as numbers.
+            assert_eq!(cells.len(), 7, "{line}");
+            let sum: f64 = cells[1..].iter().sum();
+            assert!((sum - cells[0]).abs() < 0.004, "{line}");
+        }
+    }
+
+    #[test]
+    fn attribution_errors_without_spans() {
+        let c = campaign_of(vec![record("fig4", 0, "dram", &[])]);
+        let err = attribution_table(&c).unwrap_err().to_string();
+        assert!(err.contains("obs.trace_cap"), "{err}");
     }
 
     #[test]

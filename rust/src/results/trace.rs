@@ -1,0 +1,231 @@
+//! Chrome trace-event export: render a campaign's embedded
+//! observability reports ([`crate::obs::ObsReport`]) as a
+//! Perfetto-loadable JSON object (`trace export`).
+//!
+//! The output follows the Trace Event Format: one `"X"` (complete)
+//! event per retained span with `ts`/`dur` in microseconds of *sim*
+//! time, one `"M"` (metadata) event naming each traced job's process,
+//! and `"C"` (counter) events for the time-series samples. Everything
+//! derives from sim ticks through the canonical JSON writer, so the
+//! exported bytes are deterministic — byte-identical across sweep
+//! worker counts and engine modes, like the artifacts they come from.
+
+use anyhow::{bail, Result};
+
+use crate::obs::{tag_name, Phases};
+use crate::results::json::Json;
+use crate::results::Campaign;
+use crate::sim::{to_us, CompletionTag, NS};
+
+/// Stable per-tag thread id so Perfetto renders one lane per
+/// completion source (ports get their own lanes above the fixed tags).
+fn tag_tid(tag: CompletionTag) -> u64 {
+    match tag {
+        CompletionTag::Replay => 0,
+        CompletionTag::CoreLoad => 1,
+        CompletionTag::CoreStore => 2,
+        CompletionTag::Port(n) => 10 + n as u64,
+    }
+}
+
+/// Render every traced record of `campaign` as one Chrome trace-event
+/// JSON object. Errors when no record carries an observability block
+/// (the campaign ran with tracing off).
+pub fn chrome_trace(campaign: &Campaign) -> Result<Json> {
+    let mut events: Vec<Json> = Vec::new();
+    let mut pid = 0u64;
+    for section in &campaign.sections {
+        for r in &section.records {
+            let Some(obs) = &r.obs else { continue };
+            if obs.spans.is_empty() && obs.samples.is_empty() {
+                continue;
+            }
+            pid += 1;
+            events.push(Json::Obj(vec![
+                ("name".into(), Json::str("process_name")),
+                ("ph".into(), Json::str("M")),
+                ("pid".into(), Json::UInt(pid as u128)),
+                (
+                    "args".into(),
+                    Json::Obj(vec![(
+                        "name".into(),
+                        Json::str(format!("{}-{:03}-{}", r.section, r.index, r.device)),
+                    )]),
+                ),
+            ]));
+            for s in &obs.spans {
+                let mut args = vec![
+                    ("seq".to_string(), Json::UInt(s.seq as u128)),
+                    ("addr".to_string(), Json::UInt(s.addr as u128)),
+                ];
+                for (k, v) in Phases::KEYS.iter().zip(s.phases.as_array()) {
+                    args.push((format!("{k}_ns"), Json::Float(v as f64 / NS as f64)));
+                }
+                events.push(Json::Obj(vec![
+                    (
+                        "name".into(),
+                        Json::str(if s.is_write { "write" } else { "read" }),
+                    ),
+                    ("cat".into(), Json::str(tag_name(s.tag))),
+                    ("ph".into(), Json::str("X")),
+                    ("ts".into(), Json::Float(to_us(s.scheduled))),
+                    ("dur".into(), Json::Float(to_us(s.response()))),
+                    ("pid".into(), Json::UInt(pid as u128)),
+                    ("tid".into(), Json::UInt(tag_tid(s.tag) as u128)),
+                    ("args".into(), Json::Obj(args)),
+                ]));
+            }
+            for smp in &obs.samples {
+                let counters = [
+                    ("inflight", smp.inflight as f64),
+                    ("issued", smp.issued as f64),
+                    ("hit_rate", smp.hit_rate),
+                    ("credit_stall_ns", smp.credit_stall_ns),
+                    ("waf", smp.waf),
+                ];
+                for (name, v) in counters {
+                    // Chrome counters need finite numbers; NaN means
+                    // "this device has no such stat" — omit the track.
+                    if !v.is_finite() {
+                        continue;
+                    }
+                    events.push(Json::Obj(vec![
+                        ("name".into(), Json::str(name)),
+                        ("ph".into(), Json::str("C")),
+                        ("ts".into(), Json::Float(to_us(smp.tick))),
+                        ("pid".into(), Json::UInt(pid as u128)),
+                        (
+                            "args".into(),
+                            Json::Obj(vec![(name.to_string(), Json::Float(v))]),
+                        ),
+                    ]));
+                }
+            }
+        }
+    }
+    if events.is_empty() {
+        bail!(
+            "no observability data in this artifact set — re-run with \
+             `--set obs.trace_cap=N` (or `run --trace-out`) to record it"
+        );
+    }
+    Ok(Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(events)),
+        ("displayTimeUnit".into(), Json::str("ns")),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Observer, ObsConfig, ServicePhases};
+    use crate::results::{RunRecord, Section, SectionKind};
+    use crate::stats::Histogram;
+
+    fn traced_campaign() -> Campaign {
+        let mut o = Observer::from_config(&ObsConfig {
+            trace_cap: 8,
+            sample_ns: 1,
+        })
+        .unwrap();
+        o.on_complete(
+            CompletionTag::Replay,
+            0x1000,
+            false,
+            100 * NS,
+            150 * NS,
+            900 * NS,
+            ServicePhases {
+                arb: 5 * NS,
+                link: 50 * NS,
+                bank: 100 * NS,
+                flash: 300 * NS,
+            },
+        );
+        o.on_complete(
+            CompletionTag::Port(3),
+            0x2000,
+            true,
+            200 * NS,
+            200 * NS,
+            1_200 * NS,
+            ServicePhases::default(),
+        );
+        o.sample(
+            1_200 * NS,
+            2,
+            &[("waf".to_string(), 1.25), ("icl_hit_rate".to_string(), f64::NAN)],
+        );
+        let record = RunRecord {
+            experiment: "replay".into(),
+            section: "replay".into(),
+            index: 0,
+            device: "cxl-ssd".into(),
+            workload: "zipf".into(),
+            policy: "-".into(),
+            mlp: 4,
+            seed: 1,
+            sim_ticks: 1_200 * NS,
+            tags: vec![],
+            config: vec![],
+            metrics: vec![],
+            latency: Histogram::new(),
+            obs: Some(o.into_report()),
+        };
+        Campaign {
+            experiment: "replay".into(),
+            quick: true,
+            sections: vec![Section {
+                id: "replay".into(),
+                kind: SectionKind::Replay,
+                heading: "h".into(),
+                records: vec![record],
+            }],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_has_spans_counters_and_metadata() {
+        let json = chrome_trace(&traced_campaign()).unwrap();
+        let events = json.field("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(json.field("displayTimeUnit").unwrap().as_str().unwrap(), "ns");
+        let phases: Vec<&str> = events
+            .iter()
+            .map(|e| e.field("ph").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(phases.iter().filter(|p| **p == "M").count(), 1);
+        assert_eq!(phases.iter().filter(|p| **p == "X").count(), 2);
+        // waf + inflight + issued counters; NaN hit_rate is omitted.
+        assert_eq!(phases.iter().filter(|p| **p == "C").count(), 3);
+        // The span event carries sim-time microseconds and the
+        // conserved phase breakdown in its args.
+        let span = events.iter().find(|e| e.get("dur").is_some()).unwrap();
+        assert_eq!(span.field("ts").unwrap().as_f64().unwrap(), 0.1);
+        assert_eq!(span.field("dur").unwrap().as_f64().unwrap(), 0.8);
+        let args = span.field("args").unwrap();
+        assert!(args.get("flash_ns").is_some());
+        assert!(args.get("seq").is_some());
+        // Port tags land on their own lanes.
+        let tids: Vec<u64> = events
+            .iter()
+            .filter(|e| e.get("dur").is_some())
+            .map(|e| e.field("tid").unwrap().as_u64().unwrap())
+            .collect();
+        assert_eq!(tids, vec![0, 13]);
+    }
+
+    #[test]
+    fn export_is_byte_stable() {
+        let a = chrome_trace(&traced_campaign()).unwrap().to_text();
+        let b = chrome_trace(&traced_campaign()).unwrap().to_text();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn untraced_campaign_is_an_error() {
+        let mut c = traced_campaign();
+        c.sections[0].records[0].obs = None;
+        let err = chrome_trace(&c).unwrap_err().to_string();
+        assert!(err.contains("obs.trace_cap"), "{err}");
+    }
+}

@@ -30,7 +30,9 @@
 //! posted stores complete out of order), so consumption is anonymous
 //! and horizon-based rather than tag-matched. The conservation
 //! invariant — every posted completion is consumed exactly once by the
-//! end of the run — is checked in [`Engine::finish`].
+//! end of the run — is accounted by [`Engine::finish`] through
+//! release-mode [`EngineStats`] counters (`posted`, `consumed`,
+//! `unconsumed_at_finish`), surfaced as `engine.*` stats keys.
 
 use std::cell::RefCell;
 use std::rc::Rc;
@@ -77,12 +79,37 @@ impl EngineMode {
 }
 
 /// Lifetime counters of one engine (conservation telemetry).
-#[derive(Debug, Default, Clone, Copy)]
+///
+/// Conservation is a release-mode invariant, not a debug assertion:
+/// `posted == consumed + unconsumed_at_finish` after [`Engine::finish`],
+/// and a nonzero `unconsumed_at_finish` means completions were still
+/// queued when the run ended — visible in release builds through
+/// [`EngineStats::stats_kv`] instead of silently passing.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct EngineStats {
     /// Completions posted to the shared queue.
     pub posted: u64,
-    /// Completions consumed from the queue head.
+    /// Completions consumed from the queue head by waiters.
     pub consumed: u64,
+    /// Completions still queued when [`Engine::finish`] drained the
+    /// run — zero on a balanced run.
+    pub unconsumed_at_finish: u64,
+}
+
+impl EngineStats {
+    /// The counters as flat stats keys (documented in DESIGN.md
+    /// "Stats-key vocabulary"), surfaced by the run drivers next to
+    /// device stats.
+    pub fn stats_kv(&self) -> Vec<(String, f64)> {
+        vec![
+            ("engine.posted".to_string(), self.posted as f64),
+            ("engine.consumed".to_string(), self.consumed as f64),
+            (
+                "engine.unconsumed_at_finish".to_string(),
+                self.unconsumed_at_finish as f64,
+            ),
+        ]
+    }
 }
 
 #[derive(Debug, Default)]
@@ -134,18 +161,17 @@ impl Engine {
         self.inner.borrow().queue.len()
     }
 
-    /// End of run: drain every remaining completion and return the
-    /// lifetime counters. Conservation (`posted == consumed`) holds by
-    /// construction afterwards and is debug-asserted.
+    /// End of run: drain every remaining completion into
+    /// `unconsumed_at_finish` and return the lifetime counters.
+    /// Conservation (`posted == consumed + unconsumed_at_finish`) then
+    /// holds by construction, and an unbalanced producer shows up as a
+    /// nonzero `unconsumed_at_finish` **in release builds** — this was
+    /// a `debug_assert` that release campaigns silently skipped.
     pub fn finish(&self) -> EngineStats {
         let mut s = self.inner.borrow_mut();
         while s.queue.pop().is_some() {
-            s.stats.consumed += 1;
+            s.stats.unconsumed_at_finish += 1;
         }
-        debug_assert_eq!(
-            s.stats.posted, s.stats.consumed,
-            "engine conservation: every posted completion is consumed"
-        );
         s.stats
     }
 
@@ -169,7 +195,36 @@ mod tests {
         assert_eq!(e.pending(), 1);
         let stats = e.finish();
         assert_eq!(stats.posted, 3);
-        assert_eq!(stats.consumed, 3);
+        assert_eq!(stats.consumed, 2);
+        assert_eq!(stats.unconsumed_at_finish, 1);
+        assert_eq!(stats.posted, stats.consumed + stats.unconsumed_at_finish);
+    }
+
+    #[test]
+    fn unbalanced_producer_reports_nonzero_in_release() {
+        // The regression the counters exist for: a producer that posts
+        // without any waiter ever consuming must report a nonzero
+        // leftover through plain release-mode counters — the old
+        // `debug_assert_eq!(posted, consumed)` never ran in `--release`
+        // campaigns, so this exact mock passed silently.
+        let e = Engine::new();
+        e.post(10, CompletionTag::Replay);
+        e.post(20, CompletionTag::Port(1));
+        e.post(30, CompletionTag::CoreStore);
+        let stats = e.finish();
+        assert_eq!(stats.posted, 3);
+        assert_eq!(stats.consumed, 0);
+        assert_eq!(stats.unconsumed_at_finish, 3);
+        let kv = stats.stats_kv();
+        let get = |name: &str| {
+            kv.iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        assert_eq!(get("engine.posted"), 3.0);
+        assert_eq!(get("engine.consumed"), 0.0);
+        assert_eq!(get("engine.unconsumed_at_finish"), 3.0);
     }
 
     #[test]

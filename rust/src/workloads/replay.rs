@@ -98,6 +98,24 @@ impl Replay<'_> {
         device: &mut dyn MemoryDevice,
         engine: Option<&crate::sim::Engine>,
     ) -> ReplayResult {
+        self.run_observed(device, engine, None)
+    }
+
+    /// [`run_with_engine`](Self::run_with_engine) with an optional
+    /// flight recorder ([`crate::obs::Observer`]): each completed
+    /// request records a lifecycle span (tagged [`CompletionTag::Replay`]
+    /// — the tag is driver-stamped, never engine-derived, so traces stay
+    /// byte-identical between engine modes), and the time-series sampler
+    /// snapshots device stats on its epoch clock. `None` is the default
+    /// path and perturbs nothing.
+    ///
+    /// [`CompletionTag::Replay`]: crate::sim::CompletionTag::Replay
+    pub fn run_observed(
+        &self,
+        device: &mut dyn MemoryDevice,
+        engine: Option<&crate::sim::Engine>,
+        mut observer: Option<&mut crate::obs::Observer>,
+    ) -> ReplayResult {
         let mut window = OutstandingWindow::new(self.mlp);
         if let Some(engine) = engine {
             window.attach(engine, crate::sim::CompletionTag::Replay);
@@ -132,6 +150,20 @@ impl Replay<'_> {
                 writes += 1;
             } else {
                 reads += 1;
+            }
+            if let Some(o) = observer.as_deref_mut() {
+                o.on_complete(
+                    crate::sim::CompletionTag::Replay,
+                    e.offset,
+                    e.is_write,
+                    scheduled,
+                    issue,
+                    done,
+                    device.last_phases(),
+                );
+                if o.sample_due(issue) {
+                    o.sample(issue, window.in_flight() as u64, &device.stats_kv());
+                }
             }
             now = issue;
         }
@@ -338,6 +370,49 @@ mod tests {
         let stats = engine.finish();
         assert_eq!(stats.posted, 200, "one completion per request");
         assert_eq!(stats.posted, stats.consumed);
+    }
+
+    #[test]
+    fn observed_replay_records_conserved_spans_without_perturbing_timing() {
+        let cfg = presets::small_test();
+        let trace = sparse_trace(50, US);
+        let mut dev_plain = build_device(DeviceKind::CxlSsd, &cfg);
+        let plain = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 4,
+        }
+        .run(dev_plain.as_mut());
+        let mut dev = build_device(DeviceKind::CxlSsd, &cfg);
+        let mut o = crate::obs::Observer::from_config(&crate::obs::ObsConfig {
+            trace_cap: 64,
+            sample_ns: 1_000,
+        })
+        .unwrap();
+        let r = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 4,
+        }
+        .run_observed(dev.as_mut(), None, Some(&mut o));
+        assert_eq!(r.sim_ticks, plain.sim_ticks, "observer must not perturb timing");
+        assert_eq!(r.latency.max(), plain.latency.max());
+        let report = o.into_report();
+        assert_eq!(report.spans.len(), 50);
+        assert_eq!(report.dropped, 0);
+        for s in &report.spans {
+            assert_eq!(
+                s.phases.total(),
+                s.response(),
+                "span {} phases must sum to its response time",
+                s.seq
+            );
+            assert_eq!(s.tag, crate::sim::CompletionTag::Replay);
+        }
+        // Flash-bound open loop: the tail spans attribute real queue and
+        // flash time, not just `other`.
+        assert!(report.spans.iter().any(|s| s.phases.flash > 0));
+        assert!(!report.samples.is_empty());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use cxl_ssd_sim::config::presets;
 use cxl_ssd_sim::coordinator::experiments::{self, ExpScale};
-use cxl_ssd_sim::results::{report, Campaign};
+use cxl_ssd_sim::results::{self, report, Campaign};
 use cxl_ssd_sim::sim::EngineMode;
 
 fn campaign(exp: &str, mode: EngineMode) -> Campaign {
@@ -70,4 +70,50 @@ fn combined_campaign_is_engine_invariant() {
     // The full `all` campaign: fig3-fig6, policies, mlp and replay in
     // one artifact set — the ISSUE's acceptance criterion.
     assert_engine_invariant("all");
+}
+
+#[test]
+fn traced_replay_campaign_is_engine_invariant() {
+    // Flight-recorder spans extend the invariant down to individual
+    // request lifecycles: span tags are driver-stamped (never
+    // engine-derived), so every trace artifact — the per-record obs
+    // block and the Chrome export — is byte-identical under
+    // `sys.engine=event` and `tick`. (Whole job files legitimately
+    // differ by the `sys.engine` config-dump key.)
+    let build = |mode: EngineMode| {
+        let mut cfg = presets::small_test();
+        cfg.engine = mode;
+        cfg.obs.trace_cap = 64;
+        cfg.obs.sample_ns = 1_000;
+        experiments::build_campaign("replay", &cfg, ExpScale::quick(), 2)
+            .unwrap()
+            .campaign
+    };
+    let tick = build(EngineMode::Tick);
+    let event = build(EngineMode::Event);
+    let mut traced = 0;
+    for (a, b) in tick
+        .sections
+        .iter()
+        .flat_map(|s| &s.records)
+        .zip(event.sections.iter().flat_map(|s| &s.records))
+    {
+        let (Some(oa), Some(ob)) = (&a.obs, &b.obs) else {
+            assert_eq!(a.obs.is_some(), b.obs.is_some(), "{}-{}", a.section, a.index);
+            continue;
+        };
+        assert!(!oa.spans.is_empty(), "{}-{}: no spans recorded", a.section, a.index);
+        assert_eq!(
+            oa.to_json().to_text(),
+            ob.to_json().to_text(),
+            "{}-{}: obs block differs between engine modes",
+            a.section,
+            a.index
+        );
+        traced += 1;
+    }
+    assert!(traced > 0, "replay campaign recorded no spans");
+    let ta = results::trace::chrome_trace(&tick).unwrap().to_text();
+    let tb = results::trace::chrome_trace(&event).unwrap().to_text();
+    assert_eq!(ta, tb, "Chrome trace export differs between engine modes");
 }

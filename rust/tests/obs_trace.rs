@@ -1,0 +1,203 @@
+//! Observability determinism: flight-recorder traces are part of the
+//! artifact contract, so a traced campaign must emit byte-identical
+//! directories across sweep worker counts, the Chrome trace export
+//! must be byte-stable, tail-latency attribution must conserve phase
+//! sums on real runs, and — the other half of the contract — leaving
+//! tracing off must leave every artifact byte untouched.
+
+use std::path::{Path, PathBuf};
+
+use cxl_ssd_sim::config::{presets, SimConfig};
+use cxl_ssd_sim::coordinator::experiments::{self, ExpScale};
+use cxl_ssd_sim::results::{self, json::Json, report, trace, Campaign};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cxl_ssd_sim_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn dir_listing(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut files = Vec::new();
+    fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, Vec<u8>)>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(root, &path, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.push((rel, std::fs::read(&path).unwrap()));
+            }
+        }
+    }
+    walk(dir, dir, &mut files);
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    files
+}
+
+/// The small-test preset with the flight recorder switched on.
+fn traced_cfg() -> SimConfig {
+    let mut cfg = presets::small_test();
+    cfg.obs.trace_cap = 64;
+    cfg.obs.sample_ns = 1_000;
+    cfg
+}
+
+fn traced_campaign(exp: &str, workers: usize) -> Campaign {
+    experiments::build_campaign(exp, &traced_cfg(), ExpScale::quick(), workers)
+        .unwrap()
+        .campaign
+}
+
+/// Every replay record must carry an observability block with retained
+/// spans; non-replay records must carry none.
+fn assert_traced(campaign: &Campaign) {
+    let mut traced = 0;
+    for section in &campaign.sections {
+        for r in &section.records {
+            if let Some(obs) = &r.obs {
+                assert!(!obs.spans.is_empty(), "{}-{}: traced but empty", r.section, r.index);
+                traced += 1;
+            }
+        }
+    }
+    assert!(traced > 0, "campaign has no traced records");
+}
+
+fn assert_byte_identical(name: &str, a: &Campaign, b: &Campaign) {
+    let dir_a = tmp_dir(&format!("{name}_a"));
+    let dir_b = tmp_dir(&format!("{name}_b"));
+    results::write_campaign(&dir_a, a).unwrap();
+    results::write_campaign(&dir_b, b).unwrap();
+    let la = dir_listing(&dir_a);
+    let lb = dir_listing(&dir_b);
+    assert_eq!(
+        la.iter().map(|(n, _)| n).collect::<Vec<_>>(),
+        lb.iter().map(|(n, _)| n).collect::<Vec<_>>(),
+        "{name}: file sets must match"
+    );
+    for ((file, bytes_a), (_, bytes_b)) in la.iter().zip(lb.iter()) {
+        assert_eq!(bytes_a, bytes_b, "{name}: {file} differs");
+    }
+}
+
+#[test]
+fn traced_replay_artifacts_are_worker_count_invariant() {
+    // Span sequence numbers, ring eviction and sampler epochs all live
+    // inside a single job, so parallel sweeps must not reorder a byte.
+    let serial = traced_campaign("replay", 1);
+    let parallel = traced_campaign("replay", 4);
+    assert_traced(&serial);
+    assert_byte_identical("obs_replay_workers", &serial, &parallel);
+}
+
+#[test]
+fn traced_pool_artifacts_are_worker_count_invariant() {
+    // The pool campaign mixes replay (traced) and stream (untraced)
+    // jobs in one artifact set.
+    let serial = traced_campaign("pool", 1);
+    let parallel = traced_campaign("pool", 4);
+    assert_traced(&serial);
+    assert_byte_identical("obs_pool_workers", &serial, &parallel);
+}
+
+#[test]
+fn tracing_off_leaves_artifacts_without_obs_blocks() {
+    // Default-off guarantee: no `"obs"` key anywhere in the artifact
+    // set, so pre-observability readers and golden diffs are untouched.
+    let campaign = experiments::build_campaign(
+        "replay",
+        &presets::small_test(),
+        ExpScale::quick(),
+        2,
+    )
+    .unwrap()
+    .campaign;
+    let dir = tmp_dir("obs_default_off");
+    results::write_campaign(&dir, &campaign).unwrap();
+    for (file, bytes) in dir_listing(&dir) {
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(!text.contains("\"obs\""), "{file} leaks an obs block");
+    }
+}
+
+#[test]
+fn traced_artifacts_reload_exactly() {
+    let campaign = traced_campaign("replay", 2);
+    assert_traced(&campaign);
+    let dir = tmp_dir("obs_reload");
+    results::write_campaign(&dir, &campaign).unwrap();
+    let loaded = results::load_campaign(&dir).unwrap();
+    assert_eq!(loaded, campaign, "obs blocks must round-trip through artifacts");
+}
+
+#[test]
+fn chrome_trace_export_is_deterministic_and_well_formed() {
+    let text = trace::chrome_trace(&traced_campaign("replay", 1))
+        .unwrap()
+        .to_text();
+    let again = trace::chrome_trace(&traced_campaign("replay", 4))
+        .unwrap()
+        .to_text();
+    assert_eq!(text, again, "trace export must not depend on worker count");
+
+    let json = Json::parse(&text).unwrap();
+    assert_eq!(json.field("displayTimeUnit").unwrap().as_str().unwrap(), "ns");
+    let events = json.field("traceEvents").unwrap().as_arr().unwrap();
+    let count = |ph: &str| {
+        events
+            .iter()
+            .filter(|e| e.field("ph").unwrap().as_str().unwrap() == ph)
+            .count()
+    };
+    assert!(count("M") > 0, "missing process metadata events");
+    assert!(count("X") > 0, "missing span events");
+    assert!(count("C") > 0, "missing counter samples");
+    // Spans carry the conserved phase breakdown in their args.
+    let span = events
+        .iter()
+        .find(|e| e.get("dur").is_some())
+        .expect("at least one complete event");
+    for key in ["queue_ns", "switch_ns", "link_ns", "bank_ns", "flash_ns", "other_ns"] {
+        assert!(span.field("args").unwrap().get(key).is_some(), "span lacks {key}");
+    }
+}
+
+#[test]
+fn attribution_conserves_phase_sums_on_real_runs() {
+    // Each rendered row decomposes one percentile span's response time;
+    // the six phase columns must sum back to it (within the 3-decimal
+    // formatting of 7 printed cells).
+    let table = report::attribution_table(&traced_campaign("replay", 2)).unwrap();
+    let rendered = table.render();
+    let mut rows = 0;
+    for line in rendered.lines().skip(2) {
+        let nums: Vec<f64> = line
+            .split('|')
+            .filter_map(|cell| cell.trim().parse::<f64>().ok())
+            .collect();
+        assert_eq!(nums.len(), 7, "row must have response + 6 phase cells: {line}");
+        let response = nums[0];
+        let sum: f64 = nums[1..].iter().sum();
+        assert!(
+            (sum - response).abs() < 0.004,
+            "phases sum {sum} != response {response}: {line}"
+        );
+        rows += 1;
+    }
+    assert!(rows >= 4, "expected >= 4 percentile rows, got {rows}");
+}
+
+#[test]
+fn attribution_requires_a_traced_campaign() {
+    let campaign = experiments::build_campaign(
+        "replay",
+        &presets::small_test(),
+        ExpScale::quick(),
+        1,
+    )
+    .unwrap()
+    .campaign;
+    let err = report::attribution_table(&campaign).unwrap_err().to_string();
+    assert!(err.contains("obs.trace_cap"), "{err}");
+}

@@ -79,6 +79,7 @@ fn rand_record(rng: &mut SplitMix64) -> RunRecord {
         config,
         metrics,
         latency: rand_histogram(rng),
+        obs: None,
     }
 }
 
