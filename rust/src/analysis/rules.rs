@@ -65,7 +65,7 @@ pub const RULES: [Rule; 10] = [
     Rule {
         id: UNORDERED_ITER,
         summary: "iterating unordered containers in simulation state needs a justification",
-        matches: "`HashMap` / `HashSet` declarations and iteration (`iter`, `keys`, `values`, `retain`, `drain`, `into_iter`, `for .. in ..`) in the sim-state modules: cache, cpu, cxl, devices, dram, mem, obs, pmem, pool, sim, ssd, topology, trace, workloads",
+        matches: "`HashMap` / `HashSet` declarations and iteration (`iter`, `keys`, `values`, `retain`, `drain`, `into_iter`, `for .. in ..`) in the sim-state modules: cache, cpu, cxl, devices, dram, mem, obs, pmem, pool, sim, snapshot, ssd, topology, trace, workloads",
         action: "use `BTreeMap`/`BTreeSet` where order can reach any output, or annotate with an argument why iteration order is unobservable",
         suppressible: true,
         semantic: false,
@@ -139,7 +139,7 @@ pub const RULES: [Rule; 10] = [
 /// Top-level `rust/src` directories holding simulation state, where
 /// unordered iteration can silently break run-to-run determinism (and
 /// where the semantic tick-arithmetic rule applies).
-pub const SIM_STATE_DIRS: [&str; 14] = [
+pub const SIM_STATE_DIRS: [&str; 15] = [
     "cache",
     "cpu",
     "cxl",
@@ -150,6 +150,7 @@ pub const SIM_STATE_DIRS: [&str; 14] = [
     "pmem",
     "pool",
     "sim",
+    "snapshot",
     "ssd",
     "topology",
     "trace",

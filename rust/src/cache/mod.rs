@@ -290,6 +290,100 @@ impl PageCache {
     pub fn mshr_stats(&self) -> &MshrStats {
         self.mshr.stats()
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): the frame array (with valid/dirty/ready
+    /// bits), the replacement-policy bookkeeping and the MSHR. The
+    /// page→frame map and occupancy count are rebuilt from the frames.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        let frames: Vec<Json> = self
+            .frames
+            .iter()
+            .map(|f| match f {
+                None => Json::Null,
+                Some(f) => Json::Obj(vec![
+                    ("page".into(), Json::UInt(f.page as u128)),
+                    ("dirty".into(), Json::Bool(f.dirty)),
+                    ("ready".into(), Json::UInt(f.ready as u128)),
+                ]),
+            })
+            .collect();
+        Json::Obj(vec![
+            ("frames".into(), Json::Arr(frames)),
+            ("policy".into(), self.policy.snapshot()),
+            ("mshr".into(), self.mshr.snapshot()),
+            ("hits".into(), Json::UInt(self.stats.hits as u128)),
+            ("misses".into(), Json::UInt(self.stats.misses as u128)),
+            (
+                "mshr_merges".into(),
+                Json::UInt(self.stats.mshr_merges as u128),
+            ),
+            ("writebacks".into(), Json::UInt(self.stats.writebacks as u128)),
+            ("evictions".into(), Json::UInt(self.stats.evictions as u128)),
+            (
+                "redundant_fills".into(),
+                Json::UInt(self.stats.redundant_fills as u128),
+            ),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        use crate::results::json::Json;
+        let frames_json = v.field("frames")?.as_arr()?;
+        if frames_json.len() != self.n_frames {
+            anyhow::bail!(
+                "cache snapshot has {} frames, config has {}",
+                frames_json.len(),
+                self.n_frames
+            );
+        }
+        let mut frames: Vec<Option<Frame>> = Vec::with_capacity(self.n_frames);
+        let mut map = fast_map(self.n_frames);
+        let mut occupied = 0usize;
+        for (idx, f) in frames_json.iter().enumerate() {
+            match f {
+                Json::Null => frames.push(None),
+                obj => {
+                    let page = obj.field("page")?.as_u64()?;
+                    if map.insert(page, idx).is_some() {
+                        anyhow::bail!("cache snapshot holds page {page} in two frames");
+                    }
+                    if self.policy.kind() == PolicyKind::Direct
+                        && (page % self.n_frames as u64) as usize != idx
+                    {
+                        anyhow::bail!(
+                            "cache snapshot maps page {page} to frame {idx}, direct mapping requires {}",
+                            page % self.n_frames as u64
+                        );
+                    }
+                    occupied += 1;
+                    frames.push(Some(Frame {
+                        page,
+                        dirty: obj.field("dirty")?.as_bool()?,
+                        ready: obj.field("ready")?.as_u64()?,
+                    }));
+                }
+            }
+        }
+        self.policy.restore(v.field("policy")?, self.n_frames)?;
+        self.mshr.restore(v.field("mshr")?)?;
+        self.frames = frames;
+        if self.policy.kind() == PolicyKind::Direct {
+            map.clear();
+        }
+        self.map = map;
+        self.occupied = occupied;
+        self.stats = CacheStats {
+            hits: v.field("hits")?.as_u64()?,
+            misses: v.field("misses")?.as_u64()?,
+            mshr_merges: v.field("mshr_merges")?.as_u64()?,
+            writebacks: v.field("writebacks")?.as_u64()?,
+            evictions: v.field("evictions")?.as_u64()?,
+            redundant_fills: v.field("redundant_fills")?.as_u64()?,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -464,6 +558,48 @@ mod tests {
                 c.lookup(0, p, p % 3 == 0);
             }
             assert!(c.resident() <= 4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn page_cache_snapshot_restore_continues_identically() {
+        for kind in PolicyKind::ALL {
+            let mut c = cache(kind);
+            let mut now = 0;
+            for i in 0..60u64 {
+                let page = (i * 13) % 24;
+                if let Lookup::Miss { .. } = c.lookup(now, page, i % 4 == 0) {
+                    c.fill_done(page, now + 50_000);
+                }
+                now += 20_000;
+            }
+            let snap = c.snapshot();
+            let mut back = cache(kind);
+            back.restore(&snap).unwrap();
+            assert_eq!(back.snapshot().to_text(), snap.to_text(), "{kind:?}");
+
+            for i in 60..140u64 {
+                let page = (i * 29) % 24;
+                let a = c.lookup(now, page, i % 5 == 0);
+                let b = back.lookup(now, page, i % 5 == 0);
+                assert_eq!(a, b, "{kind:?} lookup {i}");
+                if let Lookup::Miss { .. } = a {
+                    c.fill_done(page, now + 50_000);
+                    back.fill_done(page, now + 50_000);
+                }
+                now += 20_000;
+            }
+            let mut da = c.take_dirty_pages();
+            let mut db = back.take_dirty_pages();
+            da.sort_unstable();
+            db.sort_unstable();
+            assert_eq!(da, db, "{kind:?}");
+            assert_eq!(back.snapshot().to_text(), c.snapshot().to_text(), "{kind:?}");
+
+            // Frame-count mismatch is a hard error.
+            let mut wrong = PageCache::new(8, kind, 8);
+            let err = wrong.restore(&snap).unwrap_err().to_string();
+            assert!(err.contains("cache snapshot has 4 frames"), "{err}");
         }
     }
 

@@ -89,6 +89,58 @@ impl Mshr {
     pub fn stats(&self) -> &MshrStats {
         &self.stats
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): in-flight fills in sorted page order (the
+    /// table itself is unordered, so sorting makes the snapshot
+    /// deterministic) plus the merge counters.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        let mut entries: Vec<(u64, u64)> =
+            self.entries.iter().map(|(&p, &d)| (p, d)).collect();
+        entries.sort_unstable();
+        Json::Obj(vec![
+            ("entries".into(), crate::snapshot::pairs_to_json(&entries)),
+            (
+                "allocations".into(),
+                Json::UInt(self.stats.allocations as u128),
+            ),
+            (
+                "re_registrations".into(),
+                Json::UInt(self.stats.re_registrations as u128),
+            ),
+            ("merges".into(), Json::UInt(self.stats.merges as u128)),
+            (
+                "capacity_rejections".into(),
+                Json::UInt(self.stats.capacity_rejections as u128),
+            ),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let pairs = crate::snapshot::pairs_from_json(v.field("entries")?)?;
+        if pairs.len() > self.capacity {
+            anyhow::bail!(
+                "mshr snapshot has {} entries, capacity is {}",
+                pairs.len(),
+                self.capacity
+            );
+        }
+        let mut entries = fast_map(self.capacity);
+        for (page, done) in pairs {
+            if entries.insert(page, done).is_some() {
+                anyhow::bail!("mshr snapshot tracks page {page} twice");
+            }
+        }
+        self.entries = entries;
+        self.stats = MshrStats {
+            allocations: v.field("allocations")?.as_u64()?,
+            re_registrations: v.field("re_registrations")?.as_u64()?,
+            merges: v.field("merges")?.as_u64()?,
+            capacity_rejections: v.field("capacity_rejections")?.as_u64()?,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +191,31 @@ mod tests {
         assert_eq!(m.in_flight(1), Some(200));
         assert_eq!(m.stats().allocations, 2);
         assert_eq!(m.stats().re_registrations, 1);
+    }
+
+    #[test]
+    fn mshr_snapshot_restore_is_exact_and_sorted() {
+        let mut m = Mshr::new(4);
+        m.insert(9, 300);
+        m.insert(1, 100);
+        m.insert(5, 200);
+        m.in_flight(1);
+        let snap = m.snapshot();
+        // Deterministic order: sorted by page regardless of hash order.
+        let text = snap.to_text();
+        assert!(text.find("100").unwrap() < text.find("200").unwrap());
+
+        let mut back = Mshr::new(4);
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+        assert_eq!(back.in_flight(5), m.in_flight(5));
+        back.expire(250);
+        m.expire(250);
+        assert_eq!(back.snapshot().to_text(), m.snapshot().to_text());
+
+        let mut small = Mshr::new(2);
+        let err = small.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("capacity is 2"), "{err}");
     }
 
     #[test]

@@ -130,6 +130,32 @@ impl LruList {
             Some(self.tail)
         }
     }
+
+    /// Frames in MRU→LRU order (snapshot serialization).
+    fn order(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut i = self.head;
+        while i != NIL {
+            out.push(i);
+            i = self.next[i];
+        }
+        out
+    }
+
+    /// Rebuild a list of `n` slots holding `order` (MRU first).
+    fn from_order(n: usize, order: &[usize]) -> Result<Self, String> {
+        let mut l = LruList::new(n);
+        for &i in order.iter().rev() {
+            if i >= n {
+                return Err(format!("lru frame {i} out of range (n_frames {n})"));
+            }
+            if l.in_list[i] {
+                return Err(format!("lru frame {i} listed twice"));
+            }
+            l.push_front(i);
+        }
+        Ok(l)
+    }
 }
 
 /// 2Q bookkeeping: which queue a frame lives in.
@@ -335,6 +361,146 @@ impl Policy {
         }
     }
 
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]). Queue/list orders are part of the state;
+    /// 2Q's `home` array is rebuilt from queue membership on restore.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        let frames = |v: &[usize]| {
+            crate::snapshot::ticks_to_json(&v.iter().map(|&f| f as u64).collect::<Vec<_>>())
+        };
+        let mut fields = vec![("kind".into(), Json::Str(self.kind.name().into()))];
+        match &self.inner {
+            Inner::Direct => {}
+            Inner::Lru(l) => fields.push(("order".into(), frames(&l.order()))),
+            Inner::Fifo(q) => {
+                let q: Vec<usize> = q.iter().copied().collect();
+                fields.push(("queue".into(), frames(&q)));
+            }
+            Inner::TwoQ(t) => {
+                let a1in: Vec<usize> = t.a1in.iter().copied().collect();
+                let a1out: Vec<u64> = t.a1out.iter().copied().collect();
+                fields.push(("a1in".into(), frames(&a1in)));
+                fields.push(("am".into(), frames(&t.am.order())));
+                fields.push(("a1out".into(), crate::snapshot::ticks_to_json(&a1out)));
+            }
+            Inner::Lfru(l) => {
+                let freq: Vec<u64> = l.freq.iter().map(|&f| f as u64).collect();
+                fields.push(("freq".into(), crate::snapshot::ticks_to_json(&freq)));
+                fields.push(("touched".into(), crate::snapshot::ticks_to_json(&l.touched)));
+                fields.push((
+                    "occupied".into(),
+                    Json::Arr(l.occupied.iter().map(|&o| Json::Bool(o)).collect()),
+                ));
+                fields.push(("clock".into(), Json::UInt(l.clock as u128)));
+                fields.push((
+                    "ops_since_aging".into(),
+                    Json::UInt(l.ops_since_aging as u128),
+                ));
+            }
+        }
+        Json::Obj(fields)
+    }
+
+    pub fn restore(
+        &mut self,
+        v: &crate::results::json::Json,
+        n_frames: usize,
+    ) -> anyhow::Result<()> {
+        let kind = v.field("kind")?.as_str()?;
+        if kind != self.kind.name() {
+            anyhow::bail!(
+                "policy snapshot is for '{kind}', this cache runs '{}'",
+                self.kind.name()
+            );
+        }
+        let frames = |v: &crate::results::json::Json| -> anyhow::Result<Vec<usize>> {
+            let raw = crate::snapshot::ticks_from_json(v)?;
+            let mut out = Vec::with_capacity(raw.len());
+            for f in raw {
+                if f >= n_frames as u64 {
+                    anyhow::bail!("policy frame {f} out of range (n_frames {n_frames})");
+                }
+                out.push(f as usize);
+            }
+            Ok(out)
+        };
+        self.inner = match self.kind {
+            PolicyKind::Direct => Inner::Direct,
+            PolicyKind::Lru => Inner::Lru(
+                LruList::from_order(n_frames, &frames(v.field("order")?)?)
+                    .map_err(|e| anyhow::anyhow!("policy snapshot: {e}"))?,
+            ),
+            PolicyKind::Fifo => {
+                let q = frames(v.field("queue")?)?;
+                let mut seen = vec![false; n_frames];
+                for &f in &q {
+                    if seen[f] {
+                        anyhow::bail!("policy snapshot queues frame {f} twice");
+                    }
+                    seen[f] = true;
+                }
+                Inner::Fifo(q.into_iter().collect())
+            }
+            PolicyKind::TwoQ => {
+                let mut t = TwoQ::new(n_frames);
+                let a1in = frames(v.field("a1in")?)?;
+                let am = frames(v.field("am")?)?;
+                for &f in &a1in {
+                    if t.home[f] != TwoQHome::None {
+                        anyhow::bail!("policy snapshot places frame {f} in two queues");
+                    }
+                    t.home[f] = TwoQHome::A1In;
+                }
+                for &f in &am {
+                    if t.home[f] != TwoQHome::None {
+                        anyhow::bail!("policy snapshot places frame {f} in two queues");
+                    }
+                    t.home[f] = TwoQHome::Am;
+                }
+                t.am = LruList::from_order(n_frames, &am)
+                    .map_err(|e| anyhow::anyhow!("policy snapshot: {e}"))?;
+                t.a1in = a1in.into_iter().collect();
+                let a1out = crate::snapshot::ticks_from_json(v.field("a1out")?)?;
+                if a1out.len() > t.a1out_cap {
+                    anyhow::bail!(
+                        "policy snapshot ghost queue has {} pages, cap is {}",
+                        a1out.len(),
+                        t.a1out_cap
+                    );
+                }
+                t.a1out = a1out.into_iter().collect();
+                Inner::TwoQ(t)
+            }
+            PolicyKind::Lfru => {
+                let mut l = Lfru::new(n_frames);
+                let freq = crate::snapshot::ticks_from_json(v.field("freq")?)?;
+                let touched = crate::snapshot::ticks_from_json(v.field("touched")?)?;
+                let occupied_json = v.field("occupied")?.as_arr()?;
+                if freq.len() != n_frames
+                    || touched.len() != n_frames
+                    || occupied_json.len() != n_frames
+                {
+                    anyhow::bail!(
+                        "policy snapshot metadata length mismatch (n_frames {n_frames})"
+                    );
+                }
+                for (i, f) in freq.iter().enumerate() {
+                    l.freq[i] = u32::try_from(*f)
+                        .map_err(|_| anyhow::anyhow!("policy frequency {f} exceeds u32"))?;
+                }
+                l.touched = touched;
+                for (i, o) in occupied_json.iter().enumerate() {
+                    l.occupied[i] = o.as_bool()?;
+                }
+                l.clock = v.field("clock")?.as_u64()?;
+                l.ops_since_aging = v.field("ops_since_aging")?.as_u64()?;
+                Inner::Lfru(l)
+            }
+        };
+        Ok(())
+    }
+
     /// The page in `frame` was evicted.
     pub fn on_evict(&mut self, frame: usize, page: u64) {
         match &mut self.inner {
@@ -528,6 +694,51 @@ mod tests {
         }
         assert_eq!(PolicyKind::parse("2Q"), Some(PolicyKind::TwoQ));
         assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn policy_snapshot_restore_preserves_eviction_order() {
+        // For every policy: warm up, snapshot, restore into a fresh
+        // policy, then drive both with the same stream — identical
+        // evictions and identical re-snapshots.
+        let mut seed = 0x5EEDu64;
+        let mut rand = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for kind in PolicyKind::ALL {
+            if kind == PolicyKind::Direct {
+                // Direct is stateless; snapshot carries only the kind tag.
+                let mut p = Policy::new(kind, 8);
+                let snap = p.snapshot();
+                p.restore(&snap, 8).unwrap();
+                continue;
+            }
+            let mut h = Harness::new(kind, 8);
+            for _ in 0..200 {
+                h.touch(rand() % 24);
+            }
+            let snap = h.policy.snapshot();
+            let mut back = Harness::new(kind, 8);
+            back.policy.restore(&snap, 8).unwrap();
+            back.pages = h.pages.clone();
+            assert_eq!(back.policy.snapshot().to_text(), snap.to_text());
+            for _ in 0..200 {
+                let page = rand() % 24;
+                assert_eq!(h.touch(page), back.touch(page), "{kind:?} page {page}");
+            }
+            assert_eq!(
+                back.policy.snapshot().to_text(),
+                h.policy.snapshot().to_text(),
+                "{kind:?}"
+            );
+
+            // Cross-kind restores are rejected.
+            let mut other = Policy::new(PolicyKind::Direct, 8);
+            assert!(other.restore(&snap, 8).is_err());
+        }
     }
 
     #[test]

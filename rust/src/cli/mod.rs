@@ -38,8 +38,10 @@ USAGE:
                     [--config <file>] [--set section.key=value ...]
   cxl-ssd-sim sweep --experiment <all|fig3|fig4|fig5|fig6|policies|mlp|replay|pool|mshr|fastmode>
                     [--jobs <N|0=auto>] [--mlp <N>] [--quick] [--out <dir>]
+                    [--shard <i/N>] [--checkpoint-every <N>]
                     [--artifacts <dir>]
   cxl-ssd-sim report --figures <dir>
+  cxl-ssd-sim report --merge <dir> [--merge <dir> ...] --out <dir>
   cxl-ssd-sim report --attribution <dir>
   cxl-ssd-sim report --baseline <dir> --candidate <dir> [--threshold <pct>]
   cxl-ssd-sim report --bench <dir> [--bench-out <file>]
@@ -101,6 +103,23 @@ BENCH_engine.json (the engine under test follows sys.engine:
 event-queue by default, --set sys.engine=tick for the legacy walker).
 'docs' prints a generated reference: --kind config
 (default, docs/CONFIG.md) or --kind lint (docs/LINT.md).
+
+Checkpoint & resume: 'sweep --out dir' writes each job's record to
+dir/jobs/ the moment it finishes; re-running the same sweep into the
+same --out skips every completed coordinate (a half-written record
+re-runs, a record from a different campaign/config is a hard error)
+and the finished campaign is byte-identical to a straight-through run.
+'--shard i/N' runs only the jobs whose global index is i mod N — the
+deterministic partition for spreading one campaign across hosts;
+'report --merge d0 --merge d1 ... --out m' reassembles the shard
+artifact dirs (each shard exactly once; overlaps, duplicates and gaps
+are rejected) into a merged set byte-identical to the unsharded sweep.
+'--checkpoint-every N' additionally snapshots long replay jobs every N
+requests (snapshot.every/snapshot.dir/snapshot.keep) so a killed job
+resumes mid-trace from its checkpoint file; checkpointed, resumed and
+straight-through runs all produce bit-identical records, locked at
+diff threshold 0 by 'report --baseline a --candidate b'. See DESIGN.md
+'Checkpoint & resume'.
 
 Observability: obs.trace_cap=N keeps the newest N request-lifecycle
 spans per replay job in a deterministic ring buffer (scheduled /
@@ -253,6 +272,24 @@ fn parse_jobs(args: &Args, cfg: &SimConfig) -> Result<usize> {
     Ok(if jobs == 0 { sweep::auto_jobs() } else { jobs })
 }
 
+/// `--shard index/count`: run only the jobs whose global index is
+/// `index` modulo `count` (see `experiments::CampaignOptions::shard`).
+fn parse_shard(raw: &str) -> Result<(usize, usize)> {
+    let (i, n) = raw
+        .split_once('/')
+        .with_context(|| format!("--shard '{raw}' (want index/count, e.g. 0/4)"))?;
+    let index = i
+        .parse::<usize>()
+        .with_context(|| format!("--shard index '{i}' (want an integer)"))?;
+    let count = n
+        .parse::<usize>()
+        .with_context(|| format!("--shard count '{n}' (want an integer)"))?;
+    if count == 0 || index >= count {
+        bail!("--shard {index}/{count}: want index < count and a nonzero count");
+    }
+    Ok((index, count))
+}
+
 fn parse_workload(args: &Args) -> Result<WorkloadKind> {
     let name = args.get("workload").context("--workload required")?;
     WorkloadKind::parse(name).with_context(|| format!("unknown workload '{name}'"))
@@ -344,7 +381,7 @@ pub fn main(argv: &[String]) -> Result<i32> {
             }
         }
         "sweep" => {
-            let cfg = build_config(&args)?;
+            let mut cfg = build_config(&args)?;
             let exp = args.get("experiment").context("--experiment required")?;
             let scale = if args.has("quick") {
                 ExpScale::quick()
@@ -354,6 +391,22 @@ pub fn main(argv: &[String]) -> Result<i32> {
             let jobs = parse_jobs(&args, &cfg)?;
             let artifacts = args.get("artifacts").unwrap_or(DEFAULT_ARTIFACTS);
             let out_dir = args.get("out");
+            let shard = args.get("shard").map(parse_shard).transpose()?;
+            // --checkpoint-every N: mid-job replay snapshots (snapshot.*
+            // keys); the checkpoint dir defaults into the artifact dir.
+            if let Some(raw) = args.get("checkpoint-every") {
+                let every: u64 = raw
+                    .parse()
+                    .with_context(|| format!("--checkpoint-every '{raw}' (want an integer)"))?;
+                cfg.snapshot.every = every;
+                if cfg.snapshot.dir.is_empty() {
+                    if let Some(dir) = out_dir {
+                        cfg.snapshot.dir = format!("{dir}/checkpoints");
+                    } else {
+                        bail!("--checkpoint-every needs --out <dir> (or snapshot.dir)");
+                    }
+                }
+            }
 
             // The serial ablations have no sweep jobs and emit no
             // artifact campaigns; they keep their own paths.
@@ -379,16 +432,22 @@ pub fn main(argv: &[String]) -> Result<i32> {
                 );
             }
 
-            let mut run = experiments::build_campaign(exp, &cfg, scale, jobs)?;
+            let plan = experiments::plan_campaign(exp, &cfg, scale)?;
+            let opts = experiments::CampaignOptions {
+                n_workers: jobs,
+                shard,
+                out: out_dir.map(std::path::Path::new),
+            };
+            let mut run = experiments::run_plan(&plan, &opts)?;
             match exp {
                 "all" => {
                     let mut sections = report::campaign_sections(&run.campaign);
-                    sections.push((
-                        "sweep summary (per job)".to_string(),
-                        run.summary
-                            .take()
-                            .context("the 'all' campaign always builds a summary table")?,
-                    ));
+                    // The summary only exists when every job ran in this
+                    // process (host seconds are unknowable for resumed
+                    // or sharded-out jobs).
+                    if let Some(summary) = run.summary.take() {
+                        sections.push(("sweep summary (per job)".to_string(), summary));
+                    }
                     print_sections(&sections);
                     println!(
                         "{} jobs, {} worker(s): {:.2}s wall vs {:.2}s serial cost ({:.1}x)",
@@ -407,13 +466,37 @@ pub fn main(argv: &[String]) -> Result<i32> {
             }
             if let Some(dir) = out_dir {
                 results::write_campaign_to(dir, &run.campaign)?;
-                println!(
-                    "wrote {} job artifact(s) to {dir}",
-                    run.campaign.records().count()
-                );
+                let total = plan.jobs.len();
+                let held = run.campaign.records().count();
+                match run.campaign.shard {
+                    Some((index, count)) => println!(
+                        "wrote shard {index}/{count}: {held} of {total} job \
+                         artifact(s) to {dir} (reassemble with report --merge)"
+                    ),
+                    None => println!("wrote {held} job artifact(s) to {dir}"),
+                }
             }
         }
         "report" => {
+            let merge_dirs = args.get_all("merge");
+            if !merge_dirs.is_empty() {
+                let shards = merge_dirs
+                    .iter()
+                    .map(|d| results::load_campaign_from(d))
+                    .collect::<Result<Vec<_>>>()?;
+                let merged = results::merge_campaigns(&shards)?;
+                let out = args
+                    .get("out")
+                    .context("--merge needs --out <dir> for the merged artifact set")?;
+                results::write_campaign_to(out, &merged)?;
+                println!(
+                    "merged {} shard(s) of '{}' into {out} ({} job artifact(s))",
+                    shards.len(),
+                    merged.experiment,
+                    merged.records().count()
+                );
+                return Ok(0);
+            }
             if let Some(dir) = args.get("figures") {
                 let campaign = results::load_campaign_from(dir)?;
                 println!(
@@ -477,6 +560,7 @@ pub fn main(argv: &[String]) -> Result<i32> {
             let base_dir = args.get("baseline").context(
                 "report needs --figures <dir>, --attribution <dir>, \
                  --bench <dir>, --bench-engine, \
+                 --merge <dir>... --out <dir>, \
                  or --baseline <dir> --candidate <dir>",
             )?;
             let cand_dir = args

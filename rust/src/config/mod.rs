@@ -129,6 +129,11 @@ pub struct SimConfig {
     /// ring capacity and time-series sampling epoch. Both default to 0
     /// (off) so hot paths and existing artifacts are unperturbed.
     pub obs: crate::obs::ObsConfig,
+    /// Checkpoint knobs (`snapshot.*` keys): mid-job checkpoint cadence,
+    /// file retention and directory for long replay jobs. Defaults to
+    /// off so hot paths and existing artifacts are unperturbed (see
+    /// DESIGN.md "Checkpoint & resume").
+    pub snapshot: crate::snapshot::SnapshotConfig,
 }
 
 impl Default for SimConfig {
@@ -247,6 +252,9 @@ impl SimConfig {
             ("replay", "closed") => self.replay_closed = v.as_bool()?,
             ("obs", "trace_cap") => self.obs.trace_cap = v.as_u64()? as usize,
             ("obs", "sample_ns") => self.obs.sample_ns = v.as_u64()?,
+            ("snapshot", "every") => self.snapshot.every = v.as_u64()?,
+            ("snapshot", "keep") => self.snapshot.keep = v.as_bool()?,
+            ("snapshot", "dir") => self.snapshot.dir = v.as_str()?,
             _ => return Err(bad()),
         }
         Ok(())
@@ -328,6 +336,15 @@ mod tests {
         c.apply_override("obs.sample_ns=1000").unwrap();
         assert_eq!(c.obs.trace_cap, 4096);
         assert_eq!(c.obs.sample_ns, 1000);
+        assert_eq!(c.snapshot.every, 0, "checkpointing off by default");
+        assert!(!c.snapshot.keep);
+        assert_eq!(c.snapshot.dir, "");
+        c.apply_override("snapshot.every=512").unwrap();
+        c.apply_override("snapshot.keep=true").unwrap();
+        c.apply_override("snapshot.dir=\"/tmp/ckpt\"").unwrap();
+        assert_eq!(c.snapshot.every, 512);
+        assert!(c.snapshot.keep);
+        assert_eq!(c.snapshot.dir, "/tmp/ckpt");
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub fn table1() -> SimConfig {
         replay_closed: false,
         engine: crate::sim::EngineMode::Event,
         obs: crate::obs::ObsConfig::default(),
+        snapshot: crate::snapshot::SnapshotConfig::default(),
     }
 }
 

@@ -272,6 +272,22 @@ pub static REGISTRY: &[KeyDoc] = &[
         "time-series sampling epoch in ns; 0 = sampling off",
         |c| int(c.obs.sample_ns)
     ),
+    // --- snapshot ---
+    key!(
+        "snapshot.every",
+        "replay requests between mid-job checkpoints; 0 = checkpointing off",
+        |c| int(c.snapshot.every)
+    ),
+    key!(
+        "snapshot.keep",
+        "keep each job's checkpoint file after it completes",
+        |c| ConfigValue::Bool(c.snapshot.keep)
+    ),
+    key!(
+        "snapshot.dir",
+        "checkpoint directory; empty = off (sweep --out defaults it to OUT/checkpoints)",
+        |c| ConfigValue::Str(c.snapshot.dir.clone())
+    ),
 ];
 
 /// Dump a resolved config as `(key, value)` string pairs, in registry
@@ -423,7 +439,7 @@ mod tests {
         }
         let sections = [
             "[cpu]", "[dram]", "[pmem]", "[ssd]", "[dcache]", "[cxl]", "[pool]", "[sys]",
-            "[replay]", "[obs]",
+            "[replay]", "[obs]", "[snapshot]",
         ];
         for section in sections {
             assert!(md.contains(section), "CONFIG.md misses section {section}");

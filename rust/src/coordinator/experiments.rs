@@ -186,93 +186,123 @@ fn fig_heading(id: &str) -> &'static str {
     }
 }
 
-/// Build a section's records from executed jobs (records are keyed by
-/// their index in expansion order — the sweep coordinate — never by
-/// completion order; `execute` already returns index-aligned outputs).
-fn section_records(
-    experiment: &str,
-    id: &str,
-    jobs: &[RunJob],
-    outs: &[RunOutput],
-) -> Vec<RunRecord> {
-    jobs.iter()
-        .zip(outs.iter())
-        .enumerate()
-        .map(|(i, (job, out))| results::record_from_job(experiment, id, i, job, out))
-        .collect()
+/// One planned campaign section: the skeleton [`run_plan`] fills with
+/// records once the section's jobs run (or resume from artifacts).
+pub struct SectionPlan {
+    pub id: String,
+    pub kind: SectionKind,
+    pub heading: String,
 }
 
-fn single_section_campaign(
-    experiment: &str,
-    kind: SectionKind,
-    heading: &str,
-    quick: bool,
-    jobs: Vec<RunJob>,
-    n_workers: usize,
-) -> CampaignRun {
-    let (outs, timing) = sweep::execute_timed(&jobs, n_workers);
-    let mut campaign = Campaign::new(experiment, quick);
-    campaign.sections.push(Section {
-        id: experiment.to_string(),
-        kind,
-        heading: heading.to_string(),
-        records: section_records(experiment, experiment, &jobs, &outs),
-    });
-    CampaignRun {
-        campaign,
-        timing,
-        summary: None,
+/// A fully expanded campaign before execution: the global job list plus
+/// the coordinate map and section skeletons.
+///
+/// The plan is a pure function of `(experiment, config, scale)` —
+/// re-building it in a later process reproduces the exact same jobs in
+/// the exact same order, which is what makes `--shard i/N` partitioning
+/// (jobs are picked by *global* index, so coordinates, seeds and record
+/// bytes are invariant under sharding) and `--out` resume validation
+/// (a record on disk must match the planned job it claims to be) sound.
+pub struct CampaignPlan {
+    pub experiment: String,
+    pub quick: bool,
+    pub jobs: Vec<RunJob>,
+    /// Per-global-job coordinate: `(section position, record index)`.
+    pub coords: Vec<(usize, usize)>,
+    pub sections: Vec<SectionPlan>,
+    /// Extra record tags per global job (pool row labels); appended
+    /// after the tags [`results::record_from_job`] derives itself.
+    pub tags: Vec<Vec<(String, String)>>,
+    /// Build the per-job summary table (the `all` campaign). Host
+    /// seconds are only known for jobs that ran in this process, so a
+    /// sharded or resumed run yields no summary.
+    pub with_summary: bool,
+}
+
+impl CampaignPlan {
+    fn new(experiment: &str, quick: bool) -> Self {
+        CampaignPlan {
+            experiment: experiment.to_string(),
+            quick,
+            jobs: Vec::new(),
+            coords: Vec::new(),
+            sections: Vec::new(),
+            tags: Vec::new(),
+            with_summary: false,
+        }
+    }
+
+    /// Append a section skeleton with `jobs` as its records, in order.
+    fn push_section(&mut self, id: &str, kind: SectionKind, heading: &str, jobs: Vec<RunJob>) {
+        let si = self.sections.len();
+        self.sections.push(SectionPlan {
+            id: id.to_string(),
+            kind,
+            heading: heading.to_string(),
+        });
+        for (idx, job) in jobs.into_iter().enumerate() {
+            self.jobs.push(job);
+            self.coords.push((si, idx));
+            self.tags.push(Vec::new());
+        }
     }
 }
 
-/// Build and execute the named experiment as an artifact campaign —
-/// the single dispatch the CLI's `sweep` command (and `--out` artifact
-/// emission) goes through. Errors on experiments that have no sweep
-/// jobs (`mshr`, `fastmode` — serial ablations).
-pub fn build_campaign(
-    exp: &str,
-    base: &SimConfig,
-    scale: ExpScale,
-    n_workers: usize,
-) -> Result<CampaignRun> {
+/// How to execute a [`CampaignPlan`] (see [`run_plan`]).
+#[derive(Default)]
+pub struct CampaignOptions<'a> {
+    /// Worker threads draining the job list (0/1 = serial).
+    pub n_workers: usize,
+    /// `Some((index, count))`: run only the jobs whose *global* index is
+    /// `index` modulo `count` — the `sweep --shard index/count`
+    /// partition. The resulting campaign carries the shard stamp;
+    /// `report --merge` reassembles the full artifact set.
+    pub shard: Option<(usize, usize)>,
+    /// Artifact directory for incremental writes and resume: every
+    /// finished job's record lands in `out/jobs/` immediately, and jobs
+    /// whose record already sits there (from an interrupted run) are
+    /// loaded instead of re-run.
+    pub out: Option<&'a std::path::Path>,
+}
+
+/// Expand the named experiment into a [`CampaignPlan`] without running
+/// anything. Errors on experiments that have no sweep jobs (`mshr`,
+/// `fastmode` — serial ablations).
+pub fn plan_campaign(exp: &str, base: &SimConfig, scale: ExpScale) -> Result<CampaignPlan> {
     match exp {
-        "fig3" => Ok(fig_workload_campaign(
+        "fig3" => Ok(fig_workload_plan(
             "fig3",
             SectionKind::Stream,
             base,
             scale.stream_spec(),
             scale.quick,
-            n_workers,
         )),
-        "fig4" => Ok(fig_workload_campaign(
+        "fig4" => Ok(fig_workload_plan(
             "fig4",
             SectionKind::Membench,
             base,
             scale.membench_spec(),
             scale.quick,
-            n_workers,
         )),
-        "fig5" => Ok(fig_workload_campaign(
+        "fig5" => Ok(fig_workload_plan(
             "fig5",
             SectionKind::Viper,
             base,
             scale.viper_spec(216),
             scale.quick,
-            n_workers,
         )),
-        "fig6" => Ok(fig_workload_campaign(
+        "fig6" => Ok(fig_workload_plan(
             "fig6",
             SectionKind::Viper,
             base,
             scale.viper_spec(532),
             scale.quick,
-            n_workers,
         )),
-        "policies" => Ok(policy_campaign(base, scale, 216, n_workers)),
-        "mlp" => Ok(mlp_campaign(base, scale, n_workers)),
-        "replay" => Ok(replay_campaign_build(base, scale, n_workers)),
-        "pool" => Ok(pool_campaign_build(base, scale, n_workers)),
-        "all" => Ok(all_campaign(base, scale, n_workers)),
+        "policies" => Ok(policy_plan(base, scale, 216)),
+        "mlp" => Ok(mlp_plan(base, scale)),
+        "replay" => Ok(replay_plan(base, scale)),
+        "pool" => Ok(pool_plan(base, scale)),
+        "all" => Ok(all_plan(base, scale)),
         "mshr" | "fastmode" => bail!(
             "'{exp}' is a serial ablation without sweep jobs; it does not \
              emit artifact campaigns"
@@ -281,47 +311,228 @@ pub fn build_campaign(
     }
 }
 
+/// Build and execute the named experiment as an artifact campaign —
+/// the single dispatch in-process callers (benches, tests, the `*_cfg`
+/// wrappers) go through. The CLI's `sweep` command uses
+/// [`plan_campaign`] + [`run_plan`] directly so it can pass shard and
+/// resume options.
+pub fn build_campaign(
+    exp: &str,
+    base: &SimConfig,
+    scale: ExpScale,
+    n_workers: usize,
+) -> Result<CampaignRun> {
+    let plan = plan_campaign(exp, base, scale)?;
+    run_plan(
+        &plan,
+        &CampaignOptions {
+            n_workers,
+            ..CampaignOptions::default()
+        },
+    )
+}
+
+/// Flatten one executed job into its planned record (coordinate keys
+/// plus the plan's extra tags).
+fn fresh_record(plan: &CampaignPlan, i: usize, out: &RunOutput) -> RunRecord {
+    let (si, idx) = plan.coords[i];
+    let mut rec = results::record_from_job(
+        &plan.experiment,
+        &plan.sections[si].id,
+        idx,
+        &plan.jobs[i],
+        out,
+    );
+    rec.tags.extend(plan.tags[i].iter().cloned());
+    rec
+}
+
+/// A resumed record must match the planned job on every identifying
+/// axis — coordinate, device, workload, policy, window, seed and the
+/// full resolved config. Anything else means the `--out` directory
+/// holds a different campaign, and silently mixing the two would
+/// corrupt the artifact set.
+fn check_resumed(
+    plan: &CampaignPlan,
+    i: usize,
+    rec: &RunRecord,
+    path: &std::path::Path,
+) -> Result<()> {
+    let (si, idx) = plan.coords[i];
+    let job = &plan.jobs[i];
+    let policy = job
+        .policy
+        .map_or("-".to_string(), |p| p.name().to_string());
+    let ok = rec.experiment == plan.experiment
+        && rec.section == plan.sections[si].id
+        && rec.index == idx
+        && rec.device == job.device.name()
+        && rec.workload == job.workload.label()
+        && rec.policy == policy
+        && rec.mlp == job.cfg.mlp
+        && rec.seed == job.cfg.seed
+        && rec.config == crate::config::dump_kv(&job.cfg);
+    if !ok {
+        bail!(
+            "resume: {} holds a record for a different campaign or \
+             configuration than the one being resumed (delete the \
+             artifact directory, or re-run with the original flags)",
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+/// Execute a [`CampaignPlan`] under the given options.
+///
+/// Jobs sharded out by `opts.shard` are skipped entirely (their
+/// coordinates are simply absent from the resulting sections); jobs
+/// whose record already exists under `opts.out` are loaded and
+/// verified instead of re-run (a half-written record from an
+/// interrupted sweep fails to parse and re-runs); everything else runs
+/// on the sweep engine, with each finished record written to
+/// `out/jobs/` the moment it completes. Fresh, resumed and merged
+/// records are byte-identical by construction — seeds and coordinates
+/// come from the plan, never from execution order or process history.
+pub fn run_plan(plan: &CampaignPlan, opts: &CampaignOptions) -> Result<CampaignRun> {
+    use std::sync::Mutex;
+
+    let n = plan.jobs.len();
+    debug_assert_eq!(plan.coords.len(), n);
+    debug_assert_eq!(plan.tags.len(), n);
+    if let Some((index, count)) = opts.shard {
+        if count == 0 || index >= count {
+            bail!("--shard {index}/{count}: want index < count and a nonzero count");
+        }
+    }
+    let in_shard = |i: usize| opts.shard.map_or(true, |(index, count)| i % count == index);
+
+    // Resume scan: a coordinate whose record already sits in
+    // `out/jobs/` loads from disk instead of re-running.
+    let mut resumed: Vec<Option<RunRecord>> = Vec::with_capacity(n);
+    let mut mask = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut have = None;
+        if in_shard(i) {
+            if let Some(dir) = opts.out {
+                let (si, idx) = plan.coords[i];
+                let path = dir.join("jobs").join(format!(
+                    "{}-{:03}-{}.json",
+                    plan.sections[si].id,
+                    idx,
+                    plan.jobs[i].device.name()
+                ));
+                if let Ok(rec) = results::read_record(&path) {
+                    check_resumed(plan, i, &rec, &path)?;
+                    have = Some(rec);
+                }
+            }
+        }
+        mask.push(in_shard(i) && have.is_none());
+        resumed.push(have);
+    }
+
+    // Incremental artifact sink: each record is written as its job
+    // finishes (completion order — the file name alone keys the
+    // coordinate), so an interrupted sweep leaves a resumable prefix.
+    let write_errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let on_done = |i: usize, out: &RunOutput| {
+        if let Some(dir) = opts.out {
+            if let Err(e) = results::write_record(dir, &fresh_record(plan, i, out)) {
+                if let Ok(mut errs) = write_errors.lock() {
+                    errs.push(format!("{e:#}"));
+                }
+            }
+        }
+    };
+    let (outs, timing) =
+        sweep::execute_masked_timed(&plan.jobs, &mask, opts.n_workers, &on_done);
+    let write_errors = match write_errors.into_inner() {
+        Ok(errs) => errs,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let Some(first) = write_errors.first() {
+        bail!("incremental artifact write failed: {first}");
+    }
+
+    // Assemble sections: fresh outputs where we ran, disk records where
+    // we resumed. Global job order sorts records by coordinate within
+    // each section by construction.
+    let mut per_section: Vec<Vec<RunRecord>> =
+        plan.sections.iter().map(|_| Vec::new()).collect();
+    let mut all_fresh = true;
+    for (i, prior) in resumed.into_iter().enumerate() {
+        let (si, _) = plan.coords[i];
+        match (&outs[i], prior) {
+            (Some(out), _) => per_section[si].push(fresh_record(plan, i, out)),
+            (None, Some(rec)) => {
+                all_fresh = false;
+                per_section[si].push(rec);
+            }
+            (None, None) => all_fresh = false, // sharded out
+        }
+    }
+    let summary = if plan.with_summary && all_fresh {
+        let flat: Vec<RunOutput> = outs.into_iter().flatten().collect();
+        Some(sweep::summary_table(&plan.jobs, &flat))
+    } else {
+        None
+    };
+
+    let mut campaign = Campaign::new(plan.experiment.clone(), plan.quick);
+    campaign.shard = opts.shard;
+    for (sp, records) in plan.sections.iter().zip(per_section) {
+        campaign.sections.push(Section {
+            id: sp.id.clone(),
+            kind: sp.kind,
+            heading: sp.heading.clone(),
+            records,
+        });
+    }
+    Ok(CampaignRun {
+        campaign,
+        timing,
+        summary,
+    })
+}
+
 /// One workload across the five figure devices (Figs 3-6).
-fn fig_workload_campaign(
+fn fig_workload_plan(
     id: &str,
     kind: SectionKind,
     base: &SimConfig,
     workload: WorkloadSpec,
     quick: bool,
-    n_workers: usize,
-) -> CampaignRun {
+) -> CampaignPlan {
     let jobs = SweepSpec::new(base.clone())
         .devices(FIG_DEVICES.to_vec())
         .workloads(vec![workload])
         .expand();
-    single_section_campaign(id, kind, fig_heading(id), quick, jobs, n_workers)
+    let mut plan = CampaignPlan::new(id, quick);
+    plan.push_section(id, kind, fig_heading(id), jobs);
+    plan
 }
 
-fn policy_campaign(
-    base: &SimConfig,
-    scale: ExpScale,
-    record_bytes: u64,
-    n_workers: usize,
-) -> CampaignRun {
+fn policy_plan(base: &SimConfig, scale: ExpScale, record_bytes: u64) -> CampaignPlan {
     let jobs = SweepSpec::new(base.clone())
         .devices(vec![DeviceKind::CxlSsdCached])
         .workloads(vec![scale.policy_viper_spec(record_bytes)])
         .policies(PolicyKind::ALL.iter().map(|&p| Some(p)).collect())
         .expand();
-    single_section_campaign(
+    let mut plan = CampaignPlan::new("policies", scale.quick);
+    plan.push_section(
         "policies",
         SectionKind::Policy,
         fig_heading("policies"),
-        scale.quick,
         jobs,
-        n_workers,
-    )
+    );
+    plan
 }
 
 /// MLP values the bandwidth-saturation sweep walks (`--experiment mlp`).
 pub const MLP_SWEEP: [usize; 5] = [1, 2, 4, 8, 16];
 
-fn mlp_campaign(base: &SimConfig, scale: ExpScale, n_workers: usize) -> CampaignRun {
+fn mlp_plan(base: &SimConfig, scale: ExpScale) -> CampaignPlan {
     let mut jobs = Vec::new();
     for &mlp in &MLP_SWEEP {
         let mut cfg = base.clone();
@@ -333,18 +544,16 @@ fn mlp_campaign(base: &SimConfig, scale: ExpScale, n_workers: usize) -> Campaign
                 .expand(),
         );
     }
-    single_section_campaign(
-        "mlp",
-        SectionKind::Mlp,
-        fig_heading("mlp"),
-        scale.quick,
-        jobs,
-        n_workers,
-    )
+    let mut plan = CampaignPlan::new("mlp", scale.quick);
+    plan.push_section("mlp", SectionKind::Mlp, fig_heading("mlp"), jobs);
+    plan
 }
 
-fn replay_campaign_build(base: &SimConfig, scale: ExpScale, n_workers: usize) -> CampaignRun {
+fn replay_plan(base: &SimConfig, scale: ExpScale) -> CampaignPlan {
     // Capture the post-cache device stream once; every job shares it.
+    // The capture itself is deterministic (Table-I config + fixed seed),
+    // so a resumed or sharded invocation re-captures the same trace and
+    // the plan's job identities line up across processes.
     let (_, captured) =
         sweep::run_spec(DeviceKind::CxlSsdCached, &scale.viper_spec(216), base, true);
     // simlint: allow(unwrap-in-lib): run_spec(capture=true) always returns a trace
@@ -363,27 +572,21 @@ fn replay_campaign_build(base: &SimConfig, scale: ExpScale, n_workers: usize) ->
             },
         ])
         .expand();
-    single_section_campaign(
-        "replay",
-        SectionKind::Replay,
-        fig_heading("replay"),
-        scale.quick,
-        jobs,
-        n_workers,
-    )
+    let mut plan = CampaignPlan::new("replay", scale.quick);
+    plan.push_section("replay", SectionKind::Replay, fig_heading("replay"), jobs);
+    plan
 }
 
 /// Member counts the pool bandwidth-scaling sweep walks
 /// (`--experiment pool`).
 pub const POOL_SCALING: [usize; 3] = [1, 2, 4];
 
-fn pool_campaign_build(base: &SimConfig, scale: ExpScale, n_workers: usize) -> CampaignRun {
-    let mut jobs = Vec::new();
-
+fn pool_plan(base: &SimConfig, scale: ExpScale) -> CampaignPlan {
     // Part 1: bandwidth scaling.
+    let mut bw_jobs = Vec::new();
     let mut bw_base = base.clone();
     bw_base.mlp = 16;
-    jobs.extend(
+    bw_jobs.extend(
         SweepSpec::new(bw_base.clone())
             .devices(vec![DeviceKind::CxlDram])
             .workloads(vec![scale.stream_spec()])
@@ -399,14 +602,14 @@ fn pool_campaign_build(base: &SimConfig, scale: ExpScale, n_workers: usize) -> C
             interleave: InterleaveMode::Line,
             ..PoolConfig::default()
         };
-        jobs.extend(
+        bw_jobs.extend(
             SweepSpec::new(cfg)
                 .devices(vec![DeviceKind::Pooled])
                 .workloads(vec![scale.stream_spec()])
                 .expand(),
         );
     }
-    let n_bw = jobs.len();
+    let n_bw = bw_jobs.len();
 
     // Part 2: tiering.
     let mode = ReplayMode::from_config(base);
@@ -430,79 +633,74 @@ fn pool_campaign_build(base: &SimConfig, scale: ExpScale, n_workers: usize) -> C
     flat.pool.tiering = false;
     let mut mono = base.clone();
     mono.mlp = 16;
-    jobs.extend(
+    let mut tier_jobs = Vec::new();
+    tier_jobs.extend(
         SweepSpec::new(tiered)
             .devices(vec![DeviceKind::Pooled])
             .workloads(vec![replay_wl.clone()])
             .expand(),
     );
-    jobs.extend(
+    tier_jobs.extend(
         SweepSpec::new(flat)
             .devices(vec![DeviceKind::Pooled])
             .workloads(vec![replay_wl.clone()])
             .expand(),
     );
-    jobs.extend(
+    tier_jobs.extend(
         SweepSpec::new(mono)
             .devices(vec![DeviceKind::CxlSsdCached, DeviceKind::CxlSsd])
             .workloads(vec![replay_wl])
             .expand(),
     );
 
-    let (outs, timing) = sweep::execute_timed(&jobs, n_workers);
-
-    // Row labels ride as record tags: the renderers (live and
-    // artifact-loaded alike) print them without re-deriving campaign
-    // structure.
-    let mut bw_records = section_records("pool", "pool-bw", &jobs[..n_bw], &outs[..n_bw]);
-    let mut bw_labels = vec!["cxl-dram (bare)".to_string()];
-    bw_labels.extend(POOL_SCALING.iter().map(|n| format!("pool x{n}")));
-    let mut bw_members = vec!["-".to_string()];
-    bw_members.extend(POOL_SCALING.iter().map(|n| n.to_string()));
-    for (i, r) in bw_records.iter_mut().enumerate() {
-        r.tags.push(("row_label".into(), bw_labels[i].clone()));
-        r.tags.push(("members".into(), bw_members[i].clone()));
-    }
-
-    let mut tier_records = section_records("pool", "pool-tier", &jobs[n_bw..], &outs[n_bw..]);
-    // Re-index: section_records numbered them relative to the slice
-    // start already (enumerate over the slice), so indexes are 0-based
-    // per section as required.
-    let tier_labels = ["pool tiered", "pool flat", "cxl-ssd-cache", "cxl-ssd"];
-    for (i, r) in tier_records.iter_mut().enumerate() {
-        r.tags.push(("row_label".into(), tier_labels[i].to_string()));
-    }
-
-    let mut campaign = Campaign::new("pool", scale.quick);
-    campaign.sections.push(Section {
-        id: "pool-bw".into(),
-        kind: SectionKind::PoolBandwidth,
-        heading: "Pool bandwidth scaling: stream triad at mlp=16, \
-                  line-interleaved cxl-dram pools"
-            .into(),
-        records: bw_records,
-    });
-    campaign.sections.push(Section {
-        id: "pool-tier".into(),
-        kind: SectionKind::PoolTiering,
-        heading: format!(
+    let mut plan = CampaignPlan::new("pool", scale.quick);
+    plan.push_section(
+        "pool-bw",
+        SectionKind::PoolBandwidth,
+        "Pool bandwidth scaling: stream triad at mlp=16, \
+         line-interleaved cxl-dram pools",
+        bw_jobs,
+    );
+    plan.push_section(
+        "pool-tier",
+        SectionKind::PoolTiering,
+        &format!(
             "Pool tiering: zipfian {}-loop replay, page-interleaved \
              cxl-dram+cxl-ssd pool vs monolithic CXL-SSD",
             mode.name()
         ),
-        records: tier_records,
-    });
-    CampaignRun {
-        campaign,
-        timing,
-        summary: None,
+        tier_jobs,
+    );
+
+    // Row labels ride as record tags: the renderers (live and
+    // artifact-loaded alike) print them without re-deriving campaign
+    // structure.
+    let mut rows = vec![("cxl-dram (bare)".to_string(), Some("-".to_string()))];
+    rows.extend(
+        POOL_SCALING
+            .iter()
+            .map(|n| (format!("pool x{n}"), Some(n.to_string()))),
+    );
+    rows.extend(
+        ["pool tiered", "pool flat", "cxl-ssd-cache", "cxl-ssd"]
+            .iter()
+            .map(|l| (l.to_string(), None)),
+    );
+    debug_assert_eq!(rows.len(), plan.jobs.len());
+    debug_assert_eq!(n_bw, 1 + POOL_SCALING.len());
+    for (i, (label, members)) in rows.into_iter().enumerate() {
+        plan.tags[i].push(("row_label".into(), label));
+        if let Some(m) = members {
+            plan.tags[i].push(("members".into(), m));
+        }
     }
+    plan
 }
 
-/// Figs 3-6 plus the §III-C policy sweep as ONE job list drained by
-/// `n_workers` threads — the scaling path for full experiment
-/// campaigns (25 jobs; a multi-core host overlaps them).
-fn all_campaign(base: &SimConfig, scale: ExpScale, n_workers: usize) -> CampaignRun {
+/// Figs 3-6 plus the §III-C policy sweep as ONE job list — the scaling
+/// path for full experiment campaigns (25 jobs; a multi-core host
+/// overlaps them, `--shard` splits them across hosts).
+fn all_plan(base: &SimConfig, scale: ExpScale) -> CampaignPlan {
     let fig_spec = SweepSpec::new(base.clone())
         .devices(FIG_DEVICES.to_vec())
         .workloads(vec![
@@ -519,61 +717,49 @@ fn all_campaign(base: &SimConfig, scale: ExpScale, n_workers: usize) -> Campaign
     let mut jobs = fig_spec.expand();
     let n_fig_jobs = jobs.len();
     jobs.extend(pol_spec.expand());
-    let (outs, timing) = sweep::execute_timed(&jobs, n_workers);
 
-    // Slice the one job list back into per-figure sections, preserving
-    // job order within each (device-major — the figure row order).
-    let select = |kind: WorkloadKind| -> (Vec<&RunJob>, Vec<&RunOutput>) {
-        let mut js = Vec::new();
-        let mut os = Vec::new();
-        for (job, out) in jobs[..n_fig_jobs].iter().zip(outs[..n_fig_jobs].iter()) {
-            if job.workload.kind() == kind {
-                js.push(job);
-                os.push(out);
-            }
-        }
-        (js, os)
-    };
-    let section_for = |id: &str, kind: SectionKind, wl: WorkloadKind| -> Section {
-        let (js, os) = select(wl);
-        Section {
+    let mut plan = CampaignPlan::new("all", scale.quick);
+    for (id, kind) in [
+        ("fig3", SectionKind::Stream),
+        ("fig4", SectionKind::Membench),
+        ("fig5", SectionKind::Viper),
+        ("fig6", SectionKind::Viper),
+        ("policies", SectionKind::Policy),
+    ] {
+        plan.sections.push(SectionPlan {
             id: id.to_string(),
             kind,
             heading: fig_heading(id).to_string(),
-            records: js
-                .iter()
-                .zip(os.iter())
-                .enumerate()
-                .map(|(i, (job, out))| results::record_from_job("all", id, i, job, out))
-                .collect(),
-        }
-    };
-
-    let mut campaign = Campaign::new("all", scale.quick);
-    campaign
-        .sections
-        .push(section_for("fig3", SectionKind::Stream, WorkloadKind::Stream));
-    campaign
-        .sections
-        .push(section_for("fig4", SectionKind::Membench, WorkloadKind::Membench));
-    campaign
-        .sections
-        .push(section_for("fig5", SectionKind::Viper, WorkloadKind::Viper216));
-    campaign
-        .sections
-        .push(section_for("fig6", SectionKind::Viper, WorkloadKind::Viper532));
-    campaign.sections.push(Section {
-        id: "policies".into(),
-        kind: SectionKind::Policy,
-        heading: fig_heading("policies").to_string(),
-        records: section_records("all", "policies", &jobs[n_fig_jobs..], &outs[n_fig_jobs..]),
-    });
-
-    CampaignRun {
-        campaign,
-        timing,
-        summary: Some(sweep::summary_table(&jobs, &outs)),
+        });
     }
+    // Coordinate map: the one job list slices back into per-figure
+    // sections by workload kind, preserving job order within each
+    // (device-major — the figure row order); the policy jobs (which
+    // also run a Viper-216 spec, so position alone disambiguates) fill
+    // the fifth section.
+    let order = [
+        WorkloadKind::Stream,
+        WorkloadKind::Membench,
+        WorkloadKind::Viper216,
+        WorkloadKind::Viper532,
+    ];
+    let mut counters = [0usize; 5];
+    for (i, job) in jobs.iter().enumerate() {
+        let si = if i < n_fig_jobs {
+            let kind = job.workload.kind();
+            let pos = order.iter().position(|k| *k == kind);
+            debug_assert!(pos.is_some(), "fig job with unplanned workload {kind:?}");
+            pos.unwrap_or(order.len())
+        } else {
+            4
+        };
+        plan.coords.push((si, counters[si]));
+        counters[si] += 1;
+        plan.tags.push(Vec::new());
+    }
+    plan.jobs = jobs;
+    plan.with_summary = true;
+    plan
 }
 
 // ------------------------------------------------- raw-tuple extraction
@@ -776,7 +962,13 @@ pub fn policy_sweep_cfg(
     scale: ExpScale,
     n_workers: usize,
 ) -> (Table, Vec<(PolicyKind, f64, f64)>) {
-    let run = policy_campaign(base, scale, record_bytes, n_workers);
+    let plan = policy_plan(base, scale, record_bytes);
+    let opts = CampaignOptions {
+        n_workers,
+        ..CampaignOptions::default()
+    };
+    // simlint: allow(unwrap-in-lib): run_plan without shard/out options has no failure paths
+    let run = run_plan(&plan, &opts).expect("in-process campaign");
     let sec = &run.campaign.sections[0];
     (report::section_table(sec), policy_raw(&sec.records))
 }
@@ -1211,6 +1403,65 @@ mod tests {
         // Paired comparison: every device job replays the same stream,
         // so all records carry the same coordinate-derived seed.
         assert!(sec.records.iter().all(|r| r.seed == sec.records[0].seed));
+    }
+
+    #[test]
+    fn sharded_runs_merge_to_the_unsharded_campaign() {
+        let cfg = presets::small_test();
+        let full = build_campaign("fig4", &cfg, ExpScale::quick(), 2)
+            .unwrap()
+            .campaign;
+        let plan = plan_campaign("fig4", &cfg, ExpScale::quick()).unwrap();
+        let shards: Vec<_> = (0..2)
+            .map(|i| {
+                run_plan(
+                    &plan,
+                    &CampaignOptions {
+                        n_workers: 1,
+                        shard: Some((i, 2)),
+                        ..CampaignOptions::default()
+                    },
+                )
+                .unwrap()
+                .campaign
+            })
+            .collect();
+        assert_eq!(shards[0].shard, Some((0, 2)));
+        // Shard 0 of 5 fig4 jobs holds global indices 0, 2, 4.
+        assert_eq!(shards[0].sections[0].records.len(), 3);
+        assert_eq!(shards[1].sections[0].records.len(), 2);
+        let merged = results::merge_campaigns(&shards).unwrap();
+        assert_eq!(merged, full);
+    }
+
+    #[test]
+    fn run_plan_rejects_bad_shard_spec() {
+        let cfg = presets::small_test();
+        let plan = plan_campaign("fig4", &cfg, ExpScale::quick()).unwrap();
+        let opts = CampaignOptions {
+            n_workers: 1,
+            shard: Some((2, 2)),
+            ..CampaignOptions::default()
+        };
+        assert!(run_plan(&plan, &opts).is_err());
+    }
+
+    #[test]
+    fn all_plan_coordinates_cover_every_section_in_order() {
+        let cfg = presets::small_test();
+        let plan = plan_campaign("all", &cfg, ExpScale::quick()).unwrap();
+        assert_eq!(plan.sections.len(), 5);
+        assert_eq!(plan.coords.len(), plan.jobs.len());
+        assert!(plan.with_summary);
+        // Within each section, record indices must be contiguous from 0
+        // in global job order — the invariant sharding relies on.
+        let mut next = vec![0usize; plan.sections.len()];
+        for &(si, idx) in &plan.coords {
+            assert_eq!(idx, next[si]);
+            next[si] += 1;
+        }
+        // 5 devices x 4 workloads, then 5 policies on one device.
+        assert_eq!(next, vec![5, 5, 5, 5, 5]);
     }
 
     #[test]

@@ -188,25 +188,56 @@ pub fn run_spec(
         let wall = Instant::now();
         let trace = source.materialize(cfg.seed);
         let mut dev = Instrumented::new(build_device(device, cfg));
-        let engine = (cfg.engine == EngineMode::Event).then(Engine::new);
         let mut observer = crate::obs::Observer::from_config(&cfg.obs);
-        let result = Replay {
+        // Mid-job checkpointing (`snapshot.every` + `snapshot.dir`, both
+        // nonzero/nonempty) switches to the checkpointed driver loop. It
+        // runs engine-free and unobserved: numerics are bit-identical
+        // either way (tests/engine_equivalence.rs), the engine counters
+        // are the only difference, and observers would need their own
+        // snapshot story before they could survive a resume.
+        let ckpt = (cfg.snapshot.every > 0 && !cfg.snapshot.dir.is_empty() && observer.is_none())
+            .then(|| {
+                std::path::Path::new(&cfg.snapshot.dir).join(format!(
+                    "ckpt-{}-{}-mlp{}-{:016x}.json",
+                    device.name(),
+                    mode.name(),
+                    cfg.mlp,
+                    cfg.seed
+                ))
+            });
+        let replay = Replay {
             trace: &trace,
             mode: *mode,
             mlp: cfg.mlp,
-        }
-        .run_observed(&mut dev, engine.as_ref(), observer.as_mut());
-        let mut engine_kv = Vec::new();
-        if let Some(engine) = &engine {
-            let stats = engine.finish();
-            engine_kv = stats.stats_kv();
-            // >= not ==: a pooled device's switch ports post their own
-            // completions on top of the replay window's one per request.
-            debug_assert!(
-                stats.posted >= result.reads + result.writes,
-                "engine saw every replay completion"
-            );
-        }
+        };
+        let (result, engine_kv) = if let Some(path) = ckpt {
+            let r = match replay.run_checkpointed(
+                &mut dev,
+                &path,
+                cfg.snapshot.every,
+                cfg.snapshot.keep,
+            ) {
+                Ok(r) => r,
+                // simlint: allow(unwrap-in-lib): the snapshot fault model forbids continuing from bad checkpoint state, so a corrupt file aborts the job
+                Err(e) => panic!("replay checkpoint {}: {e:#}", path.display()),
+            };
+            (r, Vec::new())
+        } else {
+            let engine = (cfg.engine == EngineMode::Event).then(Engine::new);
+            let result = replay.run_observed(&mut dev, engine.as_ref(), observer.as_mut());
+            let mut engine_kv = Vec::new();
+            if let Some(engine) = &engine {
+                let stats = engine.finish();
+                engine_kv = stats.stats_kv();
+                // >= not ==: a pooled device's switch ports post their own
+                // completions on top of the replay window's one per request.
+                debug_assert!(
+                    stats.posted >= result.reads + result.writes,
+                    "engine saw every replay completion"
+                );
+            }
+            (result, engine_kv)
+        };
         let system = SystemStats {
             device_reads: result.reads,
             device_writes: result.writes,
@@ -336,9 +367,47 @@ pub fn auto_jobs() -> usize {
 /// index-aligned with `jobs` (and bit-identical to a serial run - see
 /// the module docs).
 pub fn execute(jobs: &[RunJob], n_workers: usize) -> Vec<RunOutput> {
-    let workers = n_workers.max(1).min(jobs.len());
+    let mask = vec![true; jobs.len()];
+    // flatten() is lossless here: an all-true mask fills every slot.
+    execute_masked(jobs, &mask, n_workers, &|_, _| {})
+        .into_iter()
+        .flatten()
+        .collect()
+}
+
+/// Execute the subset of `jobs` selected by `run_mask` (index-aligned;
+/// `false` entries are skipped and come back `None`). This is the
+/// substrate for sharded and resumed campaigns: the shard filter and the
+/// already-completed set both reduce to a mask over the full expansion,
+/// so every job keeps its global index — and therefore its coordinates,
+/// seed and artifact file name — no matter which subset actually runs.
+///
+/// `on_done` fires with each finished job's global index and output, in
+/// *completion* order (it is the incremental artifact sink; callers key
+/// files by index, so completion order never reaches the bytes). The
+/// returned vector is index-aligned with `jobs` and bit-identical to a
+/// serial run of the same mask.
+pub fn execute_masked(
+    jobs: &[RunJob],
+    run_mask: &[bool],
+    n_workers: usize,
+    on_done: &(dyn Fn(usize, &RunOutput) + Sync),
+) -> Vec<Option<RunOutput>> {
+    assert_eq!(jobs.len(), run_mask.len(), "mask must align with jobs");
+    let picked: Vec<usize> = run_mask
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &m)| m.then_some(i))
+        .collect();
+    let workers = n_workers.max(1).min(picked.len());
     if workers <= 1 {
-        return jobs.iter().map(run_job).collect();
+        let mut outs: Vec<Option<RunOutput>> = (0..jobs.len()).map(|_| None).collect();
+        for &i in &picked {
+            let out = run_job(&jobs[i]);
+            on_done(i, &out);
+            outs[i] = Some(out);
+        }
+        return outs;
     }
 
     let next = AtomicUsize::new(0);
@@ -348,11 +417,13 @@ pub fn execute(jobs: &[RunJob], n_workers: usize) -> Vec<RunOutput> {
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= picked.len() {
                     break;
                 }
+                let i = picked[k];
                 let out = run_job(&jobs[i]);
+                on_done(i, &out);
                 // simlint: allow(unwrap-in-lib): a poisoned slot means a worker already panicked
                 *slots[i].lock().expect("result slot poisoned") = Some(out);
             });
@@ -365,8 +436,6 @@ pub fn execute(jobs: &[RunJob], n_workers: usize) -> Vec<RunOutput> {
             m.into_inner()
                 // simlint: allow(unwrap-in-lib): a poisoned slot means a worker already panicked
                 .expect("result slot poisoned")
-                // simlint: allow(unwrap-in-lib): fetch_add hands every index to exactly one worker
-                .expect("worker pool drained every job")
         })
         .collect()
 }
@@ -399,6 +468,26 @@ pub fn execute_timed(jobs: &[RunJob], n_workers: usize) -> (Vec<RunOutput>, Swee
     let timing = SweepTiming {
         jobs: jobs.len(),
         job_host_seconds: outs.iter().map(|o| o.host_seconds).sum(),
+        wall_seconds: wall.elapsed().as_secs_f64(),
+    };
+    (outs, timing)
+}
+
+/// [`execute_masked`] with timing over the jobs that actually ran
+/// (skipped coordinates cost nothing and are not counted). Lives here
+/// rather than in the campaign layer because wall-clock reads are
+/// confined to this module (see the determinism lint).
+pub fn execute_masked_timed(
+    jobs: &[RunJob],
+    run_mask: &[bool],
+    n_workers: usize,
+    on_done: &(dyn Fn(usize, &RunOutput) + Sync),
+) -> (Vec<Option<RunOutput>>, SweepTiming) {
+    let wall = Instant::now();
+    let outs = execute_masked(jobs, run_mask, n_workers, on_done);
+    let timing = SweepTiming {
+        jobs: run_mask.iter().filter(|&&m| m).count(),
+        job_host_seconds: outs.iter().flatten().map(|o| o.host_seconds).sum(),
         wall_seconds: wall.elapsed().as_secs_f64(),
     };
     (outs, timing)
@@ -534,6 +623,69 @@ mod tests {
     fn empty_job_list_is_fine() {
         let outs = execute(&[], 4);
         assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn masked_execution_matches_full_run_slotwise() {
+        let spec = SweepSpec::new(presets::small_test())
+            .devices(vec![DeviceKind::Dram, DeviceKind::Pmem, DeviceKind::CxlDram])
+            .workloads(vec![tiny_membench()]);
+        let jobs = spec.expand();
+        let full = execute(&jobs, 1);
+        // Run only the odd shard; the skipped slots stay None, the run
+        // slots are bit-identical to the full run (global index keeps
+        // the coordinates and seed).
+        let mask: Vec<bool> = (0..jobs.len()).map(|i| i % 2 == 1).collect();
+        let done = Mutex::new(Vec::new());
+        let (outs, timing) = execute_masked_timed(&jobs, &mask, 2, &|i, _| {
+            done.lock().unwrap().push(i);
+        });
+        assert_eq!(outs.len(), jobs.len());
+        assert_eq!(timing.jobs, 1);
+        let mut fired = done.into_inner().unwrap();
+        fired.sort_unstable();
+        assert_eq!(fired, vec![1]);
+        for (i, slot) in outs.iter().enumerate() {
+            if i % 2 == 1 {
+                let out = slot.as_ref().unwrap();
+                assert_eq!(out.sim_ticks, full[i].sim_ticks);
+                assert_eq!(out.system.device_reads, full[i].system.device_reads);
+            } else {
+                assert!(slot.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn checkpointed_replay_sweep_matches_plain_and_resumes() {
+        use crate::trace::{SynthKind, SynthSpec, TraceSource};
+        let dir = std::path::PathBuf::from("/tmp/cxl_ssd_sim_sweep_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = WorkloadSpec::Replay {
+            source: TraceSource::Synthetic(SynthSpec {
+                ops: 400,
+                ..SynthSpec::new(SynthKind::Uniform)
+            }),
+            mode: crate::workloads::ReplayMode::Open,
+        };
+        let mut cfg = presets::small_test();
+        let (plain, _) = run_spec(DeviceKind::CxlSsd, &spec, &cfg, false);
+        cfg.snapshot.every = 64;
+        cfg.snapshot.keep = true;
+        cfg.snapshot.dir = dir.to_string_lossy().into_owned();
+        let (ckpt, _) = run_spec(DeviceKind::CxlSsd, &spec, &cfg, false);
+        let (pr, cr) = (plain.replay.as_ref().unwrap(), ckpt.replay.as_ref().unwrap());
+        assert_eq!(pr.sim_ticks, cr.sim_ticks);
+        assert_eq!(pr.latency.0.as_ref(), cr.latency.0.as_ref());
+        // keep=true left the final mid-job checkpoint behind; a rerun
+        // resumes from it and still reports identical numbers.
+        let kept: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(kept.len(), 1);
+        let (resumed, _) = run_spec(DeviceKind::CxlSsd, &spec, &cfg, false);
+        let rr = resumed.replay.as_ref().unwrap();
+        assert_eq!(pr.sim_ticks, rr.sim_ticks);
+        assert_eq!(pr.latency.0.as_ref(), rr.latency.0.as_ref());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

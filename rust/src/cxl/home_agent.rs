@@ -168,6 +168,78 @@ impl HomeAgent {
         self.stats = HomeAgentStats::default();
     }
 
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): both flit buses, the credit bookkeeping
+    /// (outstanding count + pending completion ticks, in FIFO order), the
+    /// tag allocator and the lifetime counters.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        let completions: Vec<Tick> = self.completions.iter().copied().collect();
+        Json::Obj(vec![
+            ("m2s_bus".into(), self.m2s_bus.snapshot()),
+            ("s2m_bus".into(), self.s2m_bus.snapshot()),
+            ("outstanding".into(), Json::UInt(self.outstanding as u128)),
+            (
+                "completions".into(),
+                crate::snapshot::ticks_to_json(&completions),
+            ),
+            ("next_tag".into(), Json::UInt(self.next_tag as u128)),
+            ("m2s_req".into(), Json::UInt(self.stats.m2s_req as u128)),
+            ("m2s_rwd".into(), Json::UInt(self.stats.m2s_rwd as u128)),
+            ("s2m_drs".into(), Json::UInt(self.stats.s2m_drs as u128)),
+            ("s2m_ndr".into(), Json::UInt(self.stats.s2m_ndr as u128)),
+            ("warnings".into(), Json::UInt(self.stats.warnings as u128)),
+            ("flits".into(), Json::UInt(self.stats.flits as u128)),
+            ("wire_bytes".into(), Json::UInt(self.stats.wire_bytes as u128)),
+            (
+                "credit_stall_ticks".into(),
+                Json::UInt(self.stats.credit_stall_ticks as u128),
+            ),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let completions = crate::snapshot::ticks_from_json(v.field("completions")?)?;
+        let outstanding = v.field("outstanding")?.as_u64()? as usize;
+        if outstanding > self.cfg.credits {
+            anyhow::bail!(
+                "home agent snapshot has {} outstanding requests, config has {} credits",
+                outstanding,
+                self.cfg.credits
+            );
+        }
+        if completions.len() > outstanding {
+            anyhow::bail!(
+                "home agent snapshot has {} pending completions but only {} outstanding",
+                completions.len(),
+                outstanding
+            );
+        }
+        if completions.windows(2).any(|w| w[0] > w[1]) {
+            anyhow::bail!("home agent snapshot completions are not in FIFO order");
+        }
+        self.m2s_bus.restore(v.field("m2s_bus")?)?;
+        self.s2m_bus.restore(v.field("s2m_bus")?)?;
+        self.outstanding = outstanding;
+        self.completions = completions.into_iter().collect();
+        let next_tag = v.field("next_tag")?.as_u64()?;
+        if next_tag > u16::MAX as u64 {
+            anyhow::bail!("home agent snapshot next_tag {next_tag} exceeds u16");
+        }
+        self.next_tag = next_tag as u16;
+        self.stats = HomeAgentStats {
+            m2s_req: v.field("m2s_req")?.as_u64()?,
+            m2s_rwd: v.field("m2s_rwd")?.as_u64()?,
+            s2m_drs: v.field("s2m_drs")?.as_u64()?,
+            s2m_ndr: v.field("s2m_ndr")?.as_u64()?,
+            warnings: v.field("warnings")?.as_u64()?,
+            flits: v.field("flits")?.as_u64()?,
+            wire_bytes: v.field("wire_bytes")?.as_u64()?,
+            credit_stall_ticks: v.field("credit_stall_ticks")?.as_u64()?,
+        };
+        Ok(())
+    }
+
     fn alloc_tag(&mut self) -> u16 {
         let t = self.next_tag;
         self.next_tag = self.next_tag.wrapping_add(1);
@@ -290,6 +362,42 @@ mod tests {
         let (a3, _f3) = ha.outbound(0, &pkt).unwrap();
         assert!(a3 >= done1);
         assert!(ha.stats().credit_stall_ticks > 0);
+    }
+
+    #[test]
+    fn home_agent_snapshot_restore_continues_identically() {
+        let mut ha = HomeAgent::new(HomeAgentConfig {
+            credits: 2,
+            ..HomeAgentConfig::default()
+        });
+        let pkt = Packet::read(0x1000, 64, 0);
+        let (a1, f1) = ha.outbound(0, &pkt).unwrap();
+        let (_a2, _f2) = ha.outbound(0, &pkt).unwrap();
+        ha.inbound(a1 + 1_000_000, &f1);
+
+        let snap = ha.snapshot();
+        let mut back = HomeAgent::new(HomeAgentConfig {
+            credits: 2,
+            ..HomeAgentConfig::default()
+        });
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+
+        // Continued traffic (including a credit stall) is identical.
+        let (a3a, f3a) = ha.outbound(0, &pkt).unwrap();
+        let (a3b, f3b) = back.outbound(0, &pkt).unwrap();
+        assert_eq!(a3a, a3b);
+        assert_eq!(f3a, f3b);
+        assert_eq!(ha.inbound(a3a + 5_000, &f3a), back.inbound(a3b + 5_000, &f3b));
+        assert_eq!(back.snapshot().to_text(), ha.snapshot().to_text());
+
+        // A snapshot with more credits out than this config allows is rejected.
+        let mut tiny = HomeAgent::new(HomeAgentConfig {
+            credits: 1,
+            ..HomeAgentConfig::default()
+        });
+        let err = tiny.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("outstanding requests"), "{err}");
     }
 
     #[test]

@@ -159,6 +159,18 @@ pub trait MemoryDevice {
     fn stats_kv(&self) -> Vec<(String, f64)> {
         Vec::new()
     }
+
+    /// Exact serializable device state for checkpoint/restore
+    /// ([`crate::snapshot`]): every field that influences future timing
+    /// or statistics, and nothing config-derived (structure is validated
+    /// against the live config on restore instead of serialized).
+    fn snapshot_state(&self) -> crate::results::json::Json;
+
+    /// Restore state captured by [`snapshot_state`](Self::snapshot_state)
+    /// into a device built from the same config. Corrupt, truncated or
+    /// config-mismatched payloads are hard errors; implementations
+    /// deserialize into fresh structures and swap in only on success.
+    fn restore_state(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()>;
 }
 
 /// Per-request latency telemetry for any device: records every issued
@@ -223,6 +235,21 @@ impl MemoryDevice for Instrumented {
 
     fn last_phases(&self) -> crate::obs::ServicePhases {
         self.inner.last_phases()
+    }
+
+    fn snapshot_state(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        Json::Obj(vec![
+            ("inner".into(), self.inner.snapshot_state()),
+            ("latency".into(), crate::snapshot::hist_to_json(&self.latency)),
+        ])
+    }
+
+    fn restore_state(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let latency = crate::snapshot::hist_from_json(v.field("latency")?)?;
+        self.inner.restore_state(v.field("inner")?)?;
+        self.latency = latency;
+        Ok(())
     }
 
     fn stats_kv(&self) -> Vec<(String, f64)> {
@@ -298,6 +325,14 @@ impl MemoryDevice for LocalDram {
             ("writes".into(), self.dram.stats().writes as f64),
         ]
     }
+
+    fn snapshot_state(&self) -> crate::results::json::Json {
+        crate::results::json::Json::Obj(vec![("dram".into(), self.dram.snapshot())])
+    }
+
+    fn restore_state(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        self.dram.restore(v.field("dram")?)
+    }
 }
 
 // ------------------------------------------------------------ CXL-DRAM
@@ -365,6 +400,22 @@ impl MemoryDevice for CxlDram {
             ("cxl_credit_stall_ns".into(), crate::sim::to_ns(s.credit_stall_ticks)),
         ]
     }
+
+    fn snapshot_state(&self) -> crate::results::json::Json {
+        crate::results::json::Json::Obj(vec![
+            ("ha".into(), self.ha.snapshot()),
+            ("dram".into(), self.dram.snapshot()),
+            ("last".into(), crate::snapshot::phases_to_json(&self.last)),
+        ])
+    }
+
+    fn restore_state(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let last = crate::snapshot::phases_from_json(v.field("last")?)?;
+        self.ha.restore(v.field("ha")?)?;
+        self.dram.restore(v.field("dram")?)?;
+        self.last = last;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------- PMEM
@@ -403,6 +454,14 @@ impl MemoryDevice for PmemDevice {
             ("buf_hit_rate".into(), self.pmem.stats().buf_hit_rate()),
             ("media_accesses".into(), self.pmem.stats().media_accesses as f64),
         ]
+    }
+
+    fn snapshot_state(&self) -> crate::results::json::Json {
+        crate::results::json::Json::Obj(vec![("pmem".into(), self.pmem.snapshot())])
+    }
+
+    fn restore_state(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        self.pmem.restore(v.field("pmem")?)
     }
 }
 
@@ -513,6 +572,22 @@ impl MemoryDevice for CxlSsd {
             kv.push(("icl_hit_rate".into(), icl.hit_rate()));
         }
         kv
+    }
+
+    fn snapshot_state(&self) -> crate::results::json::Json {
+        crate::results::json::Json::Obj(vec![
+            ("ha".into(), self.ha.snapshot()),
+            ("ssd".into(), self.ssd.snapshot()),
+            ("last".into(), crate::snapshot::phases_to_json(&self.last)),
+        ])
+    }
+
+    fn restore_state(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let last = crate::snapshot::phases_from_json(v.field("last")?)?;
+        self.ha.restore(v.field("ha")?)?;
+        self.ssd.restore(v.field("ssd")?)?;
+        self.last = last;
+        Ok(())
     }
 }
 
@@ -645,6 +720,24 @@ impl MemoryDevice for CxlSsdCached {
             ),
             ("max_erase".into(), self.ssd.max_erase_count() as f64),
         ]
+    }
+
+    fn snapshot_state(&self) -> crate::results::json::Json {
+        crate::results::json::Json::Obj(vec![
+            ("ha".into(), self.ha.snapshot()),
+            ("cache".into(), self.cache.snapshot()),
+            ("ssd".into(), self.ssd.snapshot()),
+            ("last".into(), crate::snapshot::phases_to_json(&self.last)),
+        ])
+    }
+
+    fn restore_state(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let last = crate::snapshot::phases_from_json(v.field("last")?)?;
+        self.ha.restore(v.field("ha")?)?;
+        self.cache.restore(v.field("cache")?)?;
+        self.ssd.restore(v.field("ssd")?)?;
+        self.last = last;
+        Ok(())
     }
 }
 
@@ -938,6 +1031,75 @@ mod tests {
             p.arb + p.link + p.bank + p.flash <= done,
             "uncontended estimates must not exceed service time"
         );
+    }
+
+    #[test]
+    fn every_device_kind_snapshot_restore_continues_identically() {
+        let c = cfg();
+        for kind in DeviceKind::ALL {
+            // Warm up with a mixed, overlapping access pattern so every
+            // internal resource (banks, credits, cache, FTL) holds
+            // non-trivial state at the snapshot point.
+            let mut dev = Instrumented::new(build_device(kind, &c));
+            let mut rng = crate::testing::SplitMix64::new(0xD0 ^ kind.name().len() as u64);
+            let mut now = 0;
+            for _ in 0..48 {
+                let addr = rng.below(c.device_bytes / 64) * 64;
+                let is_write = rng.below(3) == 0;
+                let l = dev.access(now, addr, is_write);
+                now += l / 2 + 50 * NS;
+            }
+            let snap = dev.snapshot_state();
+
+            let mut back = Instrumented::new(build_device(kind, &c));
+            back.restore_state(&snap).unwrap();
+            assert_eq!(
+                back.snapshot_state().to_text(),
+                snap.to_text(),
+                "{} re-snapshot",
+                kind.name()
+            );
+
+            // Identical continuation on both: same ticks in, same ticks out.
+            let cont: Vec<(u64, bool)> = (0..48)
+                .map(|_| (rng.below(c.device_bytes / 64) * 64, rng.below(4) == 0))
+                .collect();
+            let mut now_b = now;
+            for (i, &(addr, is_write)) in cont.iter().enumerate() {
+                let a = dev.access(now, addr, is_write);
+                let b = back.access(now_b, addr, is_write);
+                assert_eq!(a, b, "{} access {i}", kind.name());
+                assert_eq!(
+                    dev.last_phases(),
+                    back.last_phases(),
+                    "{} phases {i}",
+                    kind.name()
+                );
+                now += a / 2 + 50 * NS;
+                now_b += b / 2 + 50 * NS;
+            }
+            dev.flush(now);
+            back.flush(now);
+            assert_eq!(
+                back.snapshot_state().to_text(),
+                dev.snapshot_state().to_text(),
+                "{} diverged after continuation",
+                kind.name()
+            );
+            assert_eq!(dev.stats_kv(), back.stats_kv(), "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn device_snapshot_rejects_wrong_kind_payload() {
+        let c = cfg();
+        let dram_snap = build_device(DeviceKind::Dram, &c).snapshot_state();
+        assert!(build_device(DeviceKind::Pmem, &c)
+            .restore_state(&dram_snap)
+            .is_err());
+        assert!(build_device(DeviceKind::CxlSsd, &c)
+            .restore_state(&dram_snap)
+            .is_err());
     }
 
     #[test]

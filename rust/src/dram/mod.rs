@@ -203,6 +203,84 @@ impl Dram {
         };
         self.stats = DramStats::default();
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): per-bank ready times and open rows, the
+    /// refresh deadline, and the lifetime counters. The config is
+    /// construction-time and not part of the snapshot.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        Json::Obj(vec![
+            (
+                "bank_ready".into(),
+                crate::snapshot::ticks_to_json(&self.bank_ready),
+            ),
+            (
+                "open_row".into(),
+                Json::Arr(
+                    self.open_row
+                        .iter()
+                        .map(|r| match r {
+                            Some(row) => Json::UInt(*row as u128),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
+            ("next_refresh".into(), Json::UInt(self.next_refresh as u128)),
+            ("last_wait".into(), Json::UInt(self.last_wait as u128)),
+            ("reads".into(), Json::UInt(self.stats.reads as u128)),
+            ("writes".into(), Json::UInt(self.stats.writes as u128)),
+            ("row_hits".into(), Json::UInt(self.stats.row_hits as u128)),
+            (
+                "row_conflicts".into(),
+                Json::UInt(self.stats.row_conflicts as u128),
+            ),
+            ("row_closed".into(), Json::UInt(self.stats.row_closed as u128)),
+            ("refreshes".into(), Json::UInt(self.stats.refreshes as u128)),
+            ("busy_ticks".into(), Json::UInt(self.stats.busy_ticks as u128)),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        use crate::results::json::Json;
+        let bank_ready = crate::snapshot::ticks_from_json(v.field("bank_ready")?)?;
+        if bank_ready.len() != self.cfg.n_banks {
+            anyhow::bail!(
+                "dram snapshot has {} banks, config has {}",
+                bank_ready.len(),
+                self.cfg.n_banks
+            );
+        }
+        let mut open_row = Vec::with_capacity(self.cfg.n_banks);
+        for r in v.field("open_row")?.as_arr()? {
+            open_row.push(match r {
+                Json::Null => None,
+                other => Some(other.as_u64()?),
+            });
+        }
+        if open_row.len() != self.cfg.n_banks {
+            anyhow::bail!(
+                "dram snapshot has {} open-row entries, config has {} banks",
+                open_row.len(),
+                self.cfg.n_banks
+            );
+        }
+        self.bank_ready = bank_ready;
+        self.open_row = open_row;
+        self.next_refresh = v.field("next_refresh")?.as_u64()?;
+        self.last_wait = v.field("last_wait")?.as_u64()?;
+        self.stats = DramStats {
+            reads: v.field("reads")?.as_u64()?,
+            writes: v.field("writes")?.as_u64()?,
+            row_hits: v.field("row_hits")?.as_u64()?,
+            row_conflicts: v.field("row_conflicts")?.as_u64()?,
+            row_closed: v.field("row_closed")?.as_u64()?,
+            refreshes: v.field("refreshes")?.as_u64()?,
+            busy_ticks: v.field("busy_ticks")?.as_u64()?,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -291,6 +369,30 @@ mod tests {
             d.access(i * 1_000_000, i, false);
         }
         assert!(d.stats().row_hit_rate() > 0.8);
+    }
+
+    #[test]
+    fn dram_snapshot_restore_continues_identically() {
+        let mut d = Dram::new(DramConfig::default());
+        for i in 0..20u64 {
+            d.access(i * 500_000, i * 3, i % 4 == 0);
+        }
+        let snap = d.snapshot();
+        let mut back = Dram::new(DramConfig::default());
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+        // Identical continuation, including refresh scheduling.
+        for i in 20..40u64 {
+            let now = i * 500_000;
+            assert_eq!(back.access(now, i * 3, false), d.access(now, i * 3, false));
+        }
+        assert_eq!(back.stats().refreshes, d.stats().refreshes);
+        // Bank-count mismatch is rejected.
+        let mut other = Dram::new(DramConfig {
+            n_banks: 4,
+            ..DramConfig::default()
+        });
+        assert!(other.restore(&snap).is_err());
     }
 
     #[test]

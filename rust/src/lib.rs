@@ -16,8 +16,8 @@
 //!   hot-page tiering ([`pool`]) — host CPU +
 //!   cache hierarchy ([`cpu`]), workloads ([`workloads`]), orchestration
 //!   plus the parallel sweep engine ([`coordinator`]), structured run
-//!   artifacts and the report/diff layer ([`results`]) and the CLI
-//!   ([`cli`]).
+//!   artifacts and the report/diff layer ([`results`]), checkpoint/
+//!   restore snapshots ([`snapshot`]) and the CLI ([`cli`]).
 //! - **L2/L1 (python/, build-time)** — JAX surrogate models + Pallas
 //!   timing kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from
 //!   rust through [`runtime`] / [`surrogate`] in fast mode.
@@ -57,6 +57,7 @@ pub mod pool;
 pub mod results;
 pub mod runtime;
 pub mod sim;
+pub mod snapshot;
 pub mod ssd;
 pub mod stats;
 pub mod surrogate;

@@ -91,6 +91,25 @@ impl Bus {
         self.busy_ticks = 0;
         self.transfers = 0;
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]); the config is construction-time and not
+    /// part of the snapshot.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        Json::Obj(vec![
+            ("free_at".into(), Json::UInt(self.free_at as u128)),
+            ("busy_ticks".into(), Json::UInt(self.busy_ticks as u128)),
+            ("transfers".into(), Json::UInt(self.transfers as u128)),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        self.free_at = v.field("free_at")?.as_u64()?;
+        self.busy_ticks = v.field("busy_ticks")?.as_u64()?;
+        self.transfers = v.field("transfers")?.as_u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +154,22 @@ mod tests {
         b.send(0, 64);
         b.send(0, 64);
         assert_eq!(b.busy_ticks(), 2 * 138);
+    }
+
+    #[test]
+    fn bus_snapshot_restore_is_exact() {
+        let mut b = bus();
+        b.send(0, 64);
+        b.send(0, 64);
+        let snap = b.snapshot();
+        let mut back = bus();
+        back.restore(&snap).unwrap();
+        assert_eq!(back.free_at(), b.free_at());
+        assert_eq!(back.busy_ticks(), b.busy_ticks());
+        assert_eq!(back.transfers(), b.transfers());
+        // Continued use is identical.
+        assert_eq!(back.send(0, 32), b.send(0, 32));
+        assert_eq!(back.snapshot().to_text(), b.snapshot().to_text());
     }
 
     #[test]

@@ -151,6 +151,75 @@ impl Pmem {
         self.last_wait = 0;
         self.stats = PmemStats::default();
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): open row buffers with their LRU stamps,
+    /// per-port ready times and the lifetime counters.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        Json::Obj(vec![
+            (
+                "bufs".into(),
+                Json::Arr(
+                    self.bufs
+                        .iter()
+                        .map(|b| match b {
+                            Some(row) => Json::UInt(*row as u128),
+                            None => Json::Null,
+                        })
+                        .collect(),
+                ),
+            ),
+            ("stamps".into(), crate::snapshot::ticks_to_json(&self.stamps)),
+            ("ports".into(), crate::snapshot::ticks_to_json(&self.ports)),
+            ("last_wait".into(), Json::UInt(self.last_wait as u128)),
+            ("reads".into(), Json::UInt(self.stats.reads as u128)),
+            ("writes".into(), Json::UInt(self.stats.writes as u128)),
+            ("buf_hits".into(), Json::UInt(self.stats.buf_hits as u128)),
+            (
+                "media_accesses".into(),
+                Json::UInt(self.stats.media_accesses as u128),
+            ),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        use crate::results::json::Json;
+        let mut bufs = Vec::new();
+        for b in v.field("bufs")?.as_arr()? {
+            bufs.push(match b {
+                Json::Null => None,
+                other => Some(other.as_u64()?),
+            });
+        }
+        let stamps = crate::snapshot::ticks_from_json(v.field("stamps")?)?;
+        let ports = crate::snapshot::ticks_from_json(v.field("ports")?)?;
+        if bufs.len() != self.bufs.len() || stamps.len() != self.stamps.len() {
+            anyhow::bail!(
+                "pmem snapshot has {} buffers, config has {}",
+                bufs.len(),
+                self.bufs.len()
+            );
+        }
+        if ports.len() != self.ports.len() {
+            anyhow::bail!(
+                "pmem snapshot has {} ports, config has {}",
+                ports.len(),
+                self.ports.len()
+            );
+        }
+        self.bufs = bufs;
+        self.stamps = stamps;
+        self.ports = ports;
+        self.last_wait = v.field("last_wait")?.as_u64()?;
+        self.stats = PmemStats {
+            reads: v.field("reads")?.as_u64()?,
+            writes: v.field("writes")?.as_u64()?,
+            buf_hits: v.field("buf_hits")?.as_u64()?,
+            media_accesses: v.field("media_accesses")?.as_u64()?,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -234,6 +303,32 @@ mod tests {
         // The written row is open: a read of it hits the buffer.
         assert_eq!(p.access(1_000_000, 1, false), 50_000);
         assert!(p.stats().buf_hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn pmem_snapshot_restore_continues_identically() {
+        let mut p = pmem();
+        for i in 0..30u64 {
+            p.access(i * 700_000, i.wrapping_mul(0x9E37) % 512, i % 3 == 0);
+        }
+        let snap = p.snapshot();
+        let mut back = pmem();
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+        for i in 30..60u64 {
+            let lat_a = p.access(i * 700_000, i.wrapping_mul(0x9E37) % 512, i % 5 == 0);
+            let lat_b = back.access(i * 700_000, i.wrapping_mul(0x9E37) % 512, i % 5 == 0);
+            assert_eq!(lat_a, lat_b, "access {i}");
+        }
+        assert_eq!(back.snapshot().to_text(), p.snapshot().to_text());
+
+        // Vector-length mismatches against the config are hard errors.
+        let mut small = Pmem::new(PmemConfig {
+            n_bufs: 2,
+            ..PmemConfig::default()
+        });
+        let err = small.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("pmem snapshot has 4 buffers"), "{err}");
     }
 
     #[test]

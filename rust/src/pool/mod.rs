@@ -635,6 +635,104 @@ impl MemoryDevice for PooledDevice {
         self.last
     }
 
+    /// Pool state is the switch windows, each member's own state, the
+    /// heat table, the promoted-page map and the pool counters. The
+    /// coldest-victim cache is deliberately *not* serialized: it is a
+    /// lazily recomputed view of `heat` + `promoted` whose recompute is
+    /// provably identical to any valid cached value (see
+    /// [`coldest_victim`](Self::coldest_victim)'s invalidation rules),
+    /// so restoring it as empty keeps continuations bit-identical while
+    /// keeping snapshots independent of when the cache last filled.
+    fn snapshot_state(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        let promoted: Vec<(u64, u64)> = self
+            .promoted
+            .iter()
+            .map(|(&p, &c)| (p, c as u64))
+            .collect();
+        Json::Obj(vec![
+            (
+                "children".into(),
+                Json::Arr(self.children.iter().map(|c| c.snapshot_state()).collect()),
+            ),
+            ("switch".into(), self.switch.snapshot()),
+            (
+                "heat".into(),
+                match &self.heat {
+                    Some(t) => t.snapshot(),
+                    None => Json::Null,
+                },
+            ),
+            ("promoted".into(), crate::snapshot::pairs_to_json(&promoted)),
+            ("last".into(), crate::snapshot::phases_to_json(&self.last)),
+            ("promotions".into(), Json::UInt(self.stats.promotions as u128)),
+            ("demotions".into(), Json::UInt(self.stats.demotions as u128)),
+            (
+                "migrated_bytes".into(),
+                Json::UInt(self.stats.migrated_bytes as u128),
+            ),
+            (
+                "skipped_full".into(),
+                Json::UInt(self.stats.skipped_full as u128),
+            ),
+        ])
+    }
+
+    fn restore_state(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        use crate::results::json::Json;
+        let children = v.field("children")?.as_arr()?;
+        if children.len() != self.children.len() {
+            anyhow::bail!(
+                "pool snapshot has {} members, config has {}",
+                children.len(),
+                self.children.len()
+            );
+        }
+        let mut promoted = BTreeMap::new();
+        for (page, member) in crate::snapshot::pairs_from_json(v.field("promoted")?)? {
+            let member = member as usize;
+            if !self.can_migrate {
+                anyhow::bail!("pool snapshot has promoted pages but this pool cannot migrate");
+            }
+            if !self.fast_members.contains(&member) {
+                anyhow::bail!(
+                    "pool snapshot promotes page {page} onto member {member}, \
+                     which is not a fast-tier member"
+                );
+            }
+            if promoted.insert(page, member).is_some() {
+                anyhow::bail!("pool snapshot promotes page {page} twice");
+            }
+        }
+        let last = crate::snapshot::phases_from_json(v.field("last")?)?;
+        match (self.heat.as_mut(), v.field("heat")?) {
+            (Some(t), heat @ Json::Obj(_)) => t.restore(heat)?,
+            (None, Json::Null) => {}
+            (Some(_), Json::Null) => {
+                anyhow::bail!("pool snapshot has no heat state but the config enables tiering")
+            }
+            (None, _) => {
+                anyhow::bail!("pool snapshot has heat state but the config disables tiering")
+            }
+            (Some(_), _) => anyhow::bail!("pool snapshot heat state is not an object"),
+        }
+        self.switch.restore(v.field("switch")?)?;
+        for (child, c) in self.children.iter_mut().zip(children) {
+            child.restore_state(c)?;
+        }
+        self.promoted = promoted;
+        self.coldest = None;
+        self.coldest_epoch = 0;
+        self.last = last;
+        self.stats = PoolStats {
+            promotions: v.field("promotions")?.as_u64()?,
+            demotions: v.field("demotions")?.as_u64()?,
+            migrated_bytes: v.field("migrated_bytes")?.as_u64()?,
+            skipped_full: v.field("skipped_full")?.as_u64()?,
+        };
+        Ok(())
+    }
+
     fn stats_kv(&self) -> Vec<(String, f64)> {
         let mut kv = vec![("pool.members".to_string(), self.children.len() as f64)];
         for i in 0..self.children.len() {
@@ -915,6 +1013,70 @@ mod tests {
         }
         // Every member is on the fastest tier: nothing to promote.
         assert_eq!(dev.pool_stats().promotions, 0);
+    }
+
+    #[test]
+    fn pooled_snapshot_restore_continues_identically() {
+        // Tiering pool with a constrained fast tier: promotions,
+        // demotions and skip decisions are all live at the snapshot
+        // point, exercising the heat/promoted/coldest interplay.
+        let mut cfg = pool_cfg(vec![DeviceKind::Dram, DeviceKind::CxlSsd], InterleaveMode::Page);
+        cfg.pool.tiering = true;
+        cfg.pool.promote_threshold = 2;
+        cfg.pool.max_promoted = 2;
+        cfg.pool.epoch_ns = 1_000_000_000;
+        let mut dev = PooledDevice::new(&cfg);
+        let mut rng = crate::testing::SplitMix64::new(11);
+        let mut now = 0;
+        for _ in 0..60 {
+            let page = 1 + 2 * rng.below(5); // ssd-homed pages
+            let l = dev.access(now, page * 4096, rng.below(4) == 0);
+            now += l + 200 * US;
+        }
+        assert!(dev.pool_stats().promotions >= 2, "warmup must promote");
+
+        let snap = dev.snapshot_state();
+        let mut back = PooledDevice::new(&cfg);
+        back.restore_state(&snap).unwrap();
+        assert_eq!(back.snapshot_state().to_text(), snap.to_text());
+        assert_eq!(back.promoted_pages(), dev.promoted_pages());
+
+        let mut now_b = now;
+        for i in 0..60 {
+            let page = 1 + 2 * rng.below(5);
+            let is_write = rng.below(4) == 0;
+            let a = dev.access(now, page * 4096, is_write);
+            let b = back.access(now_b, page * 4096, is_write);
+            assert_eq!(a, b, "access {i}");
+            now += a + 200 * US;
+            now_b += b + 200 * US;
+        }
+        assert_eq!(back.snapshot_state().to_text(), dev.snapshot_state().to_text());
+        assert_eq!(dev.stats_kv(), back.stats_kv());
+
+        // Tiering-disabled config cannot accept a tiering snapshot.
+        let mut plain_cfg = cfg.clone();
+        plain_cfg.pool.tiering = false;
+        let err = PooledDevice::new(&plain_cfg)
+            .restore_state(&snap)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("disables tiering"), "{err}");
+
+        // A promoted page must target a fast-tier member.
+        let mut bad = snap.clone();
+        if let crate::results::json::Json::Obj(fields) = &mut bad {
+            for (k, val) in fields.iter_mut() {
+                if k == "promoted" {
+                    *val = crate::snapshot::pairs_to_json(&[(1, 1)]); // member 1 = ssd
+                }
+            }
+        }
+        let err = PooledDevice::new(&cfg)
+            .restore_state(&bad)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not a fast-tier member"), "{err}");
     }
 
     #[test]

@@ -95,6 +95,44 @@ impl HeatTracker {
         &self.stats
     }
 
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): per-page heat in sorted page order (the
+    /// table itself is unordered), the epoch cursor and decay counters.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        // simlint: allow(unordered-iter): collected then sorted by page before serialization
+        let mut heat: Vec<(u64, u64)> = self.heat.iter().map(|(&p, &h)| (p, h as u64)).collect();
+        heat.sort_unstable();
+        Json::Obj(vec![
+            ("heat".into(), crate::snapshot::pairs_to_json(&heat)),
+            ("epoch_end".into(), Json::UInt(self.epoch_end as u128)),
+            ("epochs".into(), Json::UInt(self.stats.epochs as u128)),
+            ("cooled_out".into(), Json::UInt(self.stats.cooled_out as u128)),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        // simlint: allow(unordered-iter): key-addressed rebuild; never iterated unsorted
+        let mut heat = HashMap::new();
+        for (page, h) in crate::snapshot::pairs_from_json(v.field("heat")?)? {
+            let h = u32::try_from(h)
+                .map_err(|_| anyhow::anyhow!("heat snapshot counter {h} exceeds u32"))?;
+            if h == 0 {
+                anyhow::bail!("heat snapshot tracks page {page} at zero heat");
+            }
+            if heat.insert(page, h).is_some() {
+                anyhow::bail!("heat snapshot tracks page {page} twice");
+            }
+        }
+        self.heat = heat;
+        self.epoch_end = v.field("epoch_end")?.as_u64()?;
+        self.stats = HeatStats {
+            epochs: v.field("epochs")?.as_u64()?,
+            cooled_out: v.field("cooled_out")?.as_u64()?,
+        };
+        Ok(())
+    }
+
     /// Apply `rounds` halvings to every counter in one pass (a shift;
     /// anything survives at most 31 rounds), dropping pages that cool
     /// to zero. Pure per-entry arithmetic: iteration order is
@@ -169,6 +207,35 @@ mod tests {
         assert_eq!(t.tracked(), 1);
         assert_eq!(t.heat(1), 0);
         assert_eq!(t.stats().cooled_out, 2);
+    }
+
+    #[test]
+    fn heat_snapshot_restore_continues_identically() {
+        let mut t = tracker(100 * US, 4);
+        for i in 0..40u64 {
+            t.touch(i * 7 * US, i % 6);
+        }
+        let snap = t.snapshot();
+        let mut back = tracker(100 * US, 4);
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+        for i in 40..80u64 {
+            assert_eq!(
+                t.touch(i * 7 * US, i % 9),
+                back.touch(i * 7 * US, i % 9),
+                "touch {i}"
+            );
+        }
+        assert_eq!(back.snapshot().to_text(), t.snapshot().to_text());
+        assert_eq!(back.stats().epochs, t.stats().epochs);
+
+        // Zero-heat and duplicate entries are rejected.
+        let bad = crate::results::json::Json::parse(
+            "{\n  \"heat\": [[1, 0]],\n  \"epoch_end\": 1,\n  \"epochs\": 0,\n  \"cooled_out\": 0\n}",
+        )
+        .unwrap();
+        let err = tracker(100 * US, 4).restore(&bad).unwrap_err().to_string();
+        assert!(err.contains("zero heat"), "{err}");
     }
 
     #[test]

@@ -457,6 +457,12 @@ pub struct Campaign {
     pub experiment: String,
     /// Ran at quick (test) scale rather than full paper scale.
     pub quick: bool,
+    /// `Some((index, count))` when this artifact set holds only the
+    /// jobs of shard `index` of a `sweep --shard index/count` run.
+    /// Sharded sections carry explicit per-record coordinate indices in
+    /// the manifest; `report --merge` reassembles the shards into a
+    /// complete (`None`) campaign whose bytes match an unsharded sweep.
+    pub shard: Option<(usize, usize)>,
     pub sections: Vec<Section>,
 }
 
@@ -465,6 +471,7 @@ impl Campaign {
         Campaign {
             experiment: experiment.into(),
             quick,
+            shard: None,
             sections: Vec::new(),
         }
     }
@@ -492,11 +499,45 @@ pub fn content_checksum(bytes: &[u8]) -> u64 {
     mix_finalize(h ^ bytes.len() as u64)
 }
 
+/// Write one record's job file under `dir/jobs/`, creating the
+/// directory if needed and leaving sibling records alone. This is the
+/// incremental sink a resumable sweep appends to as each job finishes:
+/// the bytes are exactly what [`write_campaign`] writes for the same
+/// record, so a restarted sweep can trust a complete file verbatim.
+pub fn write_record(dir: &Path, record: &RunRecord) -> Result<PathBuf> {
+    let jobs_dir = dir.join("jobs");
+    std::fs::create_dir_all(&jobs_dir)
+        .with_context(|| format!("creating artifact dir {}", jobs_dir.display()))?;
+    let path = jobs_dir.join(record.file_name());
+    std::fs::write(&path, record.to_json().to_text())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Parse one job file back into a [`RunRecord`]. No manifest or
+/// checksum is consulted: resume uses this to probe files left by an
+/// interrupted sweep, treating any error (half-written JSON, truncated
+/// file) as "this coordinate still needs to run".
+pub fn read_record(path: &Path) -> Result<RunRecord> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let parsed = Json::parse(&text)
+        .map_err(|e| e.context(format!("parsing {}", path.display())))?;
+    RunRecord::from_json(&parsed)
+        .map_err(|e| e.context(format!("decoding {}", path.display())))
+}
+
 /// Write a campaign to `dir` (created if needed). The `dir/jobs/`
 /// subdirectory is cleared first so re-using an `--out` directory never
 /// leaves stale, un-manifested records from a previous campaign behind;
 /// then job files are written and finally the manifest
 /// `dir/campaign.json` with per-file checksums.
+///
+/// Sharded campaigns additionally stamp the manifest with the shard
+/// coordinate and each section's explicit record indices (a shard holds
+/// a subset of coordinates, so position in the file list no longer
+/// equals the record index). Unsharded manifests are byte-identical to
+/// the pre-shard schema.
 pub fn write_campaign(dir: &Path, campaign: &Campaign) -> Result<()> {
     let jobs_dir = dir.join("jobs");
     if jobs_dir.exists() {
@@ -510,8 +551,11 @@ pub fn write_campaign(dir: &Path, campaign: &Campaign) -> Result<()> {
     let mut sections_json = Vec::new();
     for section in &campaign.sections {
         let mut files = Vec::new();
+        let mut indices = Vec::new();
         for (i, record) in section.records.iter().enumerate() {
-            debug_assert_eq!(record.index, i, "records must be in coordinate order");
+            if campaign.shard.is_none() {
+                debug_assert_eq!(record.index, i, "records must be in coordinate order");
+            }
             let name = record.file_name();
             let text = record.to_json().to_text();
             let path = jobs_dir.join(&name);
@@ -522,21 +566,36 @@ pub fn write_campaign(dir: &Path, campaign: &Campaign) -> Result<()> {
                 Json::str(format!("{:016x}", content_checksum(text.as_bytes()))),
             ));
             files.push(Json::str(&name));
+            indices.push(Json::UInt(record.index as u128));
         }
-        sections_json.push(Json::Obj(vec![
+        let mut sec_fields = vec![
             ("id".into(), Json::str(&section.id)),
             ("kind".into(), Json::str(section.kind.name())),
             ("heading".into(), Json::str(&section.heading)),
             ("jobs".into(), Json::Arr(files)),
-        ]));
+        ];
+        if campaign.shard.is_some() {
+            sec_fields.push(("indices".into(), Json::Arr(indices)));
+        }
+        sections_json.push(Json::Obj(sec_fields));
     }
-    let manifest = Json::Obj(vec![
+    let mut fields = vec![
         ("schema_version".into(), Json::UInt(SCHEMA_VERSION as u128)),
         ("experiment".into(), Json::str(&campaign.experiment)),
         ("quick".into(), Json::Bool(campaign.quick)),
-        ("sections".into(), Json::Arr(sections_json)),
-        ("checksums".into(), Json::Obj(checksums)),
-    ]);
+    ];
+    if let Some((index, count)) = campaign.shard {
+        fields.push((
+            "shard".into(),
+            Json::Obj(vec![
+                ("index".into(), Json::UInt(index as u128)),
+                ("count".into(), Json::UInt(count as u128)),
+            ]),
+        ));
+    }
+    fields.push(("sections".into(), Json::Arr(sections_json)));
+    fields.push(("checksums".into(), Json::Obj(checksums)));
+    let manifest = Json::Obj(fields);
     let path = dir.join("campaign.json");
     std::fs::write(&path, manifest.to_text())
         .with_context(|| format!("writing {}", path.display()))?;
@@ -566,13 +625,45 @@ pub fn load_campaign(dir: &Path) -> Result<Campaign> {
         manifest.field("experiment")?.as_str()?.to_string(),
         manifest.field("quick")?.as_bool()?,
     );
+    if let Some(shard) = manifest.get("shard") {
+        let index = shard.field("index")?.as_u64()? as usize;
+        let count = shard.field("count")?.as_u64()? as usize;
+        if count == 0 || index >= count {
+            bail!(
+                "artifact {} has invalid shard stamp {index}/{count}",
+                dir.display()
+            );
+        }
+        campaign.shard = Some((index, count));
+    }
     for sec in manifest.field("sections")?.as_arr()? {
         let id = sec.field("id")?.as_str()?.to_string();
         let kind_name = sec.field("kind")?.as_str()?;
         let kind = SectionKind::parse(kind_name)
             .with_context(|| format!("unknown section kind '{kind_name}'"))?;
+        // Sharded manifests list each record's coordinate index
+        // explicitly; complete manifests imply index == list position.
+        let indices: Option<Vec<usize>> = match sec.get("indices") {
+            Some(arr) => Some(
+                arr.as_arr()?
+                    .iter()
+                    .map(|v| Ok(v.as_u64()? as usize))
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            None => None,
+        };
+        let jobs = sec.field("jobs")?.as_arr()?;
+        if let Some(idx) = &indices {
+            if idx.len() != jobs.len() {
+                bail!(
+                    "section '{id}': {} job file(s) but {} coordinate indices",
+                    jobs.len(),
+                    idx.len()
+                );
+            }
+        }
         let mut records = Vec::new();
-        for (i, file) in sec.field("jobs")?.as_arr()?.iter().enumerate() {
+        for (i, file) in jobs.iter().enumerate() {
             let name = file.as_str()?;
             let rel = format!("jobs/{name}");
             let path = dir.join(&rel);
@@ -595,14 +686,26 @@ pub fn load_campaign(dir: &Path) -> Result<Campaign> {
                 .map_err(|e| e.context(format!("parsing {}", path.display())))?;
             let record = RunRecord::from_json(&parsed)
                 .map_err(|e| e.context(format!("decoding {}", path.display())))?;
-            if record.section != id || record.index != i {
+            let expect = indices.as_ref().map_or(i, |idx| idx[i]);
+            if record.section != id || record.index != expect {
                 bail!(
                     "record {} claims coordinate {}[{}], manifest lists it as {}[{}]",
                     path.display(),
                     record.section,
                     record.index,
                     id,
-                    i
+                    expect
+                );
+            }
+            if records
+                .last()
+                .is_some_and(|prev: &RunRecord| prev.index >= record.index)
+            {
+                bail!(
+                    "section '{id}': coordinate indices must be strictly \
+                     increasing (got {} after {})",
+                    record.index,
+                    records.last().map_or(0, |r: &RunRecord| r.index)
                 );
             }
             records.push(record);
@@ -625,6 +728,104 @@ pub fn write_campaign_to(dir: &str, campaign: &Campaign) -> Result<()> {
 /// `load_campaign` with a string path (CLI convenience).
 pub fn load_campaign_from(dir: &str) -> Result<Campaign> {
     load_campaign(&PathBuf::from(dir))
+}
+
+/// Merge the shards of a `sweep --shard i/N` campaign back into one
+/// complete artifact set (`report --merge`).
+///
+/// Every input must carry a shard stamp with the same count `N`, agree
+/// on experiment / scale / section skeletons, and together the shard
+/// indices must be exactly `{0..N}` — duplicate, overlapping or missing
+/// shards are hard errors, as are records colliding on or missing a
+/// sweep coordinate. The merged campaign has no shard stamp, so writing
+/// it yields an artifact directory byte-identical to an unsharded sweep
+/// of the same campaign (locked by `rust/tests/shard_merge.rs`).
+pub fn merge_campaigns(shards: &[Campaign]) -> Result<Campaign> {
+    let first = shards
+        .first()
+        .context("merge needs at least one shard artifact set")?;
+    let (_, count) = first.shard.with_context(|| {
+        format!(
+            "artifact set for '{}' has no shard stamp (not a --shard sweep output)",
+            first.experiment
+        )
+    })?;
+    if shards.len() != count {
+        bail!(
+            "have {} shard artifact set(s) but the stamps say --shard i/{count}: \
+             a merge needs every shard exactly once",
+            shards.len()
+        );
+    }
+    let mut seen = vec![false; count];
+    for s in shards {
+        let (index, c) = s.shard.with_context(|| {
+            format!(
+                "artifact set for '{}' has no shard stamp (not a --shard sweep output)",
+                s.experiment
+            )
+        })?;
+        if c != count {
+            bail!("shard stamps disagree on the shard count: {c} vs {count}");
+        }
+        if seen[index] {
+            bail!("duplicate shard {index}/{count}: the same shard was passed twice");
+        }
+        seen[index] = true;
+        if s.experiment != first.experiment || s.quick != first.quick {
+            bail!(
+                "shards come from different campaigns: '{}'{} vs '{}'{}",
+                s.experiment,
+                if s.quick { " (quick)" } else { "" },
+                first.experiment,
+                if first.quick { " (quick)" } else { "" },
+            );
+        }
+        if s.sections.len() != first.sections.len()
+            || s.sections.iter().zip(first.sections.iter()).any(|(a, b)| {
+                a.id != b.id || a.kind != b.kind || a.heading != b.heading
+            })
+        {
+            bail!(
+                "shard {index}/{count} has a different section skeleton than \
+                 shard {}/{count}",
+                first.shard.map_or(0, |(i, _)| i)
+            );
+        }
+    }
+    // `seen` is fully true here: `count` distinct in-range indices.
+    let mut merged = Campaign::new(first.experiment.clone(), first.quick);
+    for (si, skeleton) in first.sections.iter().enumerate() {
+        let mut records: Vec<RunRecord> = shards
+            .iter()
+            .flat_map(|s| s.sections[si].records.iter().cloned())
+            .collect();
+        records.sort_by_key(|r| r.index);
+        for (i, r) in records.iter().enumerate() {
+            if r.index < i {
+                bail!(
+                    "section '{}': two shards both carry coordinate {} \
+                     (overlapping shard contents)",
+                    skeleton.id,
+                    r.index
+                );
+            }
+            if r.index > i {
+                bail!(
+                    "section '{}': no shard carries coordinate {i} \
+                     (incomplete shard set)",
+                    skeleton.id
+                );
+            }
+        }
+        merged.sections.push(Section {
+            id: skeleton.id.clone(),
+            kind: skeleton.kind,
+            heading: skeleton.heading.clone(),
+            records,
+        });
+    }
+    Ok(merged)
 }
 
 #[cfg(test)]
@@ -707,6 +908,7 @@ mod tests {
         let campaign = Campaign {
             experiment: "fig4".into(),
             quick: true,
+            shard: None,
             sections: vec![Section {
                 id: "fig4".into(),
                 kind: SectionKind::Membench,
@@ -726,6 +928,7 @@ mod tests {
         let campaign = Campaign {
             experiment: "fig4".into(),
             quick: true,
+            shard: None,
             sections: vec![Section {
                 id: "fig4".into(),
                 kind: SectionKind::Membench,
@@ -752,6 +955,7 @@ mod tests {
         let mut campaign = Campaign {
             experiment: "fig4".into(),
             quick: true,
+            shard: None,
             sections: vec![Section {
                 id: "fig4".into(),
                 kind: SectionKind::Membench,
@@ -767,6 +971,126 @@ mod tests {
         write_campaign(&dir, &campaign).unwrap();
         assert!(!old_file.exists(), "stale job file must be cleared");
         assert_eq!(load_campaign(&dir).unwrap(), campaign);
+    }
+
+    fn sharded(records: Vec<RunRecord>, shard: (usize, usize)) -> Campaign {
+        Campaign {
+            experiment: "fig4".into(),
+            quick: true,
+            shard: Some(shard),
+            sections: vec![Section {
+                id: "fig4".into(),
+                kind: SectionKind::Membench,
+                heading: "h".into(),
+                records,
+            }],
+        }
+    }
+
+    #[test]
+    fn sharded_campaign_roundtrips_with_explicit_indices() {
+        let dir = PathBuf::from("/tmp/cxl_ssd_sim_results_shard");
+        let _ = std::fs::remove_dir_all(&dir);
+        // Shard 1/2 of a 4-job section: coordinates 1 and 3 only.
+        let campaign = sharded(vec![sample_record(1), sample_record(3)], (1, 2));
+        write_campaign(&dir, &campaign).unwrap();
+        let text = std::fs::read_to_string(dir.join("campaign.json")).unwrap();
+        assert!(text.contains("\"shard\""), "{text}");
+        assert!(text.contains("\"indices\""), "{text}");
+        assert_eq!(load_campaign(&dir).unwrap(), campaign);
+    }
+
+    #[test]
+    fn unsharded_manifest_keeps_the_pre_shard_byte_layout() {
+        let dir = PathBuf::from("/tmp/cxl_ssd_sim_results_noshard");
+        let _ = std::fs::remove_dir_all(&dir);
+        let campaign = Campaign {
+            experiment: "fig4".into(),
+            quick: true,
+            shard: None,
+            sections: vec![Section {
+                id: "fig4".into(),
+                kind: SectionKind::Membench,
+                heading: "h".into(),
+                records: vec![sample_record(0)],
+            }],
+        };
+        write_campaign(&dir, &campaign).unwrap();
+        let text = std::fs::read_to_string(dir.join("campaign.json")).unwrap();
+        assert!(!text.contains("\"shard\""), "{text}");
+        assert!(!text.contains("\"indices\""), "{text}");
+    }
+
+    #[test]
+    fn incremental_record_bytes_match_campaign_writer() {
+        let dir = PathBuf::from("/tmp/cxl_ssd_sim_results_incr");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = sample_record(0);
+        let path = write_record(&dir, &r).unwrap();
+        let incremental = std::fs::read(&path).unwrap();
+        assert_eq!(read_record(&path).unwrap(), r);
+        let campaign = Campaign {
+            experiment: "fig4".into(),
+            quick: true,
+            shard: None,
+            sections: vec![Section {
+                id: "fig4".into(),
+                kind: SectionKind::Membench,
+                heading: "h".into(),
+                records: vec![r],
+            }],
+        };
+        write_campaign(&dir, &campaign).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            incremental,
+            "write_record and write_campaign must emit identical job bytes"
+        );
+        // A half-written record (interrupted sweep) errors out rather
+        // than parsing to garbage — resume treats that as "re-run".
+        std::fs::write(&path, &incremental[..incremental.len() / 2]).unwrap();
+        assert!(read_record(&path).is_err());
+    }
+
+    #[test]
+    fn merge_reassembles_a_complete_campaign() {
+        let s0 = sharded(vec![sample_record(0), sample_record(2)], (0, 2));
+        let s1 = sharded(vec![sample_record(1), sample_record(3)], (1, 2));
+        // Input order must not matter: shard dirs can be listed any way.
+        let merged = merge_campaigns(&[s1, s0]).unwrap();
+        assert_eq!(merged.shard, None);
+        let records = &merged.sections[0].records;
+        assert_eq!(records.len(), 4);
+        assert!(records.iter().enumerate().all(|(i, r)| r.index == i));
+    }
+
+    #[test]
+    fn merge_rejects_bad_shard_sets() {
+        let s0 = sharded(vec![sample_record(0)], (0, 2));
+        let mut plain = s0.clone();
+        plain.shard = None;
+        let err = merge_campaigns(&[plain]).unwrap_err().to_string();
+        assert!(err.contains("no shard stamp"), "{err}");
+
+        let err = merge_campaigns(&[s0.clone()]).unwrap_err().to_string();
+        assert!(err.contains("every shard exactly once"), "{err}");
+
+        let err = merge_campaigns(&[s0.clone(), s0.clone()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate shard"), "{err}");
+
+        // Shard 1 also carries coordinate 0: overlap.
+        let overlap = sharded(vec![sample_record(0)], (1, 2));
+        let err = merge_campaigns(&[s0.clone(), overlap])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overlapping"), "{err}");
+
+        // Shard 1 carries coordinate 2 instead of 1: gap.
+        let gap = sharded(vec![sample_record(2)], (1, 2));
+        let err = merge_campaigns(&[s0, gap]).unwrap_err().to_string();
+        assert!(err.contains("no shard carries"), "{err}");
     }
 
     #[test]

@@ -538,6 +538,7 @@ mod tests {
         Campaign {
             experiment: "test".into(),
             quick: true,
+            shard: None,
             sections: vec![Section {
                 id: records[0].section.clone(),
                 kind: SectionKind::Membench,

@@ -175,6 +175,7 @@ mod tests {
         Campaign {
             experiment: "replay".into(),
             quick: true,
+            shard: None,
             sections: vec![Section {
                 id: "replay".into(),
                 kind: SectionKind::Replay,

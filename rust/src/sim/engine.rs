@@ -129,6 +129,30 @@ pub struct Engine {
     inner: Rc<RefCell<EngineState>>,
 }
 
+impl CompletionTag {
+    /// Canonical snapshot spelling (stable across versions).
+    pub fn snapshot_name(self) -> String {
+        match self {
+            CompletionTag::CoreLoad => "core-load".to_string(),
+            CompletionTag::CoreStore => "core-store".to_string(),
+            CompletionTag::Replay => "replay".to_string(),
+            CompletionTag::Port(p) => format!("port:{p}"),
+        }
+    }
+
+    pub fn parse_snapshot_name(s: &str) -> Option<Self> {
+        match s {
+            "core-load" => Some(CompletionTag::CoreLoad),
+            "core-store" => Some(CompletionTag::CoreStore),
+            "replay" => Some(CompletionTag::Replay),
+            _ => s
+                .strip_prefix("port:")
+                .and_then(|n| n.parse::<u16>().ok())
+                .map(CompletionTag::Port),
+        }
+    }
+}
+
 impl Engine {
     pub fn new() -> Self {
         Self::default()
@@ -177,6 +201,70 @@ impl Engine {
 
     pub fn stats(&self) -> EngineStats {
         self.inner.borrow().stats
+    }
+
+    /// Exact serializable state: live queued completions in pop order,
+    /// the queue's seq allocator and clock, and the lifetime counters.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        let s = self.inner.borrow();
+        let (events, next_seq, now) = s.queue.snapshot_parts();
+        Json::Obj(vec![
+            (
+                "events".into(),
+                Json::Arr(
+                    events
+                        .into_iter()
+                        .map(|(when, seq, tag)| {
+                            Json::Arr(vec![
+                                Json::UInt(when as u128),
+                                Json::UInt(seq as u128),
+                                Json::str(tag.snapshot_name()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("next_seq".into(), Json::UInt(next_seq as u128)),
+            ("now".into(), Json::UInt(now as u128)),
+            ("posted".into(), Json::UInt(s.stats.posted as u128)),
+            ("consumed".into(), Json::UInt(s.stats.consumed as u128)),
+            (
+                "unconsumed_at_finish".into(),
+                Json::UInt(s.stats.unconsumed_at_finish as u128),
+            ),
+        ])
+    }
+
+    /// Restore this engine (every clone sees the restored state — the
+    /// shared `Rc` cell is reassigned in place, never replaced). The
+    /// replacement queue is fully built and validated before anything
+    /// is touched, so a corrupt snapshot leaves the engine unchanged.
+    pub fn restore(&self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let mut events = Vec::new();
+        for ev in v.field("events")?.as_arr()? {
+            let ev = ev.as_arr()?;
+            if ev.len() != 3 {
+                anyhow::bail!("engine event must be [when, seq, tag]");
+            }
+            let name = ev[2].as_str()?;
+            let tag = CompletionTag::parse_snapshot_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown completion tag '{name}'"))?;
+            events.push((ev[0].as_u64()?, ev[1].as_u64()?, tag));
+        }
+        let queue = EventQueue::from_parts(
+            events,
+            v.field("next_seq")?.as_u64()?,
+            v.field("now")?.as_u64()?,
+        )
+        .map_err(|e| anyhow::anyhow!("corrupt engine snapshot: {e}"))?;
+        let stats = EngineStats {
+            posted: v.field("posted")?.as_u64()?,
+            consumed: v.field("consumed")?.as_u64()?,
+            unconsumed_at_finish: v.field("unconsumed_at_finish")?.as_u64()?,
+        };
+        *self.inner.borrow_mut() = EngineState { queue, stats };
+        Ok(())
     }
 }
 
@@ -249,6 +337,58 @@ mod tests {
         assert_eq!(e.consume_until(100), 1);
         let stats = e.finish();
         assert_eq!(stats.posted, stats.consumed);
+    }
+
+    #[test]
+    fn completion_tag_snapshot_names_roundtrip() {
+        for tag in [
+            CompletionTag::CoreLoad,
+            CompletionTag::CoreStore,
+            CompletionTag::Replay,
+            CompletionTag::Port(0),
+            CompletionTag::Port(4095),
+        ] {
+            assert_eq!(
+                CompletionTag::parse_snapshot_name(&tag.snapshot_name()),
+                Some(tag)
+            );
+        }
+        assert_eq!(CompletionTag::parse_snapshot_name("bogus"), None);
+        assert_eq!(CompletionTag::parse_snapshot_name("port:x"), None);
+    }
+
+    #[test]
+    fn engine_snapshot_restore_is_exact_and_shared() {
+        let e = Engine::new();
+        let peer = e.clone();
+        e.post(100, CompletionTag::CoreLoad);
+        e.post(50, CompletionTag::Port(2));
+        e.consume_until(50);
+        let snap = e.snapshot();
+        // Mutate past the snapshot, then restore: clones see the
+        // rewound state through the shared cell.
+        e.post(900, CompletionTag::Replay);
+        e.restore(&snap).unwrap();
+        assert_eq!(peer.pending(), 1);
+        assert_eq!(peer.stats().posted, 2);
+        assert_eq!(peer.stats().consumed, 1);
+        let stats = peer.finish();
+        assert_eq!(stats.unconsumed_at_finish, 1);
+        // Restoring the same snapshot twice produces identical bytes.
+        e.restore(&snap).unwrap();
+        assert_eq!(e.snapshot().to_text(), snap.to_text());
+    }
+
+    #[test]
+    fn engine_restore_rejects_corrupt_payloads() {
+        let e = Engine::new();
+        e.post(10, CompletionTag::Replay);
+        let snap = e.snapshot();
+        let text = snap.to_text();
+        let bad = crate::results::json::Json::parse(&text.replace("replay", "warp")).unwrap();
+        assert!(e.restore(&bad).is_err());
+        // Failed restore left the engine untouched.
+        assert_eq!(e.snapshot().to_text(), text);
     }
 
     #[test]

@@ -162,6 +162,52 @@ impl<T> EventQueue<T> {
     pub fn len(&self) -> usize {
         self.heap.len() // upper bound: may include cancelled entries
     }
+
+    /// Serializable state for checkpoint/restore ([`crate::snapshot`]):
+    /// the live events in pop order as `(when, seq, payload)` triples,
+    /// plus the sequence allocator and the queue clock. Cancelled heap
+    /// entries are dropped — they can never pop, and their seqs are
+    /// already outside the live set, so a later `cancel` of their token
+    /// still reports dead exactly as it would have pre-snapshot.
+    pub fn snapshot_parts(&self) -> (Vec<(Tick, u64, T)>, u64, Tick)
+    where
+        T: Clone,
+    {
+        let mut events: Vec<(Tick, u64, T)> = self
+            .heap
+            .iter()
+            .filter(|ev| !self.cancelled.contains(&ev.seq))
+            .map(|ev| (ev.when, ev.seq, ev.payload.clone()))
+            .collect();
+        // Heap iteration order is arbitrary; pop order (when, then seq)
+        // is the canonical serialization order.
+        events.sort_by_key(|&(when, seq, _)| (when, seq));
+        (events, self.next_seq, self.now)
+    }
+
+    /// Rebuild a queue from [`snapshot_parts`](Self::snapshot_parts)
+    /// output. Tokens captured before the snapshot keep working: live
+    /// seqs are restored verbatim and `next_seq` continues the original
+    /// allocation stream.
+    pub fn from_parts(
+        events: Vec<(Tick, u64, T)>,
+        next_seq: u64,
+        now: Tick,
+    ) -> Result<Self, String> {
+        let mut q = Self::new();
+        for (when, seq, payload) in events {
+            if seq >= next_seq {
+                return Err(format!("event seq {seq} not below next_seq {next_seq}"));
+            }
+            if !q.live.insert(seq) {
+                return Err(format!("duplicate event seq {seq}"));
+            }
+            q.heap.push(Event { when, payload, seq });
+        }
+        q.next_seq = next_seq;
+        q.now = now;
+        Ok(q)
+    }
 }
 
 #[cfg(test)]
@@ -241,6 +287,39 @@ mod tests {
         q.post(40, "early");
         assert_eq!(q.pop(), Some((40, "early")));
         assert_eq!(q.now(), 100, "popped time never regresses");
+    }
+
+    #[test]
+    fn snapshot_parts_roundtrip_preserves_pop_order_and_tokens() {
+        let mut q = EventQueue::new();
+        q.schedule(30, "c");
+        q.schedule(10, "a");
+        let dead = q.schedule(20, "b");
+        q.schedule(10, "a2"); // same tick, later seq
+        q.cancel(dead);
+        let (events, next_seq, now) = q.snapshot_parts();
+        assert_eq!(events.len(), 3, "cancelled entries are dropped");
+        let mut back: EventQueue<&str> = EventQueue::from_parts(events, next_seq, now).unwrap();
+        assert_eq!(back.pop(), Some((10, "a")));
+        assert_eq!(back.pop(), Some((10, "a2")));
+        assert_eq!(back.pop(), Some((30, "c")));
+        assert_eq!(back.pop(), None);
+        // The allocator continues: new events order after old same-tick ones.
+        let mut q2: EventQueue<&str> = {
+            let mut q2 = EventQueue::new();
+            q2.schedule(5, "x");
+            let (ev, ns, nw) = q2.snapshot_parts();
+            EventQueue::from_parts(ev, ns, nw).unwrap()
+        };
+        q2.schedule(5, "y");
+        assert_eq!(q2.pop(), Some((5, "x")));
+        assert_eq!(q2.pop(), Some((5, "y")));
+    }
+
+    #[test]
+    fn from_parts_rejects_corrupt_state() {
+        assert!(EventQueue::from_parts(vec![(10, 3, ())], 3, 0).is_err());
+        assert!(EventQueue::from_parts(vec![(10, 0, ()), (11, 0, ())], 2, 0).is_err());
     }
 
     #[test]

@@ -161,6 +161,63 @@ impl OutstandingWindow {
     pub fn stats(&self) -> &WindowStats {
         &self.stats
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): the in-flight completion ticks plus the
+    /// lifetime counters. The engine attachment is *not* part of the
+    /// snapshot — the shared queue is captured once per run by
+    /// [`Engine::snapshot`], so restoring a window sets `inflight`
+    /// directly and must never re-post through [`push`](Self::push)
+    /// (that would double both the queue entries and `issued`).
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        Json::Obj(vec![
+            ("cap".into(), Json::UInt(self.cap as u128)),
+            (
+                "inflight".into(),
+                crate::snapshot::ticks_to_json(&self.inflight),
+            ),
+            ("issued".into(), Json::UInt(self.stats.issued as u128)),
+            (
+                "stall_ticks".into(),
+                Json::UInt(self.stats.stall_ticks as u128),
+            ),
+            (
+                "drain_ticks".into(),
+                Json::UInt(self.stats.drain_ticks as u128),
+            ),
+            (
+                "peak_inflight".into(),
+                Json::UInt(self.stats.peak_inflight as u128),
+            ),
+        ])
+    }
+
+    /// Restore a window built with the same `cap` (the cap comes from
+    /// config at construction; a mismatch means the snapshot belongs to
+    /// a different configuration and is rejected).
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let cap = v.field("cap")?.as_u64()? as usize;
+        if cap != self.cap {
+            anyhow::bail!("window snapshot has cap {cap}, this window has cap {}", self.cap);
+        }
+        let inflight = crate::snapshot::ticks_from_json(v.field("inflight")?)?;
+        if inflight.len() > self.cap {
+            anyhow::bail!(
+                "window snapshot has {} in-flight requests, cap is {}",
+                inflight.len(),
+                self.cap
+            );
+        }
+        self.inflight = inflight;
+        self.stats = WindowStats {
+            issued: v.field("issued")?.as_u64()?,
+            stall_ticks: v.field("stall_ticks")?.as_u64()?,
+            drain_ticks: v.field("drain_ticks")?.as_u64()?,
+            peak_inflight: v.field("peak_inflight")?.as_u64()? as usize,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +317,32 @@ mod tests {
         let stats = engine.finish();
         assert_eq!(stats.posted, 2);
         assert_eq!(stats.consumed, 2);
+    }
+
+    #[test]
+    fn window_snapshot_restore_is_exact_and_does_not_repost() {
+        let engine = Engine::new();
+        let mut w = OutstandingWindow::new(4);
+        w.attach(&engine, CompletionTag::Replay);
+        w.admit(0);
+        w.push(100);
+        w.push(300);
+        let snap = w.snapshot();
+        let posted = engine.stats().posted;
+        // Restore into a fresh window attached to the same engine: the
+        // queue must not see extra posts.
+        let mut back = OutstandingWindow::new(4);
+        back.attach(&engine, CompletionTag::Replay);
+        back.restore(&snap).unwrap();
+        assert_eq!(engine.stats().posted, posted, "restore must not re-post");
+        assert_eq!(back.in_flight(), 2);
+        assert_eq!(back.stats().issued, 2);
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+        // Behavior continues identically: same admit tick as original.
+        assert_eq!(back.admit(0), 0);
+        // Cap mismatch and over-full snapshots are rejected.
+        let mut small = OutstandingWindow::new(1);
+        assert!(small.restore(&snap).is_err());
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Checkpoint/restore core: canonical-JSON snapshot envelopes with the
+//! mix64-chained content checksum.
+//!
+//! Every stateful simulation layer exposes a `snapshot() -> Json` /
+//! `restore(&Json) -> Result<()>` pair implemented next to its private
+//! state ([`crate::dram`], [`crate::pmem`], [`crate::cxl`],
+//! [`crate::ssd`], [`crate::cache`], [`crate::pool`], the outstanding
+//! windows and event queues in [`crate::sim`]). This module owns what
+//! those pairs share: the file envelope, the integrity check, and the
+//! codecs for the recurring shapes (histograms, tick lists, sparse
+//! `u64 -> u64` maps).
+//!
+//! ## Envelope
+//!
+//! ```text
+//! {
+//!   "schema_version": 1,
+//!   "kind": "<what the payload snapshots>",
+//!   "checksum": "<16-hex mix64 chain over the payload's canonical text>",
+//!   "payload": { ... }
+//! }
+//! ```
+//!
+//! The payload serializes through the same canonical writer as run
+//! artifacts ([`crate::results::json`]), and the checksum is
+//! [`crate::results::content_checksum`] — the same SplitMix64-finalizer
+//! chain the artifact manifests and the sweep seed derivation use.
+//! Identical state therefore always produces identical snapshot bytes.
+//!
+//! ## Fault model: no partial restore
+//!
+//! [`read_snapshot`] verifies everything *before* any simulator state is
+//! touched: truncated or bit-flipped files fail the strict JSON parse or
+//! the checksum comparison, wrong-schema and wrong-kind envelopes are
+//! rejected by name — every error carries a byte offset into the file.
+//! Restore paths then deserialize into freshly built objects and swap
+//! them in only on success, so a corrupt snapshot can never leave a
+//! half-restored simulator behind.
+
+// Audited like the artifact layer: every fallible path reports through
+// `Result`; only the test module unwraps.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::results::content_checksum;
+use crate::results::json::Json;
+use crate::sim::Tick;
+use crate::stats::Histogram;
+
+/// Snapshot envelope schema version; bump on any incompatible change to
+/// a payload layout.
+pub const SNAPSHOT_SCHEMA_VERSION: u64 = 1;
+
+/// `snapshot.*` config keys: mid-job checkpoint cadence for replay jobs
+/// (see DESIGN.md "Checkpoint & resume").
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SnapshotConfig {
+    /// Replay requests between mid-job checkpoints (0 = disabled).
+    pub every: u64,
+    /// Keep the checkpoint file after the job completes instead of
+    /// deleting it.
+    pub keep: bool,
+    /// Directory for mid-job checkpoint files (empty = checkpointing
+    /// off even when `every` is set; `sweep --out DIR` defaults it to
+    /// `DIR/checkpoints`).
+    pub dir: String,
+}
+
+/// Byte offset of the first occurrence of `"key"` in `text` (0 when the
+/// key is absent — errors still carry a well-defined offset).
+fn key_offset(text: &str, key: &str) -> usize {
+    let needle = format!("\"{key}\"");
+    text.find(&needle).unwrap_or(0)
+}
+
+/// Wrap `payload` in a checksummed envelope and return its canonical
+/// text.
+pub fn envelope_text(kind: &str, payload: &Json) -> String {
+    let body = payload.to_text();
+    let envelope = Json::Obj(vec![
+        (
+            "schema_version".into(),
+            Json::UInt(SNAPSHOT_SCHEMA_VERSION as u128),
+        ),
+        ("kind".into(), Json::str(kind)),
+        (
+            "checksum".into(),
+            Json::str(format!("{:016x}", content_checksum(body.as_bytes()))),
+        ),
+        ("payload".into(), payload.clone()),
+    ]);
+    envelope.to_text()
+}
+
+/// Parse and fully verify an envelope: strict JSON parse (byte-offset
+/// errors), schema version, kind, checksum over the payload's canonical
+/// re-serialization. Returns the verified payload.
+pub fn verify_envelope(text: &str, want_kind: &str) -> Result<Json> {
+    let v = Json::parse(text)?;
+    let version = v.field("schema_version")?.as_u64()?;
+    if version != SNAPSHOT_SCHEMA_VERSION {
+        bail!(
+            "snapshot schema v{version}, this binary reads v{SNAPSHOT_SCHEMA_VERSION} \
+             (at byte {})",
+            key_offset(text, "schema_version")
+        );
+    }
+    let kind = v.field("kind")?.as_str()?;
+    if kind != want_kind {
+        bail!(
+            "snapshot kind '{kind}', expected '{want_kind}' (at byte {})",
+            key_offset(text, "kind")
+        );
+    }
+    let want = v.field("checksum")?.as_str()?.to_string();
+    let payload = v.field("payload")?.clone();
+    let got = format!("{:016x}", content_checksum(payload.to_text().as_bytes()));
+    if got != want {
+        bail!(
+            "snapshot checksum mismatch: header {want}, payload {got} \
+             (payload at byte {}; file truncated or corrupted)",
+            key_offset(text, "payload")
+        );
+    }
+    Ok(payload)
+}
+
+/// Write `payload` as a checksummed snapshot file at `path`.
+pub fn write_snapshot(path: &Path, kind: &str, payload: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating snapshot dir {}", parent.display()))?;
+    }
+    std::fs::write(path, envelope_text(kind, payload))
+        .with_context(|| format!("writing snapshot {}", path.display()))?;
+    Ok(())
+}
+
+/// Read and verify a snapshot file; every failure (missing file, parse
+/// error, schema/kind/checksum mismatch) is a hard error, never a
+/// partial payload.
+pub fn read_snapshot(path: &Path, kind: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    verify_envelope(&text, kind)
+        .map_err(|e| e.context(format!("verifying snapshot {}", path.display())))
+}
+
+// ------------------------------------------------------------- codecs
+
+/// A tick list as a JSON array (in-flight completion ticks, per-bank
+/// ready times, ...).
+pub fn ticks_to_json(ticks: &[Tick]) -> Json {
+    Json::Arr(ticks.iter().map(|&t| Json::UInt(t as u128)).collect())
+}
+
+pub fn ticks_from_json(v: &Json) -> Result<Vec<Tick>> {
+    v.as_arr()?.iter().map(|t| t.as_u64()).collect()
+}
+
+/// Sparse `u64 -> u64` map as an array of `[key, value]` pairs. Callers
+/// must pass pairs in sorted key order so identical state always emits
+/// identical bytes (FastMap/HashMap iteration order is not canonical).
+pub fn pairs_to_json(pairs: &[(u64, u64)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|&(k, val)| Json::Arr(vec![Json::UInt(k as u128), Json::UInt(val as u128)]))
+            .collect(),
+    )
+}
+
+pub fn pairs_from_json(v: &Json) -> Result<Vec<(u64, u64)>> {
+    let mut out = Vec::new();
+    for pair in v.as_arr()? {
+        let pair = pair.as_arr()?;
+        if pair.len() != 2 {
+            bail!("map entry must be a [key, value] pair");
+        }
+        out.push((pair[0].as_u64()?, pair[1].as_u64()?));
+    }
+    Ok(out)
+}
+
+/// The last-access phase estimates a device reports through
+/// [`crate::devices::MemoryDevice::last_phases`] — carried state, since
+/// an observer attributes them to the *next* recorded span.
+pub fn phases_to_json(p: &crate::obs::ServicePhases) -> Json {
+    Json::Obj(vec![
+        ("arb".into(), Json::UInt(p.arb as u128)),
+        ("link".into(), Json::UInt(p.link as u128)),
+        ("bank".into(), Json::UInt(p.bank as u128)),
+        ("flash".into(), Json::UInt(p.flash as u128)),
+    ])
+}
+
+pub fn phases_from_json(v: &Json) -> Result<crate::obs::ServicePhases> {
+    Ok(crate::obs::ServicePhases {
+        arb: v.field("arb")?.as_u64()?,
+        link: v.field("link")?.as_u64()?,
+        bank: v.field("bank")?.as_u64()?,
+        flash: v.field("flash")?.as_u64()?,
+    })
+}
+
+/// Exact histogram state, in the same shape the artifact records use
+/// (sparse nonzero buckets + count/sum/min/max).
+pub fn hist_to_json(h: &Histogram) -> Json {
+    Json::Obj(vec![
+        ("count".into(), Json::UInt(h.count() as u128)),
+        ("sum".into(), Json::UInt(h.sum())),
+        ("min".into(), Json::UInt(h.raw_min() as u128)),
+        ("max".into(), Json::UInt(h.max() as u128)),
+        (
+            "buckets".into(),
+            Json::Arr(
+                h.sparse_buckets()
+                    .into_iter()
+                    .map(|(i, c)| Json::Arr(vec![Json::UInt(i as u128), Json::UInt(c as u128)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn hist_from_json(v: &Json) -> Result<Histogram> {
+    let mut sparse = Vec::new();
+    for pair in v.field("buckets")?.as_arr()? {
+        let pair = pair.as_arr()?;
+        if pair.len() != 2 {
+            bail!("histogram bucket entry must be [index, count]");
+        }
+        sparse.push((pair[0].as_u64()? as usize, pair[1].as_u64()?));
+    }
+    Histogram::from_parts(
+        &sparse,
+        v.field("count")?.as_u64()?,
+        v.field("sum")?.as_u128()?,
+        v.field("min")?.as_u64()?,
+        v.field("max")?.as_u64()?,
+    )
+    .map_err(|e| anyhow::anyhow!("corrupt histogram snapshot: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NS;
+
+    fn sample_payload() -> Json {
+        Json::Obj(vec![
+            ("now".into(), Json::UInt(123_456)),
+            ("inflight".into(), ticks_to_json(&[10, 20, 30])),
+            ("map".into(), pairs_to_json(&[(1, 7), (9, 2)])),
+        ])
+    }
+
+    #[test]
+    fn envelope_roundtrips() {
+        let payload = sample_payload();
+        let text = envelope_text("test-state", &payload);
+        let back = verify_envelope(&text, "test-state").unwrap();
+        assert_eq!(back, payload);
+        // Identical state emits identical bytes.
+        assert_eq!(text, envelope_text("test-state", &payload));
+    }
+
+    #[test]
+    fn truncated_envelope_errors_with_byte_offset() {
+        let text = envelope_text("test-state", &sample_payload());
+        let cut = &text[..text.len() / 2];
+        let err = verify_envelope(cut, "test-state").unwrap_err().to_string();
+        assert!(err.contains("byte"), "{err}");
+    }
+
+    #[test]
+    fn bit_flip_in_payload_fails_checksum_with_offset() {
+        let text = envelope_text("test-state", &sample_payload());
+        let flipped = text.replace("123456", "123457");
+        assert_ne!(text, flipped);
+        let err = verify_envelope(&flipped, "test-state")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("at byte"), "{err}");
+    }
+
+    #[test]
+    fn tampered_checksum_header_is_rejected() {
+        let text = envelope_text("test-state", &sample_payload());
+        let v = Json::parse(&text).unwrap();
+        let sum = v.field("checksum").unwrap().as_str().unwrap().to_string();
+        let bad = text.replace(&sum, &format!("{:016x}", !0u64 ^ 1));
+        let err = verify_envelope(&bad, "test-state").unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn wrong_schema_version_names_both_versions() {
+        let text = envelope_text("test-state", &sample_payload());
+        let bad = text.replacen("\"schema_version\": 1", "\"schema_version\": 99", 1);
+        let err = verify_envelope(&bad, "test-state").unwrap_err().to_string();
+        assert!(err.contains("v99") && err.contains("v1"), "{err}");
+        assert!(err.contains("byte"), "{err}");
+    }
+
+    #[test]
+    fn wrong_kind_is_rejected() {
+        let text = envelope_text("window", &sample_payload());
+        let err = verify_envelope(&text, "dram").unwrap_err().to_string();
+        assert!(err.contains("'window'") && err.contains("'dram'"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_file_roundtrip_and_fault_paths() {
+        let dir = std::path::PathBuf::from("/tmp/cxl_ssd_sim_snapshot_core_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("state.json");
+        let payload = sample_payload();
+        write_snapshot(&path, "test-state", &payload).unwrap();
+        assert_eq!(read_snapshot(&path, "test-state").unwrap(), payload);
+        // Truncate on disk: hard error naming the file.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() - 20]).unwrap();
+        let err = read_snapshot(&path, "test-state").unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("state.json"), "{chain}");
+        assert!(chain.contains("byte"), "{chain}");
+    }
+
+    #[test]
+    fn codecs_roundtrip() {
+        let ticks = vec![0u64, 5, u64::MAX];
+        assert_eq!(ticks_from_json(&ticks_to_json(&ticks)).unwrap(), ticks);
+        let pairs = vec![(0u64, 1u64), (42, 0), (u64::MAX, 7)];
+        assert_eq!(pairs_from_json(&pairs_to_json(&pairs)).unwrap(), pairs);
+
+        let mut h = Histogram::new();
+        for i in [1u64, 5, 100, 7_777] {
+            h.record(i * NS);
+        }
+        let back = hist_from_json(&hist_to_json(&h)).unwrap();
+        assert_eq!(back, h);
+        let empty = Histogram::new();
+        assert_eq!(hist_from_json(&hist_to_json(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn corrupt_histogram_is_a_hard_error() {
+        let mut h = Histogram::new();
+        h.record(100 * NS);
+        let mut v = hist_to_json(&h);
+        if let Json::Obj(fields) = &mut v {
+            fields[0].1 = Json::UInt(99); // count no longer matches buckets
+        }
+        assert!(hist_from_json(&v).is_err());
+    }
+}

@@ -313,6 +313,164 @@ impl Ftl {
     pub fn nand(&self) -> &NandConfig {
         &self.nand
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]). The L2P map is stored sparsely (mapped
+    /// logical pages only) and `p2l`/`valid_count` are rebuilt from it on
+    /// restore, so the snapshot stays proportional to the written
+    /// footprint rather than the device capacity. Same for the per-block
+    /// erase counters (non-zero entries only).
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        let l2p: Vec<(u64, u64)> = self
+            .l2p
+            .iter()
+            .enumerate()
+            .filter(|&(_, &phys)| phys != UNMAPPED)
+            .map(|(lp, &phys)| (lp as u64, phys as u64))
+            .collect();
+        let erases: Vec<(u64, u64)> = self
+            .erase_count
+            .iter()
+            .enumerate()
+            .filter(|&(_, &n)| n != 0)
+            .map(|(gb, &n)| (gb as u64, n as u64))
+            .collect();
+        let dies: Vec<Json> = self
+            .dies
+            .iter()
+            .map(|d| {
+                Json::Obj(vec![
+                    (
+                        "free_blocks".into(),
+                        Json::Arr(
+                            d.free_blocks
+                                .iter()
+                                .map(|&b| Json::UInt(b as u128))
+                                .collect(),
+                        ),
+                    ),
+                    ("open_block".into(), Json::UInt(d.open_block as u128)),
+                    ("next_page".into(), Json::UInt(d.next_page as u128)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("l2p".into(), crate::snapshot::pairs_to_json(&l2p)),
+            ("erase_count".into(), crate::snapshot::pairs_to_json(&erases)),
+            ("dies".into(), Json::Arr(dies)),
+            (
+                "next_write_die".into(),
+                Json::UInt(self.next_write_die as u128),
+            ),
+            ("pal".into(), self.pal.snapshot()),
+            (
+                "host_programs".into(),
+                Json::UInt(self.stats.host_programs as u128),
+            ),
+            (
+                "gc_programs".into(),
+                Json::UInt(self.stats.gc_programs as u128),
+            ),
+            ("host_reads".into(), Json::UInt(self.stats.host_reads as u128)),
+            ("gc_reads".into(), Json::UInt(self.stats.gc_reads as u128)),
+            ("gc_runs".into(), Json::UInt(self.stats.gc_runs as u128)),
+            ("erases".into(), Json::UInt(self.stats.erases as u128)),
+            ("trims".into(), Json::UInt(self.stats.trims as u128)),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let total_pages = self.p2l.len() as u64;
+        let user_pages = self.l2p.len() as u64;
+
+        let dies_json = v.field("dies")?.as_arr()?;
+        if dies_json.len() != self.dies.len() {
+            anyhow::bail!(
+                "ftl snapshot has {} dies, config has {}",
+                dies_json.len(),
+                self.dies.len()
+            );
+        }
+        let mut dies = Vec::with_capacity(dies_json.len());
+        for d in dies_json {
+            let mut free_blocks = Vec::new();
+            for b in d.field("free_blocks")?.as_arr()? {
+                let b = b.as_u64()?;
+                if b >= self.blocks_per_die as u64 {
+                    anyhow::bail!(
+                        "ftl snapshot free block {b} out of range (blocks_per_die {})",
+                        self.blocks_per_die
+                    );
+                }
+                free_blocks.push(b as u32);
+            }
+            let open_block = d.field("open_block")?.as_u64()?;
+            let next_page = d.field("next_page")?.as_u64()?;
+            if open_block >= self.blocks_per_die as u64
+                || next_page > self.pages_per_block as u64
+            {
+                anyhow::bail!(
+                    "ftl snapshot open block {open_block}/page {next_page} out of range"
+                );
+            }
+            dies.push(DieState {
+                free_blocks,
+                open_block: open_block as u32,
+                next_page: next_page as u32,
+            });
+        }
+
+        // Rebuild l2p / p2l / valid_count from the sparse mapping.
+        let mut l2p = vec![UNMAPPED; self.l2p.len()];
+        let mut p2l = vec![UNMAPPED; self.p2l.len()];
+        let mut valid_count = vec![0u16; self.valid_count.len()];
+        for (lp, phys) in crate::snapshot::pairs_from_json(v.field("l2p")?)? {
+            if lp >= user_pages || phys >= total_pages {
+                anyhow::bail!(
+                    "ftl snapshot mapping {lp} -> {phys} out of range ({user_pages} user / {total_pages} total pages)"
+                );
+            }
+            if p2l[phys as usize] != UNMAPPED {
+                anyhow::bail!("ftl snapshot maps physical page {phys} twice");
+            }
+            l2p[lp as usize] = phys as u32;
+            p2l[phys as usize] = lp as u32;
+            let addr = self.decode_phys(phys as u32);
+            valid_count[self.global_block(addr.die, addr.block)] += 1;
+        }
+
+        let mut erase_count = vec![0u32; self.erase_count.len()];
+        for (gb, n) in crate::snapshot::pairs_from_json(v.field("erase_count")?)? {
+            if gb as usize >= erase_count.len() {
+                anyhow::bail!("ftl snapshot erase counter for block {gb} out of range");
+            }
+            erase_count[gb as usize] = u32::try_from(n)
+                .map_err(|_| anyhow::anyhow!("ftl snapshot erase count {n} exceeds u32"))?;
+        }
+
+        let next_write_die = v.field("next_write_die")?.as_u64()? as usize;
+        if next_write_die >= self.dies.len() {
+            anyhow::bail!("ftl snapshot next_write_die {next_write_die} out of range");
+        }
+        self.pal.restore(v.field("pal")?)?;
+        self.l2p = l2p;
+        self.p2l = p2l;
+        self.valid_count = valid_count;
+        self.erase_count = erase_count;
+        self.dies = dies;
+        self.next_write_die = next_write_die;
+        self.stats = FtlStats {
+            host_programs: v.field("host_programs")?.as_u64()?,
+            gc_programs: v.field("gc_programs")?.as_u64()?,
+            host_reads: v.field("host_reads")?.as_u64()?,
+            gc_reads: v.field("gc_reads")?.as_u64()?,
+            gc_runs: v.field("gc_runs")?.as_u64()?,
+            erases: v.field("erases")?.as_u64()?,
+            trims: v.field("trims")?.as_u64()?,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -422,6 +580,55 @@ mod tests {
             f.write(0, lp);
         }
         assert_eq!(f.stats().waf(), 1.0);
+    }
+
+    #[test]
+    fn ftl_snapshot_restore_continues_identically() {
+        let cfg = small_cfg();
+        let mut f = Ftl::new(&cfg);
+        let user = f.user_pages();
+        let mut now = 0;
+        // Enough overwrite pressure that GC has run before the snapshot.
+        for _ in 0..4 {
+            for lp in 0..user {
+                f.write(now, lp);
+                now += crate::sim::MS;
+            }
+        }
+        assert!(f.stats().gc_runs > 0);
+        f.trim(3);
+
+        let snap = f.snapshot();
+        let mut back = Ftl::new(&cfg);
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+
+        // Continued traffic (reads, writes, more GC) is identical.
+        for i in 0..2 * user {
+            let lp = (i * 7) % user;
+            let (a, b) = if i % 3 == 0 {
+                (f.read(now, lp), back.read(now, lp))
+            } else {
+                (f.write(now, lp), back.write(now, lp))
+            };
+            assert_eq!(a, b, "op {i}");
+            now += crate::sim::MS;
+        }
+        assert_eq!(back.snapshot().to_text(), f.snapshot().to_text());
+        assert_eq!(back.stats().gc_runs, f.stats().gc_runs);
+
+        // Corrupt sparse maps are hard errors, not partial restores.
+        let mut bad = snap.clone();
+        if let crate::results::json::Json::Obj(fields) = &mut bad {
+            fields[0].1 = crate::results::json::Json::Arr(vec![crate::results::json::Json::Arr(
+                vec![
+                    crate::results::json::Json::UInt(0),
+                    crate::results::json::Json::UInt(u32::MAX as u128),
+                ],
+            )]);
+        }
+        let err = Ftl::new(&cfg).restore(&bad).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
     }
 
     #[test]

@@ -144,6 +144,58 @@ impl Hil {
     pub fn max_erase_count(&self) -> u32 {
         self.ftl.max_erase_count()
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): the whole stack (FTL+PAL, optional ICL) and
+    /// the amplification counters.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        Json::Obj(vec![
+            ("ftl".into(), self.ftl.snapshot()),
+            (
+                "icl".into(),
+                match &self.icl {
+                    Some(icl) => icl.snapshot(),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "host_line_reads".into(),
+                Json::UInt(self.stats.host_line_reads as u128),
+            ),
+            (
+                "host_line_writes".into(),
+                Json::UInt(self.stats.host_line_writes as u128),
+            ),
+            ("page_reads".into(), Json::UInt(self.stats.page_reads as u128)),
+            (
+                "page_writes".into(),
+                Json::UInt(self.stats.page_writes as u128),
+            ),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        use crate::results::json::Json;
+        let icl_json = v.field("icl")?;
+        match (self.icl.as_mut(), icl_json) {
+            (Some(icl), obj @ Json::Obj(_)) => icl.restore(obj)?,
+            (None, Json::Null) => {}
+            (Some(_), Json::Null) => {
+                anyhow::bail!("ssd snapshot has no ICL state but the config enables it")
+            }
+            (None, _) => anyhow::bail!("ssd snapshot has ICL state but the config disables it"),
+            (Some(_), _) => anyhow::bail!("ssd snapshot ICL state is not an object"),
+        }
+        self.ftl.restore(v.field("ftl")?)?;
+        self.stats = SsdStats {
+            host_line_reads: v.field("host_line_reads")?.as_u64()?,
+            host_line_writes: v.field("host_line_writes")?.as_u64()?,
+            page_reads: v.field("page_reads")?.as_u64()?,
+            page_writes: v.field("page_writes")?.as_u64()?,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -206,6 +258,41 @@ mod tests {
         );
         assert!(!ssd.is_mapped(7));
         assert_eq!(ssd.ftl_stats().trims, 1);
+    }
+
+    #[test]
+    fn hil_snapshot_restore_continues_identically() {
+        let mut ssd = Hil::new(SsdConfig::default());
+        let mut now = 0;
+        for i in 0..40u64 {
+            now += ssd.access_line(now, i.wrapping_mul(97) % 4096, i % 2 == 0);
+        }
+        let snap = ssd.snapshot();
+        let mut back = Hil::new(SsdConfig::default());
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+
+        let mut now_b = now;
+        for i in 40..80u64 {
+            let line = i.wrapping_mul(131) % 4096;
+            let a = ssd.access_line(now, line, i % 3 == 0);
+            let b = back.access_line(now_b, line, i % 3 == 0);
+            assert_eq!(a, b, "access {i}");
+            now += a;
+            now_b += b;
+        }
+        ssd.flush(now);
+        back.flush(now_b);
+        assert_eq!(back.snapshot().to_text(), ssd.snapshot().to_text());
+
+        // ICL-presence mismatches between snapshot and config are rejected.
+        let mut no_icl = Hil::new(SsdConfig::surrogate_parity());
+        let err = no_icl.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("config disables it"), "{err}");
+        let mut with_icl = Hil::new(SsdConfig::default());
+        let bare = no_icl.snapshot();
+        let err = with_icl.restore(&bare).unwrap_err().to_string();
+        assert!(err.contains("config enables it"), "{err}");
     }
 
     #[test]

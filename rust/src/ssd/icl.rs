@@ -140,6 +140,72 @@ impl Icl {
     pub fn resident(&self) -> usize {
         self.map.len()
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): the frame array (slot order is part of the
+    /// state — victim scan is index-ordered) plus the LRU clock and
+    /// counters. The page→slot map is rebuilt from the frames on restore.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        let frames: Vec<Json> = self
+            .frames
+            .iter()
+            .map(|f| match f {
+                None => Json::Null,
+                Some(f) => Json::Obj(vec![
+                    ("page".into(), Json::UInt(f.page as u128)),
+                    ("dirty".into(), Json::Bool(f.dirty)),
+                    ("touched".into(), Json::UInt(f.touched as u128)),
+                ]),
+            })
+            .collect();
+        Json::Obj(vec![
+            ("frames".into(), Json::Arr(frames)),
+            ("clock".into(), Json::UInt(self.clock as u128)),
+            ("hits".into(), Json::UInt(self.stats.hits as u128)),
+            ("misses".into(), Json::UInt(self.stats.misses as u128)),
+            ("writebacks".into(), Json::UInt(self.stats.writebacks as u128)),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        use crate::results::json::Json;
+        let frames_json = v.field("frames")?.as_arr()?;
+        if frames_json.len() != self.frames.len() {
+            anyhow::bail!(
+                "icl snapshot has {} frames, config has {}",
+                frames_json.len(),
+                self.frames.len()
+            );
+        }
+        let mut frames: Vec<Option<Frame>> = Vec::with_capacity(frames_json.len());
+        let mut map = fast_map(frames_json.len());
+        for (idx, f) in frames_json.iter().enumerate() {
+            match f {
+                Json::Null => frames.push(None),
+                obj => {
+                    let page = obj.field("page")?.as_u64()?;
+                    if map.insert(page, idx).is_some() {
+                        anyhow::bail!("icl snapshot caches page {page} in two frames");
+                    }
+                    frames.push(Some(Frame {
+                        page,
+                        dirty: obj.field("dirty")?.as_bool()?,
+                        touched: obj.field("touched")?.as_u64()?,
+                    }));
+                }
+            }
+        }
+        self.frames = frames;
+        self.map = map;
+        self.clock = v.field("clock")?.as_u64()?;
+        self.stats = IclStats {
+            hits: v.field("hits")?.as_u64()?,
+            misses: v.field("misses")?.as_u64()?,
+            writebacks: v.field("writebacks")?.as_u64()?,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -203,6 +269,35 @@ mod tests {
         assert_eq!(icl.resident(), 0);
         // Invalidating an absent page is a no-op.
         icl.invalidate(42);
+    }
+
+    #[test]
+    fn icl_snapshot_restore_continues_identically() {
+        let (mut icl, mut ftl) = setup();
+        for p in [3u64, 9, 3, 12, 1, 9] {
+            icl.access(p, &mut ftl, p, p % 2 == 1);
+        }
+        let snap = icl.snapshot();
+        let mut back = Icl::new(4, 1_000_000);
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+        assert_eq!(back.resident(), icl.resident());
+
+        let cfg = SsdConfig::default();
+        let mut ftl_b = Ftl::new(&cfg);
+        ftl_b.restore(&ftl.snapshot()).unwrap();
+        for p in [12u64, 44, 3, 71, 44] {
+            assert_eq!(
+                icl.access(p, &mut ftl, p, p % 3 == 0),
+                back.access(p, &mut ftl_b, p, p % 3 == 0),
+                "page {p}"
+            );
+        }
+        assert_eq!(back.snapshot().to_text(), icl.snapshot().to_text());
+
+        let mut small = Icl::new(2, 1_000_000);
+        let err = small.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("icl snapshot has 4 frames"), "{err}");
     }
 
     #[test]

@@ -162,6 +162,59 @@ impl Pal {
         self.die_ready.iter_mut().for_each(|t| *t = 0);
         self.stats = PalStats::default();
     }
+
+    /// Exact serializable state for checkpoint/restore
+    /// ([`crate::snapshot`]): channel/die ready times and wait counters.
+    pub fn snapshot(&self) -> crate::results::json::Json {
+        use crate::results::json::Json;
+        Json::Obj(vec![
+            (
+                "channel_ready".into(),
+                crate::snapshot::ticks_to_json(&self.channel_ready),
+            ),
+            (
+                "die_ready".into(),
+                crate::snapshot::ticks_to_json(&self.die_ready),
+            ),
+            ("reads".into(), Json::UInt(self.stats.reads as u128)),
+            ("programs".into(), Json::UInt(self.stats.programs as u128)),
+            ("erases".into(), Json::UInt(self.stats.erases as u128)),
+            (
+                "die_wait_ticks".into(),
+                Json::UInt(self.stats.die_wait_ticks as u128),
+            ),
+            (
+                "channel_wait_ticks".into(),
+                Json::UInt(self.stats.channel_wait_ticks as u128),
+            ),
+        ])
+    }
+
+    pub fn restore(&mut self, v: &crate::results::json::Json) -> anyhow::Result<()> {
+        let channel_ready = crate::snapshot::ticks_from_json(v.field("channel_ready")?)?;
+        let die_ready = crate::snapshot::ticks_from_json(v.field("die_ready")?)?;
+        if channel_ready.len() != self.channel_ready.len()
+            || die_ready.len() != self.die_ready.len()
+        {
+            anyhow::bail!(
+                "pal snapshot has {} channels x {} dies, config has {} x {}",
+                channel_ready.len(),
+                die_ready.len(),
+                self.channel_ready.len(),
+                self.die_ready.len()
+            );
+        }
+        self.channel_ready = channel_ready;
+        self.die_ready = die_ready;
+        self.stats = PalStats {
+            reads: v.field("reads")?.as_u64()?,
+            programs: v.field("programs")?.as_u64()?,
+            erases: v.field("erases")?.as_u64()?,
+            die_wait_ticks: v.field("die_wait_ticks")?.as_u64()?,
+            channel_wait_ticks: v.field("channel_wait_ticks")?.as_u64()?,
+        };
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +273,30 @@ mod tests {
         assert_eq!(die_busy - host_done, p.cfg().t_erase);
         let (read_done, _) = p.execute(0, 0, PalOp::Read);
         assert!(read_done > p.cfg().t_erase);
+    }
+
+    #[test]
+    fn pal_snapshot_restore_continues_identically() {
+        let mut p = pal();
+        p.execute(0, 0, PalOp::Read);
+        p.execute(0, 1, PalOp::Program);
+        p.execute(0, 2, PalOp::Erase);
+        let snap = p.snapshot();
+        let mut back = pal();
+        back.restore(&snap).unwrap();
+        assert_eq!(back.snapshot().to_text(), snap.to_text());
+        assert_eq!(
+            p.execute(1_000_000, 0, PalOp::Read),
+            back.execute(1_000_000, 0, PalOp::Read)
+        );
+        assert_eq!(back.snapshot().to_text(), p.snapshot().to_text());
+
+        let mut wrong = Pal::new(NandConfig {
+            n_channels: 4,
+            ..NandConfig::default()
+        });
+        let err = wrong.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("pal snapshot has 8 channels"), "{err}");
     }
 
     #[test]

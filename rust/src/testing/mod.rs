@@ -36,6 +36,19 @@ impl SplitMix64 {
         SplitMix64 { state: seed }
     }
 
+    /// Current stream position (the raw state word), for
+    /// checkpoint/restore ([`crate::snapshot`]). A generator rebuilt
+    /// with [`from_state`](Self::from_state) continues the exact output
+    /// stream.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator at a previously captured stream position.
+    pub fn from_state(state: u64) -> Self {
+        SplitMix64 { state }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(GOLDEN);
         mix_finalize(self.state)
@@ -150,6 +163,18 @@ mod tests {
     fn splitmix_is_deterministic() {
         let mut a = SplitMix64::new(42);
         let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream() {
+        let mut a = SplitMix64::new(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = SplitMix64::from_state(a.state());
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

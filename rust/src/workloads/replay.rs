@@ -179,6 +179,126 @@ impl Replay<'_> {
             stall_ticks: window.stats().stall_ticks,
         }
     }
+
+    /// [`run`](Self::run) with mid-job checkpointing: every `every`
+    /// requests the full driver state — device, request window, latency
+    /// histogram, counters, trace cursor — snapshots to `path` through
+    /// the checksummed envelope ([`crate::snapshot`]). If `path` already
+    /// holds a valid checkpoint of *this* trace/mode/mlp, the run resumes
+    /// from its cursor instead of replaying from entry zero, and the
+    /// result is bit-identical to a straight-through run (checkpoints are
+    /// cut on the global trace index, so even the later checkpoint files
+    /// a resumed run writes match the straight-through ones byte for
+    /// byte). The file is deleted once the run completes unless `keep`.
+    ///
+    /// Corrupt, truncated or mismatched checkpoints are hard errors: a
+    /// caller that wants to recover re-runs the job from scratch after
+    /// removing the file, it never silently continues from bad state.
+    pub fn run_checkpointed(
+        &self,
+        device: &mut dyn MemoryDevice,
+        path: &std::path::Path,
+        every: u64,
+        keep: bool,
+    ) -> anyhow::Result<ReplayResult> {
+        use crate::results::json::Json;
+        let entries = self.trace.entries();
+        let trace_sum = format!(
+            "{:016x}",
+            crate::results::content_checksum(self.trace.format().as_bytes())
+        );
+        let mut window = OutstandingWindow::new(self.mlp);
+        let mut latency = Histogram::new();
+        let (mut reads, mut writes) = (0u64, 0u64);
+        let mut now: Tick = 0;
+        let mut start = 0usize;
+        if path.exists() {
+            let v = crate::snapshot::read_snapshot(path, "replay-checkpoint")?;
+            let mode = v.field("mode")?.as_str()?;
+            if mode != self.mode.name() {
+                anyhow::bail!("checkpoint is a {mode}-loop run, this job is {}", self.mode.name());
+            }
+            let mlp = v.field("mlp")?.as_u64()? as usize;
+            if mlp != self.mlp {
+                anyhow::bail!("checkpoint ran with mlp {mlp}, this job uses {}", self.mlp);
+            }
+            let ops = v.field("trace_ops")?.as_u64()? as usize;
+            let sum = v.field("trace_checksum")?.as_str()?;
+            if ops != entries.len() || sum != trace_sum {
+                anyhow::bail!(
+                    "checkpoint is for a different trace \
+                     ({ops} entries, checksum {sum}; this trace: {} entries, {trace_sum})",
+                    entries.len()
+                );
+            }
+            start = v.field("next_entry")?.as_u64()? as usize;
+            if start > entries.len() {
+                anyhow::bail!(
+                    "checkpoint cursor {start} is past the trace end ({} entries)",
+                    entries.len()
+                );
+            }
+            latency = crate::snapshot::hist_from_json(v.field("latency")?)?;
+            window.restore(v.field("window")?)?;
+            device.restore_state(v.field("device")?)?;
+            now = v.field("now")?.as_u64()?;
+            reads = v.field("reads")?.as_u64()?;
+            writes = v.field("writes")?.as_u64()?;
+        }
+        for (i, e) in entries.iter().enumerate().skip(start) {
+            let arrival = match self.mode {
+                ReplayMode::Open => now.max(e.tick),
+                ReplayMode::Closed => now,
+            };
+            let issue = window.admit(arrival);
+            let done = device.issue(issue, e.offset, e.is_write);
+            window.push(done);
+            let scheduled = match self.mode {
+                ReplayMode::Open => e.tick,
+                ReplayMode::Closed => issue,
+            };
+            latency.record(done.saturating_sub(scheduled));
+            if e.is_write {
+                writes += 1;
+            } else {
+                reads += 1;
+            }
+            now = issue;
+            let processed = i as u64 + 1;
+            if every > 0 && processed % every == 0 && (i + 1) < entries.len() {
+                let payload = Json::Obj(vec![
+                    ("mode".into(), Json::str(self.mode.name())),
+                    ("mlp".into(), Json::UInt(self.mlp as u128)),
+                    ("trace_ops".into(), Json::UInt(entries.len() as u128)),
+                    ("trace_checksum".into(), Json::str(trace_sum.clone())),
+                    ("next_entry".into(), Json::UInt(i as u128 + 1)),
+                    ("now".into(), Json::UInt(now as u128)),
+                    ("reads".into(), Json::UInt(reads as u128)),
+                    ("writes".into(), Json::UInt(writes as u128)),
+                    ("latency".into(), crate::snapshot::hist_to_json(&latency)),
+                    ("window".into(), window.snapshot()),
+                    ("device".into(), device.snapshot_state()),
+                ]);
+                crate::snapshot::write_snapshot(path, "replay-checkpoint", &payload)?;
+            }
+        }
+        let end = window.drain(now);
+        device.flush(end);
+        if !keep {
+            // Completed: the checkpoint has served its purpose. Removal
+            // failure is not a run failure (the file simply lingers).
+            let _ = std::fs::remove_file(path);
+        }
+        Ok(ReplayResult {
+            mode: self.mode,
+            mlp: window.cap(),
+            reads,
+            writes,
+            sim_ticks: end,
+            latency: HistogramBox(Box::new(latency)),
+            stall_ticks: window.stats().stall_ticks,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -413,6 +533,145 @@ mod tests {
         // flash time, not just `other`.
         assert!(report.spans.iter().any(|s| s.phases.flash > 0));
         assert!(!report.samples.is_empty());
+    }
+
+    fn ckpt_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::path::PathBuf::from(format!("/tmp/cxl_ssd_sim_replay_ckpt_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn result_fingerprint(r: &ReplayResult) -> (u64, u64, Tick, Tick, u64, u64) {
+        (
+            r.reads,
+            r.writes,
+            r.sim_ticks,
+            r.stall_ticks,
+            r.latency.count(),
+            r.latency.max(),
+        )
+    }
+
+    #[test]
+    fn checkpointed_run_matches_straight_through_and_resumes() {
+        let cfg = presets::small_test();
+        let trace = sparse_trace(120, US);
+        let replay = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 4,
+        };
+        let mut straight_dev = build_device(DeviceKind::CxlSsdCached, &cfg);
+        let straight = replay.run(straight_dev.as_mut());
+
+        // Checkpointing perturbs nothing; the file is gone on completion.
+        let dir = ckpt_dir("equiv");
+        let path = dir.join("job.ckpt.json");
+        let mut dev = build_device(DeviceKind::CxlSsdCached, &cfg);
+        let r = replay
+            .run_checkpointed(dev.as_mut(), &path, 25, false)
+            .unwrap();
+        assert_eq!(result_fingerprint(&r), result_fingerprint(&straight));
+        assert_eq!(*r.latency.0, *straight.latency.0);
+        assert!(!path.exists(), "checkpoint must be deleted on completion");
+
+        // keep=true leaves the last mid-run checkpoint (entry 100 of
+        // 120) behind; resuming a fresh device from it replays only the
+        // tail and still lands on the straight-through numbers — the
+        // crash-recovery path.
+        let mut dev = build_device(DeviceKind::CxlSsdCached, &cfg);
+        replay
+            .run_checkpointed(dev.as_mut(), &path, 25, true)
+            .unwrap();
+        assert!(path.exists(), "keep=true retains the checkpoint");
+        let cursor = crate::snapshot::read_snapshot(&path, "replay-checkpoint")
+            .unwrap()
+            .field("next_entry")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        assert_eq!(cursor, 100, "last cut before the trace end");
+        let mut resumed_dev = build_device(DeviceKind::CxlSsdCached, &cfg);
+        let resumed = replay
+            .run_checkpointed(resumed_dev.as_mut(), &path, 25, false)
+            .unwrap();
+        assert_eq!(result_fingerprint(&resumed), result_fingerprint(&straight));
+        assert_eq!(*resumed.latency.0, *straight.latency.0);
+        let a: std::collections::BTreeMap<String, String> = straight_dev
+            .stats_kv()
+            .into_iter()
+            .map(|(k, v)| (k, format!("{v:?}")))
+            .collect();
+        let b: std::collections::BTreeMap<String, String> = resumed_dev
+            .stats_kv()
+            .into_iter()
+            .map(|(k, v)| (k, format!("{v:?}")))
+            .collect();
+        assert_eq!(a, b, "device counters diverged across resume");
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_checkpoints_are_hard_errors() {
+        let cfg = presets::small_test();
+        let trace = sparse_trace(60, US);
+        let replay = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 4,
+        };
+        let dir = ckpt_dir("faults");
+        let path = dir.join("job.ckpt.json");
+        let mut dev = build_device(DeviceKind::Pmem, &cfg);
+        replay.run_checkpointed(dev.as_mut(), &path, 20, true).unwrap();
+        let good = std::fs::read_to_string(&path).unwrap();
+
+        // Bit flip: checksum mismatch with a byte offset.
+        std::fs::write(&path, good.replace("\"reads\": ", "\"reads\": 9")).unwrap();
+        let mut dev = build_device(DeviceKind::Pmem, &cfg);
+        let err = replay
+            .run_checkpointed(dev.as_mut(), &path, 20, false)
+            .unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("checksum mismatch"), "{chain}");
+        assert!(chain.contains("byte"), "{chain}");
+
+        // Truncation: strict parse error with a byte offset.
+        std::fs::write(&path, &good[..good.len() / 3]).unwrap();
+        let mut dev = build_device(DeviceKind::Pmem, &cfg);
+        let err = replay
+            .run_checkpointed(dev.as_mut(), &path, 20, false)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("byte"), "{err:#}");
+
+        // Wrong window size: named mismatch, no silent continue.
+        std::fs::write(&path, &good).unwrap();
+        let wrong_mlp = Replay {
+            trace: &trace,
+            mode: ReplayMode::Open,
+            mlp: 8,
+        };
+        let mut dev = build_device(DeviceKind::Pmem, &cfg);
+        let err = wrong_mlp
+            .run_checkpointed(dev.as_mut(), &path, 20, false)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mlp 4") && err.contains("8"), "{err}");
+
+        // Different trace: the content checksum catches it.
+        std::fs::write(&path, &good).unwrap();
+        let other = sparse_trace(60, 2 * US);
+        let other_replay = Replay {
+            trace: &other,
+            mode: ReplayMode::Open,
+            mlp: 4,
+        };
+        let mut dev = build_device(DeviceKind::Pmem, &cfg);
+        let err = other_replay
+            .run_checkpointed(dev.as_mut(), &path, 20, false)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("different trace"), "{err}");
     }
 
     #[test]

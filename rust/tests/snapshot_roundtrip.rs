@@ -1,0 +1,427 @@
+//! Checkpoint/restore differential suite: the bit-equality proofs for
+//! the snapshot subsystem (`src/snapshot/`) and the resumable/sharded
+//! campaign layer built on it.
+//!
+//! Three layers, three guarantees:
+//!
+//! - **Device state** — for every `DeviceKind` (plus the pooled
+//!   composition), restoring a mid-run `snapshot_state()` into a fresh
+//!   device and replaying the tail produces byte-identical completion
+//!   ticks and byte-identical final state, across randomized traces and
+//!   cut points.
+//! - **Snapshot files** — truncation, bit flips, checksum tampering and
+//!   wrong-schema envelopes are hard errors carrying byte offsets;
+//!   nothing ever restores partially.
+//! - **Campaign artifacts** — a sweep interrupted after arbitrary
+//!   incremental records (including a half-written file) resumes to an
+//!   artifact directory byte-identical to a straight-through run, and
+//!   `--shard i/N` + `report --merge` reassembles the unsharded bytes
+//!   for N in {2, 3, 4}.
+
+use std::path::{Path, PathBuf};
+
+use cxl_ssd_sim::cli;
+use cxl_ssd_sim::config::presets;
+use cxl_ssd_sim::coordinator::experiments::{self, CampaignOptions, ExpScale};
+use cxl_ssd_sim::devices::{build_device, DeviceKind, MemoryDevice};
+use cxl_ssd_sim::results;
+use cxl_ssd_sim::sim::{OutstandingWindow, Tick, US};
+use cxl_ssd_sim::snapshot::{envelope_text, verify_envelope, write_snapshot};
+use cxl_ssd_sim::testing::SplitMix64;
+use cxl_ssd_sim::trace::{SynthKind, SynthSpec, TraceEntry};
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = PathBuf::from(format!("/tmp/cxl_ssd_sim_snaprt_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(String::from).collect()
+}
+
+/// Open-loop replay step, identical to the `Replay` driver's inner
+/// loop; returns the per-request completion ticks — the most
+/// fine-grained observable a device model has.
+fn drive(
+    dev: &mut dyn MemoryDevice,
+    window: &mut OutstandingWindow,
+    entries: &[TraceEntry],
+    now: &mut Tick,
+) -> Vec<Tick> {
+    let mut dones = Vec::with_capacity(entries.len());
+    for e in entries {
+        let arrival = (*now).max(e.tick);
+        let issue = window.admit(arrival);
+        let done = dev.issue(issue, e.offset, e.is_write);
+        window.push(done);
+        dones.push(done);
+        *now = issue;
+    }
+    dones
+}
+
+/// Every device model: restore(snapshot(mid-run state)) into a fresh
+/// device, replay the remaining trace, and require bit-identical
+/// completion ticks and final serialized state — over randomized
+/// traces, write mixes and cut points. The snapshot crosses the full
+/// envelope cycle (serialize → parse → checksum-verify), so this also
+/// proves the codecs are lossless for live, irregular state.
+#[test]
+fn mid_run_restore_is_bit_identical_for_every_device_kind() {
+    let cfg = presets::small_test();
+    let mut rng = SplitMix64::new(0xC4E1_55D5);
+    let kinds = [
+        DeviceKind::Dram,
+        DeviceKind::CxlDram,
+        DeviceKind::Pmem,
+        DeviceKind::CxlSsd,
+        DeviceKind::CxlSsdCached,
+        DeviceKind::Pooled,
+    ];
+    for kind in kinds {
+        for round in 0..2u64 {
+            // Zipfian rounds revisit hot pages (cache hits, FTL
+            // overwrites, heat-tracker state); mixed rounds exercise the
+            // write paths (dirty frames, GC, posted stores).
+            let synth = if round == 0 {
+                SynthKind::Zipfian
+            } else {
+                SynthKind::Mixed
+            };
+            let spec = SynthSpec {
+                ops: 140,
+                gap: US / 2,
+                ..SynthSpec::new(synth)
+            };
+            let seed = rng.next_u64();
+            let trace = spec.generate(seed);
+            let entries = trace.entries();
+            let cut = 30 + (rng.next_u64() % 80) as usize;
+
+            let mut a = build_device(kind, &cfg);
+            let mut win_a = OutstandingWindow::new(4);
+            let mut now_a = 0;
+            drive(a.as_mut(), &mut win_a, &entries[..cut], &mut now_a);
+            let dev_text = envelope_text("device-state", &a.snapshot_state());
+            let win_text = envelope_text("window", &win_a.snapshot());
+            let now_cut = now_a;
+            let tail_a = drive(a.as_mut(), &mut win_a, &entries[cut..], &mut now_a);
+            let end_a = win_a.drain(now_a);
+            a.flush(end_a);
+
+            let ctx = format!("{} seed {seed:#x} cut {cut}", kind.name());
+            let mut b = build_device(kind, &cfg);
+            b.restore_state(&verify_envelope(&dev_text, "device-state").unwrap())
+                .unwrap_or_else(|e| panic!("restore_state ({ctx}): {e:#}"));
+            let mut win_b = OutstandingWindow::new(4);
+            win_b
+                .restore(&verify_envelope(&win_text, "window").unwrap())
+                .unwrap();
+            let mut now_b = now_cut;
+            let tail_b = drive(b.as_mut(), &mut win_b, &entries[cut..], &mut now_b);
+            let end_b = win_b.drain(now_b);
+            b.flush(end_b);
+
+            assert_eq!(tail_a, tail_b, "completion ticks diverged ({ctx})");
+            assert_eq!(end_a, end_b, "drain tick diverged ({ctx})");
+            assert_eq!(
+                a.snapshot_state().to_text(),
+                b.snapshot_state().to_text(),
+                "final serialized state diverged ({ctx})"
+            );
+        }
+    }
+}
+
+/// A snapshot taken twice from the same state is byte-identical, and a
+/// restored device re-serializes to the bytes it was restored from —
+/// the canonical-writer invariant the campaign checksums depend on.
+#[test]
+fn snapshot_bytes_are_canonical() {
+    let cfg = presets::small_test();
+    let trace = SynthSpec {
+        ops: 80,
+        ..SynthSpec::new(SynthKind::Mixed)
+    }
+    .generate(7);
+    let mut dev = build_device(DeviceKind::CxlSsdCached, &cfg);
+    let mut win = OutstandingWindow::new(4);
+    let mut now = 0;
+    drive(dev.as_mut(), &mut win, trace.entries(), &mut now);
+    let first = dev.snapshot_state();
+    assert_eq!(first.to_text(), dev.snapshot_state().to_text());
+    let mut back = build_device(DeviceKind::CxlSsdCached, &cfg);
+    back.restore_state(&first).unwrap();
+    assert_eq!(first.to_text(), back.snapshot_state().to_text());
+}
+
+/// Fault injection on the snapshot file format: every corruption mode
+/// is a hard error naming a byte offset, and never a partial restore.
+#[test]
+fn corrupt_snapshot_files_hard_error_with_byte_offsets() {
+    let dir = fresh_dir("faults");
+    let cfg = presets::small_test();
+    let trace = SynthSpec {
+        ops: 60,
+        ..SynthSpec::new(SynthKind::Zipfian)
+    }
+    .generate(3);
+    let mut dev = build_device(DeviceKind::CxlSsdCached, &cfg);
+    let mut win = OutstandingWindow::new(4);
+    let mut now = 0;
+    drive(dev.as_mut(), &mut win, trace.entries(), &mut now);
+    let path = dir.join("device.json");
+    write_snapshot(&path, "device-state", &dev.snapshot_state()).unwrap();
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // Truncation: strict parse error, byte offset of the break.
+    let err = verify_envelope(&good[..good.len() / 2], "device-state")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("byte"), "{err}");
+
+    // Bit flip in the payload: checksum mismatch, payload offset.
+    let tick = good.find("\"payload\"").unwrap();
+    let mut flipped = good.clone().into_bytes();
+    let digit = (tick..flipped.len())
+        .find(|&i| flipped[i].is_ascii_digit())
+        .unwrap();
+    flipped[digit] = if flipped[digit] == b'9' { b'8' } else { b'9' };
+    let err = verify_envelope(std::str::from_utf8(&flipped).unwrap(), "device-state")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+    assert!(err.contains("at byte"), "{err}");
+
+    // Tampered checksum header.
+    let bad = good.replacen("\"checksum\": \"", "\"checksum\": \"0", 1);
+    let err = verify_envelope(&bad, "device-state").unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+
+    // Wrong schema version names both versions and an offset.
+    let bad = good.replacen("\"schema_version\": 1", "\"schema_version\": 42", 1);
+    let err = verify_envelope(&bad, "device-state").unwrap_err().to_string();
+    assert!(err.contains("v42") && err.contains("byte"), "{err}");
+
+    // Wrong kind: a window snapshot never restores into a device.
+    let err = verify_envelope(&good, "window").unwrap_err().to_string();
+    assert!(err.contains("'device-state'") && err.contains("'window'"), "{err}");
+
+    // And none of the rejected envelopes touched the device: it still
+    // re-serializes to the snapshot it wrote.
+    assert_eq!(
+        envelope_text("device-state", &dev.snapshot_state()),
+        good
+    );
+}
+
+/// Bytes of every file in `dir/jobs` plus the manifest, keyed by file
+/// name — the comparison object for resume/shard differentials.
+fn artifact_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out = Vec::new();
+    out.push((
+        "campaign.json".to_string(),
+        std::fs::read(dir.join("campaign.json")).unwrap(),
+    ));
+    let mut names: Vec<String> = std::fs::read_dir(dir.join("jobs"))
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    for n in &names {
+        out.push((n.clone(), std::fs::read(dir.join("jobs").join(n)).unwrap()));
+    }
+    out
+}
+
+/// Interrupted-sweep recovery: drop the manifest, delete one record
+/// (never written) and truncate another (killed mid-write), then
+/// re-run into the same directory. The resumed artifact set must be
+/// byte-identical to a straight-through run — and a resume under a
+/// *different* configuration must hard-error instead of silently
+/// reusing the stale records.
+#[test]
+fn resume_over_partial_artifacts_is_byte_identical() {
+    let cfg = presets::small_test();
+    let plan = experiments::plan_campaign("fig4", &cfg, ExpScale::quick()).unwrap();
+    let dir_a = fresh_dir("resume_a");
+    let dir_b = fresh_dir("resume_b");
+    let run = |dir: &Path| {
+        let opts = CampaignOptions {
+            n_workers: 1,
+            shard: None,
+            out: Some(dir),
+        };
+        let r = experiments::run_plan(&plan, &opts).unwrap();
+        results::write_campaign(dir, &r.campaign).unwrap();
+    };
+    run(&dir_a);
+    run(&dir_b);
+
+    // Simulate a SIGKILL mid-sweep in dir_b.
+    std::fs::remove_file(dir_b.join("campaign.json")).unwrap();
+    let mut jobs: Vec<PathBuf> = std::fs::read_dir(dir_b.join("jobs"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    jobs.sort();
+    assert!(jobs.len() >= 4, "fig4 quick should write >= 4 records");
+    std::fs::remove_file(&jobs[1]).unwrap();
+    let half = std::fs::read_to_string(&jobs[3]).unwrap();
+    std::fs::write(&jobs[3], &half[..half.len() / 2]).unwrap();
+
+    run(&dir_b);
+    assert_eq!(
+        artifact_bytes(&dir_a),
+        artifact_bytes(&dir_b),
+        "resumed artifacts must be bit-identical to straight-through"
+    );
+
+    // Same directory, different config: the identity check refuses.
+    let mut other = cfg.clone();
+    other.mlp += 7;
+    let plan2 = experiments::plan_campaign("fig4", &other, ExpScale::quick()).unwrap();
+    let opts = CampaignOptions {
+        n_workers: 1,
+        shard: None,
+        out: Some(&dir_b),
+    };
+    let err = match experiments::run_plan(&plan2, &opts) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("resume under a changed config must refuse"),
+    };
+    assert!(err.contains("different campaign or configuration"), "{err}");
+}
+
+/// The sharding differential: split the same campaign 2, 3 and 4 ways
+/// through the CLI, merge each set with `report --merge`, and require
+/// the merged directory to be byte-identical to the unsharded one.
+/// Duplicate and count-mismatched shard sets are rejected.
+#[test]
+fn sharded_sweeps_merge_byte_identical_to_unsharded() {
+    let full = fresh_dir("shard_full");
+    let sweep = |extra: &str, out: &Path| {
+        let cmd = format!(
+            "sweep --experiment fig4 --quick --jobs 2 {extra} --out {}",
+            out.display()
+        );
+        assert_eq!(cli::main(&argv(&cmd)).unwrap(), 0, "{cmd}");
+    };
+    sweep("", &full);
+    let want = artifact_bytes(&full);
+
+    let mut shard0_of_2 = PathBuf::new();
+    for n in 2..=4usize {
+        let dirs: Vec<PathBuf> = (0..n)
+            .map(|i| {
+                let d = fresh_dir(&format!("shard_{i}_of_{n}"));
+                sweep(&format!("--shard {i}/{n}"), &d);
+                d
+            })
+            .collect();
+        if n == 2 {
+            shard0_of_2 = dirs[0].clone();
+        }
+        let merged = fresh_dir(&format!("shard_merged_{n}"));
+        let merges: String = dirs
+            .iter()
+            .map(|d| format!("--merge {} ", d.display()))
+            .collect();
+        let cmd = format!("report {merges}--out {}", merged.display());
+        assert_eq!(cli::main(&argv(&cmd)).unwrap(), 0, "{cmd}");
+        assert_eq!(
+            want,
+            artifact_bytes(&merged),
+            "merge of {n} shards must reproduce the unsharded bytes"
+        );
+    }
+
+    // The same shard twice is an exact-cover violation.
+    let err = cli::main(&argv(&format!(
+        "report --merge {d} --merge {d} --out {out}",
+        d = shard0_of_2.display(),
+        out = fresh_dir("shard_dup").display()
+    )))
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("duplicate shard"), "{err}");
+
+    // A missing shard directory fails the merge at load time.
+    assert!(cli::main(&argv(&format!(
+        "report --merge {} --merge {} --out {}",
+        shard0_of_2.display(),
+        fresh_dir("shard_none").join("nope").display(),
+        fresh_dir("shard_bad").display()
+    )))
+    .is_err());
+
+    // An unsharded artifact set has no shard stamp to merge.
+    let err = cli::main(&argv(&format!(
+        "report --merge {} --out {}",
+        full.display(),
+        fresh_dir("shard_unsharded").display()
+    )))
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("shard"), "{err}");
+
+    // Out-of-range shard specs never start running.
+    assert!(cli::main(&argv(&format!(
+        "sweep --experiment fig4 --quick --shard 3/3 --out {}",
+        fresh_dir("shard_oob").display()
+    )))
+    .is_err());
+}
+
+/// `sweep --checkpoint-every` end to end: the replay campaign completes
+/// with mid-job checkpointing armed, deletes its checkpoint files on
+/// completion, and lands on the same simulated numbers as an
+/// uncheckpointed run (only the `snapshot.*` config rows differ).
+#[test]
+fn cli_checkpoint_every_is_observationally_equivalent() {
+    let plain = fresh_dir("ckpt_plain");
+    let ckpt = fresh_dir("ckpt_on");
+    let base = "sweep --experiment replay --quick --jobs 2";
+    assert_eq!(
+        cli::main(&argv(&format!("{base} --out {}", plain.display()))).unwrap(),
+        0
+    );
+    assert_eq!(
+        cli::main(&argv(&format!(
+            "{base} --checkpoint-every 400 --out {}",
+            ckpt.display()
+        )))
+        .unwrap(),
+        0
+    );
+    // Completed jobs delete their checkpoints (snapshot.keep=false).
+    let leftover = std::fs::read_dir(ckpt.join("checkpoints"))
+        .map(|d| d.count())
+        .unwrap_or(0);
+    assert_eq!(leftover, 0, "completed jobs must clean up checkpoints");
+
+    let a = results::load_campaign(&plain).unwrap();
+    let b = results::load_campaign(&ckpt).unwrap();
+    assert_eq!(a.sections.len(), b.sections.len());
+    for (sa, sb) in a.sections.iter().zip(&b.sections) {
+        assert_eq!(sa.records.len(), sb.records.len());
+        for (ra, rb) in sa.records.iter().zip(&sb.records) {
+            assert_eq!(ra.device, rb.device);
+            assert_eq!(
+                (ra.sim_ticks, &ra.metrics, &ra.latency),
+                (rb.sim_ticks, &rb.metrics, &rb.latency),
+                "checkpointing perturbed {}-{:03}-{}",
+                ra.section,
+                ra.index,
+                ra.device
+            );
+        }
+    }
+
+    // The cadence flag needs somewhere to put the files.
+    let err = cli::main(&argv("sweep --experiment replay --quick --checkpoint-every 400"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--out"), "{err}");
+}
